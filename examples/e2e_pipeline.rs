@@ -1,0 +1,42 @@
+//! END-TO-END DRIVER: the full system on a realistic online workload.
+//!
+//! A submitter thread streams a 20-job synthetic trace (mixed
+//! Wordcount/Sort, 150M-600M) into the coordinator leader over mpsc
+//! channels; the leader schedules each arrival against live cluster
+//! state (SDN bandwidth snapshot -> AOT XLA cost model -> slot
+//! reservations) and executes it on the discrete-event cluster. Run for
+//! all four schedulers; reports the paper's headline metric (mean/total
+//! job completion time) and the BASS speedup. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_pipeline`
+
+use bass::coordinator::{ClusterSetup, Coordinator};
+use bass::experiments::SchedulerKind;
+use bass::runtime::CostModel;
+use bass::util::XorShift;
+use bass::workload::TraceGen;
+
+fn main() {
+    let n_jobs = 20;
+    let gen = TraceGen { mean_interarrival_secs: 90.0, sizes_mb: vec![150.0, 300.0, 600.0] };
+    println!("E2E: {n_jobs}-job online trace, 6-node cluster, background load\n");
+    let mut summary = Vec::new();
+    for kind in SchedulerKind::ALL {
+        let mut rng = XorShift::new(2014); // identical trace for all schedulers
+        let arrivals = gen.generate(n_jobs, &mut rng);
+        let coord = Coordinator::new(ClusterSetup::default(), kind, CostModel::auto());
+        let results = coord.run_trace(arrivals);
+        let total: f64 = results.iter().map(|r| r.metrics.jt).sum();
+        let mean = total / results.len() as f64;
+        let mean_lr: f64 =
+            results.iter().map(|r| r.metrics.lr).sum::<f64>() / results.len() as f64;
+        println!("[{:<8}] mean JT {:>7.1}s   total {:>8.1}s   mean LR {:>5.1}%",
+            kind.label(), mean, total, mean_lr * 100.0);
+        summary.push((kind.label(), mean));
+    }
+    let hds = summary.iter().find(|(n, _)| *n == "HDS").unwrap().1;
+    let bass = summary.iter().find(|(n, _)| *n == "BASS").unwrap().1;
+    println!("\nheadline: BASS mean JT is {:.1}% lower than HDS ({:.1}s vs {:.1}s)",
+        (1.0 - bass / hds) * 100.0, bass, hds);
+}

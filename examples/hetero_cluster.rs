@@ -1,0 +1,27 @@
+//! Heterogeneous-cluster study (extension; Guo & Fox [14] direction the
+//! paper cites): half the nodes are K× slower. BASS's Eq. 4 argmin sees
+//! per-node TP; HDS's locality-first greedy does not — but node-driven
+//! pull scheduling self-balances, so the winner flips with K (results
+//! are mixed; see EXPERIMENTS.md §Extensions for the honest numbers).
+//!
+//! Run: `cargo run --release --example hetero_cluster`
+
+use bass::experiments::ablate_heterogeneity;
+use bass::runtime::CostModel;
+
+fn main() {
+    let cost = CostModel::auto();
+    println!("heterogeneous cluster: 3 fast + 3 (Kx slower) nodes, 16-map wave");
+    println!("{:>6} {:>10} {:>10} {:>8}", "K", "BASS JT", "HDS JT", "gain");
+    for k in [1.0, 1.5, 2.0, 3.0, 5.0] {
+        let out = ablate_heterogeneity(k, &cost);
+        let jt = |n: &str| out.iter().find(|(s, _)| *s == n).unwrap().1;
+        println!(
+            "{:>6.1} {:>9.1}s {:>9.1}s {:>7.1}%",
+            k,
+            jt("BASS"),
+            jt("HDS"),
+            (1.0 - jt("BASS") / jt("HDS")) * 100.0
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Reproduces the paper's Example 1 & 2 (Fig. 3 timelines, Fig. 4 bars):
+//! HDS 39s, BAR 38s, BASS 35s, Pre-BASS 34s on the Fig. 2 testbed.
+//!
+//! Run: `cargo run --release --example paper_example1`
+
+use bass::experiments::run_example1;
+use bass::metrics::NodeTimeline;
+use bass::runtime::CostModel;
+
+fn main() {
+    let cost = CostModel::auto();
+    let outcomes = run_example1(&cost);
+    println!("Fig. 4 — job completion time (paper vs reproduced)");
+    println!("{:<10} {:>8} {:>10}", "scheduler", "paper", "reproduced");
+    let paper = [("HDS", 39.0), ("BAR", 38.0), ("BASS", 35.0), ("Pre-BASS", 34.0)];
+    for (o, (pname, pjt)) in outcomes.iter().zip(paper) {
+        assert_eq!(o.scheduler, pname);
+        println!("{:<10} {:>7.0}s {:>9.0}s", o.scheduler, pjt, o.executed_jt);
+    }
+    for o in &outcomes {
+        println!("\nFig. 3 timeline — {} (executed JT {:.0}s)", o.scheduler, o.executed_jt);
+        print!("{}", NodeTimeline::render(&o.timelines, 1.0));
+    }
+}

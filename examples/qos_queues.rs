@@ -1,0 +1,18 @@
+//! Example 3: OpenFlow QoS queues (Q1/Q2/Q3) vs one shared queue for
+//! shuffle traffic under varying background load.
+//!
+//! Run: `cargo run --release --example qos_queues`
+
+use bass::experiments::run_example3;
+
+fn main() {
+    println!("Example 3 — shuffle completion, shared vs Q1/Q2/Q3 queues");
+    println!("{:>10} {:>12} {:>12} {:>9}", "bg flows", "shared (s)", "queued (s)", "speedup");
+    for bg in [0usize, 2, 5, 10] {
+        let o = run_example3(bg);
+        println!(
+            "{:>10} {:>12.1} {:>12.1} {:>8.2}x",
+            bg, o.shared_secs, o.queued_secs, o.speedup
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! Quickstart: build a small SDN-controlled cluster, submit one job
+//! through BASS, and print the resulting schedule + metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use bass::cluster::Ledger;
+use bass::hdfs::Namenode;
+use bass::mapreduce::TaskSpec;
+use bass::metrics::{JobMetrics, NodeTimeline};
+use bass::runtime::CostModel;
+use bass::sched::{Bass, SchedCtx, Scheduler};
+use bass::sdn::Controller;
+use bass::sim::{Engine, FlowNet};
+use bass::topology::builders::tree_cluster;
+use bass::util::{Secs, XorShift, BLOCK_MB};
+use bass::workload::{JobKind, WorkloadBuilder};
+
+fn main() -> anyhow::Result<()> {
+    // 1. a 6-node cluster behind 2 OpenFlow switches, 100 Mbps links
+    let (topo, nodes) = tree_cluster(2, 3, 100.0, 100.0);
+    let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+    let mut ctrl = Controller::new(topo, 1.0); // 1s time slots
+    let net = FlowNet::new(&caps);
+
+    // 2. a 600MB wordcount job, blocks placed with 3 replicas
+    let mut nn = Namenode::new();
+    let mut rng = XorShift::new(42);
+    let job = WorkloadBuilder::new(JobKind::Wordcount).build(0, 600.0, &nodes, &mut nn, &mut rng);
+    let maps: Vec<TaskSpec> = job.maps().cloned().collect();
+    println!("job {:?}: {} maps x {}MB, {} reduces", job.name, job.n_maps(), BLOCK_MB, job.n_reduces());
+
+    // 3. schedule the map wave with BASS (XLA cost model if artifacts exist)
+    let cost = CostModel::auto();
+    let mut ledger = Ledger::new(nodes.len());
+    let mut bass = Bass::new();
+    let assignment = {
+        let mut ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        bass.schedule(&maps, None, &mut ctx)
+    };
+    println!(
+        "scheduled: {} placements, locality {:.0}%, {} reserved remote transfers",
+        assignment.placements.len(),
+        assignment.locality_ratio() * 100.0,
+        bass.remote_assignments
+    );
+
+    // 4. execute on the discrete-event engine and report
+    let mut engine = Engine::new(net, vec![Secs::ZERO; nodes.len()]);
+    engine.load(&assignment);
+    let records = engine.run();
+    let metrics = JobMetrics::from_records(&records, Secs::ZERO, None);
+    println!("executed: {metrics}");
+    println!("\nper-node timeline ('~' transfer, '=' compute, '*' remote):");
+    print!("{}", NodeTimeline::render(&NodeTimeline::build(&records, nodes.len()), 2.0));
+    Ok(())
+}

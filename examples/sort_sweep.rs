@@ -1,0 +1,19 @@
+//! Table I(b) + Fig. 5 (Sort panel): the IO-bound sweep.
+//!
+//! Run: `cargo run --release --example sort_sweep [--full]`
+
+use bass::experiments::{run_table1, Table1Config};
+use bass::runtime::CostModel;
+use bass::trace;
+use bass::workload::JobKind;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let mut cfg = Table1Config::paper(JobKind::Sort);
+    if !full {
+        cfg.sizes_mb = vec![150.0, 300.0, 600.0];
+    }
+    let rows = run_table1(&cfg, &CostModel::auto());
+    println!("Table I(b) — Sort (reproduced)");
+    print!("{}", trace::table1_csv(&rows));
+}

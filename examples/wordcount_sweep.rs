@@ -1,0 +1,39 @@
+//! Table I(a) + Fig. 5 (Wordcount panel): the data-size sweep over
+//! BASS / BAR / HDS with seeded background load.
+//!
+//! Run: `cargo run --release --example wordcount_sweep [--full]`
+//! (`--full` includes the 1G and 5G points; default stops at 600M.)
+
+use bass::experiments::{run_table1, Table1Config};
+use bass::runtime::CostModel;
+use bass::trace;
+use bass::workload::JobKind;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let mut cfg = Table1Config::paper(JobKind::Wordcount);
+    if !full {
+        cfg.sizes_mb = vec![150.0, 300.0, 600.0];
+    }
+    let rows = run_table1(&cfg, &CostModel::auto());
+    println!("Table I(a) — Wordcount (reproduced)");
+    print!("{}", trace::table1_markdown(&rows));
+    println!("\nFig. 5 series (JT seconds):");
+    for k in &cfg.schedulers {
+        let series: Vec<String> = cfg
+            .sizes_mb
+            .iter()
+            .map(|&s| {
+                format!(
+                    "{:.0}",
+                    rows.iter()
+                        .find(|r| r.scheduler == k.label() && r.data_mb == s)
+                        .unwrap()
+                        .metrics
+                        .jt
+                )
+            })
+            .collect();
+        println!("  {:<8} {}", k.label(), series.join("\t"));
+    }
+}

@@ -1,0 +1,72 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for Rust.
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  artifacts/cost_{M}x{N}.hlo.txt   one per VARIANTS entry in model.py
+  artifacts/idle_{N}.hlo.txt       ProgressRate estimator variants
+  artifacts/manifest.txt           "name m n path" rows for the Rust loader
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    return_tuple=True means the Rust side unwraps with to_tuple() /
+    to_tuple1() -- see runtime/exec.rs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    for (m, n) in model.VARIANTS:
+        path = os.path.join(out_dir, f"cost_{m}x{n}.hlo.txt")
+        text = to_hlo_text(model.lower_schedule_eval(m, n))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"cost {m} {n} {os.path.basename(path)}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n in sorted({n for (_, n) in model.VARIANTS} | {256}):
+        path = os.path.join(out_dir, f"idle_{n}.hlo.txt")
+        text = to_hlo_text(model.lower_idle_estimate(n))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"idle 0 {n} {os.path.basename(path)}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: tiled BASS cost-matrix evaluation (Eq. 1-3).
+
+The (m x n) task-by-node matrix is tiled into (BM x BN) VMEM blocks via
+BlockSpec. Each grid step streams one block of bw/tp/local plus the matching
+sz row-slice and idle column-slice, and emits the YC and TM blocks in a
+single fused pass (no intermediate materialization in HBM).
+
+TPU mapping (see DESIGN.md #hardware-adaptation): this op is elementwise +
+broadcast, i.e. VPU-bound, so the tiling goal is VMEM residency and single
+HBM pass, not MXU utilization. Default blocks of 128x128 f32 are 64 KiB per
+matrix operand - four operands plus two outputs fit in ~384 KiB of VMEM,
+far under the ~16 MiB budget, leaving room for double-buffering by the
+Mosaic pipeliner.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain Python floats: pallas kernels cannot capture traced jnp constants.
+INF = 3.0e38
+EPS = 1e-9
+
+# Default VMEM tile. Both must divide the (padded) problem shape; callers pad
+# to the artifact shape grid (see aot.py / model.py).
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _cost_kernel(sz_ref, bw_ref, tp_ref, local_ref, idle_ref, yc_ref, tm_ref):
+    """One (BM, BN) block: fused Eq. 1-3.
+
+    sz_ref    f32[BM, 1]  split sizes for this task-tile
+    bw_ref    f32[BM, BN] effective bandwidth block
+    tp_ref    f32[BM, BN] compute-time block
+    local_ref f32[BM, BN] replica-locality mask block
+    idle_ref  f32[1, BN]  node idle times for this node-tile
+    yc_ref    f32[BM, BN] out: completion-time block
+    tm_ref    f32[BM, BN] out: transfer-time block
+    """
+    sz = sz_ref[...]          # (BM, 1), broadcasts over columns
+    bw = bw_ref[...]
+    tp = tp_ref[...]
+    local = local_ref[...]
+    idle = idle_ref[...]      # (1, BN), broadcasts over rows
+
+    tm = sz / jnp.maximum(bw, jnp.float32(EPS))
+    tm = jnp.where(bw <= 0.0, jnp.float32(INF), tm)
+    tm = jnp.where(local > 0.0, jnp.float32(0.0), tm)
+    tm_ref[...] = tm
+    yc_ref[...] = tm + tp + idle
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def cost_matrix_pallas(sz, bw, tp, local, idle,
+                       block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N):
+    """Tiled Pallas evaluation of (YC, TM) over an (m, n) problem.
+
+    Shapes must be multiples of the block shape; model.schedule_eval pads.
+    Returns (yc, tm), each f32[m, n].
+    """
+    m, n = bw.shape
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    if m % bm or n % bn:
+        raise ValueError(f"problem {m}x{n} not divisible by block {bm}x{bn}")
+    grid = (m // bm, n // bn)
+
+    # sz enters as a column (m,1), idle as a row (1,n): keeps every ref 2-D,
+    # which is both the TPU-friendly layout and what interpret mode expects.
+    sz2 = sz.reshape(m, 1).astype(jnp.float32)
+    idle2 = idle.reshape(1, n).astype(jnp.float32)
+
+    yc, tm = pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(sz2, bw.astype(jnp.float32), tp.astype(jnp.float32),
+      local.astype(jnp.float32), idle2)
+    return yc, tm
+
+
+def vmem_bytes(block_m, block_n):
+    """Static VMEM footprint estimate for one grid step (f32 operands).
+
+    5 block inputs (sz column, bw, tp, local, idle row) + 2 block outputs.
+    Used by the structural perf report in EXPERIMENTS.md #perf.
+    """
+    mat = block_m * block_n * 4
+    return 4 * 0 + 3 * mat + block_m * 4 + block_n * 4 + 2 * mat

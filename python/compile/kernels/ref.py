@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the BASS scheduling cost model (Eq. 1-3 of the paper).
+
+This is the CORE correctness signal: the Pallas kernel in cost_matrix.py and
+the Rust fallback evaluator (rust/src/sched/cost.rs) must both agree with
+this reference bit-for-bit on the same f32 inputs.
+
+Semantics
+---------
+Given m pending tasks and n candidate nodes:
+
+  sz    f32[m]    input split size per task (MB)
+  bw    f32[m,n]  effective available bandwidth from TK_i's data source
+                  to ND_j (MB/s); <= 0 means "no path"
+  tp    f32[m,n]  computation time TP_{i,j} (s)
+  local f32[m,n]  1.0 where ND_j already stores a replica of TK_i's split
+  idle  f32[n]    node available idle time YI_j (s)
+  ts    f32[1]    time-slot duration (s), for the slot-demand output
+
+  TM_{i,j} = 0                      if local
+           = sz_i / bw_{i,j}        if bw > 0          (Eq. 1)
+           = +INF                   otherwise (unreachable)
+  TE_{i,j} = TM_{i,j} + TP_{i,j}                       (Eq. 2)
+  YC_{i,j} = TE_{i,j} + YI_j                           (Eq. 3)
+  slots    = ceil(TM / ts)          (0 where local)
+"""
+
+import jax.numpy as jnp
+
+INF = jnp.float32(3.0e38)
+EPS = jnp.float32(1e-9)
+
+
+def transfer_time_ref(sz, bw, local):
+    """TM matrix (Eq. 1) with locality masking and unreachability."""
+    sz = sz.astype(jnp.float32)
+    bw = bw.astype(jnp.float32)
+    tm = sz[:, None] / jnp.maximum(bw, EPS)
+    tm = jnp.where(bw <= 0.0, INF, tm)
+    return jnp.where(local > 0.0, jnp.float32(0.0), tm)
+
+
+def cost_matrix_ref(sz, bw, tp, local, idle, ts):
+    """Full Eq. 1-3 evaluation.
+
+    Returns (yc, tm, slots, best_idx, best_cost):
+      yc        f32[m,n]  completion-time matrix YC
+      tm        f32[m,n]  transfer-time matrix TM
+      slots     f32[m,n]  time-slot demand ceil(TM/ts)
+      best_idx  i32[m]    argmin_j YC  (Objective Function, Eq. 4)
+      best_cost f32[m]    min_j YC
+    """
+    tm = transfer_time_ref(sz, bw, local)
+    te = tm + tp.astype(jnp.float32)
+    yc = te + idle.astype(jnp.float32)[None, :]
+    slots = jnp.ceil(tm / jnp.maximum(ts.astype(jnp.float32)[0], EPS))
+    slots = jnp.where(tm >= INF, INF, slots)
+    best_idx = jnp.argmin(yc, axis=1).astype(jnp.int32)
+    best_cost = jnp.min(yc, axis=1)
+    return yc, tm, slots, best_idx, best_cost
+
+
+def idle_estimate_ref(progress_score, progress_rate):
+    """ProgressRate idle-time estimator (Section V-A of the paper).
+
+    YI = (1 - ProgressScore) / ProgressRate, with rate <= 0 (task not
+    started / no signal) mapping to INF.
+    """
+    ps = jnp.clip(progress_score.astype(jnp.float32), 0.0, 1.0)
+    pr = progress_rate.astype(jnp.float32)
+    est = (jnp.float32(1.0) - ps) / jnp.maximum(pr, EPS)
+    return jnp.where(pr <= 0.0, INF, est)

@@ -1,0 +1,72 @@
+"""L2 JAX model: the BASS batched scheduling cost model.
+
+This is the computation the Rust coordinator executes on its hot path (via
+the AOT artifact, never via Python): given the SDN controller's bandwidth
+snapshot and the cluster's idle-time ledger, evaluate Eq. 1-3 for every
+pending task x candidate node, and reduce to the per-task optimum
+(Objective Function, Eq. 4) plus the time-slot demand of each placement.
+
+The elementwise core (YC / TM blocks) runs in the L1 Pallas kernel; the
+row-reductions (argmin / min) and slot quantization stay in jnp so XLA fuses
+them with the kernel output in one HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cost_matrix as cm
+from .kernels.ref import EPS, INF
+
+# Artifact variants built by aot.py. Rust picks the smallest variant that
+# fits the live (m, n) and pads; names must match runtime/artifacts.rs.
+VARIANTS = ((16, 8), (64, 16), (256, 64))
+
+
+def schedule_eval(sz, bw, tp, local, idle, ts):
+    """Full scheduling evaluation; the single exported computation.
+
+    Inputs (see kernels/ref.py for semantics):
+      sz f32[m], bw f32[m,n], tp f32[m,n], local f32[m,n],
+      idle f32[n], ts f32[1]
+
+    Returns (yc, tm, slots, best_idx, best_cost).
+    """
+    m, n = bw.shape
+    # Block shape: full problem if it fits one tile, else the default grid.
+    bm = m if m <= cm.DEFAULT_BLOCK_M else cm.DEFAULT_BLOCK_M
+    bn = n if n <= cm.DEFAULT_BLOCK_N else cm.DEFAULT_BLOCK_N
+    yc, tm = cm.cost_matrix_pallas(sz, bw, tp, local, idle,
+                                   block_m=bm, block_n=bn)
+    slots = jnp.ceil(tm / jnp.maximum(ts.astype(jnp.float32)[0], EPS))
+    slots = jnp.where(tm >= INF, INF, slots)
+    best_idx = jnp.argmin(yc, axis=1).astype(jnp.int32)
+    best_cost = jnp.min(yc, axis=1)
+    return yc, tm, slots, best_idx, best_cost
+
+
+def idle_estimate(progress_score, progress_rate):
+    """ProgressRate estimator (Section V-A), exported as its own artifact."""
+    ps = jnp.clip(progress_score.astype(jnp.float32), 0.0, 1.0)
+    pr = progress_rate.astype(jnp.float32)
+    est = (jnp.float32(1.0) - ps) / jnp.maximum(pr, EPS)
+    return (jnp.where(pr <= 0.0, INF, est),)
+
+
+def lower_schedule_eval(m, n):
+    """jax.jit(...).lower for a fixed (m, n) artifact variant."""
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((m,), f32),      # sz
+        jax.ShapeDtypeStruct((m, n), f32),    # bw
+        jax.ShapeDtypeStruct((m, n), f32),    # tp
+        jax.ShapeDtypeStruct((m, n), f32),    # local
+        jax.ShapeDtypeStruct((n,), f32),      # idle
+        jax.ShapeDtypeStruct((1,), f32),      # ts
+    )
+    return jax.jit(schedule_eval).lower(*specs)
+
+
+def lower_idle_estimate(n):
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct((n,), f32)
+    return jax.jit(idle_estimate).lower(spec, spec)

@@ -1,0 +1,113 @@
+"""Pallas kernel vs pure-jnp oracle: the core L1 correctness signal.
+
+hypothesis sweeps shapes, block shapes and input regimes; every case must
+match kernels/ref.py exactly (atol=0) because both paths compute the same
+f32 expression tree.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cost_matrix as cm
+from compile.kernels import ref
+
+
+def _mk_inputs(rng, m, n, *, neg_bw=True, locality=0.3):
+    sz = rng.uniform(0.0, 5000.0, m).astype(np.float32)
+    lo = -5.0 if neg_bw else 1e-3
+    bw = rng.uniform(lo, 120.0, (m, n)).astype(np.float32)
+    tp = rng.uniform(0.0, 900.0, (m, n)).astype(np.float32)
+    local = (rng.random((m, n)) < locality).astype(np.float32)
+    idle = rng.uniform(0.0, 200.0, n).astype(np.float32)
+    ts = np.array([1.0], np.float32)
+    return sz, bw, tp, local, idle, ts
+
+
+def _run_both(sz, bw, tp, local, idle, ts, bm, bn):
+    got = cm.cost_matrix_pallas(
+        jnp.array(sz), jnp.array(bw), jnp.array(tp), jnp.array(local),
+        jnp.array(idle), block_m=bm, block_n=bn)
+    want_yc, want_tm, *_ = ref.cost_matrix_ref(
+        jnp.array(sz), jnp.array(bw), jnp.array(tp), jnp.array(local),
+        jnp.array(idle), jnp.array(ts))
+    return got, (want_yc, want_tm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mb=st.integers(1, 6), nb=st.integers(1, 6),
+    bm=st.sampled_from([4, 8, 16]), bn=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(mb, nb, bm, bn, seed):
+    """Grid sweep: any multiple of any block shape matches the oracle."""
+    m, n = mb * bm, nb * bn
+    rng = np.random.default_rng(seed)
+    args = _mk_inputs(rng, m, n)
+    (yc, tm), (wyc, wtm) = _run_both(*args, bm, bn)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(wyc), atol=0)
+    np.testing.assert_allclose(np.asarray(tm), np.asarray(wtm), atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       locality=st.floats(0.0, 1.0))
+def test_kernel_locality_regimes(seed, locality):
+    """From all-remote to all-local, TM respects the locality mask."""
+    rng = np.random.default_rng(seed)
+    sz, bw, tp, local, idle, ts = _mk_inputs(rng, 16, 8, locality=locality)
+    (yc, tm), (wyc, wtm) = _run_both(sz, bw, tp, local, idle, ts, 16, 8)
+    tm = np.asarray(tm)
+    np.testing.assert_allclose(tm, np.asarray(wtm), atol=0)
+    assert (tm[local > 0] == 0.0).all(), "local placements must have TM=0"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_unreachable_is_inf(seed):
+    """bw <= 0 and not local => YC >= INF (node never wins argmin)."""
+    rng = np.random.default_rng(seed)
+    sz, bw, tp, local, idle, ts = _mk_inputs(rng, 8, 8)
+    bw[:, 0] = -1.0
+    local[:, 0] = 0.0
+    (yc, tm), _ = _run_both(sz, bw, tp, local, idle, ts, 8, 8)
+    assert (np.asarray(tm)[:, 0] >= cm.INF).all()
+    assert (np.asarray(yc)[:, 0] >= cm.INF).all()
+
+
+def test_kernel_rejects_indivisible_grid():
+    rng = np.random.default_rng(0)
+    sz, bw, tp, local, idle, ts = _mk_inputs(rng, 10, 6)
+    with pytest.raises(ValueError, match="not divisible"):
+        cm.cost_matrix_pallas(jnp.array(sz), jnp.array(bw), jnp.array(tp),
+                              jnp.array(local), jnp.array(idle),
+                              block_m=4, block_n=4)
+
+
+@pytest.mark.parametrize("bm,bn", [(4, 4), (8, 8), (16, 8), (128, 128)])
+def test_vmem_budget(bm, bn):
+    """Structural perf check: the block working set stays far under VMEM."""
+    assert cm.vmem_bytes(bm, bn) < 16 * 1024 * 1024
+
+
+def test_paper_example1_numbers():
+    """TK_1 of Example 1: YC on ND_1 (remote, 5s move) = 17s beats the
+    data-local ND_2 = 18s — the paper's canonical BASS decision."""
+    # nodes: ND_1..ND_4, idle = 3, 9, 20, 7; block 64MB at 100Mbps ~= 5s
+    # (the paper rounds 5.12s to 5s; we use bw = 12.8 MB/s so TM = 5.0s).
+    sz = np.array([64.0], np.float32)                      # MB
+    bw = np.array([[12.8, 12.8, 12.8, 12.8]], np.float32)  # 100Mbps
+    tp = np.full((1, 4), 9.0, np.float32)
+    local = np.array([[0.0, 1.0, 1.0, 0.0]], np.float32)   # replicas ND_2, ND_3
+    idle = np.array([3.0, 9.0, 20.0, 7.0], np.float32)
+    ts = np.array([1.0], np.float32)
+    yc, tm, slots, idx, cost = ref.cost_matrix_ref(
+        jnp.array(sz), jnp.array(bw), jnp.array(tp), jnp.array(local),
+        jnp.array(idle), jnp.array(ts))
+    yc = np.asarray(yc)[0]
+    assert yc[1] == pytest.approx(18.0)          # local ND_2: 0+9+9
+    assert yc[0] == pytest.approx(17.0)          # remote ND_1: 5+9+3
+    assert int(idx[0]) == 0                      # BASS picks ND_1
+    assert int(np.asarray(slots)[0, 0]) == 5     # 5 time slots reserved

@@ -1,0 +1,94 @@
+"""L2 model tests: schedule_eval shapes/semantics + idle estimator +
+artifact lowering (HLO text emission) sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, aot
+from compile.kernels import ref
+
+
+def _inputs(m, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.array(rng.uniform(1, 2000, m).astype(np.float32)),
+        jnp.array(rng.uniform(0.1, 100, (m, n)).astype(np.float32)),
+        jnp.array(rng.uniform(1, 600, (m, n)).astype(np.float32)),
+        jnp.array((rng.random((m, n)) < 0.4).astype(np.float32)),
+        jnp.array(rng.uniform(0, 60, n).astype(np.float32)),
+        jnp.array([1.0], np.float32),
+    )
+
+
+@pytest.mark.parametrize("m,n", list(model.VARIANTS))
+def test_schedule_eval_variant_shapes(m, n):
+    yc, tm, slots, idx, cost = model.schedule_eval(*_inputs(m, n))
+    assert yc.shape == (m, n) and tm.shape == (m, n)
+    assert slots.shape == (m, n)
+    assert idx.shape == (m,) and idx.dtype == jnp.int32
+    assert cost.shape == (m,)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_schedule_eval_matches_ref(seed):
+    args = _inputs(16, 8, seed)
+    got = model.schedule_eval(*args)
+    want = ref.cost_matrix_ref(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_argmin_is_objective_function(seed):
+    """Eq. 4: the returned node minimizes YC for every task."""
+    args = _inputs(16, 8, seed)
+    yc, _, _, idx, cost = model.schedule_eval(*args)
+    yc, idx, cost = map(np.asarray, (yc, idx, cost))
+    for i in range(yc.shape[0]):
+        assert yc[i, idx[i]] == cost[i] == yc[i].min()
+
+
+def test_idle_estimate_formula():
+    ps = jnp.array([0.0, 0.5, 1.0, 0.25], jnp.float32)
+    pr = jnp.array([0.1, 0.5, 1.0, 0.0], jnp.float32)
+    (est,) = model.idle_estimate(ps, pr)
+    est = np.asarray(est)
+    assert est[0] == pytest.approx(10.0)
+    assert est[1] == pytest.approx(1.0)
+    assert est[2] == pytest.approx(0.0)
+    assert est[3] >= 3.0e38  # no progress signal -> unknown/INF
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_idle_estimate_monotone_in_progress(seed):
+    """More progress at the same rate => no later idle time."""
+    rng = np.random.default_rng(seed)
+    pr = jnp.array(rng.uniform(0.01, 2.0, 8).astype(np.float32))
+    ps_lo = jnp.array(rng.uniform(0.0, 0.5, 8).astype(np.float32))
+    ps_hi = ps_lo + 0.3
+    (lo,), (hi,) = model.idle_estimate(ps_lo, pr), model.idle_estimate(ps_hi, pr)
+    assert (np.asarray(hi) <= np.asarray(lo)).all()
+
+
+def test_lowering_emits_parsable_hlo(tmp_path):
+    """HLO text must contain an ENTRY computation and a tuple root —
+    the contract runtime/loader.rs depends on."""
+    text = aot.to_hlo_text(model.lower_schedule_eval(16, 8))
+    assert "ENTRY" in text
+    assert "f32[16,8]" in text
+    idle_text = aot.to_hlo_text(model.lower_idle_estimate(16))
+    assert "ENTRY" in idle_text
+
+
+def test_aot_build_manifest(tmp_path):
+    manifest = aot.build(str(tmp_path))
+    names = [row.split()[0] for row in manifest]
+    assert names.count("cost") == len(model.VARIANTS)
+    assert (tmp_path / "manifest.txt").exists()
+    for (m, n) in model.VARIANTS:
+        assert (tmp_path / f"cost_{m}x{n}.hlo.txt").stat().st_size > 0

@@ -1,0 +1,43 @@
+//! Bench: ablations over the paper's tunables (slot duration, background
+//! intensity, replication, heterogeneity) + the future-work scale sweep.
+
+use bass::bench_harness::Bencher;
+use bass::experiments::{
+    ablate_background, ablate_heterogeneity, ablate_replication, ablate_slot_duration,
+    run_scale,
+};
+use bass::runtime::CostModel;
+
+fn main() {
+    let cost = CostModel::rust_only();
+    let b = Bencher::quick();
+    println!("# bench: ablations + scale");
+    b.bench("ablate/slot_duration_4pts", || {
+        ablate_slot_duration(&[0.25, 1.0, 2.0, 4.0], &cost)
+    });
+    b.bench("ablate/background_4pts", || ablate_background(&[0, 2, 4, 8], &cost));
+    b.bench("ablate/replication_3pts", || ablate_replication(&[1, 2, 3], &cost));
+    b.bench("ablate/heterogeneity_3x", || ablate_heterogeneity(3.0, &cost));
+    b.bench("scale/8sw_x2..4", || run_scale(&[2, 4], &cost));
+
+    println!("\nablation values:");
+    for p in ablate_slot_duration(&[0.25, 1.0, 2.0, 4.0], &cost) {
+        println!("  ts={:<5} {:<5} JT {:.1}s", p.x, p.scheduler, p.jt);
+    }
+    for p in ablate_background(&[0, 2, 4, 8], &cost) {
+        println!("  bg={:<5} {:<5} JT {:.1}s", p.x, p.scheduler, p.jt);
+    }
+    for (s, jt) in ablate_heterogeneity(3.0, &cost) {
+        println!("  hetero3x {:<5} JT {:.1}s", s, jt);
+    }
+    for p in run_scale(&[2, 4, 8, 16], &cost) {
+        println!(
+            "  scale n={:<4} m={:<4} {:<5} sched {:.1}ms makespan {:.0}s",
+            p.nodes,
+            p.tasks,
+            p.scheduler,
+            p.sched_secs * 1e3,
+            p.makespan
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: Example 1 / Fig 3 / Fig 4 — full 4-scheduler walk-through,
+//! plus per-scheduler scheduling latency on the 9-task fixture.
+
+use bass::bench_harness::Bencher;
+use bass::experiments::{example1_fixture, run_example1, run_one, SchedulerKind};
+use bass::runtime::CostModel;
+use bass::sched::SchedCtx;
+use bass::util::Secs;
+
+fn main() {
+    let cost = CostModel::rust_only();
+    let b = Bencher::default();
+    println!("# bench: example1 (Fig 3 / Fig 4 regeneration)");
+    b.bench("example1/all_four_schedulers+execution", || run_example1(&cost));
+    for kind in SchedulerKind::ALL {
+        b.bench(&format!("example1/schedule_only/{}", kind.label()), || {
+            let mut fx = example1_fixture();
+            let mut s = kind.make();
+            let mut ctx = SchedCtx {
+                controller: &mut fx.ctrl,
+                namenode: &fx.nn,
+                ledger: &mut fx.ledger,
+                authorized: fx.nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+            node_speed: Vec::new(),
+            };
+            s.schedule(&fx.tasks, None, &mut ctx)
+        });
+        b.bench(&format!("example1/schedule+execute/{}", kind.label()), || {
+            run_one(kind, &cost)
+        });
+    }
+    // regenerate the figure values once for the log
+    for o in run_example1(&cost) {
+        println!("  fig4 row: {:<9} JT {:.0}s", o.scheduler, o.executed_jt);
+    }
+}

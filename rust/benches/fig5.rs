@@ -1,0 +1,20 @@
+//! Bench: Fig 5 — both JT-vs-size panels.
+
+use bass::bench_harness::Bencher;
+use bass::experiments::run_fig5;
+use bass::runtime::CostModel;
+
+fn main() {
+    let cost = CostModel::rust_only();
+    let b = Bencher::quick();
+    println!("# bench: fig5 (both panels)");
+    b.bench("fig5/both_panels_150_600", || {
+        run_fig5(&cost, Some(vec![150.0, 600.0]))
+    });
+    for p in run_fig5(&cost, Some(vec![150.0, 300.0, 600.0])) {
+        println!("  panel {}:", p.job);
+        for (name, jts) in &p.series {
+            println!("    {:<8} {:?}", name, jts.iter().map(|x| x.round()).collect::<Vec<_>>());
+        }
+    }
+}

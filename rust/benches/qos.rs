@@ -1,0 +1,14 @@
+//! Bench: Example 3 — QoS queue comparison.
+
+use bass::bench_harness::Bencher;
+use bass::experiments::run_example3;
+
+fn main() {
+    let b = Bencher::default();
+    println!("# bench: example3 qos");
+    b.bench("qos/shared_vs_queued_5bg", || run_example3(5));
+    for bg in [0usize, 5, 10] {
+        let o = run_example3(bg);
+        println!("  bg={bg}: shared {:.1}s queued {:.1}s speedup {:.2}x", o.shared_secs, o.queued_secs, o.speedup);
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench: the AOT XLA request path — artifact compile (cold) and
+//! execute (hot), vs the pure-Rust mirror. §Perf L1/L2 evidence.
+
+use bass::bench_harness::Bencher;
+use bass::runtime::{CostInputs, CostModel};
+use bass::util::XorShift;
+
+fn inputs(m: usize, n: usize, seed: u64) -> CostInputs {
+    let mut r = XorShift::new(seed);
+    CostInputs {
+        m,
+        n,
+        sz: (0..m).map(|_| r.uniform(1.0, 5000.0) as f32).collect(),
+        bw: (0..m * n).map(|_| r.uniform(0.5, 120.0) as f32).collect(),
+        tp: (0..m * n).map(|_| r.uniform(1.0, 900.0) as f32).collect(),
+        local: (0..m * n).map(|_| if r.chance(0.3) { 1.0 } else { 0.0 }).collect(),
+        idle: (0..n).map(|_| r.uniform(0.0, 200.0) as f32).collect(),
+        ts: 1.0,
+    }
+}
+
+fn main() {
+    let model = CostModel::auto();
+    let b = Bencher::default();
+    println!("# bench: runtime xla path");
+    if model.backend_for(16, 8) != bass::runtime::exec::Backend::Xla {
+        println!("no artifacts found — run `make artifacts`; skipping XLA benches");
+        return;
+    }
+    for (m, n) in [(9usize, 4usize), (16, 8), (64, 16), (256, 64)] {
+        let inp = inputs(m, n, 1);
+        b.bench(&format!("xla/eval/{m}x{n}"), || model.eval(&inp).unwrap());
+        b.bench(&format!("rust/eval/{m}x{n}"), || CostModel::eval_rust(&inp));
+    }
+}

@@ -1,0 +1,119 @@
+//! Microbenches: the L3 hot paths — scheduler decision latency at scale,
+//! slot-calendar ops, flow-network recomputation, XLA cost-model calls.
+//! This is the §Perf driver (EXPERIMENTS.md).
+
+use bass::bench_harness::Bencher;
+use bass::cluster::Ledger;
+use bass::hdfs::{Namenode, PlacementPolicy};
+use bass::mapreduce::TaskSpec;
+use bass::runtime::{CostInputs, CostModel};
+use bass::sched::{Bass, Hds, SchedCtx, Scheduler};
+use bass::sdn::{Controller, TrafficClass};
+use bass::sim::FlowNet;
+use bass::topology::builders::tree_cluster;
+use bass::topology::LinkId;
+use bass::util::{Secs, XorShift, BLOCK_MB};
+
+fn big_cluster(n_sw: usize, per_sw: usize, m_tasks: usize) -> (Controller, Namenode, Vec<bass::topology::NodeId>, Vec<TaskSpec>) {
+    let (topo, nodes) = tree_cluster(n_sw, per_sw, 100.0, 1000.0);
+    let ctrl = Controller::new(topo, 1.0);
+    let mut nn = Namenode::new();
+    let mut rng = XorShift::new(7);
+    let blocks = PlacementPolicy::RandomDistinct.place(&mut nn, &nodes, m_tasks, BLOCK_MB, 3, &mut rng);
+    let tasks = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| TaskSpec::map(i, b, BLOCK_MB, Secs(20.0), 16.0))
+        .collect();
+    (ctrl, nn, nodes, tasks)
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("# bench: scheduler micro (L3 hot paths)");
+
+    for (m, n_sw, per_sw) in [(64usize, 4usize, 8usize), (256, 8, 8)] {
+        let n = n_sw * per_sw;
+        // setup is hoisted out; each sample clones the pristine state so
+        // the timing isolates the scheduling decision path
+        let (ctrl0, nn, nodes, tasks) = big_cluster(n_sw, per_sw, m);
+        for which in ["bass", "hds"] {
+            b.bench(&format!("schedule/{which}/{m}tasks_{n}nodes"), || {
+                let mut ctrl = ctrl0.clone();
+                let cost = CostModel::rust_only();
+                let mut ledger = Ledger::new(nodes.len());
+                let mut ctx = SchedCtx {
+                    controller: &mut ctrl,
+                    namenode: &nn,
+                    ledger: &mut ledger,
+                    authorized: nodes.clone(),
+                    now: Secs::ZERO,
+                    cost: &cost,
+            node_speed: Vec::new(),
+                };
+                if which == "bass" {
+                    Bass::new().schedule(&tasks, None, &mut ctx)
+                } else {
+                    Hds::new().schedule(&tasks, None, &mut ctx)
+                }
+            });
+        }
+    }
+
+    // cost model backends
+    let mk_inputs = |m: usize, n: usize| -> CostInputs {
+        let mut r = XorShift::new(3);
+        CostInputs {
+            m,
+            n,
+            sz: (0..m).map(|_| r.uniform(1.0, 5000.0) as f32).collect(),
+            bw: (0..m * n).map(|_| r.uniform(0.5, 120.0) as f32).collect(),
+            tp: (0..m * n).map(|_| r.uniform(1.0, 900.0) as f32).collect(),
+            local: (0..m * n).map(|_| if r.chance(0.3) { 1.0 } else { 0.0 }).collect(),
+            idle: (0..n).map(|_| r.uniform(0.0, 200.0) as f32).collect(),
+            ts: 1.0,
+        }
+    };
+    let auto = CostModel::auto();
+    for (m, n) in [(16usize, 8usize), (64, 16), (256, 64)] {
+        let inp = mk_inputs(m, n);
+        b.bench(&format!("cost/rust/{m}x{n}"), || CostModel::eval_rust(&inp));
+        if auto.backend_for(m, n) == bass::runtime::exec::Backend::Xla {
+            b.bench(&format!("cost/xla/{m}x{n}"), || auto.eval(&inp).unwrap());
+        }
+    }
+
+    // slot calendar ops
+    b.bench("calendar/plan+reserve+release_64slots", || {
+        let mut ctrl = {
+            let (topo, _) = tree_cluster(2, 3, 100.0, 100.0);
+            Controller::new(topo, 1.0)
+        };
+        let nodes = ctrl.topo().hosts.clone();
+        let mut out = 0usize;
+        for i in 0..64 {
+            let plan = ctrl
+                .plan_transfer(nodes[i % 3], nodes[3 + i % 3], 64.0, Secs(i as f64))
+                .unwrap();
+            let t = ctrl
+                .commit_transfer(nodes[i % 3], nodes[3 + i % 3], TrafficClass::HadoopOther, plan, Secs(i as f64))
+                .unwrap();
+            out += t.reservation.n_slots;
+            ctrl.complete_transfer(&t, 64.0);
+        }
+        out
+    });
+
+    // flow network recompute at scale
+    b.bench("flownet/200flows_recompute", || {
+        let caps: Vec<f64> = (0..64).map(|_| 100.0).collect();
+        let mut net = FlowNet::new(&caps);
+        let mut r = XorShift::new(5);
+        for _ in 0..200 {
+            let a = r.below(64);
+            let b2 = r.below(64);
+            net.add_flow(vec![LinkId(a), LinkId(b2)], 64.0, TrafficClass::HadoopOther);
+        }
+        net.n_flows()
+    });
+}

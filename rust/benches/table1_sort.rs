@@ -1,0 +1,18 @@
+//! Bench: Table I(b) — Sort sweep regeneration.
+
+use bass::bench_harness::Bencher;
+use bass::experiments::{run_table1, Table1Config};
+use bass::runtime::CostModel;
+use bass::trace;
+use bass::workload::JobKind;
+
+fn main() {
+    let cost = CostModel::rust_only();
+    let mut cfg = Table1Config::paper(JobKind::Sort);
+    cfg.sizes_mb = vec![150.0, 300.0, 600.0];
+    let b = Bencher::quick();
+    println!("# bench: table1(b) sort");
+    b.bench("table1b/sweep_150_300_600_x3sched", || run_table1(&cfg, &cost));
+    let rows = run_table1(&cfg, &cost);
+    print!("{}", trace::table1_markdown(&rows));
+}

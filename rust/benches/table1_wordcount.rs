@@ -1,0 +1,23 @@
+//! Bench: Table I(a) — Wordcount sweep regeneration.
+
+use bass::bench_harness::Bencher;
+use bass::experiments::{run_cell_for_bench, run_table1, Table1Config};
+use bass::runtime::CostModel;
+use bass::trace;
+use bass::workload::JobKind;
+
+fn main() {
+    let cost = CostModel::rust_only();
+    let mut cfg = Table1Config::paper(JobKind::Wordcount);
+    cfg.sizes_mb = vec![150.0, 300.0, 600.0];
+    let b = Bencher::quick();
+    println!("# bench: table1(a) wordcount");
+    b.bench("table1a/sweep_150_300_600_x3sched", || run_table1(&cfg, &cost));
+    for &size in &cfg.sizes_mb {
+        b.bench(&format!("table1a/cell/bass/{}MB", size), || {
+            run_cell_for_bench(&cfg, size, &cost)
+        });
+    }
+    let rows = run_table1(&cfg, &cost);
+    print!("{}", trace::table1_markdown(&rows));
+}

@@ -1,0 +1,101 @@
+//! Minimal statistical bench harness (criterion is not vendored in the
+//! offline image). Used by `benches/*.rs` with `harness = false`.
+
+use std::time::Instant;
+
+/// Timing statistics over the sample set (seconds per iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub samples: usize,
+}
+
+/// One benchmark runner: warm up, then time `samples` batches.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, samples: 30, iters_per_sample: 1 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, samples: 10, iters_per_sample: 1 }
+    }
+
+    /// Time `f`, returning stats; `f` runs `iters_per_sample` times per
+    /// sample and must not be optimized away (return + black_box).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(t0.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        times.sort_by(f64::total_cmp);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let pct = |p: f64| times[((times.len() as f64 - 1.0) * p).round() as usize];
+        Stats { mean, p50: pct(0.5), p99: pct(0.99), min: times[0], samples: times.len() }
+    }
+
+    /// Run + print one criterion-style line.
+    pub fn bench<T>(&self, name: &str, f: impl FnMut() -> T) -> Stats {
+        let s = self.run(f);
+        println!(
+            "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  min {:>10}",
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            fmt_time(s.min)
+        );
+        s
+    }
+}
+
+/// Human time formatting (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let b = Bencher { warmup_iters: 0, samples: 20, iters_per_sample: 1 };
+        let s = b.run(|| std::hint::black_box((0..1000).sum::<u64>()));
+        assert!(s.min <= s.p50 && s.p50 <= s.p99);
+        assert!(s.mean > 0.0);
+        assert_eq!(s.samples, 20);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

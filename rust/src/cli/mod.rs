@@ -1,0 +1,267 @@
+//! Hand-rolled CLI (clap is not vendored offline). Subcommands map 1:1 to
+//! the experiment drivers; `bass --help` documents them.
+
+use crate::config::{ExperimentConfig, RunConfig};
+use crate::coordinator::{ClusterSetup, Coordinator};
+use crate::experiments::{
+    ablate_background, ablate_heterogeneity, ablate_slot_duration, run_example1,
+    run_example3, run_fig5, run_scale, run_table1, SchedulerKind, Table1Config,
+};
+use crate::metrics::NodeTimeline;
+use crate::runtime::CostModel;
+use crate::trace;
+use crate::util::XorShift;
+use crate::workload::{JobKind, TraceGen};
+
+pub const HELP: &str = "\
+bass — Bandwidth-Aware Scheduling with SDN in Hadoop (reproduction)
+
+USAGE: bass <COMMAND> [OPTIONS]
+
+COMMANDS:
+  example1              Example 1/2 + Fig 3/4: the 4-node walk-through
+  example3 [--bg N]     Example 3: QoS queues vs shared queue
+  table1 --job J        Table I sweep (J = wordcount | sort)
+  fig5                  Fig 5: JT curves for both jobs
+  e2e [--jobs N]        End-to-end online trace through the coordinator
+  ablate                Slot-duration / background / heterogeneity ablations
+  scale                 Cluster-size scalability sweep (paper future work)
+  run --config F        Run the experiment described by a TOML file
+  help                  Show this message
+
+OPTIONS:
+  --sizes a,b,c         Override sweep sizes (MB)
+  --sched s1,s2         Override scheduler list (hds,bar,bass,pre-bass)
+  --seed N              Override workload seed
+";
+
+/// Parse `--key value` style options from the arg list.
+fn opt(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Entry point used by main.rs; returns process exit code.
+pub fn run(args: Vec<String>) -> i32 {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let cost = CostModel::auto();
+    match cmd {
+        "example1" => {
+            println!("== Example 1/2 (Fig 3 + Fig 4) ==");
+            for o in run_example1(&cost) {
+                println!(
+                    "\n{}: estimated JT {:.0}s, executed JT {:.0}s (paper: {})",
+                    o.scheduler,
+                    o.estimated_jt,
+                    o.executed_jt,
+                    match o.scheduler {
+                        "HDS" => "39s",
+                        "BAR" => "38s",
+                        "BASS" => "35s",
+                        _ => "34s",
+                    }
+                );
+                print!("{}", NodeTimeline::render(&o.timelines, 1.0));
+            }
+            0
+        }
+        "example3" => {
+            let bg = opt(&args, "--bg").and_then(|s| s.parse().ok()).unwrap_or(5);
+            let o = run_example3(bg);
+            println!("== Example 3 (QoS queues, {bg} background flows) ==");
+            println!("shared 150Mbps queue : shuffle done in {:.1}s", o.shared_secs);
+            println!("Q1/Q2/Q3 queues      : shuffle done in {:.1}s", o.queued_secs);
+            println!("speedup              : {:.2}x", o.speedup);
+            0
+        }
+        "table1" => {
+            let kind = match opt(&args, "--job").as_deref() {
+                Some("sort") => JobKind::Sort,
+                _ => JobKind::Wordcount,
+            };
+            let mut cfg = Table1Config::paper(kind);
+            apply_overrides(&mut cfg, &args);
+            println!("== Table I ({}) ==", kind.label());
+            let rows = run_table1(&cfg, &cost);
+            print!("{}", trace::table1_markdown(&rows));
+            0
+        }
+        "fig5" => {
+            let sizes = opt(&args, "--sizes").map(parse_sizes);
+            for p in run_fig5(&cost, sizes) {
+                println!("== Fig 5: {} ==", p.job);
+                print!("size(MB):");
+                for s in &p.sizes_mb {
+                    print!("\t{s:.0}");
+                }
+                println!();
+                for (name, jts) in &p.series {
+                    print!("{name}:");
+                    for j in jts {
+                        print!("\t{j:.0}");
+                    }
+                    println!();
+                }
+            }
+            0
+        }
+        "e2e" => {
+            let n = opt(&args, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(10);
+            println!("== E2E online trace ({n} jobs) ==");
+            for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+                let mut rng = XorShift::new(2014);
+                let arrivals = TraceGen::default().generate(n, &mut rng);
+                let coord = Coordinator::new(ClusterSetup::default(), kind, CostModel::auto());
+                let results = coord.run_trace(arrivals);
+                let total: f64 = results.iter().map(|r| r.metrics.jt).sum();
+                println!("\n[{}] {} jobs, mean JT {:.1}s", kind.label(), results.len(), total / n as f64);
+                for r in &results {
+                    println!("  t={:>7.1}s {:<18} {}", r.submitted_at, r.name, r.metrics);
+                }
+            }
+            0
+        }
+        "ablate" => {
+            let cost = CostModel::rust_only();
+            println!("== ablations ==");
+            for p in ablate_slot_duration(&[0.25, 1.0, 2.0, 4.0], &cost) {
+                println!("slot ts={:<5} {:<5} JT {:.1}s", p.x, p.scheduler, p.jt);
+            }
+            for p in ablate_background(&[0, 2, 4, 8], &cost) {
+                println!("bg n={:<5} {:<5} JT {:.1}s", p.x, p.scheduler, p.jt);
+            }
+            for (s, jt) in ablate_heterogeneity(3.0, &cost) {
+                println!("hetero 3x-slow-half {:<5} JT {:.1}s", s, jt);
+            }
+            0
+        }
+        "scale" => {
+            println!("== scalability sweep (8 switches x N hosts) ==");
+            for p in run_scale(&[2, 4, 8, 16], &CostModel::rust_only()) {
+                println!(
+                    "n={:<4} m={:<4} {:<5} sched {:>8.2}ms  makespan {:>7.1}s",
+                    p.nodes, p.tasks, p.scheduler, p.sched_secs * 1e3, p.makespan
+                );
+            }
+            0
+        }
+        "run" => {
+            let Some(path) = opt(&args, "--config") else {
+                eprintln!("run requires --config <file>\n\n{HELP}");
+                return 2;
+            };
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("cannot read {path}: {e}");
+                    return 2;
+                }
+            };
+            let cfg = match ExperimentConfig::from_str(&text) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("bad config {path}: {e}");
+                    return 2;
+                }
+            };
+            match cfg.run {
+                RunConfig::Example1 => run(vec!["example1".into()]),
+                RunConfig::Example3 { background } => {
+                    run(vec!["example3".into(), "--bg".into(), background.to_string()])
+                }
+                RunConfig::Fig5 => run(vec!["fig5".into()]),
+                RunConfig::E2e { jobs } => {
+                    run(vec!["e2e".into(), "--jobs".into(), jobs.to_string()])
+                }
+                RunConfig::Table1 { .. } => {
+                    println!("== Table I ({}) from {path} ==", cfg.table1.kind.label());
+                    let rows = run_table1(&cfg.table1, &cost);
+                    print!("{}", trace::table1_markdown(&rows));
+                    0
+                }
+            }
+        }
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            2
+        }
+    }
+}
+
+fn parse_sizes(s: String) -> Vec<f64> {
+    s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
+}
+
+fn apply_overrides(cfg: &mut Table1Config, args: &[String]) {
+    if let Some(s) = opt(args, "--sizes") {
+        let v = parse_sizes(s);
+        if !v.is_empty() {
+            cfg.sizes_mb = v;
+        }
+    }
+    if let Some(s) = opt(args, "--sched") {
+        let v: Vec<SchedulerKind> =
+            s.split(',').filter_map(|x| SchedulerKind::parse(x.trim())).collect();
+        if !v.is_empty() {
+            cfg.schedulers = v;
+        }
+    }
+    if let Some(s) = opt(args, "--seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_parses_pairs() {
+        let args: Vec<String> =
+            ["table1", "--job", "sort", "--seed", "9"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(opt(&args, "--job").as_deref(), Some("sort"));
+        assert_eq!(opt(&args, "--seed").as_deref(), Some("9"));
+        assert_eq!(opt(&args, "--missing"), None);
+    }
+
+    #[test]
+    fn parse_sizes_filters_garbage() {
+        assert_eq!(parse_sizes("150, 300,x,600".into()), vec![150.0, 300.0, 600.0]);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(vec!["bogus".into()]), 2);
+    }
+
+    #[test]
+    fn run_requires_config() {
+        assert_eq!(run(vec!["run".into()]), 2);
+        assert_eq!(run(vec!["run".into(), "--config".into(), "/no/such".into()]), 2);
+    }
+
+    #[test]
+    fn run_with_config_file() {
+        let dir = std::env::temp_dir().join("bass_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("exp.toml");
+        std::fs::write(&f, "run = \"table1\"\njob = \"sort\"\n[sweep]\nsizes_mb = [150]\n").unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = Table1Config::paper(JobKind::Wordcount);
+        let args: Vec<String> = ["--sizes", "150", "--sched", "bass,hds", "--seed", "42"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        apply_overrides(&mut cfg, &args);
+        assert_eq!(cfg.sizes_mb, vec![150.0]);
+        assert_eq!(cfg.schedulers.len(), 2);
+        assert_eq!(cfg.seed, 42);
+    }
+}

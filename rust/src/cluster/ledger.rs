@@ -1,0 +1,133 @@
+//! The availability ledger: `ΥI_j` for every node.
+//!
+//! The paper's schedulers all reason over "when does node j next become
+//! idle". The ledger is the working copy each scheduler mutates while
+//! assigning a job's m tasks (Algorithm 1 walks tasks sequentially,
+//! updating `ΥI` after each placement).
+
+use crate::topology::NodeId;
+use crate::util::Secs;
+
+/// Per-node next-available times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ledger {
+    avail: Vec<Secs>,
+}
+
+impl Ledger {
+    /// All nodes idle at t=0.
+    pub fn new(n: usize) -> Self {
+        Self { avail: vec![Secs::ZERO; n] }
+    }
+
+    /// Explicit initial loads (Example 1: `[3, 9, 20, 7]`).
+    pub fn with_initial(avail: Vec<Secs>) -> Self {
+        Self { avail }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.avail.len()
+    }
+
+    /// `ΥI_j`.
+    pub fn idle(&self, node: NodeId) -> Secs {
+        self.avail[node.0]
+    }
+
+    /// Record that `node` is now busy until `until` (monotone: the ledger
+    /// never moves backwards).
+    pub fn occupy_until(&mut self, node: NodeId, until: Secs) {
+        let a = &mut self.avail[node.0];
+        *a = (*a).max(until);
+    }
+
+    /// Overwrite (used when reverting what-if copies).
+    pub fn set(&mut self, node: NodeId, at: Secs) {
+        self.avail[node.0] = at;
+    }
+
+    /// `ND_minnow`: the node with minimum idle time; lowest id wins ties
+    /// (deterministic, matching the paper's examples).
+    pub fn min_idle(&self) -> (NodeId, Secs) {
+        let mut best = (NodeId(0), self.avail[0]);
+        for (i, &a) in self.avail.iter().enumerate().skip(1) {
+            if a < best.1 {
+                best = (NodeId(i), a);
+            }
+        }
+        best
+    }
+
+    /// Min idle restricted to a candidate subset; `None` if empty.
+    pub fn min_idle_among(&self, nodes: impl IntoIterator<Item = NodeId>) -> Option<(NodeId, Secs)> {
+        let mut best: Option<(NodeId, Secs)> = None;
+        for n in nodes {
+            let a = self.avail[n.0];
+            best = match best {
+                None => Some((n, a)),
+                Some((bn, ba)) => {
+                    if a < ba || (a == ba && n.0 < bn.0) {
+                        Some((n, a))
+                    } else {
+                        Some((bn, ba))
+                    }
+                }
+            };
+        }
+        best
+    }
+
+    /// Makespan view: the latest availability across all nodes.
+    pub fn max_idle(&self) -> Secs {
+        self.avail.iter().copied().fold(Secs::ZERO, Secs::max)
+    }
+
+    pub fn as_slice(&self) -> &[Secs] {
+        &self.avail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example1() -> Ledger {
+        Ledger::with_initial(vec![Secs(3.0), Secs(9.0), Secs(20.0), Secs(7.0)])
+    }
+
+    #[test]
+    fn min_idle_is_nd1() {
+        let l = example1();
+        assert_eq!(l.min_idle(), (NodeId(0), Secs(3.0)));
+    }
+
+    #[test]
+    fn min_idle_among_subset() {
+        let l = example1();
+        let got = l.min_idle_among([NodeId(1), NodeId(2)]).unwrap();
+        assert_eq!(got, (NodeId(1), Secs(9.0)));
+        assert!(l.min_idle_among([]).is_none());
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_id() {
+        let l = Ledger::with_initial(vec![Secs(5.0), Secs(5.0)]);
+        assert_eq!(l.min_idle().0, NodeId(0));
+        assert_eq!(l.min_idle_among([NodeId(1), NodeId(0)]).unwrap().0, NodeId(0));
+    }
+
+    #[test]
+    fn occupy_is_monotone() {
+        let mut l = example1();
+        l.occupy_until(NodeId(0), Secs(17.0));
+        assert_eq!(l.idle(NodeId(0)), Secs(17.0));
+        l.occupy_until(NodeId(0), Secs(10.0)); // earlier: ignored
+        assert_eq!(l.idle(NodeId(0)), Secs(17.0));
+    }
+
+    #[test]
+    fn max_idle_is_makespan() {
+        let l = example1();
+        assert_eq!(l.max_idle(), Secs(20.0));
+    }
+}

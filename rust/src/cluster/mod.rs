@@ -1,0 +1,8 @@
+//! Cluster substrate: per-node availability ledger + ProgressRate
+//! estimation of `ΥI_j` (Section V-A of the paper).
+
+pub mod ledger;
+pub mod progress;
+
+pub use ledger::Ledger;
+pub use progress::{estimate_idle, NodeMonitor, TaskProgress};

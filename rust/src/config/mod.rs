@@ -1,0 +1,11 @@
+//! Typed configuration + a minimal TOML-subset parser.
+//!
+//! The offline image vendors no serde/toml, so [`parser`] implements the
+//! subset the configs need: `[section]` headers, `key = value` with
+//! string / number / bool / arrays of numbers, and `#` comments.
+
+pub mod parser;
+pub mod types;
+
+pub use parser::{parse, Value};
+pub use types::{ExperimentConfig, RunConfig};

@@ -1,0 +1,148 @@
+//! Minimal TOML-subset parser: sections, scalars, number arrays.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    NumArray(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_nums(&self) -> Option<&[f64]> {
+        match self {
+            Value::NumArray(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` (top-level keys use an empty section: `.key`).
+pub type Table = BTreeMap<String, Value>;
+
+/// Parse the TOML subset; errors carry the offending line number.
+pub fn parse(text: &str) -> anyhow::Result<Table> {
+    let mut out = Table::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            anyhow::ensure!(!section.is_empty(), "line {}: empty section", lineno + 1);
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            anyhow::bail!("line {}: expected `key = value`, got {line:?}", lineno + 1);
+        };
+        let key = format!("{section}.{}", k.trim());
+        let value = parse_value(v.trim())
+            .ok_or_else(|| anyhow::anyhow!("line {}: bad value {v:?}", lineno + 1))?;
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: no '#' inside strings in our configs
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Some(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let items: Result<Vec<f64>, _> =
+            inner.split(',').filter(|x| !x.trim().is_empty()).map(|x| x.trim().parse()).collect();
+        return items.ok().map(Value::NumArray);
+    }
+    s.parse::<f64>().ok().map(Value::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let t = parse(
+            r#"
+# top comment
+name = "sweep"
+threads = 4
+ratio = 0.5
+verbose = true
+
+[cluster]
+link_mbps = 100
+sizes = [150, 300, 600]  # trailing comment
+"#,
+        )
+        .unwrap();
+        assert_eq!(t[".name"].as_str(), Some("sweep"));
+        assert_eq!(t[".threads"].as_usize(), Some(4));
+        assert_eq!(t[".ratio"].as_f64(), Some(0.5));
+        assert_eq!(t[".verbose"].as_bool(), Some(true));
+        assert_eq!(t["cluster.link_mbps"].as_f64(), Some(100.0));
+        assert_eq!(t["cluster.sizes"].as_nums(), Some(&[150.0, 300.0, 600.0][..]));
+    }
+
+    #[test]
+    fn rejects_garbage_with_line_numbers() {
+        let err = parse("a = 1\nnot a kv\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        let err = parse("a = {oops}\n").unwrap_err().to_string();
+        assert!(err.contains("bad value"), "{err}");
+    }
+
+    #[test]
+    fn type_coercions_are_strict() {
+        let t = parse("x = 1.5\n").unwrap();
+        assert_eq!(t[".x"].as_usize(), None); // not integral
+        assert_eq!(t[".x"].as_str(), None);
+    }
+}

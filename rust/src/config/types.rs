@@ -1,0 +1,127 @@
+//! Typed experiment configuration assembled from the parsed table.
+
+use crate::experiments::{SchedulerKind, Table1Config};
+use crate::workload::JobKind;
+
+use super::parser::{parse, Table};
+
+/// What to run (CLI subcommand equivalents).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunConfig {
+    Example1,
+    Example3 { background: usize },
+    Table1 { kind: JobKind },
+    Fig5,
+    E2e { jobs: usize },
+}
+
+/// Full experiment file: run selector + sweep overrides.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub run: RunConfig,
+    pub table1: Table1Config,
+}
+
+impl ExperimentConfig {
+    /// Defaults: Example 1 + the paper's Table I(a) configuration.
+    pub fn default_wordcount() -> Self {
+        Self { run: RunConfig::Example1, table1: Table1Config::paper(JobKind::Wordcount) }
+    }
+
+    /// Load from a TOML-subset file (see `examples/experiment.toml`).
+    pub fn from_str(text: &str) -> anyhow::Result<Self> {
+        let t = parse(text)?;
+        let kind = match t.get(".job").and_then(|v| v.as_str()).unwrap_or("wordcount") {
+            "sort" => JobKind::Sort,
+            _ => JobKind::Wordcount,
+        };
+        let mut cfg = Table1Config::paper(kind);
+        apply_table1(&mut cfg, &t);
+        let run = match t.get(".run").and_then(|v| v.as_str()).unwrap_or("example1") {
+            "example3" => RunConfig::Example3 {
+                background: t
+                    .get("example3.background")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(5),
+            },
+            "table1" => RunConfig::Table1 { kind },
+            "fig5" => RunConfig::Fig5,
+            "e2e" => RunConfig::E2e {
+                jobs: t.get("e2e.jobs").and_then(|v| v.as_usize()).unwrap_or(10),
+            },
+            _ => RunConfig::Example1,
+        };
+        Ok(Self { run, table1: cfg })
+    }
+}
+
+fn apply_table1(cfg: &mut Table1Config, t: &Table) {
+    if let Some(v) = t.get("cluster.link_mbps").and_then(|v| v.as_f64()) {
+        cfg.link_mbps = v;
+    }
+    if let Some(v) = t.get("cluster.switches").and_then(|v| v.as_usize()) {
+        cfg.n_switches = v;
+    }
+    if let Some(v) = t.get("cluster.hosts_per_switch").and_then(|v| v.as_usize()) {
+        cfg.hosts_per_switch = v;
+    }
+    if let Some(v) = t.get("cluster.replication").and_then(|v| v.as_usize()) {
+        cfg.replication = v;
+    }
+    if let Some(v) = t.get("sweep.sizes_mb").and_then(|v| v.as_nums()) {
+        cfg.sizes_mb = v.to_vec();
+    }
+    if let Some(v) = t.get("sweep.seed").and_then(|v| v.as_usize()) {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = t.get("sweep.schedulers").and_then(|v| v.as_str()) {
+        let parsed: Vec<SchedulerKind> =
+            v.split(',').filter_map(|s| SchedulerKind::parse(s.trim())).collect();
+        if !parsed.is_empty() {
+            cfg.schedulers = parsed;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_example1() {
+        let c = ExperimentConfig::default_wordcount();
+        assert_eq!(c.run, RunConfig::Example1);
+    }
+
+    #[test]
+    fn file_overrides_apply() {
+        let c = ExperimentConfig::from_str(
+            r#"
+run = "table1"
+job = "sort"
+
+[cluster]
+link_mbps = 200
+switches = 3
+hosts_per_switch = 2
+
+[sweep]
+sizes_mb = [150, 300]
+seed = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.run, RunConfig::Table1 { kind: JobKind::Sort });
+        assert_eq!(c.table1.link_mbps, 200.0);
+        assert_eq!(c.table1.n_switches, 3);
+        assert_eq!(c.table1.hosts_per_switch, 2);
+        assert_eq!(c.table1.sizes_mb, vec![150.0, 300.0]);
+        assert_eq!(c.table1.seed, 99);
+    }
+
+    #[test]
+    fn scheduler_list_parses() {
+        let c = ExperimentConfig::from_str("[sweep]\nschedulers = \"bass, hds\"\n").unwrap();
+        assert_eq!(c.table1.schedulers.len(), 2);
+    }
+}

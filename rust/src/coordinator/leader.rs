@@ -1,0 +1,300 @@
+//! Leader/worker coordination over std mpsc channels.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::cluster::Ledger;
+use crate::hdfs::Namenode;
+use crate::mapreduce::{JobId, TaskSpec};
+use crate::metrics::JobMetrics;
+use crate::runtime::CostModel;
+use crate::sched::{SchedCtx, Scheduler};
+use crate::sdn::Controller;
+use crate::sim::{Engine, FlowNet, TaskRecord};
+use crate::topology::builders::tree_cluster;
+use crate::topology::NodeId;
+use crate::util::{Secs, XorShift};
+use crate::workload::{BackgroundLoad, JobArrival, WorkloadBuilder};
+
+use super::super::experiments::SchedulerKind;
+
+/// One job submission into the coordinator.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub arrival: JobArrival,
+    pub id: usize,
+}
+
+/// Executed-job report streamed back to the submitter.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job: JobId,
+    pub name: String,
+    pub submitted_at: f64,
+    pub metrics: JobMetrics,
+}
+
+/// Cluster construction parameters for the coordinator.
+#[derive(Debug, Clone)]
+pub struct ClusterSetup {
+    pub n_switches: usize,
+    pub hosts_per_switch: usize,
+    pub link_mbps: f64,
+    pub slot_secs: f64,
+    pub replication: usize,
+    pub reduces: usize,
+    pub bg_flows: usize,
+    pub bg_rate_mb_s: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterSetup {
+    fn default() -> Self {
+        Self {
+            n_switches: 2,
+            hosts_per_switch: 3,
+            link_mbps: 100.0,
+            slot_secs: 1.0,
+            replication: 3,
+            reduces: 2,
+            bg_flows: 2,
+            bg_rate_mb_s: 2.0,
+            seed: 7,
+        }
+    }
+}
+
+/// The long-lived leader: owns cluster state across jobs.
+pub struct Coordinator {
+    setup: ClusterSetup,
+    scheduler_kind: SchedulerKind,
+    nodes: Vec<NodeId>,
+    ctrl: Controller,
+    net: FlowNet,
+    nn: Namenode,
+    /// Actual node availability, carried across jobs.
+    node_free: Vec<Secs>,
+    rng: XorShift,
+    cost: CostModel,
+    sched: Box<dyn Scheduler>,
+}
+
+impl Coordinator {
+    pub fn new(setup: ClusterSetup, kind: SchedulerKind, cost: CostModel) -> Self {
+        let (topo, nodes) = tree_cluster(
+            setup.n_switches,
+            setup.hosts_per_switch,
+            setup.link_mbps,
+            setup.link_mbps,
+        );
+        let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+        let mut ctrl = Controller::new(topo, setup.slot_secs);
+        let mut net = FlowNet::new(&caps);
+        let mut rng = XorShift::new(setup.seed);
+        let bg = BackgroundLoad::sample(
+            &nodes,
+            0.0 + 1e-9, // jobs arrive online; no synthetic initial idle
+            setup.bg_flows,
+            setup.bg_rate_mb_s,
+            &mut rng,
+        );
+        bg.install(&mut ctrl, &mut net);
+        let node_free = vec![Secs::ZERO; nodes.len()];
+        let sched = kind.make();
+        Self {
+            setup,
+            scheduler_kind: kind,
+            nodes,
+            ctrl,
+            net,
+            nn: Namenode::new(),
+            node_free,
+            rng,
+            cost,
+            sched,
+        }
+    }
+
+    pub fn scheduler_label(&self) -> &'static str {
+        self.scheduler_kind.label()
+    }
+
+    /// Handle one job end-to-end at its arrival time.
+    pub fn handle(&mut self, req: &JobRequest) -> JobResult {
+        let now = Secs(req.arrival.at_secs);
+        let mut builder = WorkloadBuilder::new(req.arrival.kind);
+        builder.replication = self.setup.replication.min(self.nodes.len());
+        builder.reduces = self.setup.reduces;
+        let job =
+            builder.build(req.id, req.arrival.data_mb, &self.nodes, &mut self.nn, &mut self.rng);
+        let maps: Vec<TaskSpec> = job.maps().cloned().collect();
+        let mut reduces: Vec<TaskSpec> = job.reduces().cloned().collect();
+
+        // node availability as of this arrival
+        let init: Vec<Secs> = self.node_free.iter().map(|&f| f.max(now)).collect();
+        let mut ledger = Ledger::with_initial(init.clone());
+
+        // map phase
+        let map_assignment = {
+            let mut ctx = SchedCtx {
+                controller: &mut self.ctrl,
+                namenode: &self.nn,
+                ledger: &mut ledger,
+                authorized: self.nodes.clone(),
+                now,
+                cost: &self.cost,
+            node_speed: Vec::new(),
+            };
+            self.sched.schedule(&maps, Some(now), &mut ctx)
+        };
+        let lr = map_assignment.locality_ratio();
+        let mut engine = Engine::new(self.net.clone(), init.clone());
+        engine.load(&map_assignment);
+        let map_records = engine.run();
+
+        // reduce phase at slowstart
+        let gate = slowstart(&map_records, job.slowstart).max(now);
+        let hint = majority_node(&map_records, &maps, self.nodes.len());
+        for r in &mut reduces {
+            r.src_hint = Some(hint);
+        }
+        let mut reduce_init = init;
+        for r in &map_records {
+            if reduce_init[r.node.0] < r.finish {
+                reduce_init[r.node.0] = r.finish;
+            }
+        }
+        let mut ledger2 = Ledger::with_initial(reduce_init.clone());
+        let reduce_assignment = {
+            let mut ctx = SchedCtx {
+                controller: &mut self.ctrl,
+                namenode: &self.nn,
+                ledger: &mut ledger2,
+                authorized: self.nodes.clone(),
+                now: gate,
+                cost: &self.cost,
+            node_speed: Vec::new(),
+            };
+            self.sched.schedule(&reduces, Some(gate), &mut ctx)
+        };
+        let mut engine2 = Engine::new(self.net.clone(), reduce_init);
+        engine2.load(&reduce_assignment);
+        let reduce_records = engine2.run();
+
+        // update the cluster's availability for subsequent jobs
+        let mut all = map_records;
+        all.extend(reduce_records);
+        for r in &all {
+            if self.node_free[r.node.0] < r.finish {
+                self.node_free[r.node.0] = r.finish;
+            }
+        }
+        let mut m = JobMetrics::from_records(&all, now, Some(gate));
+        m.lr = lr;
+        JobResult { job: job.id, name: job.name.clone(), submitted_at: now.0, metrics: m }
+    }
+
+    /// Run a whole trace through a submitter thread + this leader,
+    /// demonstrating the channel architecture. Results come back in
+    /// submission order.
+    pub fn run_trace(mut self, arrivals: Vec<JobArrival>) -> Vec<JobResult> {
+        let (tx, rx) = mpsc::channel::<JobRequest>();
+        let submitter = thread::spawn(move || {
+            for (id, arrival) in arrivals.into_iter().enumerate() {
+                if tx.send(JobRequest { arrival, id }).is_err() {
+                    return;
+                }
+            }
+        });
+        let mut results = Vec::new();
+        while let Ok(req) = rx.recv() {
+            results.push(self.handle(&req));
+        }
+        submitter.join().expect("submitter thread");
+        results
+    }
+}
+
+fn slowstart(map_records: &[TaskRecord], frac: f64) -> Secs {
+    let mut fins: Vec<Secs> = map_records.iter().map(|r| r.finish).collect();
+    fins.sort();
+    let k = ((fins.len() as f64 * frac).ceil() as usize).clamp(1, fins.len());
+    fins[k - 1]
+}
+
+fn majority_node(map_records: &[TaskRecord], maps: &[TaskSpec], n: usize) -> NodeId {
+    let mut out = vec![0.0f64; n];
+    for r in map_records {
+        if let Some(t) = maps.iter().find(|t| t.id == r.task) {
+            out[r.node.0] += t.output_mb;
+        }
+    }
+    let mut best = 0;
+    for (i, &v) in out.iter().enumerate() {
+        if v > out[best] {
+            best = i;
+        }
+    }
+    NodeId(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{JobKind, TraceGen};
+
+    fn trace(n: usize) -> Vec<JobArrival> {
+        let mut rng = XorShift::new(11);
+        TraceGen { mean_interarrival_secs: 120.0, sizes_mb: vec![150.0, 300.0] }
+            .generate(n, &mut rng)
+    }
+
+    #[test]
+    fn coordinator_processes_trace_in_order() {
+        let c = Coordinator::new(ClusterSetup::default(), SchedulerKind::Bass, CostModel::rust_only());
+        let results = c.run_trace(trace(5));
+        assert_eq!(results.len(), 5);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.job.0, i);
+            assert!(r.metrics.jt > 0.0);
+        }
+        // arrivals are increasing
+        for w in results.windows(2) {
+            assert!(w[0].submitted_at < w[1].submitted_at);
+        }
+    }
+
+    #[test]
+    fn cluster_state_carries_between_jobs() {
+        let mut c =
+            Coordinator::new(ClusterSetup::default(), SchedulerKind::Bass, CostModel::rust_only());
+        let a1 = JobRequest {
+            arrival: JobArrival { at_secs: 1.0, kind: JobKind::Sort, data_mb: 300.0 },
+            id: 0,
+        };
+        // same job arriving immediately after: must queue behind the first
+        let a2 = JobRequest {
+            arrival: JobArrival { at_secs: 2.0, kind: JobKind::Sort, data_mb: 300.0 },
+            id: 1,
+        };
+        let r1 = c.handle(&a1);
+        let r2 = c.handle(&a2);
+        assert!(
+            r2.metrics.jt > r1.metrics.jt * 0.8,
+            "second job should feel the first's load: {} vs {}",
+            r2.metrics.jt,
+            r1.metrics.jt
+        );
+    }
+
+    #[test]
+    fn bass_trace_beats_hds_trace() {
+        let mk = |k| {
+            Coordinator::new(ClusterSetup::default(), k, CostModel::rust_only())
+                .run_trace(trace(6))
+        };
+        let bass: f64 = mk(SchedulerKind::Bass).iter().map(|r| r.metrics.jt).sum();
+        let hds: f64 = mk(SchedulerKind::Hds).iter().map(|r| r.metrics.jt).sum();
+        assert!(bass <= hds + 1e-6, "BASS total {bass} vs HDS total {hds}");
+    }
+}

@@ -1,0 +1,11 @@
+//! The leader event loop: online job stream -> scheduler -> execution.
+//!
+//! Architecture note (DESIGN.md): the offline image vendors no tokio, so
+//! the coordinator uses std threads + mpsc channels — a submitter thread
+//! feeds [`JobRequest`]s into the leader, which schedules each job
+//! against the live cluster state and executes it on the DES engine,
+//! streaming [`JobResult`]s back.
+
+pub mod leader;
+
+pub use leader::{ClusterSetup, Coordinator, JobRequest, JobResult};

@@ -1,0 +1,169 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * **Time-slot duration** (Section IV-A: "duration ... is a tunable
+//!   parameter according to practical network scenarios") — how coarse
+//!   can `TS` get before reservation quantization hurts BASS?
+//! * **Background intensity** — BASS's edge over HDS should grow as
+//!   bandwidth gets scarcer (the paper's core motivation).
+//! * **Replication factor** — more replicas = more locality options; the
+//!   bandwidth-aware tradeoff matters most at low replication.
+//! * **Heterogeneous nodes** (Guo & Fox [14]) — per-node speed factors;
+//!   BASS's Eq. 4 argmin includes per-node `TP`, HDS ignores it.
+
+use crate::cluster::Ledger;
+use crate::hdfs::Namenode;
+use crate::mapreduce::TaskSpec;
+use crate::runtime::CostModel;
+use crate::sched::SchedCtx;
+use crate::sim::{Engine, FlowNet};
+use crate::topology::builders::tree_cluster;
+use crate::util::{Secs, XorShift};
+use crate::workload::{BackgroundLoad, JobKind, WorkloadBuilder};
+
+use super::fixtures::SchedulerKind;
+use super::table1::{run_cell, Table1Config};
+
+/// One ablation sample.
+#[derive(Debug, Clone)]
+pub struct AblationPoint {
+    pub x: f64,
+    pub scheduler: &'static str,
+    pub jt: f64,
+}
+
+/// Slot-duration sweep: JT of BASS at `slot_secs` ∈ `slots`.
+pub fn ablate_slot_duration(slots: &[f64], cost: &CostModel) -> Vec<AblationPoint> {
+    slots
+        .iter()
+        .flat_map(|&ts| {
+            let mut cfg = Table1Config::paper(JobKind::Sort);
+            cfg.slot_secs = ts;
+            cfg.sizes_mb = vec![600.0];
+            [SchedulerKind::Bass, SchedulerKind::Hds].into_iter().map(move |k| {
+                let m = run_cell(&cfg, 600.0, k, cost);
+                AblationPoint { x: ts, scheduler: k.label(), jt: m.jt }
+            })
+        })
+        .collect()
+}
+
+/// Background-flow sweep: BASS-vs-HDS gap as contention grows.
+pub fn ablate_background(flows: &[usize], cost: &CostModel) -> Vec<AblationPoint> {
+    flows
+        .iter()
+        .flat_map(|&n| {
+            let mut cfg = Table1Config::paper(JobKind::Sort);
+            cfg.bg_flows = n;
+            cfg.sizes_mb = vec![600.0];
+            [SchedulerKind::Bass, SchedulerKind::Hds].into_iter().map(move |k| {
+                let m = run_cell(&cfg, 600.0, k, cost);
+                AblationPoint { x: n as f64, scheduler: k.label(), jt: m.jt }
+            })
+        })
+        .collect()
+}
+
+/// Replication-factor sweep (1..=3 on the 6-node cluster).
+pub fn ablate_replication(ks: &[usize], cost: &CostModel) -> Vec<AblationPoint> {
+    ks.iter()
+        .flat_map(|&k| {
+            let mut cfg = Table1Config::paper(JobKind::Wordcount);
+            cfg.replication = k;
+            cfg.sizes_mb = vec![600.0];
+            [SchedulerKind::Bass, SchedulerKind::Hds].into_iter().map(move |s| {
+                let m = run_cell(&cfg, 600.0, s, cost);
+                AblationPoint { x: k as f64, scheduler: s.label(), jt: m.jt }
+            })
+        })
+        .collect()
+}
+
+/// Heterogeneous cluster: half the nodes are `slow_factor`x slower.
+/// Returns (scheduler, executed JT) for one 16-map wave.
+pub fn ablate_heterogeneity(slow_factor: f64, cost: &CostModel) -> Vec<(&'static str, f64)> {
+    [SchedulerKind::Bass, SchedulerKind::Hds]
+        .into_iter()
+        .map(|kind| {
+            let (topo, nodes) = tree_cluster(2, 3, 100.0, 100.0);
+            let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+            let mut ctrl = crate::sdn::Controller::new(topo, 1.0);
+            let mut net = FlowNet::new(&caps);
+            let mut rng = XorShift::new(99);
+            let bg = BackgroundLoad::sample(&nodes, 10.0, 2, 3.0, &mut rng);
+            bg.install(&mut ctrl, &mut net);
+            let mut nn = Namenode::new();
+            let job = WorkloadBuilder::new(JobKind::Wordcount)
+                .build(0, 1024.0, &nodes, &mut nn, &mut rng);
+            let maps: Vec<TaskSpec> = job.maps().cloned().collect();
+            // nodes 0..3 fast, 3..6 slow
+            let speed: Vec<f64> =
+                (0..nodes.len()).map(|i| if i < 3 { 1.0 } else { slow_factor }).collect();
+            let init: Vec<Secs> = bg.initial_idle.clone();
+            let mut ledger = Ledger::with_initial(init.clone());
+            let mut sched = kind.make();
+            let a = {
+                let mut ctx = SchedCtx {
+                    controller: &mut ctrl,
+                    namenode: &nn,
+                    ledger: &mut ledger,
+                    authorized: nodes.clone(),
+                    now: Secs::ZERO,
+                    cost,
+                    node_speed: speed,
+                };
+                sched.schedule(&maps, None, &mut ctx)
+            };
+            let mut engine = Engine::new(net, init);
+            engine.load(&a);
+            let records = engine.run();
+            let jt = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+            (kind.label(), jt)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_duration_monotone_cost_for_bass() {
+        // coarser slots can only round reservations up
+        let pts = ablate_slot_duration(&[0.5, 4.0], &CostModel::rust_only());
+        let bass_fine = pts.iter().find(|p| p.scheduler == "BASS" && p.x == 0.5).unwrap().jt;
+        let bass_coarse =
+            pts.iter().find(|p| p.scheduler == "BASS" && p.x == 4.0).unwrap().jt;
+        assert!(bass_coarse + 1e-9 >= bass_fine, "{bass_coarse} vs {bass_fine}");
+        // HDS ignores slots entirely
+        let hds: Vec<f64> =
+            pts.iter().filter(|p| p.scheduler == "HDS").map(|p| p.jt).collect();
+        assert!((hds[0] - hds[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn background_widens_the_gap() {
+        let pts = ablate_background(&[0, 6], &CostModel::rust_only());
+        let gap = |n: f64| {
+            let h = pts.iter().find(|p| p.scheduler == "HDS" && p.x == n).unwrap().jt;
+            let b = pts.iter().find(|p| p.scheduler == "BASS" && p.x == n).unwrap().jt;
+            h - b
+        };
+        assert!(gap(6.0) >= gap(0.0) - 2.0, "gap(6)={} gap(0)={}", gap(6.0), gap(0.0));
+    }
+
+    #[test]
+    fn heterogeneity_bass_beats_hds() {
+        // with 3x-slow nodes, the Eq.4 argmin (TP included) must not lose
+        // to locality-greedy HDS
+        let out = ablate_heterogeneity(3.0, &CostModel::rust_only());
+        let jt = |n: &str| out.iter().find(|(s, _)| *s == n).unwrap().1;
+        assert!(jt("BASS") <= jt("HDS") + 1e-9, "BASS {} HDS {}", jt("BASS"), jt("HDS"));
+    }
+
+    #[test]
+    fn replication_sweep_runs() {
+        let pts = ablate_replication(&[1, 3], &CostModel::rust_only());
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().all(|p| p.jt > 0.0));
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig. 5 driver: JT-vs-data-size curves for both jobs.
+//!
+//! Thin wrapper over the Table I sweep that reshapes rows into
+//! per-scheduler series — the two panels of the paper's Fig. 5.
+
+use crate::runtime::CostModel;
+use crate::workload::JobKind;
+
+use super::table1::{run_table1, Table1Config};
+
+/// One Fig. 5 panel: per-scheduler JT series over the size sweep.
+#[derive(Debug, Clone)]
+pub struct Fig5Panel {
+    pub job: &'static str,
+    pub sizes_mb: Vec<f64>,
+    /// (scheduler label, JT per size)
+    pub series: Vec<(&'static str, Vec<f64>)>,
+}
+
+/// Run both panels (Wordcount + Sort).
+pub fn run_fig5(cost: &CostModel, sizes_mb: Option<Vec<f64>>) -> Vec<Fig5Panel> {
+    [JobKind::Wordcount, JobKind::Sort]
+        .into_iter()
+        .map(|kind| {
+            let mut cfg = Table1Config::paper(kind);
+            if let Some(s) = &sizes_mb {
+                cfg.sizes_mb = s.clone();
+            }
+            let rows = run_table1(&cfg, cost);
+            let series = cfg
+                .schedulers
+                .iter()
+                .map(|k| {
+                    let jts = cfg
+                        .sizes_mb
+                        .iter()
+                        .map(|&s| {
+                            rows.iter()
+                                .find(|r| r.scheduler == k.label() && r.data_mb == s)
+                                .expect("row")
+                                .metrics
+                                .jt
+                        })
+                        .collect();
+                    (k.label(), jts)
+                })
+                .collect();
+            Fig5Panel { job: kind.label(), sizes_mb: cfg.sizes_mb, series }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panels_have_monotone_jt_in_size() {
+        let panels = run_fig5(&CostModel::rust_only(), Some(vec![150.0, 600.0]));
+        assert_eq!(panels.len(), 2);
+        for p in &panels {
+            assert_eq!(p.series.len(), 3);
+            for (name, jts) in &p.series {
+                assert_eq!(jts.len(), 2);
+                assert!(
+                    jts[1] > jts[0],
+                    "{} {name}: JT should grow with data size: {jts:?}",
+                    p.job
+                );
+            }
+        }
+    }
+}

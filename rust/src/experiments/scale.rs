@@ -1,0 +1,118 @@
+//! Scalability study — the paper's stated future work ("we will evaluate
+//! BASS's scalability in a much larger network cluster").
+//!
+//! Sweeps cluster size (nodes) with a proportionally sized map wave and
+//! measures (a) the scheduler's decision latency and (b) the executed
+//! makespan, BASS vs HDS. The XLA cost-model path amortizes with cluster
+//! size (one batched evaluation per round regardless of n).
+
+use std::time::Instant;
+
+use crate::cluster::Ledger;
+use crate::hdfs::{Namenode, PlacementPolicy};
+use crate::workload::BackgroundLoad;
+use crate::mapreduce::TaskSpec;
+use crate::runtime::CostModel;
+use crate::sched::SchedCtx;
+use crate::sim::{Engine, FlowNet};
+use crate::topology::builders::tree_cluster;
+use crate::util::{Secs, XorShift, BLOCK_MB};
+
+use super::fixtures::SchedulerKind;
+
+/// One scale sample.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub nodes: usize,
+    pub tasks: usize,
+    pub scheduler: &'static str,
+    /// Scheduling wall time (seconds).
+    pub sched_secs: f64,
+    /// Executed makespan (simulated seconds).
+    pub makespan: f64,
+}
+
+/// Run the sweep: `sizes` are hosts-per-switch counts on an 8-switch
+/// tree; tasks = 2x nodes.
+pub fn run_scale(per_switch_sizes: &[usize], cost: &CostModel) -> Vec<ScalePoint> {
+    let mut out = Vec::new();
+    for &per_sw in per_switch_sizes {
+        let n_sw = 8;
+        let n_nodes = n_sw * per_sw;
+        let m_tasks = 2 * n_nodes;
+        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+            let (topo, nodes) = tree_cluster(n_sw, per_sw, 100.0, 1000.0);
+            let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+            let mut ctrl = crate::sdn::Controller::new(topo, 1.0);
+            let mut net = FlowNet::new(&caps);
+            let mut nn = Namenode::new();
+            let mut rng = XorShift::new(31 + per_sw as u64);
+            // shared-cluster regime (the paper's motivation): skewed
+            // initial load + background traffic making bandwidth scarce
+            let bg = BackgroundLoad::sample(&nodes, 60.0, n_nodes / 4, 4.0, &mut rng);
+            bg.install(&mut ctrl, &mut net);
+            let blocks = PlacementPolicy::RandomDistinct
+                .place(&mut nn, &nodes, m_tasks, BLOCK_MB, 2, &mut rng);
+            let tasks: Vec<TaskSpec> = blocks
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| TaskSpec::map(i, b, BLOCK_MB, Secs(20.0), 16.0))
+                .collect();
+            let init = bg.initial_idle.clone();
+            let mut ledger = Ledger::with_initial(init.clone());
+            let mut sched = kind.make();
+            let t0 = Instant::now();
+            let a = {
+                let mut ctx = SchedCtx {
+                    controller: &mut ctrl,
+                    namenode: &nn,
+                    ledger: &mut ledger,
+                    authorized: nodes.clone(),
+                    now: Secs::ZERO,
+                    cost,
+                    node_speed: Vec::new(),
+                };
+                sched.schedule(&tasks, None, &mut ctx)
+            };
+            let sched_secs = t0.elapsed().as_secs_f64();
+            let mut engine = Engine::new(net, init);
+            engine.load(&a);
+            let records = engine.run();
+            let makespan = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+            out.push(ScalePoint {
+                nodes: n_nodes,
+                tasks: m_tasks,
+                scheduler: kind.label(),
+                sched_secs,
+                makespan,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_sweep_shapes() {
+        let pts = run_scale(&[2, 4], &CostModel::rust_only());
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.makespan > 0.0);
+            assert!(p.sched_secs < 5.0, "scheduling too slow at {} nodes", p.nodes);
+        }
+        // Finding (recorded in EXPERIMENTS.md): at >=16 nodes with two
+        // full waves of work, node-driven HDS edges out Algorithm 1's
+        // task-order greedy by ~10% — the regime the paper never
+        // evaluated (its clusters are 4-6 nodes). We assert BASS stays
+        // within 25% rather than pretending it wins everywhere.
+        for &n in &[16usize, 32] {
+            let jt = |s: &str| {
+                pts.iter().find(|p| p.scheduler == s && p.nodes == n).unwrap().makespan
+            };
+            assert!(jt("BASS") <= jt("HDS") * 1.25, "n={n}: BASS {} HDS {}", jt("BASS"), jt("HDS"));
+        }
+    }
+}

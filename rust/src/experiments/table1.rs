@@ -1,0 +1,303 @@
+//! Table I / Fig. 5 driver: the Wordcount & Sort sweeps.
+//!
+//! For each data size and scheduler, a fresh 6-node / 2-switch cluster
+//! (the paper's testbed: 64MB blocks, 3 replicas, 100 Mbps links) runs
+//! one job with seeded background load, in two phases:
+//!
+//! 1. **Map phase** — scheduled at t=0, executed through the DES engine
+//!    (HDS/BAR transfers contend in the flow network; BASS/Pre-BASS use
+//!    their slot reservations).
+//! 2. **Reduce phase** — gated at the slowstart point (the paper runs
+//!    Hadoop 1.x defaults; we use the job's `slowstart` fraction of map
+//!    finishes), with shuffle-source hints set to the node holding the
+//!    most map output.
+//!
+//! Identical seeds per data size mean every scheduler sees the exact
+//! same block layout, initial load, and background flows: all deltas are
+//! scheduling.
+
+use crate::cluster::Ledger;
+use crate::hdfs::Namenode;
+use crate::mapreduce::TaskSpec;
+use crate::metrics::JobMetrics;
+use crate::runtime::CostModel;
+use crate::sched::SchedCtx;
+use crate::sdn::Controller;
+use crate::sim::{Engine, FlowNet, TaskRecord};
+use crate::topology::builders::tree_cluster;
+use crate::topology::NodeId;
+use crate::util::{Secs, XorShift};
+use crate::workload::{BackgroundLoad, JobKind, WorkloadBuilder};
+
+use super::fixtures::SchedulerKind;
+
+/// Sweep configuration (defaults = the paper's setup).
+#[derive(Debug, Clone)]
+pub struct Table1Config {
+    pub kind: JobKind,
+    pub sizes_mb: Vec<f64>,
+    pub schedulers: Vec<SchedulerKind>,
+    pub seed: u64,
+    pub n_switches: usize,
+    pub hosts_per_switch: usize,
+    pub link_mbps: f64,
+    pub slot_secs: f64,
+    pub replication: usize,
+    pub reduces: usize,
+    /// Max initial node busy time sampled per node (s).
+    pub max_initial_idle: f64,
+    /// Permanent background flows.
+    pub bg_flows: usize,
+    /// Nominal per-background-flow rate (MB/s) for the controller view.
+    pub bg_rate_mb_s: f64,
+    /// Reduce slowstart fraction.
+    pub slowstart: f64,
+}
+
+impl Table1Config {
+    pub fn paper(kind: JobKind) -> Self {
+        Self {
+            kind,
+            sizes_mb: vec![150.0, 300.0, 600.0, 1024.0, 5120.0],
+            schedulers: vec![SchedulerKind::Bass, SchedulerKind::Bar, SchedulerKind::Hds],
+            seed: 2014,
+            n_switches: 2,
+            hosts_per_switch: 3,
+            link_mbps: 100.0,
+            slot_secs: 1.0,
+            replication: 3,
+            reduces: 2,
+            max_initial_idle: 25.0,
+            bg_flows: 3,
+            bg_rate_mb_s: 3.0,
+            slowstart: 0.5,
+        }
+    }
+}
+
+/// One Table I cell group.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub scheduler: &'static str,
+    pub data_mb: f64,
+    pub metrics: JobMetrics,
+}
+
+/// Run the full sweep.
+pub fn run_table1(cfg: &Table1Config, cost: &CostModel) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for &size in &cfg.sizes_mb {
+        for &kind in &cfg.schedulers {
+            let metrics = run_cell(cfg, size, kind, cost);
+            rows.push(Table1Row { scheduler: kind.label(), data_mb: size, metrics });
+        }
+    }
+    rows
+}
+
+/// Run one (size, scheduler) cell.
+pub fn run_cell(
+    cfg: &Table1Config,
+    data_mb: f64,
+    kind: SchedulerKind,
+    cost: &CostModel,
+) -> JobMetrics {
+    // deterministic per (seed, size): identical layout across schedulers
+    let cell_seed = cfg.seed ^ (data_mb as u64).wrapping_mul(0x9E37_79B9);
+    let mut rng = XorShift::new(cell_seed);
+
+    let (topo, nodes) =
+        tree_cluster(cfg.n_switches, cfg.hosts_per_switch, cfg.link_mbps, cfg.link_mbps);
+    let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+    let mut ctrl = Controller::new(topo, cfg.slot_secs);
+    let mut net = FlowNet::new(&caps);
+    let bg = BackgroundLoad::sample(
+        &nodes,
+        cfg.max_initial_idle,
+        cfg.bg_flows,
+        cfg.bg_rate_mb_s,
+        &mut rng,
+    );
+    bg.install(&mut ctrl, &mut net);
+
+    let mut nn = Namenode::new();
+    let mut builder = WorkloadBuilder::new(cfg.kind);
+    builder.replication = cfg.replication;
+    builder.reduces = cfg.reduces;
+    let job = builder.build(0, data_mb, &nodes, &mut nn, &mut rng);
+    let maps: Vec<TaskSpec> = job.maps().cloned().collect();
+    let mut reduces: Vec<TaskSpec> = job.reduces().cloned().collect();
+
+    let mut ledger_init = vec![Secs::ZERO; nodes.len()];
+    for (i, &t) in bg.initial_idle.iter().enumerate() {
+        ledger_init[i] = t;
+    }
+    let mut ledger = Ledger::with_initial(ledger_init.clone());
+    let mut sched = kind.make();
+
+    // ---- phase 1: maps ----
+    let map_assignment = {
+        let mut ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost,
+            node_speed: Vec::new(),
+        };
+        sched.schedule(&maps, None, &mut ctx)
+    };
+    let lr = map_assignment.locality_ratio();
+    let mut engine = Engine::new(net.clone(), ledger_init.clone());
+    engine.load(&map_assignment);
+    let map_records = engine.run();
+
+    // ---- slowstart gate + shuffle source hints ----
+    let gate = slowstart_gate(&map_records, cfg.slowstart);
+    let hint = shuffle_majority_node(&map_records, &maps, nodes.len());
+    for r in &mut reduces {
+        r.src_hint = Some(hint);
+    }
+
+    // ---- phase 2: reduces, from the executed map state ----
+    let mut reduce_init = ledger_init;
+    for r in &map_records {
+        if reduce_init[r.node.0] < r.finish {
+            reduce_init[r.node.0] = r.finish;
+        }
+    }
+    let mut ledger2 = Ledger::with_initial(reduce_init.clone());
+    let reduce_assignment = {
+        let mut ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger2,
+            authorized: nodes.clone(),
+            now: gate,
+            cost,
+            node_speed: Vec::new(),
+        };
+        sched.schedule(&reduces, Some(gate), &mut ctx)
+    };
+    let mut engine2 = Engine::new(net, reduce_init);
+    engine2.load(&reduce_assignment);
+    let reduce_records = engine2.run();
+
+    let mut all = map_records;
+    all.extend(reduce_records);
+    let mut m = JobMetrics::from_records(&all, Secs::ZERO, Some(gate));
+    m.lr = lr;
+    m
+}
+
+/// Bench helper: one BASS cell (used by `benches/table1_wordcount.rs`).
+pub fn run_cell_for_bench(cfg: &Table1Config, data_mb: f64, cost: &CostModel) -> JobMetrics {
+    run_cell(cfg, data_mb, SchedulerKind::Bass, cost)
+}
+
+/// Time at which `frac` of the maps have finished.
+fn slowstart_gate(map_records: &[TaskRecord], frac: f64) -> Secs {
+    let mut fins: Vec<Secs> = map_records.iter().map(|r| r.finish).collect();
+    fins.sort();
+    let k = ((fins.len() as f64 * frac).ceil() as usize).clamp(1, fins.len());
+    fins[k - 1]
+}
+
+/// Node holding the most map output (the reduces' shuffle source hint).
+fn shuffle_majority_node(
+    map_records: &[TaskRecord],
+    maps: &[TaskSpec],
+    n_nodes: usize,
+) -> NodeId {
+    let mut out_mb = vec![0.0f64; n_nodes];
+    for r in map_records {
+        let t = maps.iter().find(|t| t.id == r.task).expect("map record");
+        out_mb[r.node.0] += t.output_mb;
+    }
+    let best = out_mb
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    NodeId(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(kind: JobKind) -> Table1Config {
+        let mut c = Table1Config::paper(kind);
+        c.sizes_mb = vec![150.0, 600.0];
+        c
+    }
+
+    #[test]
+    fn sweep_produces_all_rows() {
+        let cfg = small_cfg(JobKind::Wordcount);
+        let rows = run_table1(&cfg, &CostModel::rust_only());
+        assert_eq!(rows.len(), 2 * 3);
+        for r in &rows {
+            assert!(r.metrics.jt > 0.0);
+            assert!(r.metrics.mt > 0.0);
+            assert!((0.0..=1.0).contains(&r.metrics.lr));
+        }
+    }
+
+    #[test]
+    fn bass_wins_the_table_shape() {
+        // the paper's core claim: BASS JT <= BAR JT <= HDS JT (shape, not
+        // absolute seconds) at every sweep point
+        for kind in [JobKind::Wordcount, JobKind::Sort] {
+            let cfg = small_cfg(kind);
+            let rows = run_table1(&cfg, &CostModel::rust_only());
+            for &size in &cfg.sizes_mb {
+                let jt = |name: &str| {
+                    rows.iter()
+                        .find(|r| r.scheduler == name && r.data_mb == size)
+                        .unwrap()
+                        .metrics
+                        .jt
+                };
+                let (bass, bar, hds) = (jt("BASS"), jt("BAR"), jt("HDS"));
+                // one slot of tolerance per phase: TS quantization can
+                // cost BASS up to slot_secs on ties (paper's 1s slots too)
+                let tol = 2.0 * cfg.slot_secs;
+                assert!(
+                    bass <= bar + tol && bar <= hds + tol,
+                    "{kind:?} {size}MB: BASS={bass:.1} BAR={bar:.1} HDS={hds:.1}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = small_cfg(JobKind::Sort);
+        let a = run_cell(&cfg, 150.0, SchedulerKind::Bass, &CostModel::rust_only());
+        let b = run_cell(&cfg, 150.0, SchedulerKind::Bass, &CostModel::rust_only());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slowstart_gate_quantile() {
+        use crate::mapreduce::TaskId;
+        let recs: Vec<TaskRecord> = (0..4)
+            .map(|i| TaskRecord {
+                task: TaskId(i),
+                node: NodeId(0),
+                picked_at: Secs::ZERO,
+                input_ready: Secs::ZERO,
+                compute_start: Secs::ZERO,
+                finish: Secs((i + 1) as f64 * 10.0),
+                is_local: true,
+                is_map: true,
+            })
+            .collect();
+        assert_eq!(slowstart_gate(&recs, 0.5), Secs(20.0));
+        assert_eq!(slowstart_gate(&recs, 1.0), Secs(40.0));
+        assert_eq!(slowstart_gate(&recs, 0.0), Secs(10.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! HDFS substrate: blocks, replica placement, locality lookup.
+//!
+//! The schedulers only need the namenode's view: which task nodes hold a
+//! replica of each input split (`data locality`), and which replica to
+//! read from when going remote ("always moved from the least loaded node
+//! storing the replica" — Discussion 2).
+
+pub mod namenode;
+pub mod placement;
+
+pub use namenode::{BlockId, BlockInfo, Namenode};
+pub use placement::PlacementPolicy;

@@ -1,0 +1,135 @@
+//! The namenode: block -> replica-set metadata.
+
+use crate::topology::NodeId;
+
+/// An HDFS block (one task input split in the paper's model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub usize);
+
+/// Metadata for one block.
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub id: BlockId,
+    pub size_mb: f64,
+    /// Replica holders, distinct nodes.
+    pub replicas: Vec<NodeId>,
+}
+
+/// Minimal namenode: the block map.
+#[derive(Debug, Clone, Default)]
+pub struct Namenode {
+    blocks: Vec<BlockInfo>,
+}
+
+impl Namenode {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a block with an explicit replica set (used by the paper's
+    /// Example 1 where placement is fixed) — replicas must be distinct.
+    pub fn add_block(&mut self, size_mb: f64, replicas: Vec<NodeId>) -> BlockId {
+        let mut sorted = replicas.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), replicas.len(), "replicas must be distinct nodes");
+        assert!(!replicas.is_empty(), "a block needs at least one replica");
+        let id = BlockId(self.blocks.len());
+        self.blocks.push(BlockInfo { id, size_mb, replicas });
+        id
+    }
+
+    pub fn block(&self, id: BlockId) -> &BlockInfo {
+        &self.blocks[id.0]
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Does `node` hold a replica of `block`? (the locality test)
+    pub fn is_local(&self, block: BlockId, node: NodeId) -> bool {
+        self.block(block).replicas.contains(&node)
+    }
+
+    /// Replica holders restricted to an authorized node subset (the
+    /// paper's Case 2 "locality-starvation" arises when this is empty).
+    pub fn local_candidates<'a>(
+        &'a self,
+        block: BlockId,
+        authorized: &'a [NodeId],
+    ) -> impl Iterator<Item = NodeId> + 'a {
+        self.block(block)
+            .replicas
+            .iter()
+            .copied()
+            .filter(move |r| authorized.contains(r))
+    }
+
+    /// The replica to read from when transferring remotely: the least
+    /// loaded holder per the provided idle-time lookup (Discussion 2).
+    pub fn least_loaded_replica(
+        &self,
+        block: BlockId,
+        idle_of: impl Fn(NodeId) -> f64,
+    ) -> NodeId {
+        *self
+            .block(block)
+            .replicas
+            .iter()
+            .min_by(|a, b| idle_of(**a).total_cmp(&idle_of(**b)))
+            .expect("non-empty replica set")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nn() -> Namenode {
+        let mut n = Namenode::new();
+        n.add_block(64.0, vec![NodeId(1), NodeId(2)]);
+        n.add_block(64.0, vec![NodeId(0)]);
+        n
+    }
+
+    #[test]
+    fn locality_lookup() {
+        let n = nn();
+        assert!(n.is_local(BlockId(0), NodeId(1)));
+        assert!(n.is_local(BlockId(0), NodeId(2)));
+        assert!(!n.is_local(BlockId(0), NodeId(0)));
+    }
+
+    #[test]
+    fn local_candidates_respects_authorization() {
+        let n = nn();
+        let auth = [NodeId(2), NodeId(3)];
+        let c: Vec<_> = n.local_candidates(BlockId(0), &auth).collect();
+        assert_eq!(c, vec![NodeId(2)]);
+        // locality starvation: no authorized replica holder
+        let auth2 = [NodeId(3)];
+        assert_eq!(n.local_candidates(BlockId(0), &auth2).count(), 0);
+    }
+
+    #[test]
+    fn least_loaded_replica_picks_min_idle() {
+        let n = nn();
+        let idle = |nd: NodeId| [9.0, 3.0, 20.0][nd.0.min(2)];
+        assert_eq!(n.least_loaded_replica(BlockId(0), idle), NodeId(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn duplicate_replicas_rejected() {
+        let mut n = Namenode::new();
+        n.add_block(64.0, vec![NodeId(1), NodeId(1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn empty_replicas_rejected() {
+        let mut n = Namenode::new();
+        n.add_block(64.0, vec![]);
+    }
+}

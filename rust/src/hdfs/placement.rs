@@ -1,0 +1,110 @@
+//! Replica placement policies for generated workloads.
+//!
+//! Table I runs with `dfs.replication = 3` on 6 nodes; placement there is
+//! Hadoop's default (random distinct nodes, rack-unaware in a flat 6-node
+//! cluster). The round-robin policy gives fully deterministic layouts for
+//! calibration tests.
+
+use crate::topology::NodeId;
+use crate::util::XorShift;
+
+use super::namenode::Namenode;
+
+/// How generated blocks choose replica holders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// k distinct nodes uniformly at random (Hadoop default, flat cluster).
+    RandomDistinct,
+    /// Block b's replicas at nodes (b, b+1, ..., b+k-1) mod n.
+    RoundRobin,
+}
+
+impl PlacementPolicy {
+    /// Place `n_blocks` blocks of `size_mb` over `nodes`, `k` replicas each.
+    pub fn place(
+        &self,
+        nn: &mut Namenode,
+        nodes: &[NodeId],
+        n_blocks: usize,
+        size_mb: f64,
+        k: usize,
+        rng: &mut XorShift,
+    ) -> Vec<super::BlockId> {
+        assert!(k >= 1 && k <= nodes.len(), "replication {k} vs {} nodes", nodes.len());
+        (0..n_blocks)
+            .map(|b| {
+                let replicas: Vec<NodeId> = match self {
+                    PlacementPolicy::RandomDistinct => rng
+                        .distinct(nodes.len(), k)
+                        .into_iter()
+                        .map(|i| nodes[i])
+                        .collect(),
+                    PlacementPolicy::RoundRobin => {
+                        (0..k).map(|r| nodes[(b + r) % nodes.len()]).collect()
+                    }
+                };
+                nn.add_block(size_mb, replicas)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::BlockId;
+
+    fn nodes(n: usize) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn round_robin_is_deterministic() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(1);
+        let ids = PlacementPolicy::RoundRobin.place(&mut nn, &nodes(4), 5, 64.0, 2, &mut rng);
+        assert_eq!(ids.len(), 5);
+        assert_eq!(nn.block(BlockId(0)).replicas, vec![NodeId(0), NodeId(1)]);
+        assert_eq!(nn.block(BlockId(3)).replicas, vec![NodeId(3), NodeId(0)]);
+    }
+
+    #[test]
+    fn random_distinct_has_k_distinct_replicas() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(7);
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(6), 50, 64.0, 3, &mut rng);
+        for b in 0..50 {
+            let r = &nn.block(BlockId(b)).replicas;
+            assert_eq!(r.len(), 3);
+            let mut s = r.clone();
+            s.sort();
+            s.dedup();
+            assert_eq!(s.len(), 3);
+        }
+    }
+
+    #[test]
+    fn random_distinct_spreads_load() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(11);
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(6), 600, 64.0, 3, &mut rng);
+        let mut count = [0usize; 6];
+        for b in 0..600 {
+            for r in &nn.block(BlockId(b)).replicas {
+                count[r.0] += 1;
+            }
+        }
+        // 600*3/6 = 300 expected per node; allow generous slack
+        for (i, &c) in count.iter().enumerate() {
+            assert!((200..400).contains(&c), "node {i} has {c} replicas");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "replication")]
+    fn replication_beyond_cluster_rejected() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(1);
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(2), 1, 64.0, 3, &mut rng);
+    }
+}

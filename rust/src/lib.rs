@@ -1,0 +1,46 @@
+//! # bass — Bandwidth-Aware Scheduling with SDN in Hadoop
+//!
+//! Production-quality reproduction of Qin et al., *"Bandwidth-Aware
+//! Scheduling with SDN in Hadoop: A New Trend for Big Data"* (2014).
+//!
+//! The crate is the **L3 coordinator** of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`topology`] / [`sdn`] / [`hdfs`] / [`cluster`] / [`mapreduce`] /
+//!   [`sim`] — the substrates the paper's evaluation depends on (network,
+//!   OpenFlow-style controller with time-slot bandwidth calendars, HDFS
+//!   block placement, task trackers, MapReduce job model, discrete-event
+//!   simulator with flow-level bandwidth sharing).
+//! * [`sched`] — the paper's contribution: the **BASS** scheduler
+//!   (Algorithm 1) plus the baselines **HDS**, **BAR** and the **Pre-BASS**
+//!   prefetching extension (Discussion 2).
+//! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas cost
+//!   model (`artifacts/cost_*.hlo.txt`); Python never runs at request time.
+//! * [`coordinator`] — the leader event loop binding everything together.
+//! * [`experiments`] — one driver per paper table/figure (Example 1-3,
+//!   Table I(a)/(b), Fig 4, Fig 5), shared by `examples/` and `benches/`.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- example1`.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod hdfs;
+pub mod mapreduce;
+pub mod metrics;
+pub mod runtime;
+pub mod sched;
+pub mod sdn;
+pub mod sim;
+pub mod testkit;
+pub mod topology;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

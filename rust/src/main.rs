@@ -1,0 +1,6 @@
+//! `bass` CLI — see `bass help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(bass::cli::run(args));
+}

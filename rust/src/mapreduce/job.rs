@@ -1,0 +1,113 @@
+//! Job model: a bag of map tasks plus reduce tasks and shuffle geometry.
+
+use crate::util::Secs;
+
+use super::task::{TaskKind, TaskSpec};
+
+/// Job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub usize);
+
+/// A submitted MapReduce job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    /// All tasks, maps first then reduces (ids are indices).
+    pub tasks: Vec<TaskSpec>,
+    /// Fraction of maps that must finish before reduces are scheduled
+    /// (Hadoop's `mapreduce.job.reduce.slowstart.completedmaps`).
+    pub slowstart: f64,
+    pub submitted_at: Secs,
+}
+
+impl JobSpec {
+    pub fn new(id: usize, name: impl Into<String>, tasks: Vec<TaskSpec>) -> Self {
+        let job = Self {
+            id: JobId(id),
+            name: name.into(),
+            tasks,
+            slowstart: 0.5,
+            submitted_at: Secs::ZERO,
+        };
+        job.validate();
+        job
+    }
+
+    fn validate(&self) {
+        let mut seen_reduce = false;
+        for (i, t) in self.tasks.iter().enumerate() {
+            assert_eq!(t.id.0, i, "task ids must be dense indices");
+            match t.kind {
+                TaskKind::Map => assert!(!seen_reduce, "maps must precede reduces"),
+                TaskKind::Reduce => seen_reduce = true,
+            }
+        }
+    }
+
+    pub fn maps(&self) -> impl Iterator<Item = &TaskSpec> {
+        self.tasks.iter().filter(|t| t.is_map())
+    }
+
+    pub fn reduces(&self) -> impl Iterator<Item = &TaskSpec> {
+        self.tasks.iter().filter(|t| !t.is_map())
+    }
+
+    pub fn n_maps(&self) -> usize {
+        self.maps().count()
+    }
+
+    pub fn n_reduces(&self) -> usize {
+        self.reduces().count()
+    }
+
+    /// Total map output feeding the shuffle (MB).
+    pub fn shuffle_volume_mb(&self) -> f64 {
+        self.maps().map(|t| t.output_mb).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::BlockId;
+
+    fn job() -> JobSpec {
+        JobSpec::new(
+            0,
+            "wc",
+            vec![
+                TaskSpec::map(0, BlockId(0), 64.0, Secs(9.0), 16.0),
+                TaskSpec::map(1, BlockId(1), 64.0, Secs(9.0), 16.0),
+                TaskSpec::reduce(2, 32.0, Secs(12.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn counts_and_volume() {
+        let j = job();
+        assert_eq!(j.n_maps(), 2);
+        assert_eq!(j.n_reduces(), 1);
+        assert!((j.shuffle_volume_mb() - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn non_dense_ids_rejected() {
+        JobSpec::new(0, "bad", vec![TaskSpec::map(1, BlockId(0), 64.0, Secs(1.0), 0.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "precede")]
+    fn reduce_before_map_rejected() {
+        JobSpec::new(
+            0,
+            "bad",
+            vec![
+                TaskSpec::reduce(0, 1.0, Secs(1.0)),
+                TaskSpec::map(1, BlockId(0), 64.0, Secs(1.0), 0.0),
+            ],
+        );
+    }
+}

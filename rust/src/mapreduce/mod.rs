@@ -1,0 +1,7 @@
+//! MapReduce job model: tasks, jobs, phases, shuffle volumes.
+
+pub mod job;
+pub mod task;
+
+pub use job::{JobId, JobSpec};
+pub use task::{TaskId, TaskKind, TaskSpec};

@@ -1,0 +1,91 @@
+//! Task model: the paper's `TK_i`.
+
+use crate::hdfs::BlockId;
+use crate::topology::NodeId;
+use crate::util::Secs;
+
+/// Task identifier, unique within a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// Map or reduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+/// One schedulable task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    /// Input split block — `Some` for maps (drives locality), `None` for
+    /// reduces (input comes from the shuffle).
+    pub input: Option<BlockId>,
+    /// Bytes the task must pull before computing (MB). For maps this is
+    /// the split size (0 when run data-locally); for reduces the total
+    /// shuffle volume destined to this reduce.
+    pub input_mb: f64,
+    /// `TP_{i,j}` — computation time (homogeneous nodes, as the paper
+    /// assumes; heterogeneity would make this per-node).
+    pub compute: Secs,
+    /// Map output size (MB) feeding the shuffle; 0 for reduces.
+    pub output_mb: f64,
+    /// Where the input actually sits for tasks without a block (reduces):
+    /// the node holding the plurality of map output. Schedulers use it as
+    /// the shuffle source and treat placement *on* it as transfer-free.
+    pub src_hint: Option<NodeId>,
+}
+
+impl TaskSpec {
+    pub fn map(id: usize, input: BlockId, input_mb: f64, compute: Secs, output_mb: f64) -> Self {
+        Self {
+            id: TaskId(id),
+            kind: TaskKind::Map,
+            input: Some(input),
+            input_mb,
+            compute,
+            output_mb,
+            src_hint: None,
+        }
+    }
+
+    pub fn reduce(id: usize, input_mb: f64, compute: Secs) -> Self {
+        Self {
+            id: TaskId(id),
+            kind: TaskKind::Reduce,
+            input: None,
+            input_mb,
+            compute,
+            output_mb: 0.0,
+            src_hint: None,
+        }
+    }
+
+    /// Attach a shuffle-source hint (builder style).
+    pub fn with_src_hint(mut self, src: NodeId) -> Self {
+        self.src_hint = Some(src);
+        self
+    }
+
+    pub fn is_map(&self) -> bool {
+        self.kind == TaskKind::Map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let m = TaskSpec::map(0, BlockId(3), 64.0, Secs(9.0), 20.0);
+        assert!(m.is_map());
+        assert_eq!(m.input, Some(BlockId(3)));
+        let r = TaskSpec::reduce(1, 128.0, Secs(12.0));
+        assert!(!r.is_map());
+        assert_eq!(r.input, None);
+        assert_eq!(r.output_mb, 0.0);
+    }
+}

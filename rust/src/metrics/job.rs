@@ -1,0 +1,110 @@
+//! Job-level metrics, matching Table I's columns.
+
+use crate::sim::TaskRecord;
+use crate::util::Secs;
+
+/// MT / RT / JT / LR for one executed job.
+///
+/// * `MT` — map-phase completion time: last map finish − submit.
+/// * `RT` — reduce-phase completion time: last reduce finish − reduce
+///   phase start (the slowstart gate), the paper's "reduce phase
+///   completion time".
+/// * `JT` — job completion time (make span): last task finish − submit.
+/// * `LR` — data-locality ratio over map tasks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobMetrics {
+    pub mt: f64,
+    pub rt: f64,
+    pub jt: f64,
+    pub lr: f64,
+}
+
+impl JobMetrics {
+    /// Derive from execution records. `submit` is the job submission
+    /// time; `reduce_gate` the reduce-phase start (None = no reduces).
+    pub fn from_records(records: &[TaskRecord], submit: Secs, reduce_gate: Option<Secs>) -> Self {
+        assert!(!records.is_empty(), "no records");
+        let maps: Vec<&TaskRecord> = records.iter().filter(|r| r.is_map).collect();
+        let reduces: Vec<&TaskRecord> = records.iter().filter(|r| !r.is_map).collect();
+        let map_end = maps.iter().map(|r| r.finish).fold(submit, Secs::max);
+        let all_end = records.iter().map(|r| r.finish).fold(submit, Secs::max);
+        let mt = (map_end - submit).0;
+        let rt = if reduces.is_empty() {
+            0.0
+        } else {
+            let red_end = reduces.iter().map(|r| r.finish).fold(submit, Secs::max);
+            let start = reduce_gate.unwrap_or(submit);
+            (red_end - start).0
+        };
+        let jt = (all_end - submit).0;
+        let lr = if maps.is_empty() {
+            1.0
+        } else {
+            maps.iter().filter(|r| r.is_local).count() as f64 / maps.len() as f64
+        };
+        Self { mt, rt, jt, lr }
+    }
+}
+
+impl std::fmt::Display for JobMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MT={:.0}s RT={:.0}s JT={:.0}s LR={:.1}%",
+            self.mt,
+            self.rt,
+            self.jt,
+            self.lr * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::TaskId;
+    use crate::topology::NodeId;
+
+    fn rec(task: usize, finish: f64, is_map: bool, is_local: bool) -> TaskRecord {
+        TaskRecord {
+            task: TaskId(task),
+            node: NodeId(0),
+            picked_at: Secs::ZERO,
+            input_ready: Secs::ZERO,
+            compute_start: Secs::ZERO,
+            finish: Secs(finish),
+            is_local,
+            is_map,
+        }
+    }
+
+    #[test]
+    fn metrics_shape() {
+        let records = vec![
+            rec(0, 10.0, true, true),
+            rec(1, 14.0, true, false),
+            rec(2, 30.0, false, false),
+        ];
+        let m = JobMetrics::from_records(&records, Secs::ZERO, Some(Secs(7.0)));
+        assert_eq!(m.mt, 14.0);
+        assert_eq!(m.rt, 23.0); // 30 - 7
+        assert_eq!(m.jt, 30.0);
+        assert_eq!(m.lr, 0.5);
+    }
+
+    #[test]
+    fn map_only_job() {
+        let records = vec![rec(0, 35.0, true, true)];
+        let m = JobMetrics::from_records(&records, Secs::ZERO, None);
+        assert_eq!(m.jt, 35.0);
+        assert_eq!(m.rt, 0.0);
+        assert_eq!(m.lr, 1.0);
+    }
+
+    #[test]
+    fn submit_offset_subtracts() {
+        let records = vec![rec(0, 35.0, true, true)];
+        let m = JobMetrics::from_records(&records, Secs(5.0), None);
+        assert_eq!(m.jt, 30.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Metrics: MT / RT / JT / LR (Table I) and per-node timelines (Fig. 3).
+
+pub mod job;
+pub mod timeline;
+
+pub use job::JobMetrics;
+pub use timeline::{NodeTimeline, TimelineEntry};

@@ -1,0 +1,111 @@
+//! Per-node execution timelines — the Fig. 3 Gantt view.
+
+use crate::sim::TaskRecord;
+use crate::topology::NodeId;
+
+/// One bar in the Gantt chart.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    pub task: usize,
+    pub transfer_start: f64,
+    pub compute_start: f64,
+    pub finish: f64,
+    pub is_local: bool,
+}
+
+/// All entries of one node, in execution order.
+#[derive(Debug, Clone)]
+pub struct NodeTimeline {
+    pub node: NodeId,
+    pub entries: Vec<TimelineEntry>,
+}
+
+impl NodeTimeline {
+    /// Build timelines for `n_nodes` from execution records.
+    pub fn build(records: &[TaskRecord], n_nodes: usize) -> Vec<NodeTimeline> {
+        let mut out: Vec<NodeTimeline> =
+            (0..n_nodes).map(|i| NodeTimeline { node: NodeId(i), entries: Vec::new() }).collect();
+        let mut sorted: Vec<&TaskRecord> = records.iter().collect();
+        sorted.sort_by(|a, b| a.compute_start.cmp(&b.compute_start));
+        for r in sorted {
+            if r.node.0 < n_nodes {
+                out[r.node.0].entries.push(TimelineEntry {
+                    task: r.task.0,
+                    transfer_start: r.picked_at.0,
+                    compute_start: r.compute_start.0,
+                    finish: r.finish.0,
+                    is_local: r.is_local,
+                });
+            }
+        }
+        out
+    }
+
+    /// ASCII rendering (1 column per `scale` seconds) for examples/CLI.
+    pub fn render(timelines: &[NodeTimeline], scale: f64) -> String {
+        let mut s = String::new();
+        for tl in timelines {
+            if tl.entries.is_empty() {
+                continue;
+            }
+            s.push_str(&format!("ND{} |", tl.node.0 + 1));
+            let mut cursor = 0.0;
+            for e in &tl.entries {
+                let gap = ((e.transfer_start - cursor) / scale).round() as usize;
+                s.push_str(&".".repeat(gap));
+                let xfer = ((e.compute_start - e.transfer_start) / scale).round() as usize;
+                s.push_str(&"~".repeat(xfer));
+                let comp = ((e.finish - e.compute_start) / scale).round() as usize;
+                let label = format!("[TK{}{}", e.task + 1, if e.is_local { "" } else { "*" });
+                let fill = comp.saturating_sub(label.len() + 1);
+                s.push_str(&label);
+                s.push_str(&"=".repeat(fill));
+                s.push(']');
+                cursor = e.finish;
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::TaskId;
+    use crate::util::Secs;
+
+    #[test]
+    fn build_orders_by_start() {
+        let recs = vec![
+            TaskRecord {
+                task: TaskId(1),
+                node: NodeId(0),
+                picked_at: Secs(10.0),
+                input_ready: Secs(10.0),
+                compute_start: Secs(10.0),
+                finish: Secs(19.0),
+                is_local: true,
+                is_map: true,
+            },
+            TaskRecord {
+                task: TaskId(0),
+                node: NodeId(0),
+                picked_at: Secs(1.0),
+                input_ready: Secs(1.0),
+                compute_start: Secs(1.0),
+                finish: Secs(10.0),
+                is_local: false,
+                is_map: true,
+            },
+        ];
+        let tls = NodeTimeline::build(&recs, 2);
+        assert_eq!(tls[0].entries.len(), 2);
+        assert_eq!(tls[0].entries[0].task, 0);
+        assert_eq!(tls[0].entries[1].task, 1);
+        assert!(tls[1].entries.is_empty());
+        let txt = NodeTimeline::render(&tls, 1.0);
+        assert!(txt.contains("TK1*")); // remote marker
+        assert!(txt.contains("TK2"));
+    }
+}

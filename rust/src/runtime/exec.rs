@@ -1,0 +1,341 @@
+//! The scheduler-facing cost model: XLA execution + pure-Rust fallback.
+//!
+//! Semantics are defined by `python/compile/kernels/ref.py` (Eq. 1-3 of
+//! the paper); the Rust fallback mirrors it **in f32** so both backends
+//! agree bit-for-bit and property tests can cross-check them.
+
+use anyhow::Result;
+
+use super::loader::{default_artifacts_dir, Artifacts};
+
+/// f32 constants matching kernels/ref.py.
+pub const INF: f32 = 3.0e38;
+pub const EPS: f32 = 1e-9;
+
+/// Row-major (m x n) problem for the cost model.
+#[derive(Debug, Clone)]
+pub struct CostInputs {
+    pub m: usize,
+    pub n: usize,
+    /// split sizes, MB — len m
+    pub sz: Vec<f32>,
+    /// effective bandwidth source->node, MB/s — len m*n; <= 0 = no path
+    pub bw: Vec<f32>,
+    /// compute times TP, s — len m*n
+    pub tp: Vec<f32>,
+    /// replica locality mask (1.0 local) — len m*n
+    pub local: Vec<f32>,
+    /// node idle times ΥI, s — len n
+    pub idle: Vec<f32>,
+    /// time-slot duration, s
+    pub ts: f32,
+}
+
+impl CostInputs {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.sz.len() == self.m, "sz len");
+        anyhow::ensure!(self.bw.len() == self.m * self.n, "bw len");
+        anyhow::ensure!(self.tp.len() == self.m * self.n, "tp len");
+        anyhow::ensure!(self.local.len() == self.m * self.n, "local len");
+        anyhow::ensure!(self.idle.len() == self.n, "idle len");
+        anyhow::ensure!(self.ts > 0.0, "ts must be positive");
+        Ok(())
+    }
+}
+
+/// Outputs (see ref.py): YC/TM/slot matrices + per-task argmin.
+#[derive(Debug, Clone)]
+pub struct CostOutputs {
+    pub m: usize,
+    pub n: usize,
+    pub yc: Vec<f32>,
+    pub tm: Vec<f32>,
+    pub slots: Vec<f32>,
+    pub best_idx: Vec<i32>,
+    pub best_cost: Vec<f32>,
+}
+
+impl CostOutputs {
+    pub fn yc_at(&self, i: usize, j: usize) -> f32 {
+        self.yc[i * self.n + j]
+    }
+
+    pub fn tm_at(&self, i: usize, j: usize) -> f32 {
+        self.tm[i * self.n + j]
+    }
+
+    pub fn slots_at(&self, i: usize, j: usize) -> f32 {
+        self.slots[i * self.n + j]
+    }
+}
+
+/// Which engine computed the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Xla,
+    RustFallback,
+}
+
+/// The cost model: tries the XLA artifacts, falls back to Rust.
+pub struct CostModel {
+    artifacts: Option<Artifacts>,
+}
+
+impl CostModel {
+    /// Load from the default artifacts dir; silently falls back to the
+    /// Rust evaluator when artifacts are missing.
+    pub fn auto() -> Self {
+        let artifacts = Artifacts::open(&default_artifacts_dir()).ok();
+        Self { artifacts }
+    }
+
+    /// Force the pure-Rust backend (unit tests, what-if copies).
+    pub fn rust_only() -> Self {
+        Self { artifacts: None }
+    }
+
+    /// Load from an explicit directory (errors if unusable).
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        Ok(Self { artifacts: Some(Artifacts::open(dir)?) })
+    }
+
+    pub fn backend_for(&self, m: usize, n: usize) -> Backend {
+        match &self.artifacts {
+            Some(a) if a.pick(m, n).is_some() => Backend::Xla,
+            _ => Backend::RustFallback,
+        }
+    }
+
+    /// Evaluate Eq. 1-3 for the batch.
+    pub fn eval(&self, inp: &CostInputs) -> Result<CostOutputs> {
+        inp.validate()?;
+        match &self.artifacts {
+            Some(a) => match a.pick(inp.m, inp.n) {
+                Some(v) => self.eval_xla(a, v.clone(), inp),
+                None => Ok(Self::eval_rust(inp)),
+            },
+            None => Ok(Self::eval_rust(inp)),
+        }
+    }
+
+    /// Pure-Rust mirror of kernels/ref.py, f32 arithmetic.
+    pub fn eval_rust(inp: &CostInputs) -> CostOutputs {
+        let (m, n) = (inp.m, inp.n);
+        let mut yc = vec![0f32; m * n];
+        let mut tm = vec![0f32; m * n];
+        let mut slots = vec![0f32; m * n];
+        let mut best_idx = vec![0i32; m];
+        let mut best_cost = vec![INF; m];
+        for i in 0..m {
+            let mut bi = 0usize;
+            let mut bc = f32::INFINITY;
+            for j in 0..n {
+                let k = i * n + j;
+                let mut t = inp.sz[i] / inp.bw[k].max(EPS);
+                if inp.bw[k] <= 0.0 {
+                    t = INF;
+                }
+                if inp.local[k] > 0.0 {
+                    t = 0.0;
+                }
+                tm[k] = t;
+                let c = t + inp.tp[k] + inp.idle[j];
+                yc[k] = c;
+                slots[k] = if t >= INF { INF } else { (t / inp.ts.max(EPS)).ceil() };
+                if c < bc {
+                    bc = c;
+                    bi = j;
+                }
+            }
+            best_idx[i] = bi as i32;
+            best_cost[i] = bc;
+        }
+        CostOutputs { m, n, yc, tm, slots, best_idx, best_cost }
+    }
+
+    /// Pad to the artifact variant, execute via PJRT, slice back.
+    fn eval_xla(
+        &self,
+        arts: &Artifacts,
+        v: super::loader::Variant,
+        inp: &CostInputs,
+    ) -> Result<CostOutputs> {
+        let (m, n) = (inp.m, inp.n);
+        let (pm, pn) = (v.m, v.n);
+        // padding: extra nodes get idle=INF so they never win the argmin;
+        // extra tasks produce junk rows that are sliced away.
+        let mut sz = vec![0f32; pm];
+        sz[..m].copy_from_slice(&inp.sz);
+        let mut idle = vec![INF; pn];
+        idle[..n].copy_from_slice(&inp.idle);
+        let pad_mat = |src: &[f32], fill: f32| -> Vec<f32> {
+            let mut out = vec![fill; pm * pn];
+            for i in 0..m {
+                out[i * pn..i * pn + n].copy_from_slice(&src[i * n..(i + 1) * n]);
+            }
+            out
+        };
+        let bw = pad_mat(&inp.bw, 1.0);
+        let tp = pad_mat(&inp.tp, 0.0);
+        let local = pad_mat(&inp.local, 0.0);
+
+        let exe = arts.executable(&v)?;
+        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+        };
+        let args = [
+            lit(&sz, &[pm as i64])?,
+            lit(&bw, &[pm as i64, pn as i64])?,
+            lit(&tp, &[pm as i64, pn as i64])?,
+            lit(&local, &[pm as i64, pn as i64])?,
+            lit(&idle, &[pn as i64])?,
+            lit(&[inp.ts], &[1])?,
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+        let f32v = |l: &xla::Literal| -> Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("f32 out: {e}"))
+        };
+        let yc_p = f32v(&parts[0])?;
+        let tm_p = f32v(&parts[1])?;
+        let slots_p = f32v(&parts[2])?;
+        let idx_p: Vec<i32> =
+            parts[3].to_vec::<i32>().map_err(|e| anyhow::anyhow!("i32 out: {e}"))?;
+        let cost_p = f32v(&parts[4])?;
+
+        // slice padded (pm x pn) back to (m x n)
+        let unpad = |src: &[f32]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(m * n);
+            for i in 0..m {
+                out.extend_from_slice(&src[i * pn..i * pn + n]);
+            }
+            out
+        };
+        Ok(CostOutputs {
+            m,
+            n,
+            yc: unpad(&yc_p),
+            tm: unpad(&tm_p),
+            slots: unpad(&slots_p),
+            best_idx: idx_p[..m].to_vec(),
+            best_cost: cost_p[..m].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn example1_tk1() -> CostInputs {
+        // the paper's canonical TK1 decision (see python tests)
+        CostInputs {
+            m: 1,
+            n: 4,
+            sz: vec![64.0],
+            bw: vec![12.8; 4],
+            tp: vec![9.0; 4],
+            local: vec![0.0, 1.0, 1.0, 0.0],
+            idle: vec![3.0, 9.0, 20.0, 7.0],
+            ts: 1.0,
+        }
+    }
+
+    pub fn random_inputs(m: usize, n: usize, seed: u64) -> CostInputs {
+        let mut r = XorShift::new(seed);
+        CostInputs {
+            m,
+            n,
+            sz: (0..m).map(|_| r.uniform(0.0, 5000.0) as f32).collect(),
+            bw: (0..m * n).map(|_| r.uniform(-5.0, 120.0) as f32).collect(),
+            tp: (0..m * n).map(|_| r.uniform(0.0, 900.0) as f32).collect(),
+            local: (0..m * n).map(|_| if r.chance(0.3) { 1.0 } else { 0.0 }).collect(),
+            idle: (0..n).map(|_| r.uniform(0.0, 200.0) as f32).collect(),
+            ts: 1.0,
+        }
+    }
+
+    #[test]
+    fn rust_eval_paper_tk1() {
+        let out = CostModel::eval_rust(&example1_tk1());
+        assert_eq!(out.yc_at(0, 0), 17.0); // remote ND1: 5+9+3
+        assert_eq!(out.yc_at(0, 1), 18.0); // local ND2: 0+9+9
+        assert_eq!(out.best_idx[0], 0);
+        assert_eq!(out.slots_at(0, 0), 5.0);
+        assert_eq!(out.tm_at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn rust_eval_unreachable() {
+        let mut inp = example1_tk1();
+        inp.bw = vec![-1.0; 4];
+        inp.local = vec![0.0; 4];
+        let out = CostModel::eval_rust(&inp);
+        for j in 0..4 {
+            assert!(out.yc_at(0, j) >= INF);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_lengths() {
+        let mut inp = example1_tk1();
+        inp.idle.pop();
+        assert!(inp.validate().is_err());
+    }
+
+    #[test]
+    fn xla_matches_rust_bitwise() {
+        let model = CostModel::auto();
+        if model.backend_for(9, 4) != Backend::Xla {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        for seed in 1..=8u64 {
+            let inp = random_inputs(9, 4, seed);
+            let xla_out = model.eval(&inp).unwrap();
+            let rust_out = CostModel::eval_rust(&inp);
+            assert_eq!(xla_out.yc, rust_out.yc, "yc mismatch seed={seed}");
+            assert_eq!(xla_out.tm, rust_out.tm, "tm mismatch seed={seed}");
+            assert_eq!(xla_out.slots, rust_out.slots, "slots mismatch seed={seed}");
+            assert_eq!(xla_out.best_idx, rust_out.best_idx, "idx mismatch seed={seed}");
+            assert_eq!(xla_out.best_cost, rust_out.best_cost, "cost mismatch seed={seed}");
+        }
+    }
+
+    #[test]
+    fn xla_padding_never_picks_padded_node() {
+        let model = CostModel::auto();
+        if model.backend_for(3, 3) != Backend::Xla {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        // 3 nodes in a 16x8 artifact: 5 padded node columns
+        let inp = random_inputs(3, 3, 99);
+        let out = model.eval(&inp).unwrap();
+        for i in 0..3 {
+            assert!((out.best_idx[i] as usize) < 3, "picked padded node");
+        }
+    }
+
+    #[test]
+    fn xla_variant_boundary_exact_fit() {
+        let model = CostModel::auto();
+        if model.backend_for(16, 8) != Backend::Xla {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let inp = random_inputs(16, 8, 5);
+        let a = model.eval(&inp).unwrap();
+        let b = CostModel::eval_rust(&inp);
+        assert_eq!(a.yc, b.yc);
+        assert_eq!(a.best_idx, b.best_idx);
+    }
+}

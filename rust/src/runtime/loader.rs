@@ -1,0 +1,126 @@
+//! Artifact discovery and PJRT compilation cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Artifact variants as listed in `artifacts/manifest.txt`
+/// (`cost M N file` / `idle 0 N file` rows emitted by aot.py).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub m: usize,
+    pub n: usize,
+    pub path: PathBuf,
+}
+
+/// The artifacts directory: manifest + lazily compiled executables.
+pub struct Artifacts {
+    client: xla::PjRtClient,
+    cost_variants: Vec<Variant>,
+    /// (m, n) -> compiled executable, compiled on first use.
+    compiled: Mutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Default artifacts dir: `$BASS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("BASS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Artifacts {
+    /// Open a directory produced by `make artifacts`. Fails if the
+    /// manifest is missing or empty (callers then use the Rust fallback).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut cost_variants = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let (Some(kind), Some(m), Some(n), Some(file)) =
+                (it.next(), it.next(), it.next(), it.next())
+            else {
+                continue;
+            };
+            if kind != "cost" {
+                continue;
+            }
+            cost_variants.push(Variant {
+                m: m.parse().context("manifest m")?,
+                n: n.parse().context("manifest n")?,
+                path: dir.join(file),
+            });
+        }
+        anyhow::ensure!(!cost_variants.is_empty(), "no cost artifacts in manifest");
+        // smallest first so pick() finds the tightest fit
+        cost_variants.sort_by_key(|v| (v.m, v.n));
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Self { client, cost_variants, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.cost_variants
+    }
+
+    /// Smallest variant with `m >= tasks` and `n >= nodes`.
+    pub fn pick(&self, tasks: usize, nodes: usize) -> Option<&Variant> {
+        self.cost_variants.iter().find(|v| v.m >= tasks && v.n >= nodes)
+    }
+
+    /// Compile (or fetch cached) the executable for a variant.
+    pub fn executable(
+        &self,
+        v: &Variant,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(e) = cache.get(&(v.m, v.n)) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&v.path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", v.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", v.path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert((v.m, v.n), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifacts dir for tests: repo-root relative.
+    pub fn test_dir() -> PathBuf {
+        let mut d = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        d.push("artifacts");
+        d
+    }
+
+    #[test]
+    fn open_and_pick() {
+        let dir = test_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let a = Artifacts::open(&dir).unwrap();
+        assert!(!a.variants().is_empty());
+        let v = a.pick(9, 4).expect("16x8 variant should fit 9x4");
+        assert!(v.m >= 9 && v.n >= 4);
+        // smallest-fit: 16x8 if present
+        assert_eq!((v.m, v.n), (16, 8));
+        assert!(a.pick(10_000, 4).is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Artifacts::open(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 runtime: load and execute the AOT-compiled JAX/Pallas cost model.
+//!
+//! `make artifacts` lowers the L2 model (python/compile/) to HLO **text**
+//! once at build time; this module loads `artifacts/*.hlo.txt` through the
+//! `xla` crate's PJRT CPU client and executes it on the scheduling hot
+//! path. Python never runs at request time.
+//!
+//! [`CostModel`] is the scheduler-facing API: it picks the smallest
+//! artifact variant that fits the live (m, n), pads, executes, slices —
+//! or falls back to the bit-identical pure-Rust evaluator when artifacts
+//! are absent (tests, artifact-less builds).
+
+pub mod exec;
+pub mod loader;
+
+pub use exec::{CostInputs, CostModel, CostOutputs};
+pub use loader::{default_artifacts_dir, Artifacts};

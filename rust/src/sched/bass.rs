@@ -1,0 +1,353 @@
+//! BASS — Bandwidth-Aware Scheduling with Sdn in hadoop (Algorithm 1).
+//!
+//! For each task `TK_i` (in submission order, exactly as the paper's
+//! `for i = 1..m` loop):
+//!
+//! * **Case 1** — a data-local node `ND_loc` exists (the authorized
+//!   replica holder with minimum idle time).
+//!   * **1.1** if `ND_loc == ND_minnow` or `ΥI_loc <= ΥI_minnow`:
+//!     assign locally — zero transfer cost (Eq. 1).
+//!   * **1.2** otherwise ask the SDN controller for a slot-reserved
+//!     transfer to `ND_minnow`; if the reserved completion time beats the
+//!     local one (`ΥC_minnow < ΥC_loc`, i.e. `BW_needed <= BW_rl`),
+//!     commit the reservation and go remote.
+//!   * **1.3** if bandwidth is insufficient, stay local.
+//! * **Case 2** — no local node (locality starvation, shared clusters):
+//!   go to `ND_minnow` with a slot reservation.
+//!
+//! The batched (m x n) cost matrix is evaluated **once per scheduling
+//! round through the AOT XLA artifact** (L1 Pallas kernel + L2 JAX model;
+//! see `runtime::CostModel`) and pre-filters unreachable placements; the
+//! per-task sequential pass then confirms each remote decision against
+//! the live slot calendar (`Controller::plan_transfer`), which is the
+//! paper's `BW_{i,minnow} <= BW_rl` test in time-slot form.
+
+use crate::mapreduce::TaskSpec;
+use crate::sdn::TrafficClass;
+use crate::sim::{Assignment, Placement, TransferPlan};
+use crate::util::Secs;
+
+use super::cost;
+use super::types::{SchedCtx, Scheduler};
+
+/// The BASS scheduler.
+#[derive(Debug, Default)]
+pub struct Bass {
+    /// Statistics: how many decisions went remote via reservation.
+    pub remote_assignments: usize,
+    /// Statistics: cost-model batch evaluations (XLA hot-path calls).
+    pub batch_evals: usize,
+}
+
+impl Bass {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Bass {
+    fn name(&self) -> &'static str {
+        "BASS"
+    }
+
+    fn schedule(
+        &mut self,
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Assignment {
+        let floor = gate.unwrap_or(ctx.now).max(ctx.now);
+        // L1/L2 hot path: one batched Eq.1-3 evaluation for the round.
+        let batch = cost::eval_batch(tasks, ctx);
+        self.batch_evals += 1;
+
+        let mut placements = Vec::with_capacity(tasks.len());
+        for (i, t) in tasks.iter().enumerate() {
+            let class =
+                if t.is_map() { TrafficClass::HadoopOther } else { TrafficClass::Shuffle };
+            let locals = ctx.local_nodes(t);
+            // ND_minnow per the Objective Function (Eq. 4): the node with
+            // the minimum predicted ΥC = TM + TP + ΥI, using the batched
+            // TM matrix (XLA hot path) and the *live* ledger idle times.
+            // TP enters per node (heterogeneous clusters scale it).
+            let (minnow, yi_minnow) = {
+                let mut best: Option<(crate::topology::NodeId, f64)> = None;
+                for (j, &nd) in ctx.authorized.iter().enumerate() {
+                    let tm = batch.tm_at(i, j) as f64;
+                    let score = tm + ctx.ledger.idle(nd).0 + ctx.effective_compute(t, nd).0;
+                    if best.map_or(true, |(_, b)| score < b) {
+                        best = Some((nd, score));
+                    }
+                }
+                let (nd, _) = best.expect("no authorized nodes");
+                (nd, ctx.ledger.idle(nd))
+            };
+            let loc = ctx.ledger.min_idle_among(locals.iter().copied());
+
+            let assign_local = |ctx: &mut SchedCtx, placements: &mut Vec<Placement>| {
+                let (loc_nd, yi_loc) = loc.unwrap();
+                let start = yi_loc.max(floor);
+                let tp = ctx.effective_compute(t, loc_nd);
+                ctx.ledger.occupy_until(loc_nd, start + tp);
+                placements.push(Placement {
+                    task: t.id,
+                    node: loc_nd,
+                    compute: tp,
+                    transfer: TransferPlan::None,
+                    gate,
+                    is_local: true,
+                    is_map: t.is_map(),
+                });
+            };
+
+            match loc {
+                Some((loc_nd, yi_loc)) => {
+                    // Case 1.1 — local node is (tied-)optimal by idle time
+                    if loc_nd == minnow || yi_loc <= yi_minnow {
+                        assign_local(ctx, &mut placements);
+                        continue;
+                    }
+                    // batched pre-filter: remote unreachable => local
+                    let mcol = cost::col_of(ctx, minnow);
+                    if batch.tm_at(i, mcol) >= crate::runtime::exec::INF {
+                        assign_local(ctx, &mut placements);
+                        continue;
+                    }
+                    // Case 1.2 / 1.3 — ask the controller for a reserved window
+                    let src = match ctx.transfer_source(t) {
+                        Some(s) => s,
+                        None => {
+                            assign_local(ctx, &mut placements);
+                            continue;
+                        }
+                    };
+                    let earliest = yi_minnow.max(floor);
+                    let plan =
+                        ctx.controller.plan_transfer(src, minnow, t.input_mb, earliest);
+                    let tp_loc = ctx.effective_compute(t, loc_nd);
+                    let tp_min = ctx.effective_compute(t, minnow);
+                    let yc_loc = yi_loc.max(floor) + tp_loc;
+                    match plan {
+                        Some(p) if p.2 + tp_min < yc_loc => {
+                            let tr = ctx
+                                .controller
+                                .commit_transfer(src, minnow, class, p, ctx.now)
+                                .expect("planned reservation must commit");
+                            ctx.ledger.occupy_until(minnow, tr.arrival + tp_min);
+                            self.remote_assignments += 1;
+                            placements.push(Placement {
+                                task: t.id,
+                                node: minnow,
+                                compute: tp_min,
+                                transfer: TransferPlan::Reserved(tr),
+                                gate,
+                                is_local: false,
+                                is_map: t.is_map(),
+                            });
+                        }
+                        // Case 1.3: bandwidth-starved remote — stay local
+                        _ => assign_local(ctx, &mut placements),
+                    }
+                }
+                None => {
+                    // Case 2 — locality starvation: reserved remote on minnow
+                    let start = yi_minnow.max(floor);
+                    let tp_min = ctx.effective_compute(t, minnow);
+                    match ctx.transfer_source(t).filter(|_| t.input_mb > 0.0) {
+                        None => {
+                            // no input to move (or sourceless): plain compute
+                            ctx.ledger.occupy_until(minnow, start + tp_min);
+                            placements.push(Placement {
+                                task: t.id,
+                                node: minnow,
+                                compute: tp_min,
+                                transfer: TransferPlan::None,
+                                gate,
+                                is_local: false,
+                                is_map: t.is_map(),
+                            });
+                        }
+                        Some(src) => {
+                            match ctx.controller.plan_transfer(src, minnow, t.input_mb, start)
+                            {
+                                Some(p) => {
+                                    let tr = ctx
+                                        .controller
+                                        .commit_transfer(src, minnow, class, p, ctx.now)
+                                        .expect("planned reservation must commit");
+                                    ctx.ledger
+                                        .occupy_until(minnow, tr.arrival + tp_min);
+                                    self.remote_assignments += 1;
+                                    placements.push(Placement {
+                                        task: t.id,
+                                        node: minnow,
+                                        compute: tp_min,
+                                        transfer: TransferPlan::Reserved(tr),
+                                        gate,
+                                        is_local: false,
+                                        is_map: t.is_map(),
+                                    });
+                                }
+                                None => {
+                                    // no reservable window at all: fall back to
+                                    // a fair-share pull (degraded mode)
+                                    let path = ctx
+                                        .controller
+                                        .path(src, minnow)
+                                        .map(|p| p.to_vec())
+                                        .unwrap_or_default();
+                                    let tm = ctx
+                                        .tm_estimate(src, minnow, t.input_mb)
+                                        .unwrap_or(Secs::INF);
+                                    ctx.ledger
+                                        .occupy_until(minnow, start + tm + tp_min);
+                                    placements.push(Placement {
+                                        task: t.id,
+                                        node: minnow,
+                                        compute: tp_min,
+                                        transfer: TransferPlan::FairShare {
+                                            path,
+                                            size_mb: t.input_mb,
+                                            class,
+                                        },
+                                        gate,
+                                        is_local: false,
+                                        is_map: t.is_map(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Assignment { placements }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::hds::tests::{example1, makespan};
+    use crate::runtime::CostModel;
+    use crate::sim::TransferPlan;
+
+    #[test]
+    fn bass_reproduces_paper_35s() {
+        let mut ex = example1();
+        let cost_model = CostModel::rust_only();
+        let mut ctx = SchedCtx {
+            controller: &mut ex.ctrl,
+            namenode: &ex.nn,
+            ledger: &mut ex.ledger,
+            authorized: ex.nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost_model,
+            node_speed: Vec::new(),
+        };
+        let mut bass = Bass::new();
+        let a = bass.schedule(&ex.tasks, None, &mut ctx);
+        assert_eq!(a.placements.len(), 9);
+        // Example 1 allocation: ND1 {TK1 remote, TK4, TK9}, ND2 {TK3, TK6},
+        // ND3 {TK7}, ND4 {TK2, TK5, TK8}; makespan 35 via ΥC_{9,1}=35.
+        let on = |n: usize| -> Vec<usize> {
+            a.placements.iter().filter(|p| p.node == ex.nodes[n]).map(|p| p.task.0).collect()
+        };
+        assert_eq!(on(0), vec![0, 3, 8]);
+        assert_eq!(on(1), vec![2, 5]);
+        assert_eq!(on(2), vec![6]);
+        assert_eq!(on(3), vec![1, 4, 7]);
+        assert!((makespan(ctx.ledger, &ex.nodes) - 35.0).abs() < 1e-9);
+        assert_eq!(ctx.ledger.idle(ex.nodes[0]), Secs(35.0)); // ΥC_{9,1} = 35
+        // exactly one reserved remote transfer (TK1), per the paper's walk-through
+        assert_eq!(bass.remote_assignments, 1);
+        let tk1 = a.placements.iter().find(|p| p.task.0 == 0).unwrap();
+        match &tk1.transfer {
+            TransferPlan::Reserved(tr) => {
+                // slots TS_4..TS_8 (0-based 3..8) on Link2->Link1 at full rate
+                assert_eq!(tr.reservation.start_slot, 3);
+                assert_eq!(tr.reservation.n_slots, 5);
+                assert!((tr.arrival.0 - 8.0).abs() < 1e-9);
+            }
+            other => panic!("TK1 should be a reserved transfer, got {other:?}"),
+        }
+        assert_eq!(bass.batch_evals, 1);
+    }
+
+    #[test]
+    fn bass_uses_xla_backend_when_artifacts_present() {
+        let model = CostModel::auto();
+        if model.backend_for(9, 4) != crate::runtime::exec::Backend::Xla {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut ex = example1();
+        let mut ctx = SchedCtx {
+            controller: &mut ex.ctrl,
+            namenode: &ex.nn,
+            ledger: &mut ex.ledger,
+            authorized: ex.nodes.clone(),
+            now: Secs::ZERO,
+            cost: &model,
+            node_speed: Vec::new(),
+        };
+        let a = Bass::new().schedule(&ex.tasks, None, &mut ctx);
+        // identical decision trace through the XLA path
+        assert!((makespan(ctx.ledger, &ex.nodes) - 35.0).abs() < 1e-9);
+        assert_eq!(a.placements.len(), 9);
+    }
+
+    #[test]
+    fn bass_case2_locality_starvation_reserves() {
+        let mut ex = example1();
+        let cost_model = CostModel::rust_only();
+        // authorize only ND4: every replica set that excludes ND4 starves
+        let mut ctx = SchedCtx {
+            controller: &mut ex.ctrl,
+            namenode: &ex.nn,
+            ledger: &mut ex.ledger,
+            authorized: vec![ex.nodes[3]],
+            now: Secs::ZERO,
+            cost: &cost_model,
+            node_speed: Vec::new(),
+        };
+        // TK1 replicas {ND2, ND3}: starved under {ND4}
+        let a = Bass::new().schedule(&ex.tasks[..1], None, &mut ctx);
+        let p = &a.placements[0];
+        assert_eq!(p.node, ex.nodes[3]);
+        assert!(!p.is_local);
+        assert!(matches!(p.transfer, TransferPlan::Reserved(_)));
+    }
+
+    #[test]
+    fn bass_makespan_beats_baselines_on_example1() {
+        // the paper's headline: BASS(35) < BAR(38) < HDS(39)
+        let cost_model = CostModel::rust_only();
+        let mut results = Vec::new();
+        for which in ["hds", "bar", "bass"] {
+            let mut ex = example1();
+            let mut ctx = SchedCtx {
+                controller: &mut ex.ctrl,
+                namenode: &ex.nn,
+                ledger: &mut ex.ledger,
+                authorized: ex.nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost_model,
+            node_speed: Vec::new(),
+            };
+            match which {
+                "hds" => {
+                    super::super::hds::Hds::new().schedule(&ex.tasks, None, &mut ctx);
+                }
+                "bar" => {
+                    super::super::bar::Bar::new().schedule(&ex.tasks, None, &mut ctx);
+                }
+                _ => {
+                    Bass::new().schedule(&ex.tasks, None, &mut ctx);
+                }
+            }
+            results.push(makespan(ctx.ledger, &ex.nodes));
+        }
+        assert_eq!(results, vec![39.0, 38.0, 35.0]);
+    }
+}

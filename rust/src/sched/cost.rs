@@ -1,0 +1,158 @@
+//! Bridge between scheduler state and the L1/L2 cost model.
+//!
+//! [`build_inputs`] assembles the (m x n) [`CostInputs`] batch from the
+//! SDN bandwidth snapshot, the namenode's locality map and the ledger —
+//! the exact tensor the AOT JAX/Pallas artifact consumes. BASS calls this
+//! once per scheduling round (the XLA hot path); the per-task sequential
+//! refinement then works off the returned TM matrix.
+
+use crate::mapreduce::TaskSpec;
+use crate::runtime::{CostInputs, CostOutputs};
+use crate::topology::NodeId;
+
+use super::types::SchedCtx;
+
+/// Build the batched cost-model inputs for `tasks` over the authorized
+/// node set, in authorized-set column order.
+pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
+    let m = tasks.len();
+    let nodes = &ctx.authorized;
+    let n = nodes.len();
+    let mut sz = Vec::with_capacity(m);
+    let mut bw = vec![0f32; m * n];
+    let mut tp = vec![0f32; m * n];
+    let mut local = vec![0f32; m * n];
+    // bw rows depend only on the transfer source; a job's tasks share a
+    // handful of sources, so memoize rows per source (perf: collapses
+    // m*n path-residual walks to distinct_sources*n — see §Perf).
+    let mut bw_rows: std::collections::HashMap<crate::topology::NodeId, Vec<f32>> =
+        std::collections::HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        sz.push(t.input_mb as f32);
+        let src = ctx.transfer_source(t);
+        let locals = ctx.local_nodes(t);
+        let row: Option<&Vec<f32>> = src.map(|s| {
+            bw_rows.entry(s).or_insert_with(|| {
+                nodes
+                    .iter()
+                    .map(|&nd| {
+                        let b = ctx.controller.path_bw_mb_s(s, nd, ctx.now);
+                        if b.is_infinite() {
+                            1e12
+                        } else {
+                            b as f32
+                        }
+                    })
+                    .collect()
+            }) as &Vec<f32>
+        });
+        for (j, &nd) in nodes.iter().enumerate() {
+            let k = i * n + j;
+            tp[k] = ctx.effective_compute(t, nd).0 as f32;
+            local[k] = if locals.contains(&nd) { 1.0 } else { 0.0 };
+            bw[k] = row.map_or(0.0, |r| r[j]);
+        }
+    }
+    let idle: Vec<f32> = nodes.iter().map(|&nd| ctx.ledger.idle(nd).0 as f32).collect();
+    CostInputs { m, n, sz, bw, tp, local, idle, ts: ctx.controller.calendar.slot_secs() as f32 }
+}
+
+/// Evaluate the batch through the configured backend (XLA artifact when
+/// available, Rust mirror otherwise).
+pub fn eval_batch(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostOutputs {
+    let inputs = build_inputs(tasks, ctx);
+    ctx.cost.eval(&inputs).expect("cost model evaluation")
+}
+
+/// Column index of `node` in the authorized set (cost-matrix order).
+pub fn col_of(ctx: &SchedCtx<'_>, node: NodeId) -> usize {
+    ctx.authorized.iter().position(|&n| n == node).expect("node not authorized")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Ledger;
+    use crate::runtime::CostModel;
+    use crate::hdfs::Namenode;
+    use crate::mapreduce::TaskSpec;
+    use crate::sdn::Controller;
+    use crate::topology::builders::fig2;
+    use crate::util::Secs;
+
+    fn fixture() -> (Controller, Namenode, Ledger, Vec<NodeId>) {
+        let f = fig2(102.4);
+        let ctrl = Controller::new(f.topo, 1.0);
+        let mut nn = Namenode::new();
+        // TK1's block: replicas ND2, ND3 (paper Example 1)
+        nn.add_block(64.0, vec![f.task_nodes[1], f.task_nodes[2]]);
+        let ledger =
+            Ledger::with_initial(vec![Secs(3.0), Secs(9.0), Secs(20.0), Secs(7.0), Secs::INF, Secs::INF]);
+        (ctrl, nn, ledger, f.task_nodes.to_vec())
+    }
+
+    #[test]
+    fn build_inputs_matches_paper_tk1() {
+        let (mut ctrl, nn, mut ledger, nodes) = fixture();
+        let cost = CostModel::rust_only();
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        let tasks =
+            vec![TaskSpec::map(0, crate::hdfs::BlockId(0), 64.0, Secs(9.0), 0.0)];
+        let inp = build_inputs(&tasks, &ctx);
+        assert_eq!((inp.m, inp.n), (1, 4));
+        assert_eq!(inp.local, vec![0.0, 1.0, 1.0, 0.0]);
+        assert_eq!(inp.idle, vec![3.0, 9.0, 20.0, 7.0]);
+        // source = least-loaded replica = ND2 (idle 9 < 20); bw ND2->ND1 = 12.8
+        assert!((inp.bw[0] - 12.8).abs() < 1e-6);
+        assert!(inp.bw[1] > 1e11); // local-ish: src == dst
+
+        let out = eval_batch(&tasks, &ctx);
+        assert_eq!(out.best_idx[0], 0); // the canonical BASS pick: ND1
+        assert_eq!(out.yc_at(0, 0), 17.0);
+        assert_eq!(out.yc_at(0, 1), 18.0);
+    }
+
+    #[test]
+    fn reduce_src_hint_is_local_column() {
+        let (mut ctrl, nn, mut ledger, nodes) = fixture();
+        let cost = CostModel::rust_only();
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        let tasks = vec![TaskSpec::reduce(0, 128.0, Secs(12.0)).with_src_hint(nodes[2])];
+        let inp = build_inputs(&tasks, &ctx);
+        assert_eq!(inp.local, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn reduce_without_hint_is_unreachable_everywhere() {
+        let (mut ctrl, nn, mut ledger, nodes) = fixture();
+        let cost = CostModel::rust_only();
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes,
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        let tasks = vec![TaskSpec::reduce(0, 128.0, Secs(12.0))];
+        let inp = build_inputs(&tasks, &ctx);
+        assert!(inp.bw.iter().all(|&b| b == 0.0));
+    }
+}

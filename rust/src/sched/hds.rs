@@ -1,0 +1,183 @@
+//! HDS — the Hadoop Default Scheduler (baseline).
+//!
+//! Node-driven greedy locality: whenever a node frees up, it grabs the
+//! first pending task that is data-local to it; if none exists it grabs
+//! the first pending task outright and pulls the split over the network
+//! ("if no data local task is available, HDS will choose a task
+//! randomly" — we use the deterministic lowest-id choice so the paper's
+//! Example 1 trace is exactly reproducible).
+
+use crate::mapreduce::TaskSpec;
+use crate::sdn::TrafficClass;
+use crate::sim::{Assignment, Placement, TransferPlan};
+use crate::util::Secs;
+
+use super::types::{SchedCtx, Scheduler};
+
+/// The Hadoop default scheduler.
+#[derive(Debug, Default)]
+pub struct Hds;
+
+impl Hds {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Scheduler for Hds {
+    fn name(&self) -> &'static str {
+        "HDS"
+    }
+
+    fn schedule(
+        &mut self,
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Assignment {
+        let mut pending: Vec<usize> = (0..tasks.len()).collect();
+        let mut placements = Vec::with_capacity(tasks.len());
+        let floor = gate.unwrap_or(ctx.now).max(ctx.now);
+        while !pending.is_empty() {
+            let (j, idle) = ctx
+                .ledger
+                .min_idle_among(ctx.authorized.iter().copied())
+                .expect("no authorized nodes");
+            let t0 = idle.max(floor);
+            // first pending task local to j (lowest id — pending stays sorted)
+            let local_pick =
+                pending.iter().copied().find(|&i| ctx.local_nodes(&tasks[i]).contains(&j));
+            let (i, is_local) = match local_pick {
+                Some(i) => (i, true),
+                None => (pending[0], false),
+            };
+            pending.retain(|&x| x != i);
+            let t = &tasks[i];
+            let tp = ctx.effective_compute(t, j);
+            if is_local || t.input_mb <= 0.0 {
+                let finish = t0 + tp;
+                ctx.ledger.occupy_until(j, finish);
+                placements.push(Placement {
+                    task: t.id,
+                    node: j,
+                    compute: tp,
+                    transfer: TransferPlan::None,
+                    gate,
+                    is_local,
+                    is_map: t.is_map(),
+                });
+            } else {
+                let src = ctx.transfer_source(t).expect("remote task needs a source");
+                let tm = ctx.tm_estimate(src, j, t.input_mb).unwrap_or(Secs::INF);
+                let finish = t0 + tm + tp;
+                ctx.ledger.occupy_until(j, finish);
+                let path = ctx
+                    .controller
+                    .path(src, j)
+                    .map(|p| p.to_vec())
+                    .unwrap_or_default();
+                let class =
+                    if t.is_map() { TrafficClass::HadoopOther } else { TrafficClass::Shuffle };
+                placements.push(Placement {
+                    task: t.id,
+                    node: j,
+                    compute: tp,
+                    transfer: TransferPlan::FairShare { path, size_mb: t.input_mb, class },
+                    gate,
+                    is_local: false,
+                    is_map: t.is_map(),
+                });
+            }
+        }
+        Assignment { placements }
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::cluster::Ledger;
+    use crate::hdfs::Namenode;
+    use crate::mapreduce::TaskId;
+    use crate::runtime::CostModel;
+    use crate::sdn::Controller;
+    use crate::topology::builders::fig2;
+    use crate::topology::NodeId;
+
+    /// Canonical Example 1 fixture + helpers (shared with examples and
+    /// benches) — see [`crate::experiments::fixtures`].
+    pub use crate::experiments::fixtures::{
+        example1_fixture as example1, makespan, Example1Fixture as Example1,
+    };
+
+    #[test]
+    fn hds_reproduces_paper_39s() {
+        let mut ex = example1();
+        let cost = CostModel::rust_only();
+        let mut ctx = SchedCtx {
+            controller: &mut ex.ctrl,
+            namenode: &ex.nn,
+            ledger: &mut ex.ledger,
+            authorized: ex.nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        let a = Hds::new().schedule(&ex.tasks, None, &mut ctx);
+        assert_eq!(a.placements.len(), 9);
+        // paper Fig 3(b): ND1 x3 (TK2,TK3,TK7), ND2 x2 (TK1,TK6),
+        // ND3 x1 (TK4), ND4 x3 (TK5,TK8,TK9-remote)
+        let on = |n: usize| -> Vec<usize> {
+            a.placements.iter().filter(|p| p.node == ex.nodes[n]).map(|p| p.task.0).collect()
+        };
+        assert_eq!(on(0), vec![1, 2, 6]);
+        assert_eq!(on(1), vec![0, 5]);
+        assert_eq!(on(2), vec![3]);
+        assert_eq!(on(3), vec![4, 7, 8]);
+        // TK9 is the only remote task
+        let remote: Vec<usize> =
+            a.placements.iter().filter(|p| !p.is_local).map(|p| p.task.0).collect();
+        assert_eq!(remote, vec![8]);
+        // makespan estimate = 39s
+        assert!((makespan(ctx.ledger, &ex.nodes) - 39.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hds_all_local_when_possible() {
+        // single node holding every replica: everything is local
+        let mut ex = example1();
+        let cost = CostModel::rust_only();
+        let mut ctx = SchedCtx {
+            controller: &mut ex.ctrl,
+            namenode: &ex.nn,
+            ledger: &mut ex.ledger,
+            authorized: ex.nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        // tasks 0..8 minus TK9 are placeable locally under HDS
+        let a = Hds::new().schedule(&ex.tasks[..8], None, &mut ctx);
+        assert!(a.placements.iter().all(|p| p.is_local));
+    }
+
+    #[test]
+    fn hds_respects_gate() {
+        let mut ex = example1();
+        let cost = CostModel::rust_only();
+        let mut ctx = SchedCtx {
+            controller: &mut ex.ctrl,
+            namenode: &ex.nn,
+            ledger: &mut ex.ledger,
+            authorized: ex.nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+        };
+        let a = Hds::new().schedule(&ex.tasks[..1], Some(Secs(50.0)), &mut ctx);
+        assert_eq!(a.placements[0].gate, Some(Secs(50.0)));
+        // ledger reflects the gate: finish >= 59
+        let n = a.placements[0].node;
+        assert!(ctx.ledger.idle(n).0 >= 59.0);
+    }
+}

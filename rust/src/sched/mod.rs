@@ -1,0 +1,24 @@
+//! The paper's contribution: task schedulers.
+//!
+//! * [`hds`] — Hadoop Default Scheduler: node-driven greedy locality.
+//! * [`bar`] — BAlance-Reduce (Jin et al., CCGrid'11): HDS first phase +
+//!   global tuning of the latest task.
+//! * [`bass`] — **BASS** (Algorithm 1): bandwidth-aware local/remote
+//!   tradeoff with SDN time-slot reservations.
+//! * [`pre_bass`] — Pre-BASS (Discussion 2): BASS + input prefetching.
+//!
+//! All schedulers consume the same [`SchedCtx`] and emit a
+//! [`crate::sim::Assignment`] the engine can execute.
+
+pub mod bar;
+pub mod bass;
+pub mod cost;
+pub mod hds;
+pub mod pre_bass;
+pub mod types;
+
+pub use bar::Bar;
+pub use bass::Bass;
+pub use hds::Hds;
+pub use pre_bass::PreBass;
+pub use types::{SchedCtx, Scheduler};

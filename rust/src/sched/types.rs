@@ -1,0 +1,88 @@
+//! Scheduler trait and shared context.
+
+use crate::cluster::Ledger;
+use crate::hdfs::Namenode;
+use crate::mapreduce::TaskSpec;
+use crate::runtime::CostModel;
+use crate::sdn::Controller;
+use crate::sim::Assignment;
+use crate::topology::NodeId;
+use crate::util::Secs;
+
+/// Everything a scheduler may look at / mutate while assigning one batch
+/// of tasks. The ledger and controller are *live*: placements update them
+/// so subsequent batches (e.g. the reduce phase) see the load.
+pub struct SchedCtx<'a> {
+    pub controller: &'a mut Controller,
+    pub namenode: &'a Namenode,
+    pub ledger: &'a mut Ledger,
+    /// Nodes this job may use (the paper's shared-cluster subset; Case 2
+    /// locality-starvation arises when replicas fall outside this set).
+    pub authorized: Vec<NodeId>,
+    pub now: Secs,
+    pub cost: &'a CostModel,
+    /// Per-node compute-speed factors (Guo & Fox [14]-style heterogeneous
+    /// clusters): `TP_{i,j} = t.compute * speed[j]`. Empty = homogeneous.
+    pub node_speed: Vec<f64>,
+}
+
+impl<'a> SchedCtx<'a> {
+    /// `TP_{i,j}` for a task on a node (the heterogeneity hook).
+    pub fn effective_compute(&self, t: &TaskSpec, node: NodeId) -> Secs {
+        match self.node_speed.get(node.0) {
+            Some(&f) if f > 0.0 => Secs(t.compute.0 * f),
+            _ => t.compute,
+        }
+    }
+
+    /// Local candidates of a task within the authorized set.
+    pub fn local_nodes(&self, t: &TaskSpec) -> Vec<NodeId> {
+        match t.input {
+            Some(b) => self.namenode.local_candidates(b, &self.authorized).collect(),
+            None => match t.src_hint {
+                // a reduce is "local" where its shuffle majority sits
+                Some(s) if self.authorized.contains(&s) => vec![s],
+                _ => vec![],
+            },
+        }
+    }
+
+    /// The replica to pull from when running remotely (Discussion 2:
+    /// least-loaded holder). Reduces use their src_hint.
+    pub fn transfer_source(&self, t: &TaskSpec) -> Option<NodeId> {
+        match t.input {
+            Some(b) => {
+                Some(self.namenode.least_loaded_replica(b, |n| self.ledger.idle(n).0))
+            }
+            None => t.src_hint,
+        }
+    }
+
+    /// Nominal transfer time estimate at current line rates (no slot
+    /// reservation; what HDS/BAR reason with). `None` if unroutable.
+    pub fn tm_estimate(&self, src: NodeId, dst: NodeId, size_mb: f64) -> Option<Secs> {
+        if src == dst || size_mb <= 0.0 {
+            return Some(Secs::ZERO);
+        }
+        let links = self.controller.path(src, dst)?;
+        let cap = self.controller.path_capacity_mb_s(links);
+        if cap <= 0.0 {
+            return None;
+        }
+        Some(Secs(size_mb / cap))
+    }
+}
+
+/// A task scheduler (one of the paper's four).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Assign `tasks`, mutating the ledger/controller through `ctx`.
+    /// `gate` carries the earliest start for this batch (reduce phases).
+    fn schedule(
+        &mut self,
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Assignment;
+}

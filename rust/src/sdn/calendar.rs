@@ -1,0 +1,339 @@
+//! Time-Slot bandwidth calendars (Section IV-A of the paper).
+//!
+//! Before scheduling starts, "the occupation time of each link's residue
+//! bandwidth is disintegrated into equal time slots TS_1, TS_2, ...",
+//! whose duration is a tunable parameter (1s in the paper's examples).
+//! A task that needs to move data over a path during `(t_m, t_n)` gets
+//! the corresponding slots reserved **on every link of the path** in
+//! advance; after the transfer the slots are released back.
+//!
+//! [`SlotCalendar`] stores, per link, the reserved bandwidth fraction of
+//! each future slot; reservations never oversubscribe a slot.
+
+use crate::topology::LinkId;
+use crate::util::Secs;
+
+/// Safety cap on how far into the future a window search may walk.
+const MAX_SEARCH_SLOTS: usize = 4_000_000;
+
+/// A granted path reservation (returned by [`SlotCalendar::reserve_path`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reservation {
+    pub links: Vec<LinkId>,
+    /// First reserved slot index.
+    pub start_slot: usize,
+    /// Number of consecutive slots reserved.
+    pub n_slots: usize,
+    /// Reserved fraction of each link's capacity, in (0, 1].
+    pub frac: f64,
+}
+
+impl Reservation {
+    /// Wall-clock start of the reservation window.
+    pub fn start(&self, slot_secs: f64) -> Secs {
+        Secs(self.start_slot as f64 * slot_secs)
+    }
+
+    /// Wall-clock end of the reservation window.
+    pub fn end(&self, slot_secs: f64) -> Secs {
+        Secs((self.start_slot + self.n_slots) as f64 * slot_secs)
+    }
+}
+
+/// Per-link slot reservation ledgers.
+#[derive(Debug, Clone)]
+pub struct SlotCalendar {
+    slot_secs: f64,
+    /// reserved[link][slot] = fraction of capacity already promised.
+    reserved: Vec<Vec<f64>>,
+}
+
+impl SlotCalendar {
+    /// `slot_secs` is the tunable TS duration (1.0 in the paper).
+    pub fn new(n_links: usize, slot_secs: f64) -> Self {
+        assert!(slot_secs > 0.0, "slot duration must be positive");
+        Self { slot_secs, reserved: vec![Vec::new(); n_links] }
+    }
+
+    pub fn slot_secs(&self) -> f64 {
+        self.slot_secs
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.reserved.len()
+    }
+
+    /// Slot index containing time `t`.
+    pub fn slot_of(&self, t: Secs) -> usize {
+        assert!(t.0 >= 0.0, "negative time");
+        (t.0 / self.slot_secs).floor() as usize
+    }
+
+    /// Number of slots needed to move `size_mb` at `rate_mb_s`.
+    pub fn slots_for(&self, size_mb: f64, rate_mb_s: f64) -> usize {
+        assert!(rate_mb_s > 0.0);
+        ((size_mb / rate_mb_s) / self.slot_secs).ceil().max(0.0) as usize
+    }
+
+    /// Reserved fraction of `link` during `slot` (0 if untouched).
+    pub fn reserved_frac(&self, link: LinkId, slot: usize) -> f64 {
+        self.reserved[link.0].get(slot).copied().unwrap_or(0.0)
+    }
+
+    /// Residual (unreserved) fraction of `link` during `slot`.
+    pub fn residual_frac(&self, link: LinkId, slot: usize) -> f64 {
+        (1.0 - self.reserved_frac(link, slot)).max(0.0)
+    }
+
+    /// Min residual fraction over a path during `[start, start + n)`.
+    pub fn path_residual(&self, links: &[LinkId], start: usize, n: usize) -> f64 {
+        let mut min = 1.0f64;
+        for &l in links {
+            for s in start..start + n {
+                min = min.min(self.residual_frac(l, s));
+                if min <= 0.0 {
+                    return 0.0;
+                }
+            }
+        }
+        min
+    }
+
+    fn ensure_len(&mut self, link: LinkId, upto: usize) {
+        let v = &mut self.reserved[link.0];
+        if v.len() < upto {
+            v.resize(upto, 0.0);
+        }
+    }
+
+    /// Reserve `frac` of every link on `links` for slots
+    /// `[start, start + n)`. Fails (leaving the calendar untouched) if any
+    /// slot lacks the residual.
+    pub fn reserve_path(
+        &mut self,
+        links: &[LinkId],
+        start: usize,
+        n: usize,
+        frac: f64,
+    ) -> anyhow::Result<Reservation> {
+        anyhow::ensure!(frac > 0.0 && frac <= 1.0, "frac out of (0,1]: {frac}");
+        anyhow::ensure!(n > 0, "empty reservation window");
+        const EPS: f64 = 1e-9;
+        if self.path_residual(links, start, n) + EPS < frac {
+            anyhow::bail!(
+                "insufficient residual bandwidth on path {links:?} slots {start}..{}",
+                start + n
+            );
+        }
+        for &l in links {
+            self.ensure_len(l, start + n);
+            for s in start..start + n {
+                self.reserved[l.0][s] = (self.reserved[l.0][s] + frac).min(1.0);
+            }
+        }
+        Ok(Reservation { links: links.to_vec(), start_slot: start, n_slots: n, frac })
+    }
+
+    /// Release a previous reservation (idempotence is the caller's duty).
+    pub fn release(&mut self, r: &Reservation) {
+        for &l in &r.links {
+            for s in r.start_slot..r.start_slot + r.n_slots {
+                if let Some(x) = self.reserved[l.0].get_mut(s) {
+                    *x = (*x - r.frac).max(0.0);
+                }
+            }
+        }
+    }
+
+    /// Earliest start slot `>= earliest` where every link on the path can
+    /// give `frac` for `n` consecutive slots.
+    pub fn find_window(
+        &self,
+        links: &[LinkId],
+        earliest: usize,
+        n: usize,
+        frac: f64,
+    ) -> Option<usize> {
+        const EPS: f64 = 1e-9;
+        let mut s = earliest;
+        while s < earliest + MAX_SEARCH_SLOTS {
+            // find first violating slot in window; jump past it
+            let mut ok = true;
+            'outer: for off in 0..n {
+                for &l in links {
+                    if self.residual_frac(l, s + off) + EPS < frac {
+                        s = s + off + 1;
+                        ok = false;
+                        break 'outer;
+                    }
+                }
+            }
+            if ok {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// The paper's "most residue bandwidth" policy: starting at `earliest`,
+    /// find the window that moves `size_mb` soonest, grabbing the full
+    /// residual fraction of the path (at least `min_frac`). The window
+    /// length depends on the grabbed rate, so the search fixes-points on
+    /// (start, rate, length). Returns the reservation to apply.
+    ///
+    /// `capacity_mb_s` is the bottleneck line rate of the path in MB/s; the
+    /// granted rate is `frac * capacity_mb_s`.
+    pub fn plan_transfer(
+        &self,
+        links: &[LinkId],
+        earliest: Secs,
+        size_mb: f64,
+        capacity_mb_s: f64,
+        min_frac: f64,
+    ) -> Option<Reservation> {
+        assert!(capacity_mb_s > 0.0 && size_mb >= 0.0);
+        if size_mb == 0.0 || links.is_empty() {
+            return Some(Reservation {
+                links: links.to_vec(),
+                start_slot: self.slot_of(earliest),
+                n_slots: 0,
+                frac: 0.0,
+            });
+        }
+        let mut start = self.slot_of(earliest);
+        for _ in 0..MAX_SEARCH_SLOTS {
+            // rate available at the candidate start slot
+            let f0 = links
+                .iter()
+                .map(|&l| self.residual_frac(l, start))
+                .fold(1.0f64, f64::min);
+            if f0 < min_frac || f0 <= 0.0 {
+                start += 1;
+                continue;
+            }
+            // fixed-point on window length
+            let mut frac = f0;
+            let mut n = self.slots_for(size_mb, frac * capacity_mb_s);
+            loop {
+                let avail = self.path_residual(links, start, n.max(1));
+                if avail + 1e-9 >= frac {
+                    return Some(Reservation {
+                        links: links.to_vec(),
+                        start_slot: start,
+                        n_slots: n.max(1),
+                        frac,
+                    });
+                }
+                if avail < min_frac || avail <= 0.0 {
+                    break; // window blocked; advance start
+                }
+                frac = avail;
+                n = self.slots_for(size_mb, frac * capacity_mb_s);
+            }
+            start += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> SlotCalendar {
+        SlotCalendar::new(4, 1.0)
+    }
+
+    #[test]
+    fn slot_of_floors() {
+        let c = cal();
+        assert_eq!(c.slot_of(Secs(0.0)), 0);
+        assert_eq!(c.slot_of(Secs(0.99)), 0);
+        assert_eq!(c.slot_of(Secs(3.0)), 3);
+        assert_eq!(c.slot_of(Secs(3.5)), 3);
+    }
+
+    #[test]
+    fn slots_for_paper_example() {
+        // 64MB at 12.8 MB/s = 5.0s = 5 slots (Example 1)
+        let c = cal();
+        assert_eq!(c.slots_for(64.0, 12.8), 5);
+        // 64MB at 12.5 MB/s = 5.12s -> 6 slots
+        assert_eq!(c.slots_for(64.0, 12.5), 6);
+    }
+
+    #[test]
+    fn reserve_then_residual_drops() {
+        let mut c = cal();
+        let links = [LinkId(0), LinkId(2)];
+        let r = c.reserve_path(&links, 3, 5, 1.0).unwrap();
+        assert_eq!(r.start(1.0), Secs(3.0));
+        assert_eq!(r.end(1.0), Secs(8.0));
+        assert_eq!(c.residual_frac(LinkId(0), 4), 0.0);
+        assert_eq!(c.residual_frac(LinkId(1), 4), 1.0); // untouched link
+        assert_eq!(c.residual_frac(LinkId(0), 8), 1.0); // after the window
+    }
+
+    #[test]
+    fn oversubscription_rejected_and_atomic() {
+        let mut c = cal();
+        c.reserve_path(&[LinkId(0)], 0, 3, 0.7).unwrap();
+        // second reservation over same slots would need 0.4 -> rejected
+        assert!(c.reserve_path(&[LinkId(0), LinkId(1)], 1, 2, 0.4).is_err());
+        // atomicity: link 1 must be untouched by the failed attempt
+        assert_eq!(c.residual_frac(LinkId(1), 1), 1.0);
+    }
+
+    #[test]
+    fn release_restores() {
+        let mut c = cal();
+        let r = c.reserve_path(&[LinkId(0)], 2, 4, 0.5).unwrap();
+        c.release(&r);
+        assert_eq!(c.residual_frac(LinkId(0), 3), 1.0);
+    }
+
+    #[test]
+    fn find_window_skips_busy_slots() {
+        let mut c = cal();
+        c.reserve_path(&[LinkId(0)], 2, 3, 1.0).unwrap(); // busy 2..5
+        assert_eq!(c.find_window(&[LinkId(0)], 0, 2, 1.0), Some(0));
+        assert_eq!(c.find_window(&[LinkId(0)], 1, 2, 1.0), Some(5));
+        assert_eq!(c.find_window(&[LinkId(0)], 0, 3, 0.5), Some(5));
+    }
+
+    #[test]
+    fn plan_transfer_full_rate() {
+        let c = cal();
+        // Example 1: 64MB, bottleneck 12.8 MB/s, from t=3
+        let r = c
+            .plan_transfer(&[LinkId(0), LinkId(1)], Secs(3.0), 64.0, 12.8, 0.05)
+            .unwrap();
+        assert_eq!(r.start_slot, 3);
+        assert_eq!(r.n_slots, 5); // TS_4..TS_8 in the paper's 1-based naming
+        assert!((r.frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_transfer_degrades_rate_when_partially_reserved() {
+        let mut c = cal();
+        c.reserve_path(&[LinkId(0)], 0, 100, 0.5).unwrap();
+        let r = c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 0.05).unwrap();
+        assert!((r.frac - 0.5).abs() < 1e-12);
+        assert_eq!(r.n_slots, 10); // half rate, twice the slots
+    }
+
+    #[test]
+    fn plan_transfer_zero_size_is_instant() {
+        let c = cal();
+        let r = c.plan_transfer(&[LinkId(0)], Secs(7.0), 0.0, 12.8, 0.05).unwrap();
+        assert_eq!(r.n_slots, 0);
+        assert_eq!(r.start_slot, 7);
+    }
+
+    #[test]
+    fn plan_transfer_empty_path_local() {
+        let c = cal();
+        let r = c.plan_transfer(&[], Secs(1.0), 64.0, 12.8, 0.05).unwrap();
+        assert_eq!(r.n_slots, 0);
+    }
+}

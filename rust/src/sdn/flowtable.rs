@@ -1,0 +1,155 @@
+//! OpenFlow-style flow table: installed entries + per-entry counters.
+//!
+//! The simulator's controller installs one entry per admitted transfer
+//! (matching on src/dst host and traffic class, the way the paper's
+//! Example 3 adds "new flow entries to direct shuffling traffic to Q1").
+//! Counters feed the controller's link-statistics view.
+
+use crate::topology::{LinkId, NodeId};
+use crate::util::Secs;
+
+use super::qos::QueueId;
+
+/// Coarse traffic classes of the paper's Example 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrafficClass {
+    /// MapReduce shuffle traffic (highest priority in Example 3).
+    Shuffle,
+    /// Other Hadoop traffic: split movement, HDFS replication.
+    HadoopOther,
+    /// Non-Hadoop background traffic (lowest priority).
+    Background,
+}
+
+/// One installed flow entry.
+#[derive(Debug, Clone)]
+pub struct FlowEntry {
+    pub id: usize,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub class: TrafficClass,
+    pub path: Vec<LinkId>,
+    pub queue: Option<QueueId>,
+    pub installed_at: Secs,
+    /// Cumulative bytes forwarded (MB) — OpenFlow per-flow counter.
+    pub mb_forwarded: f64,
+}
+
+/// The controller's flow table.
+#[derive(Debug, Clone, Default)]
+pub struct FlowTable {
+    entries: Vec<FlowEntry>,
+    next_id: usize,
+}
+
+impl FlowTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install an entry; returns its id (flow cookie).
+    pub fn install(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        class: TrafficClass,
+        path: Vec<LinkId>,
+        queue: Option<QueueId>,
+        at: Secs,
+    ) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.push(FlowEntry {
+            id,
+            src,
+            dst,
+            class,
+            path,
+            queue,
+            installed_at: at,
+            mb_forwarded: 0.0,
+        });
+        id
+    }
+
+    /// Remove an entry (flow-removed message); returns it if present.
+    pub fn remove(&mut self, id: usize) -> Option<FlowEntry> {
+        let idx = self.entries.iter().position(|e| e.id == id)?;
+        Some(self.entries.swap_remove(idx))
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut FlowEntry> {
+        self.entries.iter_mut().find(|e| e.id == id)
+    }
+
+    pub fn get(&self, id: usize) -> Option<&FlowEntry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &FlowEntry> {
+        self.entries.iter()
+    }
+
+    /// Entries whose path crosses `link` (for port-stats aggregation).
+    pub fn on_link(&self, link: LinkId) -> impl Iterator<Item = &FlowEntry> {
+        self.entries.iter().filter(move |e| e.path.contains(&link))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_remove_roundtrip() {
+        let mut t = FlowTable::new();
+        let id = t.install(
+            NodeId(0),
+            NodeId(1),
+            TrafficClass::Shuffle,
+            vec![LinkId(0), LinkId(1)],
+            None,
+            Secs(1.0),
+        );
+        assert_eq!(t.len(), 1);
+        let e = t.remove(id).unwrap();
+        assert_eq!(e.src, NodeId(0));
+        assert!(t.is_empty());
+        assert!(t.remove(id).is_none());
+    }
+
+    #[test]
+    fn ids_are_unique_across_removals() {
+        let mut t = FlowTable::new();
+        let a = t.install(NodeId(0), NodeId(1), TrafficClass::Background, vec![], None, Secs(0.0));
+        t.remove(a);
+        let b = t.install(NodeId(0), NodeId(1), TrafficClass::Background, vec![], None, Secs(0.0));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn on_link_filters() {
+        let mut t = FlowTable::new();
+        t.install(NodeId(0), NodeId(1), TrafficClass::Shuffle, vec![LinkId(0)], None, Secs(0.0));
+        t.install(NodeId(2), NodeId(3), TrafficClass::Shuffle, vec![LinkId(1)], None, Secs(0.0));
+        assert_eq!(t.on_link(LinkId(0)).count(), 1);
+        assert_eq!(t.on_link(LinkId(7)).count(), 0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut t = FlowTable::new();
+        let id = t.install(NodeId(0), NodeId(1), TrafficClass::Shuffle, vec![LinkId(0)], None, Secs(0.0));
+        t.get_mut(id).unwrap().mb_forwarded += 64.0;
+        t.get_mut(id).unwrap().mb_forwarded += 32.0;
+        assert!((t.get(id).unwrap().mb_forwarded - 96.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! SDN substrate: the OpenFlow-style controller the paper leans on.
+//!
+//! The paper's BASS scheduler consumes three controller capabilities:
+//!
+//! 1. **Real-time residual bandwidth** `BW_rl` per link/path (OpenFlow
+//!    port stats) — [`controller::Controller::path_bw_mbps`].
+//! 2. **Time-Slot bandwidth allocation** (`SL_rl`, Section IV-A): each
+//!    link's future capacity is split into fixed-duration slots that the
+//!    scheduler reserves along a path before moving a split —
+//!    [`calendar::SlotCalendar`].
+//! 3. **QoS queues** (Discussion 3 / Example 3): per-class egress queues
+//!    (Q1/Q2/Q3) that prioritize shuffle traffic — [`qos`].
+
+pub mod calendar;
+pub mod controller;
+pub mod flowtable;
+pub mod qos;
+
+pub use calendar::{Reservation, SlotCalendar};
+pub use controller::Controller;
+pub use flowtable::{FlowEntry, FlowTable, TrafficClass};
+pub use qos::{QosPolicy, Queue, QueueId};

@@ -1,0 +1,168 @@
+//! OpenFlow QoS queues (Discussion 3 / Example 3 of the paper).
+//!
+//! Example 3 caps both OpenFlow switches at 150 Mbps and sets up three
+//! egress queues — Q1 = 100 Mbps (shuffle), Q2 = 40 Mbps (other Hadoop),
+//! Q3 = 10 Mbps (background) — versus the default scheme where all
+//! traffic shares the 150 Mbps fairly. [`QosPolicy`] captures both modes
+//! and answers "what rate does a flow of class C get when k flows of each
+//! class are active?", which is what the fluid flow model in
+//! [`crate::sim::flownet`] needs.
+
+use super::flowtable::TrafficClass;
+
+/// Queue identifier (index into the policy's queue list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QueueId(pub usize);
+
+/// One rate-limited egress queue.
+#[derive(Debug, Clone)]
+pub struct Queue {
+    pub id: QueueId,
+    pub rate_mbps: f64,
+    pub label: &'static str,
+}
+
+/// A per-switch QoS configuration.
+#[derive(Debug, Clone)]
+pub struct QosPolicy {
+    /// Total egress rate of the switch (paper: 150 Mbps).
+    pub max_rate_mbps: f64,
+    /// Rate-limited queues; empty = default single shared queue.
+    pub queues: Vec<Queue>,
+}
+
+impl QosPolicy {
+    /// The paper's Example 3 policy: Q1=100 (shuffle), Q2=40 (other),
+    /// Q3=10 (background) on a 150 Mbps switch.
+    pub fn example3() -> Self {
+        Self {
+            max_rate_mbps: 150.0,
+            queues: vec![
+                Queue { id: QueueId(0), rate_mbps: 100.0, label: "Q1-shuffle" },
+                Queue { id: QueueId(1), rate_mbps: 40.0, label: "Q2-hadoop" },
+                Queue { id: QueueId(2), rate_mbps: 10.0, label: "Q3-background" },
+            ],
+        }
+    }
+
+    /// The paper's default comparison: one shared queue at the max rate.
+    pub fn default_shared(max_rate_mbps: f64) -> Self {
+        Self { max_rate_mbps, queues: Vec::new() }
+    }
+
+    /// Queue a traffic class maps to (`None` in shared mode).
+    pub fn classify(&self, class: TrafficClass) -> Option<QueueId> {
+        if self.queues.is_empty() {
+            return None;
+        }
+        let idx = match class {
+            TrafficClass::Shuffle => 0,
+            TrafficClass::HadoopOther => 1,
+            TrafficClass::Background => 2,
+        };
+        Some(self.queues[idx.min(self.queues.len() - 1)].id)
+    }
+
+    /// Per-flow rate (Mbps) for a flow of `class` when `counts[c]` flows of
+    /// each class are concurrently active on the egress.
+    ///
+    /// Queued mode: each queue's rate is split fairly among its own flows;
+    /// shared mode: the max rate is split fairly among all flows.
+    pub fn flow_rate_mbps(&self, class: TrafficClass, counts: &ClassCounts) -> f64 {
+        let total = counts.total();
+        if total == 0 {
+            return 0.0;
+        }
+        if self.queues.is_empty() {
+            return self.max_rate_mbps / total as f64;
+        }
+        let q = &self.queues[self.classify(class).expect("queued mode").0];
+        let in_class = counts.get(class).max(1);
+        q.rate_mbps / in_class as f64
+    }
+}
+
+/// Active-flow counts per class on one egress.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassCounts {
+    pub shuffle: usize,
+    pub hadoop_other: usize,
+    pub background: usize,
+}
+
+impl ClassCounts {
+    pub fn get(&self, c: TrafficClass) -> usize {
+        match c {
+            TrafficClass::Shuffle => self.shuffle,
+            TrafficClass::HadoopOther => self.hadoop_other,
+            TrafficClass::Background => self.background,
+        }
+    }
+
+    pub fn add(&mut self, c: TrafficClass) {
+        match c {
+            TrafficClass::Shuffle => self.shuffle += 1,
+            TrafficClass::HadoopOther => self.hadoop_other += 1,
+            TrafficClass::Background => self.background += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.shuffle + self.hadoop_other + self.background
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example3_shape() {
+        let p = QosPolicy::example3();
+        assert_eq!(p.max_rate_mbps, 150.0);
+        let rates: Vec<f64> = p.queues.iter().map(|q| q.rate_mbps).collect();
+        assert_eq!(rates, vec![100.0, 40.0, 10.0]);
+    }
+
+    #[test]
+    fn classify_maps_paper_classes() {
+        let p = QosPolicy::example3();
+        assert_eq!(p.classify(TrafficClass::Shuffle), Some(QueueId(0)));
+        assert_eq!(p.classify(TrafficClass::HadoopOther), Some(QueueId(1)));
+        assert_eq!(p.classify(TrafficClass::Background), Some(QueueId(2)));
+        let shared = QosPolicy::default_shared(150.0);
+        assert_eq!(shared.classify(TrafficClass::Shuffle), None);
+    }
+
+    #[test]
+    fn queued_mode_isolates_shuffle_from_background() {
+        let p = QosPolicy::example3();
+        let counts =
+            ClassCounts { shuffle: 1, hadoop_other: 0, background: 10 };
+        // shuffle keeps its full 100 Mbps despite 10 background flows
+        assert_eq!(p.flow_rate_mbps(TrafficClass::Shuffle, &counts), 100.0);
+        assert_eq!(p.flow_rate_mbps(TrafficClass::Background, &counts), 1.0);
+    }
+
+    #[test]
+    fn shared_mode_dilutes_shuffle() {
+        let p = QosPolicy::default_shared(150.0);
+        let counts =
+            ClassCounts { shuffle: 1, hadoop_other: 0, background: 10 };
+        let r = p.flow_rate_mbps(TrafficClass::Shuffle, &counts);
+        assert!((r - 150.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fair_split_within_queue() {
+        let p = QosPolicy::example3();
+        let counts = ClassCounts { shuffle: 4, hadoop_other: 0, background: 0 };
+        assert_eq!(p.flow_rate_mbps(TrafficClass::Shuffle, &counts), 25.0);
+    }
+
+    #[test]
+    fn zero_flows_zero_rate() {
+        let p = QosPolicy::example3();
+        assert_eq!(p.flow_rate_mbps(TrafficClass::Shuffle, &ClassCounts::default()), 0.0);
+    }
+}

@@ -1,0 +1,435 @@
+//! Event-driven executor: plays a scheduler's assignment on the cluster.
+//!
+//! Each node runs its placements serially in assignment order (the
+//! paper's single-slot node model). A placement may carry a transfer:
+//!
+//! * [`TransferPlan::None`] — data-local, compute starts when the node is
+//!   free (Eq. 1's `TM = 0` case).
+//! * [`TransferPlan::Reserved`] — BASS: the SDN controller already
+//!   reserved time slots; arrival time is deterministic.
+//! * [`TransferPlan::Prefetched`] — Pre-BASS: like Reserved, but the data
+//!   may land *before* the node frees up; compute starts at
+//!   `max(node_free, arrival)`.
+//! * [`TransferPlan::FairShare`] — HDS/BAR (and shuffle traffic): the
+//!   transfer contends in the [`FlowNet`] and takes however long max-min
+//!   sharing allows.
+//!
+//! The engine produces [`TaskRecord`]s; the metrics layer derives MT/RT/
+//! JT/LR (Table I) and per-node timelines (Fig. 3) from them.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::mapreduce::TaskId;
+use crate::sdn::controller::Transfer;
+use crate::sdn::TrafficClass;
+use crate::topology::{LinkId, NodeId};
+use crate::util::Secs;
+
+use super::flownet::{FlowId, FlowNet};
+
+/// How a placement's input gets to the node.
+#[derive(Debug, Clone)]
+pub enum TransferPlan {
+    /// Data-local (or zero input).
+    None,
+    /// Slot-reserved transfer (BASS): deterministic window.
+    Reserved(Transfer),
+    /// Slot-reserved prefetch (Pre-BASS): may complete before node frees.
+    Prefetched(Transfer),
+    /// Contended transfer through the flow network (HDS/BAR, shuffle).
+    /// `path` is the route the scheduler resolved for src -> node.
+    FairShare { path: Vec<LinkId>, size_mb: f64, class: TrafficClass },
+}
+
+/// One task placed on one node.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub task: TaskId,
+    pub node: NodeId,
+    pub compute: Secs,
+    pub transfer: TransferPlan,
+    /// Earliest time the placement may *start* (used to gate reduces on
+    /// the map phase / slowstart point). `None` = no gate.
+    pub gate: Option<Secs>,
+    /// Whether this counts as data-local for the LR metric.
+    pub is_local: bool,
+    /// Map task? (for MT vs RT attribution)
+    pub is_map: bool,
+}
+
+/// A full job assignment: per-node execution queues are derived from the
+/// placement order.
+#[derive(Debug, Clone, Default)]
+pub struct Assignment {
+    pub placements: Vec<Placement>,
+}
+
+impl Assignment {
+    /// Data-locality ratio over map placements (Table I's `LR`).
+    pub fn locality_ratio(&self) -> f64 {
+        let maps: Vec<_> = self.placements.iter().filter(|p| p.is_map).collect();
+        if maps.is_empty() {
+            return 1.0;
+        }
+        maps.iter().filter(|p| p.is_local).count() as f64 / maps.len() as f64
+    }
+}
+
+/// Execution record for one task.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub node: NodeId,
+    /// When the node picked the placement up.
+    pub picked_at: Secs,
+    /// When its input was fully present.
+    pub input_ready: Secs,
+    /// Compute start.
+    pub compute_start: Secs,
+    /// Completion time (`ΥC`).
+    pub finish: Secs,
+    pub is_local: bool,
+    pub is_map: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EvKind {
+    NodeReady(usize),
+    FlowCheck(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Ev {
+    at: Secs,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The executor.
+pub struct Engine {
+    pub net: FlowNet,
+    now: Secs,
+    seq: u64,
+    events: BinaryHeap<Reverse<Ev>>,
+    /// Per-node pending placement queues.
+    queues: Vec<VecDeque<Placement>>,
+    node_free: Vec<Secs>,
+    /// True while the node is driving a fair-share transfer.
+    blocked: Vec<bool>,
+    /// Flow -> (node, placement, picked_at) waiting on that flow.
+    waiting: HashMap<FlowId, (usize, Placement, Secs)>,
+    records: Vec<TaskRecord>,
+    flow_gen: u64,
+}
+
+impl Engine {
+    /// `initial_free[j]` is node j's initial workload (`ΥI_j` at t=0).
+    pub fn new(net: FlowNet, initial_free: Vec<Secs>) -> Self {
+        let n = initial_free.len();
+        Self {
+            net,
+            now: Secs::ZERO,
+            seq: 0,
+            events: BinaryHeap::new(),
+            queues: vec![VecDeque::new(); n],
+            node_free: initial_free,
+            blocked: vec![false; n],
+            waiting: HashMap::new(),
+            records: Vec::new(),
+            flow_gen: 0,
+        }
+    }
+
+    pub fn now(&self) -> Secs {
+        self.now
+    }
+
+    fn push(&mut self, at: Secs, kind: EvKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Ev { at, seq: self.seq, kind }));
+    }
+
+    /// Load an assignment: placements are appended to their node queues in
+    /// order, and every node gets a wake-up at its free time.
+    pub fn load(&mut self, a: &Assignment) {
+        for p in &a.placements {
+            assert!(p.node.0 < self.queues.len(), "placement on unknown node");
+            self.queues[p.node.0].push_back(p.clone());
+        }
+        for j in 0..self.queues.len() {
+            let at = self.node_free[j].max(self.now);
+            self.push(at, EvKind::NodeReady(j));
+        }
+    }
+
+    fn reschedule_flow_check(&mut self) {
+        if let Some((t, _)) = self.net.next_completion() {
+            self.flow_gen += 1;
+            self.push(t.max(self.now), EvKind::FlowCheck(self.flow_gen));
+        }
+    }
+
+    /// Run until quiescent; returns the records (sorted by task id).
+    pub fn run(&mut self) -> Vec<TaskRecord> {
+        while let Some(Reverse(ev)) = self.events.pop() {
+            self.now = self.now.max(ev.at);
+            self.net.settle(self.now);
+            match ev.kind {
+                EvKind::NodeReady(j) => self.node_ready(j),
+                EvKind::FlowCheck(gen) => {
+                    if gen == self.flow_gen {
+                        self.flow_check();
+                    }
+                }
+            }
+        }
+        assert!(
+            self.waiting.is_empty() && self.queues.iter().all(|q| q.is_empty()),
+            "engine quiesced with pending work (starved transfer?)"
+        );
+        let mut recs = std::mem::take(&mut self.records);
+        recs.sort_by_key(|r| r.task);
+        recs
+    }
+
+    /// A node may be able to start its next placement.
+    fn node_ready(&mut self, j: usize) {
+        if self.blocked[j] {
+            return; // transfer in flight; flow completion will resume us
+        }
+        if self.node_free[j] > self.now {
+            // stale wake-up — re-arm at the true free time
+            let at = self.node_free[j];
+            self.push(at, EvKind::NodeReady(j));
+            return;
+        }
+        let Some(p) = self.queues[j].front().cloned() else { return };
+        if let Some(g) = p.gate {
+            if g > self.now {
+                self.push(g, EvKind::NodeReady(j));
+                return;
+            }
+        }
+        self.queues[j].pop_front();
+        let picked = self.now;
+        match p.transfer.clone() {
+            TransferPlan::None => {
+                self.finish_compute(j, &p, picked, picked, picked);
+            }
+            TransferPlan::Reserved(t) => {
+                // transfer occupies the node from pick-up until arrival
+                let ready = t.arrival.max(picked);
+                self.finish_compute(j, &p, picked, ready, ready);
+            }
+            TransferPlan::Prefetched(t) => {
+                // data may already be there; node only waits if not
+                let ready = t.arrival;
+                let start = ready.max(picked);
+                self.finish_compute(j, &p, picked, ready, start);
+            }
+            TransferPlan::FairShare { path, size_mb, class } => {
+                if size_mb <= 0.0 || path.is_empty() {
+                    self.finish_compute(j, &p, picked, picked, picked);
+                } else {
+                    let id = self.net.add_flow(path, size_mb, class);
+                    self.blocked[j] = true;
+                    self.waiting.insert(id, (j, p, picked));
+                    self.reschedule_flow_check();
+                }
+            }
+        }
+    }
+
+    fn finish_compute(&mut self, j: usize, p: &Placement, picked: Secs, ready: Secs, start: Secs) {
+        let finish = start + p.compute;
+        self.node_free[j] = finish;
+        self.records.push(TaskRecord {
+            task: p.task,
+            node: p.node,
+            picked_at: picked,
+            input_ready: ready,
+            compute_start: start,
+            finish,
+            is_local: p.is_local,
+            is_map: p.is_map,
+        });
+        self.push(finish, EvKind::NodeReady(j));
+    }
+
+    /// Handle completed flows.
+    fn flow_check(&mut self) {
+        for id in self.net.finished() {
+            self.net.remove_flow(id);
+            if let Some((j, p, picked)) = self.waiting.remove(&id) {
+                self.blocked[j] = false;
+                self.node_free[j] = self.now;
+                self.finish_compute(j, &p, picked, self.now, self.now);
+            }
+        }
+        self.reschedule_flow_check();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdn::controller::Transfer;
+    use crate::sdn::calendar::Reservation;
+
+    fn placement(task: usize, node: usize, compute: f64, transfer: TransferPlan) -> Placement {
+        let is_local = matches!(transfer, TransferPlan::None);
+        Placement {
+            task: TaskId(task),
+            node: NodeId(node),
+            compute: Secs(compute),
+            transfer,
+            gate: None,
+            is_local,
+            is_map: true,
+        }
+    }
+
+    fn reserved(arrival: f64) -> TransferPlan {
+        TransferPlan::Reserved(Transfer {
+            flow_id: 0,
+            reservation: Reservation { links: vec![], start_slot: 0, n_slots: 0, frac: 1.0 },
+            rate_mb_s: 12.8,
+            arrival: Secs(arrival),
+            start: Secs(arrival - 5.0),
+        })
+    }
+
+    #[test]
+    fn local_tasks_run_serially_from_initial_load() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs(3.0)]);
+        let a = Assignment {
+            placements: vec![
+                placement(0, 0, 9.0, TransferPlan::None),
+                placement(1, 0, 9.0, TransferPlan::None),
+            ],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].compute_start, Secs(3.0));
+        assert_eq!(recs[0].finish, Secs(12.0));
+        assert_eq!(recs[1].finish, Secs(21.0));
+    }
+
+    #[test]
+    fn reserved_transfer_blocks_node_until_arrival() {
+        // Example 1 TK1 on ND1: idle 3, transfer lands at 8, compute 9 -> 17
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs(3.0)]);
+        let a = Assignment { placements: vec![placement(0, 0, 9.0, reserved(8.0))] };
+        e.load(&a);
+        let recs = e.run();
+        assert_eq!(recs[0].compute_start, Secs(8.0));
+        assert_eq!(recs[0].finish, Secs(17.0));
+    }
+
+    #[test]
+    fn prefetched_data_saves_wait() {
+        // Example 2: data prefetched by t=5; node idle at 3 -> start at 5
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs(3.0)]);
+        let mut p = placement(0, 0, 9.0, TransferPlan::Prefetched(match reserved(5.0) {
+            TransferPlan::Reserved(t) => t,
+            _ => unreachable!(),
+        }));
+        p.is_local = false;
+        let a = Assignment { placements: vec![p] };
+        e.load(&a);
+        let recs = e.run();
+        assert_eq!(recs[0].compute_start, Secs(5.0));
+        assert_eq!(recs[0].finish, Secs(14.0));
+    }
+
+    #[test]
+    fn fair_share_transfer_contends() {
+        // two nodes each pull 50MB over the same 80Mbps (10MB/s) link:
+        // shared 5MB/s each -> both flows end at t=10, compute 1s -> 11
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO, Secs::ZERO]);
+        let fs = |_n: usize| TransferPlan::FairShare {
+            path: vec![LinkId(0)],
+            size_mb: 50.0,
+            class: TrafficClass::HadoopOther,
+        };
+        let a = Assignment {
+            placements: vec![placement(0, 0, 1.0, fs(0)), placement(1, 1, 1.0, fs(1))],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert!((recs[0].input_ready.0 - 10.0).abs() < 1e-9);
+        assert!((recs[1].input_ready.0 - 10.0).abs() < 1e-9);
+        assert!((recs[0].finish.0 - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_share_solo_gets_full_rate() {
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        let a = Assignment {
+            placements: vec![placement(0, 0, 2.0, TransferPlan::FairShare {
+                path: vec![LinkId(0)],
+                size_mb: 50.0,
+                class: TrafficClass::HadoopOther,
+            })],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert!((recs[0].input_ready.0 - 5.0).abs() < 1e-9);
+        assert!((recs[0].finish.0 - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gate_delays_start() {
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        let mut p = placement(0, 0, 2.0, TransferPlan::None);
+        p.gate = Some(Secs(10.0));
+        e.load(&Assignment { placements: vec![p] });
+        let recs = e.run();
+        assert_eq!(recs[0].compute_start, Secs(10.0));
+        assert_eq!(recs[0].finish, Secs(12.0));
+    }
+
+    #[test]
+    fn gate_blocks_queue_order() {
+        // gated head placement holds back the one behind it (FIFO node)
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        let mut p0 = placement(0, 0, 2.0, TransferPlan::None);
+        p0.gate = Some(Secs(5.0));
+        let p1 = placement(1, 0, 2.0, TransferPlan::None);
+        e.load(&Assignment { placements: vec![p0, p1] });
+        let recs = e.run();
+        assert_eq!(recs[0].compute_start, Secs(5.0));
+        assert_eq!(recs[1].compute_start, Secs(7.0));
+    }
+
+    #[test]
+    fn locality_ratio() {
+        let mut p0 = placement(0, 0, 1.0, TransferPlan::None);
+        p0.is_local = true;
+        let mut p1 = placement(1, 0, 1.0, TransferPlan::None);
+        p1.is_local = false;
+        let a = Assignment { placements: vec![p0, p1] };
+        assert!((a.locality_ratio() - 0.5).abs() < 1e-12);
+    }
+}

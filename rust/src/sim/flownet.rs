@@ -1,0 +1,391 @@
+//! Fluid flow model with max-min fair sharing and optional QoS queues.
+//!
+//! Flows are (path, remaining MB, class). Rates are recomputed by
+//! progressive filling whenever the flow set changes:
+//!
+//! * shared mode — classic max-min over every link's full capacity;
+//! * QoS mode (Example 3) — the switch queues partition each link into
+//!   per-class capacities (Q1/Q2/Q3), and max-min runs within each class.
+//!
+//! Static background load is modeled as ever-running flows with infinite
+//! remaining volume, so foreground Hadoop traffic feels the contention.
+
+use std::collections::HashMap;
+
+use crate::sdn::qos::QosPolicy;
+use crate::sdn::TrafficClass;
+use crate::topology::LinkId;
+use crate::util::{mbps_to_mb_per_s, Secs};
+
+/// Flow identifier within a [`FlowNet`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowId(pub u64);
+
+#[derive(Debug, Clone)]
+struct Flow {
+    path: Vec<LinkId>,
+    remaining_mb: f64,
+    class: TrafficClass,
+    rate_mb_s: f64,
+    /// SDN-enforced rate cap (background flows are rate-limited by the
+    /// controller so the static `BW_rl` view stays truthful).
+    max_rate_mb_s: f64,
+}
+
+/// The fluid network.
+#[derive(Debug, Clone)]
+pub struct FlowNet {
+    /// Per-link capacity, MB/s.
+    link_cap_mb_s: Vec<f64>,
+    qos: Option<QosPolicy>,
+    flows: HashMap<FlowId, Flow>,
+    next_id: u64,
+    /// Last time `settle` ran; rates are valid from here.
+    clock: Secs,
+}
+
+impl FlowNet {
+    pub fn new(link_caps_mbps: &[f64]) -> Self {
+        Self {
+            link_cap_mb_s: link_caps_mbps.iter().map(|&c| mbps_to_mb_per_s(c)).collect(),
+            qos: None,
+            flows: HashMap::new(),
+            next_id: 0,
+            clock: Secs::ZERO,
+        }
+    }
+
+    /// Install a QoS policy (per-class link partitions).
+    pub fn set_qos(&mut self, policy: QosPolicy) {
+        self.qos = Some(policy);
+        self.recompute();
+    }
+
+    pub fn clock(&self) -> Secs {
+        self.clock
+    }
+
+    pub fn n_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    pub fn rate_of(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.rate_mb_s)
+    }
+
+    pub fn remaining_of(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.remaining_mb)
+    }
+
+    /// Advance all flows to `now` at their current rates. `now` must be
+    /// monotone. Flows that hit zero are NOT removed here — the engine
+    /// decides completion order; use [`FlowNet::finished`].
+    pub fn settle(&mut self, now: Secs) {
+        assert!(now >= self.clock, "time went backwards: {now} < {}", self.clock);
+        let dt = (now - self.clock).0;
+        if dt > 0.0 {
+            for f in self.flows.values_mut() {
+                if f.remaining_mb.is_finite() {
+                    f.remaining_mb = (f.remaining_mb - f.rate_mb_s * dt).max(0.0);
+                    // snap float residue below one byte to zero, otherwise
+                    // completion events converge on `now` without firing
+                    if f.remaining_mb < 1e-6 {
+                        f.remaining_mb = 0.0;
+                    }
+                }
+            }
+        }
+        self.clock = now;
+    }
+
+    /// Add a flow at the current clock; rates are recomputed.
+    pub fn add_flow(&mut self, path: Vec<LinkId>, size_mb: f64, class: TrafficClass) -> FlowId {
+        self.add_flow_capped(path, size_mb, class, f64::INFINITY)
+    }
+
+    /// Add a flow with an SDN-enforced rate cap (MB/s).
+    pub fn add_flow_capped(
+        &mut self,
+        path: Vec<LinkId>,
+        size_mb: f64,
+        class: TrafficClass,
+        max_rate_mb_s: f64,
+    ) -> FlowId {
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow { path, remaining_mb: size_mb, class, rate_mb_s: 0.0, max_rate_mb_s },
+        );
+        self.recompute();
+        id
+    }
+
+    /// Permanent background flow (infinite volume, unlimited appetite).
+    pub fn add_background(&mut self, path: Vec<LinkId>, class: TrafficClass) -> FlowId {
+        self.add_flow(path, f64::INFINITY, class)
+    }
+
+    /// Permanent background flow rate-limited by the controller to
+    /// `cap_mb_s` — keeps execution consistent with the static `BW_rl`
+    /// view the schedulers plan against.
+    pub fn add_background_capped(
+        &mut self,
+        path: Vec<LinkId>,
+        class: TrafficClass,
+        cap_mb_s: f64,
+    ) -> FlowId {
+        self.add_flow_capped(path, f64::INFINITY, class, cap_mb_s)
+    }
+
+    /// Remove a flow (finished or cancelled); rates are recomputed.
+    pub fn remove_flow(&mut self, id: FlowId) -> Option<f64> {
+        let f = self.flows.remove(&id)?;
+        self.recompute();
+        Some(f.remaining_mb)
+    }
+
+    /// Finite flows with zero remaining volume at the current clock.
+    pub fn finished(&self) -> Vec<FlowId> {
+        let mut v: Vec<FlowId> = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.remaining_mb <= 0.0)
+            .map(|(&id, _)| id)
+            .collect();
+        v.sort_by_key(|id| id.0);
+        v
+    }
+
+    /// Earliest (time, flow) at which a finite flow completes if rates
+    /// stay fixed; `None` when no finite flows are active or all rates 0.
+    pub fn next_completion(&self) -> Option<(Secs, FlowId)> {
+        let mut best: Option<(Secs, FlowId)> = None;
+        for (&id, f) in &self.flows {
+            if !f.remaining_mb.is_finite() {
+                continue;
+            }
+            if f.rate_mb_s <= 0.0 {
+                continue;
+            }
+            let t = Secs(self.clock.0 + f.remaining_mb / f.rate_mb_s);
+            best = match best {
+                None => Some((t, id)),
+                Some((bt, bid)) => {
+                    if t < bt || (t == bt && id.0 < bid.0) {
+                        Some((t, id))
+                    } else {
+                        Some((bt, bid))
+                    }
+                }
+            };
+        }
+        best
+    }
+
+    /// Max-min progressive filling. With QoS, fill each class against its
+    /// per-link queue capacity; classes are strictly partitioned so they
+    /// do not interact (the paper's HTB-style queue config).
+    fn recompute(&mut self) {
+        match self.qos.clone() {
+            None => {
+                let caps = self.link_cap_mb_s.clone();
+                let ids: Vec<FlowId> = self.flows.keys().copied().collect();
+                self.fill(&ids, &caps);
+            }
+            Some(policy) => {
+                for class in
+                    [TrafficClass::Shuffle, TrafficClass::HadoopOther, TrafficClass::Background]
+                {
+                    let qrate = match policy.classify(class) {
+                        None => None, // shared policy object but no queues
+                        Some(qid) => Some(mbps_to_mb_per_s(policy.queues[qid.0].rate_mbps)),
+                    };
+                    let caps: Vec<f64> = self
+                        .link_cap_mb_s
+                        .iter()
+                        .map(|&c| qrate.map_or(c, |q| q.min(c)))
+                        .collect();
+                    let ids: Vec<FlowId> = self
+                        .flows
+                        .iter()
+                        .filter(|(_, f)| f.class == class)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    self.fill(&ids, &caps);
+                }
+            }
+        }
+    }
+
+    /// Progressive filling of `ids` against `caps` (indexed by link).
+    ///
+    /// Perf note (§Perf L3): works on a flat snapshot (id, path, cap) —
+    /// no per-access FlowId hashing, no O(F²) retains — then writes the
+    /// computed rates back in one pass. ~100x on 200-flow recomputes.
+    fn fill(&mut self, ids: &[FlowId], caps: &[f64]) {
+        let mut order: Vec<FlowId> = ids.to_vec();
+        order.sort_by_key(|id| id.0);
+        // snapshot: (id, path, cap, computed rate)
+        let mut snap: Vec<(FlowId, Vec<LinkId>, f64, f64)> = order
+            .iter()
+            .map(|id| {
+                let f = &self.flows[id];
+                (*id, f.path.clone(), f.max_rate_mb_s, 0.0)
+            })
+            .collect();
+        // empty-path flows (src == dst) are instantaneous
+        let mut active: Vec<usize> = Vec::with_capacity(snap.len());
+        for (i, e) in snap.iter_mut().enumerate() {
+            if e.1.is_empty() {
+                e.3 = f64::INFINITY;
+            } else {
+                active.push(i);
+            }
+        }
+        let mut remaining_cap = caps.to_vec();
+        let mut count = vec![0usize; caps.len()];
+        while !active.is_empty() {
+            count.iter_mut().for_each(|c| *c = 0);
+            for &i in &active {
+                for l in &snap[i].1 {
+                    count[l.0] += 1;
+                }
+            }
+            let mut bottleneck: Option<(f64, usize)> = None;
+            for (l, &c) in count.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let share = remaining_cap[l] / c as f64;
+                if bottleneck.map_or(true, |(s, _)| share < s) {
+                    bottleneck = Some((share, l));
+                }
+            }
+            let Some((share, bl)) = bottleneck else { break };
+            // flows rate-capped below the would-be share freeze at their
+            // cap first (classic max-min with per-flow caps)
+            let any_capped = active.iter().any(|&i| snap[i].2 < share);
+            let mut still_active = Vec::with_capacity(active.len());
+            for &i in &active {
+                let freeze = if any_capped {
+                    snap[i].2 < share
+                } else {
+                    snap[i].1.contains(&LinkId(bl))
+                };
+                if freeze {
+                    let rate = if any_capped { snap[i].2 } else { share };
+                    snap[i].3 = rate;
+                    for l in &snap[i].1 {
+                        remaining_cap[l.0] = (remaining_cap[l.0] - rate).max(0.0);
+                    }
+                } else {
+                    still_active.push(i);
+                }
+            }
+            active = still_active;
+        }
+        for (id, _, _, rate) in snap {
+            self.flows.get_mut(&id).unwrap().rate_mb_s = rate;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3 links of 80 Mbps = 10 MB/s each.
+    fn net() -> FlowNet {
+        FlowNet::new(&[80.0, 80.0, 80.0])
+    }
+
+    #[test]
+    fn single_flow_gets_bottleneck_rate() {
+        let mut n = net();
+        let f = n.add_flow(vec![LinkId(0), LinkId(1)], 100.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(f).unwrap() - 10.0).abs() < 1e-9);
+        let (t, id) = n.next_completion().unwrap();
+        assert_eq!(id, f);
+        assert!((t.0 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut n = net();
+        let a = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        let b = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(a).unwrap() - 5.0).abs() < 1e-9);
+        assert!((n.rate_of(b).unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_reallocates_after_bottleneck() {
+        // a: links 0,1; b: link 0; c: link 1.
+        // round 1: link0 and link1 both have 2 flows -> share 5; freeze all.
+        let mut n = net();
+        let a = n.add_flow(vec![LinkId(0), LinkId(1)], 1e3, TrafficClass::HadoopOther);
+        let b = n.add_flow(vec![LinkId(0)], 1e3, TrafficClass::HadoopOther);
+        let c = n.add_flow(vec![LinkId(1)], 1e3, TrafficClass::HadoopOther);
+        let (ra, rb, rc) =
+            (n.rate_of(a).unwrap(), n.rate_of(b).unwrap(), n.rate_of(c).unwrap());
+        assert!((ra - 5.0).abs() < 1e-9);
+        assert!((rb - 5.0).abs() < 1e-9);
+        assert!((rc - 5.0).abs() < 1e-9);
+        // remove a: b and c each get the full 10
+        n.remove_flow(a);
+        assert!((n.rate_of(b).unwrap() - 10.0).abs() < 1e-9);
+        assert!((n.rate_of(c).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settle_drains_remaining() {
+        let mut n = net();
+        let f = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        n.settle(Secs(4.0));
+        assert!((n.remaining_of(f).unwrap() - 60.0).abs() < 1e-9);
+        n.settle(Secs(10.0));
+        assert_eq!(n.remaining_of(f).unwrap(), 0.0);
+        assert_eq!(n.finished(), vec![f]);
+    }
+
+    #[test]
+    fn background_flow_never_finishes_but_contends() {
+        let mut n = net();
+        let _bg = n.add_background(vec![LinkId(0)], TrafficClass::Background);
+        let f = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(f).unwrap() - 5.0).abs() < 1e-9);
+        n.settle(Secs(100.0));
+        assert_eq!(n.finished(), vec![f]); // background not in finished()
+    }
+
+    #[test]
+    fn qos_isolates_shuffle_from_background() {
+        // Example 3: 150 Mbps switch, Q1=100 (shuffle), Q3=10 (background).
+        let mut n = FlowNet::new(&[150.0]);
+        let sh = n.add_flow(vec![LinkId(0)], 1e3, TrafficClass::Shuffle);
+        for _ in 0..5 {
+            n.add_background(vec![LinkId(0)], TrafficClass::Background);
+        }
+        // shared: shuffle gets 150/6 Mbps = 3.125 MB/s
+        assert!((n.rate_of(sh).unwrap() - mbps_to_mb_per_s(25.0)).abs() < 1e-9);
+        // queued: shuffle keeps Q1's full 100 Mbps = 12.5 MB/s
+        n.set_qos(QosPolicy::example3());
+        assert!((n.rate_of(sh).unwrap() - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_path_flow_is_instant() {
+        let mut n = net();
+        let f = n.add_flow(vec![], 100.0, TrafficClass::HadoopOther);
+        assert!(n.rate_of(f).unwrap().is_infinite());
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn settle_rejects_time_reversal() {
+        let mut n = net();
+        n.settle(Secs(5.0));
+        n.settle(Secs(4.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event execution substrate.
+//!
+//! Two pieces:
+//!
+//! * [`flownet`] — a fluid flow model: concurrent transfers share links
+//!   max-min fairly (per QoS class when a policy is installed). This is
+//!   what makes HDS/BAR suffer contention that BASS avoids via slot
+//!   reservations.
+//! * [`engine`] — an event-driven executor that plays a scheduler's
+//!   [`engine::Assignment`] on the simulated cluster and produces per-task
+//!   records for the metrics layer.
+
+pub mod engine;
+pub mod flownet;
+
+pub use engine::{Assignment, Engine, Placement, TaskRecord, TransferPlan};
+pub use flownet::{FlowId, FlowNet};

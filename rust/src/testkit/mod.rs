@@ -1,0 +1,46 @@
+//! Deterministic property-testing kit (proptest is not vendored in the
+//! offline image — see DESIGN.md toolchain substitutions).
+//!
+//! [`forall`] drives a property over `iters` generated cases from a
+//! seeded [`crate::util::XorShift`]; failures report the case index and
+//! sub-seed so any counterexample replays exactly.
+
+use crate::util::XorShift;
+
+/// Run `prop` over `iters` cases drawn by `gen`. On failure, panics with
+/// the replayable (seed, case) pair and the case's Debug form.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    iters: usize,
+    mut gen: impl FnMut(&mut XorShift) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..iters {
+        let sub_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let mut rng = XorShift::new(sub_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed (seed={seed}, case={case}, sub_seed={sub_seed}): {msg}\ninput: {input:#?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_for_true_property() {
+        forall(1, 100, |r| r.below(100), |&x| {
+            if x < 100 { Ok(()) } else { Err(format!("{x} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_replay_info() {
+        forall(2, 50, |r| r.below(10), |&x| {
+            if x < 5 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+}

@@ -1,0 +1,144 @@
+//! Topology builders: the paper's Fig. 2 testbed and parameterized trees.
+
+use super::graph::{Endpoint, LinkId, NodeId, Topology};
+
+/// The paper's Fig. 2 cluster with its link numbering.
+///
+/// 4 task nodes, 2 OpenFlow switches, 1 router, 8 links:
+///
+/// * `Link1..Link4` — Node1..Node4 to their switch (N1,N2 on SW1; N3,N4 on SW2)
+/// * `Link5`        — master node / scheduler to SW1
+/// * `Link6`        — OpenFlow controller to SW2
+/// * `Link7`        — SW1 to router
+/// * `Link8`        — SW2 to router
+///
+/// This reproduces the paper's path example: moving TK1's input from ND3
+/// to ND1 crosses Link3, Link8, Link7, Link1 (the paper lists the same
+/// set, "Link 1, Link 7, Link 8 and Link 3").
+#[derive(Debug, Clone)]
+pub struct Fig2 {
+    pub topo: Topology,
+    /// ND_1..ND_4 (index 0..3).
+    pub task_nodes: [NodeId; 4],
+    /// Master/scheduler host (not a task node).
+    pub master: NodeId,
+    /// Controller host (not a task node).
+    pub controller: NodeId,
+    /// Link1..Link8 in the paper's numbering (index 0 == Link1).
+    pub links: [LinkId; 8],
+}
+
+/// Build Fig. 2 with a uniform link rate in Mbps.
+pub fn fig2(link_mbps: f64) -> Fig2 {
+    let mut t = Topology::new();
+    let n1 = t.add_host();
+    let n2 = t.add_host();
+    let n3 = t.add_host();
+    let n4 = t.add_host();
+    let master = t.add_host();
+    let controller = t.add_host();
+    let sw1 = t.add_switch();
+    let sw2 = t.add_switch();
+    let r = t.add_router();
+
+    let l1 = t.connect(Endpoint::Host(n1), Endpoint::Switch(sw1), link_mbps);
+    let l2 = t.connect(Endpoint::Host(n2), Endpoint::Switch(sw1), link_mbps);
+    let l3 = t.connect(Endpoint::Host(n3), Endpoint::Switch(sw2), link_mbps);
+    let l4 = t.connect(Endpoint::Host(n4), Endpoint::Switch(sw2), link_mbps);
+    let l5 = t.connect(Endpoint::Host(master), Endpoint::Switch(sw1), link_mbps);
+    let l6 = t.connect(Endpoint::Host(controller), Endpoint::Switch(sw2), link_mbps);
+    let l7 = t.connect(Endpoint::Switch(sw1), Endpoint::Router(r), link_mbps);
+    let l8 = t.connect(Endpoint::Switch(sw2), Endpoint::Router(r), link_mbps);
+
+    Fig2 {
+        topo: t,
+        task_nodes: [n1, n2, n3, n4],
+        master,
+        controller,
+        links: [l1, l2, l3, l4, l5, l6, l7, l8],
+    }
+}
+
+/// Parameterized two-level tree: `n_switches` edge switches, each with
+/// `hosts_per_switch` task nodes, all uplinked to one router.
+///
+/// Used for the Table I cluster (6 nodes: 2 switches x 3 hosts) and the
+/// scale benches. Returns the topology and the task-node list in id order.
+pub fn tree_cluster(
+    n_switches: usize,
+    hosts_per_switch: usize,
+    edge_mbps: f64,
+    uplink_mbps: f64,
+) -> (Topology, Vec<NodeId>) {
+    assert!(n_switches >= 1 && hosts_per_switch >= 1);
+    let mut t = Topology::new();
+    let mut hosts = Vec::with_capacity(n_switches * hosts_per_switch);
+    // create hosts first so NodeId(0..n) are the task nodes
+    for _ in 0..n_switches * hosts_per_switch {
+        hosts.push(t.add_host());
+    }
+    let r = t.add_router();
+    for s in 0..n_switches {
+        let sw = t.add_switch();
+        for h in 0..hosts_per_switch {
+            let host = hosts[s * hosts_per_switch + h];
+            t.connect(Endpoint::Host(host), Endpoint::Switch(sw), edge_mbps);
+        }
+        t.connect(Endpoint::Switch(sw), Endpoint::Router(r), uplink_mbps);
+    }
+    (t, hosts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_has_paper_shape() {
+        let f = fig2(100.0);
+        assert_eq!(f.topo.n_hosts(), 6); // 4 task + master + controller
+        assert_eq!(f.topo.n_links(), 8);
+        assert_eq!(f.topo.switches.len(), 2);
+        assert_eq!(f.topo.routers.len(), 1);
+    }
+
+    #[test]
+    fn fig2_nd3_to_nd1_uses_links_3_8_7_1() {
+        let f = fig2(100.0);
+        let p = f.topo.route(f.task_nodes[2], f.task_nodes[0]).unwrap();
+        // paper: "Link 1, Link 7, Link 8 and Link 3" (as a set)
+        let mut got = p.clone();
+        got.sort();
+        let mut want = vec![f.links[0], f.links[6], f.links[7], f.links[2]];
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fig2_same_switch_path_is_two_links() {
+        let f = fig2(100.0);
+        let p = f.topo.route(f.task_nodes[1], f.task_nodes[0]).unwrap();
+        let mut got = p;
+        got.sort();
+        assert_eq!(got, vec![f.links[0], f.links[1]]); // Link1 + Link2
+    }
+
+    #[test]
+    fn tree_cluster_counts() {
+        let (t, hosts) = tree_cluster(2, 3, 100.0, 1000.0);
+        assert_eq!(hosts.len(), 6);
+        assert_eq!(t.n_links(), 8); // 6 edge + 2 uplink
+        // cross-switch route: host-sw, sw-r, r-sw, sw-host
+        assert_eq!(t.route(hosts[0], hosts[5]).unwrap().len(), 4);
+        // same-switch: 2 links
+        assert_eq!(t.route(hosts[0], hosts[2]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn tree_cluster_uplink_rate_applies() {
+        let (t, hosts) = tree_cluster(2, 2, 100.0, 250.0);
+        let p = t.route(hosts[0], hosts[3]).unwrap();
+        let rates: Vec<f64> = p.iter().map(|&l| t.link(l).capacity_mbps).collect();
+        assert_eq!(rates, vec![100.0, 250.0, 250.0, 100.0]);
+    }
+}

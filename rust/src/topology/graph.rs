@@ -1,0 +1,218 @@
+//! Core graph types: endpoints, links, and the [`Topology`] container.
+
+/// A Hadoop task-tracker / datanode host (the paper's `ND_j`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// An OpenFlow switch (Open vSwitch in the paper's testbed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SwitchId(pub usize);
+
+/// A physical link (the paper's `Link1..Link8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+/// Anything a link can attach to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    /// Task node / datanode.
+    Host(NodeId),
+    /// OpenFlow switch.
+    Switch(SwitchId),
+    /// The (single) core router of Fig. 2-style trees.
+    Router(usize),
+}
+
+/// An undirected duplex link with a fixed line rate.
+///
+/// The paper treats each link's bandwidth as one shared resource that the
+/// SDN controller slices into time slots, so we model capacity per link,
+/// not per direction.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub id: LinkId,
+    pub a: Endpoint,
+    pub b: Endpoint,
+    /// Line rate in Mbps (the paper's 100 Mbps default).
+    pub capacity_mbps: f64,
+}
+
+impl Link {
+    /// The endpoint opposite to `e`, if `e` touches this link.
+    pub fn other(&self, e: Endpoint) -> Option<Endpoint> {
+        if self.a == e {
+            Some(self.b)
+        } else if self.b == e {
+            Some(self.a)
+        } else {
+            None
+        }
+    }
+}
+
+/// The network: hosts, switches, router(s) and the links joining them.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    pub hosts: Vec<NodeId>,
+    pub switches: Vec<SwitchId>,
+    pub routers: Vec<usize>,
+    pub links: Vec<Link>,
+    /// adjacency: endpoint -> (link, neighbor endpoint)
+    adj: std::collections::HashMap<Endpoint, Vec<(LinkId, Endpoint)>>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_host(&mut self) -> NodeId {
+        let id = NodeId(self.hosts.len());
+        self.hosts.push(id);
+        self.adj.entry(Endpoint::Host(id)).or_default();
+        id
+    }
+
+    pub fn add_switch(&mut self) -> SwitchId {
+        let id = SwitchId(self.switches.len());
+        self.switches.push(id);
+        self.adj.entry(Endpoint::Switch(id)).or_default();
+        id
+    }
+
+    pub fn add_router(&mut self) -> usize {
+        let id = self.routers.len();
+        self.routers.push(id);
+        self.adj.entry(Endpoint::Router(id)).or_default();
+        id
+    }
+
+    /// Connect two endpoints with a new link of the given rate.
+    pub fn connect(&mut self, a: Endpoint, b: Endpoint, capacity_mbps: f64) -> LinkId {
+        assert!(capacity_mbps > 0.0, "link rate must be positive");
+        let id = LinkId(self.links.len());
+        self.links.push(Link { id, a, b, capacity_mbps });
+        self.adj.entry(a).or_default().push((id, b));
+        self.adj.entry(b).or_default().push((id, a));
+        id
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn neighbors(&self, e: Endpoint) -> &[(LinkId, Endpoint)] {
+        self.adj.get(&e).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// BFS shortest path between two hosts, returned as the link sequence.
+    /// `None` if disconnected; `Some(vec![])` if `src == dst`.
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Option<Vec<LinkId>> {
+        use std::collections::{HashMap, VecDeque};
+        if src == dst {
+            return Some(Vec::new());
+        }
+        let start = Endpoint::Host(src);
+        let goal = Endpoint::Host(dst);
+        let mut prev: HashMap<Endpoint, (Endpoint, LinkId)> = HashMap::new();
+        let mut q = VecDeque::new();
+        q.push_back(start);
+        while let Some(cur) = q.pop_front() {
+            for &(lid, nxt) in self.neighbors(cur) {
+                if nxt == start || prev.contains_key(&nxt) {
+                    continue;
+                }
+                prev.insert(nxt, (cur, lid));
+                if nxt == goal {
+                    // reconstruct
+                    let mut path = Vec::new();
+                    let mut at = goal;
+                    while at != start {
+                        let (p, l) = prev[&at];
+                        path.push(l);
+                        at = p;
+                    }
+                    path.reverse();
+                    return Some(path);
+                }
+                q.push_back(nxt);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line3() -> (Topology, NodeId, NodeId, NodeId) {
+        // h0 - s0 - h1,  s0 - r0 - s1 - h2
+        let mut t = Topology::new();
+        let h0 = t.add_host();
+        let h1 = t.add_host();
+        let h2 = t.add_host();
+        let s0 = t.add_switch();
+        let s1 = t.add_switch();
+        let r = t.add_router();
+        t.connect(Endpoint::Host(h0), Endpoint::Switch(s0), 100.0);
+        t.connect(Endpoint::Host(h1), Endpoint::Switch(s0), 100.0);
+        t.connect(Endpoint::Host(h2), Endpoint::Switch(s1), 100.0);
+        t.connect(Endpoint::Switch(s0), Endpoint::Router(r), 100.0);
+        t.connect(Endpoint::Switch(s1), Endpoint::Router(r), 100.0);
+        (t, h0, h1, h2)
+    }
+
+    #[test]
+    fn route_same_switch_is_two_links() {
+        let (t, h0, h1, _) = line3();
+        let p = t.route(h0, h1).unwrap();
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn route_cross_switch_goes_via_router() {
+        let (t, h0, _, h2) = line3();
+        let p = t.route(h0, h2).unwrap();
+        assert_eq!(p.len(), 4); // h0-s0, s0-r, r-s1, s1-h2
+    }
+
+    #[test]
+    fn route_self_is_empty() {
+        let (t, h0, _, _) = line3();
+        assert_eq!(t.route(h0, h0).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn route_disconnected_is_none() {
+        let mut t = Topology::new();
+        let a = t.add_host();
+        let b = t.add_host();
+        assert!(t.route(a, b).is_none());
+    }
+
+    #[test]
+    fn link_other_endpoint() {
+        let (t, h0, h1, _) = line3();
+        let l = t.link(LinkId(0));
+        assert_eq!(l.other(Endpoint::Host(h0)), Some(Endpoint::Switch(SwitchId(0))));
+        assert_eq!(l.other(Endpoint::Host(h1)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_rate_link_rejected() {
+        let mut t = Topology::new();
+        let a = t.add_host();
+        let b = t.add_host();
+        t.connect(Endpoint::Host(a), Endpoint::Host(b), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Network topology substrate: hosts, switches, links, routing.
+//!
+//! The paper's testbed (Fig. 2) is a two-switch tree: task nodes hang off
+//! two OpenFlow switches which connect through a router. [`Topology`] is a
+//! general undirected multigraph of [`Endpoint`]s with BFS shortest-path
+//! routing and an all-pairs path cache, plus builders for the paper's
+//! Fig. 2 and for parameterized fat-tree-ish clusters used in Table I and
+//! scale benches.
+
+pub mod builders;
+pub mod graph;
+pub mod route;
+
+pub use builders::{fig2, tree_cluster, Fig2};
+pub use graph::{Endpoint, Link, LinkId, NodeId, SwitchId, Topology};
+pub use route::PathCache;

@@ -1,0 +1,67 @@
+//! All-pairs host path cache.
+//!
+//! The schedulers query `route(src, dst)` for every task x candidate-node
+//! pair on the hot path; BFS per query is O(E) and shows up in profiles
+//! (see EXPERIMENTS.md §Perf). [`PathCache`] precomputes all host-to-host
+//! link paths once per topology change.
+
+use super::graph::{LinkId, NodeId, Topology};
+
+/// Immutable all-pairs path table over the task-node set.
+#[derive(Debug, Clone)]
+pub struct PathCache {
+    n: usize,
+    /// paths[src * n + dst] — `None` if disconnected.
+    paths: Vec<Option<Vec<LinkId>>>,
+}
+
+impl PathCache {
+    /// Build from a topology (O(H^2 * E) once).
+    pub fn build(topo: &Topology) -> Self {
+        let n = topo.n_hosts();
+        let mut paths = Vec::with_capacity(n * n);
+        for s in 0..n {
+            for d in 0..n {
+                paths.push(topo.route(NodeId(s), NodeId(d)));
+            }
+        }
+        Self { n, paths }
+    }
+
+    /// Cached path; empty slice for src == dst.
+    pub fn path(&self, src: NodeId, dst: NodeId) -> Option<&[LinkId]> {
+        self.paths[src.0 * self.n + dst.0].as_deref()
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builders::fig2;
+
+    #[test]
+    fn cache_matches_bfs() {
+        let f = fig2(100.0);
+        let cache = PathCache::build(&f.topo);
+        for s in 0..f.topo.n_hosts() {
+            for d in 0..f.topo.n_hosts() {
+                let want = f.topo.route(NodeId(s), NodeId(d));
+                let got = cache.path(NodeId(s), NodeId(d)).map(|p| p.to_vec());
+                // BFS may differ in path choice only if costs tie; Fig2 is
+                // a tree so paths are unique.
+                assert_eq!(got, want, "pair ({s},{d})");
+            }
+        }
+    }
+
+    #[test]
+    fn self_path_is_empty() {
+        let f = fig2(100.0);
+        let cache = PathCache::build(&f.topo);
+        assert_eq!(cache.path(NodeId(0), NodeId(0)).unwrap(), &[]);
+    }
+}

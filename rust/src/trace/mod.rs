@@ -1,0 +1,77 @@
+//! Result writers: CSV and Markdown rows for EXPERIMENTS.md.
+
+use crate::experiments::Table1Row;
+
+/// Render Table I rows as the paper-shaped markdown table.
+pub fn table1_markdown(rows: &[Table1Row]) -> String {
+    let mut s = String::from(
+        "| Data size | Sched | MT(s) | RT(s) | JT(s) | LR |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {} | {:.0} | {:.0} | {:.0} | {:.1}% |\n",
+            fmt_size(r.data_mb),
+            r.scheduler,
+            r.metrics.mt,
+            r.metrics.rt,
+            r.metrics.jt,
+            r.metrics.lr * 100.0
+        ));
+    }
+    s
+}
+
+/// CSV form of the same rows.
+pub fn table1_csv(rows: &[Table1Row]) -> String {
+    let mut s = String::from("data_mb,scheduler,mt_s,rt_s,jt_s,lr\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{:.2},{:.2},{:.2},{:.4}\n",
+            r.data_mb, r.scheduler, r.metrics.mt, r.metrics.rt, r.metrics.jt, r.metrics.lr
+        ));
+    }
+    s
+}
+
+/// Human data-size label (150M, 1G, ...).
+pub fn fmt_size(mb: f64) -> String {
+    if mb >= 1024.0 && (mb / 1024.0).fract() == 0.0 {
+        format!("{}G", mb / 1024.0)
+    } else {
+        format!("{}M", mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::JobMetrics;
+
+    fn row() -> Table1Row {
+        Table1Row {
+            scheduler: "BASS",
+            data_mb: 1024.0,
+            metrics: JobMetrics { mt: 10.0, rt: 20.0, jt: 25.0, lr: 0.75 },
+        }
+    }
+
+    #[test]
+    fn markdown_contains_row() {
+        let md = table1_markdown(&[row()]);
+        assert!(md.contains("| 1G | BASS | 10 | 20 | 25 | 75.0% |"));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let csv = table1_csv(&[row()]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].split(',').count(), 6);
+    }
+
+    #[test]
+    fn size_labels() {
+        assert_eq!(fmt_size(150.0), "150M");
+        assert_eq!(fmt_size(5120.0), "5G");
+    }
+}

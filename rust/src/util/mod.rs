@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG, time arithmetic, unit helpers.
+
+pub mod rng;
+pub mod time;
+pub mod units;
+
+pub use rng::XorShift;
+pub use time::Secs;
+pub use units::{mb_per_s, mbps_to_mb_per_s, BLOCK_MB};

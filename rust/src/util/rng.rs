@@ -1,0 +1,147 @@
+//! Deterministic xorshift64* RNG.
+//!
+//! No `rand` crate is vendored in the offline image, and the experiments
+//! must be exactly reproducible anyway, so every randomized component
+//! (workload generation, HDFS placement, HDS's random remote pick, the
+//! property-test generators in [`crate::testkit`]) draws from this one
+//! seeded generator.
+
+/// xorshift64* — tiny, fast, passes BigCrush on the high bits.
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    /// Seed must be non-zero; 0 is mapped to a fixed odd constant.
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be > 0.
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi)` as f64. `hi > lo` required.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi > lo);
+        let unit = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        lo + unit * (hi - lo)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform(0.0, 1.0) < p
+    }
+
+    /// Pick `k` distinct indices out of `n` (k <= n), Floyd's algorithm.
+    pub fn distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot pick {k} distinct out of {n}");
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShift::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = XorShift::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn uniform_in_range_and_covers() {
+        let mut r = XorShift::new(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..5000 {
+            let x = r.uniform(2.0, 4.0);
+            assert!((2.0..4.0).contains(&x));
+            lo_seen |= x < 2.2;
+            hi_seen |= x > 3.8;
+        }
+        assert!(lo_seen && hi_seen, "samples should cover the range");
+    }
+
+    #[test]
+    fn distinct_are_distinct_and_in_range() {
+        let mut r = XorShift::new(3);
+        for _ in 0..200 {
+            let ks = r.distinct(10, 4);
+            assert_eq!(ks.len(), 4);
+            for &k in &ks {
+                assert!(k < 10);
+            }
+            let mut s = ks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 4, "duplicates in {ks:?}");
+        }
+    }
+
+    #[test]
+    fn distinct_full_set() {
+        let mut r = XorShift::new(5);
+        let mut ks = r.distinct(6, 6);
+        ks.sort_unstable();
+        assert_eq!(ks, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift::new(11);
+        let mut v: Vec<usize> = (0..20).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,96 @@
+//! Simulation time: f64 seconds with a total order for event queues.
+
+use std::cmp::Ordering;
+
+/// Simulation timestamp / duration in seconds.
+///
+/// Wraps `f64` so it can carry a total order (`total_cmp`) and be used as
+/// a `BinaryHeap` key. All paper quantities (`TM`, `TP`, `ΥI`, `ΥC`) are
+/// seconds, so no unit conversions leak into the schedulers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Secs(pub f64);
+
+impl Secs {
+    pub const ZERO: Secs = Secs(0.0);
+    /// Sentinel "never" / unreachable (matches the f32 INF of the L1/L2
+    /// cost model when cast down).
+    pub const INF: Secs = Secs(3.0e38);
+
+    pub fn max(self, other: Secs) -> Secs {
+        Secs(self.0.max(other.0))
+    }
+
+    pub fn min(self, other: Secs) -> Secs {
+        Secs(self.0.min(other.0))
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.0.is_finite() && self.0 < Self::INF.0
+    }
+}
+
+impl Eq for Secs {}
+
+impl Ord for Secs {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl PartialOrd for Secs {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl std::ops::Add for Secs {
+    type Output = Secs;
+    fn add(self, rhs: Secs) -> Secs {
+        Secs(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::Sub for Secs {
+    type Output = Secs;
+    fn sub(self, rhs: Secs) -> Secs {
+        Secs(self.0 - rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for Secs {
+    fn add_assign(&mut self, rhs: Secs) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::fmt::Display for Secs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.2}s", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_total() {
+        let mut v = vec![Secs(3.0), Secs(1.0), Secs(2.0), Secs::ZERO];
+        v.sort();
+        assert_eq!(v, vec![Secs(0.0), Secs(1.0), Secs(2.0), Secs(3.0)]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(Secs(1.5) + Secs(2.5), Secs(4.0));
+        assert_eq!(Secs(5.0) - Secs(2.0), Secs(3.0));
+        assert_eq!(Secs(1.0).max(Secs(2.0)), Secs(2.0));
+        assert_eq!(Secs(1.0).min(Secs(2.0)), Secs(1.0));
+    }
+
+    #[test]
+    fn inf_is_not_finite() {
+        assert!(!Secs::INF.is_finite());
+        assert!(Secs(12.0).is_finite());
+    }
+}

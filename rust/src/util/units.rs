@@ -1,0 +1,44 @@
+//! Unit conversions shared by the paper's formulas.
+//!
+//! The paper quotes link rates in Mbps and block sizes in MB; Eq. 1
+//! (`TM = SZ / BW`) needs both in consistent units. We standardize on
+//! **MB and MB/s**, and we use the paper's own simplification: Example 1
+//! rounds 64MB / 100Mbps = 5.12s down to 5s, i.e. it treats 100 Mbps as
+//! 12.8 MB/s and 64/12.8 = 5.0 exactly. We therefore convert with the
+//! decimal factor 8 (1 MB/s = 8 Mbps), matching the paper's arithmetic.
+
+/// HDFS block size used throughout the paper (MB).
+pub const BLOCK_MB: f64 = 64.0;
+
+/// Mbps -> MB/s (decimal, paper-consistent: 100 Mbps = 12.5 MB/s).
+///
+/// Note: with 12.5 MB/s a 64MB block takes 5.12s; the paper's Example 1
+/// then rounds to 5s. Experiment configs that must hit the example's
+/// integer arithmetic use [`mb_per_s`] with an explicit rate instead.
+pub fn mbps_to_mb_per_s(mbps: f64) -> f64 {
+    mbps / 8.0
+}
+
+/// Explicit MB/s constructor for calibrated experiment configs.
+pub fn mb_per_s(v: f64) -> f64 {
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_block_transfer_time() {
+        // 64MB over 100Mbps = 5.12s (the paper's pre-rounding figure).
+        let t = BLOCK_MB / mbps_to_mb_per_s(100.0);
+        assert!((t - 5.12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn example1_simplified_rate() {
+        // Example 1 uses TM = 5s for a 64MB block -> 12.8 MB/s effective.
+        let t = BLOCK_MB / mb_per_s(12.8);
+        assert!((t - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,110 @@
+//! Background load injection (Section V-A: "we repetitively execute a
+//! background job to provide each test with initial workload").
+//!
+//! Two effects, matching the paper's shared-cluster conditions:
+//!
+//! 1. **Initial node workload** — every node starts with a random busy
+//!    window (the `ΥI` the ProgressRate estimator would report).
+//! 2. **Background traffic** — long-running flows on random host pairs
+//!    that both (a) reduce the `BW_rl` the SDN controller reports and
+//!    (b) contend with fair-share transfers in the flow network.
+
+use crate::sdn::{Controller, TrafficClass};
+use crate::sim::FlowNet;
+use crate::topology::NodeId;
+use crate::util::{Secs, XorShift};
+
+/// Deterministic background-load plan.
+#[derive(Debug, Clone)]
+pub struct BackgroundLoad {
+    /// Initial busy time per node (seconds).
+    pub initial_idle: Vec<Secs>,
+    /// Host pairs carrying permanent background flows.
+    pub flows: Vec<(NodeId, NodeId)>,
+    /// Per-flow nominal rate for the controller's static view (MB/s).
+    pub flow_rate_mb_s: f64,
+}
+
+impl BackgroundLoad {
+    /// Sample a plan: idle in `[0, max_idle)`, `n_flows` random distinct
+    /// host pairs.
+    pub fn sample(
+        nodes: &[NodeId],
+        max_idle: f64,
+        n_flows: usize,
+        flow_rate_mb_s: f64,
+        rng: &mut XorShift,
+    ) -> Self {
+        let initial_idle =
+            nodes.iter().map(|_| Secs(rng.uniform(0.0, max_idle.max(1e-9)))).collect();
+        let mut flows = Vec::with_capacity(n_flows);
+        for _ in 0..n_flows {
+            let picks = rng.distinct(nodes.len(), 2.min(nodes.len()));
+            if picks.len() == 2 {
+                flows.push((nodes[picks[0]], nodes[picks[1]]));
+            }
+        }
+        Self { initial_idle, flows, flow_rate_mb_s }
+    }
+
+    /// No background at all (Example 1 uses explicit idle times instead).
+    pub fn none(nodes: &[NodeId]) -> Self {
+        Self {
+            initial_idle: nodes.iter().map(|_| Secs::ZERO).collect(),
+            flows: Vec::new(),
+            flow_rate_mb_s: 0.0,
+        }
+    }
+
+    /// Install the static view into the controller (what `BW_rl` reports)
+    /// and the live flows into the flow network (what HDS/BAR feel).
+    pub fn install(&self, ctrl: &mut Controller, net: &mut FlowNet) {
+        for &(a, b) in &self.flows {
+            if let Some(path) = ctrl.path(a, b).map(|p| p.to_vec()) {
+                for l in &path {
+                    let cur = ctrl.background_mb_s(*l);
+                    ctrl.set_background_mb_s(*l, cur + self.flow_rate_mb_s);
+                }
+                net.add_background_capped(path, TrafficClass::Background, self.flow_rate_mb_s);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builders::tree_cluster;
+
+    #[test]
+    fn sample_is_deterministic_and_bounded() {
+        let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+        let mut r1 = XorShift::new(5);
+        let mut r2 = XorShift::new(5);
+        let a = BackgroundLoad::sample(&nodes, 30.0, 3, 2.0, &mut r1);
+        let b = BackgroundLoad::sample(&nodes, 30.0, 3, 2.0, &mut r2);
+        assert_eq!(a.initial_idle, b.initial_idle);
+        assert_eq!(a.flows, b.flows);
+        assert!(a.initial_idle.iter().all(|s| s.0 < 30.0));
+        assert_eq!(a.flows.len(), 3);
+    }
+
+    #[test]
+    fn install_reduces_controller_bw_and_adds_flows() {
+        let (topo, nodes) = tree_cluster(2, 3, 100.0, 100.0);
+        let mut ctrl = Controller::new(topo, 1.0);
+        let caps: Vec<f64> =
+            (0..ctrl.topo().n_links()).map(|_| 100.0).collect();
+        let mut net = FlowNet::new(&caps);
+        let bg = BackgroundLoad {
+            initial_idle: nodes.iter().map(|_| Secs::ZERO).collect(),
+            flows: vec![(nodes[0], nodes[5])],
+            flow_rate_mb_s: 4.0,
+        };
+        let before = ctrl.path_bw_mb_s(nodes[0], nodes[5], Secs::ZERO);
+        bg.install(&mut ctrl, &mut net);
+        let after = ctrl.path_bw_mb_s(nodes[0], nodes[5], Secs::ZERO);
+        assert!(after < before);
+        assert_eq!(net.n_flows(), 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generation: the paper's Wordcount / Sort jobs, background
+//! load, and synthetic job traces for the end-to-end driver.
+
+pub mod background;
+pub mod profiles;
+pub mod tracegen;
+
+pub use background::BackgroundLoad;
+pub use profiles::{JobKind, WorkloadBuilder};
+pub use tracegen::{JobArrival, TraceGen};

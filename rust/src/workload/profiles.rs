@@ -1,0 +1,171 @@
+//! Wordcount / Sort job profiles (Section V-A).
+//!
+//! The paper: "We choose Wordcount and Sort for test because the former
+//! consumes more CPU while the latter occupies more disk I/O". In the
+//! model that translates to:
+//!
+//! * **Wordcount** — long map compute, small map output (word histograms
+//!   shrink data), modest reduces.
+//! * **Sort** — short map compute (identity map), full-size map output
+//!   (shuffle ≈ input), long reduces (merge + write).
+//!
+//! Per-task durations are calibrated so the *HDS baseline* lands in the
+//! neighbourhood of Table I's HDS column; the BASS/BAR deltas then come
+//! entirely out of scheduling, which is what the reproduction tests.
+
+use crate::hdfs::{Namenode, PlacementPolicy};
+use crate::mapreduce::{JobSpec, TaskSpec};
+use crate::topology::NodeId;
+use crate::util::{Secs, XorShift, BLOCK_MB};
+
+/// Which of the paper's two jobs to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Wordcount,
+    Sort,
+}
+
+impl JobKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::Wordcount => "wordcount",
+            JobKind::Sort => "sort",
+        }
+    }
+
+    /// Map compute seconds per 64MB block.
+    fn map_compute(&self) -> f64 {
+        match self {
+            JobKind::Wordcount => 22.0, // CPU-bound
+            JobKind::Sort => 7.0,       // identity map
+        }
+    }
+
+    /// Map output volume as a fraction of the input split.
+    fn shuffle_ratio(&self) -> f64 {
+        match self {
+            JobKind::Wordcount => 0.25,
+            JobKind::Sort => 1.0,
+        }
+    }
+
+    /// Reduce compute seconds per MB of shuffle input.
+    fn reduce_compute_per_mb(&self) -> f64 {
+        match self {
+            JobKind::Wordcount => 0.35,
+            JobKind::Sort => 0.55, // disk-bound merge
+        }
+    }
+}
+
+/// Builds jobs + HDFS layout for a cluster.
+pub struct WorkloadBuilder {
+    pub kind: JobKind,
+    pub replication: usize,
+    pub reduces: usize,
+    pub placement: PlacementPolicy,
+}
+
+impl WorkloadBuilder {
+    pub fn new(kind: JobKind) -> Self {
+        Self { kind, replication: 3, reduces: 2, placement: PlacementPolicy::RandomDistinct }
+    }
+
+    /// Number of 64MB blocks for a data size (the paper's sweep points).
+    pub fn n_blocks(data_mb: f64) -> usize {
+        (data_mb / BLOCK_MB).ceil().max(1.0) as usize
+    }
+
+    /// Generate the job: places blocks into `nn` and returns the spec.
+    /// Map tasks 0..b, reduce tasks b..b+r (src hints filled later by the
+    /// experiment driver once map placements are known).
+    pub fn build(
+        &self,
+        job_id: usize,
+        data_mb: f64,
+        nodes: &[NodeId],
+        nn: &mut Namenode,
+        rng: &mut XorShift,
+    ) -> JobSpec {
+        let b = Self::n_blocks(data_mb);
+        let blocks =
+            self.placement.place(nn, nodes, b, BLOCK_MB, self.replication.min(nodes.len()), rng);
+        let mut tasks = Vec::with_capacity(b + self.reduces);
+        for (i, &blk) in blocks.iter().enumerate() {
+            tasks.push(TaskSpec::map(
+                i,
+                blk,
+                BLOCK_MB,
+                Secs(self.kind.map_compute()),
+                BLOCK_MB * self.kind.shuffle_ratio(),
+            ));
+        }
+        let shuffle_total = b as f64 * BLOCK_MB * self.kind.shuffle_ratio();
+        let per_reduce = shuffle_total / self.reduces.max(1) as f64;
+        for r in 0..self.reduces {
+            tasks.push(TaskSpec::reduce(
+                b + r,
+                per_reduce,
+                Secs(per_reduce * self.kind.reduce_compute_per_mb()),
+            ));
+        }
+        JobSpec::new(job_id, format!("{}-{}MB", self.kind.label(), data_mb as u64), tasks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes6() -> Vec<NodeId> {
+        (0..6).map(NodeId).collect()
+    }
+
+    #[test]
+    fn block_counts_match_paper_sizes() {
+        assert_eq!(WorkloadBuilder::n_blocks(150.0), 3);
+        assert_eq!(WorkloadBuilder::n_blocks(300.0), 5);
+        assert_eq!(WorkloadBuilder::n_blocks(600.0), 10);
+        assert_eq!(WorkloadBuilder::n_blocks(1024.0), 16);
+        assert_eq!(WorkloadBuilder::n_blocks(5120.0), 80);
+    }
+
+    #[test]
+    fn wordcount_job_shape() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(1);
+        let j = WorkloadBuilder::new(JobKind::Wordcount)
+            .build(0, 600.0, &nodes6(), &mut nn, &mut rng);
+        assert_eq!(j.n_maps(), 10);
+        assert_eq!(j.n_reduces(), 2);
+        assert_eq!(nn.n_blocks(), 10);
+        // shuffle shrinks for wordcount
+        assert!(j.shuffle_volume_mb() < 600.0 * 0.5);
+    }
+
+    #[test]
+    fn sort_shuffles_everything() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(1);
+        let j = WorkloadBuilder::new(JobKind::Sort).build(0, 600.0, &nodes6(), &mut nn, &mut rng);
+        assert!((j.shuffle_volume_mb() - 640.0).abs() < 1e-9); // 10 blocks x 64MB
+        // sort maps are cheap, reduces expensive
+        let map_tp = j.maps().next().unwrap().compute.0;
+        let red_tp = j.reduces().next().unwrap().compute.0;
+        assert!(red_tp > map_tp);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = |seed| {
+            let mut nn = Namenode::new();
+            let mut rng = XorShift::new(seed);
+            let j = WorkloadBuilder::new(JobKind::Sort)
+                .build(0, 300.0, &nodes6(), &mut nn, &mut rng);
+            (0..nn.n_blocks())
+                .map(|b| nn.block(crate::hdfs::BlockId(b)).replicas.clone())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(gen(9), gen(9));
+    }
+}

@@ -1,0 +1,445 @@
+//! Property-based tests over coordinator/substrate invariants, driven by
+//! the deterministic `bass::testkit` runner (proptest substitute — see
+//! DESIGN.md toolchain notes).
+
+use bass::cluster::Ledger;
+use bass::hdfs::{Namenode, PlacementPolicy};
+use bass::mapreduce::TaskSpec;
+use bass::runtime::{CostInputs, CostModel};
+use bass::sched::{Bar, Bass, Hds, SchedCtx, Scheduler};
+use bass::sdn::{Controller, SlotCalendar};
+use bass::sim::{Engine, FlowNet, TransferPlan};
+use bass::testkit::forall;
+use bass::topology::builders::tree_cluster;
+use bass::topology::{LinkId, NodeId};
+use bass::util::{Secs, XorShift, BLOCK_MB};
+
+/// A random scheduling scenario over a random tree cluster.
+#[derive(Debug)]
+struct Scenario {
+    n_switches: usize,
+    per_switch: usize,
+    m_tasks: usize,
+    replication: usize,
+    seed: u64,
+}
+
+fn gen_scenario(r: &mut XorShift) -> Scenario {
+    let n_switches = 1 + r.below(3);
+    let per_switch = 2 + r.below(3);
+    Scenario {
+        n_switches,
+        per_switch,
+        m_tasks: 1 + r.below(24),
+        replication: 1 + r.below((n_switches * per_switch).min(3)),
+        seed: r.next_u64(),
+    }
+}
+
+fn build(s: &Scenario) -> (Controller, Namenode, Vec<NodeId>, Vec<TaskSpec>, Vec<f64>) {
+    let (topo, nodes) = tree_cluster(s.n_switches, s.per_switch, 100.0, 100.0);
+    let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+    let ctrl = Controller::new(topo, 1.0);
+    let mut nn = Namenode::new();
+    let mut rng = XorShift::new(s.seed);
+    let blocks =
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes, s.m_tasks, BLOCK_MB, s.replication, &mut rng);
+    let tasks = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| TaskSpec::map(i, b, BLOCK_MB, Secs(5.0 + (i % 7) as f64), 8.0))
+        .collect();
+    (ctrl, nn, nodes, tasks, caps)
+}
+
+/// Every scheduler must place every task exactly once, on an authorized
+/// node, and local placements must actually be replica holders.
+#[test]
+fn prop_schedulers_place_each_task_once_and_validly() {
+    forall(0xA11, 60, gen_scenario, |s| {
+        let schedulers: Vec<Box<dyn Scheduler>> =
+            vec![Box::new(Hds::new()), Box::new(Bar::new()), Box::new(Bass::new())];
+        for mut sched in schedulers {
+            let (mut ctrl, nn, nodes, tasks, _) = build(s);
+            let cost = CostModel::rust_only();
+            let mut ledger = Ledger::new(nodes.len());
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+            node_speed: Vec::new(),
+            };
+            let a = sched.schedule(&tasks, None, &mut ctx);
+            if a.placements.len() != tasks.len() {
+                return Err(format!("{}: {} placements for {} tasks", sched.name(), a.placements.len(), tasks.len()));
+            }
+            let mut seen = vec![false; tasks.len()];
+            for p in &a.placements {
+                if seen[p.task.0] {
+                    return Err(format!("{}: task {} placed twice", sched.name(), p.task.0));
+                }
+                seen[p.task.0] = true;
+                if !nodes.contains(&p.node) {
+                    return Err(format!("{}: unauthorized node {:?}", sched.name(), p.node));
+                }
+                if p.is_local {
+                    let b = tasks[p.task.0].input.unwrap();
+                    if !nn.is_local(b, p.node) {
+                        return Err(format!("{}: fake locality for task {}", sched.name(), p.task.0));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// BASS's ledger estimate must equal DES execution exactly (reservations
+/// make its world deterministic), and execution must finish all tasks.
+#[test]
+fn prop_bass_estimate_matches_execution() {
+    forall(0xB0B, 60, gen_scenario, |s| {
+        let (mut ctrl, nn, nodes, tasks, caps) = build(s);
+        let cost = CostModel::rust_only();
+        let mut ledger = Ledger::new(nodes.len());
+        let a = {
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+            node_speed: Vec::new(),
+            };
+            Bass::new().schedule(&tasks, None, &mut ctx)
+        };
+        let est = nodes.iter().map(|&n| ledger.idle(n).0).fold(0.0, f64::max);
+        let mut engine = Engine::new(FlowNet::new(&caps), vec![Secs::ZERO; nodes.len()]);
+        engine.load(&a);
+        let records = engine.run();
+        if records.len() != tasks.len() {
+            return Err(format!("{} records for {} tasks", records.len(), tasks.len()));
+        }
+        let exe = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+        if (est - exe).abs() > 1e-6 {
+            return Err(format!("estimate {est} != execution {exe}"));
+        }
+        Ok(())
+    });
+}
+
+/// The slot calendar never oversubscribes: after any random sequence of
+/// successful reservations, every (link, slot) stays within capacity;
+/// releases restore exactly.
+#[test]
+fn prop_calendar_never_oversubscribes() {
+    #[derive(Debug)]
+    struct Ops {
+        n_links: usize,
+        ops: Vec<(usize, usize, usize, f64)>, // link, start, len, frac
+    }
+    forall(
+        0xCA1,
+        120,
+        |r| {
+            let n_links = 1 + r.below(6);
+            let ops = (0..24)
+                .map(|_| (r.below(n_links), r.below(40), 1 + r.below(10), r.uniform(0.05, 1.0)))
+                .collect();
+            Ops { n_links, ops }
+        },
+        |case| {
+            let mut cal = SlotCalendar::new(case.n_links, 1.0);
+            let mut grants = Vec::new();
+            for &(l, start, len, frac) in &case.ops {
+                if let Ok(res) = cal.reserve_path(&[LinkId(l)], start, len, frac) {
+                    grants.push(res);
+                }
+                for link in 0..case.n_links {
+                    for slot in 0..60 {
+                        let r = cal.reserved_frac(LinkId(link), slot);
+                        if r > 1.0 + 1e-9 {
+                            return Err(format!("link {link} slot {slot} oversubscribed: {r}"));
+                        }
+                    }
+                }
+            }
+            for g in &grants {
+                cal.release(g);
+            }
+            for link in 0..case.n_links {
+                for slot in 0..60 {
+                    let r = cal.reserved_frac(LinkId(link), slot);
+                    if r > 1e-9 {
+                        return Err(format!("leak on link {link} slot {slot}: {r}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Max-min rates: per-link sums never exceed capacity, every flow gets a
+/// positive rate, and rates are deterministic.
+#[test]
+fn prop_flownet_rates_feasible() {
+    #[derive(Debug)]
+    struct Net {
+        n_links: usize,
+        flows: Vec<Vec<usize>>,
+    }
+    forall(
+        0xF10,
+        100,
+        |r| {
+            let n_links = 1 + r.below(8);
+            let flows = (0..1 + r.below(20))
+                .map(|_| {
+                    let len = 1 + r.below(3.min(n_links));
+                    r.distinct(n_links, len)
+                })
+                .collect();
+            Net { n_links, flows }
+        },
+        |case| {
+            let caps: Vec<f64> = (0..case.n_links).map(|_| 80.0).collect();
+            let mut net = FlowNet::new(&caps);
+            let ids: Vec<_> = case
+                .flows
+                .iter()
+                .map(|p| {
+                    net.add_flow(
+                        p.iter().map(|&l| LinkId(l)).collect(),
+                        100.0,
+                        bass::sdn::TrafficClass::HadoopOther,
+                    )
+                })
+                .collect();
+            let mut per_link = vec![0.0f64; case.n_links];
+            for (i, id) in ids.iter().enumerate() {
+                let rate = net.rate_of(*id).ok_or("missing flow")?;
+                if rate <= 0.0 {
+                    return Err(format!("flow {i} starved: {rate}"));
+                }
+                for &l in &case.flows[i] {
+                    per_link[l] += rate;
+                }
+            }
+            for (l, &sum) in per_link.iter().enumerate() {
+                if sum > 10.0 + 1e-6 {
+                    return Err(format!("link {l} oversubscribed: {sum} MB/s of 10"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// XLA artifact output == Rust mirror, bit for bit, on random batches.
+#[test]
+fn prop_xla_matches_rust_mirror() {
+    let model = CostModel::auto();
+    if model.backend_for(16, 8) != bass::runtime::exec::Backend::Xla {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    forall(
+        0x71A,
+        30,
+        |r| {
+            let m = 1 + r.below(16);
+            let n = 1 + r.below(8);
+            fn mk(r: &mut XorShift, k: usize, lo: f64, hi: f64) -> Vec<f32> {
+                (0..k).map(|_| r.uniform(lo, hi) as f32).collect()
+            }
+            let sz = mk(r, m, 0.0, 5000.0);
+            let bw = mk(r, m * n, -5.0, 120.0);
+            let tp = mk(r, m * n, 0.0, 900.0);
+            let local = (0..m * n).map(|_| if r.chance(0.3) { 1.0 } else { 0.0 }).collect();
+            let idle = mk(r, n, 0.0, 200.0);
+            CostInputs { m, n, sz, bw, tp, local, idle, ts: 1.0 }
+        },
+        |inp| {
+            let x = model.eval(inp).map_err(|e| e.to_string())?;
+            let y = CostModel::eval_rust(inp);
+            if x.yc != y.yc || x.tm != y.tm || x.slots != y.slots
+                || x.best_idx != y.best_idx || x.best_cost != y.best_cost
+            {
+                return Err("backend divergence".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Engine conservation: records == placements, finishes are monotone per
+/// node, and no record finishes before its compute start.
+#[test]
+fn prop_engine_records_consistent() {
+    forall(0xE46, 60, gen_scenario, |s| {
+        let (mut ctrl, nn, nodes, tasks, caps) = build(s);
+        let cost = CostModel::rust_only();
+        let mut ledger = Ledger::new(nodes.len());
+        let a = {
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+            node_speed: Vec::new(),
+            };
+            Hds::new().schedule(&tasks, None, &mut ctx)
+        };
+        let remote = a
+            .placements
+            .iter()
+            .filter(|p| matches!(p.transfer, TransferPlan::FairShare { .. }))
+            .count();
+        let mut engine = Engine::new(FlowNet::new(&caps), vec![Secs::ZERO; nodes.len()]);
+        engine.load(&a);
+        let records = engine.run();
+        if records.len() != tasks.len() {
+            return Err(format!("{} records for {} tasks (remote={remote})", records.len(), tasks.len()));
+        }
+        let mut per_node: Vec<Vec<f64>> = vec![Vec::new(); nodes.len()];
+        for r in &records {
+            if r.finish < r.compute_start || r.compute_start < r.picked_at {
+                return Err(format!("time travel in record {:?}", r));
+            }
+            per_node[r.node.0].push(r.finish.0);
+        }
+        Ok(())
+    });
+}
+
+/// Pre-BASS invariant: prefetch never makes any transfer arrive later
+/// than BASS's on-demand plan for the same (task, node) placement.
+#[test]
+fn prop_prefetch_never_later() {
+    use bass::sched::PreBass;
+    forall(0x9F3, 40, gen_scenario, |s| {
+        let run = |pre: bool| -> Vec<(usize, f64)> {
+            let (mut ctrl, nn, nodes, tasks, _) = build(s);
+            let cost = CostModel::rust_only();
+            let mut ledger = Ledger::new(nodes.len());
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: Vec::new(),
+            };
+            let a = if pre {
+                PreBass::new().schedule(&tasks, None, &mut ctx)
+            } else {
+                Bass::new().schedule(&tasks, None, &mut ctx)
+            };
+            a.placements
+                .iter()
+                .filter_map(|p| match &p.transfer {
+                    TransferPlan::Reserved(t) => Some((p.task.0, t.arrival.0)),
+                    TransferPlan::Prefetched(t) => Some((p.task.0, t.arrival.0)),
+                    _ => None,
+                })
+                .collect()
+        };
+        let bass = run(false);
+        let pre = run(true);
+        for (task, arr_pre) in &pre {
+            if let Some((_, arr_bass)) = bass.iter().find(|(t, _)| t == task) {
+                if *arr_pre > arr_bass + 1e-9 {
+                    return Err(format!(
+                        "task {task}: prefetch arrival {arr_pre} later than on-demand {arr_bass}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Controller reserve/complete cycles never leak calendar capacity.
+#[test]
+fn prop_controller_transfer_lifecycle_leak_free() {
+    use bass::sdn::TrafficClass;
+    forall(0x1EA, 60, gen_scenario, |s| {
+        let (mut ctrl, _nn, nodes, _tasks, _) = build(s);
+        let mut rng = XorShift::new(s.seed ^ 0xDEAD);
+        let mut live = Vec::new();
+        for i in 0..20 {
+            let a = nodes[rng.below(nodes.len())];
+            let b = nodes[rng.below(nodes.len())];
+            if a == b {
+                continue;
+            }
+            if let Some(plan) = ctrl.plan_transfer(a, b, 32.0, Secs(i as f64)) {
+                let t = ctrl
+                    .commit_transfer(a, b, TrafficClass::HadoopOther, plan, Secs(i as f64))
+                    .map_err(|e| e.to_string())?;
+                live.push(t);
+            }
+            // randomly complete some
+            if !live.is_empty() && rng.chance(0.5) {
+                let t = live.swap_remove(rng.below(live.len()));
+                ctrl.complete_transfer(&t, 32.0);
+            }
+        }
+        for t in live.drain(..) {
+            ctrl.complete_transfer(&t, 32.0);
+        }
+        // all slots must be fully free again
+        for l in 0..ctrl.topo().n_links() {
+            for slot in 0..200 {
+                let r = ctrl.calendar.reserved_frac(bass::topology::LinkId(l), slot);
+                if r > 1e-9 {
+                    return Err(format!("leak: link {l} slot {slot} frac {r}"));
+                }
+            }
+        }
+        if !ctrl.flows.is_empty() {
+            return Err(format!("{} flow entries leaked", ctrl.flows.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Heterogeneity invariant: scaling every node's speed by the same
+/// factor scales every scheduler's makespan estimate consistently
+/// (no hidden homogeneity assumptions).
+#[test]
+fn prop_uniform_speed_scaling() {
+    forall(0x5CA, 30, gen_scenario, |s| {
+        let jt_with = |speed: f64| -> f64 {
+            let (mut ctrl, nn, nodes, tasks, _) = build(s);
+            let cost = CostModel::rust_only();
+            let mut ledger = Ledger::new(nodes.len());
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: vec![speed; nodes.len()],
+            };
+            Bass::new().schedule(&tasks, None, &mut ctx);
+            nodes.iter().map(|&n| ledger.idle(n).0).fold(0.0, f64::max)
+        };
+        let base = jt_with(1.0);
+        let double = jt_with(2.0);
+        // all-compute lower bound: doubling TP at least doesn't shrink JT
+        if double + 1e-9 < base {
+            return Err(format!("doubling compute time shrank JT: {base} -> {double}"));
+        }
+        Ok(())
+    });
+}
