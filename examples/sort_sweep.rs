@@ -10,6 +10,7 @@ use bass::workload::JobKind;
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let mut cfg = Table1Config::paper(JobKind::Sort);
+    cfg.threads = 4; // hermetic cells: identical rows, less wall-clock
     if !full {
         cfg.sizes_mb = vec![150.0, 300.0, 600.0];
     }

@@ -18,7 +18,9 @@ fn main() {
     b.bench("ablate/background_4pts", || ablate_background(&[0, 2, 4, 8], &cost));
     b.bench("ablate/replication_3pts", || ablate_replication(&[1, 2, 3], &cost));
     b.bench("ablate/heterogeneity_3x", || ablate_heterogeneity(3.0, &cost));
-    b.bench("scale/8sw_x2..4", || run_scale(&[2, 4], &cost));
+    b.bench("scale/8sw_x2..4", || run_scale(&[2, 4], &cost, 1));
+    // fan the same grid across 4 workers: identical metrics, less wall
+    b.bench("scale/8sw_x2..4/threads4", || run_scale(&[2, 4], &cost, 4));
 
     println!("\nablation values:");
     for p in ablate_slot_duration(&[0.25, 1.0, 2.0, 4.0], &cost) {
@@ -30,7 +32,7 @@ fn main() {
     for (s, jt) in ablate_heterogeneity(3.0, &cost) {
         println!("  hetero3x {:<5} JT {:.1}s", s, jt);
     }
-    for p in run_scale(&[2, 4, 8, 16], &cost) {
+    for p in run_scale(&[2, 4, 8, 16], &cost, 4) {
         println!(
             "  scale n={:<4} m={:<4} {:<5} sched {:.1}ms makespan {:.0}s",
             p.nodes,

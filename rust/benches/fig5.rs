@@ -9,9 +9,12 @@ fn main() {
     let b = Bencher::quick();
     println!("# bench: fig5 (both panels)");
     b.bench("fig5/both_panels_150_600", || {
-        run_fig5(&cost, Some(vec![150.0, 600.0]))
+        run_fig5(&cost, Some(vec![150.0, 600.0]), 1)
     });
-    for p in run_fig5(&cost, Some(vec![150.0, 300.0, 600.0])) {
+    b.bench("fig5/both_panels_150_600/threads4", || {
+        run_fig5(&cost, Some(vec![150.0, 600.0]), 4)
+    });
+    for p in run_fig5(&cost, Some(vec![150.0, 300.0, 600.0]), 4) {
         println!("  panel {}:", p.job);
         for (name, jts) in &p.series {
             println!("    {:<8} {:?}", name, jts.iter().map(|x| x.round()).collect::<Vec<_>>());

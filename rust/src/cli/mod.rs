@@ -1,7 +1,7 @@
 //! Hand-rolled CLI (clap is not vendored offline). Subcommands map 1:1 to
 //! the experiment drivers; `bass --help` documents them.
 
-use crate::config::{ExperimentConfig, RunConfig};
+use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_example1,
@@ -9,6 +9,7 @@ use crate::experiments::{
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
+use crate::scenario::run_job_grid;
 use crate::trace;
 use crate::util::XorShift;
 use crate::workload::{JobKind, TraceGen};
@@ -26,6 +27,7 @@ COMMANDS:
   e2e [--jobs N]        End-to-end online trace through the coordinator
   ablate                Slot-duration / background / heterogeneity ablations
   scale                 Cluster-size scalability sweep (paper future work)
+  scenario --config F   Run a user-defined scenario sweep from a TOML file
   run --config F        Run the experiment described by a TOML file
   help                  Show this message
 
@@ -33,11 +35,31 @@ OPTIONS:
   --sizes a,b,c         Override sweep sizes (MB)
   --sched s1,s2         Override scheduler list (hds,bar,bass,pre-bass)
   --seed N              Override workload seed
+  --threads N           Fan sweep points across N worker threads
+                        (results are bitwise-identical to --threads 1)
+
+DEFINE YOUR OWN SCENARIO:
+  `bass scenario --config my.toml` runs any cluster/workload grid without
+  a new driver. A scenario file sets `run = \"scenario\"` plus:
+    job = \"wordcount\" | \"sort\"       threads = N
+    [cluster]  topology = \"tree\"|\"fig2\", switches, hosts_per_switch,
+               link_mbps, uplink_mbps, replication,
+               placement = \"random\"|\"round_robin\"
+    [sdn]      slot_secs, qos = \"example3\"|\"shared\"
+    [background] flows, rate_mb_s, max_initial_idle
+    [sweep]    sizes_mb = [..], schedulers = \"bass, bar, hds\",
+               seed, reduces, slowstart
+  Every (size, scheduler) cell is a hermetic SimSession: same seed =>
+  same block layout and background, so all deltas are scheduling.
 ";
 
 /// Parse `--key value` style options from the arg list.
 fn opt(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn opt_threads(args: &[String]) -> usize {
+    opt(args, "--threads").and_then(|s| s.parse().ok()).map(|t: usize| t.max(1)).unwrap_or(1)
 }
 
 /// Entry point used by main.rs; returns process exit code.
@@ -87,7 +109,7 @@ pub fn run(args: Vec<String>) -> i32 {
         }
         "fig5" => {
             let sizes = opt(&args, "--sizes").map(parse_sizes);
-            for p in run_fig5(&cost, sizes) {
+            for p in run_fig5(&cost, sizes, opt_threads(&args)) {
                 println!("== Fig 5: {} ==", p.job);
                 print!("size(MB):");
                 for s in &p.sizes_mb {
@@ -135,8 +157,9 @@ pub fn run(args: Vec<String>) -> i32 {
             0
         }
         "scale" => {
-            println!("== scalability sweep (8 switches x N hosts) ==");
-            for p in run_scale(&[2, 4, 8, 16], &CostModel::rust_only()) {
+            let threads = opt_threads(&args);
+            println!("== scalability sweep (8 switches x N hosts, {threads} threads) ==");
+            for p in run_scale(&[2, 4, 8, 16], &CostModel::rust_only(), threads) {
                 println!(
                     "n={:<4} m={:<4} {:<5} sched {:>8.2}ms  makespan {:>7.1}s",
                     p.nodes, p.tasks, p.scheduler, p.sched_secs * 1e3, p.makespan
@@ -144,24 +167,29 @@ pub fn run(args: Vec<String>) -> i32 {
             }
             0
         }
+        "scenario" => {
+            let Some(path) = opt(&args, "--config") else {
+                eprintln!("scenario requires --config <file>\n\n{HELP}");
+                return 2;
+            };
+            let cfg = match load_config(&path) {
+                Ok(c) => c,
+                Err(code) => return code,
+            };
+            let Some(sweep) = cfg.scenario else {
+                eprintln!("{path} is not a scenario file (needs run = \"scenario\")");
+                return 2;
+            };
+            run_scenario(&sweep, &path, &args, &cost)
+        }
         "run" => {
             let Some(path) = opt(&args, "--config") else {
                 eprintln!("run requires --config <file>\n\n{HELP}");
                 return 2;
             };
-            let text = match std::fs::read_to_string(&path) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("cannot read {path}: {e}");
-                    return 2;
-                }
-            };
-            let cfg = match ExperimentConfig::from_str(&text) {
+            let cfg = match load_config(&path) {
                 Ok(c) => c,
-                Err(e) => {
-                    eprintln!("bad config {path}: {e}");
-                    return 2;
-                }
+                Err(code) => return code,
             };
             match cfg.run {
                 RunConfig::Example1 => run(vec!["example1".into()]),
@@ -171,6 +199,10 @@ pub fn run(args: Vec<String>) -> i32 {
                 RunConfig::Fig5 => run(vec!["fig5".into()]),
                 RunConfig::E2e { jobs } => {
                     run(vec!["e2e".into(), "--jobs".into(), jobs.to_string()])
+                }
+                RunConfig::Scenario => {
+                    let sweep = cfg.scenario.expect("scenario run carries its sweep");
+                    run_scenario(&sweep, &path, &args, &cost)
                 }
                 RunConfig::Table1 { .. } => {
                     println!("== Table I ({}) from {path} ==", cfg.table1.kind.label());
@@ -189,6 +221,49 @@ pub fn run(args: Vec<String>) -> i32 {
             2
         }
     }
+}
+
+fn load_config(path: &str) -> Result<ExperimentConfig, i32> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return Err(2);
+        }
+    };
+    ExperimentConfig::from_str(&text).map_err(|e| {
+        eprintln!("bad config {path}: {e}");
+        2
+    })
+}
+
+fn run_scenario(sweep: &ScenarioSweep, path: &str, args: &[String], cost: &CostModel) -> i32 {
+    let threads = opt(args, "--threads")
+        .and_then(|s| s.parse().ok())
+        .map(|t: usize| t.max(1))
+        .unwrap_or(sweep.base.threads);
+    println!(
+        "== scenario {} from {path} ({} points, {threads} threads) ==",
+        sweep.base.name,
+        sweep.sizes_mb.len() * sweep.schedulers.len()
+    );
+    let rows = run_job_grid(sweep.points(), threads, cost);
+    println!(
+        "{:<10} {:>9} {:>8} {:>8} {:>8} {:>7}",
+        "scheduler", "size(MB)", "MT(s)", "RT(s)", "JT(s)", "LR"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>9.0} {:>8.1} {:>8.1} {:>8.1} {:>6.1}%",
+            r.scheduler,
+            r.data_mb,
+            r.metrics.mt,
+            r.metrics.rt,
+            r.metrics.jt,
+            r.metrics.lr * 100.0
+        );
+    }
+    0
 }
 
 fn parse_sizes(s: String) -> Vec<f64> {
@@ -211,6 +286,9 @@ fn apply_overrides(cfg: &mut Table1Config, args: &[String]) {
     }
     if let Some(s) = opt(args, "--seed").and_then(|s| s.parse().ok()) {
         cfg.seed = s;
+    }
+    if let Some(t) = opt(args, "--threads").and_then(|s| s.parse().ok()) {
+        cfg.threads = std::cmp::max(t, 1);
     }
 }
 
@@ -241,6 +319,7 @@ mod tests {
     fn run_requires_config() {
         assert_eq!(run(vec!["run".into()]), 2);
         assert_eq!(run(vec!["run".into(), "--config".into(), "/no/such".into()]), 2);
+        assert_eq!(run(vec!["scenario".into()]), 2);
     }
 
     #[test]
@@ -253,15 +332,42 @@ mod tests {
     }
 
     #[test]
+    fn scenario_subcommand_runs_a_sweep_file() {
+        let dir = std::env::temp_dir().join("bass_cli_scenario_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("scenario.toml");
+        std::fs::write(
+            &f,
+            "run = \"scenario\"\njob = \"sort\"\nthreads = 2\n\
+             [sweep]\nsizes_mb = [150]\nschedulers = \"bass, hds\"\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 0);
+        // the generic `run` entry point accepts scenario files too
+        assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+    }
+
+    #[test]
+    fn scenario_rejects_non_scenario_files() {
+        let dir = std::env::temp_dir().join("bass_cli_scenario_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("exp.toml");
+        std::fs::write(&f, "run = \"table1\"\n").unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 2);
+    }
+
+    #[test]
     fn overrides_apply() {
         let mut cfg = Table1Config::paper(JobKind::Wordcount);
-        let args: Vec<String> = ["--sizes", "150", "--sched", "bass,hds", "--seed", "42"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        let args: Vec<String> =
+            ["--sizes", "150", "--sched", "bass,hds", "--seed", "42", "--threads", "3"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
         apply_overrides(&mut cfg, &args);
         assert_eq!(cfg.sizes_mb, vec![150.0]);
         assert_eq!(cfg.schedulers.len(), 2);
         assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.threads, 3);
     }
 }

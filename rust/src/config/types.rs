@@ -1,6 +1,11 @@
 //! Typed experiment configuration assembled from the parsed table.
 
 use crate::experiments::{SchedulerKind, Table1Config};
+use crate::hdfs::PlacementPolicy;
+use crate::scenario::{
+    cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec,
+};
+use crate::sdn::QosPolicy;
 use crate::workload::JobKind;
 
 use super::parser::{parse, Table};
@@ -13,6 +18,138 @@ pub enum RunConfig {
     Table1 { kind: JobKind },
     Fig5,
     E2e { jobs: usize },
+    /// A user-defined scenario sweep (see `examples/scenario.toml`).
+    Scenario,
+}
+
+/// A declarative scenario sweep: one base spec expanded over a
+/// (size x scheduler) grid. This is what the CLI's `scenario` subcommand
+/// runs — arbitrary new workloads without writing a new driver.
+#[derive(Debug, Clone)]
+pub struct ScenarioSweep {
+    pub base: ScenarioSpec,
+    pub sizes_mb: Vec<f64>,
+    pub schedulers: Vec<SchedulerKind>,
+}
+
+impl ScenarioSweep {
+    /// Expand the grid: every (size, scheduler) pair becomes a hermetic
+    /// spec sharing the base seed (same layout across schedulers).
+    pub fn points(&self) -> Vec<ScenarioSpec> {
+        let kind = match self.base.workload {
+            WorkloadSpec::Job { kind, .. } => kind,
+            ref other => panic!("scenario sweeps run Job workloads, got {other:?}"),
+        };
+        self.sizes_mb
+            .iter()
+            .flat_map(|&data_mb| {
+                self.schedulers.iter().map(move |&sched| {
+                    let mut s = self.base.clone();
+                    s.workload = WorkloadSpec::Job { kind, data_mb };
+                    s.scheduler = sched;
+                    s.seed = cell_seed(self.base.seed, data_mb);
+                    s
+                })
+            })
+            .collect()
+    }
+
+    /// Parse from the TOML-subset table (defaults = the paper's Table I
+    /// testbed).
+    pub fn from_table(t: &Table) -> anyhow::Result<Self> {
+        let kind = match t.get(".job").and_then(|v| v.as_str()).unwrap_or("wordcount") {
+            "sort" => JobKind::Sort,
+            _ => JobKind::Wordcount,
+        };
+        let link_mbps =
+            t.get("cluster.link_mbps").and_then(|v| v.as_f64()).unwrap_or(100.0);
+        let topology = match t.get("cluster.topology").and_then(|v| v.as_str()) {
+            Some("fig2") => TopologyShape::Fig2 { link_mbps },
+            Some("tree") | None => TopologyShape::Tree {
+                switches: t
+                    .get("cluster.switches")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(2),
+                hosts_per_switch: t
+                    .get("cluster.hosts_per_switch")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(3),
+                edge_mbps: link_mbps,
+                uplink_mbps: t
+                    .get("cluster.uplink_mbps")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(link_mbps),
+            },
+            Some(other) => anyhow::bail!("unknown cluster.topology {other:?}"),
+        };
+        let name = t
+            .get(".name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("scenario")
+            .to_string();
+        let mut base =
+            ScenarioSpec::new(name, topology, WorkloadSpec::Job { kind, data_mb: 0.0 });
+        if let Some(v) = t.get("cluster.replication").and_then(|v| v.as_usize()) {
+            base.replication = v;
+        }
+        base.placement = match t.get("cluster.placement").and_then(|v| v.as_str()) {
+            Some("round_robin") => PlacementPolicy::RoundRobin,
+            Some("random") | Some("random_distinct") | None => PlacementPolicy::RandomDistinct,
+            Some(other) => anyhow::bail!("unknown cluster.placement {other:?}"),
+        };
+        if let Some(v) = t.get("sdn.slot_secs").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "sdn.slot_secs must be positive");
+            base.slot_secs = v;
+        }
+        base.qos = match t.get("sdn.qos").and_then(|v| v.as_str()) {
+            Some("example3") => Some(QosPolicy::example3()),
+            Some("shared") | None => None,
+            Some(other) => anyhow::bail!("unknown sdn.qos {other:?}"),
+        };
+        base.background = BackgroundSpec {
+            flows: t.get("background.flows").and_then(|v| v.as_usize()).unwrap_or(3),
+            rate_mb_s: t
+                .get("background.rate_mb_s")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(3.0),
+        };
+        base.initial = InitialLoad::Sampled {
+            max_secs: t
+                .get("background.max_initial_idle")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(25.0),
+        };
+        if let Some(v) = t.get("sweep.seed").and_then(|v| v.as_usize()) {
+            base.seed = v as u64;
+        }
+        if let Some(v) = t.get("sweep.reduces").and_then(|v| v.as_usize()) {
+            base.reduces = v;
+        }
+        if let Some(v) = t.get("sweep.slowstart").and_then(|v| v.as_f64()) {
+            base.slowstart = v;
+        }
+        if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
+            base.threads = v.max(1);
+        }
+        let sizes_mb = t
+            .get("sweep.sizes_mb")
+            .and_then(|v| v.as_nums())
+            .map(|v| v.to_vec())
+            .unwrap_or_else(|| vec![150.0, 300.0, 600.0]);
+        let schedulers = match t.get("sweep.schedulers").and_then(|v| v.as_str()) {
+            None => vec![SchedulerKind::Bass, SchedulerKind::Hds],
+            // a typo must not silently run a different scheduler set
+            Some(list) => list
+                .split(',')
+                .map(|s| {
+                    SchedulerKind::parse(s.trim())
+                        .ok_or_else(|| anyhow::anyhow!("unknown sweep scheduler {:?}", s.trim()))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
+        anyhow::ensure!(!schedulers.is_empty(), "sweep.schedulers is empty");
+        Ok(Self { base, sizes_mb, schedulers })
+    }
 }
 
 /// Full experiment file: run selector + sweep overrides.
@@ -20,12 +157,18 @@ pub enum RunConfig {
 pub struct ExperimentConfig {
     pub run: RunConfig,
     pub table1: Table1Config,
+    /// Present when `run = "scenario"`.
+    pub scenario: Option<ScenarioSweep>,
 }
 
 impl ExperimentConfig {
     /// Defaults: Example 1 + the paper's Table I(a) configuration.
     pub fn default_wordcount() -> Self {
-        Self { run: RunConfig::Example1, table1: Table1Config::paper(JobKind::Wordcount) }
+        Self {
+            run: RunConfig::Example1,
+            table1: Table1Config::paper(JobKind::Wordcount),
+            scenario: None,
+        }
     }
 
     /// Load from a TOML-subset file (see `examples/experiment.toml`).
@@ -37,6 +180,7 @@ impl ExperimentConfig {
         };
         let mut cfg = Table1Config::paper(kind);
         apply_table1(&mut cfg, &t);
+        let mut scenario = None;
         let run = match t.get(".run").and_then(|v| v.as_str()).unwrap_or("example1") {
             "example3" => RunConfig::Example3 {
                 background: t
@@ -49,9 +193,13 @@ impl ExperimentConfig {
             "e2e" => RunConfig::E2e {
                 jobs: t.get("e2e.jobs").and_then(|v| v.as_usize()).unwrap_or(10),
             },
+            "scenario" => {
+                scenario = Some(ScenarioSweep::from_table(&t)?);
+                RunConfig::Scenario
+            }
             _ => RunConfig::Example1,
         };
-        Ok(Self { run, table1: cfg })
+        Ok(Self { run, table1: cfg, scenario })
     }
 }
 
@@ -73,6 +221,9 @@ fn apply_table1(cfg: &mut Table1Config, t: &Table) {
     }
     if let Some(v) = t.get("sweep.seed").and_then(|v| v.as_usize()) {
         cfg.seed = v as u64;
+    }
+    if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
+        cfg.threads = v.max(1);
     }
     if let Some(v) = t.get("sweep.schedulers").and_then(|v| v.as_str()) {
         let parsed: Vec<SchedulerKind> =
@@ -99,6 +250,7 @@ mod tests {
             r#"
 run = "table1"
 job = "sort"
+threads = 4
 
 [cluster]
 link_mbps = 200
@@ -117,11 +269,103 @@ seed = 99
         assert_eq!(c.table1.hosts_per_switch, 2);
         assert_eq!(c.table1.sizes_mb, vec![150.0, 300.0]);
         assert_eq!(c.table1.seed, 99);
+        assert_eq!(c.table1.threads, 4);
     }
 
     #[test]
     fn scheduler_list_parses() {
         let c = ExperimentConfig::from_str("[sweep]\nschedulers = \"bass, hds\"\n").unwrap();
         assert_eq!(c.table1.schedulers.len(), 2);
+    }
+
+    #[test]
+    fn scenario_file_builds_a_sweep() {
+        let c = ExperimentConfig::from_str(
+            r#"
+run = "scenario"
+name = "big-sort"
+job = "sort"
+threads = 3
+
+[cluster]
+topology = "tree"
+switches = 4
+hosts_per_switch = 4
+link_mbps = 100
+uplink_mbps = 1000
+replication = 2
+placement = "round_robin"
+
+[sdn]
+slot_secs = 0.5
+
+[background]
+flows = 5
+rate_mb_s = 2.0
+max_initial_idle = 10
+
+[sweep]
+sizes_mb = [150, 600]
+schedulers = "bass, bar, hds"
+seed = 42
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.run, RunConfig::Scenario);
+        let sweep = c.scenario.expect("scenario sweep");
+        assert_eq!(sweep.sizes_mb, vec![150.0, 600.0]);
+        assert_eq!(sweep.schedulers.len(), 3);
+        assert_eq!(sweep.base.threads, 3);
+        assert_eq!(sweep.base.slot_secs, 0.5);
+        assert_eq!(sweep.base.replication, 2);
+        match sweep.base.topology {
+            TopologyShape::Tree { switches, uplink_mbps, .. } => {
+                assert_eq!(switches, 4);
+                assert_eq!(uplink_mbps, 1000.0);
+            }
+            ref other => panic!("wrong topology {other:?}"),
+        }
+        // the grid: 2 sizes x 3 schedulers, layout shared per size
+        let pts = sweep.points();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0].seed, pts[1].seed);
+        assert_ne!(pts[0].seed, pts[3].seed);
+    }
+
+    #[test]
+    fn scenario_rejects_unknown_topology() {
+        let r = ExperimentConfig::from_str("run = \"scenario\"\n[cluster]\ntopology = \"mesh\"\n");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn scenario_rejects_typos_instead_of_defaulting() {
+        // a misspelled scheduler must not silently run the default pair
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[sweep]\nschedulers = \"bass, barr\"\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("barr"));
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[cluster]\nplacement = \"roundrobin\"\n",
+        );
+        assert!(r.is_err());
+        let r = ExperimentConfig::from_str("run = \"scenario\"\n[sdn]\nqos = \"q1q2\"\n");
+        assert!(r.is_err());
+        // the documented spellings parse
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[cluster]\nplacement = \"round_robin\"\n[sdn]\nqos = \"example3\"\n",
+        )
+        .unwrap();
+        let sweep = c.scenario.unwrap();
+        assert!(matches!(sweep.base.placement, PlacementPolicy::RoundRobin));
+        assert!(sweep.base.qos.is_some());
+    }
+
+    #[test]
+    fn cell_seed_shared_between_table1_and_scenarios() {
+        // one formula, two consumers: Table I cells and scenario grids
+        let cfg = Table1Config::paper(JobKind::Sort);
+        let spec = cfg.cell_spec(600.0, SchedulerKind::Bass);
+        assert_eq!(spec.seed, cell_seed(cfg.seed, 600.0));
     }
 }

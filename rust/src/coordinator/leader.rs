@@ -4,19 +4,17 @@ use std::sync::mpsc;
 use std::thread;
 
 use crate::cluster::Ledger;
-use crate::hdfs::Namenode;
 use crate::mapreduce::{JobId, TaskSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::CostModel;
-use crate::sched::{SchedCtx, Scheduler};
-use crate::sdn::Controller;
-use crate::sim::{Engine, FlowNet, TaskRecord};
-use crate::topology::builders::tree_cluster;
-use crate::topology::NodeId;
-use crate::util::{Secs, XorShift};
-use crate::workload::{BackgroundLoad, JobArrival, WorkloadBuilder};
-
-use super::super::experiments::SchedulerKind;
+use crate::scenario::{
+    shuffle_majority_node, slowstart_gate, BackgroundSpec, InitialLoad, ScenarioSpec,
+    SimSession, TopologyShape, WorkloadSpec,
+};
+use crate::sched::{SchedCtx, SchedulerKind};
+use crate::sim::Engine;
+use crate::util::Secs;
+use crate::workload::{JobArrival, WorkloadBuilder};
 
 /// One job submission into the coordinator.
 #[derive(Debug, Clone)]
@@ -64,55 +62,49 @@ impl Default for ClusterSetup {
     }
 }
 
-/// The long-lived leader: owns cluster state across jobs.
+impl ClusterSetup {
+    /// The scenario this setup describes: an online cluster with
+    /// background traffic and no pre-built workload (jobs arrive live).
+    pub fn scenario(&self, kind: SchedulerKind) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(
+            "coordinator",
+            TopologyShape::Tree {
+                switches: self.n_switches,
+                hosts_per_switch: self.hosts_per_switch,
+                edge_mbps: self.link_mbps,
+                uplink_mbps: self.link_mbps,
+            },
+            WorkloadSpec::None,
+        );
+        s.scheduler = kind;
+        s.slot_secs = self.slot_secs;
+        s.replication = self.replication;
+        s.reduces = self.reduces;
+        s.seed = self.seed;
+        // jobs arrive online; no synthetic initial idle
+        s.initial = InitialLoad::Sampled { max_secs: 0.0 };
+        s.background = BackgroundSpec { flows: self.bg_flows, rate_mb_s: self.bg_rate_mb_s };
+        s
+    }
+}
+
+/// The long-lived leader: owns the cluster session across jobs.
 pub struct Coordinator {
     setup: ClusterSetup,
     scheduler_kind: SchedulerKind,
-    nodes: Vec<NodeId>,
-    ctrl: Controller,
-    net: FlowNet,
-    nn: Namenode,
+    /// The live cluster (controller, flow net, namenode, RNG, scheduler)
+    /// built once through the scenario layer.
+    sess: SimSession,
     /// Actual node availability, carried across jobs.
     node_free: Vec<Secs>,
-    rng: XorShift,
     cost: CostModel,
-    sched: Box<dyn Scheduler>,
 }
 
 impl Coordinator {
     pub fn new(setup: ClusterSetup, kind: SchedulerKind, cost: CostModel) -> Self {
-        let (topo, nodes) = tree_cluster(
-            setup.n_switches,
-            setup.hosts_per_switch,
-            setup.link_mbps,
-            setup.link_mbps,
-        );
-        let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
-        let mut ctrl = Controller::new(topo, setup.slot_secs);
-        let mut net = FlowNet::new(&caps);
-        let mut rng = XorShift::new(setup.seed);
-        let bg = BackgroundLoad::sample(
-            &nodes,
-            0.0 + 1e-9, // jobs arrive online; no synthetic initial idle
-            setup.bg_flows,
-            setup.bg_rate_mb_s,
-            &mut rng,
-        );
-        bg.install(&mut ctrl, &mut net);
-        let node_free = vec![Secs::ZERO; nodes.len()];
-        let sched = kind.make();
-        Self {
-            setup,
-            scheduler_kind: kind,
-            nodes,
-            ctrl,
-            net,
-            nn: Namenode::new(),
-            node_free,
-            rng,
-            cost,
-            sched,
-        }
+        let sess = SimSession::new(&setup.scenario(kind));
+        let node_free = vec![Secs::ZERO; sess.nodes.len()];
+        Self { setup, scheduler_kind: kind, sess, node_free, cost }
     }
 
     pub fn scheduler_label(&self) -> &'static str {
@@ -123,38 +115,32 @@ impl Coordinator {
     pub fn handle(&mut self, req: &JobRequest) -> JobResult {
         let now = Secs(req.arrival.at_secs);
         let mut builder = WorkloadBuilder::new(req.arrival.kind);
-        builder.replication = self.setup.replication.min(self.nodes.len());
+        builder.replication = self.setup.replication.min(self.sess.nodes.len());
         builder.reduces = self.setup.reduces;
-        let job =
-            builder.build(req.id, req.arrival.data_mb, &self.nodes, &mut self.nn, &mut self.rng);
+        let job = builder.build(
+            req.id,
+            req.arrival.data_mb,
+            &self.sess.nodes,
+            &mut self.sess.nn,
+            &mut self.sess.rng,
+        );
         let maps: Vec<TaskSpec> = job.maps().cloned().collect();
         let mut reduces: Vec<TaskSpec> = job.reduces().cloned().collect();
 
         // node availability as of this arrival
         let init: Vec<Secs> = self.node_free.iter().map(|&f| f.max(now)).collect();
-        let mut ledger = Ledger::with_initial(init.clone());
+        self.sess.ledger = Ledger::with_initial(init.clone());
 
         // map phase
-        let map_assignment = {
-            let mut ctx = SchedCtx {
-                controller: &mut self.ctrl,
-                namenode: &self.nn,
-                ledger: &mut ledger,
-                authorized: self.nodes.clone(),
-                now,
-                cost: &self.cost,
-            node_speed: Vec::new(),
-            };
-            self.sched.schedule(&maps, Some(now), &mut ctx)
-        };
+        let map_assignment = self.schedule(&maps, Some(now), now);
         let lr = map_assignment.locality_ratio();
-        let mut engine = Engine::new(self.net.clone(), init.clone());
+        let mut engine = Engine::new(self.sess.net.clone(), init.clone());
         engine.load(&map_assignment);
         let map_records = engine.run();
 
         // reduce phase at slowstart
-        let gate = slowstart(&map_records, job.slowstart).max(now);
-        let hint = majority_node(&map_records, &maps, self.nodes.len());
+        let gate = slowstart_gate(&map_records, job.slowstart).max(now);
+        let hint = shuffle_majority_node(&map_records, &maps, self.sess.nodes.len());
         for r in &mut reduces {
             r.src_hint = Some(hint);
         }
@@ -164,20 +150,9 @@ impl Coordinator {
                 reduce_init[r.node.0] = r.finish;
             }
         }
-        let mut ledger2 = Ledger::with_initial(reduce_init.clone());
-        let reduce_assignment = {
-            let mut ctx = SchedCtx {
-                controller: &mut self.ctrl,
-                namenode: &self.nn,
-                ledger: &mut ledger2,
-                authorized: self.nodes.clone(),
-                now: gate,
-                cost: &self.cost,
-            node_speed: Vec::new(),
-            };
-            self.sched.schedule(&reduces, Some(gate), &mut ctx)
-        };
-        let mut engine2 = Engine::new(self.net.clone(), reduce_init);
+        self.sess.ledger = Ledger::with_initial(reduce_init.clone());
+        let reduce_assignment = self.schedule(&reduces, Some(gate), gate);
+        let mut engine2 = Engine::new(self.sess.net.clone(), reduce_init);
         engine2.load(&reduce_assignment);
         let reduce_records = engine2.run();
 
@@ -192,6 +167,24 @@ impl Coordinator {
         let mut m = JobMetrics::from_records(&all, now, Some(gate));
         m.lr = lr;
         JobResult { job: job.id, name: job.name.clone(), submitted_at: now.0, metrics: m }
+    }
+
+    fn schedule(
+        &mut self,
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        now: Secs,
+    ) -> crate::sim::Assignment {
+        let mut ctx = SchedCtx {
+            controller: &mut self.sess.ctrl,
+            namenode: &self.sess.nn,
+            ledger: &mut self.sess.ledger,
+            authorized: self.sess.nodes.clone(),
+            now,
+            cost: &self.cost,
+            node_speed: Vec::new(),
+        };
+        self.sess.sched.schedule(tasks, gate, &mut ctx)
     }
 
     /// Run a whole trace through a submitter thread + this leader,
@@ -215,32 +208,10 @@ impl Coordinator {
     }
 }
 
-fn slowstart(map_records: &[TaskRecord], frac: f64) -> Secs {
-    let mut fins: Vec<Secs> = map_records.iter().map(|r| r.finish).collect();
-    fins.sort();
-    let k = ((fins.len() as f64 * frac).ceil() as usize).clamp(1, fins.len());
-    fins[k - 1]
-}
-
-fn majority_node(map_records: &[TaskRecord], maps: &[TaskSpec], n: usize) -> NodeId {
-    let mut out = vec![0.0f64; n];
-    for r in map_records {
-        if let Some(t) = maps.iter().find(|t| t.id == r.task) {
-            out[r.node.0] += t.output_mb;
-        }
-    }
-    let mut best = 0;
-    for (i, &v) in out.iter().enumerate() {
-        if v > out[best] {
-            best = i;
-        }
-    }
-    NodeId(best)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::XorShift;
     use crate::workload::{JobKind, TraceGen};
 
     fn trace(n: usize) -> Vec<JobArrival> {

@@ -9,16 +9,16 @@
 //!   bandwidth-aware tradeoff matters most at low replication.
 //! * **Heterogeneous nodes** (Guo & Fox [14]) — per-node speed factors;
 //!   BASS's Eq. 4 argmin includes per-node `TP`, HDS ignores it.
+//!
+//! Every ablation point is a [`SimSession`] built from a tweaked
+//! [`ScenarioSpec`]; no driver wires substrates by hand.
 
-use crate::cluster::Ledger;
-use crate::hdfs::Namenode;
-use crate::mapreduce::TaskSpec;
 use crate::runtime::CostModel;
-use crate::sched::SchedCtx;
-use crate::sim::{Engine, FlowNet};
-use crate::topology::builders::tree_cluster;
-use crate::util::{Secs, XorShift};
-use crate::workload::{BackgroundLoad, JobKind, WorkloadBuilder};
+use crate::scenario::{
+    BackgroundSpec, InitialLoad, ScenarioSpec, SimSession, TopologyShape, WorkloadSpec,
+};
+use crate::util::Secs;
+use crate::workload::JobKind;
 
 use super::fixtures::SchedulerKind;
 use super::table1::{run_cell, Table1Config};
@@ -78,44 +78,39 @@ pub fn ablate_replication(ks: &[usize], cost: &CostModel) -> Vec<AblationPoint> 
         .collect()
 }
 
+/// The heterogeneous-cluster scenario: 2x3 tree, half the nodes
+/// `slow_factor`x slower, one 16-map Wordcount wave.
+pub fn hetero_spec(slow_factor: f64, kind: SchedulerKind) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        format!("hetero-{slow_factor}x"),
+        TopologyShape::Tree {
+            switches: 2,
+            hosts_per_switch: 3,
+            edge_mbps: 100.0,
+            uplink_mbps: 100.0,
+        },
+        WorkloadSpec::Job { kind: JobKind::Wordcount, data_mb: 1024.0 },
+    );
+    s.scheduler = kind;
+    s.seed = 99;
+    s.initial = InitialLoad::Sampled { max_secs: 10.0 };
+    s.background = BackgroundSpec { flows: 2, rate_mb_s: 3.0 };
+    // nodes 0..3 fast, 3..6 slow
+    s.node_speed = (0..6).map(|i| if i < 3 { 1.0 } else { slow_factor }).collect();
+    s
+}
+
 /// Heterogeneous cluster: half the nodes are `slow_factor`x slower.
 /// Returns (scheduler, executed JT) for one 16-map wave.
 pub fn ablate_heterogeneity(slow_factor: f64, cost: &CostModel) -> Vec<(&'static str, f64)> {
     [SchedulerKind::Bass, SchedulerKind::Hds]
         .into_iter()
         .map(|kind| {
-            let (topo, nodes) = tree_cluster(2, 3, 100.0, 100.0);
-            let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
-            let mut ctrl = crate::sdn::Controller::new(topo, 1.0);
-            let mut net = FlowNet::new(&caps);
-            let mut rng = XorShift::new(99);
-            let bg = BackgroundLoad::sample(&nodes, 10.0, 2, 3.0, &mut rng);
-            bg.install(&mut ctrl, &mut net);
-            let mut nn = Namenode::new();
-            let job = WorkloadBuilder::new(JobKind::Wordcount)
-                .build(0, 1024.0, &nodes, &mut nn, &mut rng);
-            let maps: Vec<TaskSpec> = job.maps().cloned().collect();
-            // nodes 0..3 fast, 3..6 slow
-            let speed: Vec<f64> =
-                (0..nodes.len()).map(|i| if i < 3 { 1.0 } else { slow_factor }).collect();
-            let init: Vec<Secs> = bg.initial_idle.clone();
-            let mut ledger = Ledger::with_initial(init.clone());
-            let mut sched = kind.make();
-            let a = {
-                let mut ctx = SchedCtx {
-                    controller: &mut ctrl,
-                    namenode: &nn,
-                    ledger: &mut ledger,
-                    authorized: nodes.clone(),
-                    now: Secs::ZERO,
-                    cost,
-                    node_speed: speed,
-                };
-                sched.schedule(&maps, None, &mut ctx)
-            };
-            let mut engine = Engine::new(net, init);
-            engine.load(&a);
-            let records = engine.run();
+            let mut sess = SimSession::new(&hetero_spec(slow_factor, kind));
+            let maps: Vec<_> =
+                sess.job.clone().expect("hetero job").maps().cloned().collect();
+            let a = sess.schedule(&maps, None, Secs::ZERO, cost);
+            let records = sess.execute(&a);
             let jt = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
             (kind.label(), jt)
         })

@@ -4,15 +4,15 @@
 //! the assignments through the discrete-event engine, producing both the
 //! scheduler-estimated and executed job completion times plus the Fig. 3
 //! per-node timelines. Paper targets: HDS 39s, BAR 38s, BASS 35s,
-//! Pre-BASS 34s.
+//! Pre-BASS 34s. The cluster comes exclusively from the scenario layer
+//! ([`ScenarioSpec::example1`]).
 
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
-use crate::sched::SchedCtx;
-use crate::sim::{Engine, FlowNet};
+use crate::scenario::{ScenarioSpec, SimSession};
 use crate::util::Secs;
 
-use super::fixtures::{example1_fixture, makespan, SchedulerKind};
+use super::fixtures::SchedulerKind;
 
 /// Result of one scheduler's run on Example 1.
 #[derive(Debug, Clone)]
@@ -32,35 +32,17 @@ pub fn run_example1(cost: &CostModel) -> Vec<Example1Outcome> {
     SchedulerKind::ALL.iter().map(|&k| run_one(k, cost)).collect()
 }
 
-/// Run a single scheduler on the Example 1 fixture.
+/// Run a single scheduler on the Example 1 scenario.
 pub fn run_one(kind: SchedulerKind, cost: &CostModel) -> Example1Outcome {
-    let mut fx = example1_fixture();
-    let mut sched = kind.make();
-    let assignment = {
-        let mut ctx = SchedCtx {
-            controller: &mut fx.ctrl,
-            namenode: &fx.nn,
-            ledger: &mut fx.ledger,
-            authorized: fx.nodes.clone(),
-            now: Secs::ZERO,
-            cost,
-            node_speed: Vec::new(),
-        };
-        sched.schedule(&fx.tasks, None, &mut ctx)
-    };
-    let estimated_jt = makespan(&fx.ledger, &fx.nodes);
+    let mut sess = SimSession::new(&ScenarioSpec::example1(kind));
+    let tasks = sess.tasks.clone();
+    let assignment = sess.schedule(&tasks, None, Secs::ZERO, cost);
+    let estimated_jt = sess.estimated_makespan();
 
     // execute: engine node set = all 6 hosts; non-task hosts start free
-    let mut initial = vec![Secs::ZERO; 6];
-    for (i, &t) in fx.initial_idle.iter().enumerate() {
-        initial[i] = t;
-    }
-    let net = FlowNet::new(&fx.link_caps_mbps);
-    let mut engine = Engine::new(net, initial);
-    engine.load(&assignment);
-    let records = engine.run();
+    let records = sess.execute(&assignment);
     let executed_jt = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
-    let timelines = NodeTimeline::build(&records, 4);
+    let timelines = NodeTimeline::build(&records, sess.nodes.len());
     Example1Outcome { scheduler: kind.label(), estimated_jt, executed_jt, timelines }
 }
 

@@ -6,11 +6,12 @@
 //! traffic present, the queued scheme finishes the shuffle markedly
 //! earlier because the shuffle no longer splits the pipe with background
 //! flows.
+//!
+//! The Fig. 2 cluster (and its QoS-configured flow network) comes from
+//! the scenario layer; this driver only injects the flows.
 
+use crate::scenario::{ScenarioSpec, SimSession, TopologyShape, WorkloadSpec};
 use crate::sdn::{QosPolicy, TrafficClass};
-use crate::sim::FlowNet;
-use crate::topology::builders::fig2;
-
 
 /// Outcome of the QoS comparison.
 #[derive(Debug, Clone)]
@@ -21,6 +22,18 @@ pub struct Example3Outcome {
     pub queued_secs: f64,
     /// queued vs shared speedup factor.
     pub speedup: f64,
+}
+
+/// The Example 3 scenario: Fig. 2 at the example's 150 Mbps switch rate,
+/// optionally with the paper's queue policy installed.
+pub fn example3_spec(qos: Option<QosPolicy>) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        "example3",
+        TopologyShape::Fig2 { link_mbps: 150.0 },
+        WorkloadSpec::None,
+    );
+    s.qos = qos;
+    s
 }
 
 /// Run the comparison: a 640 MB shuffle from ND2 to ND3 (crosses both
@@ -37,14 +50,10 @@ pub fn run_example3(n_background: usize) -> Example3Outcome {
 }
 
 fn run_mode(qos: Option<QosPolicy>, n_background: usize) -> f64 {
-    let f = fig2(150.0); // Example 3's 150 Mbps switch rate
-    let caps: Vec<f64> = (0..f.topo.n_links()).map(|_| 150.0).collect();
-    let mut net = FlowNet::new(&caps);
-    if let Some(q) = qos {
-        net.set_qos(q);
-    }
-    let shuffle_path = f.topo.route(f.task_nodes[1], f.task_nodes[2]).unwrap();
-    let other_path = f.topo.route(f.task_nodes[0], f.task_nodes[3]).unwrap();
+    let sess = SimSession::new(&example3_spec(qos));
+    let shuffle_path = sess.route(sess.nodes[1], sess.nodes[2]).unwrap();
+    let other_path = sess.route(sess.nodes[0], sess.nodes[3]).unwrap();
+    let mut net = sess.net;
     for _ in 0..n_background {
         net.add_background(shuffle_path.clone(), TrafficClass::Background);
     }

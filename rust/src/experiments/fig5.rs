@@ -1,7 +1,8 @@
 //! Fig. 5 driver: JT-vs-data-size curves for both jobs.
 //!
 //! Thin wrapper over the Table I sweep that reshapes rows into
-//! per-scheduler series — the two panels of the paper's Fig. 5.
+//! per-scheduler series — the two panels of the paper's Fig. 5. The
+//! `threads` knob fans the underlying sweep cells across workers.
 
 use crate::runtime::CostModel;
 use crate::workload::JobKind;
@@ -17,12 +18,13 @@ pub struct Fig5Panel {
     pub series: Vec<(&'static str, Vec<f64>)>,
 }
 
-/// Run both panels (Wordcount + Sort).
-pub fn run_fig5(cost: &CostModel, sizes_mb: Option<Vec<f64>>) -> Vec<Fig5Panel> {
+/// Run both panels (Wordcount + Sort) on `threads` sweep workers.
+pub fn run_fig5(cost: &CostModel, sizes_mb: Option<Vec<f64>>, threads: usize) -> Vec<Fig5Panel> {
     [JobKind::Wordcount, JobKind::Sort]
         .into_iter()
         .map(|kind| {
             let mut cfg = Table1Config::paper(kind);
+            cfg.threads = threads;
             if let Some(s) = &sizes_mb {
                 cfg.sizes_mb = s.clone();
             }
@@ -56,7 +58,7 @@ mod tests {
 
     #[test]
     fn panels_have_monotone_jt_in_size() {
-        let panels = run_fig5(&CostModel::rust_only(), Some(vec![150.0, 600.0]));
+        let panels = run_fig5(&CostModel::rust_only(), Some(vec![150.0, 600.0]), 1);
         assert_eq!(panels.len(), 2);
         for p in &panels {
             assert_eq!(p.series.len(), 3);
@@ -68,6 +70,17 @@ mod tests {
                     p.job
                 );
             }
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_the_panels() {
+        let cost = CostModel::rust_only();
+        let serial = run_fig5(&cost, Some(vec![150.0, 300.0]), 1);
+        let fanned = run_fig5(&cost, Some(vec![150.0, 300.0]), 3);
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.series, b.series);
         }
     }
 }

@@ -1,55 +1,21 @@
 //! Shared experiment fixtures — most importantly the paper's Example 1.
+//!
+//! The scheduler registry now lives in [`crate::sched::kind`] and the
+//! cluster wiring in [`crate::scenario`]; this module re-exports the
+//! registry for compatibility and decomposes an Example 1 session into
+//! the flat fixture the scheduler unit tests poke at.
 
 use crate::cluster::Ledger;
 use crate::hdfs::Namenode;
 use crate::mapreduce::TaskSpec;
-use crate::sched::{Bar, Bass, Hds, PreBass, Scheduler};
+use crate::scenario::{ScenarioSpec, SimSession};
 use crate::sdn::Controller;
-use crate::topology::builders::fig2;
 use crate::topology::NodeId;
 use crate::util::Secs;
 
-/// Selector for the paper's four schedulers.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SchedulerKind {
-    Hds,
-    Bar,
-    Bass,
-    PreBass,
-}
-
-impl SchedulerKind {
-    pub const ALL: [SchedulerKind; 4] =
-        [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass, SchedulerKind::PreBass];
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            SchedulerKind::Hds => "HDS",
-            SchedulerKind::Bar => "BAR",
-            SchedulerKind::Bass => "BASS",
-            SchedulerKind::PreBass => "Pre-BASS",
-        }
-    }
-
-    pub fn make(&self) -> Box<dyn Scheduler> {
-        match self {
-            SchedulerKind::Hds => Box::new(Hds::new()),
-            SchedulerKind::Bar => Box::new(Bar::new()),
-            SchedulerKind::Bass => Box::new(Bass::new()),
-            SchedulerKind::PreBass => Box::new(PreBass::new()),
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "hds" => Some(SchedulerKind::Hds),
-            "bar" => Some(SchedulerKind::Bar),
-            "bass" => Some(SchedulerKind::Bass),
-            "pre-bass" | "prebass" | "pre_bass" => Some(SchedulerKind::PreBass),
-            _ => None,
-        }
-    }
-}
+/// Re-export: selector for the paper's four schedulers (promoted to
+/// `sched::kind`; kept here so existing imports stay valid).
+pub use crate::sched::SchedulerKind;
 
 /// The Example 1 testbed: Fig. 2 topology at the paper's effective
 /// 12.8 MB/s (the paper rounds 64MB/100Mbps to 5s), 9 map tasks with
@@ -72,39 +38,12 @@ pub struct Example1Fixture {
     pub link_caps_mbps: Vec<f64>,
 }
 
-/// Build the Example 1 fixture.
+/// Build the Example 1 fixture (decomposed from a [`SimSession`] so the
+/// scheduler unit tests can hold each substrate piece separately).
 pub fn example1_fixture() -> Example1Fixture {
-    let f = fig2(102.4);
-    let link_caps_mbps = (0..f.topo.n_links()).map(|_| 102.4).collect();
-    let ctrl = Controller::new(f.topo, 1.0);
-    let nd = f.task_nodes;
-    let mut nn = Namenode::new();
-    let reps: [[usize; 2]; 9] = [
-        [1, 2], // TK1 {ND2, ND3} — given in the paper
-        [0, 3], // TK2 {ND1, ND4}
-        [0, 1], // TK3 {ND1, ND2}
-        [2, 0], // TK4 {ND3, ND1}
-        [3, 1], // TK5 {ND4, ND2}
-        [1, 2], // TK6 {ND2, ND3}
-        [0, 2], // TK7 {ND1, ND3}
-        [3, 0], // TK8 {ND4, ND1}
-        [2, 0], // TK9 {ND3, ND1}
-    ];
-    let mut tasks = Vec::new();
-    for (i, r) in reps.iter().enumerate() {
-        let b = nn.add_block(64.0, vec![nd[r[0]], nd[r[1]]]);
-        tasks.push(TaskSpec::map(i, b, 64.0, Secs(9.0), 0.0));
-    }
-    let initial_idle = vec![Secs(3.0), Secs(9.0), Secs(20.0), Secs(7.0)];
-    let ledger = Ledger::with_initial(vec![
-        Secs(3.0),
-        Secs(9.0),
-        Secs(20.0),
-        Secs(7.0),
-        Secs::INF,
-        Secs::INF,
-    ]);
-    Example1Fixture { ctrl, nn, ledger, nodes: nd.to_vec(), tasks, initial_idle, link_caps_mbps }
+    let SimSession { ctrl, nn, ledger, nodes, tasks, initial_idle, link_caps_mbps, .. } =
+        SimSession::new(&ScenarioSpec::example1(SchedulerKind::Bass));
+    Example1Fixture { ctrl, nn, ledger, nodes, tasks, initial_idle, link_caps_mbps }
 }
 
 /// Makespan over the task nodes of a ledger.
@@ -122,6 +61,7 @@ mod tests {
         assert_eq!(f.tasks.len(), 9);
         assert_eq!(f.nodes.len(), 4);
         assert_eq!(f.link_caps_mbps.len(), 8);
+        assert_eq!(f.initial_idle, vec![Secs(3.0), Secs(9.0), Secs(20.0), Secs(7.0)]);
         // TK1 replicas are the paper's {ND2, ND3}
         let b = f.tasks[0].input.unwrap();
         assert_eq!(f.nn.block(b).replicas, vec![f.nodes[1], f.nodes[2]]);

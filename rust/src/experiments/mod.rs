@@ -1,5 +1,9 @@
 //! One driver per paper table/figure — shared by `examples/`, `benches/`
 //! and the CLI. See DESIGN.md's experiment index.
+//!
+//! Drivers are thin: each expands its knobs into [`crate::scenario`]
+//! specs and runs the resulting sessions; none of them wires
+//! `Controller`/`Namenode`/`Ledger`/`FlowNet` by hand.
 
 pub mod ablations;
 pub mod example1;
@@ -11,11 +15,11 @@ pub mod table1;
 
 pub use ablations::{
     ablate_background, ablate_heterogeneity, ablate_replication, ablate_slot_duration,
-    AblationPoint,
+    hetero_spec, AblationPoint,
 };
 pub use example1::{run_example1, run_one, Example1Outcome};
-pub use example3::{run_example3, Example3Outcome};
+pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;
-pub use scale::{run_scale, ScalePoint};
 pub use fixtures::{example1_fixture, makespan, Example1Fixture, SchedulerKind};
+pub use scale::{run_scale, scale_spec, ScalePoint};
 pub use table1::{run_cell, run_cell_for_bench, run_table1, Table1Config, Table1Row};

@@ -4,19 +4,19 @@
 //! Sweeps cluster size (nodes) with a proportionally sized map wave and
 //! measures (a) the scheduler's decision latency and (b) the executed
 //! makespan, BASS vs HDS. The XLA cost-model path amortizes with cluster
-//! size (one batched evaluation per round regardless of n).
+//! size (one batched evaluation per round regardless of n). Each sweep
+//! point is a hermetic [`SimSession`], so the grid fans out across
+//! `threads` workers; the *metrics* are bitwise-identical either way
+//! (only the measured `sched_secs` wall times vary with load).
 
 use std::time::Instant;
 
-use crate::cluster::Ledger;
-use crate::hdfs::{Namenode, PlacementPolicy};
-use crate::workload::BackgroundLoad;
-use crate::mapreduce::TaskSpec;
 use crate::runtime::CostModel;
-use crate::sched::SchedCtx;
-use crate::sim::{Engine, FlowNet};
-use crate::topology::builders::tree_cluster;
-use crate::util::{Secs, XorShift, BLOCK_MB};
+use crate::scenario::{
+    parallel_map, BackgroundSpec, InitialLoad, ScenarioSpec, SimSession, TopologyShape,
+    WorkloadSpec,
+};
+use crate::util::Secs;
 
 use super::fixtures::SchedulerKind;
 
@@ -32,63 +32,54 @@ pub struct ScalePoint {
     pub makespan: f64,
 }
 
+/// The scenario one (hosts-per-switch, scheduler) point expands to: an
+/// 8-switch tree in the shared-cluster regime (the paper's motivation) —
+/// skewed initial load + background traffic making bandwidth scarce.
+pub fn scale_spec(per_sw: usize, kind: SchedulerKind) -> ScenarioSpec {
+    let n_nodes = 8 * per_sw;
+    let mut s = ScenarioSpec::new(
+        format!("scale-{n_nodes}nodes"),
+        TopologyShape::Tree {
+            switches: 8,
+            hosts_per_switch: per_sw,
+            edge_mbps: 100.0,
+            uplink_mbps: 1000.0,
+        },
+        WorkloadSpec::MapWave { tasks: 2 * n_nodes, compute_secs: 20.0, output_mb: 16.0 },
+    );
+    s.scheduler = kind;
+    s.replication = 2;
+    s.seed = 31 + per_sw as u64;
+    s.initial = InitialLoad::Sampled { max_secs: 60.0 };
+    s.background = BackgroundSpec { flows: n_nodes / 4, rate_mb_s: 4.0 };
+    s
+}
+
 /// Run the sweep: `sizes` are hosts-per-switch counts on an 8-switch
-/// tree; tasks = 2x nodes.
-pub fn run_scale(per_switch_sizes: &[usize], cost: &CostModel) -> Vec<ScalePoint> {
-    let mut out = Vec::new();
-    for &per_sw in per_switch_sizes {
-        let n_sw = 8;
-        let n_nodes = n_sw * per_sw;
-        let m_tasks = 2 * n_nodes;
-        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
-            let (topo, nodes) = tree_cluster(n_sw, per_sw, 100.0, 1000.0);
-            let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
-            let mut ctrl = crate::sdn::Controller::new(topo, 1.0);
-            let mut net = FlowNet::new(&caps);
-            let mut nn = Namenode::new();
-            let mut rng = XorShift::new(31 + per_sw as u64);
-            // shared-cluster regime (the paper's motivation): skewed
-            // initial load + background traffic making bandwidth scarce
-            let bg = BackgroundLoad::sample(&nodes, 60.0, n_nodes / 4, 4.0, &mut rng);
-            bg.install(&mut ctrl, &mut net);
-            let blocks = PlacementPolicy::RandomDistinct
-                .place(&mut nn, &nodes, m_tasks, BLOCK_MB, 2, &mut rng);
-            let tasks: Vec<TaskSpec> = blocks
-                .iter()
-                .enumerate()
-                .map(|(i, &b)| TaskSpec::map(i, b, BLOCK_MB, Secs(20.0), 16.0))
-                .collect();
-            let init = bg.initial_idle.clone();
-            let mut ledger = Ledger::with_initial(init.clone());
-            let mut sched = kind.make();
-            let t0 = Instant::now();
-            let a = {
-                let mut ctx = SchedCtx {
-                    controller: &mut ctrl,
-                    namenode: &nn,
-                    ledger: &mut ledger,
-                    authorized: nodes.clone(),
-                    now: Secs::ZERO,
-                    cost,
-                    node_speed: Vec::new(),
-                };
-                sched.schedule(&tasks, None, &mut ctx)
-            };
-            let sched_secs = t0.elapsed().as_secs_f64();
-            let mut engine = Engine::new(net, init);
-            engine.load(&a);
-            let records = engine.run();
-            let makespan = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
-            out.push(ScalePoint {
-                nodes: n_nodes,
-                tasks: m_tasks,
-                scheduler: kind.label(),
-                sched_secs,
-                makespan,
-            });
+/// tree; tasks = 2x nodes. `threads` fans points across workers.
+pub fn run_scale(per_switch_sizes: &[usize], cost: &CostModel, threads: usize) -> Vec<ScalePoint> {
+    let points: Vec<(usize, SchedulerKind)> = per_switch_sizes
+        .iter()
+        .flat_map(|&per_sw| {
+            [SchedulerKind::Bass, SchedulerKind::Hds].into_iter().map(move |k| (per_sw, k))
+        })
+        .collect();
+    parallel_map(points, threads, |(per_sw, kind)| {
+        let mut sess = SimSession::new(&scale_spec(per_sw, kind));
+        let tasks = sess.tasks.clone();
+        let t0 = Instant::now();
+        let a = sess.schedule(&tasks, None, Secs::ZERO, cost);
+        let sched_secs = t0.elapsed().as_secs_f64();
+        let records = sess.execute(&a);
+        let makespan = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+        ScalePoint {
+            nodes: sess.nodes.len(),
+            tasks: tasks.len(),
+            scheduler: kind.label(),
+            sched_secs,
+            makespan,
         }
-    }
-    out
+    })
 }
 
 #[cfg(test)]
@@ -97,7 +88,7 @@ mod tests {
 
     #[test]
     fn scale_sweep_shapes() {
-        let pts = run_scale(&[2, 4], &CostModel::rust_only());
+        let pts = run_scale(&[2, 4], &CostModel::rust_only(), 1);
         assert_eq!(pts.len(), 4);
         for p in &pts {
             assert!(p.makespan > 0.0);
@@ -113,6 +104,29 @@ mod tests {
                 pts.iter().find(|p| p.scheduler == s && p.nodes == n).unwrap().makespan
             };
             assert!(jt("BASS") <= jt("HDS") * 1.25, "n={n}: BASS {} HDS {}", jt("BASS"), jt("HDS"));
+        }
+    }
+
+    #[test]
+    fn threaded_sweep_metrics_are_bitwise_identical() {
+        // acceptance: >= 4 sweep points, threads > 1 == serial, bitwise
+        let cost = CostModel::rust_only();
+        let serial = run_scale(&[1, 2, 3, 4], &cost, 1);
+        let fanned = run_scale(&[1, 2, 3, 4], &cost, 4);
+        assert_eq!(serial.len(), 8);
+        assert_eq!(serial.len(), fanned.len());
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.scheduler, b.scheduler);
+            assert!(
+                a.makespan == b.makespan,
+                "{} n={}: serial {} != fanned {}",
+                a.scheduler,
+                a.nodes,
+                a.makespan,
+                b.makespan
+            );
         }
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! For each data size and scheduler, a fresh 6-node / 2-switch cluster
 //! (the paper's testbed: 64MB blocks, 3 replicas, 100 Mbps links) runs
-//! one job with seeded background load, in two phases:
+//! one job with seeded background load through the scenario layer's
+//! two-phase pipeline ([`SimSession::run_job`]):
 //!
 //! 1. **Map phase** — scheduled at t=0, executed through the DES engine
 //!    (HDS/BAR transfers contend in the flow network; BASS/Pre-BASS use
@@ -14,20 +15,17 @@
 //!
 //! Identical seeds per data size mean every scheduler sees the exact
 //! same block layout, initial load, and background flows: all deltas are
-//! scheduling.
+//! scheduling. Every (size, scheduler) cell is a hermetic session, so
+//! the sweep fans out across `cfg.threads` workers with results
+//! bitwise-identical to a serial run.
 
-use crate::cluster::Ledger;
-use crate::hdfs::Namenode;
-use crate::mapreduce::TaskSpec;
 use crate::metrics::JobMetrics;
 use crate::runtime::CostModel;
-use crate::sched::SchedCtx;
-use crate::sdn::Controller;
-use crate::sim::{Engine, FlowNet, TaskRecord};
-use crate::topology::builders::tree_cluster;
-use crate::topology::NodeId;
-use crate::util::{Secs, XorShift};
-use crate::workload::{BackgroundLoad, JobKind, WorkloadBuilder};
+use crate::scenario::{
+    cell_seed, parallel_map, BackgroundSpec, InitialLoad, ScenarioSpec, SimSession,
+    TopologyShape, WorkloadSpec,
+};
+use crate::workload::JobKind;
 
 use super::fixtures::SchedulerKind;
 
@@ -52,6 +50,8 @@ pub struct Table1Config {
     pub bg_rate_mb_s: f64,
     /// Reduce slowstart fraction.
     pub slowstart: f64,
+    /// Worker threads for the sweep grid (1 = serial, same results).
+    pub threads: usize,
 }
 
 impl Table1Config {
@@ -71,7 +71,32 @@ impl Table1Config {
             bg_flows: 3,
             bg_rate_mb_s: 3.0,
             slowstart: 0.5,
+            threads: 1,
         }
+    }
+
+    /// The scenario one (size, scheduler) cell expands to. Deterministic
+    /// per (seed, size): identical layout across schedulers.
+    pub fn cell_spec(&self, data_mb: f64, kind: SchedulerKind) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(
+            format!("table1-{}-{}MB", self.kind.label(), data_mb as u64),
+            TopologyShape::Tree {
+                switches: self.n_switches,
+                hosts_per_switch: self.hosts_per_switch,
+                edge_mbps: self.link_mbps,
+                uplink_mbps: self.link_mbps,
+            },
+            WorkloadSpec::Job { kind: self.kind, data_mb },
+        );
+        s.scheduler = kind;
+        s.slot_secs = self.slot_secs;
+        s.replication = self.replication;
+        s.reduces = self.reduces;
+        s.slowstart = self.slowstart;
+        s.seed = cell_seed(self.seed, data_mb);
+        s.initial = InitialLoad::Sampled { max_secs: self.max_initial_idle };
+        s.background = BackgroundSpec { flows: self.bg_flows, rate_mb_s: self.bg_rate_mb_s };
+        s
     }
 }
 
@@ -83,16 +108,18 @@ pub struct Table1Row {
     pub metrics: JobMetrics,
 }
 
-/// Run the full sweep.
+/// Run the full sweep, fanning cells across `cfg.threads` workers.
 pub fn run_table1(cfg: &Table1Config, cost: &CostModel) -> Vec<Table1Row> {
-    let mut rows = Vec::new();
-    for &size in &cfg.sizes_mb {
-        for &kind in &cfg.schedulers {
-            let metrics = run_cell(cfg, size, kind, cost);
-            rows.push(Table1Row { scheduler: kind.label(), data_mb: size, metrics });
-        }
-    }
-    rows
+    let points: Vec<(f64, SchedulerKind)> = cfg
+        .sizes_mb
+        .iter()
+        .flat_map(|&size| cfg.schedulers.iter().map(move |&kind| (size, kind)))
+        .collect();
+    parallel_map(points, cfg.threads, |(size, kind)| Table1Row {
+        scheduler: kind.label(),
+        data_mb: size,
+        metrics: run_cell(cfg, size, kind, cost),
+    })
 }
 
 /// Run one (size, scheduler) cell.
@@ -102,126 +129,12 @@ pub fn run_cell(
     kind: SchedulerKind,
     cost: &CostModel,
 ) -> JobMetrics {
-    // deterministic per (seed, size): identical layout across schedulers
-    let cell_seed = cfg.seed ^ (data_mb as u64).wrapping_mul(0x9E37_79B9);
-    let mut rng = XorShift::new(cell_seed);
-
-    let (topo, nodes) =
-        tree_cluster(cfg.n_switches, cfg.hosts_per_switch, cfg.link_mbps, cfg.link_mbps);
-    let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
-    let mut ctrl = Controller::new(topo, cfg.slot_secs);
-    let mut net = FlowNet::new(&caps);
-    let bg = BackgroundLoad::sample(
-        &nodes,
-        cfg.max_initial_idle,
-        cfg.bg_flows,
-        cfg.bg_rate_mb_s,
-        &mut rng,
-    );
-    bg.install(&mut ctrl, &mut net);
-
-    let mut nn = Namenode::new();
-    let mut builder = WorkloadBuilder::new(cfg.kind);
-    builder.replication = cfg.replication;
-    builder.reduces = cfg.reduces;
-    let job = builder.build(0, data_mb, &nodes, &mut nn, &mut rng);
-    let maps: Vec<TaskSpec> = job.maps().cloned().collect();
-    let mut reduces: Vec<TaskSpec> = job.reduces().cloned().collect();
-
-    let mut ledger_init = vec![Secs::ZERO; nodes.len()];
-    for (i, &t) in bg.initial_idle.iter().enumerate() {
-        ledger_init[i] = t;
-    }
-    let mut ledger = Ledger::with_initial(ledger_init.clone());
-    let mut sched = kind.make();
-
-    // ---- phase 1: maps ----
-    let map_assignment = {
-        let mut ctx = SchedCtx {
-            controller: &mut ctrl,
-            namenode: &nn,
-            ledger: &mut ledger,
-            authorized: nodes.clone(),
-            now: Secs::ZERO,
-            cost,
-            node_speed: Vec::new(),
-        };
-        sched.schedule(&maps, None, &mut ctx)
-    };
-    let lr = map_assignment.locality_ratio();
-    let mut engine = Engine::new(net.clone(), ledger_init.clone());
-    engine.load(&map_assignment);
-    let map_records = engine.run();
-
-    // ---- slowstart gate + shuffle source hints ----
-    let gate = slowstart_gate(&map_records, cfg.slowstart);
-    let hint = shuffle_majority_node(&map_records, &maps, nodes.len());
-    for r in &mut reduces {
-        r.src_hint = Some(hint);
-    }
-
-    // ---- phase 2: reduces, from the executed map state ----
-    let mut reduce_init = ledger_init;
-    for r in &map_records {
-        if reduce_init[r.node.0] < r.finish {
-            reduce_init[r.node.0] = r.finish;
-        }
-    }
-    let mut ledger2 = Ledger::with_initial(reduce_init.clone());
-    let reduce_assignment = {
-        let mut ctx = SchedCtx {
-            controller: &mut ctrl,
-            namenode: &nn,
-            ledger: &mut ledger2,
-            authorized: nodes.clone(),
-            now: gate,
-            cost,
-            node_speed: Vec::new(),
-        };
-        sched.schedule(&reduces, Some(gate), &mut ctx)
-    };
-    let mut engine2 = Engine::new(net, reduce_init);
-    engine2.load(&reduce_assignment);
-    let reduce_records = engine2.run();
-
-    let mut all = map_records;
-    all.extend(reduce_records);
-    let mut m = JobMetrics::from_records(&all, Secs::ZERO, Some(gate));
-    m.lr = lr;
-    m
+    SimSession::new(&cfg.cell_spec(data_mb, kind)).run_job(cost)
 }
 
 /// Bench helper: one BASS cell (used by `benches/table1_wordcount.rs`).
 pub fn run_cell_for_bench(cfg: &Table1Config, data_mb: f64, cost: &CostModel) -> JobMetrics {
     run_cell(cfg, data_mb, SchedulerKind::Bass, cost)
-}
-
-/// Time at which `frac` of the maps have finished.
-fn slowstart_gate(map_records: &[TaskRecord], frac: f64) -> Secs {
-    let mut fins: Vec<Secs> = map_records.iter().map(|r| r.finish).collect();
-    fins.sort();
-    let k = ((fins.len() as f64 * frac).ceil() as usize).clamp(1, fins.len());
-    fins[k - 1]
-}
-
-/// Node holding the most map output (the reduces' shuffle source hint).
-fn shuffle_majority_node(
-    map_records: &[TaskRecord],
-    maps: &[TaskSpec],
-    n_nodes: usize,
-) -> NodeId {
-    let mut out_mb = vec![0.0f64; n_nodes];
-    for r in map_records {
-        let t = maps.iter().find(|t| t.id == r.task).expect("map record");
-        out_mb[r.node.0] += t.output_mb;
-    }
-    let best = out_mb
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.total_cmp(b.1))
-        .map(|(i, _)| i)
-        .unwrap_or(0);
-    NodeId(best)
 }
 
 #[cfg(test)]
@@ -282,22 +195,29 @@ mod tests {
     }
 
     #[test]
-    fn slowstart_gate_quantile() {
-        use crate::mapreduce::TaskId;
-        let recs: Vec<TaskRecord> = (0..4)
-            .map(|i| TaskRecord {
-                task: TaskId(i),
-                node: NodeId(0),
-                picked_at: Secs::ZERO,
-                input_ready: Secs::ZERO,
-                compute_start: Secs::ZERO,
-                finish: Secs((i + 1) as f64 * 10.0),
-                is_local: true,
-                is_map: true,
-            })
-            .collect();
-        assert_eq!(slowstart_gate(&recs, 0.5), Secs(20.0));
-        assert_eq!(slowstart_gate(&recs, 1.0), Secs(40.0));
-        assert_eq!(slowstart_gate(&recs, 0.0), Secs(10.0));
+    fn threaded_sweep_is_bitwise_identical() {
+        let serial = small_cfg(JobKind::Sort);
+        let mut fanned = small_cfg(JobKind::Sort);
+        fanned.threads = 4;
+        let cost = CostModel::rust_only();
+        let a = run_table1(&serial, &cost);
+        let b = run_table1(&fanned, &cost);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.scheduler, y.scheduler);
+            assert_eq!(x.data_mb, y.data_mb);
+            assert_eq!(x.metrics, y.metrics);
+        }
+    }
+
+    #[test]
+    fn cell_spec_is_identical_across_schedulers() {
+        // the sweep's control variable: same seed/layout, scheduler only
+        let cfg = small_cfg(JobKind::Sort);
+        let a = cfg.cell_spec(600.0, SchedulerKind::Bass);
+        let b = cfg.cell_spec(600.0, SchedulerKind::Hds);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.slowstart, b.slowstart);
+        assert_ne!(a.scheduler, b.scheduler);
     }
 }

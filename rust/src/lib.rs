@@ -16,6 +16,9 @@
 //!   prefetching extension (Discussion 2).
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas cost
 //!   model (`artifacts/cost_*.hlo.txt`); Python never runs at request time.
+//! * [`scenario`] — the construction layer: a declarative
+//!   [`scenario::ScenarioSpec`] builds a [`scenario::SimSession`] owning
+//!   every substrate object; all drivers construct clusters through it.
 //! * [`coordinator`] — the leader event loop binding everything together.
 //! * [`experiments`] — one driver per paper table/figure (Example 1-3,
 //!   Table I(a)/(b), Fig 4, Fig 5), shared by `examples/` and `benches/`.
@@ -33,6 +36,7 @@ pub mod hdfs;
 pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sdn;
 pub mod sim;

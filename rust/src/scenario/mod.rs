@@ -1,0 +1,28 @@
+//! The scenario layer: declarative cluster construction + session state.
+//!
+//! Every experiment in the repo — the paper's Example 1/3, Table I,
+//! Fig. 5, the scale sweep, the ablations, the online coordinator — used
+//! to hand-wire its own `Topology`/`Controller`/`Namenode`/`Ledger`/
+//! `FlowNet` stack. This module replaces that copy-pasted wiring with
+//! two pieces:
+//!
+//! * [`ScenarioSpec`] — a declarative description of a cluster scenario:
+//!   topology shape, HDFS placement policy, workload profile, scheduler
+//!   kind, QoS policy, slot granularity, background load, seed.
+//! * [`SimSession`] — the built session: it owns construction of every
+//!   substrate object and drives schedule → execute → metrics. A session
+//!   is one `Send` value, so sweep drivers fan independent scenario
+//!   points out across worker threads ([`sweep::parallel_map`]) with
+//!   bitwise-identical results to a serial run (each point is hermetic:
+//!   its own seed, its own session).
+//!
+//! New workloads need a `ScenarioSpec` (or a TOML file for the CLI's
+//! `scenario` subcommand), not a new driver. See DESIGN.md.
+
+pub mod session;
+pub mod spec;
+pub mod sweep;
+
+pub use session::{shuffle_majority_node, slowstart_gate, SimSession};
+pub use spec::{cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
+pub use sweep::{parallel_map, run_job_grid, SweepRow};

@@ -1,0 +1,426 @@
+//! [`SimSession`]: one built scenario — every substrate object plus the
+//! schedule → execute → metrics drivers.
+
+use crate::cluster::Ledger;
+use crate::hdfs::Namenode;
+use crate::mapreduce::{JobSpec, TaskSpec};
+use crate::metrics::JobMetrics;
+use crate::runtime::CostModel;
+use crate::sched::{SchedCtx, Scheduler};
+use crate::sdn::Controller;
+use crate::sim::{Assignment, Engine, FlowNet, TaskRecord};
+use crate::topology::builders::{fig2, tree_cluster};
+use crate::topology::{LinkId, NodeId, Topology};
+use crate::util::{Secs, XorShift, BLOCK_MB};
+use crate::workload::{BackgroundLoad, WorkloadBuilder};
+
+use super::spec::{InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
+
+/// A built scenario: cluster substrates + workload + scheduler, bundled
+/// into one `Send` value so sweep points can move across worker threads.
+///
+/// Construction is the **only** place in the crate that wires
+/// `Controller`/`Namenode`/`Ledger`/`FlowNet` together; experiment
+/// drivers consume sessions.
+pub struct SimSession {
+    pub spec: ScenarioSpec,
+    /// Task nodes (the authorized set; excludes Fig. 2's master/controller).
+    pub nodes: Vec<NodeId>,
+    pub ctrl: Controller,
+    /// Pristine flow network: background installed, no job flows yet.
+    /// Executions clone it so each phase contends against a fresh copy.
+    pub net: FlowNet,
+    pub nn: Namenode,
+    /// Live availability ledger the schedulers mutate.
+    pub ledger: Ledger,
+    pub rng: XorShift,
+    pub sched: Box<dyn Scheduler + Send>,
+    /// Pre-built map wave (Example1 / MapWave workloads; empty otherwise).
+    pub tasks: Vec<TaskSpec>,
+    /// Generated job (Job workloads; `None` otherwise).
+    pub job: Option<JobSpec>,
+    /// Initial busy time per task node.
+    pub initial_idle: Vec<Secs>,
+    /// Engine seed per host (task nodes busy, other hosts free).
+    pub engine_init: Vec<Secs>,
+    /// Link capacities in Mbps, link-id order.
+    pub link_caps_mbps: Vec<f64>,
+}
+
+impl SimSession {
+    /// Build the scenario: topology → controller/flownet → background →
+    /// namenode/workload → ledger. The construction order (in particular
+    /// every RNG draw) is part of the contract: a spec's seed fully
+    /// determines the session.
+    pub fn new(spec: &ScenarioSpec) -> Self {
+        let spec = spec.clone();
+        let (topo, nodes) = build_topology(&spec.topology);
+        let link_caps_mbps: Vec<f64> =
+            topo.links.iter().map(|l| l.capacity_mbps).collect();
+        let n_hosts = topo.n_hosts();
+        let mut ctrl = Controller::new(topo, spec.slot_secs);
+        let mut net = FlowNet::new(&link_caps_mbps);
+        if let Some(q) = &spec.qos {
+            net.set_qos(q.clone());
+        }
+        let mut rng = XorShift::new(spec.seed);
+
+        // background: the sample draws per-node idle *then* flow pairs, so
+        // it runs whenever either is requested to keep the stream stable
+        let sample_bg =
+            matches!(spec.initial, InitialLoad::Sampled { .. }) || spec.background.flows > 0;
+        let sampled_idle: Option<Vec<Secs>> = if sample_bg {
+            let max_idle = match spec.initial {
+                InitialLoad::Sampled { max_secs } => max_secs,
+                _ => 0.0,
+            };
+            let bg = BackgroundLoad::sample(
+                &nodes,
+                max_idle,
+                spec.background.flows,
+                spec.background.rate_mb_s,
+                &mut rng,
+            );
+            bg.install(&mut ctrl, &mut net);
+            Some(bg.initial_idle)
+        } else {
+            None
+        };
+        let initial_idle: Vec<Secs> = match &spec.initial {
+            InitialLoad::Idle => vec![Secs::ZERO; nodes.len()],
+            InitialLoad::Explicit(v) => {
+                assert_eq!(v.len(), nodes.len(), "explicit initial load per task node");
+                v.iter().map(|&t| Secs(t)).collect()
+            }
+            InitialLoad::Sampled { .. } => sampled_idle.expect("sampled above"),
+        };
+
+        // workload + HDFS layout
+        let mut nn = Namenode::new();
+        let mut tasks = Vec::new();
+        let mut job = None;
+        match &spec.workload {
+            WorkloadSpec::None => {}
+            WorkloadSpec::Example1 => {
+                assert!(
+                    matches!(spec.topology, TopologyShape::Fig2 { .. }),
+                    "Example1 workload requires the Fig2 topology"
+                );
+                // replica placement reverse-engineered from the paper's
+                // Figs. 3(a)-(d) — only TK1's {ND2, ND3} is given
+                // explicitly; the rest make HDS/BAR/BASS/Pre-BASS land on
+                // the published 39/38/35/34s timelines (see DESIGN.md)
+                let reps: [[usize; 2]; 9] = [
+                    [1, 2], // TK1 {ND2, ND3} — given in the paper
+                    [0, 3], // TK2 {ND1, ND4}
+                    [0, 1], // TK3 {ND1, ND2}
+                    [2, 0], // TK4 {ND3, ND1}
+                    [3, 1], // TK5 {ND4, ND2}
+                    [1, 2], // TK6 {ND2, ND3}
+                    [0, 2], // TK7 {ND1, ND3}
+                    [3, 0], // TK8 {ND4, ND1}
+                    [2, 0], // TK9 {ND3, ND1}
+                ];
+                for (i, r) in reps.iter().enumerate() {
+                    let b = nn.add_block(64.0, vec![nodes[r[0]], nodes[r[1]]]);
+                    tasks.push(TaskSpec::map(i, b, 64.0, Secs(9.0), 0.0));
+                }
+            }
+            WorkloadSpec::Job { kind, data_mb } => {
+                let mut builder = WorkloadBuilder::new(*kind);
+                builder.replication = spec.replication.min(nodes.len());
+                builder.reduces = spec.reduces;
+                builder.placement = spec.placement;
+                job = Some(builder.build(0, *data_mb, &nodes, &mut nn, &mut rng));
+            }
+            WorkloadSpec::MapWave { tasks: m, compute_secs, output_mb } => {
+                let blocks = spec.placement.place(
+                    &mut nn,
+                    &nodes,
+                    *m,
+                    BLOCK_MB,
+                    spec.replication.min(nodes.len()),
+                    &mut rng,
+                );
+                tasks = blocks
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| {
+                        TaskSpec::map(i, b, BLOCK_MB, Secs(*compute_secs), *output_mb)
+                    })
+                    .collect();
+            }
+        }
+
+        // ledgers: task nodes carry the initial load; Fig. 2's master and
+        // controller hosts are never schedulable (INF) but execute free
+        let mut ledger_init = vec![Secs::INF; n_hosts];
+        let mut engine_init = vec![Secs::ZERO; n_hosts];
+        for (i, &nd) in nodes.iter().enumerate() {
+            ledger_init[nd.0] = initial_idle[i];
+            engine_init[nd.0] = initial_idle[i];
+        }
+        let ledger = Ledger::with_initial(ledger_init);
+        let sched = spec.scheduler.make();
+
+        Self {
+            spec,
+            nodes,
+            ctrl,
+            net,
+            nn,
+            ledger,
+            rng,
+            sched,
+            tasks,
+            job,
+            initial_idle,
+            engine_init,
+            link_caps_mbps,
+        }
+    }
+
+    /// Cached route between two hosts (cluster-construction byproduct the
+    /// QoS driver uses to aim its flows).
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Option<Vec<LinkId>> {
+        self.ctrl.path(src, dst).map(|p| p.to_vec())
+    }
+
+    /// Schedule a batch through the session's scheduler, mutating the
+    /// live ledger/controller. `gate` is the earliest batch start (reduce
+    /// phases); `now` is the scheduling instant.
+    pub fn schedule(
+        &mut self,
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        now: Secs,
+        cost: &CostModel,
+    ) -> Assignment {
+        let mut ctx = SchedCtx {
+            controller: &mut self.ctrl,
+            namenode: &self.nn,
+            ledger: &mut self.ledger,
+            authorized: self.nodes.clone(),
+            now,
+            cost,
+            node_speed: self.spec.node_speed.clone(),
+        };
+        self.sched.schedule(tasks, gate, &mut ctx)
+    }
+
+    /// Scheduler-estimated makespan: latest ledger availability over the
+    /// task nodes.
+    pub fn estimated_makespan(&self) -> f64 {
+        self.nodes.iter().map(|&n| self.ledger.idle(n).0).fold(0.0, f64::max)
+    }
+
+    /// Execute an assignment on a fresh engine seeded with the session's
+    /// initial per-host state.
+    pub fn execute(&self, a: &Assignment) -> Vec<TaskRecord> {
+        self.execute_from(a, self.engine_init.clone())
+    }
+
+    /// Execute from an explicit per-host availability (phase chaining).
+    pub fn execute_from(&self, a: &Assignment, init: Vec<Secs>) -> Vec<TaskRecord> {
+        let mut engine = Engine::new(self.net.clone(), init);
+        engine.load(a);
+        engine.run()
+    }
+
+    /// The two-phase MapReduce pipeline over the session's generated job
+    /// (Table I / Fig. 5 / online coordinator semantics):
+    ///
+    /// 1. maps scheduled at t=0 and executed through the DES engine;
+    /// 2. reduces gated at the slowstart point, shuffle-source hints set
+    ///    to the node holding the most map output, executed from the
+    ///    post-map cluster state.
+    pub fn run_job(&mut self, cost: &CostModel) -> JobMetrics {
+        let job = self.job.clone().expect("run_job requires a Job workload");
+        let maps: Vec<TaskSpec> = job.maps().cloned().collect();
+        let mut reduces: Vec<TaskSpec> = job.reduces().cloned().collect();
+
+        // ---- phase 1: maps ----
+        let map_assignment = self.schedule(&maps, None, Secs::ZERO, cost);
+        let lr = map_assignment.locality_ratio();
+        let map_records = self.execute(&map_assignment);
+
+        // ---- slowstart gate + shuffle source hints ----
+        let gate = slowstart_gate(&map_records, self.spec.slowstart);
+        let hint = shuffle_majority_node(&map_records, &maps, self.engine_init.len());
+        for r in &mut reduces {
+            r.src_hint = Some(hint);
+        }
+
+        // ---- phase 2: reduces, from the executed map state ----
+        let mut reduce_init = self.engine_init.clone();
+        for r in &map_records {
+            if reduce_init[r.node.0] < r.finish {
+                reduce_init[r.node.0] = r.finish;
+            }
+        }
+        self.ledger = Ledger::with_initial(reduce_init.clone());
+        let reduce_assignment = self.schedule(&reduces, Some(gate), gate, cost);
+        let reduce_records = self.execute_from(&reduce_assignment, reduce_init);
+
+        let mut all = map_records;
+        all.extend(reduce_records);
+        let mut m = JobMetrics::from_records(&all, Secs::ZERO, Some(gate));
+        m.lr = lr;
+        m
+    }
+}
+
+fn build_topology(shape: &TopologyShape) -> (Topology, Vec<NodeId>) {
+    match *shape {
+        TopologyShape::Fig2 { link_mbps } => {
+            let f = fig2(link_mbps);
+            (f.topo, f.task_nodes.to_vec())
+        }
+        TopologyShape::Tree { switches, hosts_per_switch, edge_mbps, uplink_mbps } => {
+            tree_cluster(switches, hosts_per_switch, edge_mbps, uplink_mbps)
+        }
+    }
+}
+
+/// Time at which `frac` of the maps have finished (Hadoop's reduce
+/// slowstart point).
+pub fn slowstart_gate(map_records: &[TaskRecord], frac: f64) -> Secs {
+    let mut fins: Vec<Secs> = map_records.iter().map(|r| r.finish).collect();
+    fins.sort();
+    let k = ((fins.len() as f64 * frac).ceil() as usize).clamp(1, fins.len());
+    fins[k - 1]
+}
+
+/// Node holding the most map output (the reduces' shuffle source hint).
+pub fn shuffle_majority_node(
+    map_records: &[TaskRecord],
+    maps: &[TaskSpec],
+    n_nodes: usize,
+) -> NodeId {
+    let mut out_mb = vec![0.0f64; n_nodes];
+    for r in map_records {
+        let t = maps.iter().find(|t| t.id == r.task).expect("map record");
+        out_mb[r.node.0] += t.output_mb;
+    }
+    let best = out_mb
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    NodeId(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::TaskId;
+    use crate::sched::SchedulerKind;
+    use crate::workload::JobKind;
+
+    fn tree_spec() -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(
+            "t",
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 3,
+                edge_mbps: 100.0,
+                uplink_mbps: 100.0,
+            },
+            WorkloadSpec::Job { kind: JobKind::Wordcount, data_mb: 300.0 },
+        );
+        s.initial = InitialLoad::Sampled { max_secs: 20.0 };
+        s.background = super::super::spec::BackgroundSpec { flows: 2, rate_mb_s: 3.0 };
+        s
+    }
+
+    #[test]
+    fn example1_session_matches_the_paper_testbed() {
+        let s = SimSession::new(&ScenarioSpec::example1(SchedulerKind::Bass));
+        assert_eq!(s.nodes.len(), 4);
+        assert_eq!(s.tasks.len(), 9);
+        assert_eq!(s.link_caps_mbps.len(), 8);
+        assert_eq!(s.initial_idle, vec![Secs(3.0), Secs(9.0), Secs(20.0), Secs(7.0)]);
+        // engine hosts: 4 task nodes + master + controller
+        assert_eq!(s.engine_init.len(), 6);
+        assert_eq!(s.engine_init[4], Secs::ZERO);
+        // ledger keeps the non-task hosts unschedulable
+        assert!(!s.ledger.idle(NodeId(4)).is_finite());
+        // TK1 replicas are the paper's {ND2, ND3}
+        let b = s.tasks[0].input.unwrap();
+        assert_eq!(s.nn.block(b).replicas, vec![s.nodes[1], s.nodes[2]]);
+    }
+
+    #[test]
+    fn sessions_are_deterministic_per_seed() {
+        let spec = tree_spec();
+        let a = SimSession::new(&spec);
+        let b = SimSession::new(&spec);
+        assert_eq!(a.initial_idle, b.initial_idle);
+        let blocks = |s: &SimSession| -> Vec<Vec<NodeId>> {
+            (0..s.nn.n_blocks())
+                .map(|i| s.nn.block(crate::hdfs::BlockId(i)).replicas.clone())
+                .collect()
+        };
+        assert_eq!(blocks(&a), blocks(&b));
+    }
+
+    #[test]
+    fn run_job_produces_sane_metrics() {
+        let cost = CostModel::rust_only();
+        let mut s = SimSession::new(&tree_spec());
+        let m = s.run_job(&cost);
+        assert!(m.jt > 0.0 && m.mt > 0.0);
+        assert!((0.0..=1.0).contains(&m.lr));
+        assert!(m.jt >= m.mt);
+    }
+
+    #[test]
+    fn schedule_then_execute_round_trips() {
+        let cost = CostModel::rust_only();
+        let mut s = SimSession::new(&ScenarioSpec::example1(SchedulerKind::Bass));
+        let tasks = s.tasks.clone();
+        let a = s.schedule(&tasks, None, Secs::ZERO, &cost);
+        assert_eq!(a.placements.len(), 9);
+        let est = s.estimated_makespan();
+        let records = s.execute(&a);
+        let exec = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+        assert_eq!(est, 35.0); // the paper's BASS makespan
+        assert_eq!(exec, 35.0);
+    }
+
+    #[test]
+    fn slowstart_gate_quantile() {
+        let recs: Vec<TaskRecord> = (0..4)
+            .map(|i| TaskRecord {
+                task: TaskId(i),
+                node: NodeId(0),
+                picked_at: Secs::ZERO,
+                input_ready: Secs::ZERO,
+                compute_start: Secs::ZERO,
+                finish: Secs((i + 1) as f64 * 10.0),
+                is_local: true,
+                is_map: true,
+            })
+            .collect();
+        assert_eq!(slowstart_gate(&recs, 0.5), Secs(20.0));
+        assert_eq!(slowstart_gate(&recs, 1.0), Secs(40.0));
+        assert_eq!(slowstart_gate(&recs, 0.0), Secs(10.0));
+    }
+
+    #[test]
+    fn sessions_move_across_threads() {
+        // the whole point of bundling: a session is one Send value
+        fn assert_send<T: Send>() {}
+        assert_send::<SimSession>();
+        let spec = ScenarioSpec::example1(SchedulerKind::Hds);
+        let handle = std::thread::spawn(move || {
+            let cost = CostModel::rust_only();
+            let mut s = SimSession::new(&spec);
+            let tasks = s.tasks.clone();
+            let a = s.schedule(&tasks, None, Secs::ZERO, &cost);
+            s.execute(&a).len()
+        });
+        assert_eq!(handle.join().unwrap(), 9);
+    }
+}

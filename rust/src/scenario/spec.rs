@@ -1,0 +1,184 @@
+//! [`ScenarioSpec`]: the declarative description a [`super::SimSession`]
+//! is built from.
+
+use crate::hdfs::PlacementPolicy;
+use crate::sched::SchedulerKind;
+use crate::sdn::QosPolicy;
+use crate::workload::JobKind;
+
+/// Per-size seed for sweep grids: every scheduler at the same
+/// (sweep seed, size) sees the identical layout/background draw, while
+/// sizes get distinct streams. The single definition keeps Table I cells
+/// and user-defined scenario sweeps on the same guarantee.
+pub fn cell_seed(sweep_seed: u64, data_mb: f64) -> u64 {
+    sweep_seed ^ (data_mb as u64).wrapping_mul(0x9E37_79B9)
+}
+
+/// Cluster topology shape.
+#[derive(Debug, Clone)]
+pub enum TopologyShape {
+    /// The paper's Fig. 2 testbed: 4 task nodes, 2 OpenFlow switches, a
+    /// router, plus master and controller hosts. Uniform link rate.
+    Fig2 { link_mbps: f64 },
+    /// Two-level tree: `switches` edge switches with `hosts_per_switch`
+    /// task nodes each, all uplinked to one router.
+    Tree { switches: usize, hosts_per_switch: usize, edge_mbps: f64, uplink_mbps: f64 },
+}
+
+/// Initial per-task-node busy time (the paper's `ΥI` at t=0).
+#[derive(Debug, Clone)]
+pub enum InitialLoad {
+    /// Every node idle at t=0.
+    Idle,
+    /// Explicit busy times per task node (Example 1's `[3, 9, 20, 7]`).
+    Explicit(Vec<f64>),
+    /// Sampled uniformly in `[0, max_secs)` from the scenario RNG (the
+    /// shared-cluster "background job" regime of Section V-A).
+    Sampled { max_secs: f64 },
+}
+
+/// Permanent background traffic on random host pairs.
+#[derive(Debug, Clone)]
+pub struct BackgroundSpec {
+    pub flows: usize,
+    /// Nominal per-flow rate (MB/s) for the controller's static view.
+    pub rate_mb_s: f64,
+}
+
+impl BackgroundSpec {
+    pub fn none() -> Self {
+        Self { flows: 0, rate_mb_s: 0.0 }
+    }
+}
+
+/// What work the scenario carries.
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    /// No pre-built work (online drivers submit their own jobs).
+    None,
+    /// The paper's hand-placed Example 1 layout: 9 map tasks, 2 replicas
+    /// each, reverse-engineered from Figs. 3(a)-(d). Requires `Fig2`.
+    Example1,
+    /// A generated Wordcount/Sort job over `data_mb` of input.
+    Job { kind: JobKind, data_mb: f64 },
+    /// A bare wave of map tasks over freshly placed 64MB blocks.
+    MapWave { tasks: usize, compute_secs: f64, output_mb: f64 },
+}
+
+/// A full scenario description. `SimSession::new` consumes one of these
+/// and owns all cluster construction; experiment drivers never touch
+/// `Controller::new` / `Namenode` wiring directly.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub topology: TopologyShape,
+    pub workload: WorkloadSpec,
+    pub scheduler: SchedulerKind,
+    /// Replica placement for generated workloads.
+    pub placement: PlacementPolicy,
+    /// QoS queue policy installed into the flow network (Example 3).
+    pub qos: Option<QosPolicy>,
+    /// Time-slot duration for the SDN calendar (the paper's TS).
+    pub slot_secs: f64,
+    /// HDFS replication factor for generated workloads.
+    pub replication: usize,
+    /// Reduce count for generated jobs.
+    pub reduces: usize,
+    /// Reduce slowstart fraction for the two-phase pipeline.
+    pub slowstart: f64,
+    /// Seed for the scenario RNG (placement, background, workload).
+    pub seed: u64,
+    pub initial: InitialLoad,
+    pub background: BackgroundSpec,
+    /// Per-node compute-speed factors (empty = homogeneous cluster).
+    pub node_speed: Vec<f64>,
+    /// Worker threads for sweep drivers expanding this scenario into a
+    /// grid of points (1 = serial; results are identical either way).
+    pub threads: usize,
+}
+
+impl ScenarioSpec {
+    /// Baseline spec: paper defaults everywhere.
+    pub fn new(name: impl Into<String>, topology: TopologyShape, workload: WorkloadSpec) -> Self {
+        Self {
+            name: name.into(),
+            topology,
+            workload,
+            scheduler: SchedulerKind::Bass,
+            placement: PlacementPolicy::RandomDistinct,
+            qos: None,
+            slot_secs: 1.0,
+            replication: 3,
+            reduces: 2,
+            slowstart: 0.5,
+            seed: 2014,
+            initial: InitialLoad::Idle,
+            background: BackgroundSpec::none(),
+            node_speed: Vec::new(),
+            threads: 1,
+        }
+    }
+
+    /// The paper's Example 1 testbed: Fig. 2 at the effective 12.8 MB/s
+    /// (the paper rounds 64MB/100Mbps to 5s), TP = 9s, initial loads
+    /// `ΥI = [3, 9, 20, 7]`.
+    pub fn example1(scheduler: SchedulerKind) -> Self {
+        let mut s = Self::new(
+            "example1",
+            TopologyShape::Fig2 { link_mbps: 102.4 },
+            WorkloadSpec::Example1,
+        );
+        s.scheduler = scheduler;
+        s.initial = InitialLoad::Explicit(vec![3.0, 9.0, 20.0, 7.0]);
+        s
+    }
+
+    /// Builder-style scheduler override.
+    pub fn with_scheduler(mut self, k: SchedulerKind) -> Self {
+        self.scheduler = k;
+        self
+    }
+
+    /// Builder-style seed override.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_the_paper() {
+        let s = ScenarioSpec::new(
+            "t",
+            TopologyShape::Tree { switches: 2, hosts_per_switch: 3, edge_mbps: 100.0, uplink_mbps: 100.0 },
+            WorkloadSpec::None,
+        );
+        assert_eq!(s.slot_secs, 1.0);
+        assert_eq!(s.replication, 3);
+        assert_eq!(s.threads, 1);
+        assert!(s.qos.is_none());
+    }
+
+    #[test]
+    fn example1_preset_carries_the_initial_loads() {
+        let s = ScenarioSpec::example1(SchedulerKind::Hds);
+        assert_eq!(s.scheduler, SchedulerKind::Hds);
+        match &s.initial {
+            InitialLoad::Explicit(v) => assert_eq!(v, &vec![3.0, 9.0, 20.0, 7.0]),
+            other => panic!("unexpected initial load {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builders_chain() {
+        let s = ScenarioSpec::example1(SchedulerKind::Bass)
+            .with_scheduler(SchedulerKind::Bar)
+            .with_seed(7);
+        assert_eq!(s.scheduler, SchedulerKind::Bar);
+        assert_eq!(s.seed, 7);
+    }
+}

@@ -1,0 +1,131 @@
+//! Deterministic parallel sweep execution.
+//!
+//! Sweep drivers (`scale`, Table I, Fig. 5, the bench harness) expand a
+//! scenario into a grid of independent points; each point builds its own
+//! hermetic [`super::SimSession`] from its own seed, so fanning the grid
+//! across threads changes wall-clock time and nothing else — results are
+//! reassembled in input order and are bitwise-identical to a serial run.
+
+use std::sync::Mutex;
+
+use crate::metrics::JobMetrics;
+use crate::runtime::CostModel;
+
+use super::session::SimSession;
+use super::spec::ScenarioSpec;
+
+/// One executed grid point of a scenario sweep.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub scenario: String,
+    pub scheduler: &'static str,
+    pub data_mb: f64,
+    pub metrics: JobMetrics,
+}
+
+/// Run a grid of job scenarios (each must carry a `Job` workload) on up
+/// to `threads` workers; rows come back in grid order.
+pub fn run_job_grid(specs: Vec<ScenarioSpec>, threads: usize, cost: &CostModel) -> Vec<SweepRow> {
+    parallel_map(specs, threads, |spec| {
+        let data_mb = match spec.workload {
+            super::spec::WorkloadSpec::Job { data_mb, .. } => data_mb,
+            ref other => panic!("run_job_grid needs Job workloads, got {other:?}"),
+        };
+        let scheduler = spec.scheduler.label();
+        let scenario = spec.name.clone();
+        let metrics = SimSession::new(&spec).run_job(cost);
+        SweepRow { scenario, scheduler, data_mb, metrics }
+    })
+}
+
+/// Map `f` over `items` on up to `threads` workers, preserving input
+/// order. `threads <= 1` runs inline. Work is pulled from a shared queue
+/// so uneven point costs still balance.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: Mutex<Vec<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().rev().collect());
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                let Some((i, item)) = job else { break };
+                let r = f(item);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let out = parallel_map((0..64).collect(), 8, |x: i32| x * 2);
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let work = |x: u64| -> u64 {
+            // a little arithmetic so threads actually interleave
+            (0..500).fold(x, |a, b| a.wrapping_mul(31).wrapping_add(b))
+        };
+        let items: Vec<u64> = (0..40).collect();
+        let serial = parallel_map(items.clone(), 1, work);
+        let parallel = parallel_map(items, 6, work);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn job_grid_runs_each_point_in_order() {
+        use super::super::spec::{ScenarioSpec, TopologyShape, WorkloadSpec};
+        use crate::sched::SchedulerKind;
+        use crate::workload::JobKind;
+        let spec = |mb: f64, k: SchedulerKind| {
+            ScenarioSpec::new(
+                format!("grid-{mb}"),
+                TopologyShape::Tree {
+                    switches: 2,
+                    hosts_per_switch: 3,
+                    edge_mbps: 100.0,
+                    uplink_mbps: 100.0,
+                },
+                WorkloadSpec::Job { kind: JobKind::Sort, data_mb: mb },
+            )
+            .with_scheduler(k)
+        };
+        let grid = vec![
+            spec(150.0, SchedulerKind::Bass),
+            spec(150.0, SchedulerKind::Hds),
+            spec(300.0, SchedulerKind::Bass),
+        ];
+        let rows = run_job_grid(grid, 2, &CostModel::rust_only());
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].scheduler, "BASS");
+        assert_eq!(rows[1].scheduler, "HDS");
+        assert_eq!(rows[2].data_mb, 300.0);
+        assert!(rows.iter().all(|r| r.metrics.jt > 0.0));
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        assert_eq!(parallel_map(Vec::<i32>::new(), 4, |x| x), Vec::<i32>::new());
+        assert_eq!(parallel_map(vec![7], 4, |x: i32| x + 1), vec![8]);
+        assert_eq!(parallel_map(vec![1, 2], 0, |x: i32| x), vec![1, 2]);
+    }
+}

@@ -1,0 +1,76 @@
+//! The scheduler registry: one name per paper algorithm.
+//!
+//! Lives in `sched` (not `experiments`) so every layer — scenario
+//! construction, the coordinator, config files, the CLI — selects
+//! schedulers through the same registry without depending on the
+//! experiment drivers.
+
+use super::bar::Bar;
+use super::bass::Bass;
+use super::hds::Hds;
+use super::pre_bass::PreBass;
+use super::types::Scheduler;
+
+/// Selector for the paper's four schedulers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Hds,
+    Bar,
+    Bass,
+    PreBass,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 4] =
+        [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass, SchedulerKind::PreBass];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Hds => "HDS",
+            SchedulerKind::Bar => "BAR",
+            SchedulerKind::Bass => "BASS",
+            SchedulerKind::PreBass => "Pre-BASS",
+        }
+    }
+
+    /// Instantiate. The trait object is `Send` so a whole scheduling
+    /// session can move across sweep worker threads.
+    pub fn make(&self) -> Box<dyn Scheduler + Send> {
+        match self {
+            SchedulerKind::Hds => Box::new(Hds::new()),
+            SchedulerKind::Bar => Box::new(Bar::new()),
+            SchedulerKind::Bass => Box::new(Bass::new()),
+            SchedulerKind::PreBass => Box::new(PreBass::new()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hds" => Some(SchedulerKind::Hds),
+            "bar" => Some(SchedulerKind::Bar),
+            "bass" => Some(SchedulerKind::Bass),
+            "pre-bass" | "prebass" | "pre_bass" => Some(SchedulerKind::PreBass),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(SchedulerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn made_schedulers_report_their_label() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(k.make().name(), k.label());
+        }
+    }
+}

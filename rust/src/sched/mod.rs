@@ -14,11 +14,13 @@ pub mod bar;
 pub mod bass;
 pub mod cost;
 pub mod hds;
+pub mod kind;
 pub mod pre_bass;
 pub mod types;
 
 pub use bar::Bar;
 pub use bass::Bass;
 pub use hds::Hds;
+pub use kind::SchedulerKind;
 pub use pre_bass::PreBass;
 pub use types::{SchedCtx, Scheduler};

@@ -9,12 +9,37 @@
 //!
 //! [`SlotCalendar`] stores, per link, the reserved bandwidth fraction of
 //! each future slot; reservations never oversubscribe a slot.
+//!
+//! # Representation
+//!
+//! Each link's reserved fraction is a **sparse step function** over slot
+//! indices: a `BTreeMap<usize, f64>` whose entry `(s, v)` means "fraction
+//! `v` from slot `s` until the next boundary"; before the first boundary
+//! the fraction is 0.0, and the trailing segment is always 0.0 because
+//! every reservation restores the pre-existing level at its end. Reserve
+//! and release touch `O(log B + k)` boundaries (`B` boundaries on the
+//! link, `k` inside the window) regardless of how far in the future the
+//! window sits — the seed's dense `Vec<f64>`-per-slot version walked and
+//! resized arrays proportional to the absolute slot index and capped
+//! searches at a `MAX_SEARCH_SLOTS` cliff; both are gone. Window
+//! searches jump between boundaries instead of probing slot-by-slot, so
+//! an empty month-long horizon costs the same as an empty second.
+
+use std::collections::BTreeMap;
 
 use crate::topology::LinkId;
 use crate::util::Secs;
 
-/// Safety cap on how far into the future a window search may walk.
-const MAX_SEARCH_SLOTS: usize = 4_000_000;
+/// Tolerance for residual-vs-fraction comparisons (same as the seed).
+const EPS: f64 = 1e-9;
+
+/// Dust threshold for segment maintenance, far below the decision
+/// tolerance [`EPS`]: boundaries whose levels differ by at most this
+/// merge, and released levels this close to zero snap to exactly 0.0.
+/// Without it, f64 residue from stacked reserve/release cycles (e.g.
+/// `(0.1 + 0.2) - 0.1 - 0.2 != 0`) would leave phantom boundaries that
+/// accumulate forever in long-lived calendars.
+const DUST: f64 = 1e-12;
 
 /// A granted path reservation (returned by [`SlotCalendar::reserve_path`]).
 #[derive(Debug, Clone, PartialEq)]
@@ -40,19 +65,54 @@ impl Reservation {
     }
 }
 
+/// One link's occupancy step function.
+type Segments = BTreeMap<usize, f64>;
+
+/// Reserved level at `slot` (0.0 before the first boundary).
+fn level_at(seg: &Segments, slot: usize) -> f64 {
+    seg.range(..=slot).next_back().map(|(_, &v)| v).unwrap_or(0.0)
+}
+
+/// Apply `f` to the level over `[start, end)`, splitting boundaries as
+/// needed and coalescing equal neighbours afterwards.
+fn update_range(seg: &mut Segments, start: usize, end: usize, f: impl Fn(f64) -> f64) {
+    if start >= end {
+        return;
+    }
+    // split so the window is covered by whole segments
+    let end_level = level_at(seg, end);
+    let start_level = level_at(seg, start);
+    seg.entry(start).or_insert(start_level);
+    seg.entry(end).or_insert(end_level);
+    let updates: Vec<(usize, f64)> =
+        seg.range(start..end).map(|(&k, &v)| (k, f(v))).collect();
+    for (k, v) in updates {
+        seg.insert(k, v);
+    }
+    // coalesce: drop boundaries whose level matches their predecessor's
+    // within DUST (the implicit predecessor of the first boundary is 0.0)
+    let keys: Vec<usize> = seg.range(start..=end).map(|(&k, _)| k).collect();
+    for k in keys {
+        let prev = seg.range(..k).next_back().map(|(_, &v)| v).unwrap_or(0.0);
+        if (seg[&k] - prev).abs() <= DUST {
+            seg.remove(&k);
+        }
+    }
+}
+
 /// Per-link slot reservation ledgers.
 #[derive(Debug, Clone)]
 pub struct SlotCalendar {
     slot_secs: f64,
-    /// reserved[link][slot] = fraction of capacity already promised.
-    reserved: Vec<Vec<f64>>,
+    /// Sparse occupancy per link: slot boundary -> reserved fraction.
+    reserved: Vec<Segments>,
 }
 
 impl SlotCalendar {
     /// `slot_secs` is the tunable TS duration (1.0 in the paper).
     pub fn new(n_links: usize, slot_secs: f64) -> Self {
         assert!(slot_secs > 0.0, "slot duration must be positive");
-        Self { slot_secs, reserved: vec![Vec::new(); n_links] }
+        Self { slot_secs, reserved: vec![Segments::new(); n_links] }
     }
 
     pub fn slot_secs(&self) -> f64 {
@@ -61,6 +121,12 @@ impl SlotCalendar {
 
     pub fn n_links(&self) -> usize {
         self.reserved.len()
+    }
+
+    /// Total occupancy boundaries across links (diagnostics / benches:
+    /// memory scales with *reservations*, not with the horizon).
+    pub fn n_segments(&self) -> usize {
+        self.reserved.iter().map(|s| s.len()).sum()
     }
 
     /// Slot index containing time `t`.
@@ -77,7 +143,7 @@ impl SlotCalendar {
 
     /// Reserved fraction of `link` during `slot` (0 if untouched).
     pub fn reserved_frac(&self, link: LinkId, slot: usize) -> f64 {
-        self.reserved[link.0].get(slot).copied().unwrap_or(0.0)
+        level_at(&self.reserved[link.0], slot)
     }
 
     /// Residual (unreserved) fraction of `link` during `slot`.
@@ -88,22 +154,23 @@ impl SlotCalendar {
     /// Min residual fraction over a path during `[start, start + n)`.
     pub fn path_residual(&self, links: &[LinkId], start: usize, n: usize) -> f64 {
         let mut min = 1.0f64;
+        if n == 0 {
+            return min;
+        }
         for &l in links {
-            for s in start..start + n {
-                min = min.min(self.residual_frac(l, s));
-                if min <= 0.0 {
-                    return 0.0;
+            let seg = &self.reserved[l.0];
+            let mut peak = level_at(seg, start);
+            for (_, &v) in seg.range(start + 1..start + n) {
+                if v > peak {
+                    peak = v;
                 }
+            }
+            min = min.min((1.0 - peak).max(0.0));
+            if min <= 0.0 {
+                return 0.0;
             }
         }
         min
-    }
-
-    fn ensure_len(&mut self, link: LinkId, upto: usize) {
-        let v = &mut self.reserved[link.0];
-        if v.len() < upto {
-            v.resize(upto, 0.0);
-        }
     }
 
     /// Reserve `frac` of every link on `links` for slots
@@ -118,7 +185,6 @@ impl SlotCalendar {
     ) -> anyhow::Result<Reservation> {
         anyhow::ensure!(frac > 0.0 && frac <= 1.0, "frac out of (0,1]: {frac}");
         anyhow::ensure!(n > 0, "empty reservation window");
-        const EPS: f64 = 1e-9;
         if self.path_residual(links, start, n) + EPS < frac {
             anyhow::bail!(
                 "insufficient residual bandwidth on path {links:?} slots {start}..{}",
@@ -126,10 +192,9 @@ impl SlotCalendar {
             );
         }
         for &l in links {
-            self.ensure_len(l, start + n);
-            for s in start..start + n {
-                self.reserved[l.0][s] = (self.reserved[l.0][s] + frac).min(1.0);
-            }
+            update_range(&mut self.reserved[l.0], start, start + n, |v| {
+                (v + frac).min(1.0)
+            });
         }
         Ok(Reservation { links: links.to_vec(), start_slot: start, n_slots: n, frac })
     }
@@ -137,16 +202,69 @@ impl SlotCalendar {
     /// Release a previous reservation (idempotence is the caller's duty).
     pub fn release(&mut self, r: &Reservation) {
         for &l in &r.links {
-            for s in r.start_slot..r.start_slot + r.n_slots {
-                if let Some(x) = self.reserved[l.0].get_mut(s) {
-                    *x = (*x - r.frac).max(0.0);
+            update_range(&mut self.reserved[l.0], r.start_slot, r.start_slot + r.n_slots, |v| {
+                let left = (v - r.frac).max(0.0);
+                if left <= DUST {
+                    0.0
+                } else {
+                    left
+                }
+            });
+        }
+    }
+
+    /// First slot in `[lo, hi)` where any link's residual can't give
+    /// `frac` (the window-search violation test).
+    fn first_blocked(&self, links: &[LinkId], lo: usize, hi: usize, frac: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for &l in links {
+            let seg = &self.reserved[l.0];
+            let hi_l = best.unwrap_or(hi);
+            if lo >= hi_l {
+                break; // links can't beat an already-found block at `lo`
+            }
+            if (1.0 - level_at(seg, lo)).max(0.0) + EPS < frac {
+                best = Some(lo);
+                continue;
+            }
+            for (&k, &v) in seg.range(lo + 1..hi_l) {
+                if (1.0 - v).max(0.0) + EPS < frac {
+                    best = Some(k);
+                    break;
                 }
             }
+        }
+        best
+    }
+
+    /// First slot `>= pos` where every link's residual can give `frac`.
+    /// Jumps boundary-to-boundary; the trailing level of every link is
+    /// free, so this always terminates.
+    fn next_open(&self, links: &[LinkId], mut pos: usize, blocked: impl Fn(f64) -> bool) -> usize {
+        'outer: loop {
+            for &l in links {
+                let seg = &self.reserved[l.0];
+                if blocked((1.0 - level_at(seg, pos)).max(0.0)) {
+                    match seg.range(pos + 1..).next() {
+                        Some((&k, _)) => {
+                            pos = k;
+                            continue 'outer;
+                        }
+                        // trailing segment is always 0.0-reserved: a block
+                        // there means the demand itself is infeasible and
+                        // callers have already screened that out
+                        None => unreachable!("blocked on a free trailing segment"),
+                    }
+                }
+            }
+            return pos;
         }
     }
 
     /// Earliest start slot `>= earliest` where every link on the path can
-    /// give `frac` for `n` consecutive slots.
+    /// give `frac` for `n` consecutive slots. `None` only if the demand is
+    /// infeasible outright (`frac` above line rate) — there is no search
+    /// horizon cap; an empty far future is found in O(boundaries).
     pub fn find_window(
         &self,
         links: &[LinkId],
@@ -154,25 +272,21 @@ impl SlotCalendar {
         n: usize,
         frac: f64,
     ) -> Option<usize> {
-        const EPS: f64 = 1e-9;
+        if links.is_empty() || n == 0 {
+            return Some(earliest);
+        }
+        if 1.0 + EPS < frac {
+            return None; // no slot can ever satisfy it
+        }
         let mut s = earliest;
-        while s < earliest + MAX_SEARCH_SLOTS {
-            // find first violating slot in window; jump past it
-            let mut ok = true;
-            'outer: for off in 0..n {
-                for &l in links {
-                    if self.residual_frac(l, s + off) + EPS < frac {
-                        s = s + off + 1;
-                        ok = false;
-                        break 'outer;
-                    }
-                }
-            }
-            if ok {
-                return Some(s);
+        loop {
+            match self.first_blocked(links, s, s + n, frac) {
+                None => return Some(s),
+                // skip the whole blocked run: every start in (s..=q] keeps
+                // slot q inside its window, so none of them is viable
+                Some(q) => s = self.next_open(links, q + 1, |r| r + EPS < frac),
             }
         }
-        None
     }
 
     /// The paper's "most residue bandwidth" policy: starting at `earliest`,
@@ -200,15 +314,20 @@ impl SlotCalendar {
                 frac: 0.0,
             });
         }
+        if min_frac > 1.0 {
+            return None; // no start slot can ever offer it
+        }
         let mut start = self.slot_of(earliest);
-        for _ in 0..MAX_SEARCH_SLOTS {
+        loop {
             // rate available at the candidate start slot
             let f0 = links
                 .iter()
                 .map(|&l| self.residual_frac(l, start))
                 .fold(1.0f64, f64::min);
             if f0 < min_frac || f0 <= 0.0 {
-                start += 1;
+                // skip the run of starts the point test rejects; beyond the
+                // last boundary every link is free, so this terminates
+                start = self.next_open(links, start + 1, |r| r < min_frac || r <= 0.0);
                 continue;
             }
             // fixed-point on window length
@@ -216,7 +335,7 @@ impl SlotCalendar {
             let mut n = self.slots_for(size_mb, frac * capacity_mb_s);
             loop {
                 let avail = self.path_residual(links, start, n.max(1));
-                if avail + 1e-9 >= frac {
+                if avail + EPS >= frac {
                     return Some(Reservation {
                         links: links.to_vec(),
                         start_slot: start,
@@ -230,9 +349,11 @@ impl SlotCalendar {
                 frac = avail;
                 n = self.slots_for(size_mb, frac * capacity_mb_s);
             }
+            // a blocked window can only clear slot by slot (the blocking
+            // reservation leaves the window at a bounded offset), so the
+            // retry count is bounded by the window length, not the horizon
             start += 1;
         }
-        None
     }
 }
 
@@ -335,5 +456,88 @@ mod tests {
         let c = cal();
         let r = c.plan_transfer(&[], Secs(1.0), 64.0, 12.8, 0.05).unwrap();
         assert_eq!(r.n_slots, 0);
+    }
+
+    // ---- sparse-representation specifics ----
+
+    #[test]
+    fn far_future_reservation_stays_sparse() {
+        // the dense seed allocated ~10M f64 slots for this; the sparse
+        // calendar stores two boundaries
+        let mut c = SlotCalendar::new(1, 1.0);
+        let r = c.reserve_path(&[LinkId(0)], 10_000_000, 5, 0.5).unwrap();
+        assert_eq!(c.n_segments(), 2);
+        assert_eq!(c.residual_frac(LinkId(0), 10_000_002), 0.5);
+        assert_eq!(c.residual_frac(LinkId(0), 9_999_999), 1.0);
+        c.release(&r);
+        assert_eq!(c.n_segments(), 0);
+    }
+
+    #[test]
+    fn find_window_has_no_horizon_cliff() {
+        // saturate 5M slots; the seed's MAX_SEARCH_SLOTS (4M) gave up here
+        let mut c = SlotCalendar::new(1, 1.0);
+        c.reserve_path(&[LinkId(0)], 0, 5_000_000, 1.0).unwrap();
+        assert_eq!(c.find_window(&[LinkId(0)], 0, 3, 1.0), Some(5_000_000));
+        let r = c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 0.05).unwrap();
+        assert_eq!(r.start_slot, 5_000_000);
+    }
+
+    #[test]
+    fn infeasible_fraction_is_rejected_not_scanned() {
+        let c = cal();
+        assert_eq!(c.find_window(&[LinkId(0)], 0, 2, 1.5), None);
+        assert!(c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 1.5).is_none());
+    }
+
+    #[test]
+    fn adjacent_equal_reservations_coalesce() {
+        let mut c = SlotCalendar::new(1, 1.0);
+        c.reserve_path(&[LinkId(0)], 0, 4, 0.25).unwrap();
+        c.reserve_path(&[LinkId(0)], 4, 4, 0.25).unwrap();
+        // one level over [0, 8): two boundaries, not four
+        assert_eq!(c.n_segments(), 2);
+        assert_eq!(c.reserved_frac(LinkId(0), 3), 0.25);
+        assert_eq!(c.reserved_frac(LinkId(0), 4), 0.25);
+        assert_eq!(c.reserved_frac(LinkId(0), 8), 0.0);
+    }
+
+    #[test]
+    fn overlapping_reservations_stack_and_unstack() {
+        let mut c = SlotCalendar::new(1, 1.0);
+        let a = c.reserve_path(&[LinkId(0)], 0, 10, 0.3).unwrap();
+        let b = c.reserve_path(&[LinkId(0)], 5, 10, 0.3).unwrap();
+        assert!((c.reserved_frac(LinkId(0), 2) - 0.3).abs() < 1e-12);
+        assert!((c.reserved_frac(LinkId(0), 7) - 0.6).abs() < 1e-12);
+        assert!((c.reserved_frac(LinkId(0), 12) - 0.3).abs() < 1e-12);
+        c.release(&a);
+        assert_eq!(c.reserved_frac(LinkId(0), 2), 0.0);
+        assert!((c.reserved_frac(LinkId(0), 7) - 0.3).abs() < 1e-12);
+        c.release(&b);
+        assert_eq!(c.n_segments(), 0);
+    }
+
+    #[test]
+    fn fp_dust_from_stacked_releases_does_not_leak_segments() {
+        // (0.1 + 0.2) - 0.1 - 0.2 != 0.0 in f64; the dust snap keeps a
+        // long-lived calendar from accumulating phantom boundaries
+        let mut c = SlotCalendar::new(1, 1.0);
+        let a = c.reserve_path(&[LinkId(0)], 0, 10, 0.1).unwrap();
+        let b = c.reserve_path(&[LinkId(0)], 5, 10, 0.2).unwrap();
+        c.release(&a);
+        c.release(&b);
+        assert_eq!(c.n_segments(), 0);
+        assert_eq!(c.reserved_frac(LinkId(0), 7), 0.0);
+    }
+
+    #[test]
+    fn path_residual_spans_boundaries() {
+        let mut c = SlotCalendar::new(2, 1.0);
+        c.reserve_path(&[LinkId(0)], 3, 2, 0.4).unwrap();
+        c.reserve_path(&[LinkId(1)], 6, 2, 0.7).unwrap();
+        // window [0, 10) crosses both: bottleneck is link 1's 0.3 residual
+        assert!((c.path_residual(&[LinkId(0), LinkId(1)], 0, 10) - 0.3).abs() < 1e-12);
+        // window [0, 5) only sees link 0's 0.6 residual
+        assert!((c.path_residual(&[LinkId(0), LinkId(1)], 0, 5) - 0.6).abs() < 1e-12);
     }
 }

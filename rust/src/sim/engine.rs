@@ -68,11 +68,19 @@ pub struct Assignment {
 impl Assignment {
     /// Data-locality ratio over map placements (Table I's `LR`).
     pub fn locality_ratio(&self) -> f64 {
-        let maps: Vec<_> = self.placements.iter().filter(|p| p.is_map).collect();
-        if maps.is_empty() {
+        let (mut maps, mut local) = (0usize, 0usize);
+        for p in &self.placements {
+            if p.is_map {
+                maps += 1;
+                if p.is_local {
+                    local += 1;
+                }
+            }
+        }
+        if maps == 0 {
             return 1.0;
         }
-        maps.iter().filter(|p| p.is_local).count() as f64 / maps.len() as f64
+        local as f64 / maps as f64
     }
 }
 
@@ -431,5 +439,12 @@ mod tests {
         p1.is_local = false;
         let a = Assignment { placements: vec![p0, p1] };
         assert!((a.locality_ratio() - 0.5).abs() < 1e-12);
+        // reduce-only / empty assignments count as fully local
+        assert_eq!(Assignment::default().locality_ratio(), 1.0);
+        let mut r = placement(2, 0, 1.0, TransferPlan::None);
+        r.is_map = false;
+        r.is_local = false;
+        let reduce_only = Assignment { placements: vec![r] };
+        assert_eq!(reduce_only.locality_ratio(), 1.0);
     }
 }

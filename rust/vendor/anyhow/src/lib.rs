@@ -1,0 +1,145 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The build image vendors no registry crates, so this in-tree package
+//! provides exactly the surface `bass` uses: [`Error`], [`Result`], the
+//! `anyhow!` / `bail!` / `ensure!` macros and the [`Context`] extension
+//! trait. Error values carry a flattened message chain (no backtraces,
+//! no downcasting) — enough for diagnostics, deliberately nothing more.
+
+use std::fmt;
+
+/// A flattened error: message plus optional source description.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prefix the existing message with `context` (anyhow renders the
+    /// chain outermost-first; the shim flattens it the same way).
+    pub fn wrap(self, context: impl fmt::Display) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow, Error deliberately does NOT implement
+// std::error::Error, so this blanket conversion stays coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` with the shim's [`Error`] as the default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// Attach context to a fallible value (subset of anyhow's trait: any
+/// displayable error type qualifies, which covers every call site here).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("not a number")?;
+        ensure!(n < 100, "too big: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn happy_path() {
+        assert_eq!(parse("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number: "), "{e}");
+    }
+
+    #[test]
+    fn ensure_formats() {
+        assert_eq!(parse("250").unwrap_err().to_string(), "too big: 250");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.with_context(|| format!("outer {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 7: inner");
+    }
+}

@@ -1,0 +1,123 @@
+//! API-compatible stub of the `xla` (PJRT) bindings.
+//!
+//! The offline build image carries no XLA runtime, so this crate mirrors
+//! the handful of types and signatures `bass::runtime` compiles against.
+//! [`PjRtClient::cpu`] always reports "unavailable", which makes
+//! `Artifacts::open` fail and routes every `CostModel` call to the
+//! bit-identical pure-Rust evaluator — the documented fallback path.
+//! Swapping in the real bindings is a Cargo.toml change only.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: a plain message.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("xla stub: PJRT runtime not available in this build".to_string())
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host tensor handle (never holds data in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// Lowered computation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side execution output; fetchable back to a [`Literal`].
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle. `cpu()` always errors in the stub.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_roundtrip_is_refused() {
+        let l = Literal::vec1(&[1.0, 2.0]);
+        assert!(l.reshape(&[2]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
