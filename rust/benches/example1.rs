@@ -23,7 +23,7 @@ fn main() {
                 authorized: fx.nodes.clone(),
                 now: Secs::ZERO,
                 cost: &cost,
-            node_speed: Vec::new(),
+                node_speed: Vec::new(),
             };
             s.schedule(&fx.tasks, None, &mut ctx)
         });

@@ -1,26 +1,37 @@
-//! Microbenches: the L3 hot paths — scheduler decision latency at scale,
-//! slot-calendar ops, flow-network recomputation, XLA cost-model calls.
-//! This is the §Perf driver (EXPERIMENTS.md).
+//! Microbenches: the L3/L4 hot paths — scheduler decision latency at
+//! scale, slot-calendar ops, flow-network churn, engine replay, XLA
+//! cost-model calls. This is the §Perf driver (EXPERIMENTS.md).
+//!
+//! Measured results land in `BENCH_calendar.json`, `BENCH_flownet.json`
+//! and `BENCH_sched.json` at the repo root; the CI bench-smoke job runs
+//! this binary with `BASS_BENCH_QUICK=1` and fails on >2x regressions
+//! against the committed baselines (tools/check_bench_regression.py).
 
 use bass::bench_harness::{Bencher, Stats};
 use bass::cluster::Ledger;
-use bass::sdn::SlotCalendar;
+use bass::experiments::{fat_scale_spec, scale_spec};
 use bass::hdfs::{Namenode, PlacementPolicy};
 use bass::mapreduce::TaskSpec;
 use bass::runtime::{CostInputs, CostModel};
-use bass::sched::{Bass, Hds, SchedCtx, Scheduler};
-use bass::sdn::{Controller, TrafficClass};
+use bass::scenario::SimSession;
+use bass::sched::{Bass, Hds, SchedCtx, Scheduler, SchedulerKind};
+use bass::sdn::{Controller, SlotCalendar, TrafficClass};
 use bass::sim::FlowNet;
 use bass::topology::builders::tree_cluster;
-use bass::topology::LinkId;
+use bass::topology::{LinkId, NodeId};
 use bass::util::{Secs, XorShift, BLOCK_MB};
 
-fn big_cluster(n_sw: usize, per_sw: usize, m_tasks: usize) -> (Controller, Namenode, Vec<bass::topology::NodeId>, Vec<TaskSpec>) {
+fn big_cluster(
+    n_sw: usize,
+    per_sw: usize,
+    m_tasks: usize,
+) -> (Controller, Namenode, Vec<NodeId>, Vec<TaskSpec>) {
     let (topo, nodes) = tree_cluster(n_sw, per_sw, 100.0, 1000.0);
     let ctrl = Controller::new(topo, 1.0);
     let mut nn = Namenode::new();
     let mut rng = XorShift::new(7);
-    let blocks = PlacementPolicy::RandomDistinct.place(&mut nn, &nodes, m_tasks, BLOCK_MB, 3, &mut rng);
+    let blocks =
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes, m_tasks, BLOCK_MB, 3, &mut rng);
     let tasks = blocks
         .iter()
         .enumerate()
@@ -29,17 +40,68 @@ fn big_cluster(n_sw: usize, per_sw: usize, m_tasks: usize) -> (Controller, Namen
     (ctrl, nn, nodes, tasks)
 }
 
-fn main() {
-    let b = Bencher::default();
-    println!("# bench: scheduler micro (L3 hot paths)");
+/// The ISSUE-2 churn workload: 50 capped background + 200 finite flows
+/// over the 64 links of an 8x7 tree, then a full drain through
+/// `next_completion`/`settle`/`finished_into`/`remove_flow` — the exact
+/// op mix the DES engine drives. Paths are resolved outside the timer.
+fn flownet_churn_paths() -> (Vec<Vec<LinkId>>, Vec<Vec<LinkId>>) {
+    let (topo, nodes) = tree_cluster(8, 7, 100.0, 1000.0); // 56 + 8 = 64 links
+    assert_eq!(topo.n_links(), 64);
+    let mut rng = XorShift::new(13);
+    let mut pick_path = |rng: &mut XorShift| -> Vec<LinkId> {
+        loop {
+            let a = nodes[rng.below(nodes.len())];
+            let b = nodes[rng.below(nodes.len())];
+            if a != b {
+                return topo.route(a, b).expect("tree is connected");
+            }
+        }
+    };
+    let bg: Vec<Vec<LinkId>> = (0..50).map(|_| pick_path(&mut rng)).collect();
+    let fg: Vec<Vec<LinkId>> = (0..200).map(|_| pick_path(&mut rng)).collect();
+    (bg, fg)
+}
 
+fn flownet_churn_cycle(bg: &[Vec<LinkId>], fg: &[Vec<LinkId>]) -> f64 {
+    let caps = vec![100.0f64; 64];
+    let mut net = FlowNet::new(&caps);
+    for p in bg {
+        net.add_background_capped(p.clone(), TrafficClass::Background, 4.0);
+    }
+    for p in fg {
+        net.add_flow_slice(p, 64.0, TrafficClass::HadoopOther);
+    }
+    let mut done = 0usize;
+    let mut buf = Vec::new();
+    while done < fg.len() {
+        let (t, _) = net.next_completion().expect("finite flows must finish");
+        net.settle(t.max(net.clock()));
+        net.finished_into(&mut buf);
+        for &id in &buf {
+            net.remove_flow(id);
+            done += 1;
+        }
+    }
+    net.clock().0
+}
+
+fn main() {
+    // CI smoke runs with short sample counts
+    let b = if std::env::var_os("BASS_BENCH_QUICK").is_some() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    println!("# bench: scheduler micro (L3/L4 hot paths)");
+
+    let mut sched_cases: Vec<(String, Stats)> = Vec::new();
     for (m, n_sw, per_sw) in [(64usize, 4usize, 8usize), (256, 8, 8)] {
         let n = n_sw * per_sw;
         // setup is hoisted out; each sample clones the pristine state so
         // the timing isolates the scheduling decision path
         let (ctrl0, nn, nodes, tasks) = big_cluster(n_sw, per_sw, m);
         for which in ["bass", "hds"] {
-            b.bench(&format!("schedule/{which}/{m}tasks_{n}nodes"), || {
+            let stats = b.bench(&format!("schedule/{which}/{m}tasks_{n}nodes"), || {
                 let mut ctrl = ctrl0.clone();
                 let cost = CostModel::rust_only();
                 let mut ledger = Ledger::new(nodes.len());
@@ -50,7 +112,7 @@ fn main() {
                     authorized: nodes.clone(),
                     now: Secs::ZERO,
                     cost: &cost,
-            node_speed: Vec::new(),
+                    node_speed: Vec::new(),
                 };
                 if which == "bass" {
                     Bass::new().schedule(&tasks, None, &mut ctx)
@@ -58,8 +120,42 @@ fn main() {
                     Hds::new().schedule(&tasks, None, &mut ctx)
                 }
             });
+            if m == 256 {
+                let label = if which == "bass" { "bass_round" } else { "hds_round" };
+                sched_cases.push((label.to_string(), stats));
+            }
         }
     }
+
+    // engine replay: schedule once, then time pure DES execution (flow
+    // churn included) of the 32-node shared-cluster scale point
+    {
+        let mut sess = SimSession::new(&scale_spec(4, SchedulerKind::Hds));
+        let tasks = sess.tasks.clone();
+        let cost = CostModel::rust_only();
+        let a = sess.schedule(&tasks, None, Secs::ZERO, &cost);
+        let stats = b.bench("engine_replay/hds_64tasks_32nodes", || sess.execute(&a));
+        sched_cases.push(("engine_replay".to_string(), stats));
+    }
+    // fat-tree construction + one BASS round at the 128-node point keeps
+    // the thousand-node path honest without minutes of CI time
+    {
+        let spec = fat_scale_spec(16, SchedulerKind::Bass);
+        let cost = CostModel::rust_only();
+        let stats = b.bench("bass_round/fat_tree_128nodes_build+schedule", || {
+            let mut sess = SimSession::new(&spec);
+            let tasks = sess.tasks.clone();
+            sess.schedule(&tasks, None, Secs::ZERO, &cost)
+        });
+        sched_cases.push(("bass_round_fat128".to_string(), stats));
+    }
+    write_json(
+        "BENCH_sched.json",
+        "scheduler_micro",
+        "BASS/HDS rounds at 256 tasks x 64 nodes; HDS engine replay at 64 tasks x 32 nodes; fat-tree BASS point at 128 nodes",
+        "Perf L4 scheduler inner loops: IdleHeap min-idle, per-node local queues, hoisted speed factors, contiguous TM rows",
+        &sched_cases,
+    );
 
     // cost model backends
     let mk_inputs = |m: usize, n: usize| -> CostInputs {
@@ -97,7 +193,13 @@ fn main() {
                 .plan_transfer(nodes[i % 3], nodes[3 + i % 3], 64.0, Secs(i as f64))
                 .unwrap();
             let t = ctrl
-                .commit_transfer(nodes[i % 3], nodes[3 + i % 3], TrafficClass::HadoopOther, plan, Secs(i as f64))
+                .commit_transfer(
+                    nodes[i % 3],
+                    nodes[3 + i % 3],
+                    TrafficClass::HadoopOther,
+                    plan,
+                    Secs(i as f64),
+                )
                 .unwrap();
             out += t.reservation.n_slots;
             ctrl.complete_transfer(&t, 64.0);
@@ -105,8 +207,13 @@ fn main() {
         out
     });
 
-    // flow network recompute at scale
-    b.bench("flownet/200flows_recompute", || {
+    // flow network: incremental churn (the ISSUE-2 acceptance case) and
+    // the legacy 200-flow add-storm
+    let (bg, fg) = flownet_churn_paths();
+    let churn = b.bench("flownet_churn/200finite+50bg_64link_tree", || {
+        flownet_churn_cycle(&bg, &fg)
+    });
+    let storm = b.bench("flownet/200flows_recompute", || {
         let caps: Vec<f64> = (0..64).map(|_| 100.0).collect();
         let mut net = FlowNet::new(&caps);
         let mut r = XorShift::new(5);
@@ -115,8 +222,17 @@ fn main() {
             let b2 = r.below(64);
             net.add_flow(vec![LinkId(a), LinkId(b2)], 64.0, TrafficClass::HadoopOther);
         }
+        // lazy refill: force the recompute the seed ran eagerly
+        net.settle(Secs(0.0));
         net.n_flows()
     });
+    write_json(
+        "BENCH_flownet.json",
+        "flownet_churn",
+        "full add/drain cycle: 200 finite (64MB) + 50 background (4MB/s cap) flows over a 64-link 8x7 tree; plus a 200-flow add storm",
+        "Perf L4 incremental flow network: slab arena + per-link index + lazy component refill + completion heap (seed: from-scratch O(F*L) per add/remove)",
+        &[("flownet_churn".to_string(), churn), ("add_storm_200flows".to_string(), storm)],
+    );
 
     // sparse calendar: reserve/release throughput vs horizon length. The
     // seed's dense Vec<f64>-per-slot calendar allocated and walked arrays
@@ -148,20 +264,36 @@ fn main() {
     write_calendar_json(&s10k, &s1m);
 }
 
+fn case_row(name: &str, s: &Stats) -> String {
+    format!(
+        "    {{\"case\": \"{name}\", \"mean_s\": {:.9}, \"p50_s\": {:.9}, \"p99_s\": {:.9}, \"min_s\": {:.9}, \"samples\": {}}}",
+        s.mean, s.p50, s.p99, s.min, s.samples
+    )
+}
+
+/// Write one BENCH_*.json at the repo root (schema shared with the CI
+/// regression check, tools/check_bench_regression.py).
+fn write_json(file: &str, bench: &str, workload: &str, note: &str, cases: &[(String, Stats)]) {
+    let rows: Vec<String> = cases.iter().map(|(name, s)| case_row(name, s)).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"{bench}\",\n  \"measured\": true,\n  \"workload\": \"{workload}\",\n  \"note\": \"{note}\",\n  \"cases\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = format!("{}/../{file}", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
 /// Record the calendar bench (schema consumed by BENCH_calendar.json at
 /// the repo root; regenerate with `cargo bench --bench scheduler_micro`).
 fn write_calendar_json(s10k: &Stats, s1m: &Stats) {
-    let row = |name: &str, s: &Stats| {
-        format!(
-            "    {{\"case\": \"{name}\", \"mean_s\": {:.9}, \"p50_s\": {:.9}, \"p99_s\": {:.9}, \"min_s\": {:.9}, \"samples\": {}}}",
-            s.mean, s.p50, s.p99, s.min, s.samples
-        )
-    };
     let json = format!(
         "{{\n  \"bench\": \"calendar_sparse\",\n  \"measured\": true,\n  \"workload\": \"256 two-link reservations (1-16 slots, frac 0.05-0.45) + full release on an 8-link calendar\",\n  \"note\": \"sparse interval calendar: horizon-independent cost; the dense seed scaled with the absolute slot index\",\n  \"ratio_1M_over_10k_mean\": {:.3},\n  \"cases\": [\n{},\n{}\n  ]\n}}\n",
         s1m.mean / s10k.mean,
-        row("reserve_release_10k_horizon", s10k),
-        row("reserve_release_1M_horizon", s1m)
+        case_row("reserve_release_10k_horizon", s10k),
+        case_row("reserve_release_1M_horizon", s1m)
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_calendar.json");
     match std::fs::write(path, json) {

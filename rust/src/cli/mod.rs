@@ -5,7 +5,8 @@ use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_example1,
-    run_example3, run_fig5, run_scale, run_table1, SchedulerKind, Table1Config,
+    run_example3, run_fig5, run_scale, run_scale_fat, run_table1, SchedulerKind,
+    Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
@@ -26,7 +27,8 @@ COMMANDS:
   fig5                  Fig 5: JT curves for both jobs
   e2e [--jobs N]        End-to-end online trace through the coordinator
   ablate                Slot-duration / background / heterogeneity ablations
-  scale                 Cluster-size scalability sweep (paper future work)
+  scale [--fat]         Cluster-size scalability sweep (paper future work);
+                        --fat runs the 8-leaf fat-tree grid up to 1024 nodes
   scenario --config F   Run a user-defined scenario sweep from a TOML file
   run --config F        Run the experiment described by a TOML file
   help                  Show this message
@@ -135,7 +137,12 @@ pub fn run(args: Vec<String>) -> i32 {
                 let coord = Coordinator::new(ClusterSetup::default(), kind, CostModel::auto());
                 let results = coord.run_trace(arrivals);
                 let total: f64 = results.iter().map(|r| r.metrics.jt).sum();
-                println!("\n[{}] {} jobs, mean JT {:.1}s", kind.label(), results.len(), total / n as f64);
+                println!(
+                    "\n[{}] {} jobs, mean JT {:.1}s",
+                    kind.label(),
+                    results.len(),
+                    total / n as f64
+                );
                 for r in &results {
                     println!("  t={:>7.1}s {:<18} {}", r.submitted_at, r.name, r.metrics);
                 }
@@ -158,8 +165,17 @@ pub fn run(args: Vec<String>) -> i32 {
         }
         "scale" => {
             let threads = opt_threads(&args);
-            println!("== scalability sweep (8 switches x N hosts, {threads} threads) ==");
-            for p in run_scale(&[2, 4, 8, 16], &CostModel::rust_only(), threads) {
+            let fat = args.iter().any(|a| a == "--fat");
+            let pts = if fat {
+                println!(
+                    "== scalability sweep (8-leaf fat tree up to 1024 hosts, {threads} threads) =="
+                );
+                run_scale_fat(&[4, 16, 64, 128], &CostModel::rust_only(), threads)
+            } else {
+                println!("== scalability sweep (8 switches x N hosts, {threads} threads) ==");
+                run_scale(&[2, 4, 8, 16], &CostModel::rust_only(), threads)
+            };
+            for p in pts {
                 println!(
                     "n={:<4} m={:<4} {:<5} sched {:>8.2}ms  makespan {:>7.1}s",
                     p.nodes, p.tasks, p.scheduler, p.sched_secs * 1e3, p.makespan

@@ -5,6 +5,9 @@
 //! assigning a job's m tasks (Algorithm 1 walks tasks sequentially,
 //! updating `ΥI` after each placement).
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::topology::NodeId;
 use crate::util::Secs;
 
@@ -59,7 +62,10 @@ impl Ledger {
     }
 
     /// Min idle restricted to a candidate subset; `None` if empty.
-    pub fn min_idle_among(&self, nodes: impl IntoIterator<Item = NodeId>) -> Option<(NodeId, Secs)> {
+    pub fn min_idle_among(
+        &self,
+        nodes: impl IntoIterator<Item = NodeId>,
+    ) -> Option<(NodeId, Secs)> {
         let mut best: Option<(NodeId, Secs)> = None;
         for n in nodes {
             let a = self.avail[n.0];
@@ -84,6 +90,51 @@ impl Ledger {
 
     pub fn as_slice(&self) -> &[Secs] {
         &self.avail
+    }
+}
+
+/// O(log n) min-idle view over a node subset (Perf L4, see DESIGN.md).
+///
+/// The paper's inner loops ask "which authorized node is idle first?"
+/// once per task; a linear `min_idle_among` scan made that O(m·n). An
+/// `IdleHeap` is a lazily-invalidated min-heap over `(ΥI, node)` that a
+/// scheduler builds once per round and nudges after each `occupy_until`:
+/// stale entries (the ledger moved past them) pop off on the next query.
+/// Ordering matches [`Ledger::min_idle_among`] exactly — earliest
+/// availability first, lowest node id on ties — so HDS/BAR/BASS pick the
+/// same node the linear scan picked.
+#[derive(Debug, Clone)]
+pub struct IdleHeap {
+    /// `(avail, node id, position in the scheduler's node list)`.
+    heap: BinaryHeap<Reverse<(Secs, usize, usize)>>,
+}
+
+impl IdleHeap {
+    /// Build over `nodes` (a scheduler's authorized set, in its order).
+    pub fn new(ledger: &Ledger, nodes: &[NodeId]) -> Self {
+        let mut heap = BinaryHeap::with_capacity(nodes.len());
+        for (col, &nd) in nodes.iter().enumerate() {
+            heap.push(Reverse((ledger.idle(nd), nd.0, col)));
+        }
+        Self { heap }
+    }
+
+    /// Current minimum `(column, node, ΥI)`; `None` when built empty.
+    /// Amortized O(log n): entries invalidated by ledger movement are
+    /// discarded here.
+    pub fn min(&mut self, ledger: &Ledger) -> Option<(usize, NodeId, Secs)> {
+        while let Some(&Reverse((avail, nd, col))) = self.heap.peek() {
+            if ledger.idle(NodeId(nd)) == avail {
+                return Some((col, NodeId(nd), avail));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Record a node's new availability after `occupy_until`/`set`.
+    pub fn update(&mut self, col: usize, node: NodeId, avail: Secs) {
+        self.heap.push(Reverse((avail, node.0, col)));
     }
 }
 
@@ -129,5 +180,37 @@ mod tests {
     fn max_idle_is_makespan() {
         let l = example1();
         assert_eq!(l.max_idle(), Secs(20.0));
+    }
+
+    #[test]
+    fn idle_heap_tracks_linear_scan() {
+        let mut l = example1();
+        let nodes: Vec<NodeId> = (0..4).map(NodeId).collect();
+        let mut h = IdleHeap::new(&l, &nodes);
+        let (col, nd, at) = h.min(&l).unwrap();
+        assert_eq!((col, nd, at), (0, NodeId(0), Secs(3.0)));
+        l.occupy_until(NodeId(0), Secs(12.0));
+        h.update(0, NodeId(0), Secs(12.0));
+        let want = l.min_idle_among(nodes.iter().copied()).unwrap();
+        let (_, nd, at) = h.min(&l).unwrap();
+        assert_eq!((nd, at), want);
+    }
+
+    #[test]
+    fn idle_heap_breaks_ties_by_node_id() {
+        let l = Ledger::with_initial(vec![Secs(5.0), Secs(5.0)]);
+        // authorized order reversed: the heap must still pick node 0
+        let nodes = [NodeId(1), NodeId(0)];
+        let mut h = IdleHeap::new(&l, &nodes);
+        let (col, nd, _) = h.min(&l).unwrap();
+        assert_eq!(nd, NodeId(0));
+        assert_eq!(col, 1);
+    }
+
+    #[test]
+    fn idle_heap_empty_set() {
+        let l = example1();
+        let mut h = IdleHeap::new(&l, &[]);
+        assert!(h.min(&l).is_none());
     }
 }

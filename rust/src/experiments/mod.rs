@@ -21,5 +21,5 @@ pub use example1::{run_example1, run_one, Example1Outcome};
 pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;
 pub use fixtures::{example1_fixture, makespan, Example1Fixture, SchedulerKind};
-pub use scale::{run_scale, scale_spec, ScalePoint};
+pub use scale::{fat_scale_spec, run_scale, run_scale_fat, scale_spec, ScalePoint};
 pub use table1::{run_cell, run_cell_for_bench, run_table1, Table1Config, Table1Row};

@@ -55,17 +55,37 @@ pub fn scale_spec(per_sw: usize, kind: SchedulerKind) -> ScenarioSpec {
     s
 }
 
-/// Run the sweep: `sizes` are hosts-per-switch counts on an 8-switch
-/// tree; tasks = 2x nodes. `threads` fans points across workers.
-pub fn run_scale(per_switch_sizes: &[usize], cost: &CostModel, threads: usize) -> Vec<ScalePoint> {
-    let points: Vec<(usize, SchedulerKind)> = per_switch_sizes
-        .iter()
-        .flat_map(|&per_sw| {
-            [SchedulerKind::Bass, SchedulerKind::Hds].into_iter().map(move |k| (per_sw, k))
-        })
-        .collect();
-    parallel_map(points, threads, |(per_sw, kind)| {
-        let mut sess = SimSession::new(&scale_spec(per_sw, kind));
+/// The fat-tree variant: an 8-leaf, 4-spine fabric with `per_edge` hosts
+/// per leaf — `per_edge = 128` is the thousand-node (1024-host, 2048-task)
+/// grid the acceptance bar targets. Same shared-cluster regime as
+/// [`scale_spec`].
+pub fn fat_scale_spec(per_edge: usize, kind: SchedulerKind) -> ScenarioSpec {
+    let n_nodes = 8 * per_edge;
+    let mut s = ScenarioSpec::new(
+        format!("scale-fat-{n_nodes}nodes"),
+        TopologyShape::FatTree {
+            edge_switches: 8,
+            hosts_per_edge: per_edge,
+            core_switches: 4,
+            edge_mbps: 100.0,
+            core_mbps: 10_000.0,
+        },
+        WorkloadSpec::MapWave { tasks: 2 * n_nodes, compute_secs: 20.0, output_mb: 16.0 },
+    );
+    s.scheduler = kind;
+    s.replication = 2;
+    s.seed = 57 + per_edge as u64;
+    s.initial = InitialLoad::Sampled { max_secs: 60.0 };
+    s.background = BackgroundSpec { flows: n_nodes / 4, rate_mb_s: 4.0 };
+    s
+}
+
+/// Run one BASS-vs-HDS grid over prebuilt specs (shared by the tree and
+/// fat-tree sweeps).
+fn run_grid(specs: Vec<ScenarioSpec>, cost: &CostModel, threads: usize) -> Vec<ScalePoint> {
+    parallel_map(specs, threads, |spec| {
+        let label = spec.scheduler.label();
+        let mut sess = SimSession::new(&spec);
         let tasks = sess.tasks.clone();
         let t0 = Instant::now();
         let a = sess.schedule(&tasks, None, Secs::ZERO, cost);
@@ -75,11 +95,43 @@ pub fn run_scale(per_switch_sizes: &[usize], cost: &CostModel, threads: usize) -
         ScalePoint {
             nodes: sess.nodes.len(),
             tasks: tasks.len(),
-            scheduler: kind.label(),
+            scheduler: label,
             sched_secs,
             makespan,
         }
     })
+}
+
+/// Run the sweep: `sizes` are hosts-per-switch counts on an 8-switch
+/// tree; tasks = 2x nodes. `threads` fans points across workers.
+pub fn run_scale(per_switch_sizes: &[usize], cost: &CostModel, threads: usize) -> Vec<ScalePoint> {
+    let specs: Vec<ScenarioSpec> = per_switch_sizes
+        .iter()
+        .flat_map(|&per_sw| {
+            [SchedulerKind::Bass, SchedulerKind::Hds]
+                .into_iter()
+                .map(move |k| scale_spec(per_sw, k))
+        })
+        .collect();
+    run_grid(specs, cost, threads)
+}
+
+/// The thousand-node extension: `sizes` are hosts-per-leaf counts on the
+/// 8-leaf fat tree (128 => 1024 nodes / 2048 tasks per point).
+pub fn run_scale_fat(
+    per_edge_sizes: &[usize],
+    cost: &CostModel,
+    threads: usize,
+) -> Vec<ScalePoint> {
+    let specs: Vec<ScenarioSpec> = per_edge_sizes
+        .iter()
+        .flat_map(|&per_edge| {
+            [SchedulerKind::Bass, SchedulerKind::Hds]
+                .into_iter()
+                .map(move |k| fat_scale_spec(per_edge, k))
+        })
+        .collect();
+    run_grid(specs, cost, threads)
 }
 
 #[cfg(test)]
@@ -105,6 +157,37 @@ mod tests {
             };
             assert!(jt("BASS") <= jt("HDS") * 1.25, "n={n}: BASS {} HDS {}", jt("BASS"), jt("HDS"));
         }
+    }
+
+    #[test]
+    fn fat_tree_sweep_shapes() {
+        let pts = run_scale_fat(&[2, 4], &CostModel::rust_only(), 1);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.makespan > 0.0);
+            assert_eq!(p.tasks, 2 * p.nodes);
+        }
+        assert_eq!(pts[0].nodes, 16);
+        assert_eq!(pts[2].nodes, 32);
+    }
+
+    /// The acceptance bar: one BASS-vs-HDS point on the 8-leaf x 128-host
+    /// fat tree (1024 nodes, 2048 tasks each) in under a minute. Ignored
+    /// in the default test run (it is a perf gate, not a logic test):
+    /// `cargo test --release -- --ignored fat_tree_kilonode`.
+    #[test]
+    #[ignore]
+    fn fat_tree_kilonode_point_under_60s() {
+        let t0 = std::time::Instant::now();
+        let pts = run_scale_fat(&[128], &CostModel::rust_only(), 1);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert_eq!(p.nodes, 1024);
+            assert_eq!(p.tasks, 2048);
+            assert!(p.makespan > 0.0);
+        }
+        assert!(wall < 60.0, "BASS+HDS kilonode point took {wall:.1}s (budget 60s)");
     }
 
     #[test]

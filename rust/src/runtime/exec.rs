@@ -67,6 +67,20 @@ impl CostOutputs {
     pub fn slots_at(&self, i: usize, j: usize) -> f32 {
         self.slots[i * self.n + j]
     }
+
+    /// Task `i`'s TM row as one contiguous slice — the cache-friendly
+    /// view for per-task scans over all nodes (BASS's minnow loop walks
+    /// this instead of issuing an indexed `tm_at` per node; the node
+    /// axis is the matrix's fast axis, so the scan is a linear read).
+    pub fn tm_row(&self, i: usize) -> &[f32] {
+        &self.tm[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Task `i`'s ΥC row as one contiguous slice (same layout guarantee
+    /// as [`CostOutputs::tm_row`]).
+    pub fn yc_row(&self, i: usize) -> &[f32] {
+        &self.yc[i * self.n..(i + 1) * self.n]
+    }
 }
 
 /// Which engine computed the result.

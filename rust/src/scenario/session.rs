@@ -9,7 +9,7 @@ use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler};
 use crate::sdn::Controller;
 use crate::sim::{Assignment, Engine, FlowNet, TaskRecord};
-use crate::topology::builders::{fig2, tree_cluster};
+use crate::topology::builders::{fat_tree, fig2, tree_cluster};
 use crate::topology::{LinkId, NodeId, Topology};
 use crate::util::{Secs, XorShift, BLOCK_MB};
 use crate::workload::{BackgroundLoad, WorkloadBuilder};
@@ -279,6 +279,13 @@ fn build_topology(shape: &TopologyShape) -> (Topology, Vec<NodeId>) {
         TopologyShape::Tree { switches, hosts_per_switch, edge_mbps, uplink_mbps } => {
             tree_cluster(switches, hosts_per_switch, edge_mbps, uplink_mbps)
         }
+        TopologyShape::FatTree {
+            edge_switches,
+            hosts_per_edge,
+            core_switches,
+            edge_mbps,
+            core_mbps,
+        } => fat_tree(edge_switches, hosts_per_edge, core_switches, edge_mbps, core_mbps),
     }
 }
 

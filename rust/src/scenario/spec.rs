@@ -23,6 +23,17 @@ pub enum TopologyShape {
     /// Two-level tree: `switches` edge switches with `hosts_per_switch`
     /// task nodes each, all uplinked to one router.
     Tree { switches: usize, hosts_per_switch: usize, edge_mbps: f64, uplink_mbps: f64 },
+    /// Leaf-spine fat tree: `edge_switches` leaves of `hosts_per_edge`
+    /// task nodes, each leaf uplinked to all `core_switches` spines
+    /// (deterministic ECMP spread — see `topology::builders::fat_tree`).
+    /// The datacenter-scale shape for thousand-node sweeps.
+    FatTree {
+        edge_switches: usize,
+        hosts_per_edge: usize,
+        core_switches: usize,
+        edge_mbps: f64,
+        core_mbps: f64,
+    },
 }
 
 /// Initial per-task-node busy time (the paper's `ΥI` at t=0).
@@ -154,7 +165,12 @@ mod tests {
     fn defaults_match_the_paper() {
         let s = ScenarioSpec::new(
             "t",
-            TopologyShape::Tree { switches: 2, hosts_per_switch: 3, edge_mbps: 100.0, uplink_mbps: 100.0 },
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 3,
+                edge_mbps: 100.0,
+                uplink_mbps: 100.0,
+            },
             WorkloadSpec::None,
         );
         assert_eq!(s.slot_secs, 1.0);

@@ -247,7 +247,7 @@ mod tests {
                 authorized: ex.nodes.clone(),
                 now: Secs::ZERO,
                 cost: &cost,
-            node_speed: Vec::new(),
+                node_speed: Vec::new(),
             };
             Hds::new().schedule(&ex.tasks, None, &mut ctx);
         }

@@ -22,6 +22,7 @@
 //! the live slot calendar (`Controller::plan_transfer`), which is the
 //! paper's `BW_{i,minnow} <= BW_rl` test in time-slot form.
 
+use crate::cluster::IdleHeap;
 use crate::mapreduce::TaskSpec;
 use crate::sdn::TrafficClass;
 use crate::sim::{Assignment, Placement, TransferPlan};
@@ -61,63 +62,89 @@ impl Scheduler for Bass {
         let batch = cost::eval_batch(tasks, ctx);
         self.batch_evals += 1;
 
+        // Perf L4 hoists: per-column compute-speed factors and a host->
+        // column map resolved once per round (not per task), plus an
+        // idle-min heap that seeds each minnow scan's prune bound.
+        let speed = ctx.speed_cols();
+        let col_of_host = ctx.authorized_cols();
+        let mut idle_heap = IdleHeap::new(ctx.ledger, &ctx.authorized);
+
         let mut placements = Vec::with_capacity(tasks.len());
         for (i, t) in tasks.iter().enumerate() {
             let class =
                 if t.is_map() { TrafficClass::HadoopOther } else { TrafficClass::Shuffle };
             let locals = ctx.local_nodes(t);
+            let tp_col = |c: usize| -> f64 {
+                match speed[c] {
+                    Some(f) => t.compute.0 * f,
+                    None => t.compute.0,
+                }
+            };
             // ND_minnow per the Objective Function (Eq. 4): the node with
             // the minimum predicted ΥC = TM + TP + ΥI, using the batched
             // TM matrix (XLA hot path) and the *live* ledger idle times.
-            // TP enters per node (heterogeneous clusters scale it).
-            let (minnow, yi_minnow) = {
-                let mut best: Option<(crate::topology::NodeId, f64)> = None;
+            // TP enters per node (heterogeneous clusters scale it). The
+            // scan walks the contiguous TM row and skips any node whose
+            // idle time alone exceeds the best score seen so far (the
+            // min-idle node's full score seeds that bound): TM and TP are
+            // nonnegative, so such a node can neither win nor tie, which
+            // keeps the first-strict-minimum tie-break of the plain scan.
+            let tm_row = batch.tm_row(i);
+            let (minnow, mcol, yi_minnow) = {
+                let (sc, snd, _) = idle_heap.min(ctx.ledger).expect("no authorized nodes");
+                let mut bound = tm_row[sc] as f64 + ctx.ledger.idle(snd).0 + tp_col(sc);
+                let mut best: Option<(usize, crate::topology::NodeId, f64)> = None;
                 for (j, &nd) in ctx.authorized.iter().enumerate() {
-                    let tm = batch.tm_at(i, j) as f64;
-                    let score = tm + ctx.ledger.idle(nd).0 + ctx.effective_compute(t, nd).0;
-                    if best.map_or(true, |(_, b)| score < b) {
-                        best = Some((nd, score));
+                    let idle = ctx.ledger.idle(nd).0;
+                    if idle > bound {
+                        continue;
+                    }
+                    let score = tm_row[j] as f64 + idle + tp_col(j);
+                    if best.map_or(true, |(_, _, b)| score < b) {
+                        best = Some((j, nd, score));
+                        bound = bound.min(score);
                     }
                 }
-                let (nd, _) = best.expect("no authorized nodes");
-                (nd, ctx.ledger.idle(nd))
+                let (c, nd, _) = best.expect("seed node is never pruned");
+                (nd, c, ctx.ledger.idle(nd))
             };
             let loc = ctx.ledger.min_idle_among(locals.iter().copied());
 
-            let assign_local = |ctx: &mut SchedCtx, placements: &mut Vec<Placement>| {
-                let (loc_nd, yi_loc) = loc.unwrap();
-                let start = yi_loc.max(floor);
-                let tp = ctx.effective_compute(t, loc_nd);
-                ctx.ledger.occupy_until(loc_nd, start + tp);
-                placements.push(Placement {
-                    task: t.id,
-                    node: loc_nd,
-                    compute: tp,
-                    transfer: TransferPlan::None,
-                    gate,
-                    is_local: true,
-                    is_map: t.is_map(),
-                });
-            };
+            let assign_local =
+                |ctx: &mut SchedCtx, placements: &mut Vec<Placement>, heap: &mut IdleHeap| {
+                    let (loc_nd, yi_loc) = loc.unwrap();
+                    let start = yi_loc.max(floor);
+                    let tp = ctx.effective_compute(t, loc_nd);
+                    ctx.ledger.occupy_until(loc_nd, start + tp);
+                    heap.update(col_of_host[loc_nd.0], loc_nd, ctx.ledger.idle(loc_nd));
+                    placements.push(Placement {
+                        task: t.id,
+                        node: loc_nd,
+                        compute: tp,
+                        transfer: TransferPlan::None,
+                        gate,
+                        is_local: true,
+                        is_map: t.is_map(),
+                    });
+                };
 
             match loc {
                 Some((loc_nd, yi_loc)) => {
                     // Case 1.1 — local node is (tied-)optimal by idle time
                     if loc_nd == minnow || yi_loc <= yi_minnow {
-                        assign_local(ctx, &mut placements);
+                        assign_local(ctx, &mut placements, &mut idle_heap);
                         continue;
                     }
                     // batched pre-filter: remote unreachable => local
-                    let mcol = cost::col_of(ctx, minnow);
-                    if batch.tm_at(i, mcol) >= crate::runtime::exec::INF {
-                        assign_local(ctx, &mut placements);
+                    if tm_row[mcol] >= crate::runtime::exec::INF {
+                        assign_local(ctx, &mut placements, &mut idle_heap);
                         continue;
                     }
                     // Case 1.2 / 1.3 — ask the controller for a reserved window
                     let src = match ctx.transfer_source(t) {
                         Some(s) => s,
                         None => {
-                            assign_local(ctx, &mut placements);
+                            assign_local(ctx, &mut placements, &mut idle_heap);
                             continue;
                         }
                     };
@@ -134,6 +161,7 @@ impl Scheduler for Bass {
                                 .commit_transfer(src, minnow, class, p, ctx.now)
                                 .expect("planned reservation must commit");
                             ctx.ledger.occupy_until(minnow, tr.arrival + tp_min);
+                            idle_heap.update(mcol, minnow, ctx.ledger.idle(minnow));
                             self.remote_assignments += 1;
                             placements.push(Placement {
                                 task: t.id,
@@ -146,7 +174,7 @@ impl Scheduler for Bass {
                             });
                         }
                         // Case 1.3: bandwidth-starved remote — stay local
-                        _ => assign_local(ctx, &mut placements),
+                        _ => assign_local(ctx, &mut placements, &mut idle_heap),
                     }
                 }
                 None => {
@@ -157,6 +185,7 @@ impl Scheduler for Bass {
                         None => {
                             // no input to move (or sourceless): plain compute
                             ctx.ledger.occupy_until(minnow, start + tp_min);
+                            idle_heap.update(mcol, minnow, ctx.ledger.idle(minnow));
                             placements.push(Placement {
                                 task: t.id,
                                 node: minnow,
@@ -177,6 +206,7 @@ impl Scheduler for Bass {
                                         .expect("planned reservation must commit");
                                     ctx.ledger
                                         .occupy_until(minnow, tr.arrival + tp_min);
+                                    idle_heap.update(mcol, minnow, ctx.ledger.idle(minnow));
                                     self.remote_assignments += 1;
                                     placements.push(Placement {
                                         task: t.id,
@@ -201,6 +231,7 @@ impl Scheduler for Bass {
                                         .unwrap_or(Secs::INF);
                                     ctx.ledger
                                         .occupy_until(minnow, start + tm + tp_min);
+                                    idle_heap.update(mcol, minnow, ctx.ledger.idle(minnow));
                                     placements.push(Placement {
                                         task: t.id,
                                         node: minnow,
@@ -333,7 +364,7 @@ mod tests {
                 authorized: ex.nodes.clone(),
                 now: Secs::ZERO,
                 cost: &cost_model,
-            node_speed: Vec::new(),
+                node_speed: Vec::new(),
             };
             match which {
                 "hds" => {

@@ -22,6 +22,9 @@ pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
     let mut bw = vec![0f32; m * n];
     let mut tp = vec![0f32; m * n];
     let mut local = vec![0f32; m * n];
+    // per-column speed factors hoisted out of the m*n loop (Perf L4);
+    // applying them reproduces `effective_compute` bit for bit
+    let speed = ctx.speed_cols();
     // bw rows depend only on the transfer source; a job's tasks share a
     // handful of sources, so memoize rows per source (perf: collapses
     // m*n path-residual walks to distinct_sources*n — see §Perf).
@@ -48,7 +51,10 @@ pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
         });
         for (j, &nd) in nodes.iter().enumerate() {
             let k = i * n + j;
-            tp[k] = ctx.effective_compute(t, nd).0 as f32;
+            tp[k] = match speed[j] {
+                Some(f) => (t.compute.0 * f) as f32,
+                None => t.compute.0 as f32,
+            };
             local[k] = if locals.contains(&nd) { 1.0 } else { 0.0 };
             bw[k] = row.map_or(0.0, |r| r[j]);
         }
@@ -86,8 +92,14 @@ mod tests {
         let mut nn = Namenode::new();
         // TK1's block: replicas ND2, ND3 (paper Example 1)
         nn.add_block(64.0, vec![f.task_nodes[1], f.task_nodes[2]]);
-        let ledger =
-            Ledger::with_initial(vec![Secs(3.0), Secs(9.0), Secs(20.0), Secs(7.0), Secs::INF, Secs::INF]);
+        let ledger = Ledger::with_initial(vec![
+            Secs(3.0),
+            Secs(9.0),
+            Secs(20.0),
+            Secs(7.0),
+            Secs::INF,
+            Secs::INF,
+        ]);
         (ctrl, nn, ledger, f.task_nodes.to_vec())
     }
 

@@ -35,6 +35,32 @@ impl<'a> SchedCtx<'a> {
         }
     }
 
+    /// Per-authorized-column compute-speed factors, hoisted once per
+    /// scheduling round so per-(task, node) loops multiply a cached
+    /// factor instead of re-resolving `node_speed` (Perf L4). `None`
+    /// means the homogeneous default; applying `speed_cols()[j]` to
+    /// `t.compute` reproduces [`SchedCtx::effective_compute`] exactly.
+    pub fn speed_cols(&self) -> Vec<Option<f64>> {
+        self.authorized
+            .iter()
+            .map(|nd| match self.node_speed.get(nd.0) {
+                Some(&f) if f > 0.0 => Some(f),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Host-id → authorized-column reverse map (`usize::MAX` = not
+    /// authorized), hoisted once per scheduling round — the shared O(1)
+    /// replacement for per-decision `cost::col_of` scans.
+    pub fn authorized_cols(&self) -> Vec<usize> {
+        let mut cols = vec![usize::MAX; self.ledger.n_nodes()];
+        for (c, &nd) in self.authorized.iter().enumerate() {
+            cols[nd.0] = c;
+        }
+        cols
+    }
+
     /// Local candidates of a task within the authorized set.
     pub fn local_nodes(&self, t: &TaskSpec) -> Vec<NodeId> {
         match t.input {

@@ -16,6 +16,15 @@
 //!
 //! The engine produces [`TaskRecord`]s; the metrics layer derives MT/RT/
 //! JT/LR (Table I) and per-node timelines (Fig. 3) from them.
+//!
+//! Perf L4 (see DESIGN.md): placements are loaded once into an
+//! engine-owned arena and flow through the node queues / waiting map as
+//! indices — no per-event `Placement` clones — and all events sharing a
+//! timestamp are drained as one batch so a `FlowCheck` that completes k
+//! flows (or a wave of same-instant `NodeReady` adds) triggers a single
+//! rate recompute and a single completion reschedule instead of one per
+//! flow. Intermediate recomputes were dead work in the seed: their
+//! `FlowCheck` events were superseded by the generation guard anyway.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -132,15 +141,22 @@ pub struct Engine {
     now: Secs,
     seq: u64,
     events: BinaryHeap<Reverse<Ev>>,
-    /// Per-node pending placement queues.
-    queues: Vec<VecDeque<Placement>>,
+    /// Placement arena: queues and the waiting map hold indices into it,
+    /// so nothing clones `Placement`s after `load`.
+    placements: Vec<Placement>,
+    /// Per-node pending placement queues (arena indices).
+    queues: Vec<VecDeque<u32>>,
     node_free: Vec<Secs>,
     /// True while the node is driving a fair-share transfer.
     blocked: Vec<bool>,
-    /// Flow -> (node, placement, picked_at) waiting on that flow.
-    waiting: HashMap<FlowId, (usize, Placement, Secs)>,
+    /// Flow -> (node, placement index, picked_at) waiting on that flow.
+    waiting: HashMap<FlowId, (usize, u32, Secs)>,
     records: Vec<TaskRecord>,
     flow_gen: u64,
+    /// Flow membership changed during the current event batch; one
+    /// reschedule runs when the batch drains.
+    net_dirty: bool,
+    finished_buf: Vec<FlowId>,
 }
 
 impl Engine {
@@ -152,12 +168,15 @@ impl Engine {
             now: Secs::ZERO,
             seq: 0,
             events: BinaryHeap::new(),
+            placements: Vec::new(),
             queues: vec![VecDeque::new(); n],
             node_free: initial_free,
             blocked: vec![false; n],
             waiting: HashMap::new(),
             records: Vec::new(),
             flow_gen: 0,
+            net_dirty: false,
+            finished_buf: Vec::new(),
         }
     }
 
@@ -175,7 +194,9 @@ impl Engine {
     pub fn load(&mut self, a: &Assignment) {
         for p in &a.placements {
             assert!(p.node.0 < self.queues.len(), "placement on unknown node");
-            self.queues[p.node.0].push_back(p.clone());
+            let idx = self.placements.len() as u32;
+            self.placements.push(p.clone());
+            self.queues[p.node.0].push_back(idx);
         }
         for j in 0..self.queues.len() {
             let at = self.node_free[j].max(self.now);
@@ -195,13 +216,19 @@ impl Engine {
         while let Some(Reverse(ev)) = self.events.pop() {
             self.now = self.now.max(ev.at);
             self.net.settle(self.now);
-            match ev.kind {
-                EvKind::NodeReady(j) => self.node_ready(j),
-                EvKind::FlowCheck(gen) => {
-                    if gen == self.flow_gen {
-                        self.flow_check();
-                    }
+            self.dispatch(ev.kind);
+            // drain every event sharing this instant, then recompute flow
+            // rates / completion schedule once for the whole batch
+            while let Some(&Reverse(nxt)) = self.events.peek() {
+                if nxt.at > self.now {
+                    break;
                 }
+                let Reverse(nxt) = self.events.pop().expect("peeked");
+                self.dispatch(nxt.kind);
+            }
+            if self.net_dirty {
+                self.net_dirty = false;
+                self.reschedule_flow_check();
             }
         }
         assert!(
@@ -211,6 +238,17 @@ impl Engine {
         let mut recs = std::mem::take(&mut self.records);
         recs.sort_by_key(|r| r.task);
         recs
+    }
+
+    fn dispatch(&mut self, kind: EvKind) {
+        match kind {
+            EvKind::NodeReady(j) => self.node_ready(j),
+            EvKind::FlowCheck(gen) => {
+                if gen == self.flow_gen {
+                    self.flow_check();
+                }
+            }
+        }
     }
 
     /// A node may be able to start its next placement.
@@ -224,8 +262,8 @@ impl Engine {
             self.push(at, EvKind::NodeReady(j));
             return;
         }
-        let Some(p) = self.queues[j].front().cloned() else { return };
-        if let Some(g) = p.gate {
+        let Some(&pidx) = self.queues[j].front() else { return };
+        if let Some(g) = self.placements[pidx as usize].gate {
             if g > self.now {
                 self.push(g, EvKind::NodeReady(j));
                 return;
@@ -233,38 +271,35 @@ impl Engine {
         }
         self.queues[j].pop_front();
         let picked = self.now;
-        match p.transfer.clone() {
-            TransferPlan::None => {
-                self.finish_compute(j, &p, picked, picked, picked);
-            }
+        let (ready, start) = match &self.placements[pidx as usize].transfer {
+            TransferPlan::None => (picked, picked),
             TransferPlan::Reserved(t) => {
                 // transfer occupies the node from pick-up until arrival
                 let ready = t.arrival.max(picked);
-                self.finish_compute(j, &p, picked, ready, ready);
+                (ready, ready)
             }
             TransferPlan::Prefetched(t) => {
                 // data may already be there; node only waits if not
-                let ready = t.arrival;
-                let start = ready.max(picked);
-                self.finish_compute(j, &p, picked, ready, start);
+                (t.arrival, t.arrival.max(picked))
             }
             TransferPlan::FairShare { path, size_mb, class } => {
-                if size_mb <= 0.0 || path.is_empty() {
-                    self.finish_compute(j, &p, picked, picked, picked);
-                } else {
-                    let id = self.net.add_flow(path, size_mb, class);
+                if *size_mb > 0.0 && !path.is_empty() {
+                    let id = self.net.add_flow_slice(path, *size_mb, *class);
                     self.blocked[j] = true;
-                    self.waiting.insert(id, (j, p, picked));
-                    self.reschedule_flow_check();
+                    self.waiting.insert(id, (j, pidx, picked));
+                    self.net_dirty = true;
+                    return;
                 }
+                (picked, picked)
             }
-        }
+        };
+        self.finish_compute(j, pidx, picked, ready, start);
     }
 
-    fn finish_compute(&mut self, j: usize, p: &Placement, picked: Secs, ready: Secs, start: Secs) {
+    fn finish_compute(&mut self, j: usize, pidx: u32, picked: Secs, ready: Secs, start: Secs) {
+        let p = &self.placements[pidx as usize];
         let finish = start + p.compute;
-        self.node_free[j] = finish;
-        self.records.push(TaskRecord {
+        let record = TaskRecord {
             task: p.task,
             node: p.node,
             picked_at: picked,
@@ -273,21 +308,27 @@ impl Engine {
             finish,
             is_local: p.is_local,
             is_map: p.is_map,
-        });
+        };
+        self.node_free[j] = finish;
+        self.records.push(record);
         self.push(finish, EvKind::NodeReady(j));
     }
 
-    /// Handle completed flows.
+    /// Handle completed flows: all removals land in one deferred rate
+    /// recompute (the flow net is lazy and the batch reschedules once).
     fn flow_check(&mut self) {
-        for id in self.net.finished() {
+        let mut buf = std::mem::take(&mut self.finished_buf);
+        self.net.finished_into(&mut buf);
+        for &id in &buf {
             self.net.remove_flow(id);
-            if let Some((j, p, picked)) = self.waiting.remove(&id) {
+            if let Some((j, pidx, picked)) = self.waiting.remove(&id) {
                 self.blocked[j] = false;
                 self.node_free[j] = self.now;
-                self.finish_compute(j, &p, picked, self.now, self.now);
+                self.finish_compute(j, pidx, picked, self.now, self.now);
             }
         }
-        self.reschedule_flow_check();
+        self.finished_buf = buf;
+        self.net_dirty = true;
     }
 }
 

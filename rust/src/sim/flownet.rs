@@ -1,7 +1,7 @@
 //! Fluid flow model with max-min fair sharing and optional QoS queues.
 //!
-//! Flows are (path, remaining MB, class). Rates are recomputed by
-//! progressive filling whenever the flow set changes:
+//! Flows are (path, remaining MB, class). Rates come from progressive
+//! filling whenever the flow set changes:
 //!
 //! * shared mode — classic max-min over every link's full capacity;
 //! * QoS mode (Example 3) — the switch queues partition each link into
@@ -9,20 +9,62 @@
 //!
 //! Static background load is modeled as ever-running flows with infinite
 //! remaining volume, so foreground Hadoop traffic feels the contention.
+//!
+//! ## Perf L4: incremental data structures (see DESIGN.md)
+//!
+//! The seed recomputed *every* flow's rate from scratch on every
+//! add/remove — O(F·L) with per-flow path clones, tripled under QoS —
+//! which made execution quadratic in flow count. This version is built
+//! for churn:
+//!
+//! * flows live in a **slab arena** (`Vec<Option<Flow>>` + free list);
+//!   a [`FlowId`] packs `(creation seq << 32) | slot`, so lookups are
+//!   O(1) array probes (no hashing) while id *order* still equals
+//!   creation order, preserving every tie-break of the old code;
+//! * a **per-link flow index** makes membership changes local: an
+//!   add/remove only marks its links dirty, and the next read refills
+//!   just the link-connected component (per traffic class in QoS mode)
+//!   whose membership actually changed — progressive filling decomposes
+//!   exactly across components because disjoint components share no
+//!   links (rates match the from-scratch fill to f64 dust; see the
+//!   `flownet` property tests);
+//! * recomputation is **lazy**: membership changes accumulate and one
+//!   refill runs at the next `settle`/`rate_of`/`next_completion`, so a
+//!   burst of same-instant adds/removes (the engine's `FlowCheck`
+//!   batches) costs one refill instead of one per flow;
+//! * a **completion heap** of `(predicted finish, id)` entries, lazily
+//!   invalidated by per-slot versions, makes [`FlowNet::next_completion`]
+//!   O(log F) amortized; predictions are settle-invariant while a flow's
+//!   rate is unchanged, and the rare nonlinear states (remaining snapped
+//!   to zero, empty-path flows with infinite rate) fall back to the
+//!   seed's exact scan;
+//! * all traversal/refill buffers are reused scratch; released path
+//!   vectors return to a pool ([`FlowNet::add_flow_slice`] recycles
+//!   them), so steady-state churn allocates nothing.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::sdn::qos::QosPolicy;
 use crate::sdn::TrafficClass;
 use crate::topology::LinkId;
 use crate::util::{mbps_to_mb_per_s, Secs};
 
-/// Flow identifier within a [`FlowNet`].
+/// Flow identifier within a [`FlowNet`]. The raw value packs the slab
+/// slot in the low 32 bits and a monotone creation sequence in the high
+/// bits, so comparing `id.0` compares creation order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FlowId(pub u64);
 
+impl FlowId {
+    fn slot(self) -> usize {
+        (self.0 & 0xFFFF_FFFF) as usize
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Flow {
+    id: FlowId,
     path: Vec<LinkId>,
     remaining_mb: f64,
     class: TrafficClass,
@@ -30,7 +72,32 @@ struct Flow {
     /// SDN-enforced rate cap (background flows are rate-limited by the
     /// controller so the static `BW_rl` view stays truthful).
     max_rate_mb_s: f64,
+    /// Bumped on every rate change; stale completion-heap entries carry
+    /// an older version and are discarded lazily.
+    version: u32,
 }
+
+/// A queued completion prediction: valid while the slot still holds the
+/// same flow at the same version. Field order gives the (time, id)
+/// ordering the seed used: earliest completion first, lowest id on ties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct CompletionEntry {
+    at: Secs,
+    id: u64,
+    slot: u32,
+    version: u32,
+}
+
+fn class_index(class: TrafficClass) -> usize {
+    match class {
+        TrafficClass::Shuffle => 0,
+        TrafficClass::HadoopOther => 1,
+        TrafficClass::Background => 2,
+    }
+}
+
+const CLASSES: [TrafficClass; 3] =
+    [TrafficClass::Shuffle, TrafficClass::HadoopOther, TrafficClass::Background];
 
 /// The fluid network.
 #[derive(Debug, Clone)]
@@ -38,27 +105,97 @@ pub struct FlowNet {
     /// Per-link capacity, MB/s.
     link_cap_mb_s: Vec<f64>,
     qos: Option<QosPolicy>,
-    flows: HashMap<FlowId, Flow>,
-    next_id: u64,
+    /// Per-class link capacities when a QoS policy is installed
+    /// (`min(queue rate, link rate)` per link); empty in shared mode.
+    class_caps: Vec<Vec<f64>>,
+    /// Slab arena: `FlowId::slot` indexes here.
+    slots: Vec<Option<Flow>>,
+    free: Vec<u32>,
+    /// Per-link index of occupied slots.
+    link_flows: Vec<Vec<u32>>,
+    n_live: usize,
+    seq: u32,
     /// Last time `settle` ran; rates are valid from here.
     clock: Secs,
+    /// Lazily-invalidated completion predictions.
+    heap: BinaryHeap<Reverse<CompletionEntry>>,
+    /// Links whose flow membership changed since the last refill, per
+    /// traffic class (unioned in shared mode).
+    pending: [Vec<usize>; 3],
+    /// Set by `set_qos`: every partition must refill.
+    full_dirty: bool,
+    /// Finite flows currently at zero remaining volume; while any exist
+    /// `next_completion` uses the exact scan (their prediction is "the
+    /// current clock", which a stored entry cannot track).
+    n_zero: usize,
+    /// Live empty-path (infinite-rate) flows; same exact-scan fallback.
+    n_instant: usize,
+    /// Recycled path vectors from removed flows.
+    path_pool: Vec<Vec<LinkId>>,
+    // ---- reusable scratch (meaningless between calls) ----
+    members: Vec<(u64, u32)>,
+    member_links: Vec<usize>,
+    seen_link: Vec<bool>,
+    seen_slot: Vec<bool>,
+    stack: Vec<usize>,
+    active: Vec<u32>,
+    still_active: Vec<u32>,
+    rates: Vec<f64>,
+    remaining_cap: Vec<f64>,
+    count: Vec<u32>,
 }
 
 impl FlowNet {
     pub fn new(link_caps_mbps: &[f64]) -> Self {
+        let n = link_caps_mbps.len();
         Self {
             link_cap_mb_s: link_caps_mbps.iter().map(|&c| mbps_to_mb_per_s(c)).collect(),
             qos: None,
-            flows: HashMap::new(),
-            next_id: 0,
+            class_caps: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            link_flows: vec![Vec::new(); n],
+            n_live: 0,
+            seq: 0,
             clock: Secs::ZERO,
+            heap: BinaryHeap::new(),
+            pending: [Vec::new(), Vec::new(), Vec::new()],
+            full_dirty: false,
+            n_zero: 0,
+            n_instant: 0,
+            path_pool: Vec::new(),
+            members: Vec::new(),
+            member_links: Vec::new(),
+            seen_link: vec![false; n],
+            seen_slot: Vec::new(),
+            stack: Vec::new(),
+            active: Vec::new(),
+            still_active: Vec::new(),
+            rates: Vec::new(),
+            remaining_cap: vec![0.0; n],
+            count: vec![0; n],
         }
     }
 
     /// Install a QoS policy (per-class link partitions).
     pub fn set_qos(&mut self, policy: QosPolicy) {
+        self.class_caps = CLASSES
+            .iter()
+            .map(|&class| {
+                let qrate = policy
+                    .classify(class)
+                    .map(|qid| mbps_to_mb_per_s(policy.queues[qid.0].rate_mbps));
+                self.link_cap_mb_s
+                    .iter()
+                    .map(|&c| qrate.map_or(c, |q| q.min(c)))
+                    .collect()
+            })
+            .collect();
         self.qos = Some(policy);
-        self.recompute();
+        self.full_dirty = true;
+        for p in &mut self.pending {
+            p.clear();
+        }
     }
 
     pub fn clock(&self) -> Secs {
@@ -66,15 +203,23 @@ impl FlowNet {
     }
 
     pub fn n_flows(&self) -> usize {
-        self.flows.len()
+        self.n_live
     }
 
-    pub fn rate_of(&self, id: FlowId) -> Option<f64> {
-        self.flows.get(&id).map(|f| f.rate_mb_s)
+    fn flow(&self, id: FlowId) -> Option<&Flow> {
+        match self.slots.get(id.slot()) {
+            Some(Some(f)) if f.id == id => Some(f),
+            _ => None,
+        }
+    }
+
+    pub fn rate_of(&mut self, id: FlowId) -> Option<f64> {
+        self.flush();
+        self.flow(id).map(|f| f.rate_mb_s)
     }
 
     pub fn remaining_of(&self, id: FlowId) -> Option<f64> {
-        self.flows.get(&id).map(|f| f.remaining_mb)
+        self.flow(id).map(|f| f.remaining_mb)
     }
 
     /// Advance all flows to `now` at their current rates. `now` must be
@@ -82,15 +227,19 @@ impl FlowNet {
     /// decides completion order; use [`FlowNet::finished`].
     pub fn settle(&mut self, now: Secs) {
         assert!(now >= self.clock, "time went backwards: {now} < {}", self.clock);
+        self.flush();
         let dt = (now - self.clock).0;
         if dt > 0.0 {
-            for f in self.flows.values_mut() {
-                if f.remaining_mb.is_finite() {
+            for f in self.slots.iter_mut().flatten() {
+                if f.remaining_mb.is_finite() && f.remaining_mb > 0.0 {
                     f.remaining_mb = (f.remaining_mb - f.rate_mb_s * dt).max(0.0);
                     // snap float residue below one byte to zero, otherwise
                     // completion events converge on `now` without firing
                     if f.remaining_mb < 1e-6 {
                         f.remaining_mb = 0.0;
+                    }
+                    if f.remaining_mb == 0.0 {
+                        self.n_zero += 1;
                     }
                 }
             }
@@ -98,9 +247,18 @@ impl FlowNet {
         self.clock = now;
     }
 
-    /// Add a flow at the current clock; rates are recomputed.
+    /// Add a flow at the current clock; rates refresh on the next read.
     pub fn add_flow(&mut self, path: Vec<LinkId>, size_mb: f64, class: TrafficClass) -> FlowId {
-        self.add_flow_capped(path, size_mb, class, f64::INFINITY)
+        self.insert(path, size_mb, class, f64::INFINITY)
+    }
+
+    /// [`FlowNet::add_flow`] without handing over a path allocation: the
+    /// path is copied into a recycled vector from the removal pool.
+    pub fn add_flow_slice(&mut self, path: &[LinkId], size_mb: f64, class: TrafficClass) -> FlowId {
+        let mut p = self.path_pool.pop().unwrap_or_default();
+        p.clear();
+        p.extend_from_slice(path);
+        self.insert(p, size_mb, class, f64::INFINITY)
     }
 
     /// Add a flow with an SDN-enforced rate cap (MB/s).
@@ -111,14 +269,7 @@ impl FlowNet {
         class: TrafficClass,
         max_rate_mb_s: f64,
     ) -> FlowId {
-        let id = FlowId(self.next_id);
-        self.next_id += 1;
-        self.flows.insert(
-            id,
-            Flow { path, remaining_mb: size_mb, class, rate_mb_s: 0.0, max_rate_mb_s },
-        );
-        self.recompute();
-        id
+        self.insert(path, size_mb, class, max_rate_mb_s)
     }
 
     /// Permanent background flow (infinite volume, unlimited appetite).
@@ -138,126 +289,286 @@ impl FlowNet {
         self.add_flow_capped(path, f64::INFINITY, class, cap_mb_s)
     }
 
-    /// Remove a flow (finished or cancelled); rates are recomputed.
+    fn insert(
+        &mut self,
+        path: Vec<LinkId>,
+        size_mb: f64,
+        class: TrafficClass,
+        max_rate_mb_s: f64,
+    ) -> FlowId {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(None);
+                self.seen_slot.push(false);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let id = FlowId(((self.seq as u64) << 32) | slot as u64);
+        self.seq = self.seq.checked_add(1).expect("flow id space exhausted");
+        for &l in &path {
+            self.link_flows[l.0].push(slot);
+        }
+        let instant = path.is_empty();
+        if instant {
+            self.n_instant += 1;
+        } else {
+            self.mark_dirty(class, &path);
+        }
+        if size_mb.is_finite() && size_mb <= 0.0 {
+            self.n_zero += 1;
+        }
+        self.slots[slot as usize] = Some(Flow {
+            id,
+            path,
+            remaining_mb: size_mb,
+            class,
+            // empty-path flows (src == dst) are instantaneous
+            rate_mb_s: if instant { f64::INFINITY } else { 0.0 },
+            max_rate_mb_s,
+            version: 0,
+        });
+        self.n_live += 1;
+        id
+    }
+
+    /// Remove a flow (finished or cancelled); rates refresh lazily.
     pub fn remove_flow(&mut self, id: FlowId) -> Option<f64> {
-        let f = self.flows.remove(&id)?;
-        self.recompute();
+        self.flow(id)?;
+        let f = self.slots[id.slot()].take().expect("checked above");
+        let slot = id.slot() as u32;
+        for &l in &f.path {
+            let v = &mut self.link_flows[l.0];
+            let pos = v.iter().position(|&s| s == slot).expect("indexed flow");
+            v.swap_remove(pos);
+        }
+        self.mark_dirty(f.class, &f.path);
+        if f.path.is_empty() {
+            self.n_instant -= 1;
+        }
+        if f.remaining_mb.is_finite() && f.remaining_mb <= 0.0 {
+            self.n_zero -= 1;
+        }
+        self.free.push(slot);
+        self.n_live -= 1;
+        let mut path = f.path;
+        path.clear();
+        self.path_pool.push(path);
         Some(f.remaining_mb)
     }
 
-    /// Finite flows with zero remaining volume at the current clock.
+    /// Finite flows with zero remaining volume at the current clock,
+    /// written into a caller-reused buffer (sorted by id).
+    pub fn finished_into(&self, out: &mut Vec<FlowId>) {
+        out.clear();
+        for f in self.slots.iter().flatten() {
+            if f.remaining_mb <= 0.0 {
+                out.push(f.id);
+            }
+        }
+        out.sort_by_key(|id| id.0);
+    }
+
+    /// Allocating convenience wrapper around [`FlowNet::finished_into`].
     pub fn finished(&self) -> Vec<FlowId> {
-        let mut v: Vec<FlowId> = self
-            .flows
-            .iter()
-            .filter(|(_, f)| f.remaining_mb <= 0.0)
-            .map(|(&id, _)| id)
-            .collect();
-        v.sort_by_key(|id| id.0);
+        let mut v = Vec::new();
+        self.finished_into(&mut v);
         v
     }
 
     /// Earliest (time, flow) at which a finite flow completes if rates
     /// stay fixed; `None` when no finite flows are active or all rates 0.
-    pub fn next_completion(&self) -> Option<(Secs, FlowId)> {
-        let mut best: Option<(Secs, FlowId)> = None;
-        for (&id, f) in &self.flows {
-            if !f.remaining_mb.is_finite() {
+    pub fn next_completion(&mut self) -> Option<(Secs, FlowId)> {
+        self.flush();
+        if self.n_zero > 0 || self.n_instant > 0 {
+            // zero-remaining and infinite-rate flows predict "the current
+            // clock", which stored entries cannot represent: exact scan
+            let mut best: Option<(Secs, FlowId)> = None;
+            for f in self.slots.iter().flatten() {
+                if !f.remaining_mb.is_finite() || f.rate_mb_s <= 0.0 {
+                    continue;
+                }
+                let t = Secs(self.clock.0 + f.remaining_mb / f.rate_mb_s);
+                let better = match best {
+                    None => true,
+                    Some((bt, bid)) => t < bt || (t == bt && f.id.0 < bid.0),
+                };
+                if better {
+                    best = Some((t, f.id));
+                }
+            }
+            return best;
+        }
+        while let Some(&Reverse(e)) = self.heap.peek() {
+            let valid = match &self.slots[e.slot as usize] {
+                Some(f) => f.id.0 == e.id && f.version == e.version,
+                None => false,
+            };
+            if valid {
+                return Some((e.at, FlowId(e.id)));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    // ---- incremental recomputation ------------------------------------
+
+    fn mark_dirty(&mut self, class: TrafficClass, path: &[LinkId]) {
+        if self.full_dirty || path.is_empty() {
+            return;
+        }
+        let p = &mut self.pending[class_index(class)];
+        for &l in path {
+            p.push(l.0);
+        }
+    }
+
+    /// Refill every partition whose membership changed since the last
+    /// read. Shared mode treats all classes as one partition.
+    fn flush(&mut self) {
+        if self.full_dirty {
+            self.full_dirty = false;
+            for p in &mut self.pending {
+                p.clear();
+            }
+            if self.qos.is_none() {
+                self.collect_all(None);
+                self.refill(None);
+            } else {
+                for ci in 0..3 {
+                    self.collect_all(Some(ci));
+                    self.refill(Some(ci));
+                }
+            }
+            return;
+        }
+        if self.pending.iter().all(|p| p.is_empty()) {
+            return;
+        }
+        if self.qos.is_none() {
+            self.stack.clear();
+            for p in &mut self.pending {
+                self.stack.append(p);
+            }
+            self.collect_component(None);
+            self.refill(None);
+        } else {
+            for ci in 0..self.pending.len() {
+                if self.pending[ci].is_empty() {
+                    continue;
+                }
+                self.stack.clear();
+                let mut seeds = std::mem::take(&mut self.pending[ci]);
+                self.stack.append(&mut seeds);
+                self.pending[ci] = seeds;
+                self.collect_component(Some(ci));
+                self.refill(Some(ci));
+            }
+        }
+    }
+
+    /// Gather every (routed) flow of a partition into the member scratch.
+    fn collect_all(&mut self, class: Option<usize>) {
+        self.members.clear();
+        self.member_links.clear();
+        for (slot, f) in self.slots.iter().enumerate() {
+            let Some(f) = f else { continue };
+            if f.path.is_empty() {
                 continue;
             }
-            if f.rate_mb_s <= 0.0 {
+            if let Some(ci) = class {
+                if class_index(f.class) != ci {
+                    continue;
+                }
+            }
+            self.members.push((f.id.0, slot as u32));
+            for &l in &f.path {
+                if !self.seen_link[l.0] {
+                    self.seen_link[l.0] = true;
+                    self.member_links.push(l.0);
+                }
+            }
+        }
+        for &l in &self.member_links {
+            self.seen_link[l] = false;
+        }
+        self.member_links.sort_unstable();
+        self.members.sort_unstable();
+    }
+
+    /// BFS over the per-link index from the seed links in `self.stack`,
+    /// collecting the link-connected component of the partition.
+    fn collect_component(&mut self, class: Option<usize>) {
+        self.members.clear();
+        self.member_links.clear();
+        while let Some(l) = self.stack.pop() {
+            if self.seen_link[l] {
                 continue;
             }
-            let t = Secs(self.clock.0 + f.remaining_mb / f.rate_mb_s);
-            best = match best {
-                None => Some((t, id)),
-                Some((bt, bid)) => {
-                    if t < bt || (t == bt && id.0 < bid.0) {
-                        Some((t, id))
-                    } else {
-                        Some((bt, bid))
+            self.seen_link[l] = true;
+            self.member_links.push(l);
+            for &slot in &self.link_flows[l] {
+                if self.seen_slot[slot as usize] {
+                    continue;
+                }
+                let f = self.slots[slot as usize].as_ref().expect("indexed flow");
+                if let Some(ci) = class {
+                    if class_index(f.class) != ci {
+                        continue;
                     }
                 }
+                self.seen_slot[slot as usize] = true;
+                self.members.push((f.id.0, slot));
+                for &l2 in &f.path {
+                    if !self.seen_link[l2.0] {
+                        self.stack.push(l2.0);
+                    }
+                }
+            }
+        }
+        for &(_, slot) in &self.members {
+            self.seen_slot[slot as usize] = false;
+        }
+        for &l in &self.member_links {
+            self.seen_link[l] = false;
+        }
+        self.member_links.sort_unstable();
+        self.members.sort_unstable();
+    }
+
+    /// Progressive filling of the member flows against the partition's
+    /// capacities. Semantics mirror the seed's from-scratch `fill` —
+    /// identical bottleneck selection (ascending link id, strict min),
+    /// identical cap-freeze rule, identical id-ordered freeze passes —
+    /// restricted to one link-connected component, with counts maintained
+    /// incrementally instead of recounted per round.
+    fn refill(&mut self, class: Option<usize>) {
+        let m = self.members.len();
+        self.rates.clear();
+        self.rates.resize(m, 0.0);
+        self.active.clear();
+        self.active.extend(0..m as u32);
+        for &l in &self.member_links {
+            self.remaining_cap[l] = match class {
+                None => self.link_cap_mb_s[l],
+                Some(ci) => self.class_caps[ci][l],
             };
         }
-        best
-    }
-
-    /// Max-min progressive filling. With QoS, fill each class against its
-    /// per-link queue capacity; classes are strictly partitioned so they
-    /// do not interact (the paper's HTB-style queue config).
-    fn recompute(&mut self) {
-        match self.qos.clone() {
-            None => {
-                let caps = self.link_cap_mb_s.clone();
-                let ids: Vec<FlowId> = self.flows.keys().copied().collect();
-                self.fill(&ids, &caps);
-            }
-            Some(policy) => {
-                for class in
-                    [TrafficClass::Shuffle, TrafficClass::HadoopOther, TrafficClass::Background]
-                {
-                    let qrate = match policy.classify(class) {
-                        None => None, // shared policy object but no queues
-                        Some(qid) => Some(mbps_to_mb_per_s(policy.queues[qid.0].rate_mbps)),
-                    };
-                    let caps: Vec<f64> = self
-                        .link_cap_mb_s
-                        .iter()
-                        .map(|&c| qrate.map_or(c, |q| q.min(c)))
-                        .collect();
-                    let ids: Vec<FlowId> = self
-                        .flows
-                        .iter()
-                        .filter(|(_, f)| f.class == class)
-                        .map(|(&id, _)| id)
-                        .collect();
-                    self.fill(&ids, &caps);
-                }
+        for &(_, slot) in &self.members {
+            let f = self.slots[slot as usize].as_ref().expect("member flow");
+            for &l in &f.path {
+                self.count[l.0] += 1;
             }
         }
-    }
-
-    /// Progressive filling of `ids` against `caps` (indexed by link).
-    ///
-    /// Perf note (§Perf L3): works on a flat snapshot (id, path, cap) —
-    /// no per-access FlowId hashing, no O(F²) retains — then writes the
-    /// computed rates back in one pass. ~100x on 200-flow recomputes.
-    fn fill(&mut self, ids: &[FlowId], caps: &[f64]) {
-        let mut order: Vec<FlowId> = ids.to_vec();
-        order.sort_by_key(|id| id.0);
-        // snapshot: (id, path, cap, computed rate)
-        let mut snap: Vec<(FlowId, Vec<LinkId>, f64, f64)> = order
-            .iter()
-            .map(|id| {
-                let f = &self.flows[id];
-                (*id, f.path.clone(), f.max_rate_mb_s, 0.0)
-            })
-            .collect();
-        // empty-path flows (src == dst) are instantaneous
-        let mut active: Vec<usize> = Vec::with_capacity(snap.len());
-        for (i, e) in snap.iter_mut().enumerate() {
-            if e.1.is_empty() {
-                e.3 = f64::INFINITY;
-            } else {
-                active.push(i);
-            }
-        }
-        let mut remaining_cap = caps.to_vec();
-        let mut count = vec![0usize; caps.len()];
-        while !active.is_empty() {
-            count.iter_mut().for_each(|c| *c = 0);
-            for &i in &active {
-                for l in &snap[i].1 {
-                    count[l.0] += 1;
-                }
-            }
+        while !self.active.is_empty() {
             let mut bottleneck: Option<(f64, usize)> = None;
-            for (l, &c) in count.iter().enumerate() {
+            for &l in &self.member_links {
+                let c = self.count[l];
                 if c == 0 {
                     continue;
                 }
-                let share = remaining_cap[l] / c as f64;
+                let share = self.remaining_cap[l] / c as f64;
                 if bottleneck.map_or(true, |(s, _)| share < s) {
                     bottleneck = Some((share, l));
                 }
@@ -265,28 +576,57 @@ impl FlowNet {
             let Some((share, bl)) = bottleneck else { break };
             // flows rate-capped below the would-be share freeze at their
             // cap first (classic max-min with per-flow caps)
-            let any_capped = active.iter().any(|&i| snap[i].2 < share);
-            let mut still_active = Vec::with_capacity(active.len());
-            for &i in &active {
-                let freeze = if any_capped {
-                    snap[i].2 < share
-                } else {
-                    snap[i].1.contains(&LinkId(bl))
-                };
-                if freeze {
-                    let rate = if any_capped { snap[i].2 } else { share };
-                    snap[i].3 = rate;
-                    for l in &snap[i].1 {
-                        remaining_cap[l.0] = (remaining_cap[l.0] - rate).max(0.0);
-                    }
-                } else {
-                    still_active.push(i);
+            let mut any_capped = false;
+            for &k in &self.active {
+                let slot = self.members[k as usize].1 as usize;
+                if self.slots[slot].as_ref().expect("member flow").max_rate_mb_s < share {
+                    any_capped = true;
+                    break;
                 }
             }
-            active = still_active;
+            self.still_active.clear();
+            for &k in &self.active {
+                let slot = self.members[k as usize].1 as usize;
+                let f = self.slots[slot].as_ref().expect("member flow");
+                let freeze = if any_capped {
+                    f.max_rate_mb_s < share
+                } else {
+                    f.path.contains(&LinkId(bl))
+                };
+                if freeze {
+                    let rate = if any_capped { f.max_rate_mb_s } else { share };
+                    self.rates[k as usize] = rate;
+                    for &l in &f.path {
+                        self.remaining_cap[l.0] = (self.remaining_cap[l.0] - rate).max(0.0);
+                        self.count[l.0] -= 1;
+                    }
+                } else {
+                    self.still_active.push(k);
+                }
+            }
+            std::mem::swap(&mut self.active, &mut self.still_active);
         }
-        for (id, _, _, rate) in snap {
-            self.flows.get_mut(&id).unwrap().rate_mb_s = rate;
+        // restore the all-zero count invariant (break leaves leftovers)
+        for &l in &self.member_links {
+            self.count[l] = 0;
+        }
+        // write back; push fresh completion predictions on rate changes
+        let clock = self.clock;
+        for (&(_, slot), &rate) in self.members.iter().zip(&self.rates) {
+            let f = self.slots[slot as usize].as_mut().expect("member flow");
+            if rate != f.rate_mb_s {
+                f.rate_mb_s = rate;
+                f.version = f.version.wrapping_add(1);
+                if f.remaining_mb.is_finite() && rate > 0.0 {
+                    let e = CompletionEntry {
+                        at: Secs(clock.0 + f.remaining_mb / rate),
+                        id: f.id.0,
+                        slot,
+                        version: f.version,
+                    };
+                    self.heap.push(Reverse(e));
+                }
+            }
         }
     }
 }
@@ -379,6 +719,10 @@ mod tests {
         let mut n = net();
         let f = n.add_flow(vec![], 100.0, TrafficClass::HadoopOther);
         assert!(n.rate_of(f).unwrap().is_infinite());
+        // an instantaneous flow completes "now"
+        let (t, id) = n.next_completion().unwrap();
+        assert_eq!(id, f);
+        assert_eq!(t, Secs::ZERO);
     }
 
     #[test]
@@ -387,5 +731,69 @@ mod tests {
         let mut n = net();
         n.settle(Secs(5.0));
         n.settle(Secs(4.0));
+    }
+
+    #[test]
+    fn slab_reuse_keeps_ids_distinct_and_ordered() {
+        let mut n = net();
+        let a = n.add_flow(vec![LinkId(0)], 10.0, TrafficClass::HadoopOther);
+        n.remove_flow(a);
+        let b = n.add_flow(vec![LinkId(0)], 10.0, TrafficClass::HadoopOther);
+        assert_ne!(a, b);
+        assert!(b.0 > a.0, "later flows must compare greater");
+        assert!(n.rate_of(a).is_none(), "stale id must not resolve");
+        assert!((n.rate_of(b).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_removals_settle_to_scratch_rates() {
+        // three same-instant removals cost one deferred refill; the
+        // surviving flow sees the full link afterwards
+        let mut n = net();
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            ids.push(n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther));
+        }
+        let keep = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(keep).unwrap() - 2.5).abs() < 1e-9);
+        for id in ids {
+            n.remove_flow(id);
+        }
+        assert!((n.rate_of(keep).unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(n.n_flows(), 1);
+    }
+
+    #[test]
+    fn disjoint_components_keep_their_rates() {
+        // removing a flow on link 0 must not disturb link 2's flows
+        let mut n = net();
+        let a = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        let b = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        let c = n.add_flow(vec![LinkId(2)], 100.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(c).unwrap() - 10.0).abs() < 1e-9);
+        n.remove_flow(a);
+        assert!((n.rate_of(b).unwrap() - 10.0).abs() < 1e-9);
+        assert!((n.rate_of(c).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completion_order_breaks_ties_by_id() {
+        let mut n = net();
+        let a = n.add_flow(vec![LinkId(0)], 50.0, TrafficClass::HadoopOther);
+        let _b = n.add_flow(vec![LinkId(1)], 50.0, TrafficClass::HadoopOther);
+        let (t, id) = n.next_completion().unwrap();
+        assert_eq!(id, a);
+        assert!((t.0 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_cap_holds_under_churn() {
+        let mut n = net();
+        let bg = n.add_background_capped(vec![LinkId(0)], TrafficClass::Background, 2.0);
+        let f = n.add_flow(vec![LinkId(0)], 40.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(bg).unwrap() - 2.0).abs() < 1e-9);
+        assert!((n.rate_of(f).unwrap() - 8.0).abs() < 1e-9);
+        n.remove_flow(f);
+        assert!((n.rate_of(bg).unwrap() - 2.0).abs() < 1e-9);
     }
 }

@@ -89,6 +89,46 @@ pub fn tree_cluster(
     (t, hosts)
 }
 
+/// Two-tier fat tree (leaf-spine): `edge_switches` leaves with
+/// `hosts_per_edge` task nodes each, every leaf uplinked to **all**
+/// `core_switches` spine routers — the BigDataSDNSim-class datacenter
+/// fabric the paper's future-work evaluation calls for. Returns the
+/// topology and the task-node list in id order.
+///
+/// Each leaf lists its core uplinks starting at a different core
+/// (`(edge + k) % cores`), and [`Topology::routes_from`] rotates by
+/// source host; together they spread cross-leaf routes over the parallel
+/// core links deterministically instead of funneling everything through
+/// core 0.
+pub fn fat_tree(
+    edge_switches: usize,
+    hosts_per_edge: usize,
+    core_switches: usize,
+    edge_mbps: f64,
+    core_mbps: f64,
+) -> (Topology, Vec<NodeId>) {
+    assert!(edge_switches >= 1 && hosts_per_edge >= 1 && core_switches >= 1);
+    let mut t = Topology::new();
+    let mut hosts = Vec::with_capacity(edge_switches * hosts_per_edge);
+    // create hosts first so NodeId(0..n) are the task nodes
+    for _ in 0..edge_switches * hosts_per_edge {
+        hosts.push(t.add_host());
+    }
+    let cores: Vec<usize> = (0..core_switches).map(|_| t.add_router()).collect();
+    for e in 0..edge_switches {
+        let sw = t.add_switch();
+        for h in 0..hosts_per_edge {
+            let host = hosts[e * hosts_per_edge + h];
+            t.connect(Endpoint::Host(host), Endpoint::Switch(sw), edge_mbps);
+        }
+        for k in 0..core_switches {
+            let core = cores[(e + k) % core_switches];
+            t.connect(Endpoint::Switch(sw), Endpoint::Router(core), core_mbps);
+        }
+    }
+    (t, hosts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +180,39 @@ mod tests {
         let p = t.route(hosts[0], hosts[3]).unwrap();
         let rates: Vec<f64> = p.iter().map(|&l| t.link(l).capacity_mbps).collect();
         assert_eq!(rates, vec![100.0, 250.0, 250.0, 100.0]);
+    }
+
+    #[test]
+    fn fat_tree_counts_and_path_lengths() {
+        let (t, hosts) = fat_tree(4, 3, 2, 100.0, 1000.0);
+        assert_eq!(hosts.len(), 12);
+        assert_eq!(t.switches.len(), 4);
+        assert_eq!(t.routers.len(), 2);
+        // 12 host links + 4 edges x 2 cores
+        assert_eq!(t.n_links(), 20);
+        // same-leaf: 2 links; cross-leaf: host-edge-core-edge-host
+        assert_eq!(t.route(hosts[0], hosts[2]).unwrap().len(), 2);
+        assert_eq!(t.route(hosts[0], hosts[11]).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn fat_tree_spreads_routes_across_cores() {
+        use crate::topology::PathCache;
+        let (t, hosts) = fat_tree(4, 4, 4, 100.0, 1000.0);
+        let cache = PathCache::build(&t);
+        // collect the core-uplink links used by cross-leaf routes; with 4
+        // parallel cores more than one must carry traffic
+        let mut used = std::collections::HashSet::new();
+        for &s in &hosts {
+            for &d in &hosts {
+                if s.0 / 4 == d.0 / 4 {
+                    continue;
+                }
+                let p = cache.path(s, d).unwrap();
+                assert_eq!(p.len(), 4, "cross-leaf routes are 4 links");
+                used.insert(p[1]); // the src leaf's uplink
+            }
+        }
+        assert!(used.len() > 1, "ECMP spread must use multiple core links, got {used:?}");
     }
 }

@@ -148,6 +148,58 @@ impl Topology {
         }
         None
     }
+
+    /// Single-source BFS: shortest link paths from `src` to **every**
+    /// host, indexed by host id (`None` = disconnected, `Some(vec![])` at
+    /// `src` itself). One sweep replaces `n_hosts` [`Topology::route`]
+    /// calls, turning all-pairs cache construction from O(H²·E) into
+    /// O(H·E) — the difference between seconds and minutes on
+    /// thousand-host fat trees.
+    ///
+    /// `rot` rotates each expanded endpoint's neighbor order. On trees
+    /// (unique shortest paths) it changes nothing; on multipath fabrics
+    /// like [`super::builders::fat_tree`] passing the source host id
+    /// spreads equal-length routes across the parallel core links
+    /// deterministically (a static ECMP hash).
+    pub fn routes_from(&self, src: NodeId, rot: usize) -> Vec<Option<Vec<LinkId>>> {
+        use std::collections::{HashMap, VecDeque};
+        let start = Endpoint::Host(src);
+        let mut prev: HashMap<Endpoint, (Endpoint, LinkId)> = HashMap::new();
+        let mut q = VecDeque::new();
+        q.push_back(start);
+        while let Some(cur) = q.pop_front() {
+            let nbrs = self.neighbors(cur);
+            let len = nbrs.len();
+            for k in 0..len {
+                let (lid, nxt) = nbrs[(k + rot) % len];
+                if nxt == start || prev.contains_key(&nxt) {
+                    continue;
+                }
+                prev.insert(nxt, (cur, lid));
+                q.push_back(nxt);
+            }
+        }
+        self.hosts
+            .iter()
+            .map(|&dst| {
+                if dst == src {
+                    return Some(Vec::new());
+                }
+                let goal = Endpoint::Host(dst);
+                prev.contains_key(&goal).then(|| {
+                    let mut path = Vec::new();
+                    let mut at = goal;
+                    while at != start {
+                        let (p, l) = prev[&at];
+                        path.push(l);
+                        at = p;
+                    }
+                    path.reverse();
+                    path
+                })
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +249,29 @@ mod tests {
         let a = t.add_host();
         let b = t.add_host();
         assert!(t.route(a, b).is_none());
+    }
+
+    #[test]
+    fn routes_from_matches_per_pair_bfs_on_trees() {
+        let (t, h0, _, _) = line3();
+        // trees have unique shortest paths: any rotation reproduces route()
+        for rot in [0usize, 1, 7] {
+            let all = t.routes_from(h0, rot);
+            assert_eq!(all.len(), t.n_hosts());
+            for (d, got) in all.iter().enumerate() {
+                assert_eq!(got, &t.route(h0, NodeId(d)), "dst {d} rot {rot}");
+            }
+        }
+    }
+
+    #[test]
+    fn routes_from_flags_disconnected_hosts() {
+        let mut t = Topology::new();
+        let a = t.add_host();
+        let b = t.add_host();
+        let all = t.routes_from(a, 0);
+        assert_eq!(all[a.0], Some(vec![]));
+        assert_eq!(all[b.0], None);
     }
 
     #[test]

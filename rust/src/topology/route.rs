@@ -16,14 +16,17 @@ pub struct PathCache {
 }
 
 impl PathCache {
-    /// Build from a topology (O(H^2 * E) once).
+    /// Build from a topology: one single-source BFS sweep per host
+    /// (O(H·E) total; the seed ran a full BFS per *pair*, which priced
+    /// thousand-host fat trees out entirely). Each source rotates its
+    /// neighbor order by its own id, so multipath fabrics spread
+    /// equal-length routes across parallel core links deterministically;
+    /// trees are unaffected (unique shortest paths).
     pub fn build(topo: &Topology) -> Self {
         let n = topo.n_hosts();
         let mut paths = Vec::with_capacity(n * n);
         for s in 0..n {
-            for d in 0..n {
-                paths.push(topo.route(NodeId(s), NodeId(d)));
-            }
+            paths.extend(topo.routes_from(NodeId(s), s));
         }
         Self { n, paths }
     }

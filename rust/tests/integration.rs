@@ -132,7 +132,7 @@ fn locality_starvation_cluster_subset() {
         authorized: vec![nodes[4], nodes[5]],
         now: Secs::ZERO,
         cost: &cost,
-            node_speed: Vec::new(),
+        node_speed: Vec::new(),
     };
     let a = Bass::new().schedule(&tasks, None, &mut ctx);
     let p = &a.placements[0];

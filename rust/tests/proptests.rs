@@ -8,7 +8,7 @@ use bass::mapreduce::TaskSpec;
 use bass::runtime::{CostInputs, CostModel};
 use bass::sched::{Bar, Bass, Hds, SchedCtx, Scheduler};
 use bass::sdn::{Controller, Reservation, SlotCalendar};
-use bass::sim::{Engine, FlowNet, TransferPlan};
+use bass::sim::{Assignment, Engine, FlowNet, TransferPlan};
 use bass::testkit::forall;
 use bass::topology::builders::tree_cluster;
 use bass::topology::{LinkId, NodeId};
@@ -42,8 +42,14 @@ fn build(s: &Scenario) -> (Controller, Namenode, Vec<NodeId>, Vec<TaskSpec>, Vec
     let ctrl = Controller::new(topo, 1.0);
     let mut nn = Namenode::new();
     let mut rng = XorShift::new(s.seed);
-    let blocks =
-        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes, s.m_tasks, BLOCK_MB, s.replication, &mut rng);
+    let blocks = PlacementPolicy::RandomDistinct.place(
+        &mut nn,
+        &nodes,
+        s.m_tasks,
+        BLOCK_MB,
+        s.replication,
+        &mut rng,
+    );
     let tasks = blocks
         .iter()
         .enumerate()
@@ -70,11 +76,16 @@ fn prop_schedulers_place_each_task_once_and_validly() {
                 authorized: nodes.clone(),
                 now: Secs::ZERO,
                 cost: &cost,
-            node_speed: Vec::new(),
+                node_speed: Vec::new(),
             };
             let a = sched.schedule(&tasks, None, &mut ctx);
             if a.placements.len() != tasks.len() {
-                return Err(format!("{}: {} placements for {} tasks", sched.name(), a.placements.len(), tasks.len()));
+                return Err(format!(
+                    "{}: {} placements for {} tasks",
+                    sched.name(),
+                    a.placements.len(),
+                    tasks.len()
+                ));
             }
             let mut seen = vec![false; tasks.len()];
             for p in &a.placements {
@@ -88,7 +99,11 @@ fn prop_schedulers_place_each_task_once_and_validly() {
                 if p.is_local {
                     let b = tasks[p.task.0].input.unwrap();
                     if !nn.is_local(b, p.node) {
-                        return Err(format!("{}: fake locality for task {}", sched.name(), p.task.0));
+                        return Err(format!(
+                            "{}: fake locality for task {}",
+                            sched.name(),
+                            p.task.0
+                        ));
                     }
                 }
             }
@@ -113,7 +128,7 @@ fn prop_bass_estimate_matches_execution() {
                 authorized: nodes.clone(),
                 now: Secs::ZERO,
                 cost: &cost,
-            node_speed: Vec::new(),
+                node_speed: Vec::new(),
             };
             Bass::new().schedule(&tasks, None, &mut ctx)
         };
@@ -293,7 +308,7 @@ fn prop_engine_records_consistent() {
                 authorized: nodes.clone(),
                 now: Secs::ZERO,
                 cost: &cost,
-            node_speed: Vec::new(),
+                node_speed: Vec::new(),
             };
             Hds::new().schedule(&tasks, None, &mut ctx)
         };
@@ -306,7 +321,11 @@ fn prop_engine_records_consistent() {
         engine.load(&a);
         let records = engine.run();
         if records.len() != tasks.len() {
-            return Err(format!("{} records for {} tasks (remote={remote})", records.len(), tasks.len()));
+            return Err(format!(
+                "{} records for {} tasks (remote={remote})",
+                records.len(),
+                tasks.len()
+            ));
         }
         let mut per_node: Vec<Vec<f64>> = vec![Vec::new(); nodes.len()];
         for r in &records {
@@ -790,6 +809,1154 @@ fn prop_uniform_speed_scaling() {
         // all-compute lower bound: doubling TP at least doesn't shrink JT
         if double + 1e-9 < base {
             return Err(format!("doubling compute time shrank JT: {base} -> {double}"));
+        }
+        Ok(())
+    });
+}
+
+/// Reference implementation for the Perf-L4 equivalence properties: the
+/// seed's `FlowNet` (HashMap storage, eager from-scratch max-min fill on
+/// every membership change), ported verbatim. The incremental slab/
+/// component/heap implementation must be observationally equivalent.
+mod flownet_reference {
+    use std::collections::HashMap;
+
+    use bass::sdn::{QosPolicy, TrafficClass};
+    use bass::topology::LinkId;
+    use bass::util::{mbps_to_mb_per_s, Secs};
+
+    #[derive(Debug, Clone)]
+    struct Flow {
+        path: Vec<LinkId>,
+        remaining_mb: f64,
+        class: TrafficClass,
+        rate_mb_s: f64,
+        max_rate_mb_s: f64,
+    }
+
+    #[derive(Debug, Clone)]
+    pub struct RefNet {
+        link_cap_mb_s: Vec<f64>,
+        qos: Option<QosPolicy>,
+        flows: HashMap<u64, Flow>,
+        next_id: u64,
+        clock: Secs,
+    }
+
+    impl RefNet {
+        pub fn new(link_caps_mbps: &[f64]) -> Self {
+            Self {
+                link_cap_mb_s: link_caps_mbps.iter().map(|&c| mbps_to_mb_per_s(c)).collect(),
+                qos: None,
+                flows: HashMap::new(),
+                next_id: 0,
+                clock: Secs::ZERO,
+            }
+        }
+
+        pub fn set_qos(&mut self, policy: QosPolicy) {
+            self.qos = Some(policy);
+            self.recompute();
+        }
+
+        pub fn clock(&self) -> Secs {
+            self.clock
+        }
+
+        pub fn n_flows(&self) -> usize {
+            self.flows.len()
+        }
+
+        pub fn rate_of(&self, id: u64) -> Option<f64> {
+            self.flows.get(&id).map(|f| f.rate_mb_s)
+        }
+
+        pub fn remaining_of(&self, id: u64) -> Option<f64> {
+            self.flows.get(&id).map(|f| f.remaining_mb)
+        }
+
+        pub fn settle(&mut self, now: Secs) {
+            assert!(now >= self.clock, "time went backwards");
+            let dt = (now - self.clock).0;
+            if dt > 0.0 {
+                for f in self.flows.values_mut() {
+                    if f.remaining_mb.is_finite() {
+                        f.remaining_mb = (f.remaining_mb - f.rate_mb_s * dt).max(0.0);
+                        if f.remaining_mb < 1e-6 {
+                            f.remaining_mb = 0.0;
+                        }
+                    }
+                }
+            }
+            self.clock = now;
+        }
+
+        pub fn add_flow(&mut self, path: Vec<LinkId>, size_mb: f64, class: TrafficClass) -> u64 {
+            self.add_flow_capped(path, size_mb, class, f64::INFINITY)
+        }
+
+        pub fn add_flow_capped(
+            &mut self,
+            path: Vec<LinkId>,
+            size_mb: f64,
+            class: TrafficClass,
+            max_rate_mb_s: f64,
+        ) -> u64 {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.flows.insert(
+                id,
+                Flow { path, remaining_mb: size_mb, class, rate_mb_s: 0.0, max_rate_mb_s },
+            );
+            self.recompute();
+            id
+        }
+
+        pub fn remove_flow(&mut self, id: u64) -> Option<f64> {
+            let f = self.flows.remove(&id)?;
+            self.recompute();
+            Some(f.remaining_mb)
+        }
+
+        pub fn finished(&self) -> Vec<u64> {
+            let mut v: Vec<u64> = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.remaining_mb <= 0.0)
+                .map(|(&id, _)| id)
+                .collect();
+            v.sort_unstable();
+            v
+        }
+
+        pub fn next_completion(&self) -> Option<(Secs, u64)> {
+            let mut best: Option<(Secs, u64)> = None;
+            for (&id, f) in &self.flows {
+                if !f.remaining_mb.is_finite() || f.rate_mb_s <= 0.0 {
+                    continue;
+                }
+                let t = Secs(self.clock.0 + f.remaining_mb / f.rate_mb_s);
+                best = match best {
+                    None => Some((t, id)),
+                    Some((bt, bid)) => {
+                        if t < bt || (t == bt && id < bid) {
+                            Some((t, id))
+                        } else {
+                            Some((bt, bid))
+                        }
+                    }
+                };
+            }
+            best
+        }
+
+        fn recompute(&mut self) {
+            match self.qos.clone() {
+                None => {
+                    let caps = self.link_cap_mb_s.clone();
+                    let ids: Vec<u64> = self.flows.keys().copied().collect();
+                    self.fill(&ids, &caps);
+                }
+                Some(policy) => {
+                    for class in [
+                        TrafficClass::Shuffle,
+                        TrafficClass::HadoopOther,
+                        TrafficClass::Background,
+                    ] {
+                        let qrate = policy
+                            .classify(class)
+                            .map(|qid| mbps_to_mb_per_s(policy.queues[qid.0].rate_mbps));
+                        let caps: Vec<f64> = self
+                            .link_cap_mb_s
+                            .iter()
+                            .map(|&c| qrate.map_or(c, |q| q.min(c)))
+                            .collect();
+                        let ids: Vec<u64> = self
+                            .flows
+                            .iter()
+                            .filter(|(_, f)| f.class == class)
+                            .map(|(&id, _)| id)
+                            .collect();
+                        self.fill(&ids, &caps);
+                    }
+                }
+            }
+        }
+
+        fn fill(&mut self, ids: &[u64], caps: &[f64]) {
+            let mut order: Vec<u64> = ids.to_vec();
+            order.sort_unstable();
+            let mut snap: Vec<(u64, Vec<LinkId>, f64, f64)> = order
+                .iter()
+                .map(|id| {
+                    let f = &self.flows[id];
+                    (*id, f.path.clone(), f.max_rate_mb_s, 0.0)
+                })
+                .collect();
+            let mut active: Vec<usize> = Vec::with_capacity(snap.len());
+            for (i, e) in snap.iter_mut().enumerate() {
+                if e.1.is_empty() {
+                    e.3 = f64::INFINITY;
+                } else {
+                    active.push(i);
+                }
+            }
+            let mut remaining_cap = caps.to_vec();
+            let mut count = vec![0usize; caps.len()];
+            while !active.is_empty() {
+                count.iter_mut().for_each(|c| *c = 0);
+                for &i in &active {
+                    for l in &snap[i].1 {
+                        count[l.0] += 1;
+                    }
+                }
+                let mut bottleneck: Option<(f64, usize)> = None;
+                for (l, &c) in count.iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    let share = remaining_cap[l] / c as f64;
+                    if bottleneck.map_or(true, |(s, _)| share < s) {
+                        bottleneck = Some((share, l));
+                    }
+                }
+                let Some((share, bl)) = bottleneck else { break };
+                let any_capped = active.iter().any(|&i| snap[i].2 < share);
+                let mut still_active = Vec::with_capacity(active.len());
+                for &i in &active {
+                    let freeze = if any_capped {
+                        snap[i].2 < share
+                    } else {
+                        snap[i].1.contains(&LinkId(bl))
+                    };
+                    if freeze {
+                        let rate = if any_capped { snap[i].2 } else { share };
+                        snap[i].3 = rate;
+                        for l in &snap[i].1 {
+                            remaining_cap[l.0] = (remaining_cap[l.0] - rate).max(0.0);
+                        }
+                    } else {
+                        still_active.push(i);
+                    }
+                }
+                active = still_active;
+            }
+            for (id, _, _, rate) in snap {
+                self.flows.get_mut(&id).unwrap().rate_mb_s = rate;
+            }
+        }
+    }
+}
+
+/// One randomized flow-network interaction.
+#[derive(Debug, Clone)]
+enum NetOp {
+    Add { path: Vec<usize>, size_mb: f64, class: usize, cap: f64 },
+    AddBg { path: Vec<usize>, class: usize, cap: f64 },
+    Remove { pick: usize },
+    SettleNext,
+    Settle { dt: f64 },
+    InstallQos,
+    Drain,
+}
+
+#[derive(Debug)]
+struct NetCase {
+    caps_mbps: Vec<f64>,
+    ops: Vec<NetOp>,
+}
+
+fn gen_net_case(r: &mut XorShift, qos_mode: bool) -> NetCase {
+    let n_links = 1 + r.below(10);
+    let caps_mbps: Vec<f64> =
+        (0..n_links).map(|_| [80.0, 100.0, 64.0, 40.0][r.below(4)]).collect();
+    let pick_path = |r: &mut XorShift, min_len: usize| -> Vec<usize> {
+        let len = min_len + r.below(3.min(n_links) + 1 - min_len);
+        r.distinct(n_links, len.min(n_links))
+    };
+    let ops = (0..80)
+        .map(|_| match r.below(20) {
+            0..=6 => NetOp::Add {
+                path: pick_path(r, 0),
+                size_mb: [8.0, 16.0, 64.0, 100.0, 0.0][r.below(5)],
+                class: r.below(3),
+                cap: [f64::INFINITY, f64::INFINITY, 4.0, 2.0][r.below(4)],
+            },
+            7..=8 => NetOp::AddBg {
+                path: pick_path(r, 1),
+                class: r.below(3),
+                cap: [f64::INFINITY, 4.0, 2.0][r.below(3)],
+            },
+            9..=12 => NetOp::Remove { pick: r.below(64) },
+            13..=15 => NetOp::SettleNext,
+            16..=17 => NetOp::Settle { dt: [0.0, 0.5, 1.0, 3.0][r.below(4)] },
+            18 => {
+                if qos_mode {
+                    NetOp::InstallQos
+                } else {
+                    NetOp::SettleNext
+                }
+            }
+            _ => NetOp::Drain,
+        })
+        .collect();
+    NetCase { caps_mbps, ops }
+}
+
+fn class_of(i: usize) -> bass::sdn::TrafficClass {
+    use bass::sdn::TrafficClass::*;
+    [Shuffle, HadoopOther, Background][i]
+}
+
+/// The incremental FlowNet (slab arena + per-link index + lazy component
+/// refill + completion heap) is observationally equivalent to the seed's
+/// from-scratch implementation under arbitrary add/settle/remove churn —
+/// rates, finished sets, completion predictions and drained volumes all
+/// match within f64 dust, in shared mode and with rate caps in play.
+#[test]
+fn prop_flownet_incremental_matches_scratch_shared() {
+    flownet_equivalence(0xF0A, false);
+}
+
+/// Same property with the Example 3 QoS queues installed mid-sequence
+/// (per-class partitions + background rate caps interacting with churn).
+#[test]
+fn prop_flownet_incremental_matches_scratch_qos() {
+    flownet_equivalence(0xF0B, true);
+}
+
+fn flownet_equivalence(seed: u64, qos_mode: bool) {
+    use bass::sdn::QosPolicy;
+    use flownet_reference::RefNet;
+    const TOL: f64 = 1e-9;
+    forall(
+        seed,
+        80,
+        |r| gen_net_case(r, qos_mode),
+        |case| {
+            let mut reference = RefNet::new(&case.caps_mbps);
+            let mut incr = bass::sim::FlowNet::new(&case.caps_mbps);
+            let mut live: Vec<(u64, bass::sim::FlowId)> = Vec::new();
+            let mut map: std::collections::HashMap<u64, bass::sim::FlowId> =
+                std::collections::HashMap::new();
+            let close = |a: f64, b: f64| -> bool {
+                (a == b) || (a - b).abs() <= TOL || (a.is_infinite() && b.is_infinite())
+            };
+            for (step, op) in case.ops.iter().enumerate() {
+                match op {
+                    NetOp::Add { path, size_mb, class, cap } => {
+                        let p: Vec<LinkId> = path.iter().map(|&l| LinkId(l)).collect();
+                        let a = reference.add_flow_capped(
+                            p.clone(),
+                            *size_mb,
+                            class_of(*class),
+                            *cap,
+                        );
+                        let b = incr.add_flow_capped(p, *size_mb, class_of(*class), *cap);
+                        map.insert(a, b);
+                        live.push((a, b));
+                    }
+                    NetOp::AddBg { path, class, cap } => {
+                        let p: Vec<LinkId> = path.iter().map(|&l| LinkId(l)).collect();
+                        let a = reference.add_flow_capped(
+                            p.clone(),
+                            f64::INFINITY,
+                            class_of(*class),
+                            *cap,
+                        );
+                        let b =
+                            incr.add_flow_capped(p, f64::INFINITY, class_of(*class), *cap);
+                        map.insert(a, b);
+                        live.push((a, b));
+                    }
+                    NetOp::Remove { pick } => {
+                        if !live.is_empty() {
+                            let (a, b) = live.swap_remove(pick % live.len());
+                            let ra = reference.remove_flow(a);
+                            let rb = incr.remove_flow(b);
+                            match (ra, rb) {
+                                (Some(x), Some(y)) if close(x, y) => {}
+                                other => {
+                                    return Err(format!(
+                                        "step {step}: remove returns diverged {other:?}"
+                                    ))
+                                }
+                            }
+                        }
+                    }
+                    NetOp::SettleNext => {
+                        if let Some((t, _)) = reference.next_completion() {
+                            let to = t.max(reference.clock());
+                            reference.settle(to);
+                            incr.settle(to);
+                        }
+                    }
+                    NetOp::Settle { dt } => {
+                        let to = Secs(reference.clock().0 + dt);
+                        reference.settle(to);
+                        incr.settle(to);
+                    }
+                    NetOp::InstallQos => {
+                        reference.set_qos(QosPolicy::example3());
+                        incr.set_qos(QosPolicy::example3());
+                    }
+                    NetOp::Drain => {
+                        for a in reference.finished() {
+                            let b = map[&a];
+                            reference.remove_flow(a);
+                            incr.remove_flow(b);
+                            live.retain(|&(x, _)| x != a);
+                        }
+                    }
+                }
+                // full observational comparison after every op
+                if reference.n_flows() != incr.n_flows() {
+                    return Err(format!(
+                        "step {step}: flow counts {} != {}",
+                        reference.n_flows(),
+                        incr.n_flows()
+                    ));
+                }
+                for &(a, b) in &live {
+                    let (ra, rb) = (reference.rate_of(a), incr.rate_of(b));
+                    match (ra, rb) {
+                        (Some(x), Some(y)) if close(x, y) => {}
+                        other => {
+                            return Err(format!("step {step}: rate diverged {other:?}"))
+                        }
+                    }
+                    let (ma, mb) = (reference.remaining_of(a), incr.remaining_of(b));
+                    match (ma, mb) {
+                        (Some(x), Some(y)) if close(x, y) => {}
+                        other => {
+                            return Err(format!("step {step}: remaining diverged {other:?}"))
+                        }
+                    }
+                }
+                let fa: Vec<bass::sim::FlowId> =
+                    reference.finished().iter().map(|id| map[id]).collect();
+                let fb = incr.finished();
+                if fa != fb {
+                    return Err(format!("step {step}: finished diverged {fa:?} vs {fb:?}"));
+                }
+                match (reference.next_completion(), incr.next_completion()) {
+                    (None, None) => {}
+                    (Some((ta, ia)), Some((tb, ib))) => {
+                        if !close(ta.0, tb.0) {
+                            return Err(format!(
+                                "step {step}: completion time {ta} vs {tb}"
+                            ));
+                        }
+                        if map[&ia] != ib {
+                            // ulp ties: the incremental side may argmin a
+                            // different flow whose completion is within
+                            // dust of the reference minimum — accept it
+                            // iff the reference also predicts that flow
+                            // completing at (dust-)the same instant
+                            let alt = live.iter().find(|&&(_, b)| b == ib).map(|&(a, _)| a);
+                            let alt_t = alt.and_then(|a| {
+                                let rem = reference.remaining_of(a)?;
+                                let rate = reference.rate_of(a)?;
+                                (rate > 0.0 && rem.is_finite())
+                                    .then(|| reference.clock().0 + rem / rate)
+                            });
+                            match alt_t {
+                                Some(t) if close(t, ta.0) => {}
+                                _ => {
+                                    return Err(format!(
+                                        "step {step}: completion flow {ia} vs {ib:?}"
+                                    ))
+                                }
+                            }
+                        }
+                    }
+                    other => {
+                        return Err(format!("step {step}: completion diverged {other:?}"))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Reference executor: the seed's engine (per-event settle, per-flow
+/// remove + reschedule, cloned placements) ported verbatim on top of the
+/// reference flow network.
+mod engine_reference {
+    use std::cmp::Reverse;
+    use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+    use bass::sim::{Assignment, Placement, TaskRecord, TransferPlan};
+    use bass::util::Secs;
+
+    use super::flownet_reference::RefNet;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+    enum EvKind {
+        NodeReady(usize),
+        FlowCheck(u64),
+    }
+
+    pub struct RefEngine {
+        pub net: RefNet,
+        now: Secs,
+        seq: u64,
+        events: BinaryHeap<Reverse<(Secs, u64, EvKind)>>,
+        queues: Vec<VecDeque<Placement>>,
+        node_free: Vec<Secs>,
+        blocked: Vec<bool>,
+        waiting: HashMap<u64, (usize, Placement, Secs)>,
+        records: Vec<TaskRecord>,
+        flow_gen: u64,
+    }
+
+    impl RefEngine {
+        pub fn new(net: RefNet, initial_free: Vec<Secs>) -> Self {
+            let n = initial_free.len();
+            Self {
+                net,
+                now: Secs::ZERO,
+                seq: 0,
+                events: BinaryHeap::new(),
+                queues: vec![VecDeque::new(); n],
+                node_free: initial_free,
+                blocked: vec![false; n],
+                waiting: HashMap::new(),
+                records: Vec::new(),
+                flow_gen: 0,
+            }
+        }
+
+        fn push(&mut self, at: Secs, kind: EvKind) {
+            self.seq += 1;
+            self.events.push(Reverse((at, self.seq, kind)));
+        }
+
+        pub fn load(&mut self, a: &Assignment) {
+            for p in &a.placements {
+                self.queues[p.node.0].push_back(p.clone());
+            }
+            for j in 0..self.queues.len() {
+                let at = self.node_free[j].max(self.now);
+                self.push(at, EvKind::NodeReady(j));
+            }
+        }
+
+        fn reschedule_flow_check(&mut self) {
+            if let Some((t, _)) = self.net.next_completion() {
+                self.flow_gen += 1;
+                self.push(t.max(self.now), EvKind::FlowCheck(self.flow_gen));
+            }
+        }
+
+        pub fn run(&mut self) -> Vec<TaskRecord> {
+            while let Some(Reverse((at, _, kind))) = self.events.pop() {
+                self.now = self.now.max(at);
+                self.net.settle(self.now);
+                match kind {
+                    EvKind::NodeReady(j) => self.node_ready(j),
+                    EvKind::FlowCheck(gen) => {
+                        if gen == self.flow_gen {
+                            self.flow_check();
+                        }
+                    }
+                }
+            }
+            assert!(self.waiting.is_empty() && self.queues.iter().all(|q| q.is_empty()));
+            let mut recs = std::mem::take(&mut self.records);
+            recs.sort_by_key(|r| r.task);
+            recs
+        }
+
+        fn node_ready(&mut self, j: usize) {
+            if self.blocked[j] {
+                return;
+            }
+            if self.node_free[j] > self.now {
+                let at = self.node_free[j];
+                self.push(at, EvKind::NodeReady(j));
+                return;
+            }
+            let Some(p) = self.queues[j].front().cloned() else { return };
+            if let Some(g) = p.gate {
+                if g > self.now {
+                    self.push(g, EvKind::NodeReady(j));
+                    return;
+                }
+            }
+            self.queues[j].pop_front();
+            let picked = self.now;
+            match p.transfer.clone() {
+                TransferPlan::None => self.finish_compute(j, &p, picked, picked, picked),
+                TransferPlan::Reserved(t) => {
+                    let ready = t.arrival.max(picked);
+                    self.finish_compute(j, &p, picked, ready, ready);
+                }
+                TransferPlan::Prefetched(t) => {
+                    let ready = t.arrival;
+                    let start = ready.max(picked);
+                    self.finish_compute(j, &p, picked, ready, start);
+                }
+                TransferPlan::FairShare { path, size_mb, class } => {
+                    if size_mb <= 0.0 || path.is_empty() {
+                        self.finish_compute(j, &p, picked, picked, picked);
+                    } else {
+                        let id = self.net.add_flow(path, size_mb, class);
+                        self.blocked[j] = true;
+                        self.waiting.insert(id, (j, p, picked));
+                        self.reschedule_flow_check();
+                    }
+                }
+            }
+        }
+
+        fn finish_compute(
+            &mut self,
+            j: usize,
+            p: &Placement,
+            picked: Secs,
+            ready: Secs,
+            start: Secs,
+        ) {
+            let finish = start + p.compute;
+            self.node_free[j] = finish;
+            self.records.push(TaskRecord {
+                task: p.task,
+                node: p.node,
+                picked_at: picked,
+                input_ready: ready,
+                compute_start: start,
+                finish,
+                is_local: p.is_local,
+                is_map: p.is_map,
+            });
+            self.push(finish, EvKind::NodeReady(j));
+        }
+
+        fn flow_check(&mut self) {
+            for id in self.net.finished() {
+                self.net.remove_flow(id);
+                if let Some((j, p, picked)) = self.waiting.remove(&id) {
+                    self.blocked[j] = false;
+                    self.node_free[j] = self.now;
+                    self.finish_compute(j, &p, picked, self.now, self.now);
+                }
+            }
+            self.reschedule_flow_check();
+        }
+    }
+}
+
+/// A randomized assignment over a small cluster for the engine property.
+#[derive(Debug)]
+struct EngineCase {
+    caps_mbps: Vec<f64>,
+    initial: Vec<f64>,
+    placements: Vec<(usize, usize, f64, u8, Vec<usize>, f64, f64, Option<f64>)>,
+    background: Vec<(Vec<usize>, f64)>,
+}
+
+fn gen_engine_case(r: &mut XorShift) -> EngineCase {
+    let n_links = 1 + r.below(8);
+    let caps_mbps: Vec<f64> = (0..n_links).map(|_| [80.0, 100.0, 64.0][r.below(3)]).collect();
+    let n_nodes = 1 + r.below(6);
+    let initial: Vec<f64> = (0..n_nodes).map(|_| [0.0, 1.0, 3.0, 7.0][r.below(4)]).collect();
+    let m = 1 + r.below(24);
+    let placements = (0..m)
+        .map(|t| {
+            let node = r.below(n_nodes);
+            let compute = [1.0, 2.0, 5.0, 9.0][r.below(4)];
+            // kind: 0/1 = local, 2 = reserved, 3 = prefetched, else fair
+            let kind = r.below(8) as u8;
+            let path = {
+                let len = r.below(3.min(n_links) + 1);
+                r.distinct(n_links, len)
+            };
+            let size = [0.0, 16.0, 50.0, 64.0][r.below(4)];
+            let arrival = [2.0, 5.0, 8.0][r.below(3)];
+            let gate = if r.chance(0.25) { Some([4.0, 10.0][r.below(2)]) } else { None };
+            (t, node, compute, kind, path, size, arrival, gate)
+        })
+        .collect();
+    let background = (0..r.below(4))
+        .map(|_| {
+            let len = 1 + r.below(2.min(n_links));
+            (r.distinct(n_links, len), [f64::INFINITY, 4.0][r.below(2)])
+        })
+        .collect();
+    EngineCase { caps_mbps, initial, placements, background }
+}
+
+fn engine_case_assignment(case: &EngineCase) -> Assignment {
+    use bass::mapreduce::TaskId;
+    use bass::sdn::calendar::Reservation;
+    use bass::sdn::controller::Transfer;
+    use bass::sim::Placement;
+    use bass::topology::NodeId;
+
+    let placements = case
+        .placements
+        .iter()
+        .map(|&(t, node, compute, kind, ref path, size, arrival, gate)| {
+            let reserved = |at: f64| Transfer {
+                flow_id: 0,
+                reservation: Reservation { links: vec![], start_slot: 0, n_slots: 0, frac: 1.0 },
+                rate_mb_s: 12.8,
+                arrival: Secs(at),
+                start: Secs(at - 1.0),
+            };
+            let transfer = match kind {
+                0 | 1 => TransferPlan::None,
+                2 => TransferPlan::Reserved(reserved(arrival)),
+                3 => TransferPlan::Prefetched(reserved(arrival)),
+                _ => TransferPlan::FairShare {
+                    path: path.iter().map(|&l| LinkId(l)).collect(),
+                    size_mb: size,
+                    class: bass::sdn::TrafficClass::HadoopOther,
+                },
+            };
+            let is_local = matches!(transfer, TransferPlan::None);
+            Placement {
+                task: TaskId(t),
+                node: NodeId(node),
+                compute: Secs(compute),
+                transfer,
+                gate: gate.map(Secs),
+                is_local,
+                is_map: true,
+            }
+        })
+        .collect();
+    Assignment { placements }
+}
+
+/// The batched engine (same-instant event draining, index queues, lazy
+/// flow net) produces the same records as the seed's per-event engine on
+/// random assignments with contended fair-share transfers, reservations,
+/// gates and background flows.
+#[test]
+fn prop_engine_batched_matches_reference() {
+    const TOL: f64 = 1e-9;
+    forall(0xE55, 80, gen_engine_case, |case| {
+        let a = engine_case_assignment(case);
+        let initial: Vec<Secs> = case.initial.iter().map(|&t| Secs(t)).collect();
+
+        let mut ref_net = flownet_reference::RefNet::new(&case.caps_mbps);
+        let mut new_net = FlowNet::new(&case.caps_mbps);
+        for (path, cap) in &case.background {
+            let p: Vec<LinkId> = path.iter().map(|&l| LinkId(l)).collect();
+            ref_net.add_flow_capped(
+                p.clone(),
+                f64::INFINITY,
+                bass::sdn::TrafficClass::Background,
+                *cap,
+            );
+            new_net.add_flow_capped(
+                p,
+                f64::INFINITY,
+                bass::sdn::TrafficClass::Background,
+                *cap,
+            );
+        }
+
+        let mut reference = engine_reference::RefEngine::new(ref_net, initial.clone());
+        reference.load(&a);
+        let want = reference.run();
+
+        let mut engine = Engine::new(new_net, initial);
+        engine.load(&a);
+        let got = engine.run();
+
+        if want.len() != got.len() {
+            return Err(format!("record counts {} != {}", want.len(), got.len()));
+        }
+        for (w, g) in want.iter().zip(&got) {
+            if w.task != g.task || w.node != g.node || w.is_local != g.is_local {
+                return Err(format!("record identity diverged: {w:?} vs {g:?}"));
+            }
+            for (x, y) in [
+                (w.picked_at, g.picked_at),
+                (w.input_ready, g.input_ready),
+                (w.compute_start, g.compute_start),
+                (w.finish, g.finish),
+            ] {
+                if (x.0 - y.0).abs() > TOL {
+                    return Err(format!("record times diverged: {w:?} vs {g:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Reference schedulers: the seed's HDS loop (O(m·n) ledger scans +
+/// O(m²) locality probes) and BASS round (per-(task,node) cost
+/// resolution, linear minnow scan), ported verbatim. The rewritten
+/// inner loops must reproduce their picks bit for bit.
+mod sched_reference {
+    use bass::mapreduce::TaskSpec;
+    use bass::sched::{cost, SchedCtx};
+    use bass::sdn::TrafficClass;
+    use bass::sim::{Assignment, Placement, TransferPlan};
+    use bass::util::Secs;
+
+    pub fn hds_schedule(
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        ctx: &mut SchedCtx<'_>,
+    ) -> Assignment {
+        let mut pending: Vec<usize> = (0..tasks.len()).collect();
+        let mut placements = Vec::with_capacity(tasks.len());
+        let floor = gate.unwrap_or(ctx.now).max(ctx.now);
+        while !pending.is_empty() {
+            let (j, idle) = ctx
+                .ledger
+                .min_idle_among(ctx.authorized.iter().copied())
+                .expect("no authorized nodes");
+            let t0 = idle.max(floor);
+            let local_pick =
+                pending.iter().copied().find(|&i| ctx.local_nodes(&tasks[i]).contains(&j));
+            let (i, is_local) = match local_pick {
+                Some(i) => (i, true),
+                None => (pending[0], false),
+            };
+            pending.retain(|&x| x != i);
+            let t = &tasks[i];
+            let tp = ctx.effective_compute(t, j);
+            if is_local || t.input_mb <= 0.0 {
+                let finish = t0 + tp;
+                ctx.ledger.occupy_until(j, finish);
+                placements.push(Placement {
+                    task: t.id,
+                    node: j,
+                    compute: tp,
+                    transfer: TransferPlan::None,
+                    gate,
+                    is_local,
+                    is_map: t.is_map(),
+                });
+            } else {
+                let src = ctx.transfer_source(t).expect("remote task needs a source");
+                let tm = ctx.tm_estimate(src, j, t.input_mb).unwrap_or(Secs::INF);
+                let finish = t0 + tm + tp;
+                ctx.ledger.occupy_until(j, finish);
+                let path =
+                    ctx.controller.path(src, j).map(|p| p.to_vec()).unwrap_or_default();
+                let class =
+                    if t.is_map() { TrafficClass::HadoopOther } else { TrafficClass::Shuffle };
+                placements.push(Placement {
+                    task: t.id,
+                    node: j,
+                    compute: tp,
+                    transfer: TransferPlan::FairShare { path, size_mb: t.input_mb, class },
+                    gate,
+                    is_local: false,
+                    is_map: t.is_map(),
+                });
+            }
+        }
+        Assignment { placements }
+    }
+
+    pub fn bass_schedule(
+        tasks: &[TaskSpec],
+        gate: Option<Secs>,
+        ctx: &mut SchedCtx<'_>,
+    ) -> (Assignment, usize) {
+        let mut remote_assignments = 0usize;
+        let floor = gate.unwrap_or(ctx.now).max(ctx.now);
+        let batch = cost::eval_batch(tasks, ctx);
+        let mut placements = Vec::with_capacity(tasks.len());
+        for (i, t) in tasks.iter().enumerate() {
+            let class =
+                if t.is_map() { TrafficClass::HadoopOther } else { TrafficClass::Shuffle };
+            let locals = ctx.local_nodes(t);
+            let (minnow, yi_minnow) = {
+                let mut best: Option<(bass::topology::NodeId, f64)> = None;
+                for (j, &nd) in ctx.authorized.iter().enumerate() {
+                    let tm = batch.tm_at(i, j) as f64;
+                    let score = tm + ctx.ledger.idle(nd).0 + ctx.effective_compute(t, nd).0;
+                    if best.map_or(true, |(_, b)| score < b) {
+                        best = Some((nd, score));
+                    }
+                }
+                let (nd, _) = best.expect("no authorized nodes");
+                (nd, ctx.ledger.idle(nd))
+            };
+            let loc = ctx.ledger.min_idle_among(locals.iter().copied());
+
+            let assign_local = |ctx: &mut SchedCtx, placements: &mut Vec<Placement>| {
+                let (loc_nd, yi_loc) = loc.unwrap();
+                let start = yi_loc.max(floor);
+                let tp = ctx.effective_compute(t, loc_nd);
+                ctx.ledger.occupy_until(loc_nd, start + tp);
+                placements.push(Placement {
+                    task: t.id,
+                    node: loc_nd,
+                    compute: tp,
+                    transfer: TransferPlan::None,
+                    gate,
+                    is_local: true,
+                    is_map: t.is_map(),
+                });
+            };
+
+            match loc {
+                Some((loc_nd, yi_loc)) => {
+                    if loc_nd == minnow || yi_loc <= yi_minnow {
+                        assign_local(ctx, &mut placements);
+                        continue;
+                    }
+                    let mcol = cost::col_of(ctx, minnow);
+                    if batch.tm_at(i, mcol) >= bass::runtime::exec::INF {
+                        assign_local(ctx, &mut placements);
+                        continue;
+                    }
+                    let src = match ctx.transfer_source(t) {
+                        Some(s) => s,
+                        None => {
+                            assign_local(ctx, &mut placements);
+                            continue;
+                        }
+                    };
+                    let earliest = yi_minnow.max(floor);
+                    let plan =
+                        ctx.controller.plan_transfer(src, minnow, t.input_mb, earliest);
+                    let tp_loc = ctx.effective_compute(t, loc_nd);
+                    let tp_min = ctx.effective_compute(t, minnow);
+                    let yc_loc = yi_loc.max(floor) + tp_loc;
+                    match plan {
+                        Some(p) if p.2 + tp_min < yc_loc => {
+                            let tr = ctx
+                                .controller
+                                .commit_transfer(src, minnow, class, p, ctx.now)
+                                .expect("planned reservation must commit");
+                            ctx.ledger.occupy_until(minnow, tr.arrival + tp_min);
+                            remote_assignments += 1;
+                            placements.push(Placement {
+                                task: t.id,
+                                node: minnow,
+                                compute: tp_min,
+                                transfer: TransferPlan::Reserved(tr),
+                                gate,
+                                is_local: false,
+                                is_map: t.is_map(),
+                            });
+                        }
+                        _ => assign_local(ctx, &mut placements),
+                    }
+                }
+                None => {
+                    let start = yi_minnow.max(floor);
+                    let tp_min = ctx.effective_compute(t, minnow);
+                    match ctx.transfer_source(t).filter(|_| t.input_mb > 0.0) {
+                        None => {
+                            ctx.ledger.occupy_until(minnow, start + tp_min);
+                            placements.push(Placement {
+                                task: t.id,
+                                node: minnow,
+                                compute: tp_min,
+                                transfer: TransferPlan::None,
+                                gate,
+                                is_local: false,
+                                is_map: t.is_map(),
+                            });
+                        }
+                        Some(src) => {
+                            match ctx.controller.plan_transfer(src, minnow, t.input_mb, start)
+                            {
+                                Some(p) => {
+                                    let tr = ctx
+                                        .controller
+                                        .commit_transfer(src, minnow, class, p, ctx.now)
+                                        .expect("planned reservation must commit");
+                                    ctx.ledger.occupy_until(minnow, tr.arrival + tp_min);
+                                    remote_assignments += 1;
+                                    placements.push(Placement {
+                                        task: t.id,
+                                        node: minnow,
+                                        compute: tp_min,
+                                        transfer: TransferPlan::Reserved(tr),
+                                        gate,
+                                        is_local: false,
+                                        is_map: t.is_map(),
+                                    });
+                                }
+                                None => {
+                                    let path = ctx
+                                        .controller
+                                        .path(src, minnow)
+                                        .map(|p| p.to_vec())
+                                        .unwrap_or_default();
+                                    let tm = ctx
+                                        .tm_estimate(src, minnow, t.input_mb)
+                                        .unwrap_or(Secs::INF);
+                                    ctx.ledger.occupy_until(minnow, start + tm + tp_min);
+                                    placements.push(Placement {
+                                        task: t.id,
+                                        node: minnow,
+                                        compute: tp_min,
+                                        transfer: TransferPlan::FairShare {
+                                            path,
+                                            size_mb: t.input_mb,
+                                            class,
+                                        },
+                                        gate,
+                                        is_local: false,
+                                        is_map: t.is_map(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (Assignment { placements }, remote_assignments)
+    }
+}
+
+/// Bitwise placement comparison (schedule decisions, compute times,
+/// transfer plans, reservation geometry).
+fn assignments_equal(want: &Assignment, got: &Assignment) -> Result<(), String> {
+    if want.placements.len() != got.placements.len() {
+        return Err(format!(
+            "placement counts {} != {}",
+            want.placements.len(),
+            got.placements.len()
+        ));
+    }
+    for (k, (w, g)) in want.placements.iter().zip(&got.placements).enumerate() {
+        if w.task != g.task
+            || w.node != g.node
+            || w.compute != g.compute
+            || w.gate != g.gate
+            || w.is_local != g.is_local
+            || w.is_map != g.is_map
+        {
+            return Err(format!("placement {k} diverged: {w:?} vs {g:?}"));
+        }
+        let same = match (&w.transfer, &g.transfer) {
+            (TransferPlan::None, TransferPlan::None) => true,
+            (TransferPlan::Reserved(a), TransferPlan::Reserved(b))
+            | (TransferPlan::Prefetched(a), TransferPlan::Prefetched(b)) => {
+                a.reservation.links == b.reservation.links
+                    && a.reservation.start_slot == b.reservation.start_slot
+                    && a.reservation.n_slots == b.reservation.n_slots
+                    && a.reservation.frac == b.reservation.frac
+                    && a.rate_mb_s == b.rate_mb_s
+                    && a.arrival == b.arrival
+                    && a.start == b.start
+            }
+            (
+                TransferPlan::FairShare { path: pa, size_mb: sa, class: ca },
+                TransferPlan::FairShare { path: pb, size_mb: sb, class: cb },
+            ) => pa == pb && sa == sb && ca == cb,
+            _ => false,
+        };
+        if !same {
+            return Err(format!("transfer {k} diverged: {:?} vs {:?}", w.transfer, g.transfer));
+        }
+    }
+    Ok(())
+}
+
+/// A scheduling scenario with the knobs the rewritten inner loops touch:
+/// gates (reduce floors) and heterogeneous per-node speed factors.
+#[derive(Debug)]
+struct SchedCase {
+    scenario: Scenario,
+    gate: Option<f64>,
+    speeds: Vec<f64>,
+}
+
+fn gen_sched_case(r: &mut XorShift) -> SchedCase {
+    let scenario = gen_scenario(r);
+    let n = scenario.n_switches * scenario.per_switch;
+    let gate = if r.chance(0.3) { Some([5.0, 20.0][r.below(2)]) } else { None };
+    let speeds = if r.chance(0.4) {
+        (0..n).map(|_| [0.5, 1.0, 2.0, 3.0][r.below(4)]).collect()
+    } else {
+        Vec::new()
+    };
+    SchedCase { scenario, gate, speeds }
+}
+
+/// The heap/queue-based HDS reproduces the seed's pick order, transfer
+/// plans and ledger bit for bit on random clusters, gates and
+/// heterogeneous speed tables.
+#[test]
+fn prop_hds_matches_reference() {
+    forall(0x4D5, 80, gen_sched_case, |case| {
+        let run = |use_reference: bool| -> (Assignment, Ledger) {
+            let (mut ctrl, nn, nodes, tasks, _) = build(&case.scenario);
+            let cost = CostModel::rust_only();
+            let mut ledger = Ledger::new(nodes.len());
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: case.speeds.clone(),
+            };
+            let gate = case.gate.map(Secs);
+            let a = if use_reference {
+                sched_reference::hds_schedule(&tasks, gate, &mut ctx)
+            } else {
+                Hds::new().schedule(&tasks, gate, &mut ctx)
+            };
+            (a, ledger)
+        };
+        let (want, ledger_want) = run(true);
+        let (got, ledger_got) = run(false);
+        assignments_equal(&want, &got)?;
+        if ledger_want != ledger_got {
+            return Err("ledger diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// The hoisted/pruned BASS round (speed-factor tables, contiguous TM
+/// rows, idle-bound minnow prune) reproduces the seed's decisions,
+/// reservations and ledger bit for bit.
+#[test]
+fn prop_bass_matches_reference() {
+    forall(0xBA55, 80, gen_sched_case, |case| {
+        let run = |use_reference: bool| -> (Assignment, usize, Ledger) {
+            let (mut ctrl, nn, nodes, tasks, _) = build(&case.scenario);
+            let cost = CostModel::rust_only();
+            let mut ledger = Ledger::new(nodes.len());
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: case.speeds.clone(),
+            };
+            let gate = case.gate.map(Secs);
+            if use_reference {
+                let (a, remote) = sched_reference::bass_schedule(&tasks, gate, &mut ctx);
+                (a, remote, ledger)
+            } else {
+                let mut b = Bass::new();
+                let a = b.schedule(&tasks, gate, &mut ctx);
+                (a, b.remote_assignments, ledger)
+            }
+        };
+        let (want, remote_want, ledger_want) = run(true);
+        let (got, remote_got, ledger_got) = run(false);
+        assignments_equal(&want, &got)?;
+        if remote_want != remote_got {
+            return Err(format!("remote counts {remote_want} != {remote_got}"));
+        }
+        if ledger_want != ledger_got {
+            return Err("ledger diverged".into());
         }
         Ok(())
     });

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the CI bench-smoke job.
+
+Compares freshly measured BENCH_*.json files (written by
+`cargo bench --bench scheduler_micro`) against the committed baselines
+(copied aside before the bench overwrote them). Fails when any case's
+mean regresses by more than --factor (default 2x).
+
+Baselines with `"measured": false` or null means (committed from a
+machine without the Rust toolchain) are skipped: the gate arms itself
+automatically once real numbers are committed.
+
+Usage:
+  python3 tools/check_bench_regression.py --baseline-dir /tmp/baseline \
+      BENCH_calendar.json BENCH_flownet.json BENCH_sched.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_cases(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return doc, {c["case"]: c for c in doc.get("cases", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="regenerated BENCH_*.json files")
+    ap.add_argument("--baseline-dir", required=True, help="directory holding the committed copies")
+    ap.add_argument("--factor", type=float, default=2.0, help="max allowed mean slowdown")
+    args = ap.parse_args()
+
+    failures = []
+    checked = 0
+    for path in args.files:
+        base_path = os.path.join(args.baseline_dir, os.path.basename(path))
+        if not os.path.exists(base_path):
+            print(f"[skip] {path}: no committed baseline")
+            continue
+        base_doc, base_cases = load_cases(base_path)
+        if not base_doc.get("measured", False):
+            print(f"[skip] {path}: baseline is an unmeasured placeholder")
+            continue
+        _, new_cases = load_cases(path)
+        for name, base in base_cases.items():
+            base_mean = base.get("mean_s")
+            if base_mean is None or base_mean <= 0:
+                print(f"[skip] {path}:{name}: baseline mean is null")
+                continue
+            new = new_cases.get(name)
+            if new is None or new.get("mean_s") is None:
+                failures.append(f"{path}:{name}: case missing from regenerated results")
+                continue
+            ratio = new["mean_s"] / base_mean
+            checked += 1
+            status = "FAIL" if ratio > args.factor else "ok"
+            print(f"[{status}] {path}:{name}: {base_mean:.3e}s -> {new['mean_s']:.3e}s ({ratio:.2f}x)")
+            if ratio > args.factor:
+                failures.append(
+                    f"{path}:{name}: mean regressed {ratio:.2f}x (> {args.factor:.1f}x allowed)"
+                )
+
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    if checked == 0:
+        print(
+            "\nWARNING: bench regression gate is VACUOUS — 0 cases checked because every "
+            "committed baseline is an unmeasured placeholder. Run `cargo bench --bench "
+            "scheduler_micro` on a machine with a toolchain and commit the BENCH_*.json "
+            "files to arm the gate."
+        )
+        return 0
+    print(f"\nbench regression gate passed ({checked} cases checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
