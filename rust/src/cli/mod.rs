@@ -4,13 +4,13 @@
 use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
-    ablate_background, ablate_heterogeneity, ablate_slot_duration, run_example1,
-    run_example3, run_fig5, run_scale, run_scale_fat, run_table1, SchedulerKind,
-    Table1Config,
+    ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
+    run_example1, run_example3, run_fig5, run_scale, run_scale_fat, run_table1,
+    SchedulerKind, Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
-use crate::scenario::run_job_grid;
+use crate::scenario::{run_dynamic_grid, run_job_grid};
 use crate::trace;
 use crate::util::XorShift;
 use crate::workload::{JobKind, TraceGen};
@@ -29,6 +29,9 @@ COMMANDS:
   ablate                Slot-duration / background / heterogeneity ablations
   scale [--fat]         Cluster-size scalability sweep (paper future work);
                         --fat runs the 8-leaf fat-tree grid up to 1024 nodes
+  dynamics [--levels l] Churn sweep: BASS/BAR/HDS under node failures, link
+                        degradation, stragglers and cross traffic (levels
+                        0 = static .. heavy; default 0,0.5,1,2)
   scenario --config F   Run a user-defined scenario sweep from a TOML file
   run --config F        Run the experiment described by a TOML file
   help                  Show this message
@@ -51,8 +54,14 @@ DEFINE YOUR OWN SCENARIO:
     [background] flows, rate_mb_s, max_initial_idle
     [sweep]    sizes_mb = [..], schedulers = \"bass, bar, hds\",
                seed, reduces, slowstart
+    [dynamics] node_failures, mttr_secs, link_degradations, degrade_floor,
+               degrade_secs, stragglers, straggle_factor, straggle_secs,
+               cross_flows, cross_rate_mb_s, cross_secs, horizon_secs, seed
   Every (size, scheduler) cell is a hermetic SimSession: same seed =>
-  same block layout and background, so all deltas are scheduling.
+  same block layout and background, so all deltas are scheduling. With a
+  [dynamics] table the sweep runs each cell's map wave through the churn
+  pipeline (seeded node failures / link degradation / stragglers / cross
+  traffic) instead of the static two-phase job.
 ";
 
 /// Parse `--key value` style options from the arg list.
@@ -129,7 +138,8 @@ pub fn run(args: Vec<String>) -> i32 {
             0
         }
         "e2e" => {
-            let n = opt(&args, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(10);
+            // clamp to >= 1: `--jobs 0` must not divide the mean by zero
+            let n = opt(&args, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(10).max(1);
             println!("== E2E online trace ({n} jobs) ==");
             for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
                 let mut rng = XorShift::new(2014);
@@ -179,6 +189,32 @@ pub fn run(args: Vec<String>) -> i32 {
                 println!(
                     "n={:<4} m={:<4} {:<5} sched {:>8.2}ms  makespan {:>7.1}s",
                     p.nodes, p.tasks, p.scheduler, p.sched_secs * 1e3, p.makespan
+                );
+            }
+            0
+        }
+        "dynamics" => {
+            let levels = opt(&args, "--levels")
+                .map(parse_sizes)
+                .filter(|v| !v.is_empty())
+                .unwrap_or_else(|| vec![0.0, 0.5, 1.0, 2.0]);
+            let threads = opt_threads(&args);
+            println!("== dynamics churn sweep ({} levels, {threads} threads) ==", levels.len());
+            println!(
+                "{:<7} {:<5} {:>10} {:>8} {:>9} {:>7} {:>10}",
+                "churn", "sched", "makespan", "LR", "reassign", "rounds", "completed"
+            );
+            for p in run_dynamics(&levels, &CostModel::rust_only(), threads) {
+                println!(
+                    "{:<7.2} {:<5} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7}/{}",
+                    p.churn,
+                    p.scheduler,
+                    p.makespan,
+                    p.locality * 100.0,
+                    p.reassignments,
+                    p.rounds,
+                    p.completed,
+                    p.tasks
                 );
             }
             0
@@ -263,6 +299,27 @@ fn run_scenario(sweep: &ScenarioSweep, path: &str, args: &[String], cost: &CostM
         sweep.base.name,
         sweep.sizes_mb.len() * sweep.schedulers.len()
     );
+    if sweep.base.dynamics.is_some() {
+        // churn route: each cell's map wave plays the [dynamics] timeline
+        println!(
+            "{:<10} {:>9} {:>10} {:>8} {:>9} {:>7} {:>10}",
+            "scheduler", "size(MB)", "makespan", "LR", "reassign", "rounds", "completed"
+        );
+        for r in run_dynamic_grid(sweep.points(), threads, cost) {
+            println!(
+                "{:<10} {:>9.0} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7}/{}",
+                r.scheduler,
+                r.data_mb,
+                r.makespan,
+                r.locality * 100.0,
+                r.reassignments,
+                r.rounds,
+                r.completed,
+                r.tasks
+            );
+        }
+        return 0;
+    }
     let rows = run_job_grid(sweep.points(), threads, cost);
     println!(
         "{:<10} {:>9} {:>8} {:>8} {:>8} {:>7}",
@@ -361,6 +418,26 @@ mod tests {
         assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 0);
         // the generic `run` entry point accepts scenario files too
         assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+    }
+
+    #[test]
+    fn dynamics_subcommand_runs() {
+        assert_eq!(run(vec!["dynamics".into(), "--levels".into(), "0,0.5".into()]), 0);
+    }
+
+    #[test]
+    fn scenario_with_dynamics_table_runs_the_churn_route() {
+        let dir = std::env::temp_dir().join("bass_cli_dynamics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("dyn.toml");
+        std::fs::write(
+            &f,
+            "run = \"scenario\"\njob = \"sort\"\n\
+             [sweep]\nsizes_mb = [150]\nschedulers = \"bass, hds\"\n\
+             [dynamics]\nnode_failures = 1\nmttr_secs = 30\nhorizon_secs = 40\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 0);
     }
 
     #[test]

@@ -60,6 +60,9 @@ pub fn parse(text: &str) -> anyhow::Result<Table> {
         if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
             section = name.trim().to_string();
             anyhow::ensure!(!section.is_empty(), "line {}: empty section", lineno + 1);
+            // marker entry (`"section."` -> true): lets consumers detect a
+            // section header even when every key under it is omitted
+            out.insert(format!("{section}."), Value::Bool(true));
             continue;
         }
         let Some((k, v)) = line.split_once('=') else {
@@ -125,6 +128,9 @@ sizes = [150, 300, 600]  # trailing comment
         assert_eq!(t[".verbose"].as_bool(), Some(true));
         assert_eq!(t["cluster.link_mbps"].as_f64(), Some(100.0));
         assert_eq!(t["cluster.sizes"].as_nums(), Some(&[150.0, 300.0, 600.0][..]));
+        // section headers leave a marker even with all keys omitted
+        assert_eq!(t["cluster."].as_bool(), Some(true));
+        assert!(parse("[empty]\n").unwrap().contains_key("empty."));
     }
 
     #[test]

@@ -3,7 +3,8 @@
 use crate::experiments::{SchedulerKind, Table1Config};
 use crate::hdfs::PlacementPolicy;
 use crate::scenario::{
-    cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec,
+    cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, TopologyShape,
+    WorkloadSpec,
 };
 use crate::sdn::QosPolicy;
 use crate::workload::JobKind;
@@ -131,6 +132,9 @@ impl ScenarioSweep {
         if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
             base.threads = v.max(1);
         }
+        if t.keys().any(|k| k.starts_with("dynamics.")) {
+            base.dynamics = Some(parse_dynamics(t)?);
+        }
         let sizes_mb = t
             .get("sweep.sizes_mb")
             .and_then(|v| v.as_nums())
@@ -201,6 +205,109 @@ impl ExperimentConfig {
         };
         Ok(Self { run, table1: cfg, scenario })
     }
+}
+
+/// Parse a `[dynamics]` table onto [`DynamicsSpec::none`] defaults,
+/// rejecting unsafe shapes and unknown keys instead of silently
+/// clamping or ignoring them (a typo'd knob must not run a different
+/// churn profile than the user wrote down).
+fn parse_dynamics(t: &Table) -> anyhow::Result<DynamicsSpec> {
+    const KNOWN: [&str; 13] = [
+        "dynamics.node_failures",
+        "dynamics.mttr_secs",
+        "dynamics.link_degradations",
+        "dynamics.degrade_floor",
+        "dynamics.degrade_secs",
+        "dynamics.stragglers",
+        "dynamics.straggle_factor",
+        "dynamics.straggle_secs",
+        "dynamics.cross_flows",
+        "dynamics.cross_rate_mb_s",
+        "dynamics.cross_secs",
+        "dynamics.horizon_secs",
+        "dynamics.seed",
+    ];
+    for k in t.keys().filter(|k| k.starts_with("dynamics.")) {
+        anyhow::ensure!(
+            k == "dynamics." || KNOWN.contains(&k.as_str()),
+            "unknown [dynamics] key {k:?}"
+        );
+    }
+    let mut d = DynamicsSpec::none();
+    // strict typed getters: a present-but-mistyped value (2.5 failures,
+    // a quoted number, a negative seed) errors instead of silently
+    // keeping the default
+    let usize_of = |k: &str| -> anyhow::Result<Option<usize>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_usize() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[dynamics] {k} must be a non-negative integer"),
+            },
+        }
+    };
+    let f64_of = |k: &str| -> anyhow::Result<Option<f64>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_f64() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[dynamics] {k} must be a number"),
+            },
+        }
+    };
+    if let Some(v) = usize_of("dynamics.node_failures")? {
+        d.node_failures = v;
+    }
+    if let Some(v) = f64_of("dynamics.mttr_secs")? {
+        anyhow::ensure!(v > 0.0, "dynamics.mttr_secs must be positive");
+        d.mttr_secs = v;
+    }
+    if let Some(v) = usize_of("dynamics.link_degradations")? {
+        d.link_degradations = v;
+    }
+    if let Some(v) = f64_of("dynamics.degrade_floor")? {
+        // the compiler draws factors in [floor, 1); keep the declared
+        // range identical to the one actually used (no silent clamping)
+        anyhow::ensure!(
+            (0.05..=0.95).contains(&v),
+            "dynamics.degrade_floor must be in [0.05, 0.95]"
+        );
+        d.degrade_floor = v;
+    }
+    if let Some(v) = f64_of("dynamics.degrade_secs")? {
+        anyhow::ensure!(v > 0.0, "dynamics.degrade_secs must be positive");
+        d.degrade_secs = v;
+    }
+    if let Some(v) = usize_of("dynamics.stragglers")? {
+        d.stragglers = v;
+    }
+    if let Some(v) = f64_of("dynamics.straggle_factor")? {
+        anyhow::ensure!(v >= 1.0, "dynamics.straggle_factor slows nodes: must be >= 1");
+        d.straggle_factor = v;
+    }
+    if let Some(v) = f64_of("dynamics.straggle_secs")? {
+        anyhow::ensure!(v > 0.0, "dynamics.straggle_secs must be positive");
+        d.straggle_secs = v;
+    }
+    if let Some(v) = usize_of("dynamics.cross_flows")? {
+        d.cross_flows = v;
+    }
+    if let Some(v) = f64_of("dynamics.cross_rate_mb_s")? {
+        anyhow::ensure!(v > 0.0, "dynamics.cross_rate_mb_s must be positive");
+        d.cross_rate_mb_s = v;
+    }
+    if let Some(v) = f64_of("dynamics.cross_secs")? {
+        anyhow::ensure!(v > 0.0, "dynamics.cross_secs must be positive");
+        d.cross_secs = v;
+    }
+    if let Some(v) = f64_of("dynamics.horizon_secs")? {
+        anyhow::ensure!(v > 0.0, "dynamics.horizon_secs must be positive");
+        d.horizon_secs = v;
+    }
+    if let Some(v) = usize_of("dynamics.seed")? {
+        d.seed = v as u64;
+    }
+    Ok(d)
 }
 
 fn apply_table1(cfg: &mut Table1Config, t: &Table) {
@@ -330,6 +437,63 @@ seed = 42
         assert_eq!(pts.len(), 6);
         assert_eq!(pts[0].seed, pts[1].seed);
         assert_ne!(pts[0].seed, pts[3].seed);
+    }
+
+    #[test]
+    fn dynamics_table_parses_onto_defaults() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[dynamics]\nnode_failures = 2\nmttr_secs = 40\n\
+             stragglers = 1\nstraggle_factor = 2.5\nseed = 7\n",
+        )
+        .unwrap();
+        let d = c.scenario.unwrap().base.dynamics.expect("dynamics parsed");
+        assert_eq!(d.node_failures, 2);
+        assert_eq!(d.mttr_secs, 40.0);
+        assert_eq!(d.stragglers, 1);
+        assert_eq!(d.straggle_factor, 2.5);
+        assert_eq!(d.seed, 7);
+        // untouched knobs keep the none() defaults
+        assert_eq!(d.link_degradations, 0);
+        assert_eq!(d.cross_flows, 0);
+    }
+
+    #[test]
+    fn dynamics_rejects_unsafe_shapes() {
+        for bad in [
+            "run = \"scenario\"\n[dynamics]\nstraggle_factor = 0.5\n",
+            "run = \"scenario\"\n[dynamics]\ndegrade_floor = 1.5\n",
+            "run = \"scenario\"\n[dynamics]\nmttr_secs = 0\n",
+            "run = \"scenario\"\n[dynamics]\nhorizon_secs = -1\n",
+            "run = \"scenario\"\n[dynamics]\nnode_failures = 2.5\n",
+            "run = \"scenario\"\n[dynamics]\nmttr_secs = \"40\"\n",
+            "run = \"scenario\"\n[dynamics]\ndegrade_secs = 0\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn dynamics_rejects_unknown_keys() {
+        // a typo must not silently run a different churn profile
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[dynamics]\nnode_failure = 2\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("node_failure"));
+    }
+
+    #[test]
+    fn scenario_without_dynamics_table_stays_static() {
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n").unwrap();
+        assert!(c.scenario.unwrap().base.dynamics.is_none());
+    }
+
+    #[test]
+    fn bare_dynamics_table_selects_the_churn_route_with_defaults() {
+        // a `[dynamics]` header with every knob omitted must not fall
+        // back silently to the static route
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n[dynamics]\n").unwrap();
+        let d = c.scenario.unwrap().base.dynamics.expect("churn route selected");
+        assert_eq!(d, DynamicsSpec::none());
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Churn sweep: BASS vs BAR vs HDS as cluster conditions worsen.
+//!
+//! The paper's evaluation is static; this family injects the conditions
+//! its premise cares about — node failures, link degradation, stragglers
+//! and cross traffic — at churn levels swept from 0 (the static cluster)
+//! to heavy, and compares makespan, locality and reassignment volume
+//! across the three schedulers. All schedulers at one level face the
+//! *identical* incident timeline (one dynamics seed per level), so every
+//! delta is scheduling policy. See EXPERIMENTS.md for findings.
+
+use crate::runtime::CostModel;
+use crate::scenario::{
+    parallel_map, BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, SimSession,
+    TopologyShape, WorkloadSpec,
+};
+
+use super::fixtures::SchedulerKind;
+
+/// One executed (churn level, scheduler) sweep point.
+#[derive(Debug, Clone)]
+pub struct ChurnPoint {
+    pub churn: f64,
+    pub scheduler: &'static str,
+    pub makespan: f64,
+    pub locality: f64,
+    pub reassignments: usize,
+    pub rounds: usize,
+    pub completed: usize,
+    pub tasks: usize,
+}
+
+/// The scenario one (level, scheduler) point expands to: a 16-node tree
+/// in the shared-cluster regime with `DynamicsSpec::churn(level)` on top.
+pub fn churn_spec(level: f64, kind: SchedulerKind) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        format!("churn-{level:.2}"),
+        TopologyShape::Tree {
+            switches: 4,
+            hosts_per_switch: 4,
+            edge_mbps: 100.0,
+            uplink_mbps: 1000.0,
+        },
+        WorkloadSpec::MapWave { tasks: 32, compute_secs: 18.0, output_mb: 8.0 },
+    );
+    s.scheduler = kind;
+    s.replication = 2;
+    s.seed = 4242;
+    s.initial = InitialLoad::Sampled { max_secs: 15.0 };
+    s.background = BackgroundSpec { flows: 4, rate_mb_s: 3.0 };
+    s.dynamics = Some(DynamicsSpec::churn(level));
+    s
+}
+
+/// Run the churn sweep over `levels` x {BASS, BAR, HDS}, fanned across
+/// `threads` workers (bitwise-identical to serial).
+pub fn run_dynamics(levels: &[f64], cost: &CostModel, threads: usize) -> Vec<ChurnPoint> {
+    let points: Vec<(f64, SchedulerKind)> = levels
+        .iter()
+        .flat_map(|&lv| {
+            [SchedulerKind::Bass, SchedulerKind::Bar, SchedulerKind::Hds]
+                .into_iter()
+                .map(move |k| (lv, k))
+        })
+        .collect();
+    parallel_map(points, threads, |(lv, kind)| {
+        let spec = churn_spec(lv, kind);
+        let sess = SimSession::new(&spec);
+        let out = sess.run_dynamic(cost);
+        ChurnPoint {
+            churn: lv,
+            scheduler: kind.label(),
+            makespan: out.makespan,
+            locality: out.locality,
+            reassignments: out.reassignments,
+            rounds: out.rounds,
+            completed: out.records.len(),
+            tasks: out.submitted.len(),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Secs;
+
+    #[test]
+    fn zero_churn_matches_static_execution_bitwise() {
+        // the whole dynamics pipeline with an empty timeline must be
+        // indistinguishable from plain schedule -> execute
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+            let spec = churn_spec(0.0, kind);
+            let sess = SimSession::new(&spec);
+            let out = sess.run_dynamic(&cost);
+
+            let mut static_spec = spec.clone();
+            static_spec.dynamics = None;
+            let mut st = SimSession::new(&static_spec);
+            let tasks = st.tasks.clone();
+            let a = st.schedule(&tasks, None, Secs::ZERO, &cost);
+            let recs = st.execute(&a);
+
+            assert_eq!(out.records.len(), recs.len(), "{}", kind.label());
+            let static_ms = recs.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+            assert_eq!(out.makespan, static_ms, "{}: bitwise makespan", kind.label());
+            assert_eq!(out.reassignments, 0);
+            assert_eq!(out.rounds, 1);
+            for (d, s) in out.records.iter().zip(&recs) {
+                assert_eq!(d.task, s.task);
+                assert_eq!(d.node, s.node);
+                assert_eq!(d.finish, s.finish);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_churn_completes_all_tasks_for_all_schedulers() {
+        let pts = run_dynamics(&[1.0], &CostModel::rust_only(), 1);
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert_eq!(p.completed, p.tasks, "{}: every task completes", p.scheduler);
+            assert!(p.makespan > 0.0);
+            assert!((0.0..=1.0).contains(&p.locality));
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_thread_invariant() {
+        let cost = CostModel::rust_only();
+        let serial = run_dynamics(&[0.0, 1.0], &cost, 1);
+        let fanned = run_dynamics(&[0.0, 1.0], &cost, 3);
+        assert_eq!(serial.len(), fanned.len());
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.reassignments, b.reassignments);
+        }
+    }
+
+    #[test]
+    fn schedulers_share_the_incident_timeline_per_level() {
+        // the control variable: same dynamics seed and spec per level
+        let a = churn_spec(1.0, SchedulerKind::Bass);
+        let b = churn_spec(1.0, SchedulerKind::Hds);
+        assert_eq!(a.dynamics, b.dynamics);
+        assert_eq!(a.seed, b.seed);
+    }
+}

@@ -6,6 +6,7 @@
 //! `Controller`/`Namenode`/`Ledger`/`FlowNet` by hand.
 
 pub mod ablations;
+pub mod dynamics;
 pub mod example1;
 pub mod example3;
 pub mod fig5;
@@ -17,6 +18,7 @@ pub use ablations::{
     ablate_background, ablate_heterogeneity, ablate_replication, ablate_slot_duration,
     hetero_spec, AblationPoint,
 };
+pub use dynamics::{churn_spec, run_dynamics, ChurnPoint};
 pub use example1::{run_example1, run_one, Example1Outcome};
 pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;

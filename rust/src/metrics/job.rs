@@ -23,7 +23,11 @@ impl JobMetrics {
     /// Derive from execution records. `submit` is the job submission
     /// time; `reduce_gate` the reduce-phase start (None = no reduces).
     pub fn from_records(records: &[TaskRecord], submit: Secs, reduce_gate: Option<Secs>) -> Self {
-        assert!(!records.is_empty(), "no records");
+        if records.is_empty() {
+            // degenerate (empty) task sets: all-zero metrics, full
+            // locality — never NaN in aggregated/serialized output
+            return Self { mt: 0.0, rt: 0.0, jt: 0.0, lr: 1.0 };
+        }
         let maps: Vec<&TaskRecord> = records.iter().filter(|r| r.is_map).collect();
         let reduces: Vec<&TaskRecord> = records.iter().filter(|r| !r.is_map).collect();
         let map_end = maps.iter().map(|r| r.finish).fold(submit, Secs::max);
@@ -99,6 +103,13 @@ mod tests {
         assert_eq!(m.jt, 35.0);
         assert_eq!(m.rt, 0.0);
         assert_eq!(m.lr, 1.0);
+    }
+
+    #[test]
+    fn empty_records_yield_zeroes_not_nan() {
+        let m = JobMetrics::from_records(&[], Secs::ZERO, None);
+        assert_eq!((m.mt, m.rt, m.jt, m.lr), (0.0, 0.0, 0.0, 1.0));
+        assert!(!m.lr.is_nan());
     }
 
     #[test]

@@ -1,0 +1,735 @@
+//! Fault & dynamics injection: [`DynamicsSpec`] → seeded timeline →
+//! rescheduling rounds.
+//!
+//! The paper evaluates BASS on a static cluster, but its premise —
+//! bandwidth as a scarce, *time-varying* resource tracked by the SDN
+//! controller — only pays off when conditions change mid-job. This layer
+//! makes churn a first-class scenario input:
+//!
+//! * [`DynamicsSpec`] declares *how much* churn: node crash/recovery,
+//!   link degradation/restoration, straggler slowdowns, background
+//!   cross-traffic. [`DynamicsSpec::compile`] expands it into a sorted,
+//!   fully deterministic [`TimedEvent`] timeline from its own seed —
+//!   every scheduler compared at the same spec sees the identical
+//!   incident sequence.
+//! * [`run_dynamic`] plays a session against that timeline in
+//!   **rescheduling rounds**: schedule the pending tasks on the live
+//!   (non-crashed) node set, execute on a [`Engine`] with the remaining
+//!   timeline injected, collect the work orphaned by crashes, and repeat
+//!   from the earliest loss instant. BASS re-consults a fresh slot
+//!   calendar each round (its lost reservations are gone, degraded links
+//!   carry a lowered usable ceiling); HDS/BAR simply re-place. In-flight
+//!   fair-share transfers survive events (they just re-rate); only
+//!   crashes lose work.
+//!
+//! Determinism contract: the outcome is a pure function of
+//! (`ScenarioSpec`, `DynamicsSpec`) — the scenario seed fixes the
+//! cluster/workload, the dynamics seed fixes the incident timeline, and
+//! round boundaries derive from crash instants only. With an empty
+//! timeline the rounds collapse to one and the records are bit-identical
+//! to the static `schedule → execute` path (pinned by the golden-trace
+//! tests and `experiments::dynamics` tests).
+//!
+//! Known simplifications (documented in DESIGN.md): a committed BASS
+//! reservation keeps its planned arrival even if a link under it
+//! degrades mid-transfer (the violation is detected by
+//! [`crate::sdn::Controller::revalidate_transfer`] and counted in
+//! [`DynamicsOutcome::stale_reservations`]); transfer *sources* are
+//! never marked down —
+//! replicas stay readable while the puller is alive; and a new round's
+//! fresh flow network / calendar does not carry the *surviving* prior
+//! round's still-in-flight transfers or reservations, so rescheduled
+//! work sees only background contention (node-time double-booking is
+//! still impossible — per-host availability carries across rounds).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::Ledger;
+use crate::mapreduce::{TaskId, TaskSpec};
+use crate::runtime::CostModel;
+use crate::sched::{SchedCtx, Scheduler as _};
+use crate::sim::{ClusterEvent, Engine, TaskRecord, TransferPlan};
+use crate::topology::{LinkId, NodeId};
+use crate::util::{mbps_to_mb_per_s, Secs, XorShift, BLOCK_MB};
+
+use super::session::SimSession;
+use super::spec::WorkloadSpec;
+
+/// Declarative churn description — counts and shapes of injected
+/// incidents, compiled into a deterministic timeline from `seed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicsSpec {
+    /// Node crash incidents (distinct nodes; capped at n-1 so at least
+    /// one authorized node survives any instant).
+    pub node_failures: usize,
+    /// Crash-to-recovery delay (seconds).
+    pub mttr_secs: f64,
+    /// Link degradation incidents (distinct links).
+    pub link_degradations: usize,
+    /// Lower bound of the degraded capacity factor, in (0, 1]; factors
+    /// are drawn uniformly in `[max(0.05, floor), 1)`.
+    pub degrade_floor: f64,
+    /// Degradation duration (seconds).
+    pub degrade_secs: f64,
+    /// Straggler incidents (distinct nodes).
+    pub stragglers: usize,
+    /// Compute-time multiplier while straggling (>= 1 slows the node).
+    pub straggle_factor: f64,
+    /// Straggle duration (seconds).
+    pub straggle_secs: f64,
+    /// Cross-traffic incidents (random distinct host pairs).
+    pub cross_flows: usize,
+    /// Rate cap per cross flow (MB/s).
+    pub cross_rate_mb_s: f64,
+    /// Cross-flow duration (seconds).
+    pub cross_secs: f64,
+    /// Incident start times are drawn uniformly in `[0, horizon)`.
+    pub horizon_secs: f64,
+    /// Timeline seed — independent of the scenario seed, so schedulers
+    /// compared at one spec face the identical incident sequence.
+    pub seed: u64,
+}
+
+impl DynamicsSpec {
+    /// No churn at all (the static cluster), with paper-ish defaults for
+    /// every shape knob so partial `[dynamics]` configs stay sensible.
+    pub fn none() -> Self {
+        Self {
+            node_failures: 0,
+            mttr_secs: 35.0,
+            link_degradations: 0,
+            degrade_floor: 0.3,
+            degrade_secs: 30.0,
+            stragglers: 0,
+            straggle_factor: 2.0,
+            straggle_secs: 25.0,
+            cross_flows: 0,
+            cross_rate_mb_s: 4.0,
+            cross_secs: 40.0,
+            horizon_secs: 90.0,
+            seed: 2014,
+        }
+    }
+
+    /// Churn scaled by a single knob: `level` 0.0 = static, 1.0 = the
+    /// experiment family's "heavy" point, >1 heavier still.
+    pub fn churn(level: f64) -> Self {
+        let l = level.clamp(0.0, 8.0);
+        Self {
+            node_failures: (l * 3.0).round() as usize,
+            link_degradations: (l * 2.0).round() as usize,
+            stragglers: (l * 2.0).round() as usize,
+            cross_flows: (l * 3.0).round() as usize,
+            ..Self::none()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_failures == 0
+            && self.link_degradations == 0
+            && self.stragglers == 0
+            && self.cross_flows == 0
+    }
+
+    /// Expand into the sorted incident timeline. Every incident is a
+    /// begin/end event pair; crash targets are distinct nodes (so at
+    /// least one of `nodes` is up at any instant), degraded links are
+    /// distinct, and factors are clamped to safe ranges (degradation
+    /// never reaches 0 — a zero-capacity link would starve in-flight
+    /// transfers forever).
+    pub fn compile(&self, nodes: &[NodeId], n_links: usize) -> Vec<TimedEvent> {
+        // duration floor: guards programmatic zero/negative durations
+        // while honoring sub-second config values (which the config
+        // layer has already validated as positive)
+        const MIN_SECS: f64 = 1e-3;
+        let mut rng = XorShift::new(self.seed);
+        let mut evs: Vec<TimedEvent> = Vec::new();
+        let horizon = self.horizon_secs.max(MIN_SECS);
+
+        let n_fail = self.node_failures.min(nodes.len().saturating_sub(1));
+        if n_fail > 0 {
+            for idx in rng.distinct(nodes.len(), n_fail) {
+                let at = Secs(rng.uniform(0.0, horizon));
+                evs.push(TimedEvent { at, ev: DynEvent::NodeDown(nodes[idx]) });
+                evs.push(TimedEvent {
+                    at: at + Secs(self.mttr_secs.max(MIN_SECS)),
+                    ev: DynEvent::NodeUp(nodes[idx]),
+                });
+            }
+        }
+        let n_deg = self.link_degradations.min(n_links);
+        if n_deg > 0 {
+            // clamp below 1.0: `uniform(lo, hi)` needs a non-empty range
+            let floor = self.degrade_floor.clamp(0.05, 0.95);
+            for l in rng.distinct(n_links, n_deg) {
+                let at = Secs(rng.uniform(0.0, horizon));
+                let frac = rng.uniform(floor, 1.0);
+                let link = LinkId(l);
+                evs.push(TimedEvent { at, ev: DynEvent::LinkDegrade { link, frac } });
+                evs.push(TimedEvent {
+                    at: at + Secs(self.degrade_secs.max(MIN_SECS)),
+                    ev: DynEvent::LinkRestore { link },
+                });
+            }
+        }
+        let n_str = self.stragglers.min(nodes.len());
+        if n_str > 0 {
+            let factor = self.straggle_factor.max(1.0);
+            for idx in rng.distinct(nodes.len(), n_str) {
+                let at = Secs(rng.uniform(0.0, horizon));
+                let node = nodes[idx];
+                evs.push(TimedEvent { at, ev: DynEvent::Straggle { node, factor } });
+                evs.push(TimedEvent {
+                    at: at + Secs(self.straggle_secs.max(MIN_SECS)),
+                    ev: DynEvent::StraggleEnd { node },
+                });
+            }
+        }
+        if self.cross_flows > 0 && nodes.len() >= 2 {
+            for key in 0..self.cross_flows {
+                let pair = rng.distinct(nodes.len(), 2);
+                let at = Secs(rng.uniform(0.0, horizon));
+                evs.push(TimedEvent {
+                    at,
+                    ev: DynEvent::CrossStart {
+                        key,
+                        src: nodes[pair[0]],
+                        dst: nodes[pair[1]],
+                        rate_mb_s: self.cross_rate_mb_s.max(0.1),
+                    },
+                });
+                evs.push(TimedEvent {
+                    at: at + Secs(self.cross_secs.max(MIN_SECS)),
+                    ev: DynEvent::CrossStop { key },
+                });
+            }
+        }
+        // stable sort: same-instant events keep begin-before-end order
+        evs.sort_by(|a, b| a.at.cmp(&b.at));
+        evs
+    }
+}
+
+/// One compiled incident edge at an absolute simulation time.
+#[derive(Debug, Clone)]
+pub struct TimedEvent {
+    pub at: Secs,
+    pub ev: DynEvent,
+}
+
+/// Scenario-level dynamic events (compiled; see [`DynamicsSpec`]).
+#[derive(Debug, Clone)]
+pub enum DynEvent {
+    NodeDown(NodeId),
+    NodeUp(NodeId),
+    LinkDegrade { link: LinkId, frac: f64 },
+    LinkRestore { link: LinkId },
+    Straggle { node: NodeId, factor: f64 },
+    StraggleEnd { node: NodeId },
+    CrossStart { key: usize, src: NodeId, dst: NodeId, rate_mb_s: f64 },
+    CrossStop { key: usize },
+}
+
+/// Audit record of one committed slot reservation, with the usable
+/// capacity fraction of every link at commit time — the invariant
+/// oracles re-verify per-slot sums against these independently of the
+/// calendar's own bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ReservationAudit {
+    pub round: usize,
+    pub links: Vec<LinkId>,
+    pub start_slot: usize,
+    pub n_slots: usize,
+    pub frac: f64,
+    /// Usable fraction per link (same order as `links`).
+    pub usable: Vec<f64>,
+}
+
+/// Everything a dynamic run produced, self-describing enough for the
+/// invariant oracles (`testkit::oracles`).
+#[derive(Debug, Clone)]
+pub struct DynamicsOutcome {
+    /// Surviving execution records (task order); crash-voided attempts
+    /// are gone — each submitted task appears exactly once.
+    pub records: Vec<TaskRecord>,
+    pub makespan: f64,
+    /// Locality over surviving map records (1.0 for empty task sets).
+    pub locality: f64,
+    /// Orphaned-task reschedules across all rounds.
+    pub reassignments: usize,
+    /// Scheduling rounds executed (1 = no crash hit live work).
+    pub rounds: usize,
+    /// Compiled downtime windows: (node, down_at, up_at).
+    pub down_intervals: Vec<(NodeId, Secs, Secs)>,
+    /// Every committed slot reservation with capacity context.
+    pub reservations: Vec<ReservationAudit>,
+    /// Committed grants whose window a link degradation later
+    /// invalidated ([`crate::sdn::Controller::revalidate_transfer`]);
+    /// the engine plays their planned arrival anyway — this counts how
+    /// often that documented optimism was exercised.
+    pub stale_reservations: usize,
+    /// The task ids that were submitted.
+    pub submitted: Vec<TaskId>,
+}
+
+/// Cluster state at one instant, replayed from the timeline prefix.
+struct ClusterState {
+    down: Vec<bool>,
+    speed: Vec<f64>,
+    link_frac: Vec<f64>,
+    /// Active cross flows: (key, src, dst, rate).
+    cross: Vec<(usize, NodeId, NodeId, f64)>,
+}
+
+fn state_at(timeline: &[TimedEvent], now: Secs, n_hosts: usize, n_links: usize) -> ClusterState {
+    let mut st = ClusterState {
+        down: vec![false; n_hosts],
+        speed: vec![1.0; n_hosts],
+        link_frac: vec![1.0; n_links],
+        cross: Vec::new(),
+    };
+    for te in timeline.iter().take_while(|te| te.at <= now) {
+        match &te.ev {
+            DynEvent::NodeDown(nd) => st.down[nd.0] = true,
+            DynEvent::NodeUp(nd) => st.down[nd.0] = false,
+            DynEvent::LinkDegrade { link, frac } => st.link_frac[link.0] = *frac,
+            DynEvent::LinkRestore { link } => st.link_frac[link.0] = 1.0,
+            DynEvent::Straggle { node, factor } => st.speed[node.0] = *factor,
+            DynEvent::StraggleEnd { node } => st.speed[node.0] = 1.0,
+            DynEvent::CrossStart { key, src, dst, rate_mb_s } => {
+                st.cross.push((*key, *src, *dst, *rate_mb_s));
+            }
+            DynEvent::CrossStop { key } => st.cross.retain(|c| c.0 != *key),
+        }
+    }
+    st
+}
+
+/// Downtime windows of a compiled timeline (oracle fodder).
+pub fn down_intervals(timeline: &[TimedEvent]) -> Vec<(NodeId, Secs, Secs)> {
+    let mut open: HashMap<usize, Secs> = HashMap::new();
+    let mut out = Vec::new();
+    for te in timeline {
+        match te.ev {
+            DynEvent::NodeDown(nd) => {
+                open.insert(nd.0, te.at);
+            }
+            DynEvent::NodeUp(nd) => {
+                if let Some(t0) = open.remove(&nd.0) {
+                    out.push((nd, t0, te.at));
+                }
+            }
+            _ => {}
+        }
+    }
+    for (j, t0) in open {
+        out.push((NodeId(j), t0, Secs::INF));
+    }
+    out.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+    out
+}
+
+/// Play a session against its compiled dynamics timeline (see the module
+/// docs for the round semantics). Works on the session's task batch
+/// (`Example1` / `MapWave` workloads) or, for `Job` workloads, its map
+/// wave — the churn experiment family is map-wave based.
+pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
+    let spec = &sess.spec;
+    let dspec = spec.dynamics.clone().unwrap_or_else(DynamicsSpec::none);
+    let n_links = sess.link_caps_mbps.len();
+    let n_hosts = sess.engine_init.len();
+    let timeline = dspec.compile(&sess.nodes, n_links);
+    let base_caps_mb_s: Vec<f64> =
+        sess.link_caps_mbps.iter().map(|&c| mbps_to_mb_per_s(c)).collect();
+
+    let tasks: Vec<TaskSpec> = if !sess.tasks.is_empty() {
+        sess.tasks.clone()
+    } else if let Some(job) = &sess.job {
+        job.maps().cloned().collect()
+    } else {
+        Vec::new()
+    };
+    let submitted: Vec<TaskId> = tasks.iter().map(|t| t.id).collect();
+    let intervals = down_intervals(&timeline);
+
+    let mut avail = sess.engine_init.clone();
+    let mut pending = tasks.clone();
+    let mut now = Secs::ZERO;
+    let mut records: Vec<TaskRecord> = Vec::new();
+    let mut reservations: Vec<ReservationAudit> = Vec::new();
+    let mut reassignments = 0usize;
+    let mut rounds = 0usize;
+    let mut stale_reservations = 0usize;
+
+    while !pending.is_empty() {
+        rounds += 1;
+        assert!(
+            rounds <= 2 * timeline.len() + 4,
+            "dynamics run did not converge in {rounds} rounds"
+        );
+        let st = state_at(&timeline, now, n_hosts, n_links);
+
+        // every authorized node down: fast-forward to the next recovery
+        if sess.nodes.iter().all(|nd| st.down[nd.0]) {
+            let next_up = timeline
+                .iter()
+                .find(|te| te.at > now && matches!(te.ev, DynEvent::NodeUp(_)))
+                .expect("compiled timelines pair every crash with a recovery");
+            now = next_up.at;
+            continue;
+        }
+
+        // ---- scheduling: fresh SDN view (re-consult, re-reserve) ----
+        let mut ctrl = sess.ctrl.clone();
+        for (l, &f) in st.link_frac.iter().enumerate() {
+            if f < 1.0 {
+                ctrl.set_link_health(LinkId(l), f);
+            }
+        }
+        for &(_, src, dst, rate) in &st.cross {
+            if let Some(path) = ctrl.path(src, dst).map(|p| p.to_vec()) {
+                for &l in &path {
+                    let cur = ctrl.background_mb_s(l);
+                    ctrl.set_background_mb_s(l, cur + rate);
+                }
+            }
+        }
+        let mut ledger_init = vec![Secs::INF; n_hosts];
+        for &nd in &sess.nodes {
+            if !st.down[nd.0] {
+                ledger_init[nd.0] = avail[nd.0].max(now);
+            }
+        }
+        let mut ledger = Ledger::with_initial(ledger_init);
+        let authorized: Vec<NodeId> =
+            sess.nodes.iter().copied().filter(|nd| !st.down[nd.0]).collect();
+        let mut sched = spec.scheduler.make();
+        let assignment = {
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &sess.nn,
+                ledger: &mut ledger,
+                authorized,
+                now,
+                cost,
+                node_speed: spec.node_speed.clone(),
+            };
+            sched.schedule(&pending, Some(now), &mut ctx)
+        };
+        for p in &assignment.placements {
+            let tr = match &p.transfer {
+                TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+                _ => continue,
+            };
+            if tr.reservation.n_slots == 0 {
+                continue;
+            }
+            reservations.push(ReservationAudit {
+                round: rounds,
+                links: tr.reservation.links.clone(),
+                start_slot: tr.reservation.start_slot,
+                n_slots: tr.reservation.n_slots,
+                frac: tr.reservation.frac,
+                usable: tr.reservation.links.iter().map(|&l| ctrl.link_health(l)).collect(),
+            });
+        }
+
+        // revalidate committed grants against the degradations that will
+        // fire inside their windows — the SDN controller's "can the
+        // promised rate still be honored?" check. The engine plays the
+        // planned arrival regardless (documented optimism); the count
+        // quantifies how often that optimism was exercised.
+        let slot_secs = sess.spec.slot_secs;
+        for te in timeline.iter().filter(|te| te.at > now) {
+            let DynEvent::LinkDegrade { link, frac } = &te.ev else { continue };
+            let restore = te.at + Secs(dspec.degrade_secs.max(1e-3));
+            let healthy = ctrl.link_health(*link);
+            ctrl.set_link_health(*link, *frac);
+            for p in &assignment.placements {
+                let tr = match &p.transfer {
+                    TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+                    _ => continue,
+                };
+                let r = &tr.reservation;
+                if r.n_slots == 0
+                    || !r.links.contains(link)
+                    || te.at >= r.end(slot_secs)
+                    || restore <= r.start(slot_secs)
+                {
+                    continue;
+                }
+                if !ctrl.revalidate_transfer(tr) {
+                    stale_reservations += 1;
+                }
+            }
+            ctrl.set_link_health(*link, healthy);
+        }
+
+        // ---- execution: engine carrying the remaining timeline ----
+        let mut net = sess.net.clone();
+        for (l, &f) in st.link_frac.iter().enumerate() {
+            if f < 1.0 {
+                net.set_link_capacity_mb_s(LinkId(l), base_caps_mb_s[l] * f);
+            }
+        }
+        let mut engine = Engine::new(net, avail.clone());
+        for j in 0..n_hosts {
+            if st.down[j] {
+                engine.set_node_down(NodeId(j));
+            }
+            if st.speed[j] != 1.0 {
+                engine.set_node_speed(NodeId(j), st.speed[j]);
+            }
+        }
+        for &(key, src, dst, rate) in &st.cross {
+            if let Some(path) = sess.ctrl.path(src, dst).map(|p| p.to_vec()) {
+                engine.inject(now, ClusterEvent::FlowStart { key, path, rate_mb_s: rate });
+            }
+        }
+        for te in timeline.iter().filter(|te| te.at > now) {
+            let ev = match &te.ev {
+                DynEvent::NodeDown(nd) => ClusterEvent::NodeDown(*nd),
+                DynEvent::NodeUp(nd) => ClusterEvent::NodeUp(*nd),
+                DynEvent::LinkDegrade { link, frac } => {
+                    ClusterEvent::LinkCapacity(*link, base_caps_mb_s[link.0] * frac)
+                }
+                DynEvent::LinkRestore { link } => {
+                    ClusterEvent::LinkCapacity(*link, base_caps_mb_s[link.0])
+                }
+                DynEvent::Straggle { node, factor } => ClusterEvent::NodeSpeed(*node, *factor),
+                DynEvent::StraggleEnd { node } => ClusterEvent::NodeSpeed(*node, 1.0),
+                DynEvent::CrossStart { key, src, dst, rate_mb_s } => {
+                    match sess.ctrl.path(*src, *dst) {
+                        Some(p) => ClusterEvent::FlowStart {
+                            key: *key,
+                            path: p.to_vec(),
+                            rate_mb_s: *rate_mb_s,
+                        },
+                        None => continue,
+                    }
+                }
+                DynEvent::CrossStop { key } => ClusterEvent::FlowStop { key: *key },
+            };
+            engine.inject(te.at, ev);
+        }
+        engine.load(&assignment);
+        records.extend(engine.run());
+        let orphans = engine.take_orphans();
+        avail = engine.node_free_times().to_vec();
+        if orphans.is_empty() {
+            break;
+        }
+        reassignments += orphans.len();
+        // re-enqueue from the earliest loss instant; `now` strictly grows
+        // (orphans only arise from events injected strictly after it)
+        now = orphans.iter().map(|(_, at)| *at).fold(Secs::INF, Secs::min);
+        let lost: HashSet<TaskId> = orphans.iter().map(|(p, _)| p.task).collect();
+        pending = tasks.iter().filter(|t| lost.contains(&t.id)).cloned().collect();
+    }
+
+    records.sort_by_key(|r| r.task);
+    let makespan = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+    let (mut maps, mut local) = (0usize, 0usize);
+    for r in &records {
+        if r.is_map {
+            maps += 1;
+            if r.is_local {
+                local += 1;
+            }
+        }
+    }
+    let locality = if maps == 0 { 1.0 } else { local as f64 / maps as f64 };
+    DynamicsOutcome {
+        records,
+        makespan,
+        locality,
+        reassignments,
+        rounds,
+        down_intervals: intervals,
+        reservations,
+        stale_reservations,
+        submitted,
+    }
+}
+
+impl SimSession {
+    /// [`run_dynamic`] as a session method.
+    pub fn run_dynamic(&self, cost: &CostModel) -> DynamicsOutcome {
+        run_dynamic(self, cost)
+    }
+}
+
+/// One executed cell of a dynamic scenario sweep (the `[dynamics]`
+/// config route).
+#[derive(Debug, Clone)]
+pub struct DynSweepRow {
+    pub scenario: String,
+    pub scheduler: &'static str,
+    pub data_mb: f64,
+    pub makespan: f64,
+    pub locality: f64,
+    pub reassignments: usize,
+    pub rounds: usize,
+    pub completed: usize,
+    pub tasks: usize,
+}
+
+/// Run a grid of dynamic scenarios (each cell: build the session, play
+/// its churn timeline) on up to `threads` workers, rows in grid order.
+pub fn run_dynamic_grid(
+    specs: Vec<super::spec::ScenarioSpec>,
+    threads: usize,
+    cost: &CostModel,
+) -> Vec<DynSweepRow> {
+    super::sweep::parallel_map(specs, threads, |spec| {
+        let data_mb = match spec.workload {
+            WorkloadSpec::Job { data_mb, .. } => data_mb,
+            WorkloadSpec::MapWave { tasks, .. } => tasks as f64 * BLOCK_MB,
+            _ => 0.0,
+        };
+        let scheduler = spec.scheduler.label();
+        let scenario = spec.name.clone();
+        let sess = SimSession::new(&spec);
+        let out = run_dynamic(&sess, cost);
+        DynSweepRow {
+            scenario,
+            scheduler,
+            data_mb,
+            makespan: out.makespan,
+            locality: out.locality,
+            reassignments: out.reassignments,
+            rounds: out.rounds,
+            completed: out.records.len(),
+            tasks: out.submitted.len(),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{InitialLoad, ScenarioSpec, TopologyShape};
+    use crate::sched::SchedulerKind;
+
+    fn wave_spec(kind: SchedulerKind, dynamics: Option<DynamicsSpec>) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(
+            "dyn-test",
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 3,
+                edge_mbps: 100.0,
+                uplink_mbps: 400.0,
+            },
+            WorkloadSpec::MapWave { tasks: 10, compute_secs: 12.0, output_mb: 4.0 },
+        );
+        s.scheduler = kind;
+        s.replication = 2;
+        s.seed = 99;
+        s.initial = InitialLoad::Sampled { max_secs: 8.0 };
+        s.dynamics = dynamics;
+        s
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_paired() {
+        let d = DynamicsSpec {
+            node_failures: 2,
+            link_degradations: 2,
+            stragglers: 1,
+            cross_flows: 2,
+            ..DynamicsSpec::none()
+        };
+        let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+        let a = d.compile(&nodes, 8);
+        let b = d.compile(&nodes, 8);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), 2 * (2 + 2 + 1 + 2));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(format!("{:?}", x.ev), format!("{:?}", y.ev));
+        }
+        // sorted by time
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at));
+        // every crash has a recovery
+        let downs = a.iter().filter(|e| matches!(e.ev, DynEvent::NodeDown(_))).count();
+        let ups = a.iter().filter(|e| matches!(e.ev, DynEvent::NodeUp(_))).count();
+        assert_eq!(downs, 2);
+        assert_eq!(downs, ups);
+        assert_eq!(down_intervals(&a).len(), 2);
+    }
+
+    #[test]
+    fn crash_targets_are_capped_below_the_cluster_size() {
+        let d = DynamicsSpec { node_failures: 50, ..DynamicsSpec::none() };
+        let nodes: Vec<NodeId> = (0..4).map(NodeId).collect();
+        let t = d.compile(&nodes, 8);
+        let downs = t.iter().filter(|e| matches!(e.ev, DynEvent::NodeDown(_))).count();
+        assert_eq!(downs, 3, "at most n-1 distinct crash targets");
+    }
+
+    #[test]
+    fn empty_dynamics_is_one_round_with_no_reassignment() {
+        let cost = CostModel::rust_only();
+        let sess = SimSession::new(&wave_spec(SchedulerKind::Bass, None));
+        let out = sess.run_dynamic(&cost);
+        assert_eq!(out.rounds, 1);
+        assert_eq!(out.reassignments, 0);
+        assert_eq!(out.stale_reservations, 0);
+        assert_eq!(out.records.len(), out.submitted.len());
+        assert!(out.makespan > 0.0);
+    }
+
+    #[test]
+    fn churn_level_zero_is_empty() {
+        assert!(DynamicsSpec::churn(0.0).is_empty());
+        assert!(!DynamicsSpec::churn(1.0).is_empty());
+    }
+
+    #[test]
+    fn forced_crash_reschedules_the_lost_work() {
+        // one node down over the whole likely execution window: its work
+        // must re-land elsewhere and every task still completes once
+        let cost = CostModel::rust_only();
+        let d = DynamicsSpec {
+            node_failures: 1,
+            mttr_secs: 500.0,
+            horizon_secs: 5.0, // crash early, while work is in flight
+            ..DynamicsSpec::none()
+        };
+        for kind in [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass] {
+            let sess = SimSession::new(&wave_spec(kind, Some(d.clone())));
+            let out = sess.run_dynamic(&cost);
+            assert_eq!(
+                out.records.len(),
+                out.submitted.len(),
+                "{}: every task completes exactly once",
+                kind.label()
+            );
+            let mut ids: Vec<TaskId> = out.records.iter().map(|r| r.task).collect();
+            ids.dedup();
+            assert_eq!(ids.len(), out.submitted.len());
+            // the crashed node hosts nothing during its downtime
+            let (nd, d0, d1) = out.down_intervals[0];
+            for r in &out.records {
+                assert!(
+                    r.node != nd || r.finish <= d0 || r.picked_at >= d1,
+                    "{}: task {:?} overlaps downtime",
+                    kind.label(),
+                    r.task
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_runs_are_deterministic() {
+        let cost = CostModel::rust_only();
+        let d = DynamicsSpec::churn(1.0);
+        let run = || {
+            let sess = SimSession::new(&wave_spec(SchedulerKind::Bass, Some(d.clone())));
+            let out = sess.run_dynamic(&cost);
+            (out.makespan, out.reassignments, out.rounds, out.records.len())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -19,10 +19,15 @@
 //! New workloads need a `ScenarioSpec` (or a TOML file for the CLI's
 //! `scenario` subcommand), not a new driver. See DESIGN.md.
 
+pub mod dynamics;
 pub mod session;
 pub mod spec;
 pub mod sweep;
 
+pub use dynamics::{
+    down_intervals, run_dynamic, run_dynamic_grid, DynEvent, DynSweepRow, DynamicsOutcome,
+    DynamicsSpec, ReservationAudit, TimedEvent,
+};
 pub use session::{shuffle_majority_node, slowstart_gate, SimSession};
 pub use spec::{cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
 pub use sweep::{parallel_map, run_job_grid, SweepRow};

@@ -293,6 +293,11 @@ fn build_topology(shape: &TopologyShape) -> (Topology, Vec<NodeId>) {
 /// slowstart point).
 pub fn slowstart_gate(map_records: &[TaskRecord], frac: f64) -> Secs {
     let mut fins: Vec<Secs> = map_records.iter().map(|r| r.finish).collect();
+    if fins.is_empty() {
+        // map-less jobs: reduces may start immediately (and the clamp
+        // below would panic on an empty range)
+        return Secs::ZERO;
+    }
     fins.sort();
     let k = ((fins.len() as f64 * frac).ceil() as usize).clamp(1, fins.len());
     fins[k - 1]
@@ -413,6 +418,8 @@ mod tests {
         assert_eq!(slowstart_gate(&recs, 0.5), Secs(20.0));
         assert_eq!(slowstart_gate(&recs, 1.0), Secs(40.0));
         assert_eq!(slowstart_gate(&recs, 0.0), Secs(10.0));
+        // empty map set (map-less job): gate opens immediately, no panic
+        assert_eq!(slowstart_gate(&[], 0.5), Secs::ZERO);
     }
 
     #[test]

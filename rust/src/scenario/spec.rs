@@ -6,6 +6,8 @@ use crate::sched::SchedulerKind;
 use crate::sdn::QosPolicy;
 use crate::workload::JobKind;
 
+use super::dynamics::DynamicsSpec;
+
 /// Per-size seed for sweep grids: every scheduler at the same
 /// (sweep seed, size) sees the identical layout/background draw, while
 /// sizes get distinct streams. The single definition keeps Table I cells
@@ -106,6 +108,10 @@ pub struct ScenarioSpec {
     /// Worker threads for sweep drivers expanding this scenario into a
     /// grid of points (1 = serial; results are identical either way).
     pub threads: usize,
+    /// Injected churn (node failures, link degradation, stragglers,
+    /// cross traffic) compiled into a seeded timeline by
+    /// [`super::dynamics::run_dynamic`]. `None` = static cluster.
+    pub dynamics: Option<DynamicsSpec>,
 }
 
 impl ScenarioSpec {
@@ -127,6 +133,7 @@ impl ScenarioSpec {
             background: BackgroundSpec::none(),
             node_speed: Vec::new(),
             threads: 1,
+            dynamics: None,
         }
     }
 

@@ -106,13 +106,48 @@ pub struct SlotCalendar {
     slot_secs: f64,
     /// Sparse occupancy per link: slot boundary -> reserved fraction.
     reserved: Vec<Segments>,
+    /// Usable capacity fraction per link (1.0 = healthy). Degradation
+    /// (dynamics) lowers the ceiling reservations may fill up to.
+    usable: Vec<f64>,
 }
 
 impl SlotCalendar {
     /// `slot_secs` is the tunable TS duration (1.0 in the paper).
     pub fn new(n_links: usize, slot_secs: f64) -> Self {
         assert!(slot_secs > 0.0, "slot duration must be positive");
-        Self { slot_secs, reserved: vec![Segments::new(); n_links] }
+        Self { slot_secs, reserved: vec![Segments::new(); n_links], usable: vec![1.0; n_links] }
+    }
+
+    /// Dynamics hook: set the usable capacity fraction of a link (1.0 =
+    /// healthy, lower = degraded). New reservations are admitted against
+    /// the reduced ceiling; reservations committed *before* the change
+    /// may now oversubscribe it — revalidate them with
+    /// [`SlotCalendar::reservation_within_capacity`].
+    pub fn set_usable_frac(&mut self, link: LinkId, frac: f64) {
+        self.usable[link.0] = frac.clamp(0.0, 1.0);
+    }
+
+    pub fn usable_frac(&self, link: LinkId) -> f64 {
+        self.usable[link.0]
+    }
+
+    /// Revalidation: does the total reserved level (this reservation plus
+    /// everything stacked with it) stay within every link's current
+    /// usable fraction over the whole window?
+    pub fn reservation_within_capacity(&self, r: &Reservation) -> bool {
+        if r.n_slots == 0 {
+            return true;
+        }
+        r.links.iter().all(|&l| {
+            let seg = &self.reserved[l.0];
+            let mut peak = level_at(seg, r.start_slot);
+            for (_, &v) in seg.range(r.start_slot + 1..r.start_slot + r.n_slots) {
+                if v > peak {
+                    peak = v;
+                }
+            }
+            peak <= self.usable[l.0] + EPS
+        })
     }
 
     pub fn slot_secs(&self) -> f64 {
@@ -146,9 +181,9 @@ impl SlotCalendar {
         level_at(&self.reserved[link.0], slot)
     }
 
-    /// Residual (unreserved) fraction of `link` during `slot`.
+    /// Residual (unreserved, usable) fraction of `link` during `slot`.
     pub fn residual_frac(&self, link: LinkId, slot: usize) -> f64 {
-        (1.0 - self.reserved_frac(link, slot)).max(0.0)
+        (self.usable[link.0] - self.reserved_frac(link, slot)).max(0.0)
     }
 
     /// Min residual fraction over a path during `[start, start + n)`.
@@ -165,7 +200,7 @@ impl SlotCalendar {
                     peak = v;
                 }
             }
-            min = min.min((1.0 - peak).max(0.0));
+            min = min.min((self.usable[l.0] - peak).max(0.0));
             if min <= 0.0 {
                 return 0.0;
             }
@@ -219,16 +254,17 @@ impl SlotCalendar {
         let mut best: Option<usize> = None;
         for &l in links {
             let seg = &self.reserved[l.0];
+            let usable = self.usable[l.0];
             let hi_l = best.unwrap_or(hi);
             if lo >= hi_l {
                 break; // links can't beat an already-found block at `lo`
             }
-            if (1.0 - level_at(seg, lo)).max(0.0) + EPS < frac {
+            if (usable - level_at(seg, lo)).max(0.0) + EPS < frac {
                 best = Some(lo);
                 continue;
             }
             for (&k, &v) in seg.range(lo + 1..hi_l) {
-                if (1.0 - v).max(0.0) + EPS < frac {
+                if (usable - v).max(0.0) + EPS < frac {
                     best = Some(k);
                     break;
                 }
@@ -239,20 +275,21 @@ impl SlotCalendar {
 
     /// First slot `>= pos` where every link's residual can give `frac`.
     /// Jumps boundary-to-boundary; the trailing level of every link is
-    /// free, so this always terminates.
+    /// 0.0-reserved (residual = its usable fraction), so this terminates
+    /// as long as callers screen demands above the usable ceiling out.
     fn next_open(&self, links: &[LinkId], mut pos: usize, blocked: impl Fn(f64) -> bool) -> usize {
         'outer: loop {
             for &l in links {
                 let seg = &self.reserved[l.0];
-                if blocked((1.0 - level_at(seg, pos)).max(0.0)) {
+                if blocked((self.usable[l.0] - level_at(seg, pos)).max(0.0)) {
                     match seg.range(pos + 1..).next() {
                         Some((&k, _)) => {
                             pos = k;
                             continue 'outer;
                         }
                         // trailing segment is always 0.0-reserved: a block
-                        // there means the demand itself is infeasible and
-                        // callers have already screened that out
+                        // there means the demand exceeds the usable ceiling
+                        // and callers have already screened that out
                         None => unreachable!("blocked on a free trailing segment"),
                     }
                 }
@@ -275,7 +312,9 @@ impl SlotCalendar {
         if links.is_empty() || n == 0 {
             return Some(earliest);
         }
-        if 1.0 + EPS < frac {
+        // ceiling: the path's worst usable fraction (1.0 when healthy)
+        let cap = links.iter().map(|&l| self.usable[l.0]).fold(1.0f64, f64::min);
+        if cap + EPS < frac {
             return None; // no slot can ever satisfy it
         }
         let mut s = earliest;
@@ -314,8 +353,9 @@ impl SlotCalendar {
                 frac: 0.0,
             });
         }
-        if min_frac > 1.0 {
-            return None; // no start slot can ever offer it
+        let cap_frac = links.iter().map(|&l| self.usable[l.0]).fold(1.0f64, f64::min);
+        if min_frac > cap_frac || cap_frac <= 0.0 {
+            return None; // no start slot can ever offer it (degraded path)
         }
         let mut start = self.slot_of(earliest);
         loop {
@@ -528,6 +568,55 @@ mod tests {
         c.release(&b);
         assert_eq!(c.n_segments(), 0);
         assert_eq!(c.reserved_frac(LinkId(0), 7), 0.0);
+    }
+
+    // ---- time-varying capacity (dynamics) ----
+
+    #[test]
+    fn degraded_link_lowers_the_reservable_ceiling() {
+        let mut c = cal();
+        c.set_usable_frac(LinkId(0), 0.5);
+        assert_eq!(c.residual_frac(LinkId(0), 3), 0.5);
+        // a full-rate reservation no longer fits, half-rate does
+        assert!(c.reserve_path(&[LinkId(0)], 0, 4, 1.0).is_err());
+        let r = c.reserve_path(&[LinkId(0)], 0, 4, 0.5).unwrap();
+        assert_eq!(c.residual_frac(LinkId(0), 2), 0.0);
+        c.release(&r);
+        c.set_usable_frac(LinkId(0), 1.0); // restoration
+        assert_eq!(c.residual_frac(LinkId(0), 2), 1.0);
+    }
+
+    #[test]
+    fn plan_transfer_grabs_only_the_degraded_residue() {
+        let mut c = cal();
+        c.set_usable_frac(LinkId(0), 0.5);
+        // 64MB at half of 12.8MB/s -> 10 slots
+        let r = c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 0.05).unwrap();
+        assert!((r.frac - 0.5).abs() < 1e-12);
+        assert_eq!(r.n_slots, 10);
+        // a demand above the ceiling is rejected outright, not scanned
+        assert!(c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 0.6).is_none());
+        assert_eq!(c.find_window(&[LinkId(0)], 0, 2, 0.6), None);
+        assert_eq!(c.find_window(&[LinkId(0)], 0, 2, 0.5), Some(0));
+    }
+
+    #[test]
+    fn degradation_invalidates_prior_reservations() {
+        let mut c = cal();
+        let r = c.reserve_path(&[LinkId(0), LinkId(1)], 2, 5, 0.8).unwrap();
+        assert!(c.reservation_within_capacity(&r));
+        c.set_usable_frac(LinkId(1), 0.5);
+        assert!(!c.reservation_within_capacity(&r), "0.8 > 0.5 ceiling");
+        c.set_usable_frac(LinkId(1), 0.8);
+        assert!(c.reservation_within_capacity(&r), "exactly at the ceiling");
+    }
+
+    #[test]
+    fn fully_degraded_link_cannot_host_transfers() {
+        let mut c = cal();
+        c.set_usable_frac(LinkId(0), 0.0);
+        assert!(c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 0.05).is_none());
+        assert!(c.reserve_path(&[LinkId(0)], 0, 2, 0.1).is_err());
     }
 
     #[test]

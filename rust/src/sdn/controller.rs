@@ -74,6 +74,29 @@ impl Controller {
         self.background_mb_s[link.0] = mb_s.max(0.0);
     }
 
+    /// Dynamics: set a link's health as the usable fraction of its line
+    /// rate (1.0 = healthy). This lowers the calendar's reservable
+    /// ceiling — [`Controller::plan_transfer`] then grants at most
+    /// `health x line rate`, and the real-time `BW_rl` view shrinks
+    /// accordingly. `path_capacity_mb_s` keeps reporting line rate:
+    /// calendar fractions are relative to it, so scaling both would
+    /// double-count the degradation.
+    pub fn set_link_health(&mut self, link: LinkId, frac: f64) {
+        self.calendar.set_usable_frac(link, frac);
+    }
+
+    pub fn link_health(&self, link: LinkId) -> f64 {
+        self.calendar.usable_frac(link)
+    }
+
+    /// Revalidate a committed transfer after a capacity change: false
+    /// when its reservation (plus everything stacked with it) now
+    /// oversubscribes a degraded link, i.e. the SDN controller could no
+    /// longer honor the promised rate.
+    pub fn revalidate_transfer(&self, t: &Transfer) -> bool {
+        self.calendar.reservation_within_capacity(&t.reservation)
+    }
+
     pub fn background_mb_s(&self, link: LinkId) -> f64 {
         self.background_mb_s[link.0]
     }
@@ -286,6 +309,30 @@ mod tests {
         assert_eq!(m[0].len(), c.n_hosts());
         assert!(m[0][0] > 1e11); // local: huge finite stand-in
         assert!((m[0][1] - 12.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degraded_link_shrinks_plans_and_revalidation_catches_stale_grants() {
+        let (mut c, n) = ctrl();
+        // commit a full-rate transfer, then degrade a link under it
+        let plan = c.plan_transfer(n[1], n[0], 64.0, Secs(0.0)).unwrap();
+        let t = c
+            .commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(0.0))
+            .unwrap();
+        assert!(c.revalidate_transfer(&t));
+        let link = t.reservation.links[0];
+        c.set_link_health(link, 0.5);
+        assert!(!c.revalidate_transfer(&t), "full-rate grant exceeds half a link");
+        // BW_rl reflects the degradation once the stale grant is released
+        c.complete_transfer(&t, 64.0);
+        let bw = c.path_bw_mb_s(n[1], n[0], Secs(0.0));
+        assert!((bw - 6.4).abs() < 1e-9, "half of 12.8, got {bw}");
+        // new plans are admitted against the reduced ceiling
+        let (r2, rate2, _) = c.plan_transfer(n[1], n[0], 64.0, Secs(0.0)).unwrap();
+        assert!((r2.frac - 0.5).abs() < 1e-9);
+        assert!((rate2 - 6.4).abs() < 1e-9);
+        c.set_link_health(link, 1.0);
+        assert!((c.path_bw_mb_s(n[1], n[0], Secs(0.0)) - 12.8).abs() < 1e-9);
     }
 
     #[test]

@@ -25,6 +25,24 @@
 //! rate recompute and a single completion reschedule instead of one per
 //! flow. Intermediate recomputes were dead work in the seed: their
 //! `FlowCheck` events were superseded by the generation guard anyway.
+//!
+//! # Dynamics (fault & churn injection)
+//!
+//! [`Engine::inject`] schedules [`ClusterEvent`]s at absolute times.
+//! A `NodeDown` voids the record of the task running on the node,
+//! cancels its in-flight fair-share pull, and drains the node's queue —
+//! all the lost work lands in the orphan list ([`Engine::take_orphans`])
+//! with the crash timestamp, for the dynamics layer to reschedule.
+//! `NodeUp` re-arms the node; `LinkCapacity` re-rates the flow network
+//! in place (in-flight fair-share transfers slow down or speed up
+//! mid-flight); `NodeSpeed` is a compute multiplier applied at compute
+//! *start* (stragglers surprise the scheduler: placements keep their
+//! planned compute, the engine stretches it); `FlowStart`/`FlowStop`
+//! inject cross-traffic background flows. With no injected events and
+//! all multipliers at 1.0 the engine is bit-identical to the static
+//! path. Degrading a link that carries a pending fair-share transfer to
+//! exactly 0 MB/s starves it forever (the quiescence assert fires); the
+//! dynamics compiler clamps degradation factors above zero.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -110,10 +128,35 @@ pub struct TaskRecord {
     pub is_map: bool,
 }
 
+/// Externally injected cluster dynamics, delivered at an absolute time
+/// through the event queue. The `scenario::dynamics` layer compiles a
+/// `DynamicsSpec` timeline into these.
+#[derive(Debug, Clone)]
+pub enum ClusterEvent {
+    /// Node crashes: its running task, in-flight transfer and queued
+    /// placements are orphaned for rescheduling.
+    NodeDown(NodeId),
+    /// Node rejoins the cluster (empty-handed: its queue was drained).
+    NodeUp(NodeId),
+    /// A link's usable capacity changes to the given MB/s value
+    /// (degradation or restoration); live flow rates re-settle.
+    LinkCapacity(LinkId, f64),
+    /// Compute-time multiplier for tasks *starting* after this instant
+    /// (>= 1.0 slows the node down: a straggler). 1.0 restores.
+    NodeSpeed(NodeId, f64),
+    /// Cross-traffic appears: an infinite background flow rate-capped at
+    /// `rate_mb_s`, keyed so a later [`ClusterEvent::FlowStop`] can end it.
+    FlowStart { key: usize, path: Vec<LinkId>, rate_mb_s: f64 },
+    /// Cross-traffic keyed by `FlowStart` disappears.
+    FlowStop { key: usize },
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EvKind {
     NodeReady(usize),
     FlowCheck(u64),
+    /// Index into the engine's injected cluster-event list.
+    Cluster(u32),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -157,6 +200,19 @@ pub struct Engine {
     /// reschedule runs when the batch drains.
     net_dirty: bool,
     finished_buf: Vec<FlowId>,
+    // ---- dynamics state (inert on the static path) ----
+    /// Injected cluster events, indexed by `EvKind::Cluster`.
+    cluster_events: Vec<ClusterEvent>,
+    /// Crashed nodes ignore wake-ups until their `NodeUp`.
+    down: Vec<bool>,
+    /// Compute-time multiplier applied at compute start (1.0 = nominal).
+    speed: Vec<f64>,
+    /// Latest started placement per node: (placement idx, record idx).
+    running: Vec<Option<(u32, usize)>>,
+    /// Work lost to crashes: (placement idx, when it was lost).
+    orphans: Vec<(u32, Secs)>,
+    /// Live injected cross-traffic flows by `FlowStart` key.
+    dyn_flows: HashMap<usize, FlowId>,
 }
 
 impl Engine {
@@ -177,11 +233,53 @@ impl Engine {
             flow_gen: 0,
             net_dirty: false,
             finished_buf: Vec::new(),
+            cluster_events: Vec::new(),
+            down: vec![false; n],
+            speed: vec![1.0; n],
+            running: vec![None; n],
+            orphans: Vec::new(),
+            dyn_flows: HashMap::new(),
         }
     }
 
     pub fn now(&self) -> Secs {
         self.now
+    }
+
+    /// Schedule a [`ClusterEvent`] at absolute time `at` (>= the current
+    /// clock). Events injected before [`Engine::load`] win ties against
+    /// node wake-ups at the same instant.
+    pub fn inject(&mut self, at: Secs, ev: ClusterEvent) {
+        assert!(at >= self.now, "cluster event in the past: {at} < {}", self.now);
+        let idx = u32::try_from(self.cluster_events.len()).expect("event budget");
+        self.cluster_events.push(ev);
+        self.push(at, EvKind::Cluster(idx));
+    }
+
+    /// Mark a node as down from the start of the run (crash carried over
+    /// from a previous scheduling round).
+    pub fn set_node_down(&mut self, node: NodeId) {
+        self.down[node.0] = true;
+    }
+
+    /// Initial compute-speed multiplier (straggler carried over).
+    pub fn set_node_speed(&mut self, node: NodeId, factor: f64) {
+        self.speed[node.0] = if factor > 0.0 { factor } else { 1.0 };
+    }
+
+    /// Per-node availability after a run (crash resets to the crash
+    /// instant) — the cluster state the next scheduling round starts from.
+    pub fn node_free_times(&self) -> &[Secs] {
+        &self.node_free
+    }
+
+    /// Drain the work lost to crashes during the run: each orphan is the
+    /// lost placement plus the instant it was lost, in crash order.
+    pub fn take_orphans(&mut self) -> Vec<(Placement, Secs)> {
+        std::mem::take(&mut self.orphans)
+            .into_iter()
+            .map(|(pidx, at)| (self.placements[pidx as usize].clone(), at))
+            .collect()
     }
 
     fn push(&mut self, at: Secs, kind: EvKind) {
@@ -248,11 +346,90 @@ impl Engine {
                     self.flow_check();
                 }
             }
+            EvKind::Cluster(i) => self.cluster_event(i as usize),
         }
+    }
+
+    fn cluster_event(&mut self, i: usize) {
+        match self.cluster_events[i].clone() {
+            ClusterEvent::NodeDown(nd) => self.node_down(nd.0),
+            ClusterEvent::NodeUp(nd) => {
+                let j = nd.0;
+                if self.down[j] {
+                    self.down[j] = false;
+                    self.node_free[j] = self.node_free[j].max(self.now);
+                    self.push(self.now, EvKind::NodeReady(j));
+                }
+            }
+            ClusterEvent::LinkCapacity(link, mb_s) => {
+                self.net.set_link_capacity_mb_s(link, mb_s);
+                self.net_dirty = true;
+            }
+            ClusterEvent::NodeSpeed(nd, factor) => {
+                self.speed[nd.0] = if factor > 0.0 { factor } else { 1.0 };
+            }
+            ClusterEvent::FlowStart { key, path, rate_mb_s } => {
+                let id = self.net.add_background_capped(path, TrafficClass::Background, rate_mb_s);
+                self.dyn_flows.insert(key, id);
+                self.net_dirty = true;
+            }
+            ClusterEvent::FlowStop { key } => {
+                if let Some(id) = self.dyn_flows.remove(&key) {
+                    self.net.remove_flow(id);
+                    self.net_dirty = true;
+                }
+            }
+        }
+    }
+
+    /// Crash a node: void its unfinished record, cancel its in-flight
+    /// pull, drain its queue — everything lost becomes an orphan.
+    fn node_down(&mut self, j: usize) {
+        if self.down[j] {
+            return;
+        }
+        self.down[j] = true;
+        if let Some((pidx, rec)) = self.running[j].take() {
+            if self.records[rec].finish > self.now {
+                let last = self.records.len() - 1;
+                self.records.swap_remove(rec);
+                if rec != last {
+                    // the record that moved into `rec` may be another
+                    // node's running task: re-point its index
+                    for slot in self.running.iter_mut().flatten() {
+                        if slot.1 == last {
+                            slot.1 = rec;
+                        }
+                    }
+                }
+                self.orphans.push((pidx, self.now));
+            }
+        }
+        if self.blocked[j] {
+            let flow = self
+                .waiting
+                .iter()
+                .find(|(_, &(node, _, _))| node == j)
+                .map(|(&id, _)| id);
+            if let Some(id) = flow {
+                let (_, pidx, _) = self.waiting.remove(&id).expect("found above");
+                self.net.remove_flow(id);
+                self.orphans.push((pidx, self.now));
+                self.net_dirty = true;
+            }
+            self.blocked[j] = false;
+        }
+        while let Some(pidx) = self.queues[j].pop_front() {
+            self.orphans.push((pidx, self.now));
+        }
+        self.node_free[j] = self.now;
     }
 
     /// A node may be able to start its next placement.
     fn node_ready(&mut self, j: usize) {
+        if self.down[j] {
+            return; // crashed; NodeUp re-arms the wake-up
+        }
         if self.blocked[j] {
             return; // transfer in flight; flow completion will resume us
         }
@@ -298,7 +475,14 @@ impl Engine {
 
     fn finish_compute(&mut self, j: usize, pidx: u32, picked: Secs, ready: Secs, start: Secs) {
         let p = &self.placements[pidx as usize];
-        let finish = start + p.compute;
+        // straggler multiplier; the 1.0 branch keeps the static path
+        // bit-identical (no float multiply on the common case)
+        let compute = if self.speed[j] == 1.0 {
+            p.compute
+        } else {
+            Secs(p.compute.0 * self.speed[j])
+        };
+        let finish = start + compute;
         let record = TaskRecord {
             task: p.task,
             node: p.node,
@@ -310,6 +494,7 @@ impl Engine {
             is_map: p.is_map,
         };
         self.node_free[j] = finish;
+        self.running[j] = Some((pidx, self.records.len()));
         self.records.push(record);
         self.push(finish, EvKind::NodeReady(j));
     }
@@ -470,6 +655,154 @@ mod tests {
         let recs = e.run();
         assert_eq!(recs[0].compute_start, Secs(5.0));
         assert_eq!(recs[1].compute_start, Secs(7.0));
+    }
+
+    #[test]
+    fn crash_orphans_running_and_queued_work() {
+        // node 0: two 9s tasks from t=0; the crash at t=4 voids the
+        // running task and drains the queue; recovery finds nothing left
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.inject(Secs(4.0), ClusterEvent::NodeDown(NodeId(0)));
+        e.inject(Secs(30.0), ClusterEvent::NodeUp(NodeId(0)));
+        let a = Assignment {
+            placements: vec![
+                placement(0, 0, 9.0, TransferPlan::None),
+                placement(1, 0, 9.0, TransferPlan::None),
+            ],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert!(recs.is_empty(), "both tasks were lost: {recs:?}");
+        let orphans = e.take_orphans();
+        assert_eq!(orphans.len(), 2);
+        assert!(orphans.iter().all(|(_, at)| *at == Secs(4.0)));
+        let ids: Vec<usize> = orphans.iter().map(|(p, _)| p.task.0).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn crash_after_finish_keeps_the_record() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.inject(Secs(10.0), ClusterEvent::NodeDown(NodeId(0)));
+        e.load(&Assignment { placements: vec![placement(0, 0, 9.0, TransferPlan::None)] });
+        let recs = e.run();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].finish, Secs(9.0));
+        assert!(e.take_orphans().is_empty());
+    }
+
+    #[test]
+    fn crash_leaves_other_nodes_untouched() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO, Secs::ZERO]);
+        e.inject(Secs(1.0), ClusterEvent::NodeDown(NodeId(1)));
+        e.inject(Secs(100.0), ClusterEvent::NodeUp(NodeId(1)));
+        let a = Assignment {
+            placements: vec![
+                placement(0, 0, 5.0, TransferPlan::None),
+                placement(1, 1, 5.0, TransferPlan::None),
+            ],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].task, TaskId(0));
+        assert_eq!(recs[0].finish, Secs(5.0));
+        assert_eq!(e.take_orphans().len(), 1);
+    }
+
+    #[test]
+    fn crash_cancels_in_flight_fair_share_pull() {
+        // 50MB at 10MB/s: the crash at t=2 kills the transfer mid-flight
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.inject(Secs(2.0), ClusterEvent::NodeDown(NodeId(0)));
+        let a = Assignment {
+            placements: vec![placement(0, 0, 1.0, TransferPlan::FairShare {
+                path: vec![LinkId(0)],
+                size_mb: 50.0,
+                class: TrafficClass::HadoopOther,
+            })],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert!(recs.is_empty());
+        assert_eq!(e.net.n_flows(), 0, "cancelled flow must leave the net");
+        assert_eq!(e.take_orphans().len(), 1);
+    }
+
+    #[test]
+    fn straggler_stretches_compute_from_start() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.set_node_speed(NodeId(0), 2.0);
+        e.load(&Assignment { placements: vec![placement(0, 0, 4.0, TransferPlan::None)] });
+        let recs = e.run();
+        assert_eq!(recs[0].finish, Secs(8.0));
+    }
+
+    #[test]
+    fn mid_run_speed_change_applies_to_later_tasks_only() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.inject(Secs(2.0), ClusterEvent::NodeSpeed(NodeId(0), 3.0));
+        let a = Assignment {
+            placements: vec![
+                placement(0, 0, 4.0, TransferPlan::None),
+                placement(1, 0, 4.0, TransferPlan::None),
+            ],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert_eq!(recs[0].finish, Secs(4.0)); // started before the event
+        assert_eq!(recs[1].finish, Secs(16.0)); // 4 + 4 * 3
+    }
+
+    #[test]
+    fn link_capacity_event_rerates_in_flight_transfers() {
+        // 50MB on a 10MB/s link; at t=2 (20MB moved) it degrades to
+        // 5MB/s: the remaining 30MB takes 6s -> ready at 8, finish 9
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.inject(Secs(2.0), ClusterEvent::LinkCapacity(LinkId(0), 5.0));
+        let a = Assignment {
+            placements: vec![placement(0, 0, 1.0, TransferPlan::FairShare {
+                path: vec![LinkId(0)],
+                size_mb: 50.0,
+                class: TrafficClass::HadoopOther,
+            })],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert!((recs[0].input_ready.0 - 8.0).abs() < 1e-9);
+        assert!((recs[0].finish.0 - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn injected_cross_traffic_contends_then_releases() {
+        // 60MB on a 10MB/s link; a 5MB/s-capped cross flow runs t=0..6:
+        // fair share leaves 5MB/s (30MB moved), then full rate for the
+        // remaining 30MB -> ready at 9
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.inject(
+            Secs::ZERO,
+            ClusterEvent::FlowStart { key: 7, path: vec![LinkId(0)], rate_mb_s: 5.0 },
+        );
+        e.inject(Secs(6.0), ClusterEvent::FlowStop { key: 7 });
+        let a = Assignment {
+            placements: vec![placement(0, 0, 1.0, TransferPlan::FairShare {
+                path: vec![LinkId(0)],
+                size_mb: 60.0,
+                class: TrafficClass::HadoopOther,
+            })],
+        };
+        e.load(&a);
+        let recs = e.run();
+        assert!((recs[0].input_ready.0 - 9.0).abs() < 1e-9);
+        assert!((recs[0].finish.0 - 10.0).abs() < 1e-9);
     }
 
     #[test]

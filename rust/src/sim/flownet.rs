@@ -99,6 +99,16 @@ fn class_index(class: TrafficClass) -> usize {
 const CLASSES: [TrafficClass; 3] =
     [TrafficClass::Shuffle, TrafficClass::HadoopOther, TrafficClass::Background];
 
+/// A class's share of one link under `policy`: the queue rate capped at
+/// the link rate, or the full link when the class has no queue. The one
+/// definition both `set_qos` and capacity changes derive partitions from.
+fn class_link_cap(policy: &QosPolicy, class: TrafficClass, link_cap_mb_s: f64) -> f64 {
+    match policy.classify(class) {
+        Some(qid) => mbps_to_mb_per_s(policy.queues[qid.0].rate_mbps).min(link_cap_mb_s),
+        None => link_cap_mb_s,
+    }
+}
+
 /// The fluid network.
 #[derive(Debug, Clone)]
 pub struct FlowNet {
@@ -182,12 +192,9 @@ impl FlowNet {
         self.class_caps = CLASSES
             .iter()
             .map(|&class| {
-                let qrate = policy
-                    .classify(class)
-                    .map(|qid| mbps_to_mb_per_s(policy.queues[qid.0].rate_mbps));
                 self.link_cap_mb_s
                     .iter()
-                    .map(|&c| qrate.map_or(c, |q| q.min(c)))
+                    .map(|&c| class_link_cap(&policy, class, c))
                     .collect()
             })
             .collect();
@@ -196,6 +203,32 @@ impl FlowNet {
         for p in &mut self.pending {
             p.clear();
         }
+    }
+
+    /// Dynamics hook: change one link's usable capacity (MB/s) in place —
+    /// degradation or restoration. In QoS mode the per-class partitions of
+    /// the link are re-derived from the installed policy. Rates refresh
+    /// lazily on the next read, exactly like a membership change; flows
+    /// currently crossing the link re-rate from the current instant
+    /// (callers settle to "now" first — the engine's event loop does).
+    pub fn set_link_capacity_mb_s(&mut self, link: LinkId, cap_mb_s: f64) {
+        let l = link.0;
+        self.link_cap_mb_s[l] = cap_mb_s.max(0.0);
+        if let Some(policy) = &self.qos {
+            let cap = self.link_cap_mb_s[l];
+            for (ci, &class) in CLASSES.iter().enumerate() {
+                self.class_caps[ci][l] = class_link_cap(policy, class, cap);
+            }
+        }
+        if !self.full_dirty {
+            for p in &mut self.pending {
+                p.push(l);
+            }
+        }
+    }
+
+    pub fn link_capacity_mb_s(&self, link: LinkId) -> f64 {
+        self.link_cap_mb_s[link.0]
     }
 
     pub fn clock(&self) -> Secs {
@@ -784,6 +817,32 @@ mod tests {
         let (t, id) = n.next_completion().unwrap();
         assert_eq!(id, a);
         assert!((t.0 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_change_rerates_live_flows() {
+        let mut n = net();
+        let f = n.add_flow(vec![LinkId(0)], 100.0, TrafficClass::HadoopOther);
+        assert!((n.rate_of(f).unwrap() - 10.0).abs() < 1e-9);
+        n.settle(Secs(4.0)); // 40MB moved
+        n.set_link_capacity_mb_s(LinkId(0), 5.0);
+        assert!((n.rate_of(f).unwrap() - 5.0).abs() < 1e-9);
+        let (t, id) = n.next_completion().unwrap();
+        assert_eq!(id, f);
+        assert!((t.0 - 16.0).abs() < 1e-9); // 4 + 60/5
+        n.set_link_capacity_mb_s(LinkId(0), 10.0); // restoration
+        assert!((n.rate_of(f).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_change_respects_qos_partitions() {
+        let mut n = FlowNet::new(&[150.0]);
+        n.set_qos(QosPolicy::example3());
+        let sh = n.add_flow(vec![LinkId(0)], 1e3, TrafficClass::Shuffle);
+        assert!((n.rate_of(sh).unwrap() - 12.5).abs() < 1e-9); // Q1 = 100Mbps
+        // degrading below Q1 shrinks the class partition with the link
+        n.set_link_capacity_mb_s(LinkId(0), 5.0);
+        assert!((n.rate_of(sh).unwrap() - 5.0).abs() < 1e-9);
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! seeded [`crate::util::XorShift`]; failures report the case index and
 //! sub-seed so any counterexample replays exactly.
 
+pub mod oracles;
+
 use crate::util::XorShift;
 
 /// Run `prop` over `iters` cases drawn by `gen`. On failure, panics with

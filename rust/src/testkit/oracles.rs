@@ -1,0 +1,249 @@
+//! Invariant oracles: global safety properties any executed simulation —
+//! static or churned — must satisfy, re-derived independently of the
+//! engine/calendar bookkeeping they check.
+//!
+//! Driven by `rust/tests/invariants.rs` over [`crate::testkit::forall`]-
+//! generated random `DynamicsSpec`s for all schedulers:
+//!
+//! 1. no surviving task record overlaps a downtime window of its node;
+//! 2. every submitted task completes exactly once (crash-voided attempts
+//!    are re-run, nothing is lost or duplicated);
+//! 3. committed slot reservations never oversubscribe a link's
+//!    (time-varying) usable capacity — per-slot sums recomputed here
+//!    from the audit log, not read back from the calendar;
+//! 4. the makespan respects the critical-path and total-work lower
+//!    bounds (transfers, downtime and stragglers can only add time).
+
+use std::collections::HashMap;
+
+use crate::mapreduce::{TaskId, TaskSpec};
+use crate::scenario::{DynamicsOutcome, ReservationAudit};
+use crate::sim::TaskRecord;
+use crate::topology::NodeId;
+use crate::util::Secs;
+
+/// Slack for float accumulation in the oracle arithmetic.
+const EPS: f64 = 1e-6;
+
+/// Oracle 1: no record's occupancy window (picked → finish) intersects a
+/// downtime window of its node.
+pub fn no_task_on_down_node(
+    records: &[TaskRecord],
+    down: &[(NodeId, Secs, Secs)],
+) -> Result<(), String> {
+    for r in records {
+        for &(nd, d0, d1) in down {
+            if r.node == nd && r.picked_at < d1 && r.finish > d0 {
+                return Err(format!(
+                    "task {:?} occupied node {:?} over [{}, {}] while it was down [{}, {}]",
+                    r.task, r.node, r.picked_at, r.finish, d0, d1
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 2: the surviving records cover the submitted task ids exactly
+/// once each.
+pub fn tasks_complete_exactly_once(
+    submitted: &[TaskId],
+    records: &[TaskRecord],
+) -> Result<(), String> {
+    let mut want: Vec<TaskId> = submitted.to_vec();
+    want.sort();
+    let mut got: Vec<TaskId> = records.iter().map(|r| r.task).collect();
+    got.sort();
+    for w in got.windows(2) {
+        if w[0] == w[1] {
+            return Err(format!("task {:?} completed more than once", w[0]));
+        }
+    }
+    if got != want {
+        return Err(format!("completion mismatch: submitted {want:?}, completed {got:?}"));
+    }
+    Ok(())
+}
+
+/// Oracle 3: within every scheduling round, the per-slot sum of
+/// committed reservation fractions on each link stays within the link's
+/// usable capacity fraction at commit time. Recomputed with a plain
+/// boundary sweep over the audit log — independent of the sparse
+/// calendar's own segment arithmetic.
+pub fn reservations_within_capacity(audits: &[ReservationAudit]) -> Result<(), String> {
+    // (round, link) -> [(start, end, frac, usable)]
+    let mut per: HashMap<(usize, usize), Vec<(usize, usize, f64, f64)>> = HashMap::new();
+    for a in audits {
+        if a.usable.len() != a.links.len() {
+            return Err(format!(
+                "audit carries {} usable entries for {} links",
+                a.usable.len(),
+                a.links.len()
+            ));
+        }
+        for (i, &l) in a.links.iter().enumerate() {
+            per.entry((a.round, l.0)).or_default().push((
+                a.start_slot,
+                a.start_slot + a.n_slots,
+                a.frac,
+                a.usable[i],
+            ));
+        }
+    }
+    for (&(round, link), v) in &per {
+        let mut bounds: Vec<usize> = v.iter().flat_map(|&(s, e, _, _)| [s, e]).collect();
+        bounds.sort_unstable();
+        bounds.dedup();
+        for w in bounds.windows(2) {
+            let (s, e) = (w[0], w[1]);
+            let mut sum = 0.0f64;
+            let mut usable = 1.0f64;
+            for &(a, b, f, u) in v {
+                if a < e && b > s {
+                    sum += f;
+                    usable = usable.min(u);
+                }
+            }
+            if sum > usable + EPS {
+                return Err(format!(
+                    "round {round}: link {link} slots [{s}, {e}) reserved {sum:.6} of a {usable:.6} ceiling"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 4: `makespan >= max(critical-path bound, total-work bound)`.
+/// Both bounds assume the best case — every node up the whole run, no
+/// transfer time, base (non-straggling) speeds — so churn can only push
+/// the real makespan above them.
+pub fn makespan_lower_bounds(
+    records: &[TaskRecord],
+    tasks: &[TaskSpec],
+    authorized: &[NodeId],
+    node_speed: &[f64],
+) -> Result<(), String> {
+    if tasks.is_empty() || authorized.is_empty() {
+        return Ok(());
+    }
+    let factor = |nd: NodeId| match node_speed.get(nd.0) {
+        Some(&f) if f > 0.0 => f,
+        _ => 1.0,
+    };
+    let min_tp = |t: &TaskSpec| {
+        authorized.iter().map(|&nd| t.compute.0 * factor(nd)).fold(f64::INFINITY, f64::min)
+    };
+    let cp = tasks.iter().map(min_tp).fold(0.0f64, f64::max);
+    let work: f64 = tasks.iter().map(min_tp).sum::<f64>() / authorized.len() as f64;
+    let bound = cp.max(work);
+    let makespan = records.iter().map(|r| r.finish.0).fold(0.0f64, f64::max);
+    if makespan + EPS < bound {
+        return Err(format!(
+            "makespan {makespan:.6} below the lower bound {bound:.6} (cp {cp:.6}, work {work:.6})"
+        ));
+    }
+    Ok(())
+}
+
+/// All four oracles over one dynamic run.
+pub fn check_dynamics(
+    outcome: &DynamicsOutcome,
+    tasks: &[TaskSpec],
+    authorized: &[NodeId],
+    node_speed: &[f64],
+) -> Result<(), String> {
+    no_task_on_down_node(&outcome.records, &outcome.down_intervals)?;
+    tasks_complete_exactly_once(&outcome.submitted, &outcome.records)?;
+    reservations_within_capacity(&outcome.reservations)?;
+    makespan_lower_bounds(&outcome.records, tasks, authorized, node_speed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::LinkId;
+
+    fn rec(task: usize, node: usize, picked: f64, finish: f64) -> TaskRecord {
+        TaskRecord {
+            task: TaskId(task),
+            node: NodeId(node),
+            picked_at: Secs(picked),
+            input_ready: Secs(picked),
+            compute_start: Secs(picked),
+            finish: Secs(finish),
+            is_local: true,
+            is_map: true,
+        }
+    }
+
+    #[test]
+    fn downtime_overlap_is_flagged() {
+        let down = vec![(NodeId(0), Secs(5.0), Secs(10.0))];
+        assert!(no_task_on_down_node(&[rec(0, 0, 0.0, 5.0)], &down).is_ok());
+        assert!(no_task_on_down_node(&[rec(0, 0, 10.0, 12.0)], &down).is_ok());
+        assert!(no_task_on_down_node(&[rec(0, 1, 6.0, 8.0)], &down).is_ok());
+        assert!(no_task_on_down_node(&[rec(0, 0, 4.0, 6.0)], &down).is_err());
+        assert!(no_task_on_down_node(&[rec(0, 0, 6.0, 7.0)], &down).is_err());
+    }
+
+    #[test]
+    fn exactly_once_catches_loss_and_duplication() {
+        let sub = vec![TaskId(0), TaskId(1)];
+        assert!(tasks_complete_exactly_once(&sub, &[rec(0, 0, 0.0, 1.0), rec(1, 0, 1.0, 2.0)])
+            .is_ok());
+        assert!(tasks_complete_exactly_once(&sub, &[rec(0, 0, 0.0, 1.0)]).is_err());
+        assert!(tasks_complete_exactly_once(
+            &sub,
+            &[rec(0, 0, 0.0, 1.0), rec(1, 0, 1.0, 2.0), rec(1, 1, 1.0, 2.0)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reservation_sweep_catches_oversubscription() {
+        let audit = |round: usize, start: usize, n: usize, frac: f64, usable: f64| {
+            ReservationAudit {
+                round,
+                links: vec![LinkId(0)],
+                start_slot: start,
+                n_slots: n,
+                frac,
+                usable: vec![usable],
+            }
+        };
+        // two half-rate windows stack to exactly the ceiling: fine
+        assert!(reservations_within_capacity(&[
+            audit(1, 0, 5, 0.5, 1.0),
+            audit(1, 2, 5, 0.5, 1.0)
+        ])
+        .is_ok());
+        // stacked beyond the (degraded) ceiling: flagged
+        assert!(reservations_within_capacity(&[
+            audit(1, 0, 5, 0.5, 0.6),
+            audit(1, 2, 5, 0.5, 0.6)
+        ])
+        .is_err());
+        // different rounds never stack (each round re-reserves afresh)
+        assert!(reservations_within_capacity(&[
+            audit(1, 0, 5, 0.8, 1.0),
+            audit(2, 0, 5, 0.8, 1.0)
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn makespan_bounds_hold_and_flag_impossible_runs() {
+        use crate::hdfs::BlockId;
+        let tasks: Vec<TaskSpec> =
+            (0..4).map(|i| TaskSpec::map(i, BlockId(0), 64.0, Secs(10.0), 0.0)).collect();
+        let nodes = [NodeId(0), NodeId(1)];
+        // 4 x 10s on 2 nodes: work bound 20s, cp bound 10s
+        let ok: Vec<TaskRecord> = (0..4)
+            .map(|i| rec(i, i % 2, (i / 2) as f64 * 10.0, (i / 2 + 1) as f64 * 10.0))
+            .collect();
+        assert!(makespan_lower_bounds(&ok, &tasks, &nodes, &[]).is_ok());
+        let impossible: Vec<TaskRecord> = (0..4).map(|i| rec(i, i % 2, 0.0, 12.0)).collect();
+        assert!(makespan_lower_bounds(&impossible, &tasks, &nodes, &[]).is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Golden-trace snapshots: the deterministic execution logs of the
+//! paper's *static* Example 1 (all four schedulers, full task records)
+//! and Example 3 (QoS shuffle times) diffed against committed fixtures.
+//!
+//! Purpose: the dynamics subsystem threads new state through the engine,
+//! flow network and calendar; these snapshots prove the static scenarios
+//! stay bit-identical (at 1e-6 print precision) across such plumbing.
+//!
+//! After an *intentional* behavior change, regenerate with
+//! `BASS_BLESS_GOLDEN=1 cargo test --test golden_traces` and commit the
+//! fixture diff.
+
+use bass::experiments::run_example3;
+use bass::runtime::CostModel;
+use bass::scenario::{ScenarioSpec, SimSession};
+use bass::sched::SchedulerKind;
+use bass::util::Secs;
+
+fn check(name: &str, got: &str) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
+    if std::env::var("BASS_BLESS_GOLDEN").is_ok() {
+        std::fs::write(&path, got).expect("bless golden fixture");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("committed golden fixture");
+    assert!(
+        got == want,
+        "golden trace {name} drifted — if intentional, regenerate with \
+         BASS_BLESS_GOLDEN=1 cargo test --test golden_traces\n\
+         --- want ---\n{want}\n--- got ---\n{got}"
+    );
+}
+
+#[test]
+fn example1_static_trace_is_bit_identical() {
+    let cost = CostModel::rust_only();
+    let mut out = String::new();
+    for kind in SchedulerKind::ALL {
+        let mut sess = SimSession::new(&ScenarioSpec::example1(kind));
+        let tasks = sess.tasks.clone();
+        let a = sess.schedule(&tasks, None, Secs::ZERO, &cost);
+        let est = sess.estimated_makespan();
+        let records = sess.execute(&a);
+        out.push_str(&format!("== {} est={est:.6}\n", kind.label()));
+        for r in &records {
+            out.push_str(&format!(
+                "task={} node={} picked={:.6} ready={:.6} start={:.6} finish={:.6} local={} map={}\n",
+                r.task.0,
+                r.node.0,
+                r.picked_at.0,
+                r.input_ready.0,
+                r.compute_start.0,
+                r.finish.0,
+                r.is_local,
+                r.is_map
+            ));
+        }
+    }
+    check("example1.trace", &out);
+}
+
+#[test]
+fn example3_static_trace_is_bit_identical() {
+    let mut out = String::new();
+    for bg in [0usize, 5] {
+        let o = run_example3(bg);
+        out.push_str(&format!(
+            "bg={bg} shared={:.6} queued={:.6}\n",
+            o.shared_secs, o.queued_secs
+        ));
+    }
+    check("example3.trace", &out);
+}

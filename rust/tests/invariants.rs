@@ -1,0 +1,166 @@
+//! Invariant-oracle suite: random `DynamicsSpec`s through HDS, BAR and
+//! BASS, with `testkit::oracles` asserting the global safety properties
+//! after every run — no task on a down node, exactly-once completion,
+//! reservations within (time-varying) capacity, makespan lower bounds.
+//!
+//! `BASS_BENCH_QUICK=1` shrinks the case count for CI smoke runs; every
+//! failure replays exactly from the printed (seed, case) pair.
+
+use bass::runtime::CostModel;
+use bass::scenario::{
+    BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, SimSession, TopologyShape,
+    WorkloadSpec,
+};
+use bass::sched::SchedulerKind;
+use bass::testkit::{forall, oracles};
+use bass::util::XorShift;
+
+#[derive(Debug)]
+struct Case {
+    spec_seed: u64,
+    switches: usize,
+    hosts_per_switch: usize,
+    tasks: usize,
+    dynamics: DynamicsSpec,
+}
+
+fn gen_case(r: &mut XorShift) -> Case {
+    let switches = 2 + r.below(2); // 2..=3
+    let hosts_per_switch = 2 + r.below(2); // 2..=3
+    let n_nodes = switches * hosts_per_switch;
+    let dynamics = DynamicsSpec {
+        node_failures: r.below(n_nodes.min(4)),
+        mttr_secs: 10.0 + r.uniform(0.0, 30.0),
+        link_degradations: r.below(3),
+        degrade_floor: 0.2 + r.uniform(0.0, 0.5),
+        degrade_secs: 10.0 + r.uniform(0.0, 25.0),
+        stragglers: r.below(3),
+        straggle_factor: 1.0 + r.uniform(0.0, 2.0),
+        straggle_secs: 10.0 + r.uniform(0.0, 20.0),
+        cross_flows: r.below(3),
+        cross_rate_mb_s: 1.0 + r.uniform(0.0, 5.0),
+        cross_secs: 10.0 + r.uniform(0.0, 30.0),
+        horizon_secs: 40.0 + r.uniform(0.0, 60.0),
+        seed: r.next_u64(),
+    };
+    Case {
+        spec_seed: r.next_u64(),
+        switches,
+        hosts_per_switch,
+        tasks: 4 + r.below(9),
+        dynamics,
+    }
+}
+
+fn spec_for(case: &Case, kind: SchedulerKind) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        "invariant-case",
+        TopologyShape::Tree {
+            switches: case.switches,
+            hosts_per_switch: case.hosts_per_switch,
+            edge_mbps: 100.0,
+            uplink_mbps: 400.0,
+        },
+        WorkloadSpec::MapWave { tasks: case.tasks, compute_secs: 12.0, output_mb: 4.0 },
+    );
+    s.scheduler = kind;
+    s.replication = 2;
+    s.seed = case.spec_seed;
+    s.initial = InitialLoad::Sampled { max_secs: 10.0 };
+    s.background = BackgroundSpec { flows: 2, rate_mb_s: 2.0 };
+    s.dynamics = Some(case.dynamics.clone());
+    s
+}
+
+/// `BASS_BENCH_QUICK=1` (the CI smoke knob) shrinks the case budget.
+fn iters(default: usize) -> usize {
+    match std::env::var("BASS_BENCH_QUICK") {
+        Ok(_) => (default / 4).max(2),
+        Err(_) => default,
+    }
+}
+
+const ALL: [SchedulerKind; 3] = [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass];
+
+#[test]
+fn oracles_hold_for_all_schedulers_under_random_dynamics() {
+    let cost = CostModel::rust_only();
+    forall(0xD15EA5E, iters(16), gen_case, |case| {
+        for kind in ALL {
+            let sess = SimSession::new(&spec_for(case, kind));
+            let tasks = sess.tasks.clone();
+            let out = sess.run_dynamic(&cost);
+            oracles::check_dynamics(&out, &tasks, &sess.nodes, &sess.spec.node_speed)
+                .map_err(|e| format!("{}: {e}", kind.label()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn oracles_hold_on_the_static_degenerate_case() {
+    // all-zero churn must pass the same oracles (and run one round)
+    let cost = CostModel::rust_only();
+    forall(0xBA55, iters(6), gen_case, |case| {
+        let mut quiet = case.dynamics.clone();
+        quiet.node_failures = 0;
+        quiet.link_degradations = 0;
+        quiet.stragglers = 0;
+        quiet.cross_flows = 0;
+        for kind in ALL {
+            let mut spec = spec_for(case, kind);
+            spec.dynamics = Some(quiet.clone());
+            let sess = SimSession::new(&spec);
+            let tasks = sess.tasks.clone();
+            let out = sess.run_dynamic(&cost);
+            if out.rounds != 1 || out.reassignments != 0 {
+                return Err(format!(
+                    "{}: static case took {} rounds / {} reassignments",
+                    kind.label(),
+                    out.rounds,
+                    out.reassignments
+                ));
+            }
+            oracles::check_dynamics(&out, &tasks, &sess.nodes, &sess.spec.node_speed)
+                .map_err(|e| format!("{}: {e}", kind.label()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn heavy_forced_churn_still_satisfies_the_oracles() {
+    // deterministic worst case: early crashes with long repairs, on top
+    // of degradation + stragglers + cross traffic, for every scheduler
+    let cost = CostModel::rust_only();
+    let dynamics = DynamicsSpec {
+        node_failures: 3,
+        mttr_secs: 120.0,
+        link_degradations: 2,
+        degrade_floor: 0.2,
+        degrade_secs: 60.0,
+        stragglers: 2,
+        straggle_factor: 3.0,
+        straggle_secs: 50.0,
+        cross_flows: 3,
+        cross_rate_mb_s: 6.0,
+        cross_secs: 80.0,
+        horizon_secs: 30.0, // everything hits while work is in flight
+        seed: 7,
+    };
+    for kind in ALL {
+        let case = Case {
+            spec_seed: 2014,
+            switches: 2,
+            hosts_per_switch: 3,
+            tasks: 12,
+            dynamics: dynamics.clone(),
+        };
+        let sess = SimSession::new(&spec_for(&case, kind));
+        let tasks = sess.tasks.clone();
+        let out = sess.run_dynamic(&cost);
+        assert_eq!(out.records.len(), out.submitted.len(), "{}", kind.label());
+        oracles::check_dynamics(&out, &tasks, &sess.nodes, &sess.spec.node_speed)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+    }
+}
