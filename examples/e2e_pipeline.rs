@@ -26,7 +26,7 @@ fn main() {
         let mut rng = XorShift::new(2014); // identical trace for all schedulers
         let arrivals = gen.generate(n_jobs, &mut rng);
         let coord = Coordinator::new(ClusterSetup::default(), kind, CostModel::auto());
-        let results = coord.run_trace(arrivals);
+        let results = coord.run_trace(arrivals).expect("no submissions lost");
         let total: f64 = results.iter().map(|r| r.metrics.jt).sum();
         let mean = total / results.len() as f64;
         let mean_lr: f64 =

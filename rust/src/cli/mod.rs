@@ -1,12 +1,12 @@
 //! Hand-rolled CLI (clap is not vendored offline). Subcommands map 1:1 to
 //! the experiment drivers; `bass --help` documents them.
 
-use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep};
+use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep, StreamRun};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
-    run_example1, run_example3, run_fig5, run_scale, run_scale_fat, run_table1,
-    SchedulerKind, Table1Config,
+    run_example1, run_example3, run_fig5, run_scale, run_scale_fat, run_stream_sweep_with,
+    run_table1, SchedulerKind, StreamPoint, Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
@@ -32,6 +32,10 @@ COMMANDS:
   dynamics [--levels l] Churn sweep: BASS/BAR/HDS under node failures, link
                         degradation, stragglers and cross traffic (levels
                         0 = static .. heavy; default 0,0.5,1,2)
+  stream [--rates g]    Online multi-job stream sweep: BASS/BAR/HDS under a
+         [--jobs N]     Poisson arrival stream at each mean gap g seconds
+                        (default 120,30,10); overlapping jobs share slots,
+                        the SDN calendar and the flow network
   scenario --config F   Run a user-defined scenario sweep from a TOML file
   run --config F        Run the experiment described by a TOML file
   help                  Show this message
@@ -62,6 +66,14 @@ DEFINE YOUR OWN SCENARIO:
   [dynamics] table the sweep runs each cell's map wave through the churn
   pipeline (seeded node failures / link degradation / stragglers / cross
   traffic) instead of the static two-phase job.
+
+DEFINE YOUR OWN STREAM:
+  `bass run --config my.toml` with `run = \"stream\"` plays an online
+  multi-job sweep; the optional [stream] table sets
+    jobs, rates = [mean gaps, sparse..heavy], sizes_mb,
+    max_active (admission cap), min_free_slots (slot gate), seed
+  Every scheduler at one rate faces the identical Poisson arrival trace;
+  per-job slowdown is measured against the same job run alone.
 ";
 
 /// Parse `--key value` style options from the arg list.
@@ -145,7 +157,13 @@ pub fn run(args: Vec<String>) -> i32 {
                 let mut rng = XorShift::new(2014);
                 let arrivals = TraceGen::default().generate(n, &mut rng);
                 let coord = Coordinator::new(ClusterSetup::default(), kind, CostModel::auto());
-                let results = coord.run_trace(arrivals);
+                let results = match coord.run_trace(arrivals) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("e2e trace failed: {e}");
+                        return 1;
+                    }
+                };
                 let total: f64 = results.iter().map(|r| r.metrics.jt).sum();
                 println!(
                     "\n[{}] {} jobs, mean JT {:.1}s",
@@ -219,6 +237,39 @@ pub fn run(args: Vec<String>) -> i32 {
             }
             0
         }
+        "stream" => {
+            let mut run = StreamRun::default();
+            if let Some(raw) = opt(&args, "--rates") {
+                // same contract as the [stream] table: a typo'd knob
+                // must error, not silently run a different sweep
+                let wanted = raw.split(',').filter(|s| !s.trim().is_empty()).count();
+                let v = parse_sizes(raw.clone());
+                if v.is_empty() || v.len() != wanted || v.iter().any(|&g| g <= 0.0) {
+                    eprintln!(
+                        "--rates must be a comma list of positive mean gaps (seconds), \
+                         got {raw:?}"
+                    );
+                    return 2;
+                }
+                run.rates = v;
+            }
+            if let Some(j) = opt(&args, "--jobs").and_then(|s| s.parse().ok()) {
+                run.spec.jobs = std::cmp::max(j, 1);
+            }
+            let threads = opt_threads(&args);
+            println!(
+                "== online stream sweep ({} rates x 3 schedulers, {} jobs, {threads} threads) ==",
+                run.rates.len(),
+                run.spec.jobs
+            );
+            print_stream_points(&run_stream_sweep_with(
+                &run.spec,
+                &run.rates,
+                &CostModel::rust_only(),
+                threads,
+            ));
+            0
+        }
         "scenario" => {
             let Some(path) = opt(&args, "--config") else {
                 eprintln!("scenario requires --config <file>\n\n{HELP}");
@@ -255,6 +306,22 @@ pub fn run(args: Vec<String>) -> i32 {
                 RunConfig::Scenario => {
                     let sweep = cfg.scenario.expect("scenario run carries its sweep");
                     run_scenario(&sweep, &path, &args, &cost)
+                }
+                RunConfig::Stream => {
+                    let s = cfg.stream.expect("stream run carries its sweep");
+                    let threads = opt(&args, "--threads")
+                        .and_then(|x| x.parse().ok())
+                        .map(|t: usize| t.max(1))
+                        .unwrap_or(s.threads);
+                    println!(
+                        "== online stream sweep from {path} ({} rates, {} jobs, {threads} threads) ==",
+                        s.rates.len(),
+                        s.spec.jobs
+                    );
+                    print_stream_points(&run_stream_sweep_with(
+                        &s.spec, &s.rates, &cost, threads,
+                    ));
+                    0
                 }
                 RunConfig::Table1 { .. } => {
                     println!("== Table I ({}) from {path} ==", cfg.table1.kind.label());
@@ -343,6 +410,26 @@ fn parse_sizes(s: String) -> Vec<f64> {
     s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
 }
 
+fn print_stream_points(pts: &[StreamPoint]) {
+    println!(
+        "{:<8} {:<5} {:>9} {:>9} {:>9} {:>9} {:>10} {:>7}",
+        "gap(s)", "sched", "meanJT", "p50JT", "p95JT", "slowdown", "makespan", "queued"
+    );
+    for p in pts {
+        println!(
+            "{:<8.1} {:<5} {:>8.1}s {:>8.1}s {:>8.1}s {:>8.2}x {:>9.1}s {:>7}",
+            p.mean_interarrival_secs,
+            p.scheduler,
+            p.mean_jt,
+            p.p50_jt,
+            p.p95_jt,
+            p.mean_slowdown,
+            p.makespan,
+            p.queued
+        );
+    }
+}
+
 fn apply_overrides(cfg: &mut Table1Config, args: &[String]) {
     if let Some(s) = opt(args, "--sizes") {
         let v = parse_sizes(s);
@@ -423,6 +510,46 @@ mod tests {
     #[test]
     fn dynamics_subcommand_runs() {
         assert_eq!(run(vec!["dynamics".into(), "--levels".into(), "0,0.5".into()]), 0);
+    }
+
+    #[test]
+    fn stream_subcommand_runs() {
+        let args: Vec<String> =
+            ["stream", "--rates", "40", "--jobs", "3", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(args), 0);
+    }
+
+    #[test]
+    fn stream_subcommand_rejects_bad_rates() {
+        // same strictness as the [stream] table: no silent default sweep
+        for bad in ["0", "-5", "abc", "60,oops"] {
+            let args: Vec<String> = ["stream", "--rates", bad, "--jobs", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            assert_eq!(run(args), 2, "--rates {bad}");
+        }
+    }
+
+    #[test]
+    fn stream_config_route_runs() {
+        let dir = std::env::temp_dir().join("bass_cli_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("stream.toml");
+        std::fs::write(
+            &f,
+            "run = \"stream\"\nthreads = 2\n\
+             [stream]\njobs = 3\nrates = [50]\nsizes_mb = [150]\nseed = 5\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+        // a typo'd [stream] key is rejected, not silently defaulted
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "run = \"stream\"\n[stream]\nrate = [50]\n").unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), bad.display().to_string()]), 2);
     }
 
     #[test]

@@ -83,6 +83,17 @@ impl Ledger {
         best
     }
 
+    /// Raise every node's availability to at least `floor` (online
+    /// streams: a scheduler invoked at time `t` must not plan starts in
+    /// the past, so its per-invocation ledger view is floored at `t`).
+    pub fn raise_all(&mut self, floor: Secs) {
+        for a in &mut self.avail {
+            if *a < floor {
+                *a = floor;
+            }
+        }
+    }
+
     /// Makespan view: the latest availability across all nodes.
     pub fn max_idle(&self) -> Secs {
         self.avail.iter().copied().fold(Secs::ZERO, Secs::max)

@@ -3,8 +3,8 @@
 use crate::experiments::{SchedulerKind, Table1Config};
 use crate::hdfs::PlacementPolicy;
 use crate::scenario::{
-    cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, TopologyShape,
-    WorkloadSpec,
+    cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, StreamSpec,
+    TopologyShape, WorkloadSpec,
 };
 use crate::sdn::QosPolicy;
 use crate::workload::JobKind;
@@ -21,6 +21,26 @@ pub enum RunConfig {
     E2e { jobs: usize },
     /// A user-defined scenario sweep (see `examples/scenario.toml`).
     Scenario,
+    /// An online multi-job stream sweep (see `examples/stream.toml`).
+    Stream,
+}
+
+/// The `[stream]` run: one Poisson job-stream template swept over a set
+/// of arrival rates (mean inter-arrival gaps, seconds) for BASS/BAR/HDS.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamRun {
+    /// Jobs/sizes/admission/seed template; the per-point mean gap comes
+    /// from `rates`.
+    pub spec: StreamSpec,
+    /// Mean inter-arrival gaps to sweep, sparse to heavy (seconds).
+    pub rates: Vec<f64>,
+    pub threads: usize,
+}
+
+impl Default for StreamRun {
+    fn default() -> Self {
+        Self { spec: StreamSpec::defaults(), rates: vec![120.0, 30.0, 10.0], threads: 1 }
+    }
 }
 
 /// A declarative scenario sweep: one base spec expanded over a
@@ -163,6 +183,8 @@ pub struct ExperimentConfig {
     pub table1: Table1Config,
     /// Present when `run = "scenario"`.
     pub scenario: Option<ScenarioSweep>,
+    /// Present when a `[stream]` table was given (used by `run = "stream"`).
+    pub stream: Option<StreamRun>,
 }
 
 impl ExperimentConfig {
@@ -172,6 +194,7 @@ impl ExperimentConfig {
             run: RunConfig::Example1,
             table1: Table1Config::paper(JobKind::Wordcount),
             scenario: None,
+            stream: None,
         }
     }
 
@@ -185,6 +208,13 @@ impl ExperimentConfig {
         let mut cfg = Table1Config::paper(kind);
         apply_table1(&mut cfg, &t);
         let mut scenario = None;
+        // strict parse whenever the table exists: a `[stream]` typo must
+        // not silently run a different stream than the user wrote down
+        let stream = if t.keys().any(|k| k.starts_with("stream.")) {
+            Some(parse_stream(&t)?)
+        } else {
+            None
+        };
         let run = match t.get(".run").and_then(|v| v.as_str()).unwrap_or("example1") {
             "example3" => RunConfig::Example3 {
                 background: t
@@ -201,10 +231,90 @@ impl ExperimentConfig {
                 scenario = Some(ScenarioSweep::from_table(&t)?);
                 RunConfig::Scenario
             }
+            "stream" => RunConfig::Stream,
             _ => RunConfig::Example1,
         };
-        Ok(Self { run, table1: cfg, scenario })
+        let mut stream = match (&run, stream) {
+            // a bare `run = "stream"` gets the default sweep
+            (RunConfig::Stream, None) => Some(StreamRun::default()),
+            (_, s) => s,
+        };
+        if let Some(s) = &mut stream {
+            if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
+                s.threads = v.max(1);
+            }
+        }
+        Ok(Self { run, table1: cfg, scenario, stream })
     }
+}
+
+/// Parse a `[stream]` table onto [`StreamRun::default`], rejecting
+/// unknown keys and unsafe shapes (mirrors the `[dynamics]` contract: a
+/// typo'd knob must error, not silently run a different stream).
+fn parse_stream(t: &Table) -> anyhow::Result<StreamRun> {
+    const KNOWN: [&str; 6] = [
+        "stream.jobs",
+        "stream.rates",
+        "stream.sizes_mb",
+        "stream.max_active",
+        "stream.min_free_slots",
+        "stream.seed",
+    ];
+    for k in t.keys().filter(|k| k.starts_with("stream.")) {
+        anyhow::ensure!(
+            k == "stream." || KNOWN.contains(&k.as_str()),
+            "unknown [stream] key {k:?}"
+        );
+    }
+    let usize_of = |k: &str| -> anyhow::Result<Option<usize>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_usize() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[stream] {k} must be a non-negative integer"),
+            },
+        }
+    };
+    let mut s = StreamRun::default();
+    if let Some(v) = usize_of("stream.jobs")? {
+        anyhow::ensure!(v >= 1, "stream.jobs must be at least 1");
+        s.spec.jobs = v;
+    }
+    if let Some(v) = t.get("stream.rates") {
+        let rates = match v.as_nums() {
+            Some(r) => r.to_vec(),
+            None => anyhow::bail!("[stream] stream.rates must be a number list"),
+        };
+        anyhow::ensure!(!rates.is_empty(), "stream.rates is empty");
+        anyhow::ensure!(
+            rates.iter().all(|&r| r > 0.0),
+            "stream.rates entries are mean inter-arrival gaps: must be positive"
+        );
+        s.rates = rates;
+    }
+    if let Some(v) = t.get("stream.sizes_mb") {
+        let sizes = match v.as_nums() {
+            Some(x) => x.to_vec(),
+            None => anyhow::bail!("[stream] stream.sizes_mb must be a number list"),
+        };
+        anyhow::ensure!(!sizes.is_empty(), "stream.sizes_mb is empty");
+        anyhow::ensure!(
+            sizes.iter().all(|&x| x > 0.0),
+            "stream.sizes_mb entries must be positive"
+        );
+        s.spec.sizes_mb = sizes;
+    }
+    if let Some(v) = usize_of("stream.max_active")? {
+        anyhow::ensure!(v >= 1, "stream.max_active must admit at least one job");
+        s.spec.max_active = v;
+    }
+    if let Some(v) = usize_of("stream.min_free_slots")? {
+        s.spec.min_free_slots = v;
+    }
+    if let Some(v) = usize_of("stream.seed")? {
+        s.spec.seed = v as u64;
+    }
+    Ok(s)
 }
 
 /// Parse a `[dynamics]` table onto [`DynamicsSpec::none`] defaults,
@@ -494,6 +604,78 @@ seed = 42
         let c = ExperimentConfig::from_str("run = \"scenario\"\n[dynamics]\n").unwrap();
         let d = c.scenario.unwrap().base.dynamics.expect("churn route selected");
         assert_eq!(d, DynamicsSpec::none());
+    }
+
+    #[test]
+    fn stream_table_parses_onto_defaults() {
+        let c = ExperimentConfig::from_str(
+            "run = \"stream\"\nthreads = 3\n[stream]\njobs = 20\nrates = [240, 60, 15]\n\
+             sizes_mb = [150, 600]\nmax_active = 4\nmin_free_slots = 2\nseed = 99\n",
+        )
+        .unwrap();
+        assert_eq!(c.run, RunConfig::Stream);
+        let s = c.stream.expect("stream parsed");
+        assert_eq!(s.spec.jobs, 20);
+        assert_eq!(s.rates, vec![240.0, 60.0, 15.0]);
+        assert_eq!(s.spec.sizes_mb, vec![150.0, 600.0]);
+        assert_eq!(s.spec.max_active, 4);
+        assert_eq!(s.spec.min_free_slots, 2);
+        assert_eq!(s.spec.seed, 99);
+        assert_eq!(s.threads, 3);
+    }
+
+    #[test]
+    fn bare_stream_run_gets_the_default_sweep() {
+        let c = ExperimentConfig::from_str("run = \"stream\"\n").unwrap();
+        assert_eq!(c.run, RunConfig::Stream);
+        assert_eq!(c.stream, Some(StreamRun::default()));
+        // untouched knobs keep the defaults
+        let s = c.stream.unwrap();
+        assert_eq!(s.spec.min_free_slots, 0);
+        assert_eq!(s.spec.max_active, usize::MAX);
+    }
+
+    #[test]
+    fn stream_rejects_unknown_keys() {
+        // a typo must not silently run a different stream
+        let r = ExperimentConfig::from_str("run = \"stream\"\n[stream]\njob = 20\n");
+        assert!(r.unwrap_err().to_string().contains("job"));
+        let r = ExperimentConfig::from_str("run = \"stream\"\n[stream]\nrate = [60]\n");
+        assert!(r.unwrap_err().to_string().contains("rate"));
+    }
+
+    #[test]
+    fn stream_rejects_mistyped_and_unsafe_values() {
+        for bad in [
+            // mistyped
+            "run = \"stream\"\n[stream]\njobs = 2.5\n",
+            "run = \"stream\"\n[stream]\njobs = \"12\"\n",
+            "run = \"stream\"\n[stream]\nrates = 60\n",
+            "run = \"stream\"\n[stream]\nsizes_mb = \"150\"\n",
+            "run = \"stream\"\n[stream]\nmax_active = -1\n",
+            "run = \"stream\"\n[stream]\nseed = 1.5\n",
+            // non-positive / empty shapes
+            "run = \"stream\"\n[stream]\njobs = 0\n",
+            "run = \"stream\"\n[stream]\nrates = []\n",
+            "run = \"stream\"\n[stream]\nrates = [60, 0]\n",
+            "run = \"stream\"\n[stream]\nrates = [60, -5]\n",
+            "run = \"stream\"\n[stream]\nsizes_mb = []\n",
+            "run = \"stream\"\n[stream]\nsizes_mb = [150, 0]\n",
+            "run = \"stream\"\n[stream]\nmax_active = 0\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn stream_table_without_stream_run_still_validates() {
+        // the table is checked wherever it appears, so a typo can't hide
+        // behind a non-stream run selector
+        let r = ExperimentConfig::from_str("run = \"example1\"\n[stream]\nbogus = 1\n");
+        assert!(r.is_err());
+        let c = ExperimentConfig::from_str("run = \"example1\"\n[stream]\njobs = 4\n").unwrap();
+        assert_eq!(c.run, RunConfig::Example1);
+        assert_eq!(c.stream.unwrap().spec.jobs, 4);
     }
 
     #[test]

@@ -8,11 +8,11 @@ use crate::mapreduce::{JobId, TaskSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::CostModel;
 use crate::scenario::{
-    shuffle_majority_node, slowstart_gate, BackgroundSpec, InitialLoad, ScenarioSpec,
-    SimSession, TopologyShape, WorkloadSpec,
+    shuffle_majority_node, slowstart_gate, AdmissionPolicy, BackgroundSpec, InitialLoad,
+    ScenarioSpec, SimSession, StreamOutcome, Submission, TopologyShape, WorkloadSpec,
 };
 use crate::sched::{SchedCtx, SchedulerKind};
-use crate::sim::Engine;
+use crate::sim::{Engine, TaskRecord};
 use crate::util::Secs;
 use crate::workload::{JobArrival, WorkloadBuilder};
 
@@ -95,24 +95,50 @@ pub struct Coordinator {
     /// The live cluster (controller, flow net, namenode, RNG, scheduler)
     /// built once through the scenario layer.
     sess: SimSession,
-    /// Actual node availability, carried across jobs.
+    /// Actual node availability, carried across jobs (isolated path).
     node_free: Vec<Secs>,
     cost: CostModel,
+    /// Admission policy for the online stream path.
+    policy: AdmissionPolicy,
 }
 
 impl Coordinator {
     pub fn new(setup: ClusterSetup, kind: SchedulerKind, cost: CostModel) -> Self {
         let sess = SimSession::new(&setup.scenario(kind));
         let node_free = vec![Secs::ZERO; sess.nodes.len()];
-        Self { setup, scheduler_kind: kind, sess, node_free, cost }
+        Self {
+            setup,
+            scheduler_kind: kind,
+            sess,
+            node_free,
+            cost,
+            policy: AdmissionPolicy::default(),
+        }
+    }
+
+    /// Builder-style admission-policy override for the stream path.
+    pub fn with_admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     pub fn scheduler_label(&self) -> &'static str {
         self.scheduler_kind.label()
     }
 
-    /// Handle one job end-to-end at its arrival time.
+    /// Handle one job end-to-end at its arrival time — the **isolated
+    /// static path**: two phase-split engines against the carried node
+    /// availability, each job run to completion before the next. This is
+    /// the reference the online stream's differential pin compares
+    /// against (`rust/tests/proptests.rs`); live traces go through
+    /// [`Coordinator::run_trace`] instead.
     pub fn handle(&mut self, req: &JobRequest) -> JobResult {
+        self.handle_with_records(req).0
+    }
+
+    /// [`Coordinator::handle`], also returning the execution records
+    /// (the record-level differential pin needs them).
+    pub fn handle_with_records(&mut self, req: &JobRequest) -> (JobResult, Vec<TaskRecord>) {
         let now = Secs(req.arrival.at_secs);
         let mut builder = WorkloadBuilder::new(req.arrival.kind);
         builder.replication = self.setup.replication.min(self.sess.nodes.len());
@@ -166,7 +192,7 @@ impl Coordinator {
         }
         let mut m = JobMetrics::from_records(&all, now, Some(gate));
         m.lr = lr;
-        JobResult { job: job.id, name: job.name.clone(), submitted_at: now.0, metrics: m }
+        (JobResult { job: job.id, name: job.name.clone(), submitted_at: now.0, metrics: m }, all)
     }
 
     fn schedule(
@@ -187,24 +213,67 @@ impl Coordinator {
         self.sess.sched.schedule(tasks, gate, &mut ctx)
     }
 
-    /// Run a whole trace through a submitter thread + this leader,
-    /// demonstrating the channel architecture. Results come back in
-    /// submission order.
-    pub fn run_trace(mut self, arrivals: Vec<JobArrival>) -> Vec<JobResult> {
+    /// Run a whole trace as an **online stream**: requests flow through a
+    /// submitter thread (the channel architecture), and the leader plays
+    /// the time-ordered submissions as one shared-cluster session —
+    /// overlapping jobs contend for slots, calendar windows and the flow
+    /// network (`scenario::online`). Results come back in submission
+    /// order.
+    ///
+    /// Errs if the submitter disconnected mid-stream: a short count used
+    /// to be silently truncated to however many requests arrived, which
+    /// made a lost submission indistinguishable from a short trace.
+    pub fn run_trace(self, arrivals: Vec<JobArrival>) -> anyhow::Result<Vec<JobResult>> {
+        let outcome = self.run_stream(arrivals)?;
+        Ok(outcome
+            .jobs
+            .iter()
+            .map(|j| JobResult {
+                job: j.job,
+                name: j.name.clone(),
+                submitted_at: j.submitted_at,
+                metrics: j.metrics,
+            })
+            .collect())
+    }
+
+    /// [`Coordinator::run_trace`] returning the full [`StreamOutcome`]
+    /// (per-job slowdowns, tagged records, reservation audits).
+    pub fn run_stream(mut self, arrivals: Vec<JobArrival>) -> anyhow::Result<StreamOutcome> {
+        let expected = arrivals.len();
         let (tx, rx) = mpsc::channel::<JobRequest>();
-        let submitter = thread::spawn(move || {
+        let submitter = thread::spawn(move || -> usize {
+            let mut sent = 0;
             for (id, arrival) in arrivals.into_iter().enumerate() {
                 if tx.send(JobRequest { arrival, id }).is_err() {
-                    return;
+                    return sent;
                 }
+                sent += 1;
             }
+            sent
         });
-        let mut results = Vec::new();
+        let mut subs: Vec<Submission> = Vec::with_capacity(expected);
         while let Ok(req) = rx.recv() {
-            results.push(self.handle(&req));
+            subs.push(Submission::from(req.arrival));
         }
-        submitter.join().expect("submitter thread");
-        results
+        let sent = submitter.join().expect("submitter thread");
+        anyhow::ensure!(
+            sent == expected && subs.len() == expected,
+            "job stream truncated: {} of {expected} submissions arrived ({sent} sent)",
+            subs.len()
+        );
+        Ok(self.sess.run_stream(subs, self.policy, &self.cost))
+    }
+
+    /// The pre-stream sequential loop — every job handled end-to-end in
+    /// isolation at its arrival. Kept as the static reference for the
+    /// differential pin tests and slowdown baselines.
+    pub fn run_trace_isolated(mut self, arrivals: Vec<JobArrival>) -> Vec<JobResult> {
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(id, arrival)| self.handle(&JobRequest { arrival, id }))
+            .collect()
     }
 }
 
@@ -222,8 +291,9 @@ mod tests {
 
     #[test]
     fn coordinator_processes_trace_in_order() {
-        let c = Coordinator::new(ClusterSetup::default(), SchedulerKind::Bass, CostModel::rust_only());
-        let results = c.run_trace(trace(5));
+        let c =
+            Coordinator::new(ClusterSetup::default(), SchedulerKind::Bass, CostModel::rust_only());
+        let results = c.run_trace(trace(5)).expect("no submissions lost");
         assert_eq!(results.len(), 5);
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.job.0, i);
@@ -233,6 +303,43 @@ mod tests {
         for w in results.windows(2) {
             assert!(w[0].submitted_at < w[1].submitted_at);
         }
+    }
+
+    #[test]
+    fn stream_trace_matches_isolated_for_sparse_arrivals() {
+        // gaps far beyond every makespan: the online stream must collapse
+        // to the sequential static path exactly
+        let mk = || {
+            Coordinator::new(ClusterSetup::default(), SchedulerKind::Bass, CostModel::rust_only())
+        };
+        let mut rng = XorShift::new(9);
+        let arrivals = TraceGen { mean_interarrival_secs: 10_000.0, sizes_mb: vec![150.0, 300.0] }
+            .generate(4, &mut rng);
+        let stream = mk().run_trace(arrivals.clone()).expect("stream");
+        let isolated = mk().run_trace_isolated(arrivals);
+        assert_eq!(stream.len(), isolated.len());
+        for (s, i) in stream.iter().zip(&isolated) {
+            assert_eq!(s.submitted_at, i.submitted_at);
+            assert_eq!(s.metrics, i.metrics, "sparse stream must match the static path");
+        }
+    }
+
+    #[test]
+    fn stream_outcome_reports_contention() {
+        // a burst of arrivals on one cluster: slowdown must be visible
+        let c =
+            Coordinator::new(ClusterSetup::default(), SchedulerKind::Bass, CostModel::rust_only());
+        let arrivals: Vec<JobArrival> = (0..3)
+            .map(|i| JobArrival {
+                at_secs: 1.0 + i as f64,
+                kind: JobKind::Sort,
+                data_mb: 600.0,
+            })
+            .collect();
+        let out = c.run_stream(arrivals).expect("stream");
+        assert_eq!(out.jobs.len(), 3);
+        assert!(out.stats.mean_slowdown > 1.0, "mean slowdown {}", out.stats.mean_slowdown);
+        assert!(!out.records.is_empty());
     }
 
     #[test]
@@ -263,6 +370,7 @@ mod tests {
         let mk = |k| {
             Coordinator::new(ClusterSetup::default(), k, CostModel::rust_only())
                 .run_trace(trace(6))
+                .expect("stream")
         };
         let bass: f64 = mk(SchedulerKind::Bass).iter().map(|r| r.metrics.jt).sum();
         let hds: f64 = mk(SchedulerKind::Hds).iter().map(|r| r.metrics.jt).sum();

@@ -2,9 +2,13 @@
 //!
 //! Architecture note (DESIGN.md): the offline image vendors no tokio, so
 //! the coordinator uses std threads + mpsc channels — a submitter thread
-//! feeds [`JobRequest`]s into the leader, which schedules each job
-//! against the live cluster state and executes it on the DES engine,
-//! streaming [`JobResult`]s back.
+//! feeds [`JobRequest`]s into the leader. The leader plays the whole
+//! trace as one **online stream** (`scenario::online`): overlapping jobs
+//! share the node slots, the SDN bandwidth calendar and the flow
+//! network, so later jobs genuinely contend with earlier ones.
+//! [`Coordinator::handle`] / [`Coordinator::run_trace_isolated`] keep
+//! the pre-stream run-to-completion semantics as the static reference
+//! path (differential pins, slowdown baselines).
 
 pub mod leader;
 

@@ -12,6 +12,7 @@ pub mod example3;
 pub mod fig5;
 pub mod fixtures;
 pub mod scale;
+pub mod stream;
 pub mod table1;
 
 pub use ablations::{
@@ -24,4 +25,7 @@ pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;
 pub use fixtures::{example1_fixture, makespan, Example1Fixture, SchedulerKind};
 pub use scale::{fat_scale_spec, run_scale, run_scale_fat, scale_spec, ScalePoint};
+pub use stream::{
+    run_stream_sweep, run_stream_sweep_with, stream_cluster, stream_spec, StreamPoint,
+};
 pub use table1::{run_cell, run_cell_for_bench, run_table1, Table1Config, Table1Row};

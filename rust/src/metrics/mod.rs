@@ -1,7 +1,10 @@
-//! Metrics: MT / RT / JT / LR (Table I) and per-node timelines (Fig. 3).
+//! Metrics: MT / RT / JT / LR (Table I), per-node timelines (Fig. 3),
+//! and stream-level aggregates (online multi-job runs).
 
 pub mod job;
+pub mod stream;
 pub mod timeline;
 
 pub use job::JobMetrics;
+pub use stream::{percentile, StreamStats};
 pub use timeline::{NodeTimeline, TimelineEntry};

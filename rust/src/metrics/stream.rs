@@ -1,0 +1,84 @@
+//! Stream-level aggregates: distribution statistics over the per-job
+//! metrics of an online multi-job run (`scenario::online`).
+
+/// Nearest-rank percentile of an unsorted sample (p in [0, 100]).
+/// Deterministic: ties and ordering are resolved by `total_cmp`.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let p = p.clamp(0.0, 100.0);
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// Aggregate statistics over one stream's per-job completion times and
+/// slowdowns (completion time divided by the job's isolated run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamStats {
+    pub jobs: usize,
+    pub mean_jt: f64,
+    pub p50_jt: f64,
+    pub p95_jt: f64,
+    pub mean_slowdown: f64,
+    pub max_slowdown: f64,
+}
+
+impl StreamStats {
+    /// `jts[i]` is job i's stream completion time, `slowdowns[i]` its
+    /// slowdown vs. the isolated run (1.0 = uncontended).
+    pub fn from_jobs(jts: &[f64], slowdowns: &[f64]) -> Self {
+        assert_eq!(jts.len(), slowdowns.len(), "one slowdown per job");
+        let n = jts.len();
+        if n == 0 {
+            return Self {
+                jobs: 0,
+                mean_jt: 0.0,
+                p50_jt: 0.0,
+                p95_jt: 0.0,
+                mean_slowdown: 1.0,
+                max_slowdown: 1.0,
+            };
+        }
+        Self {
+            jobs: n,
+            mean_jt: jts.iter().sum::<f64>() / n as f64,
+            p50_jt: percentile(jts, 50.0),
+            p95_jt: percentile(jts, 95.0),
+            mean_slowdown: slowdowns.iter().sum::<f64>() / n as f64,
+            max_slowdown: slowdowns.iter().copied().fold(1.0, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 95.0), 4.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+    }
+
+    #[test]
+    fn stats_shape() {
+        let s = StreamStats::from_jobs(&[10.0, 20.0, 30.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(s.jobs, 3);
+        assert_eq!(s.mean_jt, 20.0);
+        assert_eq!(s.p50_jt, 20.0);
+        assert_eq!(s.p95_jt, 30.0);
+        assert_eq!(s.mean_slowdown, 2.0);
+        assert_eq!(s.max_slowdown, 3.0);
+        let empty = StreamStats::from_jobs(&[], &[]);
+        assert_eq!(empty.jobs, 0);
+        assert_eq!(empty.mean_slowdown, 1.0);
+    }
+}

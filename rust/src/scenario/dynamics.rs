@@ -430,7 +430,7 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
                 start_slot: tr.reservation.start_slot,
                 n_slots: tr.reservation.n_slots,
                 frac: tr.reservation.frac,
-                usable: tr.reservation.links.iter().map(|&l| ctrl.link_health(l)).collect(),
+                usable: ctrl.path_health(&tr.reservation.links),
             });
         }
 

@@ -18,8 +18,14 @@
 //!
 //! New workloads need a `ScenarioSpec` (or a TOML file for the CLI's
 //! `scenario` subcommand), not a new driver. See DESIGN.md.
+//!
+//! Two execution overlays build on the session: [`dynamics`] plays a
+//! scenario against an injected churn timeline, and [`online`] runs a
+//! virtual-time **multi-job stream** where overlapping jobs share the
+//! session's engine, ledger view, flow network and SDN calendar.
 
 pub mod dynamics;
+pub mod online;
 pub mod session;
 pub mod spec;
 pub mod sweep;
@@ -27,6 +33,10 @@ pub mod sweep;
 pub use dynamics::{
     down_intervals, run_dynamic, run_dynamic_grid, DynEvent, DynSweepRow, DynamicsOutcome,
     DynamicsSpec, ReservationAudit, TimedEvent,
+};
+pub use online::{
+    run_stream, AdmissionPolicy, JobOutcome, StreamOutcome, StreamSpec, Submission,
+    SubmissionBody,
 };
 pub use session::{shuffle_majority_node, slowstart_gate, SimSession};
 pub use spec::{cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};

@@ -1,0 +1,958 @@
+//! Online multi-job execution: a virtual-time job stream where
+//! overlapping jobs share one cluster.
+//!
+//! The paper schedules a single job's tasks against SDN-reported link
+//! bandwidth; its premise — bandwidth as a globally contended,
+//! reservable resource — only bites when many jobs overlap on the same
+//! cluster. This layer makes the job *stream* the unit of execution:
+//!
+//! * **One engine.** All jobs execute in a single [`Engine`]
+//!   ([`Engine::run_until`] plays the cluster up to each control
+//!   instant), so tasks from distinct jobs interleave in the node FIFO
+//!   queues and their fair-share transfers contend in the one flow
+//!   network. Records are job-tagged ([`Engine::tag_job`]).
+//! * **One controller / calendar.** Every scheduler invocation mutates
+//!   the session's live [`crate::sdn::Controller`]: BASS reservations
+//!   committed for an earlier job persist, so a later job's
+//!   `plan_transfer` sees the earlier grants and queues behind them.
+//!   Calendar history is compacted at each arrival
+//!   ([`crate::sdn::Controller::gc_calendar_before`]) so memory tracks
+//!   the live horizon, not every job ever admitted.
+//! * **One availability view.** The scheduler's per-invocation ledger is
+//!   rebuilt from the cluster's *committed* occupancy: a node with
+//!   queued or in-flight work carries the planned ledger value its
+//!   scheduler committed (raised to any actual overrun), an idle node
+//!   carries its actual engine availability. With no overlapping work
+//!   this collapses to the actual availability the static path uses.
+//! * **Admission control.** FIFO with a slot-availability gate: a job is
+//!   admitted when fewer than `max_active` jobs are running *and* at
+//!   least `min_free_slots` authorized nodes are free; otherwise it
+//!   queues and is re-considered whenever a job completes (or, on an
+//!   idle cluster, at the earliest instant the gate can pass). Queue
+//!   wait counts toward the job's completion time.
+//!
+//! # Phase pipeline per job (and the static differential pin)
+//!
+//! Each job still runs the paper's two-phase pipeline, driven by engine
+//! completion watches instead of run-to-completion loops:
+//!
+//! 1. maps are scheduled at the admission instant against the committed
+//!    view and loaded into the shared engine;
+//! 2. a *threshold* watch ([`Engine::watch_threshold`]) fires at the
+//!    `ceil(slowstart * m)`-th map finish — the engine clock then sits
+//!    exactly on the slowstart gate — and the reduces are scheduled at
+//!    that instant. The reduce ledger needs the maps' *actual* finish
+//!    times (the static path reads them off executed records); a cloned
+//!    **forecast probe** of the engine is run ahead to map completion to
+//!    recover them. The forecast is exact unless a later arrival would
+//!    have changed in-flight contention — precisely the information an
+//!    online system cannot have.
+//!
+//! For a 1-job stream, or a stream whose inter-arrival gaps exceed every
+//! job's makespan, the whole construction degenerates to the static
+//! sequential path bit-for-bit (`rust/tests/proptests.rs` pins this
+//! against `Coordinator::handle`) — with one documented exception: at
+//! `slowstart < 1` the shared engine lets a job's reduce shuffles
+//! contend with its own still-running map transfers, which the static
+//! path's phase-split engines cannot represent. The pin therefore runs
+//! at `slowstart = 1.0` (where the models provably coincide for every
+//! scheduler) plus BASS at the default slowstart (reserved transfers
+//! never touch the shared flow network). The richer contention at
+//! `slowstart < 1` is a deliberate fidelity gain of the online model.
+
+use std::collections::VecDeque;
+
+use crate::cluster::Ledger;
+use crate::mapreduce::{JobId, JobSpec, TaskId, TaskSpec};
+use crate::metrics::{JobMetrics, StreamStats};
+use crate::runtime::CostModel;
+use crate::sched::{SchedCtx, Scheduler as _};
+use crate::sdn::Controller;
+use crate::sim::{Assignment, Engine, FlowNet, TaskRecord, TransferPlan};
+use crate::topology::NodeId;
+use crate::util::{Secs, XorShift};
+use crate::workload::{JobArrival, JobKind, TraceGen, WorkloadBuilder};
+
+use super::dynamics::ReservationAudit;
+use super::session::{shuffle_majority_node, slowstart_gate, SimSession};
+
+/// One job handed to the stream at an absolute submission time.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub at_secs: f64,
+    pub body: SubmissionBody,
+}
+
+/// What the submission carries.
+#[derive(Debug, Clone)]
+pub enum SubmissionBody {
+    /// A Wordcount/Sort job generated through [`WorkloadBuilder`]
+    /// against the session's namenode and RNG (the trace-driven route).
+    Generated { kind: JobKind, data_mb: f64 },
+    /// Pre-built tasks (dense ids, maps before reduces — validated via
+    /// [`JobSpec`]); the golden-trace streams use this.
+    Explicit { name: String, tasks: Vec<TaskSpec>, slowstart: f64 },
+}
+
+impl From<JobArrival> for Submission {
+    fn from(a: JobArrival) -> Self {
+        Self {
+            at_secs: a.at_secs,
+            body: SubmissionBody::Generated { kind: a.kind, data_mb: a.data_mb },
+        }
+    }
+}
+
+/// FIFO admission with a slot-availability gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Maximum concurrently active (admitted, incomplete) jobs.
+    pub max_active: usize,
+    /// Admission additionally waits until at least this many authorized
+    /// nodes are free (committed occupancy <= now); clamped to the
+    /// cluster size. 0 (the default) admits against busy nodes — the
+    /// paper's shared-cluster regime and the static path's behavior.
+    pub min_free_slots: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self { max_active: usize::MAX, min_free_slots: 0 }
+    }
+}
+
+/// Declarative stream description (the `[stream]` config table / `bass
+/// stream` CLI route): a Poisson job trace plus the admission policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    /// Jobs in the stream.
+    pub jobs: usize,
+    /// Mean of the exponential inter-arrival gap (seconds); smaller =
+    /// higher arrival rate = more overlap.
+    pub mean_interarrival_secs: f64,
+    /// Job input sizes drawn uniformly per arrival (MB).
+    pub sizes_mb: Vec<f64>,
+    /// Admission: max concurrently active jobs (`usize::MAX` = no cap).
+    pub max_active: usize,
+    /// Admission: free authorized nodes required to admit.
+    pub min_free_slots: usize,
+    /// Trace seed (independent of the scenario seed, so schedulers
+    /// compared on one cluster face the identical arrival sequence).
+    pub seed: u64,
+}
+
+impl StreamSpec {
+    pub fn defaults() -> Self {
+        Self {
+            jobs: 12,
+            mean_interarrival_secs: 60.0,
+            sizes_mb: vec![150.0, 300.0, 600.0],
+            max_active: usize::MAX,
+            min_free_slots: 0,
+            seed: 2014,
+        }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        AdmissionPolicy { max_active: self.max_active, min_free_slots: self.min_free_slots }
+    }
+
+    /// Expand into the Poisson submission trace (deterministic per seed).
+    pub fn submissions(&self) -> Vec<Submission> {
+        let mut rng = XorShift::new(self.seed);
+        TraceGen {
+            mean_interarrival_secs: self.mean_interarrival_secs,
+            sizes_mb: self.sizes_mb.clone(),
+        }
+        .generate_poisson(self.jobs, &mut rng)
+        .into_iter()
+        .map(Submission::from)
+        .collect()
+    }
+}
+
+/// One job's outcome within the stream.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job: JobId,
+    pub name: String,
+    pub submitted_at: f64,
+    /// When the admission gate let it through (== submitted_at unless it
+    /// queued).
+    pub admitted_at: f64,
+    /// The reduce slowstart gate the run used.
+    pub gate: f64,
+    /// Whether the job waited in the admission queue.
+    pub queued: bool,
+    /// MT/RT/JT/LR measured from *submission* (queue wait counts).
+    pub metrics: JobMetrics,
+    /// Completion time of the same job alone on the pristine cluster.
+    pub isolated_jt: f64,
+    /// `metrics.jt / isolated_jt` (1.0 = uncontended).
+    pub slowdown: f64,
+    /// The job's task specs with their stream-global ids (oracle fodder).
+    pub tasks: Vec<TaskSpec>,
+}
+
+/// Everything one stream run produced — self-describing enough for the
+/// concurrency oracles (`testkit::oracles`).
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    pub jobs: Vec<JobOutcome>,
+    /// Job-tagged execution records, sorted by stream-global task id.
+    pub records: Vec<(JobId, TaskRecord)>,
+    /// Every committed slot reservation across all jobs, with the link
+    /// healths in force at commit time (all on the one shared calendar,
+    /// so cross-job stacking is checked together).
+    pub reservations: Vec<ReservationAudit>,
+    /// Absolute finish of the last task.
+    pub last_finish: f64,
+    /// `last_finish - first submission`.
+    pub makespan: f64,
+    /// JT / slowdown distribution statistics.
+    pub stats: StreamStats,
+    /// Jobs that waited in the admission queue.
+    pub queued_jobs: usize,
+}
+
+/// Watch keys: three per job.
+fn gate_key(jid: usize) -> u64 {
+    3 * jid as u64
+}
+fn maps_key(jid: usize) -> u64 {
+    3 * jid as u64 + 1
+}
+fn all_key(jid: usize) -> u64 {
+    3 * jid as u64 + 2
+}
+
+/// Per-job driver state.
+struct JobRun {
+    name: String,
+    submit: Secs,
+    admitted: Secs,
+    queued: bool,
+    /// First stream-global task id (ids are `base..base + tasks`).
+    base: usize,
+    maps: Vec<TaskSpec>,
+    /// Reduce specs (un-hinted; the gate handler hints a copy).
+    reduces: Vec<TaskSpec>,
+    slowstart: f64,
+    gate: Option<Secs>,
+    /// Map locality of the committed assignment.
+    lr: f64,
+    /// Placement node per map (maps order) — determines the shuffle
+    /// majority node without waiting for records.
+    map_nodes: Vec<NodeId>,
+    done: bool,
+}
+
+impl JobRun {
+    fn n_tasks(&self) -> usize {
+        self.maps.len() + self.reduces.len()
+    }
+}
+
+/// The shuffle-majority node from committed placements. Bit-identical
+/// to [`super::session::shuffle_majority_node`] over the executed
+/// records: records land on their placement nodes and both walk tasks
+/// in ascending id order, so the per-node sums accumulate identically.
+fn hint_from_placements(maps: &[TaskSpec], nodes: &[NodeId], n_hosts: usize) -> NodeId {
+    let mut out_mb = vec![0.0f64; n_hosts];
+    for (t, nd) in maps.iter().zip(nodes) {
+        out_mb[nd.0] += t.output_mb;
+    }
+    let best = out_mb
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    NodeId(best)
+}
+
+struct StreamDriver<'a> {
+    sess: &'a mut SimSession,
+    cost: &'a CostModel,
+    policy: AdmissionPolicy,
+    /// The one shared engine all jobs execute in.
+    engine: Engine,
+    /// Planned per-host availability from the last scheduler commit.
+    planned: Vec<Secs>,
+    n_hosts: usize,
+    jobs: Vec<JobRun>,
+    active: usize,
+    admit_q: VecDeque<usize>,
+    audits: Vec<ReservationAudit>,
+    /// Cluster snapshots before any stream job (isolated-run baseline).
+    pristine_ctrl: Controller,
+    pristine_net: FlowNet,
+    next_base: usize,
+}
+
+impl<'a> StreamDriver<'a> {
+    /// The committed availability view at `floor`, read from `from` (the
+    /// live engine, or a forecast probe): planned for busy/queued nodes,
+    /// actual for idle ones, floored at the invocation instant.
+    fn committed_ledger(&self, from: &Engine, floor: Secs) -> Ledger {
+        let actual = from.node_free_times();
+        let mut v = vec![Secs::INF; self.n_hosts];
+        for &nd in &self.sess.nodes {
+            let a = actual[nd.0];
+            v[nd.0] = if from.has_pending(nd) { self.planned[nd.0].max(a) } else { a };
+        }
+        let mut l = Ledger::with_initial(v);
+        l.raise_all(floor);
+        l
+    }
+
+    /// Free authorized nodes at `now` (the admission gate's view).
+    fn free_slots(&self, now: Secs) -> usize {
+        let actual = self.engine.node_free_times();
+        self.sess
+            .nodes
+            .iter()
+            .filter(|&&nd| {
+                let a = actual[nd.0];
+                let c = if self.engine.has_pending(nd) { self.planned[nd.0].max(a) } else { a };
+                c <= now
+            })
+            .count()
+    }
+
+    fn admissible(&self, now: Secs) -> bool {
+        if self.active >= self.policy.max_active {
+            return false;
+        }
+        let need = self.policy.min_free_slots.min(self.sess.nodes.len());
+        need == 0 || self.free_slots(now) >= need
+    }
+
+    /// Schedule one batch against the given committed view, mutating the
+    /// live controller/calendar; absorb the scheduler's plan and audit
+    /// its reservations.
+    fn schedule_batch(
+        &mut self,
+        tasks: &[TaskSpec],
+        gate: Secs,
+        now: Secs,
+        view: Ledger,
+    ) -> Assignment {
+        let mut ledger = view;
+        let a = {
+            let mut ctx = SchedCtx {
+                controller: &mut self.sess.ctrl,
+                namenode: &self.sess.nn,
+                ledger: &mut ledger,
+                authorized: self.sess.nodes.clone(),
+                now,
+                cost: self.cost,
+                node_speed: self.sess.spec.node_speed.clone(),
+            };
+            self.sess.sched.schedule(tasks, Some(gate), &mut ctx)
+        };
+        for &nd in &self.sess.nodes {
+            self.planned[nd.0] = ledger.idle(nd);
+        }
+        for p in &a.placements {
+            let tr = match &p.transfer {
+                TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+                _ => continue,
+            };
+            if tr.reservation.n_slots == 0 {
+                continue;
+            }
+            self.audits.push(ReservationAudit {
+                round: 1,
+                links: tr.reservation.links.clone(),
+                start_slot: tr.reservation.start_slot,
+                n_slots: tr.reservation.n_slots,
+                frac: tr.reservation.frac,
+                usable: self.sess.ctrl.path_health(&tr.reservation.links),
+            });
+        }
+        a
+    }
+
+    /// Build the job at its arrival (RNG draws stay in arrival order no
+    /// matter how long it queues) and offset its task ids into the
+    /// stream-global space.
+    fn build(&mut self, jid: usize, submit: Secs, body: SubmissionBody) -> JobRun {
+        let (name, tasks, slowstart) = match body {
+            SubmissionBody::Generated { kind, data_mb } => {
+                let mut builder = WorkloadBuilder::new(kind);
+                builder.replication = self.sess.spec.replication.min(self.sess.nodes.len());
+                builder.reduces = self.sess.spec.reduces;
+                builder.placement = self.sess.spec.placement;
+                let job = builder.build(
+                    jid,
+                    data_mb,
+                    &self.sess.nodes,
+                    &mut self.sess.nn,
+                    &mut self.sess.rng,
+                );
+                (job.name, job.tasks, job.slowstart)
+            }
+            SubmissionBody::Explicit { name, tasks, slowstart } => {
+                // shape-check through the JobSpec constructor
+                let job = JobSpec::new(jid, name, tasks);
+                (job.name, job.tasks, slowstart)
+            }
+        };
+        let base = self.next_base;
+        self.next_base += tasks.len();
+        let (mut maps, mut reduces) = (Vec::new(), Vec::new());
+        for mut t in tasks {
+            t.id = TaskId(base + t.id.0);
+            if t.is_map() {
+                maps.push(t);
+            } else {
+                reduces.push(t);
+            }
+        }
+        assert!(!maps.is_empty(), "stream jobs need at least one map task");
+        JobRun {
+            name,
+            submit,
+            admitted: submit,
+            queued: false,
+            base,
+            maps,
+            reduces,
+            slowstart,
+            gate: None,
+            lr: 1.0,
+            map_nodes: Vec::new(),
+            done: false,
+        }
+    }
+
+    /// Admit a job at `at`: schedule its map wave against the committed
+    /// cluster, register its watches, load it into the shared engine.
+    fn admit(&mut self, jid: usize, at: Secs) {
+        self.jobs[jid].admitted = at;
+        self.active += 1;
+        let maps = self.jobs[jid].maps.clone();
+        let view = self.committed_ledger(&self.engine, at);
+        let a = self.schedule_batch(&maps, at, at, view);
+        self.jobs[jid].lr = a.locality_ratio();
+        let mut map_nodes = vec![NodeId(0); maps.len()];
+        for p in &a.placements {
+            map_nodes[p.task.0 - self.jobs[jid].base] = p.node;
+        }
+        self.jobs[jid].map_nodes = map_nodes;
+        let map_ids: Vec<TaskId> = maps.iter().map(|t| t.id).collect();
+        let all_ids: Vec<TaskId> = map_ids
+            .iter()
+            .copied()
+            .chain(self.jobs[jid].reduces.iter().map(|t| t.id))
+            .collect();
+        self.engine.tag_job(JobId(jid), all_ids.iter().copied());
+        let need = ((maps.len() as f64 * self.jobs[jid].slowstart).ceil() as usize)
+            .clamp(1, maps.len());
+        self.engine.watch_threshold(gate_key(jid), &map_ids, need);
+        self.engine.watch(maps_key(jid), &map_ids);
+        self.engine.watch(all_key(jid), &all_ids);
+        self.engine.load(&a);
+    }
+
+    /// The slowstart threshold fired: the engine clock sits exactly on
+    /// the job's reduce gate. Schedule the reduces now, against the
+    /// forecast of the maps' actual finish times.
+    fn on_gate(&mut self, jid: usize) {
+        let gate = self.engine.now().max(self.jobs[jid].admitted);
+        self.jobs[jid].gate = Some(gate);
+        if self.jobs[jid].reduces.is_empty() {
+            return;
+        }
+        let floor = self.jobs[jid].admitted;
+        let view = if self.engine.watch_remaining(maps_key(jid)) == Some(0) {
+            // every map already finished (slowstart = 1, or a shared
+            // batch): the live engine holds the actual finishes
+            self.committed_ledger(&self.engine, floor)
+        } else {
+            let mut probe = self.engine.clone();
+            loop {
+                let fired = probe.run_until(Secs::INF);
+                assert!(!fired.is_empty(), "forecast probe stalled before map completion");
+                if fired.contains(&maps_key(jid)) {
+                    break;
+                }
+            }
+            self.committed_ledger(&probe, floor)
+        };
+        let hint =
+            hint_from_placements(&self.jobs[jid].maps, &self.jobs[jid].map_nodes, self.n_hosts);
+        let mut reduces = self.jobs[jid].reduces.clone();
+        for r in &mut reduces {
+            r.src_hint = Some(hint);
+        }
+        let a = self.schedule_batch(&reduces, gate, gate, view);
+        self.engine.load(&a);
+    }
+
+    fn on_job_done(&mut self, jid: usize) {
+        debug_assert!(!self.jobs[jid].done, "job completed twice");
+        self.jobs[jid].done = true;
+        self.active -= 1;
+        let now = self.engine.now();
+        self.try_admit(now);
+    }
+
+    fn try_admit(&mut self, now: Secs) {
+        while let Some(&head) = self.admit_q.front() {
+            if !self.admissible(now) {
+                break;
+            }
+            self.admit_q.pop_front();
+            self.admit(head, now);
+        }
+    }
+
+    fn handle_fired(&mut self, fired: Vec<u64>) {
+        for key in fired {
+            let jid = (key / 3) as usize;
+            match key % 3 {
+                0 => self.on_gate(jid),
+                1 => {} // full-map marker: consumed by forecast probes
+                2 => self.on_job_done(jid),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Play the cluster forward to `t`, servicing every gate/completion
+    /// on the way (engine events at an instant precede control actions
+    /// at the same instant).
+    fn advance(&mut self, t: Secs) {
+        loop {
+            let fired = self.engine.run_until(t);
+            if fired.is_empty() {
+                return;
+            }
+            self.handle_fired(fired);
+        }
+    }
+
+    /// The isolated baseline: the same job alone on the pristine cluster
+    /// at its submission time — the static two-phase pipeline
+    /// (`Coordinator::handle`) against the pre-stream controller and
+    /// flow network.
+    ///
+    /// Keep in sync with `Coordinator::handle_with_records`: this is the
+    /// slowdown denominator, and the sparse stream tests
+    /// (`single_job_stream_is_uncontended`,
+    /// `stream_trace_matches_isolated_for_sparse_arrivals`) pin the
+    /// chain stream == this baseline == `handle` exactly, so a change
+    /// to one side without the other fails them.
+    fn isolated_metrics(&self, jr: &JobRun) -> JobMetrics {
+        let now = jr.submit;
+        let mut init = self.sess.engine_init.clone();
+        for v in &mut init {
+            if *v < now {
+                *v = now;
+            }
+        }
+        let mut ledger_init = vec![Secs::INF; self.n_hosts];
+        for &nd in &self.sess.nodes {
+            ledger_init[nd.0] = init[nd.0];
+        }
+        let mut ctrl = self.pristine_ctrl.clone();
+        let mut sched = self.sess.spec.scheduler.make();
+        let mut ledger = Ledger::with_initial(ledger_init);
+        let schedule = |sched: &mut Box<dyn crate::sched::Scheduler + Send>,
+                        ctrl: &mut Controller,
+                        ledger: &mut Ledger,
+                        tasks: &[TaskSpec],
+                        gate: Secs,
+                        at: Secs|
+         -> Assignment {
+            let mut ctx = SchedCtx {
+                controller: ctrl,
+                namenode: &self.sess.nn,
+                ledger,
+                authorized: self.sess.nodes.clone(),
+                now: at,
+                cost: self.cost,
+                node_speed: self.sess.spec.node_speed.clone(),
+            };
+            sched.schedule(tasks, Some(gate), &mut ctx)
+        };
+
+        // ---- phase 1: maps ----
+        let a = schedule(&mut sched, &mut ctrl, &mut ledger, &jr.maps, now, now);
+        let lr = a.locality_ratio();
+        let mut engine = Engine::new(self.pristine_net.clone(), init.clone());
+        engine.load(&a);
+        let map_records = engine.run();
+
+        // ---- phase 2: reduces at the slowstart gate ----
+        let gate = slowstart_gate(&map_records, jr.slowstart).max(now);
+        let mut all = map_records;
+        if !jr.reduces.is_empty() {
+            let hint = shuffle_majority_node(&all, &jr.maps, self.n_hosts);
+            let mut reduces = jr.reduces.clone();
+            for r in &mut reduces {
+                r.src_hint = Some(hint);
+            }
+            let mut reduce_init = init;
+            for r in &all {
+                if reduce_init[r.node.0] < r.finish {
+                    reduce_init[r.node.0] = r.finish;
+                }
+            }
+            let mut ledger2_init = vec![Secs::INF; self.n_hosts];
+            for &nd in &self.sess.nodes {
+                ledger2_init[nd.0] = reduce_init[nd.0];
+            }
+            let mut ledger2 = Ledger::with_initial(ledger2_init);
+            let a2 = schedule(&mut sched, &mut ctrl, &mut ledger2, &reduces, gate, gate);
+            let mut engine2 = Engine::new(self.pristine_net.clone(), reduce_init);
+            engine2.load(&a2);
+            all.extend(engine2.run());
+        }
+        let mut m = JobMetrics::from_records(&all, now, Some(gate));
+        m.lr = lr;
+        m
+    }
+
+    fn run(mut self, submissions: Vec<Submission>) -> StreamOutcome {
+        for sub in submissions {
+            assert!(sub.at_secs >= 0.0, "submission before t=0");
+            let t = Secs(sub.at_secs);
+            self.advance(t);
+            self.sess.ctrl.gc_calendar_before(t);
+            let jid = self.jobs.len();
+            let jr = self.build(jid, t, sub.body);
+            self.jobs.push(jr);
+            self.try_admit(t); // completions at exactly t may have freed slots
+            if self.admit_q.is_empty() && self.admissible(t) {
+                self.admit(jid, t);
+            } else {
+                self.jobs[jid].queued = true;
+                self.admit_q.push_back(jid);
+            }
+        }
+        // play out the remaining work
+        while self.active > 0 || !self.admit_q.is_empty() {
+            if self.active == 0 {
+                // idle cluster, gated queue: jump to the earliest instant
+                // the slot gate can pass (the k-th smallest availability)
+                let need = self.policy.min_free_slots.clamp(1, self.sess.nodes.len());
+                let mut avail: Vec<Secs> = {
+                    let actual = self.engine.node_free_times();
+                    self.sess.nodes.iter().map(|&nd| actual[nd.0]).collect()
+                };
+                avail.sort();
+                let t = avail[need - 1].max(self.engine.now());
+                let fired = self.engine.run_until(t);
+                self.handle_fired(fired);
+                let before = self.admit_q.len();
+                self.try_admit(t);
+                assert!(self.admit_q.len() < before, "admission gate cannot pass");
+                continue;
+            }
+            let fired = self.engine.run_until(Secs::INF);
+            assert!(!fired.is_empty(), "stream stalled with active jobs");
+            self.handle_fired(fired);
+        }
+        let records = self.engine.run();
+        self.finish(records)
+    }
+
+    fn finish(self, records: Vec<TaskRecord>) -> StreamOutcome {
+        let mut tagged = Vec::with_capacity(records.len());
+        for r in &records {
+            let job = self.engine.job_of(r.task).expect("stream records are job-tagged");
+            tagged.push((job, r.clone()));
+        }
+        let first_submit = self.jobs.iter().map(|j| j.submit).fold(Secs::INF, Secs::min);
+        let last_finish = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+        let mut jobs_out = Vec::with_capacity(self.jobs.len());
+        let (mut jts, mut slowdowns) = (Vec::new(), Vec::new());
+        for (jid, jr) in self.jobs.iter().enumerate() {
+            let job_records: Vec<TaskRecord> = records
+                .iter()
+                .filter(|r| r.task.0 >= jr.base && r.task.0 < jr.base + jr.n_tasks())
+                .cloned()
+                .collect();
+            let gate = jr.gate.unwrap_or(jr.submit);
+            let mut m = JobMetrics::from_records(&job_records, jr.submit, Some(gate));
+            m.lr = jr.lr;
+            let iso = self.isolated_metrics(jr);
+            let slowdown = if iso.jt > 0.0 { m.jt / iso.jt } else { 1.0 };
+            jts.push(m.jt);
+            slowdowns.push(slowdown);
+            jobs_out.push(JobOutcome {
+                job: JobId(jid),
+                name: jr.name.clone(),
+                submitted_at: jr.submit.0,
+                admitted_at: jr.admitted.0,
+                gate: gate.0,
+                queued: jr.queued,
+                metrics: m,
+                isolated_jt: iso.jt,
+                slowdown,
+                tasks: jr.maps.iter().chain(jr.reduces.iter()).cloned().collect(),
+            });
+        }
+        let queued_jobs = self.jobs.iter().filter(|j| j.queued).count();
+        StreamOutcome {
+            jobs: jobs_out,
+            records: tagged,
+            reservations: self.audits,
+            last_finish,
+            makespan: if first_submit.is_finite() { last_finish - first_submit.0 } else { 0.0 },
+            stats: StreamStats::from_jobs(&jts, &slowdowns),
+            queued_jobs,
+        }
+    }
+}
+
+/// Run a job stream on a built session. Submissions must be
+/// time-ordered; the session's controller/namenode/RNG carry the stream
+/// state (a fresh session per stream keeps runs hermetic).
+pub fn run_stream(
+    sess: &mut SimSession,
+    submissions: Vec<Submission>,
+    policy: AdmissionPolicy,
+    cost: &CostModel,
+) -> StreamOutcome {
+    assert!(policy.max_active >= 1, "admission cap must allow at least one active job");
+    for w in submissions.windows(2) {
+        assert!(w[0].at_secs <= w[1].at_secs, "submissions must be time-ordered");
+    }
+    let engine = Engine::new(sess.net.clone(), sess.engine_init.clone());
+    let planned = sess.engine_init.clone();
+    let n_hosts = sess.engine_init.len();
+    let pristine_ctrl = sess.ctrl.clone();
+    let pristine_net = sess.net.clone();
+    StreamDriver {
+        sess,
+        cost,
+        policy,
+        engine,
+        planned,
+        n_hosts,
+        jobs: Vec::new(),
+        active: 0,
+        admit_q: VecDeque::new(),
+        audits: Vec::new(),
+        pristine_ctrl,
+        pristine_net,
+        next_base: 0,
+    }
+    .run(submissions)
+}
+
+impl SimSession {
+    /// [`run_stream`] as a session method.
+    pub fn run_stream(
+        &mut self,
+        submissions: Vec<Submission>,
+        policy: AdmissionPolicy,
+        cost: &CostModel,
+    ) -> StreamOutcome {
+        run_stream(self, submissions, policy, cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
+    use crate::sched::SchedulerKind;
+
+    fn stream_session(kind: SchedulerKind) -> SimSession {
+        let mut s = ScenarioSpec::new(
+            "stream-test",
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 3,
+                edge_mbps: 100.0,
+                uplink_mbps: 100.0,
+            },
+            WorkloadSpec::None,
+        );
+        s.scheduler = kind;
+        s.replication = 3;
+        s.reduces = 2;
+        s.seed = 7;
+        s.initial = InitialLoad::Sampled { max_secs: 0.0 };
+        s.background = BackgroundSpec { flows: 2, rate_mb_s: 2.0 };
+        SimSession::new(&s)
+    }
+
+    fn sort_at(at: f64, mb: f64) -> Submission {
+        Submission {
+            at_secs: at,
+            body: SubmissionBody::Generated { kind: JobKind::Sort, data_mb: mb },
+        }
+    }
+
+    #[test]
+    fn single_job_stream_is_uncontended() {
+        let cost = CostModel::rust_only();
+        let mut sess = stream_session(SchedulerKind::Bass);
+        let out =
+            sess.run_stream(vec![sort_at(5.0, 300.0)], AdmissionPolicy::default(), &cost);
+        assert_eq!(out.jobs.len(), 1);
+        let j = &out.jobs[0];
+        assert!(j.metrics.jt > 0.0);
+        assert!(!j.queued);
+        assert_eq!(j.admitted_at, 5.0);
+        // BASS transfers are calendar-reserved (no shared-net flows), so
+        // a lone job is bitwise its own isolated run
+        assert_eq!(j.slowdown, 1.0, "jt {} vs isolated {}", j.metrics.jt, j.isolated_jt);
+        assert_eq!(out.queued_jobs, 0);
+        // records are tagged and cover the whole job
+        assert_eq!(out.records.len(), j.tasks.len());
+        assert!(out.records.iter().all(|(job, _)| *job == JobId(0)));
+    }
+
+    #[test]
+    fn overlapping_jobs_contend_and_slow_down() {
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+            let mut sess = stream_session(kind);
+            // three sizeable jobs in quick succession: the later ones
+            // must feel the earlier ones' occupancy
+            let subs = vec![sort_at(1.0, 600.0), sort_at(3.0, 600.0), sort_at(5.0, 600.0)];
+            let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+            assert_eq!(out.jobs.len(), 3);
+            assert!(
+                out.stats.mean_slowdown > 1.0,
+                "{}: overlapping jobs should contend (mean slowdown {})",
+                kind.label(),
+                out.stats.mean_slowdown
+            );
+            assert!(out.jobs[2].slowdown >= out.jobs[0].slowdown - 1e-9);
+            // every task of every job completes exactly once
+            let total: usize = out.jobs.iter().map(|j| j.tasks.len()).sum();
+            assert_eq!(out.records.len(), total);
+        }
+    }
+
+    #[test]
+    fn sparse_stream_matches_per_job_isolated_runs() {
+        // gaps far beyond any makespan: every job behaves as if alone
+        let cost = CostModel::rust_only();
+        let mut sess = stream_session(SchedulerKind::Bass);
+        let subs = vec![sort_at(10.0, 300.0), sort_at(5000.0, 150.0), sort_at(10000.0, 300.0)];
+        let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+        for j in &out.jobs {
+            assert_eq!(
+                j.slowdown, 1.0,
+                "job {} jt {} vs isolated {}",
+                j.name, j.metrics.jt, j.isolated_jt
+            );
+        }
+        assert_eq!(out.stats.mean_slowdown, 1.0);
+    }
+
+    #[test]
+    fn admission_cap_queues_fifo() {
+        let cost = CostModel::rust_only();
+        let mut sess = stream_session(SchedulerKind::Bass);
+        let policy = AdmissionPolicy { max_active: 1, min_free_slots: 1 };
+        let subs = vec![sort_at(1.0, 600.0), sort_at(2.0, 300.0), sort_at(3.0, 150.0)];
+        let out = sess.run_stream(subs, policy, &cost);
+        assert_eq!(out.queued_jobs, 2);
+        assert!(out.jobs[1].queued && out.jobs[2].queued);
+        // FIFO: job 1 admitted no later than job 2, both after submit
+        assert!(out.jobs[1].admitted_at > out.jobs[1].submitted_at);
+        assert!(out.jobs[1].admitted_at <= out.jobs[2].admitted_at);
+        // queue wait counts toward completion time
+        assert!(out.jobs[1].metrics.jt > out.jobs[1].isolated_jt);
+    }
+
+    #[test]
+    fn initial_idle_cluster_admits_once_the_gate_passes() {
+        // every node busy past the only arrival: the driver must jump to
+        // the earliest gate-pass instant instead of stalling
+        let cost = CostModel::rust_only();
+        let mut s = ScenarioSpec::new(
+            "busy-start",
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 2,
+                edge_mbps: 100.0,
+                uplink_mbps: 100.0,
+            },
+            WorkloadSpec::None,
+        );
+        s.initial = InitialLoad::Explicit(vec![40.0, 45.0, 50.0, 55.0]);
+        s.seed = 3;
+        let mut sess = SimSession::new(&s);
+        let out = sess.run_stream(
+            vec![sort_at(1.0, 150.0)],
+            AdmissionPolicy { max_active: usize::MAX, min_free_slots: 1 },
+            &cost,
+        );
+        assert_eq!(out.jobs.len(), 1);
+        assert!(out.jobs[0].queued);
+        assert_eq!(out.jobs[0].admitted_at, 40.0, "earliest free node");
+        assert!(out.last_finish > 40.0);
+    }
+
+    #[test]
+    fn streams_are_deterministic() {
+        let cost = CostModel::rust_only();
+        let run = || {
+            let mut sess = stream_session(SchedulerKind::Bar);
+            let spec = StreamSpec {
+                jobs: 5,
+                mean_interarrival_secs: 20.0,
+                sizes_mb: vec![150.0, 300.0],
+                seed: 11,
+                ..StreamSpec::defaults()
+            };
+            let out = sess.run_stream(spec.submissions(), spec.policy(), &cost);
+            (
+                out.last_finish,
+                out.stats.mean_slowdown,
+                out.records.len(),
+                out.jobs.iter().map(|j| j.metrics.jt).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn explicit_map_only_submissions_run() {
+        let cost = CostModel::rust_only();
+        let mut sess = SimSession::new(&ScenarioSpec::example1(SchedulerKind::Bass));
+        let tasks: Vec<TaskSpec> = sess.tasks[..3]
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, mut t)| {
+                t.id = TaskId(i);
+                t
+            })
+            .collect();
+        let sub = Submission {
+            at_secs: 0.0,
+            body: SubmissionBody::Explicit { name: "wave".into(), tasks, slowstart: 1.0 },
+        };
+        let out = sess.run_stream(vec![sub], AdmissionPolicy::default(), &cost);
+        assert_eq!(out.records.len(), 3);
+        assert!(out.jobs[0].metrics.rt == 0.0, "map-only job has no reduce phase");
+        assert!(out.last_finish > 0.0);
+    }
+
+    #[test]
+    fn stream_spec_expands_to_sorted_submissions() {
+        let spec = StreamSpec { jobs: 8, ..StreamSpec::defaults() };
+        let subs = spec.submissions();
+        assert_eq!(subs.len(), 8);
+        for w in subs.windows(2) {
+            assert!(w[0].at_secs < w[1].at_secs);
+        }
+        // same seed, same trace
+        let again = spec.submissions();
+        for (a, b) in subs.iter().zip(&again) {
+            assert_eq!(a.at_secs, b.at_secs);
+        }
+    }
+}

@@ -248,6 +248,33 @@ impl SlotCalendar {
         }
     }
 
+    /// Garbage-collect history: drop every occupancy boundary strictly
+    /// before `slot`, folding the level crossing `slot` into a single
+    /// boundary. Long-lived online streams never release their
+    /// reservations (transfers simply end), so without compaction the
+    /// step functions would grow with every job ever admitted; queries
+    /// at slots `>= slot` are unaffected. Releasing a reservation whose
+    /// window lies before `slot` afterwards is harmless — it only edits
+    /// already-forgotten history.
+    pub fn forget_before(&mut self, slot: usize) {
+        for seg in &mut self.reserved {
+            let first_kept = seg.range(slot..).next().map(|(&k, _)| k);
+            if seg.range(..slot).next().is_none() {
+                continue; // nothing to forget on this link
+            }
+            let lvl = level_at(seg, slot);
+            let old: Vec<usize> = seg.range(..slot).map(|(&k, _)| k).collect();
+            for k in old {
+                seg.remove(&k);
+            }
+            // restore the level in force at `slot` unless a boundary
+            // already sits there or the level is (dust-)zero
+            if first_kept != Some(slot) && lvl.abs() > DUST {
+                seg.insert(slot, lvl);
+            }
+        }
+    }
+
     /// First slot in `[lo, hi)` where any link's residual can't give
     /// `frac` (the window-search violation test).
     fn first_blocked(&self, links: &[LinkId], lo: usize, hi: usize, frac: f64) -> Option<usize> {
@@ -568,6 +595,26 @@ mod tests {
         c.release(&b);
         assert_eq!(c.n_segments(), 0);
         assert_eq!(c.reserved_frac(LinkId(0), 7), 0.0);
+    }
+
+    #[test]
+    fn forget_before_compacts_history_without_touching_the_future() {
+        let mut c = SlotCalendar::new(2, 1.0);
+        c.reserve_path(&[LinkId(0)], 0, 5, 0.5).unwrap(); // fully past
+        c.reserve_path(&[LinkId(0)], 8, 4, 0.25).unwrap(); // spans the cut
+        c.reserve_path(&[LinkId(1)], 20, 2, 1.0).unwrap(); // fully future
+        let before = c.n_segments();
+        c.forget_before(10);
+        assert!(c.n_segments() < before);
+        // future queries unchanged: the spanning level survives at the cut
+        assert!((c.reserved_frac(LinkId(0), 10) - 0.25).abs() < 1e-12);
+        assert_eq!(c.reserved_frac(LinkId(0), 12), 0.0);
+        assert_eq!(c.reserved_frac(LinkId(1), 20), 1.0);
+        assert_eq!(c.find_window(&[LinkId(1)], 10, 2, 1.0), Some(10));
+        // idempotent
+        let n = c.n_segments();
+        c.forget_before(10);
+        assert_eq!(c.n_segments(), n);
     }
 
     // ---- time-varying capacity (dynamics) ----

@@ -89,6 +89,23 @@ impl Controller {
         self.calendar.usable_frac(link)
     }
 
+    /// Usable capacity fraction of every link on a path (audit trail for
+    /// the reservation oracles — `testkit::oracles` re-checks per-slot
+    /// sums against the healths in force at commit time).
+    pub fn path_health(&self, links: &[LinkId]) -> Vec<f64> {
+        links.iter().map(|&l| self.link_health(l)).collect()
+    }
+
+    /// Online streams: compact calendar history before time `t` (see
+    /// [`SlotCalendar::forget_before`]). Stream reservations are never
+    /// released — transfers simply end — so long job streams call this
+    /// at each arrival to keep calendar memory proportional to the
+    /// *live* horizon, not to every job ever admitted.
+    pub fn gc_calendar_before(&mut self, t: Secs) {
+        let slot = self.calendar.slot_of(t);
+        self.calendar.forget_before(slot);
+    }
+
     /// Revalidate a committed transfer after a capacity change: false
     /// when its reservation (plus everything stacked with it) now
     /// oversubscribes a degraded link, i.e. the SDN controller could no

@@ -43,11 +43,25 @@
 //! path. Degrading a link that carries a pending fair-share transfer to
 //! exactly 0 MB/s starves it forever (the quiescence assert fires); the
 //! dynamics compiler clamps degradation factors above zero.
+//!
+//! # Online streams (concurrent multi-job execution)
+//!
+//! The engine is no longer one-shot: [`Engine::run_until`] plays the
+//! cluster forward to a horizon and leaves later events queued, so the
+//! online layer (`scenario::online`) can interleave execution with new
+//! [`Engine::load`] calls as jobs arrive. Tasks from distinct jobs share
+//! the node queues and the flow network — a later job's fair-share pull
+//! re-rates an earlier job's in-flight transfer exactly as same-job
+//! flows do. [`Engine::tag_job`] attributes records to jobs and
+//! [`Engine::watch`] registers completion watches (a job's map wave, a
+//! whole job): `run_until` stops at the batch where a watch fires so the
+//! driver can schedule the dependent phase at that instant. With a
+//! single `load` and no watches, `run` behaves exactly as before.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 
-use crate::mapreduce::TaskId;
+use crate::mapreduce::{JobId, TaskId};
 use crate::sdn::controller::Transfer;
 use crate::sdn::TrafficClass;
 use crate::topology::{LinkId, NodeId};
@@ -157,6 +171,11 @@ enum EvKind {
     FlowCheck(u64),
     /// Index into the engine's injected cluster-event list.
     Cluster(u32),
+    /// A task's finish instant (pure bookkeeping: job completion counts
+    /// and watches tick at *finish* time, while records are created at
+    /// compute start with a future finish). Ignored if the record was
+    /// crash-voided in the meantime.
+    TaskDone(TaskId),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -178,7 +197,10 @@ impl PartialOrd for Ev {
     }
 }
 
-/// The executor.
+/// The executor. `Clone` supports the online layer's forecast probes: a
+/// cloned engine is run ahead to a job's map completion to recover the
+/// actual finish times the static path reads off executed records.
+#[derive(Clone)]
 pub struct Engine {
     pub net: FlowNet,
     now: Secs,
@@ -213,6 +235,28 @@ pub struct Engine {
     orphans: Vec<(u32, Secs)>,
     /// Live injected cross-traffic flows by `FlowStart` key.
     dyn_flows: HashMap<usize, FlowId>,
+    // ---- multi-job stream state (inert for single-job runs) ----
+    /// Task -> owning job (streams attribute records through these tags).
+    job_tags: HashMap<TaskId, JobId>,
+    /// Surviving-record count per tagged job.
+    job_done: HashMap<JobId, usize>,
+    /// Completion watches: key -> watched tasks still unrecorded.
+    watch_left: HashMap<u64, usize>,
+    /// Task -> watch keys counting it.
+    watch_of: HashMap<TaskId, Vec<u64>>,
+    /// Watches that reached zero and have not been handed out yet.
+    fired: Vec<u64>,
+    /// Started-but-unfinished records: task -> expected finish. The
+    /// `TaskDone` event completes the entry; a crash-void drops it (so a
+    /// stale `TaskDone` for the voided attempt is ignored).
+    done_pending: HashMap<TaskId, Secs>,
+    /// Tasks whose finish instant has passed (fed by `TaskDone`; watch
+    /// registration consults it in O(1) per task).
+    finished: HashSet<TaskId>,
+    /// Completion bookkeeping is armed lazily by the first tag/watch, so
+    /// single-job runs pay no `TaskDone` events, no hash traffic, and
+    /// keep a byte-identical event stream.
+    track_done: bool,
 }
 
 impl Engine {
@@ -239,6 +283,14 @@ impl Engine {
             running: vec![None; n],
             orphans: Vec::new(),
             dyn_flows: HashMap::new(),
+            job_tags: HashMap::new(),
+            job_done: HashMap::new(),
+            watch_left: HashMap::new(),
+            watch_of: HashMap::new(),
+            fired: Vec::new(),
+            done_pending: HashMap::new(),
+            finished: HashSet::new(),
+            track_done: false,
         }
     }
 
@@ -282,6 +334,101 @@ impl Engine {
             .collect()
     }
 
+    /// Streams: does the node still hold queued placements or an
+    /// in-flight input transfer? When true, its `node_free_times` entry
+    /// alone understates its commitment (queued work has not touched it
+    /// yet) — the online layer falls back to the planned ledger then.
+    pub fn has_pending(&self, node: NodeId) -> bool {
+        !self.queues[node.0].is_empty() || self.blocked[node.0]
+    }
+
+    /// Arm the completion bookkeeping (first tag/watch): records already
+    /// in flight are backfilled — finished ones into the finished set,
+    /// running ones get their `TaskDone` scheduled — so watches observe
+    /// them correctly. Before this, the engine emits no `TaskDone`
+    /// events at all (the static single-job paths stay byte-identical
+    /// and overhead-free).
+    fn arm_tracking(&mut self) {
+        if self.track_done {
+            return;
+        }
+        self.track_done = true;
+        let recs: Vec<(TaskId, Secs)> =
+            self.records.iter().map(|r| (r.task, r.finish)).collect();
+        for (t, f) in recs {
+            if f <= self.now {
+                self.finished.insert(t);
+            } else {
+                self.done_pending.insert(t, f);
+                self.push(f, EvKind::TaskDone(t));
+            }
+        }
+    }
+
+    /// Streams: tag tasks as belonging to `job`. Tags attribute records
+    /// to jobs (`job_of`) and drive per-job completion counts (finishes
+    /// *after* the first tag/watch; streams tag before loading).
+    pub fn tag_job(&mut self, job: JobId, tasks: impl IntoIterator<Item = TaskId>) {
+        self.arm_tracking();
+        for t in tasks {
+            self.job_tags.insert(t, job);
+        }
+        self.job_done.entry(job).or_insert(0);
+    }
+
+    /// The job a task was tagged with (None = untagged single-job run).
+    pub fn job_of(&self, task: TaskId) -> Option<JobId> {
+        self.job_tags.get(&task).copied()
+    }
+
+    /// Surviving-record count of a tagged job (crash-voided attempts do
+    /// not count).
+    pub fn job_completed(&self, job: JobId) -> usize {
+        self.job_done.get(&job).copied().unwrap_or(0)
+    }
+
+    /// Register a completion watch: [`Engine::run_until`] stops at the
+    /// event batch where every watched task has *finished* and returns
+    /// `key`. Tasks already finished count immediately; a watch that is
+    /// complete at registration fires on the next `run_until`.
+    pub fn watch(&mut self, key: u64, tasks: &[TaskId]) {
+        self.watch_threshold(key, tasks, tasks.len());
+    }
+
+    /// Threshold watch: fires once `need` of `tasks` carry surviving
+    /// records (the reduce-slowstart trigger — the stream layer watches
+    /// `ceil(frac * maps)` of a job's map wave, so the engine clock sits
+    /// exactly at the slowstart gate when the watch fires). `need` is
+    /// clamped to the set size; an already-met threshold fires on the
+    /// next `run_until`.
+    pub fn watch_threshold(&mut self, key: u64, tasks: &[TaskId], need: usize) {
+        self.arm_tracking();
+        let mut left = need.min(tasks.len());
+        for t in tasks {
+            self.watch_of.entry(*t).or_default().push(key);
+            // tasks that already finished count immediately
+            // (started-but-unfinished ones tick at their TaskDone)
+            if self.finished.contains(t) {
+                left = left.saturating_sub(1);
+            }
+        }
+        self.watch_left.insert(key, left);
+        if left == 0 {
+            self.fired.push(key);
+        }
+    }
+
+    /// Watched tasks still unrecorded (None = unknown key).
+    pub fn watch_remaining(&self, key: u64) -> Option<usize> {
+        self.watch_left.get(&key).copied()
+    }
+
+    /// The records produced so far, in completion order (unsorted; the
+    /// online layer reads a finished map wave's records mid-run).
+    pub fn records_so_far(&self) -> &[TaskRecord] {
+        &self.records
+    }
+
     fn push(&mut self, at: Secs, kind: EvKind) {
         self.seq += 1;
         self.events.push(Reverse(Ev { at, seq: self.seq, kind }));
@@ -309,9 +456,19 @@ impl Engine {
         }
     }
 
-    /// Run until quiescent; returns the records (sorted by task id).
-    pub fn run(&mut self) -> Vec<TaskRecord> {
-        while let Some(Reverse(ev)) = self.events.pop() {
+    /// Process every queued event batch with `at <= horizon`, leaving
+    /// later events queued. Stops early — `now` staying at the batch
+    /// instant — as soon as a completion watch fires.
+    fn drain_until(&mut self, horizon: Secs) {
+        loop {
+            if !self.fired.is_empty() {
+                return;
+            }
+            match self.events.peek() {
+                Some(&Reverse(ev)) if ev.at <= horizon => {}
+                _ => return,
+            }
+            let Reverse(ev) = self.events.pop().expect("peeked");
             self.now = self.now.max(ev.at);
             self.net.settle(self.now);
             self.dispatch(ev.kind);
@@ -328,6 +485,33 @@ impl Engine {
                 self.net_dirty = false;
                 self.reschedule_flow_check();
             }
+        }
+    }
+
+    /// Online streams: play the cluster forward to `t`, stopping early
+    /// when a completion watch fires (the returned keys; `now` is then
+    /// the firing instant). An empty return means the horizon was
+    /// reached and `now == t`, so a subsequent [`Engine::load`] lands
+    /// exactly at the horizon.
+    pub fn run_until(&mut self, t: Secs) -> Vec<u64> {
+        assert!(t >= self.now, "run_until going backwards: {t} < {}", self.now);
+        self.drain_until(t);
+        if self.fired.is_empty() {
+            self.now = t;
+            self.net.settle(t);
+        }
+        std::mem::take(&mut self.fired)
+    }
+
+    /// Run until quiescent; returns the records (sorted by task id).
+    /// Watches do not pause this path (they stay queryable afterwards).
+    pub fn run(&mut self) -> Vec<TaskRecord> {
+        loop {
+            self.drain_until(Secs::INF);
+            if self.fired.is_empty() {
+                break;
+            }
+            self.fired.clear();
         }
         assert!(
             self.waiting.is_empty() && self.queues.iter().all(|q| q.is_empty()),
@@ -347,6 +531,7 @@ impl Engine {
                 }
             }
             EvKind::Cluster(i) => self.cluster_event(i as usize),
+            EvKind::TaskDone(t) => self.task_done(t),
         }
     }
 
@@ -391,6 +576,7 @@ impl Engine {
         self.down[j] = true;
         if let Some((pidx, rec)) = self.running[j].take() {
             if self.records[rec].finish > self.now {
+                let voided = self.records[rec].task;
                 let last = self.records.len() - 1;
                 self.records.swap_remove(rec);
                 if rec != last {
@@ -403,6 +589,9 @@ impl Engine {
                     }
                 }
                 self.orphans.push((pidx, self.now));
+                // the voided attempt never finishes: drop its pending
+                // completion so the queued `TaskDone` is ignored
+                self.done_pending.remove(&voided);
             }
         }
         if self.blocked[j] {
@@ -493,10 +682,41 @@ impl Engine {
             is_local: p.is_local,
             is_map: p.is_map,
         };
+        let task = record.task;
         self.node_free[j] = finish;
         self.running[j] = Some((pidx, self.records.len()));
         self.records.push(record);
+        if self.track_done {
+            self.done_pending.insert(task, finish);
+            self.push(finish, EvKind::TaskDone(task));
+        }
         self.push(finish, EvKind::NodeReady(j));
+    }
+
+    /// A task's finish instant: bump its job's completion count and tick
+    /// any watches counting it. Stale events (the record was voided by a
+    /// crash, or the task re-ran with a different finish) are ignored.
+    fn task_done(&mut self, task: TaskId) {
+        if self.done_pending.get(&task) != Some(&self.now) {
+            return;
+        }
+        self.done_pending.remove(&task);
+        self.finished.insert(task);
+        if let Some(&job) = self.job_tags.get(&task) {
+            *self.job_done.entry(job).or_insert(0) += 1;
+        }
+        if let Some(keys) = self.watch_of.get(&task) {
+            for &k in keys {
+                if let Some(left) = self.watch_left.get_mut(&k) {
+                    if *left > 0 {
+                        *left -= 1;
+                        if *left == 0 {
+                            self.fired.push(k);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Handle completed flows: all removals land in one deferred rate
@@ -803,6 +1023,81 @@ mod tests {
         let recs = e.run();
         assert!((recs[0].input_ready.0 - 9.0).abs() < 1e-9);
         assert!((recs[0].finish.0 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_until_interleaves_incremental_loads() {
+        // run_until leaves later events queued; a load at the horizon
+        // queues FIFO behind the in-flight work (the stream model)
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.load(&Assignment { placements: vec![placement(0, 0, 4.0, TransferPlan::None)] });
+        let fired = e.run_until(Secs(2.0));
+        assert!(fired.is_empty());
+        assert_eq!(e.now(), Secs(2.0));
+        // the first task is mid-flight: running, but nothing queued
+        assert!(!e.has_pending(NodeId(0)));
+        e.load(&Assignment { placements: vec![placement(1, 0, 1.0, TransferPlan::None)] });
+        assert!(e.has_pending(NodeId(0)));
+        let recs = e.run();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].finish, Secs(4.0));
+        assert_eq!(recs[1].compute_start, Secs(4.0));
+        assert_eq!(recs[1].finish, Secs(5.0));
+    }
+
+    #[test]
+    fn watches_fire_at_thresholds_and_stop_run_until() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO, Secs::ZERO]);
+        let a = Assignment {
+            placements: vec![
+                placement(0, 0, 2.0, TransferPlan::None),
+                placement(1, 0, 2.0, TransferPlan::None),
+                placement(2, 1, 9.0, TransferPlan::None),
+            ],
+        };
+        let all = [TaskId(0), TaskId(1), TaskId(2)];
+        e.tag_job(JobId(7), all);
+        e.watch_threshold(11, &all, 2);
+        e.watch(12, &all);
+        e.load(&a);
+        // threshold 2 fires at t=4 (tasks 0 and 1 recorded)
+        let fired = e.run_until(Secs(100.0));
+        assert_eq!(fired, vec![11]);
+        assert_eq!(e.now(), Secs(4.0));
+        assert_eq!(e.job_completed(JobId(7)), 2);
+        assert_eq!(e.watch_remaining(12), Some(1));
+        let fired = e.run_until(Secs(100.0));
+        assert_eq!(fired, vec![12]);
+        assert_eq!(e.now(), Secs(9.0));
+        let recs = e.run();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(e.job_of(TaskId(2)), Some(JobId(7)));
+        assert_eq!(e.job_of(TaskId(9)), None);
+    }
+
+    #[test]
+    fn cloned_engine_forecasts_without_disturbing_the_original() {
+        // the online layer's probe: clone, run ahead, read finishes
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.load(&Assignment {
+            placements: vec![
+                placement(0, 0, 3.0, TransferPlan::None),
+                placement(1, 0, 5.0, TransferPlan::None),
+            ],
+        });
+        e.watch(21, &[TaskId(0), TaskId(1)]);
+        assert!(e.run_until(Secs(1.0)).is_empty());
+        let mut probe = e.clone();
+        let fired = probe.run_until(Secs::INF);
+        assert_eq!(fired, vec![21]);
+        assert_eq!(probe.node_free_times()[0], Secs(8.0));
+        // the original is still at t=1 with everything pending
+        assert_eq!(e.now(), Secs(1.0));
+        assert_eq!(e.watch_remaining(21), Some(2));
+        assert_eq!(e.run().len(), 2);
     }
 
     #[test]

@@ -13,11 +13,22 @@
 //!    from the audit log, not read back from the calendar;
 //! 4. the makespan respects the critical-path and total-work lower
 //!    bounds (transfers, downtime and stragglers can only add time).
+//!
+//! And over randomized concurrent job streams (`scenario::online`):
+//!
+//! 5. per-job exactly-once completion (no job loses or duplicates tasks
+//!    to another job sharing the cluster);
+//! 6. no slot double-booking — per node, record occupancy windows
+//!    (pick-up to finish) never overlap, across jobs;
+//! 7. cross-job reservation sums per slot stay within link capacity
+//!    (oracle 3 over the one shared calendar);
+//! 8. the stream makespan respects every job's release-time-plus-
+//!    critical-path bound and the aggregate work bound.
 
 use std::collections::HashMap;
 
 use crate::mapreduce::{TaskId, TaskSpec};
-use crate::scenario::{DynamicsOutcome, ReservationAudit};
+use crate::scenario::{DynamicsOutcome, ReservationAudit, StreamOutcome};
 use crate::sim::TaskRecord;
 use crate::topology::NodeId;
 use crate::util::Secs;
@@ -146,6 +157,114 @@ pub fn makespan_lower_bounds(
     Ok(())
 }
 
+/// Oracle 6: per node, no two records' occupancy windows (pick-up to
+/// finish) overlap — the node FIFO must serialize tasks across jobs.
+pub fn no_slot_double_booking(records: &[TaskRecord]) -> Result<(), String> {
+    let mut per: HashMap<usize, Vec<(Secs, Secs, TaskId)>> = HashMap::new();
+    for r in records {
+        per.entry(r.node.0).or_default().push((r.picked_at, r.finish, r.task));
+    }
+    for (node, v) in &mut per {
+        v.sort_by(|a, b| (a.0, a.2).cmp(&(b.0, b.2)));
+        for w in v.windows(2) {
+            if w[1].0 .0 + EPS < w[0].1 .0 {
+                return Err(format!(
+                    "node {node}: task {:?} picked at {} while task {:?} occupied it until {}",
+                    w[1].2, w[1].0, w[0].2, w[0].1
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 8: the stream's last absolute finish respects (a) each job's
+/// release time plus its critical-path bound, and (b) the earliest
+/// release plus the aggregate best-case work spread over the cluster.
+/// Both relaxations assume zero transfer time and no contention, so the
+/// real stream can only finish later.
+pub fn stream_makespan_lower_bound(
+    jobs: &[(Secs, Vec<TaskSpec>)],
+    last_finish: f64,
+    authorized: &[NodeId],
+    node_speed: &[f64],
+) -> Result<(), String> {
+    if authorized.is_empty() {
+        return Ok(());
+    }
+    let factor = |nd: NodeId| match node_speed.get(nd.0) {
+        Some(&f) if f > 0.0 => f,
+        _ => 1.0,
+    };
+    let min_tp = |t: &TaskSpec| {
+        authorized.iter().map(|&nd| t.compute.0 * factor(nd)).fold(f64::INFINITY, f64::min)
+    };
+    let mut total_work = 0.0f64;
+    let mut min_submit = f64::INFINITY;
+    for (submit, tasks) in jobs {
+        if tasks.is_empty() {
+            continue;
+        }
+        let cp = tasks.iter().map(min_tp).fold(0.0f64, f64::max);
+        if last_finish + EPS < submit.0 + cp {
+            return Err(format!(
+                "stream finish {last_finish:.6} beats release {} + critical path {cp:.6}",
+                submit.0
+            ));
+        }
+        total_work += tasks.iter().map(min_tp).sum::<f64>();
+        min_submit = min_submit.min(submit.0);
+    }
+    if total_work > 0.0 {
+        let bound = min_submit + total_work / authorized.len() as f64;
+        if last_finish + EPS < bound {
+            return Err(format!(
+                "stream finish {last_finish:.6} beats the aggregate work bound {bound:.6}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Oracles 5-8 over one concurrent stream run.
+pub fn check_stream(
+    outcome: &StreamOutcome,
+    authorized: &[NodeId],
+    node_speed: &[f64],
+) -> Result<(), String> {
+    // 5: per-job exactly-once completion over the job-tagged records
+    for j in &outcome.jobs {
+        let ids: Vec<TaskId> = j.tasks.iter().map(|t| t.id).collect();
+        let recs: Vec<TaskRecord> = outcome
+            .records
+            .iter()
+            .filter(|(job, _)| *job == j.job)
+            .map(|(_, r)| r.clone())
+            .collect();
+        tasks_complete_exactly_once(&ids, &recs)
+            .map_err(|e| format!("job {:?} ({}): {e}", j.job, j.name))?;
+    }
+    let total: usize = outcome.jobs.iter().map(|j| j.tasks.len()).sum();
+    if total != outcome.records.len() {
+        return Err(format!(
+            "{} records for {total} submitted tasks across the stream",
+            outcome.records.len()
+        ));
+    }
+    // 6: node FIFO serialization across jobs
+    let plain: Vec<TaskRecord> = outcome.records.iter().map(|(_, r)| r.clone()).collect();
+    no_slot_double_booking(&plain)?;
+    // 7: cross-job per-slot reservation sums on the shared calendar
+    reservations_within_capacity(&outcome.reservations)?;
+    // 8: stream makespan bounds
+    let jobs: Vec<(Secs, Vec<TaskSpec>)> = outcome
+        .jobs
+        .iter()
+        .map(|j| (Secs(j.submitted_at), j.tasks.clone()))
+        .collect();
+    stream_makespan_lower_bound(&jobs, outcome.last_finish, authorized, node_speed)
+}
+
 /// All four oracles over one dynamic run.
 pub fn check_dynamics(
     outcome: &DynamicsOutcome,
@@ -230,6 +349,41 @@ mod tests {
             audit(2, 0, 5, 0.8, 1.0)
         ])
         .is_ok());
+    }
+
+    #[test]
+    fn double_booking_is_flagged() {
+        // serial on one node: fine
+        let ok = vec![rec(0, 0, 0.0, 5.0), rec(1, 0, 5.0, 9.0), rec(2, 1, 1.0, 3.0)];
+        assert!(no_slot_double_booking(&ok).is_ok());
+        // overlapping windows on one node: flagged
+        let bad = vec![rec(0, 0, 0.0, 5.0), rec(1, 0, 4.0, 9.0)];
+        assert!(no_slot_double_booking(&bad).is_err());
+        // same windows on different nodes: fine
+        let split = vec![rec(0, 0, 0.0, 5.0), rec(1, 1, 0.0, 5.0)];
+        assert!(no_slot_double_booking(&split).is_ok());
+        // zero-width record at a boundary: fine
+        let zero = vec![rec(0, 0, 0.0, 5.0), rec(1, 0, 5.0, 5.0), rec(2, 0, 5.0, 8.0)];
+        assert!(no_slot_double_booking(&zero).is_ok());
+    }
+
+    #[test]
+    fn stream_bounds_hold_and_flag_impossible_streams() {
+        use crate::hdfs::BlockId;
+        let wave = |n: usize| -> Vec<TaskSpec> {
+            (0..n).map(|i| TaskSpec::map(i, BlockId(0), 64.0, Secs(10.0), 0.0)).collect()
+        };
+        let nodes = [NodeId(0), NodeId(1)];
+        // two 2-task jobs released at 0 and 100: work bound 20, release
+        // bound 110
+        let jobs = vec![(Secs(0.0), wave(2)), (Secs(100.0), wave(2))];
+        assert!(stream_makespan_lower_bound(&jobs, 110.0, &nodes, &[]).is_ok());
+        // beats the second job's release + critical path
+        assert!(stream_makespan_lower_bound(&jobs, 105.0, &nodes, &[]).is_err());
+        // beats the aggregate work bound: 4 x 10s on 2 nodes from t=0
+        let burst = vec![(Secs(0.0), wave(2)), (Secs(0.0), wave(2))];
+        assert!(stream_makespan_lower_bound(&burst, 15.0, &nodes, &[]).is_err());
+        assert!(stream_makespan_lower_bound(&burst, 20.0, &nodes, &[]).is_ok());
     }
 
     #[test]

@@ -108,7 +108,7 @@ fn coordinator_trace_all_schedulers() {
         let arrivals = TraceGen { mean_interarrival_secs: 200.0, sizes_mb: vec![150.0] }
             .generate(3, &mut rng);
         let coord = Coordinator::new(ClusterSetup::default(), kind, CostModel::rust_only());
-        let results = coord.run_trace(arrivals);
+        let results = coord.run_trace(arrivals).expect("no submissions lost");
         assert_eq!(results.len(), 3, "{}", kind.label());
         assert!(results.iter().all(|r| r.metrics.jt > 0.0));
     }

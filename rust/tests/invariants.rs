@@ -6,10 +6,17 @@
 //! `BASS_BENCH_QUICK=1` shrinks the case count for CI smoke runs; every
 //! failure replays exactly from the printed (seed, case) pair.
 
+//! The second half drives the same idea through the **concurrent
+//! stream** layer (`scenario::online`): random Poisson job storms with
+//! admission caps, for HDS/BAR/BASS, checked against the concurrency
+//! oracles — per-job exactly-once completion, no slot double-booking
+//! across jobs, cross-job reservation sums within capacity, and the
+//! stream makespan lower bounds.
+
 use bass::runtime::CostModel;
 use bass::scenario::{
-    BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, SimSession, TopologyShape,
-    WorkloadSpec,
+    BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, SimSession, StreamSpec,
+    TopologyShape, WorkloadSpec,
 };
 use bass::sched::SchedulerKind;
 use bass::testkit::{forall, oracles};
@@ -126,6 +133,158 @@ fn oracles_hold_on_the_static_degenerate_case() {
         }
         Ok(())
     });
+}
+
+// ---- concurrent multi-job streams ----
+
+#[derive(Debug)]
+struct StreamCase {
+    spec_seed: u64,
+    switches: usize,
+    hosts_per_switch: usize,
+    jobs: usize,
+    mean_gap: f64,
+    max_active: usize,
+    min_free_slots: usize,
+    trace_seed: u64,
+}
+
+fn gen_stream_case(r: &mut XorShift) -> StreamCase {
+    StreamCase {
+        spec_seed: r.next_u64(),
+        switches: 2 + r.below(2),        // 2..=3
+        hosts_per_switch: 2 + r.below(2), // 2..=3
+        jobs: 3 + r.below(5),            // 3..=7
+        mean_gap: 5.0 + r.uniform(0.0, 40.0),
+        max_active: 1 + r.below(4),      // exercises FIFO queueing
+        min_free_slots: r.below(3),      // exercises the slot gate
+        trace_seed: r.next_u64(),
+    }
+}
+
+fn stream_case_spec(case: &StreamCase, kind: SchedulerKind) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        "stream-invariant-case",
+        TopologyShape::Tree {
+            switches: case.switches,
+            hosts_per_switch: case.hosts_per_switch,
+            edge_mbps: 100.0,
+            uplink_mbps: 400.0,
+        },
+        WorkloadSpec::None,
+    );
+    s.scheduler = kind;
+    s.replication = 2;
+    s.reduces = 2;
+    s.seed = case.spec_seed;
+    s.initial = InitialLoad::Sampled { max_secs: 10.0 };
+    s.background = BackgroundSpec { flows: 2, rate_mb_s: 2.0 };
+    s
+}
+
+fn stream_spec_for(case: &StreamCase) -> StreamSpec {
+    StreamSpec {
+        jobs: case.jobs,
+        mean_interarrival_secs: case.mean_gap,
+        sizes_mb: vec![150.0, 300.0],
+        max_active: case.max_active,
+        min_free_slots: case.min_free_slots,
+        seed: case.trace_seed,
+    }
+}
+
+#[test]
+fn stream_oracles_hold_for_all_schedulers_under_random_arrival_storms() {
+    let cost = CostModel::rust_only();
+    forall(0x57E4A1, iters(12), gen_stream_case, |case| {
+        let spec = stream_spec_for(case);
+        for kind in ALL {
+            let mut sess = SimSession::new(&stream_case_spec(case, kind));
+            let out = sess.run_stream(spec.submissions(), spec.policy(), &cost);
+            oracles::check_stream(&out, &sess.nodes, &sess.spec.node_speed)
+                .map_err(|e| format!("{}: {e}", kind.label()))?;
+            if out.jobs.len() != case.jobs {
+                return Err(format!(
+                    "{}: {} of {} jobs completed",
+                    kind.label(),
+                    out.jobs.len(),
+                    case.jobs
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_streams_never_slow_jobs_down() {
+    // inter-arrival gaps deterministically beyond any makespan: jobs
+    // cannot contend, so the oracles hold and no job runs slower than
+    // its isolated self
+    use bass::scenario::{AdmissionPolicy, Submission, SubmissionBody};
+    use bass::workload::JobKind;
+    let cost = CostModel::rust_only();
+    forall(0x5A4553, iters(6), gen_stream_case, |case| {
+        let subs: Vec<Submission> = (0..case.jobs)
+            .map(|i| Submission {
+                at_secs: 10.0 + i as f64 * 50_000.0,
+                body: SubmissionBody::Generated {
+                    kind: if i % 2 == 0 { JobKind::Sort } else { JobKind::Wordcount },
+                    data_mb: if i % 3 == 0 { 300.0 } else { 150.0 },
+                },
+            })
+            .collect();
+        for kind in ALL {
+            let mut sess = SimSession::new(&stream_case_spec(case, kind));
+            let out = sess.run_stream(subs.clone(), AdmissionPolicy::default(), &cost);
+            oracles::check_stream(&out, &sess.nodes, &sess.spec.node_speed)
+                .map_err(|e| format!("{}: {e}", kind.label()))?;
+            if out.queued_jobs != 0 {
+                return Err(format!("{}: sparse stream queued jobs", kind.label()));
+            }
+            for j in &out.jobs {
+                if j.slowdown < 1.0 - 1e-9 {
+                    return Err(format!(
+                        "{}: job {} ran faster than its isolated self ({})",
+                        kind.label(),
+                        j.name,
+                        j.slowdown
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deterministic_burst_contends_and_satisfies_the_oracles() {
+    // a fixed storm: all arrivals within seconds, an admission cap of 2
+    let cost = CostModel::rust_only();
+    let case = StreamCase {
+        spec_seed: 2014,
+        switches: 2,
+        hosts_per_switch: 3,
+        jobs: 6,
+        mean_gap: 3.0,
+        max_active: 2,
+        min_free_slots: 1,
+        trace_seed: 7,
+    };
+    let spec = stream_spec_for(&case);
+    for kind in ALL {
+        let mut sess = SimSession::new(&stream_case_spec(&case, kind));
+        let out = sess.run_stream(spec.submissions(), spec.policy(), &cost);
+        oracles::check_stream(&out, &sess.nodes, &sess.spec.node_speed)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        assert!(
+            out.stats.mean_slowdown > 1.0,
+            "{}: a storm must contend (mean slowdown {})",
+            kind.label(),
+            out.stats.mean_slowdown
+        );
+        assert!(out.queued_jobs > 0, "{}: the admission cap must bite", kind.label());
+    }
 }
 
 #[test]

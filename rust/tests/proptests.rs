@@ -1961,3 +1961,344 @@ fn prop_bass_matches_reference() {
         Ok(())
     });
 }
+
+// ---- online stream vs the static single-job path (differential pins) ----
+//
+// The concurrent stream (`scenario::online`) must degenerate to the
+// existing static path bit-for-bit when jobs cannot overlap: a 1-job
+// stream, and an N-job stream whose inter-arrival gaps exceed every
+// job's makespan, are pinned against the sequential run-to-completion
+// reference. Two pins cover the two equivalence domains (see the
+// `scenario::online` module docs):
+//
+// * explicit jobs at `slowstart = 1.0` — the shared-engine and
+//   phase-split models provably coincide for every scheduler, so HDS,
+//   BAR and BASS are all pinned at full record granularity;
+// * generated Wordcount/Sort jobs at the default slowstart through the
+//   real `Coordinator::handle` path — BASS's transfers are
+//   calendar-reserved (they never touch the shared flow network), so
+//   the pin holds there at the default gate too.
+
+use bass::coordinator::{ClusterSetup, Coordinator, JobRequest};
+use bass::mapreduce::TaskId;
+use bass::scenario::{
+    shuffle_majority_node, slowstart_gate, AdmissionPolicy, BackgroundSpec, InitialLoad,
+    ScenarioSpec, SimSession, Submission, SubmissionBody, TopologyShape, WorkloadSpec,
+};
+use bass::sched::SchedulerKind;
+use bass::sim::TaskRecord;
+use bass::workload::{JobArrival, JobKind};
+
+#[derive(Debug, Clone)]
+struct PinShape {
+    maps: usize,
+    reduces: usize,
+    map_secs: f64,
+    out_mb: f64,
+    red_secs: f64,
+}
+
+#[derive(Debug)]
+struct ExplicitPinCase {
+    cluster_seed: u64,
+    layout_seed: u64,
+    switches: usize,
+    per_switch: usize,
+    shapes: Vec<PinShape>,
+}
+
+fn gen_explicit_pin_case(r: &mut XorShift) -> ExplicitPinCase {
+    let n_jobs = 1 + r.below(3);
+    ExplicitPinCase {
+        cluster_seed: r.next_u64(),
+        layout_seed: r.next_u64(),
+        switches: 2 + r.below(2),
+        per_switch: 2 + r.below(2),
+        shapes: (0..n_jobs)
+            .map(|_| PinShape {
+                maps: 1 + r.below(6),
+                reduces: r.below(3),
+                map_secs: 4.0 + r.uniform(0.0, 18.0),
+                out_mb: r.uniform(0.0, 24.0),
+                red_secs: 3.0 + r.uniform(0.0, 15.0),
+            })
+            .collect(),
+    }
+}
+
+fn pin_cluster_spec(case: &ExplicitPinCase, kind: SchedulerKind) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        "stream-pin",
+        TopologyShape::Tree {
+            switches: case.switches,
+            hosts_per_switch: case.per_switch,
+            edge_mbps: 100.0,
+            uplink_mbps: 100.0,
+        },
+        WorkloadSpec::None,
+    );
+    s.scheduler = kind;
+    s.seed = case.cluster_seed;
+    s.initial = InitialLoad::Sampled { max_secs: 8.0 };
+    s.background = BackgroundSpec { flows: 2, rate_mb_s: 2.0 };
+    s
+}
+
+/// Place the case's blocks into a fresh session's namenode and build the
+/// explicit task sets. Called once per session with its own RNG, so the
+/// static and stream sides see byte-identical layouts.
+fn build_explicit_jobs(
+    sess: &mut SimSession,
+    case: &ExplicitPinCase,
+) -> Vec<(f64, Vec<TaskSpec>)> {
+    let mut rng = XorShift::new(case.layout_seed);
+    case.shapes
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            let blocks = PlacementPolicy::RandomDistinct.place(
+                &mut sess.nn,
+                &sess.nodes,
+                sh.maps,
+                BLOCK_MB,
+                2.min(sess.nodes.len()),
+                &mut rng,
+            );
+            let mut tasks: Vec<TaskSpec> = blocks
+                .iter()
+                .enumerate()
+                .map(|(j, &b)| TaskSpec::map(j, b, BLOCK_MB, Secs(sh.map_secs), sh.out_mb))
+                .collect();
+            let shuffle = sh.out_mb * sh.maps as f64;
+            for q in 0..sh.reduces {
+                tasks.push(TaskSpec::reduce(
+                    sh.maps + q,
+                    shuffle / sh.reduces as f64,
+                    Secs(sh.red_secs),
+                ));
+            }
+            // inter-arrival gaps far beyond any possible makespan
+            (10.0 + i as f64 * 50_000.0, tasks)
+        })
+        .collect()
+}
+
+/// The static sequential reference: `Coordinator::handle` semantics
+/// (carried node availability, fresh ledger and pristine-net engine per
+/// phase, jobs run to completion in arrival order) at `slowstart = 1.0`
+/// over explicit task sets.
+fn static_chain(case: &ExplicitPinCase, kind: SchedulerKind) -> Vec<Vec<TaskRecord>> {
+    let cost = CostModel::rust_only();
+    let mut sess = SimSession::new(&pin_cluster_spec(case, kind));
+    let jobs = build_explicit_jobs(&mut sess, case);
+    let n_hosts = sess.engine_init.len();
+    let mut node_free = sess.engine_init.clone();
+    let mut out = Vec::new();
+    for (at, tasks) in jobs {
+        let at = Secs(at);
+        let init: Vec<Secs> = node_free.iter().map(|&f| f.max(at)).collect();
+        let maps: Vec<TaskSpec> = tasks.iter().filter(|t| t.is_map()).cloned().collect();
+        let mut reduces: Vec<TaskSpec> =
+            tasks.iter().filter(|t| !t.is_map()).cloned().collect();
+        let mut ledger_init = vec![Secs::INF; n_hosts];
+        for &nd in &sess.nodes {
+            ledger_init[nd.0] = init[nd.0];
+        }
+        sess.ledger = Ledger::with_initial(ledger_init);
+        let a = sess.schedule(&maps, Some(at), at, &cost);
+        let mut engine = Engine::new(sess.net.clone(), init.clone());
+        engine.load(&a);
+        let map_records = engine.run();
+        let gate = slowstart_gate(&map_records, 1.0).max(at);
+        let hint = shuffle_majority_node(&map_records, &maps, n_hosts);
+        for r in &mut reduces {
+            r.src_hint = Some(hint);
+        }
+        let mut all = map_records;
+        if !reduces.is_empty() {
+            let mut reduce_init = init;
+            for r in &all {
+                if reduce_init[r.node.0] < r.finish {
+                    reduce_init[r.node.0] = r.finish;
+                }
+            }
+            let mut l2 = vec![Secs::INF; n_hosts];
+            for &nd in &sess.nodes {
+                l2[nd.0] = reduce_init[nd.0];
+            }
+            sess.ledger = Ledger::with_initial(l2);
+            let a2 = sess.schedule(&reduces, Some(gate), gate, &cost);
+            let mut e2 = Engine::new(sess.net.clone(), reduce_init);
+            e2.load(&a2);
+            all.extend(e2.run());
+        }
+        for r in &all {
+            if node_free[r.node.0] < r.finish {
+                node_free[r.node.0] = r.finish;
+            }
+        }
+        out.push(all);
+    }
+    out
+}
+
+/// The same jobs through the online stream, split back per job with the
+/// stream-global id offsets removed.
+fn stream_chain(case: &ExplicitPinCase, kind: SchedulerKind) -> Vec<Vec<TaskRecord>> {
+    let cost = CostModel::rust_only();
+    let mut sess = SimSession::new(&pin_cluster_spec(case, kind));
+    let jobs = build_explicit_jobs(&mut sess, case);
+    let mut base = Vec::with_capacity(jobs.len());
+    let mut acc = 0usize;
+    for (_, tasks) in &jobs {
+        base.push(acc);
+        acc += tasks.len();
+    }
+    let subs: Vec<Submission> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, (at, tasks))| Submission {
+            at_secs: *at,
+            body: SubmissionBody::Explicit {
+                name: format!("pin-{i}"),
+                tasks: tasks.clone(),
+                slowstart: 1.0,
+            },
+        })
+        .collect();
+    let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+    let mut per: Vec<Vec<TaskRecord>> = vec![Vec::new(); jobs.len()];
+    for (job, r) in &out.records {
+        let mut r = r.clone();
+        r.task = TaskId(r.task.0 - base[job.0]);
+        per[job.0].push(r);
+    }
+    per
+}
+
+fn records_equal(want: &[TaskRecord], got: &[TaskRecord]) -> Result<(), String> {
+    if want.len() != got.len() {
+        return Err(format!("{} records vs {}", want.len(), got.len()));
+    }
+    for (w, g) in want.iter().zip(got) {
+        if w.task != g.task
+            || w.node != g.node
+            || w.picked_at != g.picked_at
+            || w.input_ready != g.input_ready
+            || w.compute_start != g.compute_start
+            || w.finish != g.finish
+            || w.is_local != g.is_local
+            || w.is_map != g.is_map
+        {
+            return Err(format!("record diverged:\n  want {w:?}\n  got  {g:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// 1-job and sparse N-job streams are bit-identical to the static
+/// sequential path, for HDS, BAR and BASS, at full record granularity.
+#[test]
+fn prop_sparse_stream_matches_static_path_all_schedulers() {
+    let iters = match std::env::var("BASS_BENCH_QUICK") {
+        Ok(_) => 4,
+        Err(_) => 14,
+    };
+    forall(0x051_1EA4, iters, gen_explicit_pin_case, |case| {
+        for kind in [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass] {
+            let want = static_chain(case, kind);
+            let got = stream_chain(case, kind);
+            if want.len() != got.len() {
+                return Err(format!("{}: job counts differ", kind.label()));
+            }
+            for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+                records_equal(w, g)
+                    .map_err(|e| format!("{} job {j}: {e}", kind.label()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct CoordPinCase {
+    cluster_seed: u64,
+    jobs: Vec<(bool, f64)>,
+}
+
+fn gen_coord_pin_case(r: &mut XorShift) -> CoordPinCase {
+    let n = 1 + r.below(3);
+    CoordPinCase {
+        cluster_seed: 1 + r.next_u64() % 100_000,
+        jobs: (0..n).map(|_| (r.chance(0.5), [150.0, 300.0][r.below(2)])).collect(),
+    }
+}
+
+/// The real coordinator path: sparse generated Wordcount/Sort traces
+/// through `run_trace` (online) match `handle` (static) bit-for-bit for
+/// BASS — reserved transfers never touch the shared flow network, so
+/// the equivalence holds at the default slowstart too.
+#[test]
+fn prop_sparse_coordinator_stream_matches_handle_bass() {
+    let iters = match std::env::var("BASS_BENCH_QUICK") {
+        Ok(_) => 3,
+        Err(_) => 10,
+    };
+    forall(0xC00D, iters, gen_coord_pin_case, |case| {
+        let setup = ClusterSetup { seed: case.cluster_seed, ..ClusterSetup::default() };
+        let arrivals: Vec<JobArrival> = case
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, &(sort, mb))| JobArrival {
+                at_secs: 5.0 + i as f64 * 50_000.0,
+                kind: if sort { JobKind::Sort } else { JobKind::Wordcount },
+                data_mb: mb,
+            })
+            .collect();
+        // static reference: the existing sequential handle path
+        let mut coord =
+            Coordinator::new(setup.clone(), SchedulerKind::Bass, CostModel::rust_only());
+        let want: Vec<_> = arrivals
+            .iter()
+            .enumerate()
+            .map(|(id, a)| coord.handle_with_records(&JobRequest { arrival: a.clone(), id }))
+            .collect();
+        // online stream over the identical trace
+        let out = Coordinator::new(setup, SchedulerKind::Bass, CostModel::rust_only())
+            .run_stream(arrivals)
+            .map_err(|e| e.to_string())?;
+        if out.jobs.len() != want.len() {
+            return Err("job counts differ".into());
+        }
+        let mut bases = Vec::with_capacity(want.len());
+        let mut acc = 0usize;
+        for (_, recs) in &want {
+            bases.push(acc);
+            acc += recs.len();
+        }
+        for (j, ((want_res, want_recs), got)) in want.iter().zip(&out.jobs).enumerate() {
+            if want_res.metrics != got.metrics {
+                return Err(format!(
+                    "job {j}: metrics diverged {:?} vs {:?}",
+                    want_res.metrics, got.metrics
+                ));
+            }
+            if want_res.submitted_at != got.submitted_at {
+                return Err(format!("job {j}: submit times diverged"));
+            }
+            let got_recs: Vec<TaskRecord> = out
+                .records
+                .iter()
+                .filter(|(job, _)| job.0 == j)
+                .map(|(_, r)| {
+                    let mut r = r.clone();
+                    r.task = TaskId(r.task.0 - bases[j]);
+                    r
+                })
+                .collect();
+            records_equal(want_recs, &got_recs).map_err(|e| format!("job {j}: {e}"))?;
+        }
+        Ok(())
+    });
+}
