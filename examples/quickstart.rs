@@ -42,6 +42,8 @@ fn main() -> anyhow::Result<()> {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         bass.schedule(&maps, None, &mut ctx)
     };

@@ -24,6 +24,8 @@ fn main() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             s.schedule(&fx.tasks, None, &mut ctx)
         });

@@ -30,8 +30,8 @@ fn big_cluster(
     let ctrl = Controller::new(topo, 1.0);
     let mut nn = Namenode::new();
     let mut rng = XorShift::new(7);
-    let blocks =
-        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes, m_tasks, BLOCK_MB, 3, &mut rng);
+    let blocks = PlacementPolicy::RandomDistinct
+        .place(&mut nn, &nodes, &[], m_tasks, BLOCK_MB, 3, &mut rng);
     let tasks = blocks
         .iter()
         .enumerate()
@@ -113,6 +113,8 @@ fn main() {
                     now: Secs::ZERO,
                     cost: &cost,
                     node_speed: Vec::new(),
+                    down: Vec::new(),
+                    bw_aware_sources: true,
                 };
                 if which == "bass" {
                     Bass::new().schedule(&tasks, None, &mut ctx)

@@ -5,8 +5,8 @@ use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep, StreamRun};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
-    run_example1, run_example3, run_fig5, run_scale, run_scale_fat, run_stream_sweep_with,
-    run_table1, SchedulerKind, StreamPoint, Table1Config,
+    run_example1, run_example3, run_fig5, run_scale, run_scale_fat, run_skew,
+    run_stream_sweep_with, run_table1, SchedulerKind, StreamPoint, Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
@@ -36,6 +36,10 @@ COMMANDS:
          [--jobs N]     Poisson arrival stream at each mean gap g seconds
                         (default 120,30,10); overlapping jobs share slots,
                         the SDN calendar and the flow network
+  skew [--reps r1,r2]   Replication/skew sweep: HDS/BAR/BASS (and BASS under
+                        the legacy idle-only source rule) across placement
+                        policies (random, rack_aware, hotspot) at each
+                        dfs.replication factor (default 1,2,3)
   scenario --config F   Run a user-defined scenario sweep from a TOML file
   run --config F        Run the experiment described by a TOML file
   help                  Show this message
@@ -54,6 +58,9 @@ DEFINE YOUR OWN SCENARIO:
     [cluster]  topology = \"tree\"|\"fig2\", switches, hosts_per_switch,
                link_mbps, uplink_mbps, replication,
                placement = \"random\"|\"round_robin\"
+    [hdfs]     replication, placement = \"random\"|\"round_robin\"|
+               \"rack_aware\"|\"hotspot\" (hotspot_nodes, hotspot_bias),
+               selection = \"bandwidth\"|\"min_idle\" (replica source rule)
     [sdn]      slot_secs, qos = \"example3\"|\"shared\"
     [background] flows, rate_mb_s, max_initial_idle
     [sweep]    sizes_mb = [..], schedulers = \"bass, bar, hds\",
@@ -219,20 +226,68 @@ pub fn run(args: Vec<String>) -> i32 {
             let threads = opt_threads(&args);
             println!("== dynamics churn sweep ({} levels, {threads} threads) ==", levels.len());
             println!(
-                "{:<7} {:<5} {:>10} {:>8} {:>9} {:>7} {:>10}",
-                "churn", "sched", "makespan", "LR", "reassign", "rounds", "completed"
+                "{:<7} {:<5} {:>10} {:>8} {:>9} {:>7} {:>7} {:>8} {:>10}",
+                "churn", "sched", "makespan", "LR", "reassign", "rounds", "defer", "underrep",
+                "completed"
             );
             for p in run_dynamics(&levels, &CostModel::rust_only(), threads) {
                 println!(
-                    "{:<7.2} {:<5} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7}/{}",
+                    "{:<7.2} {:<5} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7} {:>8} {:>7}/{}",
                     p.churn,
                     p.scheduler,
                     p.makespan,
                     p.locality * 100.0,
                     p.reassignments,
                     p.rounds,
+                    p.deferrals,
+                    p.under_replicated_peak,
                     p.completed,
                     p.tasks
+                );
+            }
+            0
+        }
+        "skew" => {
+            let reps: Vec<usize> = match opt(&args, "--reps") {
+                None => vec![1, 2, 3],
+                Some(raw) => {
+                    // same contract as the [hdfs] table: a typo'd factor
+                    // must error, not silently run a different sweep
+                    let wanted = raw.split(',').filter(|s| !s.trim().is_empty()).count();
+                    let v: Vec<usize> = raw
+                        .split(',')
+                        .filter_map(|x| x.trim().parse().ok())
+                        .filter(|&r| r >= 1 && r <= crate::experiments::skew::SKEW_NODES)
+                        .collect();
+                    if v.is_empty() || v.len() != wanted {
+                        eprintln!(
+                            "--reps must be a comma list of replication factors in [1, {}] \
+                             (the sweep's cluster size), got {raw:?}",
+                            crate::experiments::skew::SKEW_NODES
+                        );
+                        return 2;
+                    }
+                    v
+                }
+            };
+            let threads = opt_threads(&args);
+            println!(
+                "== replication/skew sweep ({} factors x 3 placements, {threads} threads) ==",
+                reps.len()
+            );
+            println!(
+                "{:<4} {:<12} {:<10} {:>10} {:>8} {:>8}",
+                "rep", "placement", "sched", "makespan", "LR", "remote"
+            );
+            for p in run_skew(&reps, &CostModel::rust_only(), threads) {
+                println!(
+                    "{:<4} {:<12} {:<10} {:>9.1}s {:>7.1}% {:>8}",
+                    p.replication,
+                    p.placement,
+                    p.scheduler,
+                    p.makespan,
+                    p.locality * 100.0,
+                    p.remote_pulls
                 );
             }
             0
@@ -369,18 +424,21 @@ fn run_scenario(sweep: &ScenarioSweep, path: &str, args: &[String], cost: &CostM
     if sweep.base.dynamics.is_some() {
         // churn route: each cell's map wave plays the [dynamics] timeline
         println!(
-            "{:<10} {:>9} {:>10} {:>8} {:>9} {:>7} {:>10}",
-            "scheduler", "size(MB)", "makespan", "LR", "reassign", "rounds", "completed"
+            "{:<10} {:>9} {:>10} {:>8} {:>9} {:>7} {:>7} {:>8} {:>10}",
+            "scheduler", "size(MB)", "makespan", "LR", "reassign", "rounds", "defer",
+            "underrep", "completed"
         );
         for r in run_dynamic_grid(sweep.points(), threads, cost) {
             println!(
-                "{:<10} {:>9.0} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7}/{}",
+                "{:<10} {:>9.0} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7} {:>8} {:>7}/{}",
                 r.scheduler,
                 r.data_mb,
                 r.makespan,
                 r.locality * 100.0,
                 r.reassignments,
                 r.rounds,
+                r.deferrals,
+                r.under_replicated_peak,
                 r.completed,
                 r.tasks
             );
@@ -510,6 +568,18 @@ mod tests {
     #[test]
     fn dynamics_subcommand_runs() {
         assert_eq!(run(vec!["dynamics".into(), "--levels".into(), "0,0.5".into()]), 0);
+    }
+
+    #[test]
+    fn skew_subcommand_runs_and_rejects_bad_reps() {
+        let args: Vec<String> =
+            ["skew", "--reps", "1", "--threads", "2"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(run(args), 0);
+        for bad in ["0", "abc", "2,oops", "32"] {
+            let args: Vec<String> =
+                ["skew", "--reps", bad].iter().map(|s| s.to_string()).collect();
+            assert_eq!(run(args), 2, "--reps {bad}");
+        }
     }
 
     #[test]

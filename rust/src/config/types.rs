@@ -118,6 +118,11 @@ impl ScenarioSweep {
             Some("random") | Some("random_distinct") | None => PlacementPolicy::RandomDistinct,
             Some(other) => anyhow::bail!("unknown cluster.placement {other:?}"),
         };
+        // the [hdfs] table (strict) overrides the legacy cluster.* keys
+        if t.keys().any(|k| k.starts_with("hdfs.")) {
+            let h = parse_hdfs(t)?;
+            h.apply(&mut base);
+        }
         if let Some(v) = t.get("sdn.slot_secs").and_then(|v| v.as_f64()) {
             anyhow::ensure!(v > 0.0, "sdn.slot_secs must be positive");
             base.slot_secs = v;
@@ -208,8 +213,9 @@ impl ExperimentConfig {
         let mut cfg = Table1Config::paper(kind);
         apply_table1(&mut cfg, &t);
         let mut scenario = None;
-        // strict parse whenever the table exists: a `[stream]` typo must
-        // not silently run a different stream than the user wrote down
+        // strict parse whenever the table exists: a `[stream]` / `[hdfs]`
+        // typo must not silently run a different setup than the user
+        // wrote down
         let stream = if t.keys().any(|k| k.starts_with("stream.")) {
             Some(parse_stream(&t)?)
         } else {
@@ -234,6 +240,30 @@ impl ExperimentConfig {
             "stream" => RunConfig::Stream,
             _ => RunConfig::Example1,
         };
+        // the [hdfs] table may only appear where its knobs are actually
+        // honored: scenario runs take everything, table1 takes the
+        // replication factor; anywhere else a key would be validated and
+        // then silently dropped — exactly the divergence the strict
+        // tables exist to prevent, so it errors instead
+        if t.keys().any(|k| k.starts_with("hdfs.")) {
+            let h = parse_hdfs(&t)?;
+            match run {
+                RunConfig::Scenario => {} // applied by ScenarioSweep::from_table
+                RunConfig::Table1 { .. } => {
+                    anyhow::ensure!(
+                        h.placement.is_none() && h.bw_aware_sources.is_none(),
+                        "[hdfs] placement/selection apply to scenario runs only \
+                         (table1 honors hdfs.replication)"
+                    );
+                    if let Some(r) = h.replication {
+                        cfg.replication = r;
+                    }
+                }
+                ref other => anyhow::bail!(
+                    "[hdfs] applies to scenario/table1 runs; {other:?} would ignore it"
+                ),
+            }
+        }
         let mut stream = match (&run, stream) {
             // a bare `run = "stream"` gets the default sweep
             (RunConfig::Stream, None) => Some(StreamRun::default()),
@@ -246,6 +276,102 @@ impl ExperimentConfig {
         }
         Ok(Self { run, table1: cfg, scenario, stream })
     }
+}
+
+/// Parsed `[hdfs]` table: the data-layer knobs a scenario applies on top
+/// of its defaults.
+#[derive(Debug, Clone)]
+struct HdfsTable {
+    replication: Option<usize>,
+    placement: Option<PlacementPolicy>,
+    bw_aware_sources: Option<bool>,
+}
+
+impl HdfsTable {
+    fn apply(&self, base: &mut ScenarioSpec) {
+        if let Some(r) = self.replication {
+            base.replication = r;
+        }
+        if let Some(p) = &self.placement {
+            base.placement = p.clone();
+        }
+        if let Some(b) = self.bw_aware_sources {
+            base.bw_aware_sources = b;
+        }
+    }
+}
+
+/// Parse an `[hdfs]` table, rejecting unknown keys and unsafe shapes
+/// (mirrors the `[dynamics]`/`[stream]` contract: a typo'd knob must
+/// error, not silently run a different data layer).
+fn parse_hdfs(t: &Table) -> anyhow::Result<HdfsTable> {
+    const KNOWN: [&str; 5] = [
+        "hdfs.replication",
+        "hdfs.placement",
+        "hdfs.selection",
+        "hdfs.hotspot_nodes",
+        "hdfs.hotspot_bias",
+    ];
+    for k in t.keys().filter(|k| k.starts_with("hdfs.")) {
+        anyhow::ensure!(
+            k == "hdfs." || KNOWN.contains(&k.as_str()),
+            "unknown [hdfs] key {k:?}"
+        );
+    }
+    let replication = match t.get("hdfs.replication") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            // dfs.replication = 0 (or a float / string) must not parse
+            Some(r) if r >= 1 && r <= 512 => Some(r),
+            _ => anyhow::bail!("hdfs.replication must be an integer in [1, 512]"),
+        },
+    };
+    let mut placement = match t.get("hdfs.placement") {
+        None => None,
+        Some(v) => match v.as_str().and_then(PlacementPolicy::parse) {
+            Some(p) => Some(p),
+            None => anyhow::bail!(
+                "unknown hdfs.placement (expected random | round_robin | rack_aware | hotspot)"
+            ),
+        },
+    };
+    let hotspot_nodes = match t.get("hdfs.hotspot_nodes") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(h) if h >= 1 => Some(h),
+            _ => anyhow::bail!("hdfs.hotspot_nodes must be a positive integer"),
+        },
+    };
+    let hotspot_bias = match t.get("hdfs.hotspot_bias") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(b) if (0.0..=1.0).contains(&b) => Some(b),
+            _ => anyhow::bail!("hdfs.hotspot_bias must be in [0, 1]"),
+        },
+    };
+    match &mut placement {
+        Some(PlacementPolicy::Hotspot { hot, bias }) => {
+            if let Some(h) = hotspot_nodes {
+                *hot = h;
+            }
+            if let Some(b) = hotspot_bias {
+                *bias = b;
+            }
+        }
+        _ => anyhow::ensure!(
+            hotspot_nodes.is_none() && hotspot_bias.is_none(),
+            "hdfs.hotspot_* knobs require placement = \"hotspot\""
+        ),
+    }
+    let bw_aware_sources = match t.get("hdfs.selection") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some("bandwidth") => Some(true),
+            Some("min_idle") => Some(false),
+            _ => anyhow::bail!("hdfs.selection must be \"bandwidth\" or \"min_idle\""),
+        },
+    };
+    Ok(HdfsTable { replication, placement, bw_aware_sources })
 }
 
 /// Parse a `[stream]` table onto [`StreamRun::default`], rejecting
@@ -676,6 +802,95 @@ seed = 42
         let c = ExperimentConfig::from_str("run = \"example1\"\n[stream]\njobs = 4\n").unwrap();
         assert_eq!(c.run, RunConfig::Example1);
         assert_eq!(c.stream.unwrap().spec.jobs, 4);
+    }
+
+    #[test]
+    fn hdfs_table_parses_onto_the_scenario() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[hdfs]\nreplication = 2\nplacement = \"rack_aware\"\n\
+             selection = \"min_idle\"\n",
+        )
+        .unwrap();
+        let base = c.scenario.unwrap().base;
+        assert_eq!(base.replication, 2);
+        assert!(matches!(base.placement, PlacementPolicy::RackAware));
+        assert!(!base.bw_aware_sources);
+        // defaults stand when the table is absent
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n").unwrap();
+        let base = c.scenario.unwrap().base;
+        assert_eq!(base.replication, 3);
+        assert!(base.bw_aware_sources);
+    }
+
+    #[test]
+    fn hdfs_hotspot_knobs_shape_the_policy() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[hdfs]\nplacement = \"hotspot\"\nhotspot_nodes = 3\n\
+             hotspot_bias = 0.75\n",
+        )
+        .unwrap();
+        match c.scenario.unwrap().base.placement {
+            PlacementPolicy::Hotspot { hot, bias } => {
+                assert_eq!(hot, 3);
+                assert_eq!(bias, 0.75);
+            }
+            other => panic!("wrong policy {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hdfs_table_overrides_the_legacy_cluster_keys() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[cluster]\nreplication = 3\nplacement = \"round_robin\"\n\
+             [hdfs]\nreplication = 1\nplacement = \"random\"\n",
+        )
+        .unwrap();
+        let base = c.scenario.unwrap().base;
+        assert_eq!(base.replication, 1);
+        assert!(matches!(base.placement, PlacementPolicy::RandomDistinct));
+    }
+
+    #[test]
+    fn hdfs_rejects_unknown_keys_and_bad_replication() {
+        // a typo must not silently run a different data layer
+        let r = ExperimentConfig::from_str("run = \"scenario\"\n[hdfs]\nreplicas = 3\n");
+        assert!(r.unwrap_err().to_string().contains("replicas"));
+        for bad in [
+            "run = \"scenario\"\n[hdfs]\nreplication = 0\n",
+            "run = \"scenario\"\n[hdfs]\nreplication = 2.5\n",
+            "run = \"scenario\"\n[hdfs]\nreplication = \"3\"\n",
+            "run = \"scenario\"\n[hdfs]\nreplication = 1000\n",
+            "run = \"scenario\"\n[hdfs]\nplacement = \"roundrobin\"\n",
+            "run = \"scenario\"\n[hdfs]\nselection = \"idle\"\n",
+            "run = \"scenario\"\n[hdfs]\nhotspot_bias = 1.5\n",
+            "run = \"scenario\"\n[hdfs]\nhotspot_nodes = 0\n",
+            // hotspot knobs without the hotspot policy
+            "run = \"scenario\"\n[hdfs]\nplacement = \"random\"\nhotspot_bias = 0.5\n",
+            "run = \"scenario\"\n[hdfs]\nhotspot_nodes = 2\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn hdfs_table_is_checked_on_non_scenario_runs_too() {
+        let r = ExperimentConfig::from_str("run = \"table1\"\n[hdfs]\nbogus = 1\n");
+        assert!(r.is_err());
+        // the replication factor reaches the Table I config
+        let c =
+            ExperimentConfig::from_str("run = \"table1\"\n[hdfs]\nreplication = 2\n").unwrap();
+        assert_eq!(c.table1.replication, 2);
+        // keys a run selector cannot honor must error, never silently
+        // drop: table1 ignores placement/selection, stream/example1
+        // ignore the whole table
+        for bad in [
+            "run = \"table1\"\n[hdfs]\nplacement = \"hotspot\"\n",
+            "run = \"table1\"\n[hdfs]\nselection = \"min_idle\"\n",
+            "run = \"stream\"\n[hdfs]\nreplication = 2\n",
+            "run = \"example1\"\n[hdfs]\nreplication = 2\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -209,6 +209,8 @@ impl Coordinator {
             now,
             cost: &self.cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: self.sess.spec.bw_aware_sources,
         };
         self.sess.sched.schedule(tasks, gate, &mut ctx)
     }

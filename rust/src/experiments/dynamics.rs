@@ -27,6 +27,10 @@ pub struct ChurnPoint {
     pub rounds: usize,
     pub completed: usize,
     pub tasks: usize,
+    /// Task-rounds deferred on unreadable blocks (every holder down).
+    pub deferrals: usize,
+    /// Peak per-round under-replicated block count.
+    pub under_replicated_peak: usize,
 }
 
 /// The scenario one (level, scheduler) point expands to: a 16-node tree
@@ -75,6 +79,8 @@ pub fn run_dynamics(levels: &[f64], cost: &CostModel, threads: usize) -> Vec<Chu
             rounds: out.rounds,
             completed: out.records.len(),
             tasks: out.submitted.len(),
+            deferrals: out.deferrals,
+            under_replicated_peak: out.under_replicated_peak,
         }
     })
 }

@@ -12,6 +12,7 @@ pub mod example3;
 pub mod fig5;
 pub mod fixtures;
 pub mod scale;
+pub mod skew;
 pub mod stream;
 pub mod table1;
 
@@ -25,6 +26,7 @@ pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;
 pub use fixtures::{example1_fixture, makespan, Example1Fixture, SchedulerKind};
 pub use scale::{fat_scale_spec, run_scale, run_scale_fat, scale_spec, ScalePoint};
+pub use skew::{run_skew, skew_policies, skew_spec, SkewPoint};
 pub use stream::{
     run_stream_sweep, run_stream_sweep_with, stream_cluster, stream_spec, StreamPoint,
 };

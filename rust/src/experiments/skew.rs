@@ -1,0 +1,169 @@
+//! Replication/skew sweep: how much the bandwidth-aware replica choice
+//! buys as layouts get more (or less) redundant and more skewed.
+//!
+//! The paper evaluates hand-placed single-source layouts; this family
+//! sweeps the **data layer** instead: replication factor x placement
+//! policy (Hadoop-random, rack-aware, hotspot-skewed) on a 16-node
+//! two-rack-deep tree with contended uplinks and background traffic.
+//! Each cell runs the same map wave for HDS, BAR, BASS **and BASS under
+//! the legacy idle-only source rule** (`bw_aware_sources = false`) — the
+//! BASS vs BASS-idle column is the direct measurement of the replica-
+//! selection fix, and it can only appear at replication >= 2 (with one
+//! replica the rules provably coincide; see `rust/tests/proptests.rs`).
+//! All schedulers at one (replication, placement) cell share the seed,
+//! so every delta is scheduling policy. See EXPERIMENTS.md.
+
+use crate::runtime::CostModel;
+use crate::scenario::{
+    parallel_map, BackgroundSpec, InitialLoad, ScenarioSpec, SimSession, TopologyShape,
+    WorkloadSpec,
+};
+use crate::hdfs::PlacementPolicy;
+use crate::util::Secs;
+
+use super::fixtures::SchedulerKind;
+
+/// One executed (replication, placement, scheduler) sweep point.
+#[derive(Debug, Clone)]
+pub struct SkewPoint {
+    pub replication: usize,
+    pub placement: &'static str,
+    /// Scheduler label; `BASS-idle` is BASS under the legacy source rule.
+    pub scheduler: &'static str,
+    pub makespan: f64,
+    pub locality: f64,
+    /// Placements that committed a remote pull (carry a source).
+    pub remote_pulls: usize,
+}
+
+/// The placement policies the sweep walks.
+pub fn skew_policies() -> Vec<PlacementPolicy> {
+    vec![
+        PlacementPolicy::RandomDistinct,
+        PlacementPolicy::RackAware,
+        PlacementPolicy::Hotspot { hot: 3, bias: 0.85 },
+    ]
+}
+
+/// The scenario one (replication, placement, scheduler, rule) cell
+/// expands to: a 16-node / 4-rack tree with tight uplinks and permanent
+/// background flows — the regime where holders differ in path bandwidth.
+pub fn skew_spec(
+    replication: usize,
+    placement: PlacementPolicy,
+    kind: SchedulerKind,
+    bw_aware: bool,
+) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(
+        format!("skew-r{replication}-{}", placement.label()),
+        TopologyShape::Tree {
+            switches: 4,
+            hosts_per_switch: 4,
+            edge_mbps: 100.0,
+            uplink_mbps: 200.0,
+        },
+        WorkloadSpec::MapWave { tasks: 32, compute_secs: 10.0, output_mb: 0.0 },
+    );
+    s.scheduler = kind;
+    s.placement = placement;
+    s.replication = replication;
+    s.bw_aware_sources = bw_aware;
+    s.seed = 777;
+    s.initial = InitialLoad::Sampled { max_secs: 12.0 };
+    s.background = BackgroundSpec { flows: 6, rate_mb_s: 4.0 };
+    s
+}
+
+/// The sweep testbed's node count (4 switches x 4 hosts) — replication
+/// factors beyond it would be silently clamped by the session, printing
+/// fabricated duplicate rows, so [`run_skew`] rejects them up front.
+pub const SKEW_NODES: usize = 16;
+
+/// Run the sweep over `reps x policies x {HDS, BAR, BASS, BASS-idle}`,
+/// fanned across `threads` workers (bitwise-identical to serial).
+pub fn run_skew(reps: &[usize], cost: &CostModel, threads: usize) -> Vec<SkewPoint> {
+    assert!(
+        reps.iter().all(|&r| (1..=SKEW_NODES).contains(&r)),
+        "replication factors must be in [1, {SKEW_NODES}] (the sweep's cluster size), got {reps:?}"
+    );
+    let points: Vec<(usize, PlacementPolicy, SchedulerKind, bool)> = reps
+        .iter()
+        .flat_map(|&r| {
+            skew_policies().into_iter().flat_map(move |p| {
+                [
+                    (r, p.clone(), SchedulerKind::Hds, true),
+                    (r, p.clone(), SchedulerKind::Bar, true),
+                    (r, p.clone(), SchedulerKind::Bass, true),
+                    (r, p, SchedulerKind::Bass, false),
+                ]
+            })
+        })
+        .collect();
+    parallel_map(points, threads, |(r, p, kind, bw_aware)| {
+        let label = match (kind, bw_aware) {
+            (SchedulerKind::Bass, false) => "BASS-idle",
+            _ => kind.label(),
+        };
+        let placement = p.label();
+        let mut sess = SimSession::new(&skew_spec(r, p, kind, bw_aware));
+        let tasks = sess.tasks.clone();
+        let a = sess.schedule(&tasks, None, Secs::ZERO, cost);
+        let locality = a.locality_ratio();
+        let remote_pulls = a.placements.iter().filter(|pl| pl.source.is_some()).count();
+        let records = sess.execute(&a);
+        let makespan = records.iter().map(|rec| rec.finish.0).fold(0.0, f64::max);
+        SkewPoint { replication: r, placement, scheduler: label, makespan, locality, remote_pulls }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reps() -> Vec<usize> {
+        match std::env::var("BASS_BENCH_QUICK") {
+            Ok(_) => vec![2],
+            Err(_) => vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_completes() {
+        let rs = reps();
+        let pts = run_skew(&rs, &CostModel::rust_only(), 1);
+        assert_eq!(pts.len(), rs.len() * 3 * 4);
+        for p in &pts {
+            assert!(p.makespan > 0.0, "{} r{}", p.scheduler, p.replication);
+            assert!((0.0..=1.0).contains(&p.locality));
+        }
+    }
+
+    #[test]
+    fn single_replica_rules_coincide() {
+        // at replication 1 BASS and BASS-idle must agree exactly
+        let pts = run_skew(&[1], &CostModel::rust_only(), 2);
+        for policy in ["random", "rack_aware", "hotspot"] {
+            let ms = |s: &str| {
+                pts.iter()
+                    .find(|p| p.scheduler == s && p.placement == policy)
+                    .unwrap()
+                    .makespan
+            };
+            assert_eq!(ms("BASS"), ms("BASS-idle"), "{policy}");
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_thread_invariant() {
+        let cost = CostModel::rust_only();
+        let serial = run_skew(&[2], &cost, 1);
+        let fanned = run_skew(&[2], &cost, 4);
+        assert_eq!(serial.len(), fanned.len());
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.placement, b.placement);
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.remote_pulls, b.remote_pulls);
+        }
+    }
+}

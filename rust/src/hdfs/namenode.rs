@@ -66,19 +66,58 @@ impl Namenode {
             .filter(move |r| authorized.contains(r))
     }
 
-    /// The replica to read from when transferring remotely: the least
-    /// loaded holder per the provided idle-time lookup (Discussion 2).
+    /// Replica holders that can currently serve reads. Unlike
+    /// [`Namenode::local_candidates`] this is *not* restricted to the
+    /// compute-authorized subset — Case 2 reads from outside it — only to
+    /// holders the caller deems alive (a crashed datanode's replicas are
+    /// unreadable under `[dynamics]`).
+    pub fn readable_replicas<'a>(
+        &'a self,
+        block: BlockId,
+        readable: impl Fn(NodeId) -> bool + 'a,
+    ) -> impl Iterator<Item = NodeId> + 'a {
+        self.block(block).replicas.iter().copied().filter(move |&r| readable(r))
+    }
+
+    /// Can at least one replica of `block` serve reads right now?
+    pub fn is_readable(&self, block: BlockId, readable: impl Fn(NodeId) -> bool) -> bool {
+        self.readable_replicas(block, readable).next().is_some()
+    }
+
+    /// The replica to read from when transferring remotely under the
+    /// legacy idle-only rule (Discussion 2: least loaded holder), over
+    /// the *readable* holders only. `None` when every holder is down —
+    /// the seed picked a crashed holder here, which the scheduling layer
+    /// then "pulled" from; callers must treat `None` as block-unreadable.
     pub fn least_loaded_replica(
         &self,
         block: BlockId,
+        readable: impl Fn(NodeId) -> bool,
         idle_of: impl Fn(NodeId) -> f64,
-    ) -> NodeId {
-        *self
-            .block(block)
-            .replicas
+    ) -> Option<NodeId> {
+        self.readable_replicas(block, readable)
+            .min_by(|a, b| idle_of(*a).total_cmp(&idle_of(*b)))
+    }
+
+    /// Blocks with fewer readable replicas than stored replicas (some
+    /// holder is down) — the namenode view a real HDFS would re-replicate
+    /// from. Surfaced by the dynamics layer per scheduling round.
+    pub fn under_replicated(&self, readable: impl Fn(NodeId) -> bool) -> Vec<BlockId> {
+        self.blocks
             .iter()
-            .min_by(|a, b| idle_of(**a).total_cmp(&idle_of(**b)))
-            .expect("non-empty replica set")
+            .filter(|b| b.replicas.iter().any(|&r| !readable(r)))
+            .map(|b| b.id)
+            .collect()
+    }
+
+    /// Blocks with *no* readable replica at all: tasks over these cannot
+    /// be scheduled until a holder recovers.
+    pub fn unreadable_blocks(&self, readable: impl Fn(NodeId) -> bool + Copy) -> Vec<BlockId> {
+        self.blocks
+            .iter()
+            .filter(|b| !b.replicas.iter().any(|&r| readable(r)))
+            .map(|b| b.id)
+            .collect()
     }
 }
 
@@ -113,10 +152,31 @@ mod tests {
     }
 
     #[test]
-    fn least_loaded_replica_picks_min_idle() {
+    fn least_loaded_replica_picks_min_idle_among_readable() {
         let n = nn();
         let idle = |nd: NodeId| [9.0, 3.0, 20.0][nd.0.min(2)];
-        assert_eq!(n.least_loaded_replica(BlockId(0), idle), NodeId(1));
+        assert_eq!(n.least_loaded_replica(BlockId(0), |_| true, idle), Some(NodeId(1)));
+        // the min-idle holder is down: the next healthy one wins
+        assert_eq!(
+            n.least_loaded_replica(BlockId(0), |nd| nd != NodeId(1), idle),
+            Some(NodeId(2))
+        );
+        // every holder down: no source at all (the seed bug returned a
+        // crashed node here)
+        assert_eq!(n.least_loaded_replica(BlockId(0), |_| false, idle), None);
+    }
+
+    #[test]
+    fn readability_and_under_replication_views() {
+        let n = nn();
+        let up = |nd: NodeId| nd != NodeId(1);
+        assert!(n.is_readable(BlockId(0), up)); // NodeId(2) still serves
+        assert!(n.is_readable(BlockId(1), up));
+        assert_eq!(n.under_replicated(up), vec![BlockId(0)]);
+        assert!(n.unreadable_blocks(up).is_empty());
+        let only_zero_down = |nd: NodeId| nd != NodeId(0);
+        assert_eq!(n.unreadable_blocks(only_zero_down), vec![BlockId(1)]);
+        assert_eq!(n.under_replicated(|_| true), Vec::<BlockId>::new());
     }
 
     #[test]

@@ -3,7 +3,12 @@
 //! Table I runs with `dfs.replication = 3` on 6 nodes; placement there is
 //! Hadoop's default (random distinct nodes, rack-unaware in a flat 6-node
 //! cluster). The round-robin policy gives fully deterministic layouts for
-//! calibration tests.
+//! calibration tests; [`PlacementPolicy::RackAware`] mirrors Hadoop's
+//! rack-aware default on multi-switch clusters (BigDataSDNSim models the
+//! same rule); [`PlacementPolicy::Hotspot`] concentrates primaries on a
+//! few nodes so schedulers compete on skewed layouts; and
+//! [`PlacementPolicy::Explicit`] replays a hand-written layout (the
+//! Example 1 fixture).
 
 use crate::topology::NodeId;
 use crate::util::XorShift;
@@ -11,42 +16,150 @@ use crate::util::XorShift;
 use super::namenode::Namenode;
 
 /// How generated blocks choose replica holders.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlacementPolicy {
     /// k distinct nodes uniformly at random (Hadoop default, flat cluster).
     RandomDistinct,
     /// Block b's replicas at nodes (b, b+1, ..., b+k-1) mod n.
     RoundRobin,
+    /// Hand-written layout: block b uses entry `b % len` — each entry is
+    /// a list of distinct indices into the node slice, and the entry
+    /// length (not the sweep's replication factor) sets that block's
+    /// replica count. This is how Example 1's reverse-engineered layout
+    /// is expressed.
+    Explicit(Vec<Vec<usize>>),
+    /// Hadoop's rack-aware default: first replica on a random node, the
+    /// second in a *different* rack, the third in the second's rack,
+    /// further replicas random. Falls back to random-distinct when the
+    /// cluster has fewer than two racks (exactly Hadoop's flat-cluster
+    /// behavior).
+    RackAware,
+    /// Skewed layout: with probability `bias` a block's primary replica
+    /// lands on one of the first `hot` nodes; remaining replicas are
+    /// random distinct. `bias = 0` degenerates to random-distinct.
+    Hotspot { hot: usize, bias: f64 },
 }
 
 impl PlacementPolicy {
-    /// Place `n_blocks` blocks of `size_mb` over `nodes`, `k` replicas each.
+    /// Parse the config-file spelling (`[hdfs] placement = ...`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "random" | "random_distinct" => Some(PlacementPolicy::RandomDistinct),
+            "round_robin" => Some(PlacementPolicy::RoundRobin),
+            "rack_aware" => Some(PlacementPolicy::RackAware),
+            "hotspot" => Some(PlacementPolicy::Hotspot { hot: 2, bias: 0.8 }),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RandomDistinct => "random",
+            PlacementPolicy::RoundRobin => "round_robin",
+            PlacementPolicy::Explicit(_) => "explicit",
+            PlacementPolicy::RackAware => "rack_aware",
+            PlacementPolicy::Hotspot { .. } => "hotspot",
+        }
+    }
+
+    /// Place `n_blocks` blocks of `size_mb` over `nodes`, `k` replicas
+    /// each (`Explicit` entries carry their own count). `racks[i]` is the
+    /// rack (edge switch) of `nodes[i]`; an empty slice means a flat
+    /// cluster (see [`crate::topology::builders::host_racks`]).
+    #[allow(clippy::too_many_arguments)] // flat layout args, one call shape
     pub fn place(
         &self,
         nn: &mut Namenode,
         nodes: &[NodeId],
+        racks: &[usize],
         n_blocks: usize,
         size_mb: f64,
         k: usize,
         rng: &mut XorShift,
     ) -> Vec<super::BlockId> {
-        assert!(k >= 1 && k <= nodes.len(), "replication {k} vs {} nodes", nodes.len());
+        let n = nodes.len();
+        assert!(k >= 1 && k <= n, "replication {k} vs {n} nodes");
+        assert!(racks.is_empty() || racks.len() == n, "racks must map the node slice");
         (0..n_blocks)
             .map(|b| {
                 let replicas: Vec<NodeId> = match self {
-                    PlacementPolicy::RandomDistinct => rng
-                        .distinct(nodes.len(), k)
+                    PlacementPolicy::RandomDistinct => {
+                        rng.distinct(n, k).into_iter().map(|i| nodes[i]).collect()
+                    }
+                    PlacementPolicy::RoundRobin => {
+                        (0..k).map(|r| nodes[(b + r) % n]).collect()
+                    }
+                    PlacementPolicy::Explicit(lists) => {
+                        assert!(!lists.is_empty(), "explicit placement needs entries");
+                        lists[b % lists.len()].iter().map(|&i| nodes[i]).collect()
+                    }
+                    PlacementPolicy::RackAware => rack_aware(n, racks, k, rng)
                         .into_iter()
                         .map(|i| nodes[i])
                         .collect(),
-                    PlacementPolicy::RoundRobin => {
-                        (0..k).map(|r| nodes[(b + r) % nodes.len()]).collect()
+                    PlacementPolicy::Hotspot { hot, bias } => {
+                        hotspot(n, *hot, *bias, k, rng).into_iter().map(|i| nodes[i]).collect()
                     }
                 };
                 nn.add_block(size_mb, replicas)
             })
             .collect()
     }
+}
+
+/// Hadoop's rack rule over node *indices*; distinct by construction.
+fn rack_aware(n: usize, racks: &[usize], k: usize, rng: &mut XorShift) -> Vec<usize> {
+    let distinct_racks = {
+        let mut rs: Vec<usize> = racks.to_vec();
+        rs.sort_unstable();
+        rs.dedup();
+        rs.len()
+    };
+    if racks.is_empty() || distinct_racks < 2 {
+        return rng.distinct(n, k);
+    }
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    // r0: the "writer" node
+    chosen.push(rng.below(n));
+    if k >= 2 {
+        // r1: a node in a different rack
+        let off_rack: Vec<usize> =
+            (0..n).filter(|&i| racks[i] != racks[chosen[0]]).collect();
+        chosen.push(off_rack[rng.below(off_rack.len())]);
+    }
+    if k >= 3 {
+        // r2: another node in r1's rack, else anywhere distinct
+        let same_rack: Vec<usize> = (0..n)
+            .filter(|&i| racks[i] == racks[chosen[1]] && !chosen.contains(&i))
+            .collect();
+        if same_rack.is_empty() {
+            push_distinct(n, &mut chosen, rng);
+        } else {
+            chosen.push(same_rack[rng.below(same_rack.len())]);
+        }
+    }
+    while chosen.len() < k {
+        push_distinct(n, &mut chosen, rng);
+    }
+    chosen
+}
+
+/// Hotspot rule over node indices.
+fn hotspot(n: usize, hot: usize, bias: f64, k: usize, rng: &mut XorShift) -> Vec<usize> {
+    let hot = hot.clamp(1, n);
+    let mut chosen = Vec::with_capacity(k);
+    chosen.push(if rng.chance(bias) { rng.below(hot) } else { rng.below(n) });
+    while chosen.len() < k {
+        push_distinct(n, &mut chosen, rng);
+    }
+    chosen
+}
+
+/// Append one uniformly random index not yet chosen (draws over the
+/// complement, so one rng draw per replica — deterministic and bounded).
+fn push_distinct(n: usize, chosen: &mut Vec<usize>, rng: &mut XorShift) {
+    let rest: Vec<usize> = (0..n).filter(|i| !chosen.contains(i)).collect();
+    chosen.push(rest[rng.below(rest.len())]);
 }
 
 #[cfg(test)]
@@ -62,7 +175,8 @@ mod tests {
     fn round_robin_is_deterministic() {
         let mut nn = Namenode::new();
         let mut rng = XorShift::new(1);
-        let ids = PlacementPolicy::RoundRobin.place(&mut nn, &nodes(4), 5, 64.0, 2, &mut rng);
+        let ids =
+            PlacementPolicy::RoundRobin.place(&mut nn, &nodes(4), &[], 5, 64.0, 2, &mut rng);
         assert_eq!(ids.len(), 5);
         assert_eq!(nn.block(BlockId(0)).replicas, vec![NodeId(0), NodeId(1)]);
         assert_eq!(nn.block(BlockId(3)).replicas, vec![NodeId(3), NodeId(0)]);
@@ -72,7 +186,7 @@ mod tests {
     fn random_distinct_has_k_distinct_replicas() {
         let mut nn = Namenode::new();
         let mut rng = XorShift::new(7);
-        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(6), 50, 64.0, 3, &mut rng);
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(6), &[], 50, 64.0, 3, &mut rng);
         for b in 0..50 {
             let r = &nn.block(BlockId(b)).replicas;
             assert_eq!(r.len(), 3);
@@ -87,7 +201,7 @@ mod tests {
     fn random_distinct_spreads_load() {
         let mut nn = Namenode::new();
         let mut rng = XorShift::new(11);
-        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(6), 600, 64.0, 3, &mut rng);
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(6), &[], 600, 64.0, 3, &mut rng);
         let mut count = [0usize; 6];
         for b in 0..600 {
             for r in &nn.block(BlockId(b)).replicas {
@@ -101,10 +215,78 @@ mod tests {
     }
 
     #[test]
+    fn explicit_replays_the_written_layout() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(1);
+        let layout = PlacementPolicy::Explicit(vec![vec![1, 2], vec![0, 3]]);
+        layout.place(&mut nn, &nodes(4), &[], 3, 64.0, 2, &mut rng);
+        assert_eq!(nn.block(BlockId(0)).replicas, vec![NodeId(1), NodeId(2)]);
+        assert_eq!(nn.block(BlockId(1)).replicas, vec![NodeId(0), NodeId(3)]);
+        // cycles past the entry list
+        assert_eq!(nn.block(BlockId(2)).replicas, vec![NodeId(1), NodeId(2)]);
+    }
+
+    #[test]
+    fn rack_aware_crosses_racks_at_replication_3() {
+        // 2 racks x 3 hosts: r0 anywhere, r1 off-rack, r2 in r1's rack
+        let racks = [0, 0, 0, 1, 1, 1];
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(21);
+        PlacementPolicy::RackAware.place(&mut nn, &nodes(6), &racks, 80, 64.0, 3, &mut rng);
+        for b in 0..80 {
+            let r = &nn.block(BlockId(b)).replicas;
+            assert_eq!(r.len(), 3);
+            let rk: Vec<usize> = r.iter().map(|nd| racks[nd.0]).collect();
+            assert_ne!(rk[0], rk[1], "second replica must change racks: {r:?}");
+            assert_eq!(rk[1], rk[2], "third replica shares the second's rack: {r:?}");
+        }
+    }
+
+    #[test]
+    fn rack_aware_flat_cluster_degenerates_to_random() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(5);
+        PlacementPolicy::RackAware.place(&mut nn, &nodes(4), &[], 10, 64.0, 3, &mut rng);
+        for b in 0..10 {
+            assert_eq!(nn.block(BlockId(b)).replicas.len(), 3);
+        }
+    }
+
+    #[test]
+    fn hotspot_concentrates_primaries() {
+        let mut nn = Namenode::new();
+        let mut rng = XorShift::new(13);
+        PlacementPolicy::Hotspot { hot: 2, bias: 0.9 }
+            .place(&mut nn, &nodes(8), &[], 400, 64.0, 2, &mut rng);
+        let hot_primaries = (0..400)
+            .filter(|&b| nn.block(BlockId(b)).replicas[0].0 < 2)
+            .count();
+        // bias 0.9 over 2-of-8 hot nodes: expect ~ 0.9 + 0.1*0.25 = 92.5%
+        assert!(hot_primaries > 300, "only {hot_primaries}/400 primaries on hot nodes");
+        // replicas stay distinct
+        for b in 0..400 {
+            let r = &nn.block(BlockId(b)).replicas;
+            assert_ne!(r[0], r[1]);
+        }
+    }
+
+    #[test]
+    fn parse_covers_the_named_policies() {
+        assert_eq!(PlacementPolicy::parse("random"), Some(PlacementPolicy::RandomDistinct));
+        assert_eq!(PlacementPolicy::parse("round_robin"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(PlacementPolicy::parse("rack_aware"), Some(PlacementPolicy::RackAware));
+        assert!(matches!(
+            PlacementPolicy::parse("hotspot"),
+            Some(PlacementPolicy::Hotspot { .. })
+        ));
+        assert_eq!(PlacementPolicy::parse("roundrobin"), None);
+    }
+
+    #[test]
     #[should_panic(expected = "replication")]
     fn replication_beyond_cluster_rejected() {
         let mut nn = Namenode::new();
         let mut rng = XorShift::new(1);
-        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(2), 1, 64.0, 3, &mut rng);
+        PlacementPolicy::RandomDistinct.place(&mut nn, &nodes(2), &[], 1, 64.0, 3, &mut rng);
     }
 }

@@ -77,6 +77,7 @@ mod tests {
             input_ready: Secs::ZERO,
             compute_start: Secs::ZERO,
             finish: Secs(finish),
+            source: None,
             is_local,
             is_map,
         }

@@ -85,6 +85,7 @@ mod tests {
                 input_ready: Secs(10.0),
                 compute_start: Secs(10.0),
                 finish: Secs(19.0),
+                source: None,
                 is_local: true,
                 is_map: true,
             },
@@ -95,6 +96,7 @@ mod tests {
                 input_ready: Secs(1.0),
                 compute_start: Secs(1.0),
                 finish: Secs(10.0),
+                source: None,
                 is_local: false,
                 is_map: true,
             },

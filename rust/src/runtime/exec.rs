@@ -12,6 +12,20 @@ use super::loader::{default_artifacts_dir, Artifacts};
 pub const INF: f32 = 3.0e38;
 pub const EPS: f32 = 1e-9;
 
+/// Finite stand-in for "infinite" bandwidth — the local `src == dst` case
+/// the controller reports as `f64::INFINITY`, which the f32 cost kernel
+/// cannot carry. The value is pinned here (the single definition both the
+/// cost bridge and `Controller::bw_matrix` use) with two saturation
+/// guarantees, property-tested in `rust/tests/proptests.rs`:
+///
+/// * `TM = sz / BW_SENTINEL_MB_S` stays strictly below any remote TM at
+///   a physical bandwidth (`<= 1e6 MB/s`), so an infinite-bandwidth cell
+///   always beats a remote cell on Eq. 1 — no f32 rounding collapse;
+/// * it sits ~26 binary orders of magnitude under `f32::MAX`, so the
+///   downstream sums (`TM + TP + ΥI`) and the slot ceil cannot overflow
+///   to `inf` and corrupt the argmin.
+pub const BW_SENTINEL_MB_S: f32 = 1e12;
+
 /// Row-major (m x n) problem for the cost model.
 #[derive(Debug, Clone)]
 pub struct CostInputs {

@@ -30,17 +30,28 @@
 //! to the static `schedule → execute` path (pinned by the golden-trace
 //! tests and `experiments::dynamics` tests).
 //!
+//! A crashed node's **replicas are unreadable** while it is down: the
+//! scheduling round passes the down-set into [`SchedCtx::down`], so
+//! source selection (matrix rows and committed pulls alike) skips dead
+//! holders; tasks whose every holder is down are *deferred* to the next
+//! recovery instant ([`DynamicsOutcome::deferrals`]) and the namenode's
+//! under-replication view is surfaced per round
+//! ([`DynamicsOutcome::under_replicated_peak`]). Every committed pull is
+//! audited as (task, source, decision instant) for the no-pull-from-a-
+//! down-node oracle ([`crate::testkit::oracles::pulls_from_live_sources`]).
+//!
 //! Known simplifications (documented in DESIGN.md): a committed BASS
 //! reservation keeps its planned arrival even if a link under it
 //! degrades mid-transfer (the violation is detected by
 //! [`crate::sdn::Controller::revalidate_transfer`] and counted in
-//! [`DynamicsOutcome::stale_reservations`]); transfer *sources* are
-//! never marked down —
-//! replicas stay readable while the puller is alive; and a new round's
-//! fresh flow network / calendar does not carry the *surviving* prior
-//! round's still-in-flight transfers or reservations, so rescheduled
-//! work sees only background contention (node-time double-booking is
-//! still impossible — per-host availability carries across rounds).
+//! [`DynamicsOutcome::stale_reservations`]); a source that crashes
+//! *mid-transfer* — after the round committed the pull from it — still
+//! delivers (only scheduling-time readability is enforced); and a new
+//! round's fresh flow network / calendar does not carry the *surviving*
+//! prior round's still-in-flight transfers or reservations, so
+//! rescheduled work sees only background contention (node-time
+//! double-booking is still impossible — per-host availability carries
+//! across rounds).
 
 use std::collections::{HashMap, HashSet};
 
@@ -245,6 +256,17 @@ pub struct ReservationAudit {
     pub usable: Vec<f64>,
 }
 
+/// Audit record of one committed remote pull: which holder served the
+/// read, decided at which instant. The oracle layer re-checks each
+/// source against the downtime windows independently of the scheduler.
+#[derive(Debug, Clone)]
+pub struct PullAudit {
+    pub task: TaskId,
+    pub source: NodeId,
+    /// The scheduling instant the source was chosen at.
+    pub at: Secs,
+}
+
 /// Everything a dynamic run produced, self-describing enough for the
 /// invariant oracles (`testkit::oracles`).
 #[derive(Debug, Clone)]
@@ -270,6 +292,14 @@ pub struct DynamicsOutcome {
     pub stale_reservations: usize,
     /// The task ids that were submitted.
     pub submitted: Vec<TaskId>,
+    /// Every committed remote pull with its decision instant.
+    pub pulls: Vec<PullAudit>,
+    /// Task-rounds deferred because every replica holder was down
+    /// (the block was unreadable at that instant).
+    pub deferrals: usize,
+    /// Peak per-round count of under-replicated blocks (some holder
+    /// down), the namenode view a real HDFS would re-replicate from.
+    pub under_replicated_peak: usize,
 }
 
 /// Cluster state at one instant, replayed from the timeline prefix.
@@ -360,6 +390,9 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
     let mut reassignments = 0usize;
     let mut rounds = 0usize;
     let mut stale_reservations = 0usize;
+    let mut pulls: Vec<PullAudit> = Vec::new();
+    let mut deferrals = 0usize;
+    let mut under_replicated_peak = 0usize;
 
     while !pending.is_empty() {
         rounds += 1;
@@ -368,14 +401,34 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
             "dynamics run did not converge in {rounds} rounds"
         );
         let st = state_at(&timeline, now, n_hosts, n_links);
+        let up = |nd: NodeId| !st.down[nd.0];
+        let next_recovery = |now: Secs| -> Secs {
+            timeline
+                .iter()
+                .find(|te| te.at > now && matches!(te.ev, DynEvent::NodeUp(_)))
+                .expect("compiled timelines pair every crash with a recovery")
+                .at
+        };
 
         // every authorized node down: fast-forward to the next recovery
         if sess.nodes.iter().all(|nd| st.down[nd.0]) {
-            let next_up = timeline
-                .iter()
-                .find(|te| te.at > now && matches!(te.ev, DynEvent::NodeUp(_)))
-                .expect("compiled timelines pair every crash with a recovery");
-            now = next_up.at;
+            now = next_recovery(now);
+            continue;
+        }
+
+        // a crashed holder's replicas are unreadable: defer tasks whose
+        // every holder is down until a recovery makes the block readable
+        under_replicated_peak =
+            under_replicated_peak.max(sess.nn.under_replicated(up).len());
+        let (ready, blocked): (Vec<TaskSpec>, Vec<TaskSpec>) =
+            pending.iter().cloned().partition(|t| match t.input {
+                Some(b) => sess.nn.is_readable(b, up),
+                None => true,
+            });
+        deferrals += blocked.len();
+        if ready.is_empty() {
+            // nothing schedulable: jump to the recovery that unblocks
+            now = next_recovery(now);
             continue;
         }
 
@@ -413,10 +466,15 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
                 now,
                 cost,
                 node_speed: spec.node_speed.clone(),
+                down: st.down.clone(),
+                bw_aware_sources: spec.bw_aware_sources,
             };
-            sched.schedule(&pending, Some(now), &mut ctx)
+            sched.schedule(&ready, Some(now), &mut ctx)
         };
         for p in &assignment.placements {
+            if let Some(src) = p.source {
+                pulls.push(PullAudit { task: p.task, source: src, at: now });
+            }
             let tr = match &p.transfer {
                 TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
                 _ => continue,
@@ -516,15 +574,21 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
         records.extend(engine.run());
         let orphans = engine.take_orphans();
         avail = engine.node_free_times().to_vec();
-        if orphans.is_empty() {
+        if orphans.is_empty() && blocked.is_empty() {
             break;
         }
         reassignments += orphans.len();
-        // re-enqueue from the earliest loss instant; `now` strictly grows
-        // (orphans only arise from events injected strictly after it)
-        now = orphans.iter().map(|(_, at)| *at).fold(Secs::INF, Secs::min);
-        let lost: HashSet<TaskId> = orphans.iter().map(|(p, _)| p.task).collect();
-        pending = tasks.iter().filter(|t| lost.contains(&t.id)).cloned().collect();
+        // re-enqueue lost and deferred work; `now` strictly grows (orphans
+        // only arise from events injected strictly after it, and a
+        // blocked-only round jumps to the next recovery instant)
+        now = if orphans.is_empty() {
+            next_recovery(now)
+        } else {
+            orphans.iter().map(|(_, at)| *at).fold(Secs::INF, Secs::min)
+        };
+        let mut carry: HashSet<TaskId> = orphans.iter().map(|(p, _)| p.task).collect();
+        carry.extend(blocked.iter().map(|t| t.id));
+        pending = tasks.iter().filter(|t| carry.contains(&t.id)).cloned().collect();
     }
 
     records.sort_by_key(|r| r.task);
@@ -549,6 +613,9 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
         reservations,
         stale_reservations,
         submitted,
+        pulls,
+        deferrals,
+        under_replicated_peak,
     }
 }
 
@@ -572,6 +639,10 @@ pub struct DynSweepRow {
     pub rounds: usize,
     pub completed: usize,
     pub tasks: usize,
+    /// Task-rounds deferred on unreadable blocks (every holder down).
+    pub deferrals: usize,
+    /// Peak per-round under-replicated block count.
+    pub under_replicated_peak: usize,
 }
 
 /// Run a grid of dynamic scenarios (each cell: build the session, play
@@ -601,6 +672,8 @@ pub fn run_dynamic_grid(
             rounds: out.rounds,
             completed: out.records.len(),
             tasks: out.submitted.len(),
+            deferrals: out.deferrals,
+            under_replicated_peak: out.under_replicated_peak,
         }
     })
 }

@@ -32,7 +32,7 @@ pub mod sweep;
 
 pub use dynamics::{
     down_intervals, run_dynamic, run_dynamic_grid, DynEvent, DynSweepRow, DynamicsOutcome,
-    DynamicsSpec, ReservationAudit, TimedEvent,
+    DynamicsSpec, PullAudit, ReservationAudit, TimedEvent,
 };
 pub use online::{
     run_stream, AdmissionPolicy, JobOutcome, StreamOutcome, StreamSpec, Submission,

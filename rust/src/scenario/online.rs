@@ -348,6 +348,8 @@ impl<'a> StreamDriver<'a> {
                 now,
                 cost: self.cost,
                 node_speed: self.sess.spec.node_speed.clone(),
+                down: Vec::new(),
+                bw_aware_sources: self.sess.spec.bw_aware_sources,
             };
             self.sess.sched.schedule(tasks, Some(gate), &mut ctx)
         };
@@ -383,7 +385,8 @@ impl<'a> StreamDriver<'a> {
                 let mut builder = WorkloadBuilder::new(kind);
                 builder.replication = self.sess.spec.replication.min(self.sess.nodes.len());
                 builder.reduces = self.sess.spec.reduces;
-                builder.placement = self.sess.spec.placement;
+                builder.placement = self.sess.spec.placement.clone();
+                builder.racks = self.sess.racks.clone();
                 let job = builder.build(
                     jid,
                     data_mb,
@@ -575,6 +578,8 @@ impl<'a> StreamDriver<'a> {
                 now: at,
                 cost: self.cost,
                 node_speed: self.sess.spec.node_speed.clone(),
+                down: Vec::new(),
+                bw_aware_sources: self.sess.spec.bw_aware_sources,
             };
             sched.schedule(tasks, Some(gate), &mut ctx)
         };

@@ -2,14 +2,14 @@
 //! schedule → execute → metrics drivers.
 
 use crate::cluster::Ledger;
-use crate::hdfs::Namenode;
+use crate::hdfs::{Namenode, PlacementPolicy};
 use crate::mapreduce::{JobSpec, TaskSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler};
 use crate::sdn::Controller;
 use crate::sim::{Assignment, Engine, FlowNet, TaskRecord};
-use crate::topology::builders::{fat_tree, fig2, tree_cluster};
+use crate::topology::builders::{fat_tree, fig2, host_racks, tree_cluster};
 use crate::topology::{LinkId, NodeId, Topology};
 use crate::util::{Secs, XorShift, BLOCK_MB};
 use crate::workload::{BackgroundLoad, WorkloadBuilder};
@@ -26,6 +26,9 @@ pub struct SimSession {
     pub spec: ScenarioSpec,
     /// Task nodes (the authorized set; excludes Fig. 2's master/controller).
     pub nodes: Vec<NodeId>,
+    /// Rack (edge switch) of each task node, parallel to `nodes` — the
+    /// rack-aware placement policy's input.
+    pub racks: Vec<usize>,
     pub ctrl: Controller,
     /// Pristine flow network: background installed, no job flows yet.
     /// Executions clone it so each phase contends against a fresh copy.
@@ -55,6 +58,7 @@ impl SimSession {
     pub fn new(spec: &ScenarioSpec) -> Self {
         let spec = spec.clone();
         let (topo, nodes) = build_topology(&spec.topology);
+        let racks = host_racks(&topo, &nodes);
         let link_caps_mbps: Vec<f64> =
             topo.links.iter().map(|l| l.capacity_mbps).collect();
         let n_hosts = topo.n_hosts();
@@ -110,19 +114,19 @@ impl SimSession {
                 // Figs. 3(a)-(d) — only TK1's {ND2, ND3} is given
                 // explicitly; the rest make HDS/BAR/BASS/Pre-BASS land on
                 // the published 39/38/35/34s timelines (see DESIGN.md)
-                let reps: [[usize; 2]; 9] = [
-                    [1, 2], // TK1 {ND2, ND3} — given in the paper
-                    [0, 3], // TK2 {ND1, ND4}
-                    [0, 1], // TK3 {ND1, ND2}
-                    [2, 0], // TK4 {ND3, ND1}
-                    [3, 1], // TK5 {ND4, ND2}
-                    [1, 2], // TK6 {ND2, ND3}
-                    [0, 2], // TK7 {ND1, ND3}
-                    [3, 0], // TK8 {ND4, ND1}
-                    [2, 0], // TK9 {ND3, ND1}
-                ];
-                for (i, r) in reps.iter().enumerate() {
-                    let b = nn.add_block(64.0, vec![nodes[r[0]], nodes[r[1]]]);
+                let layout = PlacementPolicy::Explicit(vec![
+                    vec![1, 2], // TK1 {ND2, ND3} — given in the paper
+                    vec![0, 3], // TK2 {ND1, ND4}
+                    vec![0, 1], // TK3 {ND1, ND2}
+                    vec![2, 0], // TK4 {ND3, ND1}
+                    vec![3, 1], // TK5 {ND4, ND2}
+                    vec![1, 2], // TK6 {ND2, ND3}
+                    vec![0, 2], // TK7 {ND1, ND3}
+                    vec![3, 0], // TK8 {ND4, ND1}
+                    vec![2, 0], // TK9 {ND3, ND1}
+                ]);
+                let blocks = layout.place(&mut nn, &nodes, &racks, 9, 64.0, 2, &mut rng);
+                for (i, &b) in blocks.iter().enumerate() {
                     tasks.push(TaskSpec::map(i, b, 64.0, Secs(9.0), 0.0));
                 }
             }
@@ -130,13 +134,15 @@ impl SimSession {
                 let mut builder = WorkloadBuilder::new(*kind);
                 builder.replication = spec.replication.min(nodes.len());
                 builder.reduces = spec.reduces;
-                builder.placement = spec.placement;
+                builder.placement = spec.placement.clone();
+                builder.racks = racks.clone();
                 job = Some(builder.build(0, *data_mb, &nodes, &mut nn, &mut rng));
             }
             WorkloadSpec::MapWave { tasks: m, compute_secs, output_mb } => {
                 let blocks = spec.placement.place(
                     &mut nn,
                     &nodes,
+                    &racks,
                     *m,
                     BLOCK_MB,
                     spec.replication.min(nodes.len()),
@@ -166,6 +172,7 @@ impl SimSession {
         Self {
             spec,
             nodes,
+            racks,
             ctrl,
             net,
             nn,
@@ -204,6 +211,8 @@ impl SimSession {
             now,
             cost,
             node_speed: self.spec.node_speed.clone(),
+            down: Vec::new(),
+            bw_aware_sources: self.spec.bw_aware_sources,
         };
         self.sched.schedule(tasks, gate, &mut ctx)
     }
@@ -411,6 +420,7 @@ mod tests {
                 input_ready: Secs::ZERO,
                 compute_start: Secs::ZERO,
                 finish: Secs((i + 1) as f64 * 10.0),
+                source: None,
                 is_local: true,
                 is_map: true,
             })

@@ -89,6 +89,11 @@ pub struct ScenarioSpec {
     pub scheduler: SchedulerKind,
     /// Replica placement for generated workloads.
     pub placement: PlacementPolicy,
+    /// Remote pulls read from the holder with the best SDN-reported path
+    /// bandwidth (`true`, the default) or from the least-loaded holder
+    /// (`false` — the seed's idle-only rule, kept as an ablation; the
+    /// `[hdfs] selection` config key and the skew sweep flip it).
+    pub bw_aware_sources: bool,
     /// QoS queue policy installed into the flow network (Example 3).
     pub qos: Option<QosPolicy>,
     /// Time-slot duration for the SDN calendar (the paper's TS).
@@ -123,6 +128,7 @@ impl ScenarioSpec {
             workload,
             scheduler: SchedulerKind::Bass,
             placement: PlacementPolicy::RandomDistinct,
+            bw_aware_sources: true,
             qos: None,
             slot_secs: 1.0,
             replication: 3,

@@ -9,6 +9,8 @@
 //! rates), until no move improves (Discussion 1: Example 1 goes
 //! 39s -> 38s by moving TK9 from ND4 to ND3).
 
+use std::collections::HashMap;
+
 use crate::mapreduce::TaskSpec;
 use crate::sdn::TrafficClass;
 use crate::sim::{Assignment, Placement, TransferPlan};
@@ -44,6 +46,9 @@ struct Item {
     is_local: bool,
     /// Nominal TM on the current node.
     tm: Secs,
+    /// The replica holder the TM estimate priced the pull from (kept so
+    /// materialization commits the same source the tuning loop costed).
+    src: Option<NodeId>,
 }
 
 impl Scheduler for Bar {
@@ -71,11 +76,17 @@ impl Scheduler for Bar {
             // p.task ids are global; recover the slice index
             let sidx = tasks.iter().position(|t| t.id == p.task).unwrap();
             let _ = idx;
-            let tm = match &p.transfer {
-                TransferPlan::None => Secs::ZERO,
+            let (tm, src) = match &p.transfer {
+                TransferPlan::None => (Secs::ZERO, None),
                 _ => {
-                    let src = ctx.transfer_source(&tasks[sidx]).unwrap();
-                    ctx.tm_estimate(src, p.node, tasks[sidx].input_mb).unwrap_or(Secs::INF)
+                    let src = ctx
+                        .transfer_source_for(&tasks[sidx], p.node)
+                        .expect("phase-1 remote placement needs a readable source");
+                    (
+                        ctx.tm_estimate(src, p.node, tasks[sidx].input_mb)
+                            .unwrap_or(Secs::INF),
+                        Some(src),
+                    )
                 }
             };
             queues[col(p.node, ctx)].push(Item {
@@ -83,6 +94,7 @@ impl Scheduler for Bar {
                 node: p.node,
                 is_local: p.is_local,
                 tm,
+                src,
             });
         }
         // restore the ledger: phase 2 recomputes its own estimates
@@ -107,6 +119,11 @@ impl Scheduler for Bar {
         };
 
         // ---- phase 2: move the latest task while it helps ----
+        // (task, candidate column) -> (TM, source): the controller and
+        // the restored ledger are invariant across tuning iterations, so
+        // the per-candidate source argmax and path walk resolve once —
+        // the loop revisits the same pairs up to max_iters times
+        let mut cand: HashMap<(usize, usize), (Secs, Option<NodeId>)> = HashMap::new();
         for _ in 0..self.max_iters {
             let fins = finish_times(&queues, ctx);
             // latest task overall
@@ -121,8 +138,9 @@ impl Scheduler for Bar {
             let Some((qc, qpos, yc_lat)) = latest else { break };
             let item = queues[qc][qpos].clone();
             let t = &tasks[item.idx];
-            // candidate target: append to any other node's queue
-            let mut best: Option<(usize, Secs, Secs, bool)> = None; // (col, yc_new, tm, local)
+            // candidate target: append to any other node's queue; each
+            // candidate prices the pull from its own best-connected holder
+            let mut best: Option<(usize, Secs, Secs, bool, Option<NodeId>)> = None;
             for (c, nd) in ctx.authorized.iter().enumerate() {
                 if c == qc {
                     continue;
@@ -132,32 +150,36 @@ impl Scheduler for Bar {
                     .copied()
                     .unwrap_or(base_ledger.idle(*nd).max(floor));
                 let is_local = ctx.local_nodes(t).contains(nd);
-                let tm = if is_local || t.input_mb <= 0.0 {
-                    Secs::ZERO
+                let (tm, src) = if is_local || t.input_mb <= 0.0 {
+                    (Secs::ZERO, None)
                 } else {
-                    match ctx.transfer_source(t) {
-                        Some(src) => {
-                            ctx.tm_estimate(src, *nd, t.input_mb).unwrap_or(Secs::INF)
+                    *cand.entry((item.idx, c)).or_insert_with(|| {
+                        match ctx.transfer_source_for(t, *nd) {
+                            Some(src) => (
+                                ctx.tm_estimate(src, *nd, t.input_mb).unwrap_or(Secs::INF),
+                                Some(src),
+                            ),
+                            None => (Secs::INF, None),
                         }
-                        None => Secs::INF,
-                    }
+                    })
                 };
                 if !tm.is_finite() {
                     continue;
                 }
                 let yc_new = tail + tm + ctx.effective_compute(t, *nd);
-                if yc_new < yc_lat && best.map_or(true, |(_, byc, _, _)| yc_new < byc) {
-                    best = Some((c, yc_new, tm, is_local));
+                if yc_new < yc_lat && best.map_or(true, |(_, byc, _, _, _)| yc_new < byc) {
+                    best = Some((c, yc_new, tm, is_local, src));
                 }
             }
             match best {
-                Some((c, _, tm, is_local)) => {
+                Some((c, _, tm, is_local, src)) => {
                     queues[qc].remove(qpos);
                     queues[c].push(Item {
                         idx: item.idx,
                         node: ctx.authorized[c],
                         is_local,
                         tm,
+                        src,
                     });
                 }
                 None => break,
@@ -170,10 +192,12 @@ impl Scheduler for Bar {
         for (c, q) in queues.iter().enumerate() {
             for (pos, it) in q.iter().enumerate() {
                 let t = &tasks[it.idx];
-                let transfer = if it.is_local || t.input_mb <= 0.0 {
-                    TransferPlan::None
+                let (transfer, source) = if it.is_local || t.input_mb <= 0.0 {
+                    (TransferPlan::None, None)
                 } else {
-                    let src = ctx.transfer_source(t).unwrap();
+                    let src = it
+                        .src
+                        .expect("remote items carry the source their TM was priced from");
                     let path = ctx
                         .controller
                         .path(src, ctx.authorized[c])
@@ -184,7 +208,10 @@ impl Scheduler for Bar {
                     } else {
                         TrafficClass::Shuffle
                     };
-                    TransferPlan::FairShare { path, size_mb: t.input_mb, class }
+                    (
+                        TransferPlan::FairShare { path, size_mb: t.input_mb, class },
+                        Some(src),
+                    )
                 };
                 placements.push(Placement {
                     task: t.id,
@@ -192,6 +219,7 @@ impl Scheduler for Bar {
                     compute: ctx.effective_compute(t, ctx.authorized[c]),
                     transfer,
                     gate,
+                    source,
                     is_local: it.is_local,
                     is_map: t.is_map(),
                 });
@@ -223,6 +251,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let a = Bar::new().schedule(&ex.tasks, None, &mut ctx);
         assert_eq!(a.placements.len(), 9);
@@ -248,6 +278,8 @@ mod tests {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             Hds::new().schedule(&ex.tasks, None, &mut ctx);
         }
@@ -262,6 +294,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         Bar::new().schedule(&ex2.tasks, None, &mut ctx);
         assert!(makespan(ctx.ledger, &ex2.nodes) <= hds_ms + 1e-9);

@@ -21,6 +21,13 @@
 //! per-task sequential pass then confirms each remote decision against
 //! the live slot calendar (`Controller::plan_transfer`), which is the
 //! paper's `BW_{i,minnow} <= BW_rl` test in time-slot form.
+//!
+//! Remote pulls read from the replica holder with the **best current
+//! path bandwidth to the chosen node** ([`SchedCtx::transfer_source_for`]
+//! — the cost matrix rows are the element-wise best over all readable
+//! holders, and the committed reservation runs on the winning holder's
+//! path). The seed resolved one idle-chosen holder per task, which hid
+//! better-connected replicas from the whole round.
 
 use crate::cluster::IdleHeap;
 use crate::mapreduce::TaskSpec;
@@ -123,6 +130,7 @@ impl Scheduler for Bass {
                         compute: tp,
                         transfer: TransferPlan::None,
                         gate,
+                        source: None,
                         is_local: true,
                         is_map: t.is_map(),
                     });
@@ -140,8 +148,9 @@ impl Scheduler for Bass {
                         assign_local(ctx, &mut placements, &mut idle_heap);
                         continue;
                     }
-                    // Case 1.2 / 1.3 — ask the controller for a reserved window
-                    let src = match ctx.transfer_source(t) {
+                    // Case 1.2 / 1.3 — ask the controller for a reserved
+                    // window from the holder best connected to ND_minnow
+                    let src = match ctx.transfer_source_for(t, minnow) {
                         Some(s) => s,
                         None => {
                             assign_local(ctx, &mut placements, &mut idle_heap);
@@ -169,6 +178,7 @@ impl Scheduler for Bass {
                                 compute: tp_min,
                                 transfer: TransferPlan::Reserved(tr),
                                 gate,
+                                source: Some(src),
                                 is_local: false,
                                 is_map: t.is_map(),
                             });
@@ -181,7 +191,7 @@ impl Scheduler for Bass {
                     // Case 2 — locality starvation: reserved remote on minnow
                     let start = yi_minnow.max(floor);
                     let tp_min = ctx.effective_compute(t, minnow);
-                    match ctx.transfer_source(t).filter(|_| t.input_mb > 0.0) {
+                    match ctx.transfer_source_for(t, minnow).filter(|_| t.input_mb > 0.0) {
                         None => {
                             // no input to move (or sourceless): plain compute
                             ctx.ledger.occupy_until(minnow, start + tp_min);
@@ -192,6 +202,7 @@ impl Scheduler for Bass {
                                 compute: tp_min,
                                 transfer: TransferPlan::None,
                                 gate,
+                                source: None,
                                 is_local: false,
                                 is_map: t.is_map(),
                             });
@@ -214,6 +225,7 @@ impl Scheduler for Bass {
                                         compute: tp_min,
                                         transfer: TransferPlan::Reserved(tr),
                                         gate,
+                                        source: Some(src),
                                         is_local: false,
                                         is_map: t.is_map(),
                                     });
@@ -242,6 +254,7 @@ impl Scheduler for Bass {
                                             class,
                                         },
                                         gate,
+                                        source: Some(src),
                                         is_local: false,
                                         is_map: t.is_map(),
                                     });
@@ -275,6 +288,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost_model,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let mut bass = Bass::new();
         let a = bass.schedule(&ex.tasks, None, &mut ctx);
@@ -321,6 +336,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &model,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let a = Bass::new().schedule(&ex.tasks, None, &mut ctx);
         // identical decision trace through the XLA path
@@ -341,6 +358,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost_model,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         // TK1 replicas {ND2, ND3}: starved under {ND4}
         let a = Bass::new().schedule(&ex.tasks[..1], None, &mut ctx);
@@ -365,6 +384,8 @@ mod tests {
                 now: Secs::ZERO,
                 cost: &cost_model,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             match which {
                 "hds" => {

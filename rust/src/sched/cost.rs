@@ -5,12 +5,37 @@
 //! the exact tensor the AOT JAX/Pallas artifact consumes. BASS calls this
 //! once per scheduling round (the XLA hot path); the per-task sequential
 //! refinement then works off the returned TM matrix.
+//!
+//! The bandwidth row of a map task is the **element-wise best over its
+//! readable replica holders**: `bw[i][j] = max_s path_bw(s, j)` — each
+//! candidate node is costed against the holder it would actually pull
+//! from ([`SchedCtx::transfer_source_for`] resolves the same argmax for
+//! the committed pull). The seed resolved one idle-chosen holder per
+//! task, so the matrix never saw a better-connected replica; the legacy
+//! rule is preserved under `ctx.bw_aware_sources = false` (single
+//! min-idle source row), which 1-replica layouts make bit-identical.
 
 use crate::mapreduce::TaskSpec;
+use crate::runtime::exec::BW_SENTINEL_MB_S;
 use crate::runtime::{CostInputs, CostOutputs};
 use crate::topology::NodeId;
 
 use super::types::SchedCtx;
+
+/// One holder's bandwidth row over the authorized columns, f32-capped.
+fn bw_row(ctx: &SchedCtx<'_>, src: NodeId) -> Vec<f32> {
+    ctx.authorized
+        .iter()
+        .map(|&nd| {
+            let b = ctx.controller.path_bw_mb_s(src, nd, ctx.now);
+            if b.is_infinite() {
+                BW_SENTINEL_MB_S
+            } else {
+                b as f32
+            }
+        })
+        .collect()
+}
 
 /// Build the batched cost-model inputs for `tasks` over the authorized
 /// node set, in authorized-set column order.
@@ -25,30 +50,53 @@ pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
     // per-column speed factors hoisted out of the m*n loop (Perf L4);
     // applying them reproduces `effective_compute` bit for bit
     let speed = ctx.speed_cols();
-    // bw rows depend only on the transfer source; a job's tasks share a
-    // handful of sources, so memoize rows per source (perf: collapses
-    // m*n path-residual walks to distinct_sources*n — see §Perf).
-    let mut bw_rows: std::collections::HashMap<crate::topology::NodeId, Vec<f32>> =
+    // bw rows depend only on the holder set; a job's tasks share a
+    // handful of holders, so memoize one row per holder and one combined
+    // row per block (perf: collapses m*n path-residual walks to
+    // distinct_holders*n plus cheap element-wise maxes — see §Perf).
+    let mut holder_rows: std::collections::HashMap<NodeId, Vec<f32>> =
+        std::collections::HashMap::new();
+    let mut block_rows: std::collections::HashMap<crate::hdfs::BlockId, Option<Vec<f32>>> =
         std::collections::HashMap::new();
     for (i, t) in tasks.iter().enumerate() {
         sz.push(t.input_mb as f32);
-        let src = ctx.transfer_source(t);
+        let row: Option<&[f32]> = match t.input {
+            Some(b) if ctx.bw_aware_sources => block_rows
+                .entry(b)
+                .or_insert_with(|| {
+                    let mut combined: Option<Vec<f32>> = None;
+                    for s in
+                        ctx.namenode.readable_replicas(b, |nd| ctx.is_readable(nd))
+                    {
+                        let r = holder_rows
+                            .entry(s)
+                            .or_insert_with(|| bw_row(ctx, s))
+                            .clone();
+                        combined = Some(match combined {
+                            None => r,
+                            Some(mut c) => {
+                                for (cv, rv) in c.iter_mut().zip(&r) {
+                                    if *rv > *cv {
+                                        *cv = *rv;
+                                    }
+                                }
+                                c
+                            }
+                        });
+                    }
+                    combined
+                })
+                .as_deref(),
+            // legacy idle-only rule, and reduces (single hinted source)
+            _ => {
+                let src = match t.input {
+                    Some(b) => ctx.min_idle_replica(b),
+                    None => t.src_hint.filter(|&s| ctx.is_readable(s)),
+                };
+                src.map(|s| holder_rows.entry(s).or_insert_with(|| bw_row(ctx, s)).as_slice())
+            }
+        };
         let locals = ctx.local_nodes(t);
-        let row: Option<&Vec<f32>> = src.map(|s| {
-            bw_rows.entry(s).or_insert_with(|| {
-                nodes
-                    .iter()
-                    .map(|&nd| {
-                        let b = ctx.controller.path_bw_mb_s(s, nd, ctx.now);
-                        if b.is_infinite() {
-                            1e12
-                        } else {
-                            b as f32
-                        }
-                    })
-                    .collect()
-            }) as &Vec<f32>
-        });
         for (j, &nd) in nodes.iter().enumerate() {
             let k = i * n + j;
             tp[k] = match speed[j] {
@@ -115,6 +163,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let tasks =
             vec![TaskSpec::map(0, crate::hdfs::BlockId(0), 64.0, Secs(9.0), 0.0)];
@@ -122,14 +172,83 @@ mod tests {
         assert_eq!((inp.m, inp.n), (1, 4));
         assert_eq!(inp.local, vec![0.0, 1.0, 1.0, 0.0]);
         assert_eq!(inp.idle, vec![3.0, 9.0, 20.0, 7.0]);
-        // source = least-loaded replica = ND2 (idle 9 < 20); bw ND2->ND1 = 12.8
+        // element-wise best over {ND2, ND3}: both paths to ND1 run at the
+        // full 12.8, and the holder columns see themselves (sentinel)
         assert!((inp.bw[0] - 12.8).abs() < 1e-6);
-        assert!(inp.bw[1] > 1e11); // local-ish: src == dst
+        assert!(inp.bw[1] >= BW_SENTINEL_MB_S); // ND2 is a holder
+        assert!(inp.bw[2] >= BW_SENTINEL_MB_S); // ND3 is a holder
 
         let out = eval_batch(&tasks, &ctx);
         assert_eq!(out.best_idx[0], 0); // the canonical BASS pick: ND1
         assert_eq!(out.yc_at(0, 0), 17.0);
         assert_eq!(out.yc_at(0, 1), 18.0);
+    }
+
+    #[test]
+    fn legacy_rule_reproduces_the_single_idle_source_row() {
+        let (mut ctrl, nn, mut ledger, nodes) = fixture();
+        let cost = CostModel::rust_only();
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: false,
+        };
+        let tasks =
+            vec![TaskSpec::map(0, crate::hdfs::BlockId(0), 64.0, Secs(9.0), 0.0)];
+        let inp = build_inputs(&tasks, &ctx);
+        // source = least-loaded replica = ND2 (idle 9 < 20); the ND3
+        // column is costed from ND2 (12.8), not from itself
+        assert!((inp.bw[0] - 12.8).abs() < 1e-6);
+        assert!(inp.bw[1] >= BW_SENTINEL_MB_S); // src == dst
+        assert!((inp.bw[2] - 12.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn down_holders_are_not_costed() {
+        let (mut ctrl, nn, mut ledger, nodes) = fixture();
+        let cost = CostModel::rust_only();
+        // ND2 (the idle-chosen holder) is down: rows come from ND3 only
+        let mut down = vec![false; 6];
+        down[nodes[1].0] = true;
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+            down: down.clone(),
+            bw_aware_sources: true,
+        };
+        let tasks =
+            vec![TaskSpec::map(0, crate::hdfs::BlockId(0), 64.0, Secs(9.0), 0.0)];
+        let inp = build_inputs(&tasks, &ctx);
+        assert!((inp.bw[0] - 12.8).abs() < 1e-6); // still reachable via ND3
+        assert!((inp.bw[1] - 12.8).abs() < 1e-6, "ND2 must not see itself");
+        assert!(inp.bw[2] >= BW_SENTINEL_MB_S); // ND3 sees itself
+        // both holders down: the row is all zeros (unreachable)
+        let mut both = down;
+        both[nodes[2].0] = true;
+        let ctx2 = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes,
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+            down: both,
+            bw_aware_sources: true,
+        };
+        let inp2 = build_inputs(&tasks, &ctx2);
+        assert!(inp2.bw.iter().all(|&b| b == 0.0));
     }
 
     #[test]
@@ -144,6 +263,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let tasks = vec![TaskSpec::reduce(0, 128.0, Secs(12.0)).with_src_hint(nodes[2])];
         let inp = build_inputs(&tasks, &ctx);
@@ -162,6 +283,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let tasks = vec![TaskSpec::reduce(0, 128.0, Secs(12.0))];
         let inp = build_inputs(&tasks, &ctx);

@@ -91,11 +91,13 @@ impl Scheduler for Hds {
                     compute: tp,
                     transfer: TransferPlan::None,
                     gate,
+                    source: None,
                     is_local,
                     is_map: t.is_map(),
                 });
             } else {
-                let src = ctx.transfer_source(t).expect("remote task needs a source");
+                let src =
+                    ctx.transfer_source_for(t, j).expect("remote task needs a readable source");
                 let tm = ctx.tm_estimate(src, j, t.input_mb).unwrap_or(Secs::INF);
                 finish = t0 + tm + tp;
                 let path = ctx
@@ -111,6 +113,7 @@ impl Scheduler for Hds {
                     compute: tp,
                     transfer: TransferPlan::FairShare { path, size_mb: t.input_mb, class },
                     gate,
+                    source: Some(src),
                     is_local: false,
                     is_map: t.is_map(),
                 });
@@ -151,6 +154,8 @@ pub mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let a = Hds::new().schedule(&ex.tasks, None, &mut ctx);
         assert_eq!(a.placements.len(), 9);
@@ -184,6 +189,8 @@ pub mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         // tasks 0..8 minus TK9 are placeable locally under HDS
         let a = Hds::new().schedule(&ex.tasks[..8], None, &mut ctx);
@@ -202,6 +209,8 @@ pub mod tests {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let a = Hds::new().schedule(&ex.tasks[..1], Some(Secs(50.0)), &mut ctx);
         assert_eq!(a.placements[0].gate, Some(Secs(50.0)));

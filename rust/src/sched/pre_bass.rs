@@ -89,6 +89,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost_model,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let mut pb = PreBass::new();
         let a = pb.schedule(&ex.tasks, None, &mut ctx);
@@ -118,6 +120,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost_model,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let a_bass = Bass::new().schedule(&ex1.tasks, None, &mut ctx1);
         let mut ex2 = example1();
@@ -129,6 +133,8 @@ mod tests {
             now: Secs::ZERO,
             cost: &cost_model,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         let a_pre = PreBass::new().schedule(&ex2.tasks, None, &mut ctx2);
         for (b, p) in a_bass.placements.iter().zip(a_pre.placements.iter()) {

@@ -1,7 +1,7 @@
 //! Scheduler trait and shared context.
 
 use crate::cluster::Ledger;
-use crate::hdfs::Namenode;
+use crate::hdfs::{BlockId, Namenode};
 use crate::mapreduce::TaskSpec;
 use crate::runtime::CostModel;
 use crate::sdn::Controller;
@@ -24,6 +24,18 @@ pub struct SchedCtx<'a> {
     /// Per-node compute-speed factors (Guo & Fox [14]-style heterogeneous
     /// clusters): `TP_{i,j} = t.compute * speed[j]`. Empty = homogeneous.
     pub node_speed: Vec<f64>,
+    /// Per-host "currently crashed" flags (dynamics rounds set this from
+    /// the incident timeline). Empty = every host healthy. A down host
+    /// can neither run tasks (the authorized set excludes it) nor *serve
+    /// replica reads* — transfer sources are filtered through it.
+    pub down: Vec<bool>,
+    /// Replica-selection rule for remote pulls: `true` (the default) asks
+    /// the SDN controller for the holder with the best current path
+    /// bandwidth to the destination (the paper's thesis — the bandwidth
+    /// view, not node load, drives source choice); `false` replays the
+    /// seed's idle-only rule (Discussion 2 taken literally), kept as an
+    /// ablation and as the 1-replica equivalence reference.
+    pub bw_aware_sources: bool,
 }
 
 impl<'a> SchedCtx<'a> {
@@ -61,6 +73,11 @@ impl<'a> SchedCtx<'a> {
         cols
     }
 
+    /// Can `node` currently serve replica reads? (not crashed)
+    pub fn is_readable(&self, node: NodeId) -> bool {
+        !self.down.get(node.0).copied().unwrap_or(false)
+    }
+
     /// Local candidates of a task within the authorized set.
     pub fn local_nodes(&self, t: &TaskSpec) -> Vec<NodeId> {
         match t.input {
@@ -73,15 +90,52 @@ impl<'a> SchedCtx<'a> {
         }
     }
 
-    /// The replica to pull from when running remotely (Discussion 2:
-    /// least-loaded holder). Reduces use their src_hint.
-    pub fn transfer_source(&self, t: &TaskSpec) -> Option<NodeId> {
+    /// The replica to pull from when `t` runs remotely **on `dst`**.
+    /// Under the bandwidth-aware rule this is the readable holder with
+    /// the maximum current path bandwidth to `dst` (`BW_rl` from the SDN
+    /// controller at `now`), ties broken by minimum idle time, then by
+    /// replica order; under the legacy rule it is the least-loaded
+    /// readable holder regardless of `dst`. Reduces use their shuffle
+    /// hint. `None` = no readable source at all (block unreadable, or a
+    /// hint-less reduce).
+    pub fn transfer_source_for(&self, t: &TaskSpec, dst: NodeId) -> Option<NodeId> {
         match t.input {
             Some(b) => {
-                Some(self.namenode.least_loaded_replica(b, |n| self.ledger.idle(n).0))
+                if self.bw_aware_sources {
+                    self.best_replica(b, dst)
+                } else {
+                    self.min_idle_replica(b)
+                }
             }
-            None => t.src_hint,
+            None => t.src_hint.filter(|&s| self.is_readable(s)),
         }
+    }
+
+    /// Argmax-path-bandwidth readable holder for a block, pulling toward
+    /// `dst`. A holder that *is* `dst` wins outright (infinite local
+    /// bandwidth), which keeps the matrix and the sequential pass
+    /// consistent with the locality mask.
+    pub fn best_replica(&self, b: BlockId, dst: NodeId) -> Option<NodeId> {
+        let mut best: Option<(NodeId, f64, f64)> = None; // (holder, bw, idle)
+        for r in self.namenode.readable_replicas(b, |n| self.is_readable(n)) {
+            let bw = self.controller.path_bw_mb_s(r, dst, self.now);
+            let idle = self.ledger.idle(r).0;
+            let better = match best {
+                None => true,
+                Some((_, bbw, bidle)) => bw > bbw || (bw == bbw && idle < bidle),
+            };
+            if better {
+                best = Some((r, bw, idle));
+            }
+        }
+        best.map(|(r, _, _)| r)
+    }
+
+    /// The legacy idle-only source (Discussion 2 taken literally), health
+    /// filtered.
+    pub fn min_idle_replica(&self, b: BlockId) -> Option<NodeId> {
+        self.namenode
+            .least_loaded_replica(b, |n| self.is_readable(n), |n| self.ledger.idle(n).0)
     }
 
     /// Nominal transfer time estimate at current line rates (no slot

@@ -230,8 +230,8 @@ impl Controller {
 
     /// Effective bandwidth matrix for the cost model: `bw[i][j]` is the
     /// current path bandwidth from `sources[i]` to node `j` (MB/s), with
-    /// `f32::MAX`-safe capping for the local case handled by the caller's
-    /// locality mask.
+    /// the local case capped at the shared f32-safe sentinel
+    /// ([`crate::runtime::exec::BW_SENTINEL_MB_S`]).
     pub fn bw_matrix(&self, sources: &[NodeId], at: Secs) -> Vec<Vec<f64>> {
         let n = self.topo.n_hosts();
         sources
@@ -241,7 +241,7 @@ impl Controller {
                     .map(|j| {
                         let bw = self.path_bw_mb_s(s, NodeId(j), at);
                         if bw.is_infinite() {
-                            1e12
+                            crate::runtime::exec::BW_SENTINEL_MB_S as f64
                         } else {
                             bw
                         }

@@ -93,6 +93,10 @@ pub struct Placement {
     /// Earliest time the placement may *start* (used to gate reduces on
     /// the map phase / slowstart point). `None` = no gate.
     pub gate: Option<Secs>,
+    /// The replica holder the input is pulled from (`None` = data-local
+    /// or no input). Threaded into [`TaskRecord::source`] so traces and
+    /// oracles can audit which holder actually served the read.
+    pub source: Option<NodeId>,
     /// Whether this counts as data-local for the LR metric.
     pub is_local: bool,
     /// Map task? (for MT vs RT attribution)
@@ -138,6 +142,9 @@ pub struct TaskRecord {
     pub compute_start: Secs,
     /// Completion time (`ΥC`).
     pub finish: Secs,
+    /// The replica holder the input was pulled from (see
+    /// [`Placement::source`]).
+    pub source: Option<NodeId>,
     pub is_local: bool,
     pub is_map: bool,
 }
@@ -679,6 +686,7 @@ impl Engine {
             input_ready: ready,
             compute_start: start,
             finish,
+            source: p.source,
             is_local: p.is_local,
             is_map: p.is_map,
         };
@@ -751,6 +759,7 @@ mod tests {
             compute: Secs(compute),
             transfer,
             gate: None,
+            source: None,
             is_local,
             is_map: true,
         }

@@ -28,7 +28,7 @@
 use std::collections::HashMap;
 
 use crate::mapreduce::{TaskId, TaskSpec};
-use crate::scenario::{DynamicsOutcome, ReservationAudit, StreamOutcome};
+use crate::scenario::{DynamicsOutcome, PullAudit, ReservationAudit, StreamOutcome};
 use crate::sim::TaskRecord;
 use crate::topology::NodeId;
 use crate::util::Secs;
@@ -157,6 +157,28 @@ pub fn makespan_lower_bounds(
     Ok(())
 }
 
+/// Oracle 9: no pull from a down node — every committed remote pull's
+/// source was outside all of its downtime windows at the instant the
+/// scheduler chose it. This pins the replica-readability fix: the seed's
+/// `least_loaded_replica` ignored node health, so a crashed holder could
+/// be picked as a transfer source under `[dynamics]`.
+pub fn pulls_from_live_sources(
+    pulls: &[PullAudit],
+    down: &[(NodeId, Secs, Secs)],
+) -> Result<(), String> {
+    for p in pulls {
+        for &(nd, d0, d1) in down {
+            if p.source == nd && d0 <= p.at && p.at < d1 {
+                return Err(format!(
+                    "task {:?} was scheduled at {} to pull from {:?}, down over [{}, {})",
+                    p.task, p.at, p.source, d0, d1
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Oracle 6: per node, no two records' occupancy windows (pick-up to
 /// finish) overlap — the node FIFO must serialize tasks across jobs.
 pub fn no_slot_double_booking(records: &[TaskRecord]) -> Result<(), String> {
@@ -265,7 +287,7 @@ pub fn check_stream(
     stream_makespan_lower_bound(&jobs, outcome.last_finish, authorized, node_speed)
 }
 
-/// All four oracles over one dynamic run.
+/// All dynamic-run oracles (1-4 plus 9) over one outcome.
 pub fn check_dynamics(
     outcome: &DynamicsOutcome,
     tasks: &[TaskSpec],
@@ -275,6 +297,7 @@ pub fn check_dynamics(
     no_task_on_down_node(&outcome.records, &outcome.down_intervals)?;
     tasks_complete_exactly_once(&outcome.submitted, &outcome.records)?;
     reservations_within_capacity(&outcome.reservations)?;
+    pulls_from_live_sources(&outcome.pulls, &outcome.down_intervals)?;
     makespan_lower_bounds(&outcome.records, tasks, authorized, node_speed)
 }
 
@@ -291,6 +314,7 @@ mod tests {
             input_ready: Secs(picked),
             compute_start: Secs(picked),
             finish: Secs(finish),
+            source: None,
             is_local: true,
             is_map: true,
         }
@@ -304,6 +328,21 @@ mod tests {
         assert!(no_task_on_down_node(&[rec(0, 1, 6.0, 8.0)], &down).is_ok());
         assert!(no_task_on_down_node(&[rec(0, 0, 4.0, 6.0)], &down).is_err());
         assert!(no_task_on_down_node(&[rec(0, 0, 6.0, 7.0)], &down).is_err());
+    }
+
+    #[test]
+    fn down_sources_are_flagged() {
+        let down = vec![(NodeId(1), Secs(5.0), Secs(20.0))];
+        let pull = |src: usize, at: f64| PullAudit {
+            task: TaskId(0),
+            source: NodeId(src),
+            at: Secs(at),
+        };
+        assert!(pulls_from_live_sources(&[pull(0, 10.0)], &down).is_ok());
+        assert!(pulls_from_live_sources(&[pull(1, 4.0)], &down).is_ok());
+        assert!(pulls_from_live_sources(&[pull(1, 20.0)], &down).is_ok());
+        assert!(pulls_from_live_sources(&[pull(1, 5.0)], &down).is_err());
+        assert!(pulls_from_live_sources(&[pull(1, 12.0)], &down).is_err());
     }
 
     #[test]

@@ -129,6 +129,30 @@ pub fn fat_tree(
     (t, hosts)
 }
 
+/// Rack id per host: the edge switch the host hangs off — the input the
+/// Hadoop-style rack-aware placement policy needs. Hosts with no switch
+/// link (degenerate topologies) get `usize::MAX` (rackless, treated as a
+/// flat cluster by the policy when every host shares one rack).
+pub fn host_racks(topo: &Topology, hosts: &[NodeId]) -> Vec<usize> {
+    hosts
+        .iter()
+        .map(|&h| {
+            topo.links
+                .iter()
+                .find_map(|l| match (l.a, l.b) {
+                    (Endpoint::Host(x), Endpoint::Switch(s))
+                    | (Endpoint::Switch(s), Endpoint::Host(x))
+                        if x == h =>
+                    {
+                        Some(s.0)
+                    }
+                    _ => None,
+                })
+                .unwrap_or(usize::MAX)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +217,17 @@ mod tests {
         // same-leaf: 2 links; cross-leaf: host-edge-core-edge-host
         assert_eq!(t.route(hosts[0], hosts[2]).unwrap().len(), 2);
         assert_eq!(t.route(hosts[0], hosts[11]).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn host_racks_follow_edge_switches() {
+        let (t, hosts) = tree_cluster(2, 3, 100.0, 1000.0);
+        assert_eq!(host_racks(&t, &hosts), vec![0, 0, 0, 1, 1, 1]);
+        let f = fig2(100.0);
+        // ND1, ND2 on SW1; ND3, ND4 on SW2
+        assert_eq!(host_racks(&f.topo, &f.task_nodes), vec![0, 0, 1, 1]);
+        let (ft, fh) = fat_tree(2, 2, 2, 100.0, 1000.0);
+        assert_eq!(host_racks(&ft, &fh), vec![0, 0, 1, 1]);
     }
 
     #[test]

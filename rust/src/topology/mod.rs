@@ -11,6 +11,6 @@ pub mod builders;
 pub mod graph;
 pub mod route;
 
-pub use builders::{fat_tree, fig2, tree_cluster, Fig2};
+pub use builders::{fat_tree, fig2, host_racks, tree_cluster, Fig2};
 pub use graph::{Endpoint, Link, LinkId, NodeId, SwitchId, Topology};
 pub use route::PathCache;

@@ -64,11 +64,20 @@ pub struct WorkloadBuilder {
     pub replication: usize,
     pub reduces: usize,
     pub placement: PlacementPolicy,
+    /// Rack of each node in the slice handed to [`WorkloadBuilder::build`]
+    /// (empty = flat cluster; only the rack-aware policy reads it).
+    pub racks: Vec<usize>,
 }
 
 impl WorkloadBuilder {
     pub fn new(kind: JobKind) -> Self {
-        Self { kind, replication: 3, reduces: 2, placement: PlacementPolicy::RandomDistinct }
+        Self {
+            kind,
+            replication: 3,
+            reduces: 2,
+            placement: PlacementPolicy::RandomDistinct,
+            racks: Vec::new(),
+        }
     }
 
     /// Number of 64MB blocks for a data size (the paper's sweep points).
@@ -88,8 +97,15 @@ impl WorkloadBuilder {
         rng: &mut XorShift,
     ) -> JobSpec {
         let b = Self::n_blocks(data_mb);
-        let blocks =
-            self.placement.place(nn, nodes, b, BLOCK_MB, self.replication.min(nodes.len()), rng);
+        let blocks = self.placement.place(
+            nn,
+            nodes,
+            &self.racks,
+            b,
+            BLOCK_MB,
+            self.replication.min(nodes.len()),
+            rng,
+        );
         let mut tasks = Vec::with_capacity(b + self.reduces);
         for (i, &blk) in blocks.iter().enumerate() {
             tasks.push(TaskSpec::map(

@@ -140,6 +140,45 @@ fn stream_three_job_overlap_trace_is_bit_identical() {
     check("stream_example1.trace", &out);
 }
 
+/// Example 1 re-derived with its multi-replica blocks (2 holders per
+/// block) at placement granularity: which node each task landed on,
+/// which replica holder a remote task pulls from under the
+/// argmax-bandwidth source rule, and through which transfer plan. The
+/// Fig. 2 testbed's links are symmetric at schedule time, so every
+/// bandwidth argmax here ties and resolves by the min-idle tie-break —
+/// which is exactly why the record-level `example1.trace` fixture above
+/// survives the selection-rule change bit for bit.
+#[test]
+fn example1_replica_sources_are_pinned() {
+    let cost = CostModel::rust_only();
+    let mut out = String::new();
+    for kind in SchedulerKind::ALL {
+        let mut sess = SimSession::new(&ScenarioSpec::example1(kind));
+        let tasks = sess.tasks.clone();
+        let a = sess.schedule(&tasks, None, Secs::ZERO, &cost);
+        let mut placements = a.placements.clone();
+        placements.sort_by_key(|p| p.task);
+        out.push_str(&format!("== {} ==\n", kind.label()));
+        for p in &placements {
+            let src = match p.source {
+                Some(s) => s.0.to_string(),
+                None => "-".into(),
+            };
+            let plan = match &p.transfer {
+                bass::sim::TransferPlan::None => "none",
+                bass::sim::TransferPlan::Reserved(_) => "reserved",
+                bass::sim::TransferPlan::Prefetched(_) => "prefetch",
+                bass::sim::TransferPlan::FairShare { .. } => "fair",
+            };
+            out.push_str(&format!(
+                "task={} node={} src={} local={} plan={}\n",
+                p.task.0, p.node.0, src, p.is_local, plan
+            ));
+        }
+    }
+    check("example1_sources.trace", &out);
+}
+
 #[test]
 fn example3_static_trace_is_bit_identical() {
     let mut out = String::new();

@@ -63,6 +63,8 @@ fn full_job_through_public_api() {
             now: Secs::ZERO,
             cost: &cost,
             node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
         };
         Bass::new().schedule(&maps, None, &mut ctx)
     };
@@ -115,6 +117,81 @@ fn coordinator_trace_all_schedulers() {
 }
 
 #[test]
+fn bass_reads_from_the_better_connected_replica() {
+    // the replica-selection fix, end to end: two racks of two nodes
+    // (nodes 0,1 on switch A; 2,3 on switch B). A 64MB block has two
+    // replica holders — node 0 (idle, but its edge link is congested to
+    // 0.8 MB/s by background traffic) and node 2 (busier, but on the
+    // destination's switch at the full 12.8 MB/s). The task is starved
+    // onto node 3 (Case 2). The idle-only rule pulls from node 0 and
+    // crawls; the bandwidth-aware rule pulls from node 2.
+    let run = |bw_aware: bool| -> (bass::topology::NodeId, f64) {
+        // 102.4 Mbps = the paper's effective 12.8 MB/s (round numbers)
+        let (topo, nodes) = tree_cluster(2, 2, 102.4, 102.4);
+        let caps: Vec<f64> = topo.links.iter().map(|l| l.capacity_mbps).collect();
+        // node 0's own edge link (host-to-switch), found structurally —
+        // path link order is not part of the route contract
+        let edge0 = topo
+            .links
+            .iter()
+            .find(|l| {
+                l.a == bass::topology::Endpoint::Host(nodes[0])
+                    || l.b == bass::topology::Endpoint::Host(nodes[0])
+            })
+            .unwrap()
+            .id;
+        let mut ctrl = Controller::new(topo, 1.0);
+        let mut nn = Namenode::new();
+        let b = nn.add_block(64.0, vec![nodes[0], nodes[2]]);
+        // congest node 0's edge link: 12 of its 12.8 MB/s is background
+        ctrl.set_background_mb_s(edge0, 12.0);
+        let tasks = vec![TaskSpec::map(0, b, 64.0, Secs(9.0), 0.0)];
+        let cost = CostModel::rust_only();
+        // node 0 idle at 0 (the idle-rule favorite), node 2 busy until 5
+        let mut ledger = Ledger::with_initial(vec![
+            Secs::ZERO,
+            Secs::ZERO,
+            Secs(5.0),
+            Secs::ZERO,
+        ]);
+        let assignment = {
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: vec![nodes[3]],
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: bw_aware,
+            };
+            Bass::new().schedule(&tasks, None, &mut ctx)
+        };
+        let p = &assignment.placements[0];
+        assert_eq!(p.node, nodes[3]);
+        assert!(!p.is_local);
+        let src = p.source.expect("starved task must pull remotely");
+        let net = FlowNet::new(&caps);
+        let mut engine = Engine::new(net, vec![Secs::ZERO; 4]);
+        engine.load(&assignment);
+        let records = engine.run();
+        (src, records[0].finish.0)
+    };
+    let (src_bw, makespan_bw) = run(true);
+    let (src_idle, makespan_idle) = run(false);
+    // the legacy rule picks the idle holder behind the congested link...
+    assert_eq!(src_idle, bass::topology::NodeId(0));
+    // ...the bandwidth-aware rule reads from the same-switch replica
+    assert_eq!(src_bw, bass::topology::NodeId(2));
+    // 64MB at 12.8 MB/s from t=0 arrives at 5, +9s compute = 14;
+    // at 0.8 MB/s the pull alone takes 80s
+    assert!((makespan_bw - 14.0).abs() < 1e-9, "bw-aware makespan {makespan_bw}");
+    assert!((makespan_idle - 89.0).abs() < 1e-9, "idle-rule makespan {makespan_idle}");
+    assert!(makespan_bw < makespan_idle, "the fix must strictly win here");
+}
+
+#[test]
 fn locality_starvation_cluster_subset() {
     // authorize a node subset that cannot hold any replica: Case 2 path
     let (topo, nodes) = tree_cluster(2, 3, 100.0, 100.0);
@@ -133,6 +210,8 @@ fn locality_starvation_cluster_subset() {
         now: Secs::ZERO,
         cost: &cost,
         node_speed: Vec::new(),
+        down: Vec::new(),
+        bw_aware_sources: true,
     };
     let a = Bass::new().schedule(&tasks, None, &mut ctx);
     let p = &a.placements[0];

@@ -288,6 +288,47 @@ fn deterministic_burst_contends_and_satisfies_the_oracles() {
 }
 
 #[test]
+fn single_replica_crashes_defer_instead_of_pulling_from_down_nodes() {
+    // replication 1: a crashed node's blocks have no surviving holder, so
+    // their tasks must defer to the recovery instant — never pull from
+    // the dead holder (oracle 9) — and still complete exactly once. The
+    // seed picked the crashed holder as a transfer source here.
+    let cost = CostModel::rust_only();
+    let dynamics = DynamicsSpec {
+        node_failures: 2,
+        mttr_secs: 60.0,
+        horizon_secs: 15.0, // crash early, while the wave is in flight
+        ..DynamicsSpec::none()
+    };
+    for kind in ALL {
+        let mut spec = spec_for(
+            &Case {
+                spec_seed: 77,
+                switches: 2,
+                hosts_per_switch: 3,
+                tasks: 12,
+                dynamics: dynamics.clone(),
+            },
+            kind,
+        );
+        spec.replication = 1;
+        let sess = SimSession::new(&spec);
+        let tasks = sess.tasks.clone();
+        let out = sess.run_dynamic(&cost);
+        assert_eq!(out.records.len(), out.submitted.len(), "{}", kind.label());
+        oracles::check_dynamics(&out, &tasks, &sess.nodes, &sess.spec.node_speed)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        // a deferral means some block had no readable holder at a round
+        // start — the namenode's under-replication view must have
+        // surfaced it, and the run must have taken extra rounds
+        if out.deferrals > 0 {
+            assert!(out.under_replicated_peak > 0, "{}", kind.label());
+            assert!(out.rounds > 1, "{}", kind.label());
+        }
+    }
+}
+
+#[test]
 fn heavy_forced_churn_still_satisfies_the_oracles() {
     // deterministic worst case: early crashes with long repairs, on top
     // of degradation + stragglers + cross traffic, for every scheduler

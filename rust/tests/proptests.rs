@@ -45,6 +45,7 @@ fn build(s: &Scenario) -> (Controller, Namenode, Vec<NodeId>, Vec<TaskSpec>, Vec
     let blocks = PlacementPolicy::RandomDistinct.place(
         &mut nn,
         &nodes,
+        &[],
         s.m_tasks,
         BLOCK_MB,
         s.replication,
@@ -77,6 +78,8 @@ fn prop_schedulers_place_each_task_once_and_validly() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             let a = sched.schedule(&tasks, None, &mut ctx);
             if a.placements.len() != tasks.len() {
@@ -129,6 +132,8 @@ fn prop_bass_estimate_matches_execution() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             Bass::new().schedule(&tasks, None, &mut ctx)
         };
@@ -309,6 +314,8 @@ fn prop_engine_records_consistent() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             Hds::new().schedule(&tasks, None, &mut ctx)
         };
@@ -356,6 +363,8 @@ fn prop_prefetch_never_later() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             let a = if pre {
                 PreBass::new().schedule(&tasks, None, &mut ctx)
@@ -800,6 +809,8 @@ fn prop_uniform_speed_scaling() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: vec![speed; nodes.len()],
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             Bass::new().schedule(&tasks, None, &mut ctx);
             nodes.iter().map(|&n| ledger.idle(n).0).fold(0.0, f64::max)
@@ -1428,6 +1439,7 @@ mod engine_reference {
                 input_ready: ready,
                 compute_start: start,
                 finish,
+                source: p.source,
                 is_local: p.is_local,
                 is_map: p.is_map,
             });
@@ -1523,6 +1535,7 @@ fn engine_case_assignment(case: &EngineCase) -> Assignment {
                 compute: Secs(compute),
                 transfer,
                 gate: gate.map(Secs),
+                source: None,
                 is_local,
                 is_map: true,
             }
@@ -1633,11 +1646,13 @@ mod sched_reference {
                     compute: tp,
                     transfer: TransferPlan::None,
                     gate,
+                    source: None,
                     is_local,
                     is_map: t.is_map(),
                 });
             } else {
-                let src = ctx.transfer_source(t).expect("remote task needs a source");
+                let src =
+                    ctx.transfer_source_for(t, j).expect("remote task needs a readable source");
                 let tm = ctx.tm_estimate(src, j, t.input_mb).unwrap_or(Secs::INF);
                 let finish = t0 + tm + tp;
                 ctx.ledger.occupy_until(j, finish);
@@ -1651,6 +1666,7 @@ mod sched_reference {
                     compute: tp,
                     transfer: TransferPlan::FairShare { path, size_mb: t.input_mb, class },
                     gate,
+                    source: Some(src),
                     is_local: false,
                     is_map: t.is_map(),
                 });
@@ -1697,6 +1713,7 @@ mod sched_reference {
                     compute: tp,
                     transfer: TransferPlan::None,
                     gate,
+                    source: None,
                     is_local: true,
                     is_map: t.is_map(),
                 });
@@ -1713,7 +1730,7 @@ mod sched_reference {
                         assign_local(ctx, &mut placements);
                         continue;
                     }
-                    let src = match ctx.transfer_source(t) {
+                    let src = match ctx.transfer_source_for(t, minnow) {
                         Some(s) => s,
                         None => {
                             assign_local(ctx, &mut placements);
@@ -1740,6 +1757,7 @@ mod sched_reference {
                                 compute: tp_min,
                                 transfer: TransferPlan::Reserved(tr),
                                 gate,
+                                source: Some(src),
                                 is_local: false,
                                 is_map: t.is_map(),
                             });
@@ -1750,7 +1768,7 @@ mod sched_reference {
                 None => {
                     let start = yi_minnow.max(floor);
                     let tp_min = ctx.effective_compute(t, minnow);
-                    match ctx.transfer_source(t).filter(|_| t.input_mb > 0.0) {
+                    match ctx.transfer_source_for(t, minnow).filter(|_| t.input_mb > 0.0) {
                         None => {
                             ctx.ledger.occupy_until(minnow, start + tp_min);
                             placements.push(Placement {
@@ -1759,6 +1777,7 @@ mod sched_reference {
                                 compute: tp_min,
                                 transfer: TransferPlan::None,
                                 gate,
+                                source: None,
                                 is_local: false,
                                 is_map: t.is_map(),
                             });
@@ -1779,6 +1798,7 @@ mod sched_reference {
                                         compute: tp_min,
                                         transfer: TransferPlan::Reserved(tr),
                                         gate,
+                                        source: Some(src),
                                         is_local: false,
                                         is_map: t.is_map(),
                                     });
@@ -1803,6 +1823,7 @@ mod sched_reference {
                                             class,
                                         },
                                         gate,
+                                        source: Some(src),
                                         is_local: false,
                                         is_map: t.is_map(),
                                     });
@@ -1832,6 +1853,7 @@ fn assignments_equal(want: &Assignment, got: &Assignment) -> Result<(), String> 
             || w.node != g.node
             || w.compute != g.compute
             || w.gate != g.gate
+            || w.source != g.source
             || w.is_local != g.is_local
             || w.is_map != g.is_map
         {
@@ -1901,6 +1923,8 @@ fn prop_hds_matches_reference() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: case.speeds.clone(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             let gate = case.gate.map(Secs);
             let a = if use_reference {
@@ -1938,6 +1962,8 @@ fn prop_bass_matches_reference() {
                 now: Secs::ZERO,
                 cost: &cost,
                 node_speed: case.speeds.clone(),
+                down: Vec::new(),
+                bw_aware_sources: true,
             };
             let gate = case.gate.map(Secs);
             if use_reference {
@@ -1957,6 +1983,181 @@ fn prop_bass_matches_reference() {
         }
         if ledger_want != ledger_got {
             return Err("ledger diverged".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- replica-selection equivalence + bandwidth-row properties ----
+
+/// With every block at replication 1, the bandwidth-aware source rule
+/// and the legacy idle-only rule are the *same function* — placements,
+/// transfer plans, sources and ledgers must match bit for bit for every
+/// scheduler. This pins the fix's backward-compatibility half: sparse
+/// layouts behave exactly as the seed did.
+#[test]
+fn prop_single_replica_source_rules_coincide() {
+    forall(0x1A5B, 60, gen_sched_case, |case| {
+        let s = &case.scenario;
+        let single = Scenario {
+            n_switches: s.n_switches,
+            per_switch: s.per_switch,
+            m_tasks: s.m_tasks,
+            replication: 1,
+            seed: s.seed,
+        };
+        for kind in ["hds", "bar", "bass"] {
+            let run = |bw_aware: bool| -> (Assignment, Ledger) {
+                let (mut ctrl, nn, nodes, tasks, _) = build(&single);
+                let cost = CostModel::rust_only();
+                let mut ledger = Ledger::new(nodes.len());
+                let mut ctx = SchedCtx {
+                    controller: &mut ctrl,
+                    namenode: &nn,
+                    ledger: &mut ledger,
+                    authorized: nodes.clone(),
+                    now: Secs::ZERO,
+                    cost: &cost,
+                    node_speed: case.speeds.clone(),
+                    down: Vec::new(),
+                    bw_aware_sources: bw_aware,
+                };
+                let gate = case.gate.map(Secs);
+                let a = match kind {
+                    "hds" => Hds::new().schedule(&tasks, gate, &mut ctx),
+                    "bar" => Bar::new().schedule(&tasks, gate, &mut ctx),
+                    _ => Bass::new().schedule(&tasks, gate, &mut ctx),
+                };
+                (a, ledger)
+            };
+            let (want, ledger_want) = run(false);
+            let (got, ledger_got) = run(true);
+            assignments_equal(&want, &got).map_err(|e| format!("{kind}: {e}"))?;
+            if ledger_want != ledger_got {
+                return Err(format!("{kind}: ledger diverged at replication 1"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The batched bandwidth rows are the element-wise best over every
+/// readable holder — re-derived here cell by cell against the
+/// controller, independently of `build_inputs`' memoization.
+#[test]
+fn prop_bw_rows_are_elementwise_best() {
+    use bass::runtime::exec::BW_SENTINEL_MB_S;
+    forall(0xBE57, 60, gen_scenario, |s| {
+        let (mut ctrl, nn, nodes, tasks, _) = build(s);
+        let cost = CostModel::rust_only();
+        let mut ledger = Ledger::new(nodes.len());
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
+        };
+        let inp = bass::sched::cost::build_inputs(&tasks, &ctx);
+        for (i, t) in tasks.iter().enumerate() {
+            let b = t.input.expect("map tasks");
+            for (j, &nd) in nodes.iter().enumerate() {
+                let want = nn
+                    .block(b)
+                    .replicas
+                    .iter()
+                    .map(|&r| {
+                        let bw = ctx.controller.path_bw_mb_s(r, nd, Secs::ZERO);
+                        if bw.is_infinite() {
+                            BW_SENTINEL_MB_S
+                        } else {
+                            bw as f32
+                        }
+                    })
+                    .fold(0.0f32, f32::max);
+                let got = inp.bw[i * nodes.len() + j];
+                if (want - got).abs() > 1e-6 * want.max(1.0) {
+                    return Err(format!(
+                        "task {i} node {j}: bw {got} != element-wise best {want}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Saturation contract of the centralized bandwidth sentinel
+/// (`runtime::exec::BW_SENTINEL_MB_S`): an infinite-bandwidth (local)
+/// cell always yields a strictly smaller TM — and, at equal TP and idle,
+/// a strictly smaller ΥC — than any remote cell at a physical bandwidth,
+/// and nothing overflows to f32 infinity on the way.
+#[test]
+fn prop_local_sentinel_cells_always_beat_remote() {
+    use bass::runtime::exec::{BW_SENTINEL_MB_S, INF};
+    use bass::runtime::{CostInputs, CostModel};
+    #[derive(Debug)]
+    struct SentinelCase {
+        sz: f32,
+        tp: f32,
+        idle: f32,
+        remote_bw: f32,
+        masked: bool,
+    }
+    let gen = |r: &mut XorShift| SentinelCase {
+        sz: r.uniform(0.1, 10_000.0) as f32,
+        tp: r.uniform(0.0, 900.0) as f32,
+        idle: r.uniform(0.0, 500.0) as f32,
+        // up to 1e6 MB/s: far beyond any physical link, far below the cap
+        remote_bw: r.uniform(1e-3, 1e6) as f32,
+        masked: r.chance(0.5),
+    };
+    forall(0x5E47, 300, gen, |c| {
+        // column 0: the "local" cell (sentinel bw; optionally the replica
+        // mask on top, as build_inputs emits for holder columns);
+        // column 1: a remote cell at a physical bandwidth
+        let inp = CostInputs {
+            m: 1,
+            n: 2,
+            sz: vec![c.sz],
+            bw: vec![BW_SENTINEL_MB_S, c.remote_bw],
+            tp: vec![c.tp; 2],
+            local: vec![if c.masked { 1.0 } else { 0.0 }, 0.0],
+            idle: vec![c.idle; 2],
+            ts: 1.0,
+        };
+        let out = CostModel::eval_rust(&inp);
+        let (tm_local, tm_remote) = (out.tm_at(0, 0), out.tm_at(0, 1));
+        if c.masked && tm_local != 0.0 {
+            return Err(format!("masked local TM must be exactly 0, got {tm_local}"));
+        }
+        if tm_local >= tm_remote {
+            return Err(format!(
+                "sentinel TM {tm_local} not below remote TM {tm_remote} (bw {})",
+                c.remote_bw
+            ));
+        }
+        // ΥC adds TP + idle on top; a microscopic remote TM can round
+        // into the same f32 as the local sum, so the guarantee is
+        // "never worse, and the argmin keeps the local column on ties"
+        if out.yc_at(0, 0) > out.yc_at(0, 1) {
+            return Err(format!(
+                "local ΥC {} above remote ΥC {} at equal TP/idle",
+                out.yc_at(0, 0),
+                out.yc_at(0, 1)
+            ));
+        }
+        for v in [out.yc_at(0, 0), out.yc_at(0, 1), tm_local, tm_remote] {
+            if !v.is_finite() || v >= INF {
+                return Err(format!("sentinel arithmetic saturated: {v}"));
+            }
+        }
+        if out.best_idx[0] != 0 {
+            return Err("argmin must pick the local column".into());
         }
         Ok(())
     });
@@ -2059,6 +2260,7 @@ fn build_explicit_jobs(
             let blocks = PlacementPolicy::RandomDistinct.place(
                 &mut sess.nn,
                 &sess.nodes,
+                &[],
                 sh.maps,
                 BLOCK_MB,
                 2.min(sess.nodes.len()),
