@@ -2,8 +2,9 @@
 //! scale, slot-calendar ops, flow-network churn, engine replay, XLA
 //! cost-model calls. This is the §Perf driver (EXPERIMENTS.md).
 //!
-//! Measured results land in `BENCH_calendar.json`, `BENCH_flownet.json`
-//! and `BENCH_sched.json` at the repo root; the CI bench-smoke job runs
+//! Measured results land in `BENCH_calendar.json`, `BENCH_flownet.json`,
+//! `BENCH_sched.json` and `BENCH_scale.json` at the repo root; the CI
+//! bench-smoke job runs
 //! this binary with `BASS_BENCH_QUICK=1` and fails on >2x regressions
 //! against the committed baselines (tools/check_bench_regression.py).
 
@@ -14,11 +15,12 @@ use bass::hdfs::{Namenode, PlacementPolicy};
 use bass::mapreduce::TaskSpec;
 use bass::runtime::{CostInputs, CostModel};
 use bass::scenario::SimSession;
+use bass::sched::cost::eval_batch;
 use bass::sched::{Bass, Hds, SchedCtx, Scheduler, SchedulerKind};
 use bass::sdn::{Controller, SlotCalendar, TrafficClass};
 use bass::sim::FlowNet;
-use bass::topology::builders::tree_cluster;
-use bass::topology::{LinkId, NodeId};
+use bass::topology::builders::{fat_tree, tree_cluster};
+use bass::topology::{LinkId, NodeId, PathCache};
 use bass::util::{Secs, XorShift, BLOCK_MB};
 
 fn big_cluster(
@@ -264,6 +266,63 @@ fn main() {
     let s10k = b.bench("calendar_sparse/reserve_release_10k_horizon", calendar_case(10_000));
     let s1m = b.bench("calendar_sparse/reserve_release_1M_horizon", calendar_case(1_000_000));
     write_calendar_json(&s10k, &s1m);
+
+    // ten-kilonode tier (BENCH_scale.json): the kilonode sharded BASS
+    // point, the batched cost kernel, and hierarchical path-cache
+    // construction — the three hot paths the sharded stack rebuilds
+    let mut scale_cases: Vec<(String, Stats)> = Vec::new();
+    {
+        // kilonode sharded point: session build + one BASS round at 1024
+        // hosts / 2048 tasks. Per-rack ShardedIdleHeaps and the
+        // shard-grouped minnow scan run under the hood; the property
+        // pins guarantee the schedule matches the flat path bitwise.
+        let spec = fat_scale_spec(128, SchedulerKind::Bass);
+        let cost = CostModel::rust_only();
+        let stats = b.bench("scale_shard/fat_tree_1024hosts_build+schedule", || {
+            let mut sess = SimSession::new(&spec);
+            let tasks = sess.tasks.clone();
+            sess.schedule(&tasks, None, Secs::ZERO, &cost)
+        });
+        scale_cases.push(("scale_shard".to_string(), stats));
+    }
+    {
+        // batched cost kernel: blocked build_inputs (per-holder bandwidth
+        // rows reused across tasks sharing a block) + evaluation of one
+        // 2048 x 512 matrix
+        let (mut ctrl, nn, nodes, tasks) = big_cluster(8, 64, 2048);
+        let cost = CostModel::rust_only();
+        let stats = b.bench("cost_batch/build+eval_2048x512", || {
+            let mut ledger = Ledger::new(nodes.len());
+            let ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
+            };
+            eval_batch(&tasks, &ctx)
+        });
+        scale_cases.push(("cost_batch".to_string(), stats));
+    }
+    {
+        // hierarchical path cache: pod-level two-tier build on the
+        // 1024-host fat tree (the flat per-source table this replaces
+        // held one BFS result per host pair)
+        let (topo, _) = fat_tree(8, 128, 4, 100.0, 10_000.0);
+        let stats = b.bench("pathcache_hier/build_fat_1024hosts", || PathCache::build(&topo));
+        scale_cases.push(("pathcache_hier".to_string(), stats));
+    }
+    write_json(
+        "BENCH_scale.json",
+        "scale_shard",
+        "kilonode fat-tree BASS round (1024 hosts / 2048 tasks, per-rack shards); batched cost kernel on a 2048x512 matrix; hierarchical PathCache build at 1024 hosts",
+        "Perf ten-kilonode tier: sharded idle heaps + shard-grouped scans, blocked build_inputs with shared row memo + row-chunked eval, pod-level two-tier path cache",
+        &scale_cases,
+    );
 }
 
 fn case_row(name: &str, s: &Stats) -> String {

@@ -5,7 +5,7 @@ use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep, StreamRun};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
-    run_example1, run_example3, run_fig5, run_scale, run_scale_fat, run_skew,
+    run_example1, run_example3, run_fig5, run_scale, run_scale_fat_with, run_skew,
     run_stream_sweep_with, run_table1, SchedulerKind, StreamPoint, Table1Config,
 };
 use crate::metrics::NodeTimeline;
@@ -28,7 +28,11 @@ COMMANDS:
   e2e [--jobs N]        End-to-end online trace through the coordinator
   ablate                Slot-duration / background / heterogeneity ablations
   scale [--fat]         Cluster-size scalability sweep (paper future work);
-                        --fat runs the 8-leaf fat-tree grid up to 1024 nodes
+        [--hosts h1,h2] --fat runs the 8-leaf fat-tree grid (default up to
+        [--shards N]    1024 hosts); --hosts picks total host counts
+                        (positive multiples of 8) and --shards caps the
+                        scheduler-state shard count — sharding is
+                        schedule-invariant, only wall times move
   dynamics [--levels l] Churn sweep: BASS/BAR/HDS under node failures, link
                         degradation, stragglers and cross traffic (levels
                         0 = static .. heavy; default 0,0.5,1,2)
@@ -81,6 +85,13 @@ DEFINE YOUR OWN STREAM:
     max_active (admission cap), min_free_slots (slot gate), seed
   Every scheduler at one rate faces the identical Poisson arrival trace;
   per-job slowdown is measured against the same job run alone.
+
+DEFINE YOUR OWN SCALE SWEEP:
+  `bass run --config my.toml` with `run = \"scale\"` plays the
+  scalability sweep; the optional [scale] table sets
+    fat = true|false, hosts = [multiples of 8], shards = N, threads = N
+  (hosts/shards require fat = true). Sharding only regroups candidate
+  scans: every metric is bit-identical under any shard cap.
 ";
 
 /// Parse `--key value` style options from the arg list.
@@ -201,22 +212,42 @@ pub fn run(args: Vec<String>) -> i32 {
         "scale" => {
             let threads = opt_threads(&args);
             let fat = args.iter().any(|a| a == "--fat");
-            let pts = if fat {
-                println!(
-                    "== scalability sweep (8-leaf fat tree up to 1024 hosts, {threads} threads) =="
-                );
-                run_scale_fat(&[4, 16, 64, 128], &CostModel::rust_only(), threads)
-            } else {
-                println!("== scalability sweep (8 switches x N hosts, {threads} threads) ==");
-                run_scale(&[2, 4, 8, 16], &CostModel::rust_only(), threads)
+            let shards = match opt(&args, "--shards") {
+                None => None,
+                Some(raw) => match raw.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => Some(n),
+                    _ => {
+                        eprintln!("--shards must be a positive shard count, got {raw:?}");
+                        return 2;
+                    }
+                },
             };
-            for p in pts {
-                println!(
-                    "n={:<4} m={:<4} {:<5} sched {:>8.2}ms  makespan {:>7.1}s",
-                    p.nodes, p.tasks, p.scheduler, p.sched_secs * 1e3, p.makespan
-                );
+            let hosts: Option<Vec<usize>> = match opt(&args, "--hosts") {
+                None => None,
+                Some(raw) => {
+                    // same contract as --reps/--rates: a typo'd entry
+                    // must error, not silently run a different sweep
+                    let wanted = raw.split(',').filter(|s| !s.trim().is_empty()).count();
+                    let v: Vec<usize> = raw
+                        .split(',')
+                        .filter_map(|x| x.trim().parse().ok())
+                        .filter(|&h| h >= 8 && h % 8 == 0)
+                        .collect();
+                    if v.is_empty() || v.len() != wanted {
+                        eprintln!(
+                            "--hosts must be a comma list of positive multiples of 8 \
+                             (the grids use 8 leaves/switches), got {raw:?}"
+                        );
+                        return 2;
+                    }
+                    Some(v)
+                }
+            };
+            if !fat && (shards.is_some() || hosts.is_some()) {
+                eprintln!("--shards/--hosts apply to the fat-tree grid: add --fat");
+                return 2;
             }
-            0
+            run_scale_cmd(fat, hosts, shards, threads)
         }
         "dynamics" => {
             let levels = opt(&args, "--levels")
@@ -384,6 +415,17 @@ pub fn run(args: Vec<String>) -> i32 {
                     print!("{}", trace::table1_markdown(&rows));
                     0
                 }
+                RunConfig::Scale => {
+                    let s = cfg.scale.expect("scale run carries its sweep");
+                    let threads = opt(&args, "--threads")
+                        .and_then(|x| x.parse().ok())
+                        .map(|t: usize| t.max(1))
+                        .unwrap_or(s.threads);
+                    let hosts =
+                        if s.hosts.is_empty() { None } else { Some(s.hosts.clone()) };
+                    println!("(scale sweep from {path})");
+                    run_scale_cmd(s.fat, hosts, s.shards, threads)
+                }
             }
         }
         "help" | "--help" | "-h" => {
@@ -395,6 +437,52 @@ pub fn run(args: Vec<String>) -> i32 {
             2
         }
     }
+}
+
+/// The `scale` sweep body shared by the subcommand and the `[scale]`
+/// config route. `hosts` are total host counts (validated multiples of 8
+/// — the grids have 8 leaves/switches); `shards` caps the controller's
+/// shard plan on the fat grid.
+fn run_scale_cmd(
+    fat: bool,
+    hosts: Option<Vec<usize>>,
+    shards: Option<usize>,
+    threads: usize,
+) -> i32 {
+    let cost = CostModel::rust_only();
+    let pts = if fat {
+        let per_edge: Vec<usize> = hosts
+            .map(|v| v.iter().map(|h| h / 8).collect())
+            .unwrap_or_else(|| vec![4, 16, 64, 128]);
+        let max_hosts = per_edge.iter().map(|p| p * 8).max().unwrap_or(0);
+        match shards {
+            Some(n) => println!(
+                "== scalability sweep (8-leaf fat tree up to {max_hosts} hosts, \
+                 {n} shards, {threads} threads) =="
+            ),
+            None => println!(
+                "== scalability sweep (8-leaf fat tree up to {max_hosts} hosts, \
+                 {threads} threads) =="
+            ),
+        }
+        run_scale_fat_with(
+            &per_edge,
+            &[SchedulerKind::Bass, SchedulerKind::Hds],
+            shards,
+            &cost,
+            threads,
+        )
+    } else {
+        println!("== scalability sweep (8 switches x N hosts, {threads} threads) ==");
+        run_scale(&[2, 4, 8, 16], &cost, threads)
+    };
+    for p in pts {
+        println!(
+            "n={:<4} m={:<4} {:<5} sched {:>8.2}ms  makespan {:>7.1}s",
+            p.nodes, p.tasks, p.scheduler, p.sched_secs * 1e3, p.makespan
+        );
+    }
+    0
 }
 
 fn load_config(path: &str) -> Result<ExperimentConfig, i32> {
@@ -580,6 +668,49 @@ mod tests {
                 ["skew", "--reps", bad].iter().map(|s| s.to_string()).collect();
             assert_eq!(run(args), 2, "--reps {bad}");
         }
+    }
+
+    #[test]
+    fn scale_subcommand_runs_a_small_fat_grid() {
+        let args: Vec<String> =
+            ["scale", "--fat", "--hosts", "16,32", "--shards", "2", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(args), 0);
+    }
+
+    #[test]
+    fn scale_subcommand_rejects_bad_knobs() {
+        // same strictness as --reps/--rates: no silent default sweep
+        for bad in [
+            vec!["scale", "--fat", "--shards", "0"],
+            vec!["scale", "--fat", "--shards", "abc"],
+            vec!["scale", "--fat", "--hosts", "12"],
+            vec!["scale", "--fat", "--hosts", "16,oops"],
+            vec!["scale", "--shards", "4"], // requires --fat
+            vec!["scale", "--hosts", "16"], // requires --fat
+        ] {
+            let args: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            assert_eq!(run(args), 2, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn scale_config_route_runs() {
+        let dir = std::env::temp_dir().join("bass_cli_scale_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("scale.toml");
+        std::fs::write(
+            &f,
+            "run = \"scale\"\n[scale]\nfat = true\nhosts = [16]\nshards = 2\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+        // a typo'd [scale] key is rejected, not silently defaulted
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "run = \"scale\"\n[scale]\nshard = 2\n").unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), bad.display().to_string()]), 2);
     }
 
     #[test]

@@ -147,6 +147,121 @@ impl IdleHeap {
     pub fn update(&mut self, col: usize, node: NodeId, avail: Secs) {
         self.heap.push(Reverse((avail, node.0, col)));
     }
+
+    fn empty() -> Self {
+        Self { heap: BinaryHeap::new() }
+    }
+}
+
+/// Host → shard assignment for sharded scheduler state (ten-kilonode
+/// tier, DESIGN.md §10).
+///
+/// The default plan groups hosts by their edge switch (rack), the same
+/// partition [`crate::topology::host_racks`] reports; rackless hosts
+/// (no edge-switch link) collect in one trailing shard so every host is
+/// covered. The plan carries no behavior by itself: sharded structures
+/// ([`ShardedIdleHeap`], the controller's per-shard calendar views) are
+/// pinned bit-identical to their flat counterparts, so the plan only
+/// bounds working-set size per shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    shard_of: Vec<usize>,
+    n_shards: usize,
+}
+
+impl ShardPlan {
+    /// Degenerate plan: every host in shard 0 (the flat baseline the
+    /// property tests compare against).
+    pub fn single(n_hosts: usize) -> Self {
+        Self { shard_of: vec![0; n_hosts], n_shards: 1 }
+    }
+
+    /// One shard per rack id, as reported by `host_racks` (`usize::MAX`
+    /// marks rackless hosts, which share one trailing shard).
+    pub fn by_rack(racks: &[usize]) -> Self {
+        let max_rack = racks.iter().copied().filter(|&r| r != usize::MAX).max();
+        let Some(max_rack) = max_rack else {
+            return Self::single(racks.len());
+        };
+        let tail = max_rack + 1; // the rackless shard
+        let shard_of: Vec<usize> =
+            racks.iter().map(|&r| if r == usize::MAX { tail } else { r }).collect();
+        let n_shards = if racks.contains(&usize::MAX) { tail + 1 } else { max_rack + 1 };
+        Self { shard_of, n_shards }
+    }
+
+    /// Fold this plan down to at most `max_shards` shards (shard id
+    /// modulo the cap). `regrouped(1)` is [`ShardPlan::single`].
+    pub fn regrouped(&self, max_shards: usize) -> Self {
+        assert!(max_shards >= 1, "shard count must be positive");
+        let n = self.n_shards.min(max_shards);
+        Self { shard_of: self.shard_of.iter().map(|&s| s % n).collect(), n_shards: n }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Number of hosts the plan covers.
+    pub fn n_hosts(&self) -> usize {
+        self.shard_of.len()
+    }
+
+    pub fn shard_of(&self, node: NodeId) -> usize {
+        self.shard_of[node.0]
+    }
+}
+
+/// Per-shard [`IdleHeap`]s with a global merge (DESIGN.md §10).
+///
+/// Each shard holds a private heap over its slice of the authorized
+/// set; [`ShardedIdleHeap::min`] asks every shard for its valid minimum
+/// and merges the winners by `(ΥI, node id)`. Because a node lives in
+/// exactly one shard, that merge is a total order identical to the flat
+/// heap's `(ΥI, node id, column)` order — the sharded pick is
+/// bit-identical to [`IdleHeap`] for any plan, which is what keeps the
+/// scheduler goldens unchanged while the per-shard working sets shrink
+/// to rack size.
+#[derive(Debug, Clone)]
+pub struct ShardedIdleHeap {
+    shards: Vec<IdleHeap>,
+    /// node id → shard, copied from the plan so no controller borrow is
+    /// held across scheduler mutation.
+    shard_of_node: Vec<usize>,
+}
+
+impl ShardedIdleHeap {
+    /// Build over `nodes` (a scheduler's authorized set, in its order),
+    /// distributing each entry to its plan shard.
+    pub fn new(plan: &ShardPlan, ledger: &Ledger, nodes: &[NodeId]) -> Self {
+        let mut shards: Vec<IdleHeap> = (0..plan.n_shards()).map(|_| IdleHeap::empty()).collect();
+        for (col, &nd) in nodes.iter().enumerate() {
+            shards[plan.shard_of(nd)].heap.push(Reverse((ledger.idle(nd), nd.0, col)));
+        }
+        Self { shards, shard_of_node: plan.shard_of.clone() }
+    }
+
+    /// Global minimum `(column, node, ΥI)`: the merge of per-shard
+    /// minima, earliest availability first, lowest node id on ties.
+    pub fn min(&mut self, ledger: &Ledger) -> Option<(usize, NodeId, Secs)> {
+        let mut best: Option<(usize, NodeId, Secs)> = None;
+        for shard in &mut self.shards {
+            let Some((col, nd, avail)) = shard.min(ledger) else { continue };
+            let better = match best {
+                None => true,
+                Some((_, bn, ba)) => avail < ba || (avail == ba && nd.0 < bn.0),
+            };
+            if better {
+                best = Some((col, nd, avail));
+            }
+        }
+        best
+    }
+
+    /// Record a node's new availability after `occupy_until`/`set`.
+    pub fn update(&mut self, col: usize, node: NodeId, avail: Secs) {
+        self.shards[self.shard_of_node[node.0]].update(col, node, avail);
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +337,85 @@ mod tests {
     fn idle_heap_empty_set() {
         let l = example1();
         let mut h = IdleHeap::new(&l, &[]);
+        assert!(h.min(&l).is_none());
+    }
+
+    #[test]
+    fn shard_plan_by_rack_covers_rackless_tail() {
+        let p = ShardPlan::by_rack(&[0, 0, 1, usize::MAX, 1]);
+        assert_eq!(p.n_shards(), 3);
+        assert_eq!(p.n_hosts(), 5);
+        assert_eq!(p.shard_of(NodeId(1)), 0);
+        assert_eq!(p.shard_of(NodeId(4)), 1);
+        assert_eq!(p.shard_of(NodeId(3)), 2); // rackless → trailing shard
+    }
+
+    #[test]
+    fn shard_plan_all_rackless_is_single() {
+        let p = ShardPlan::by_rack(&[usize::MAX, usize::MAX]);
+        assert_eq!(p, ShardPlan::single(2));
+        assert_eq!(p.n_shards(), 1);
+    }
+
+    #[test]
+    fn shard_plan_regrouped_folds_modulo() {
+        let p = ShardPlan::by_rack(&[0, 1, 2, 3]);
+        let g = p.regrouped(2);
+        assert_eq!(g.n_shards(), 2);
+        assert_eq!(g.shard_of(NodeId(0)), 0);
+        assert_eq!(g.shard_of(NodeId(2)), 0);
+        assert_eq!(g.shard_of(NodeId(3)), 1);
+        // a cap above the shard count changes nothing
+        assert_eq!(p.regrouped(16), p);
+        assert_eq!(p.regrouped(1), ShardPlan::single(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn shard_plan_regrouped_rejects_zero() {
+        ShardPlan::single(4).regrouped(0);
+    }
+
+    #[test]
+    fn sharded_heap_matches_flat_heap() {
+        // random-ish mutation sequence: the sharded and flat heaps must
+        // report the same (col, node, avail) at every step.
+        let nodes: Vec<NodeId> = (0..8).map(NodeId).collect();
+        let plan = ShardPlan::by_rack(&[0, 0, 1, 1, 2, 2, 3, 3]);
+        for plan in [ShardPlan::single(8), plan.clone(), plan.regrouped(3)] {
+            let mut l = Ledger::with_initial(
+                [7.0, 3.0, 3.0, 11.0, 2.0, 9.0, 2.0, 5.0].iter().map(|&s| Secs(s)).collect(),
+            );
+            let mut flat = IdleHeap::new(&l, &nodes);
+            let mut sharded = ShardedIdleHeap::new(&plan, &l, &nodes);
+            for step in 0..32 {
+                let want = flat.min(&l);
+                assert_eq!(sharded.min(&l), want, "step {step}");
+                let (col, nd, at) = want.unwrap();
+                let until = Secs(at.0 + 1.5 + (step % 3) as f64);
+                l.occupy_until(nd, until);
+                flat.update(col, nd, until);
+                sharded.update(col, nd, until);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_heap_merges_ties_by_node_id() {
+        let l = Ledger::with_initial(vec![Secs(5.0), Secs(5.0), Secs(5.0)]);
+        // two shards tie on ΥI; the lower node id must win the merge
+        let plan = ShardPlan::by_rack(&[1, 0, 1]);
+        let nodes = [NodeId(2), NodeId(1), NodeId(0)];
+        let mut h = ShardedIdleHeap::new(&plan, &l, &nodes);
+        let (col, nd, _) = h.min(&l).unwrap();
+        assert_eq!(nd, NodeId(0));
+        assert_eq!(col, 2);
+    }
+
+    #[test]
+    fn sharded_heap_empty_set() {
+        let l = example1();
+        let mut h = ShardedIdleHeap::new(&ShardPlan::single(4), &l, &[]);
         assert!(h.min(&l).is_none());
     }
 }

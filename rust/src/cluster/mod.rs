@@ -4,5 +4,5 @@
 pub mod ledger;
 pub mod progress;
 
-pub use ledger::{IdleHeap, Ledger};
+pub use ledger::{IdleHeap, Ledger, ShardPlan, ShardedIdleHeap};
 pub use progress::{estimate_idle, NodeMonitor, TaskProgress};

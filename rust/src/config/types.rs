@@ -23,6 +23,29 @@ pub enum RunConfig {
     Scenario,
     /// An online multi-job stream sweep (see `examples/stream.toml`).
     Stream,
+    /// The cluster-size scalability sweep (`bass scale`).
+    Scale,
+}
+
+/// The `[scale]` run: the scalability sweep as a config file — tree or
+/// fat-tree grid, total host counts, shard cap, worker threads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScaleRun {
+    /// `true` = the 8-leaf fat-tree grid; `false` = the 8-switch tree.
+    pub fat: bool,
+    /// Total host counts per point, each a positive multiple of 8 (the
+    /// grids use 8 leaves/switches). Empty = the default grid.
+    pub hosts: Vec<usize>,
+    /// Cap on the controller's scheduler-state shard count (fat grid
+    /// only). Schedule-invariant — only wall times move.
+    pub shards: Option<usize>,
+    pub threads: usize,
+}
+
+impl Default for ScaleRun {
+    fn default() -> Self {
+        Self { fat: false, hosts: Vec::new(), shards: None, threads: 1 }
+    }
 }
 
 /// The `[stream]` run: one Poisson job-stream template swept over a set
@@ -190,6 +213,8 @@ pub struct ExperimentConfig {
     pub scenario: Option<ScenarioSweep>,
     /// Present when a `[stream]` table was given (used by `run = "stream"`).
     pub stream: Option<StreamRun>,
+    /// Present when `run = "scale"`.
+    pub scale: Option<ScaleRun>,
 }
 
 impl ExperimentConfig {
@@ -200,6 +225,7 @@ impl ExperimentConfig {
             table1: Table1Config::paper(JobKind::Wordcount),
             scenario: None,
             stream: None,
+            scale: None,
         }
     }
 
@@ -238,7 +264,22 @@ impl ExperimentConfig {
                 RunConfig::Scenario
             }
             "stream" => RunConfig::Stream,
+            "scale" => RunConfig::Scale,
             _ => RunConfig::Example1,
+        };
+        // [scale] mirrors the [hdfs] cross-run contract: the table may
+        // only appear where its knobs are honored
+        let scale = if t.keys().any(|k| k.starts_with("scale.")) {
+            anyhow::ensure!(
+                run == RunConfig::Scale,
+                "[scale] requires run = \"scale\" ({run:?} would ignore it)"
+            );
+            Some(parse_scale(&t)?)
+        } else if run == RunConfig::Scale {
+            // a bare `run = "scale"` gets the default sweep
+            Some(ScaleRun::default())
+        } else {
+            None
         };
         // the [hdfs] table may only appear where its knobs are actually
         // honored: scenario runs take everything, table1 takes the
@@ -274,7 +315,13 @@ impl ExperimentConfig {
                 s.threads = v.max(1);
             }
         }
-        Ok(Self { run, table1: cfg, scenario, stream })
+        let mut scale = scale;
+        if let Some(s) = &mut scale {
+            if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
+                s.threads = v.max(1);
+            }
+        }
+        Ok(Self { run, table1: cfg, scenario, stream, scale })
     }
 }
 
@@ -440,6 +487,61 @@ fn parse_stream(t: &Table) -> anyhow::Result<StreamRun> {
     if let Some(v) = usize_of("stream.seed")? {
         s.spec.seed = v as u64;
     }
+    Ok(s)
+}
+
+/// Parse a `[scale]` table onto [`ScaleRun::default`], rejecting unknown
+/// keys and unsafe shapes (mirrors the `[dynamics]`/`[hdfs]` contract: a
+/// typo'd knob must error, not silently run a different sweep).
+fn parse_scale(t: &Table) -> anyhow::Result<ScaleRun> {
+    const KNOWN: [&str; 4] = ["scale.fat", "scale.hosts", "scale.shards", "scale.threads"];
+    for k in t.keys().filter(|k| k.starts_with("scale.")) {
+        anyhow::ensure!(
+            k == "scale." || KNOWN.contains(&k.as_str()),
+            "unknown [scale] key {k:?}"
+        );
+    }
+    let mut s = ScaleRun::default();
+    if let Some(v) = t.get("scale.fat") {
+        s.fat = match v.as_bool() {
+            Some(b) => b,
+            None => anyhow::bail!("scale.fat must be true or false"),
+        };
+    }
+    if let Some(v) = t.get("scale.hosts") {
+        let hosts = match v.as_nums() {
+            Some(h) => h.to_vec(),
+            None => anyhow::bail!("[scale] scale.hosts must be a number list"),
+        };
+        anyhow::ensure!(!hosts.is_empty(), "scale.hosts is empty");
+        let mut out = Vec::with_capacity(hosts.len());
+        for h in hosts {
+            let n = h as usize;
+            anyhow::ensure!(
+                n as f64 == h && n >= 8 && n % 8 == 0,
+                "scale.hosts entries must be positive multiples of 8 \
+                 (the grids use 8 leaves/switches), got {h}"
+            );
+            out.push(n);
+        }
+        s.hosts = out;
+    }
+    if let Some(v) = t.get("scale.shards") {
+        match v.as_usize() {
+            Some(n) if n >= 1 => s.shards = Some(n),
+            _ => anyhow::bail!("scale.shards must be a positive integer"),
+        }
+    }
+    if let Some(v) = t.get("scale.threads") {
+        match v.as_usize() {
+            Some(n) if n >= 1 => s.threads = n,
+            _ => anyhow::bail!("scale.threads must be a positive integer"),
+        }
+    }
+    anyhow::ensure!(
+        s.fat || (s.shards.is_none() && s.hosts.is_empty()),
+        "scale.hosts/scale.shards apply to the fat-tree grid (set scale.fat = true)"
+    );
     Ok(s)
 }
 
@@ -715,6 +817,41 @@ seed = 42
             "run = \"scenario\"\n[dynamics]\nnode_failure = 2\n",
         );
         assert!(r.unwrap_err().to_string().contains("node_failure"));
+    }
+
+    #[test]
+    fn scale_table_parses_strictly() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scale\"\n[scale]\nfat = true\nhosts = [16, 32]\nshards = 4\nthreads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.run, RunConfig::Scale);
+        let s = c.scale.unwrap();
+        assert!(s.fat);
+        assert_eq!(s.hosts, vec![16, 32]);
+        assert_eq!(s.shards, Some(4));
+        assert_eq!(s.threads, 2);
+        // a bare `run = "scale"` gets the default sweep
+        let d = ExperimentConfig::from_str("run = \"scale\"\n").unwrap();
+        assert_eq!(d.scale, Some(ScaleRun::default()));
+    }
+
+    #[test]
+    fn scale_rejects_unknown_keys_and_unsafe_shapes() {
+        for bad in [
+            "run = \"scale\"\n[scale]\nshard = 4\n",                // typo'd key
+            "run = \"scale\"\n[scale]\nfat = true\nshards = 0\n",   // non-positive
+            "run = \"scale\"\n[scale]\nfat = true\nshards = 2.5\n", // mistyped
+            "run = \"scale\"\n[scale]\nfat = true\nthreads = 0\n",  // non-positive
+            "run = \"scale\"\n[scale]\nfat = true\nhosts = [12]\n", // not a multiple of 8
+            "run = \"scale\"\n[scale]\nfat = true\nhosts = [0]\n",  // non-positive
+            "run = \"scale\"\n[scale]\nshards = 4\n",               // shards without fat
+            "run = \"scale\"\n[scale]\nhosts = [16]\n",             // hosts without fat
+            "run = \"scale\"\n[scale]\nfat = 3\n",                  // mistyped bool
+            "run = \"table1\"\n[scale]\nfat = true\n",              // cross-run
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

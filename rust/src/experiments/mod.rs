@@ -25,7 +25,9 @@ pub use example1::{run_example1, run_one, Example1Outcome};
 pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;
 pub use fixtures::{example1_fixture, makespan, Example1Fixture, SchedulerKind};
-pub use scale::{fat_scale_spec, run_scale, run_scale_fat, scale_spec, ScalePoint};
+pub use scale::{
+    fat_scale_spec, run_scale, run_scale_fat, run_scale_fat_with, scale_spec, ScalePoint,
+};
 pub use skew::{run_skew, skew_policies, skew_spec, SkewPoint};
 pub use stream::{
     run_stream_sweep, run_stream_sweep_with, stream_cluster, stream_spec, StreamPoint,

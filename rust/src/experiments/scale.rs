@@ -123,12 +123,34 @@ pub fn run_scale_fat(
     cost: &CostModel,
     threads: usize,
 ) -> Vec<ScalePoint> {
+    run_scale_fat_with(
+        per_edge_sizes,
+        &[SchedulerKind::Bass, SchedulerKind::Hds],
+        None,
+        cost,
+        threads,
+    )
+}
+
+/// The fully parameterized fat-tree sweep: caller-chosen scheduler set
+/// and an optional shard-count cap forwarded to every point's spec (the
+/// `bass scale --fat --shards N` path). Sharding is schedule-invariant,
+/// so `shards` changes wall times only.
+pub fn run_scale_fat_with(
+    per_edge_sizes: &[usize],
+    kinds: &[SchedulerKind],
+    shards: Option<usize>,
+    cost: &CostModel,
+    threads: usize,
+) -> Vec<ScalePoint> {
     let specs: Vec<ScenarioSpec> = per_edge_sizes
         .iter()
         .flat_map(|&per_edge| {
-            [SchedulerKind::Bass, SchedulerKind::Hds]
-                .into_iter()
-                .map(move |k| fat_scale_spec(per_edge, k))
+            kinds.iter().map(move |&k| {
+                let mut s = fat_scale_spec(per_edge, k);
+                s.shards = shards;
+                s
+            })
         })
         .collect();
     run_grid(specs, cost, threads)
@@ -186,8 +208,70 @@ mod tests {
             assert_eq!(p.nodes, 1024);
             assert_eq!(p.tasks, 2048);
             assert!(p.makespan > 0.0);
+            println!(
+                "kilonode {}: sched {:.3}s, makespan {:.1}s",
+                p.scheduler, p.sched_secs, p.makespan
+            );
         }
+        println!("kilonode wall: {wall:.2}s (budget 60s)");
         assert!(wall < 60.0, "BASS+HDS kilonode point took {wall:.1}s (budget 60s)");
+    }
+
+    /// The ten-kilonode companion gate: one point on the 8-leaf x
+    /// 1280-host fat tree (10240 nodes, 20480 tasks) for all three
+    /// schedulers, single-threaded so only one ten-kilohost session
+    /// (topology, flows, ledgers, chunked cost blocks — each full input
+    /// plane would be ~840MB unchunked) is live at a time. Exercises
+    /// the whole sharded stack:
+    /// hierarchical `PathCache` (a flat table would be ~7.5GB here),
+    /// per-rack `ShardedIdleHeap`s and the chunked cost kernel.
+    /// `cargo test --release -- --ignored fat_tree_10k`.
+    #[test]
+    #[ignore]
+    fn fat_tree_10k_point_under_60s() {
+        let kinds = [SchedulerKind::Bass, SchedulerKind::Hds, SchedulerKind::Bar];
+        let t0 = std::time::Instant::now();
+        let pts = run_scale_fat_with(&[1280], &kinds, None, &CostModel::rust_only(), 1);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert_eq!(p.nodes, 10240);
+            assert_eq!(p.tasks, 20480);
+            assert!(p.makespan > 0.0);
+            println!(
+                "10k {}: sched {:.3}s, makespan {:.1}s",
+                p.scheduler, p.sched_secs, p.makespan
+            );
+        }
+        println!("10k wall: {wall:.2}s (budget 60s)");
+        assert!(wall < 60.0, "BASS+HDS+BAR 10k point took {wall:.1}s (budget 60s)");
+    }
+
+    #[test]
+    fn shard_cap_is_schedule_invariant() {
+        // the acceptance pin at sweep granularity: capping the shard
+        // count (all the way down to one flat shard) must not move a
+        // single metric
+        let cost = CostModel::rust_only();
+        let kinds = [SchedulerKind::Bass, SchedulerKind::Hds, SchedulerKind::Bar];
+        let default_plan = run_scale_fat_with(&[2, 4], &kinds, None, &cost, 1);
+        for cap in [1usize, 3] {
+            let capped = run_scale_fat_with(&[2, 4], &kinds, Some(cap), &cost, 1);
+            assert_eq!(default_plan.len(), capped.len());
+            for (a, b) in default_plan.iter().zip(&capped) {
+                assert_eq!(a.nodes, b.nodes);
+                assert_eq!(a.scheduler, b.scheduler);
+                assert!(
+                    a.makespan == b.makespan,
+                    "{} n={} cap={}: {} != {}",
+                    a.scheduler,
+                    a.nodes,
+                    cap,
+                    a.makespan,
+                    b.makespan
+                );
+            }
+        }
     }
 
     #[test]

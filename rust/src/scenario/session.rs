@@ -63,6 +63,11 @@ impl SimSession {
             topo.links.iter().map(|l| l.capacity_mbps).collect();
         let n_hosts = topo.n_hosts();
         let mut ctrl = Controller::new(topo, spec.slot_secs);
+        if let Some(n) = spec.shards {
+            // schedule-invariant (sharding only regroups candidate scans);
+            // no RNG draw, so the seed contract is untouched
+            ctrl.set_max_shards(n);
+        }
         let mut net = FlowNet::new(&link_caps_mbps);
         if let Some(q) = &spec.qos {
             net.set_qos(q.clone());

@@ -113,6 +113,11 @@ pub struct ScenarioSpec {
     /// Worker threads for sweep drivers expanding this scenario into a
     /// grid of points (1 = serial; results are identical either way).
     pub threads: usize,
+    /// Cap on the controller's scheduler-state shard count (`None` = one
+    /// shard per rack, the default plan). Any cap yields bit-identical
+    /// schedules — sharding only regroups the candidate scans — so this
+    /// is purely a perf/memory knob for very wide fat trees.
+    pub shards: Option<usize>,
     /// Injected churn (node failures, link degradation, stragglers,
     /// cross traffic) compiled into a seeded timeline by
     /// [`super::dynamics::run_dynamic`]. `None` = static cluster.
@@ -139,6 +144,7 @@ impl ScenarioSpec {
             background: BackgroundSpec::none(),
             node_speed: Vec::new(),
             threads: 1,
+            shards: None,
             dynamics: None,
         }
     }

@@ -66,16 +66,16 @@ impl Scheduler for Bar {
         // ---- phase 1: HDS allocation on a scratch ledger ----
         let base_ledger = ctx.ledger.clone();
         let phase1 = Hds::new().schedule(tasks, gate, ctx);
-        // rebuild per-node item queues from the phase-1 placements
+        // rebuild per-node item queues from the phase-1 placements; the
+        // host->column map and a task-id index replace the seed's O(n)
+        // and O(m) scans per placement (Perf L4)
         let mut queues: Vec<Vec<Item>> = vec![Vec::new(); ctx.authorized.len()];
-        let col = |n: NodeId, ctx: &SchedCtx| -> usize {
-            ctx.authorized.iter().position(|&x| x == n).unwrap()
-        };
+        let col_of_host = ctx.authorized_cols();
+        let slice_idx: HashMap<usize, usize> =
+            tasks.iter().enumerate().map(|(i, t)| (t.id.0, i)).collect();
         for p in &phase1.placements {
-            let idx = p.task.0;
             // p.task ids are global; recover the slice index
-            let sidx = tasks.iter().position(|t| t.id == p.task).unwrap();
-            let _ = idx;
+            let sidx = slice_idx[&p.task.0];
             let (tm, src) = match &p.transfer {
                 TransferPlan::None => (Secs::ZERO, None),
                 _ => {
@@ -89,7 +89,7 @@ impl Scheduler for Bar {
                     )
                 }
             };
-            queues[col(p.node, ctx)].push(Item {
+            queues[col_of_host[p.node.0]].push(Item {
                 idx: sidx,
                 node: p.node,
                 is_local: p.is_local,
@@ -140,6 +140,7 @@ impl Scheduler for Bar {
             let t = &tasks[item.idx];
             // candidate target: append to any other node's queue; each
             // candidate prices the pull from its own best-connected holder
+            let locals = ctx.local_nodes(t);
             let mut best: Option<(usize, Secs, Secs, bool, Option<NodeId>)> = None;
             for (c, nd) in ctx.authorized.iter().enumerate() {
                 if c == qc {
@@ -149,7 +150,7 @@ impl Scheduler for Bar {
                     .last()
                     .copied()
                     .unwrap_or(base_ledger.idle(*nd).max(floor));
-                let is_local = ctx.local_nodes(t).contains(nd);
+                let is_local = locals.contains(nd);
                 let (tm, src) = if is_local || t.input_mb <= 0.0 {
                     (Secs::ZERO, None)
                 } else {

@@ -29,7 +29,7 @@
 //! path). The seed resolved one idle-chosen holder per task, which hid
 //! better-connected replicas from the whole round.
 
-use crate::cluster::IdleHeap;
+use crate::cluster::ShardedIdleHeap;
 use crate::mapreduce::TaskSpec;
 use crate::sdn::TrafficClass;
 use crate::sim::{Assignment, Placement, TransferPlan};
@@ -70,11 +70,23 @@ impl Scheduler for Bass {
         self.batch_evals += 1;
 
         // Perf L4 hoists: per-column compute-speed factors and a host->
-        // column map resolved once per round (not per task), plus an
-        // idle-min heap that seeds each minnow scan's prune bound.
+        // column map resolved once per round (not per task), plus a
+        // sharded idle-min heap that seeds each minnow scan's prune bound.
         let speed = ctx.speed_cols();
         let col_of_host = ctx.authorized_cols();
-        let mut idle_heap = IdleHeap::new(ctx.ledger, &ctx.authorized);
+        let mut idle_heap =
+            ShardedIdleHeap::new(ctx.controller.shard_plan(), ctx.ledger, &ctx.authorized);
+        // Shard-local candidate groups: authorized columns bucketed by the
+        // controller's shard plan. Each minnow scan walks one shard at a
+        // time (shard-local pick, then a global compare of shard winners).
+        let shard_cols: Vec<Vec<usize>> = {
+            let plan = ctx.controller.shard_plan();
+            let mut v = vec![Vec::new(); plan.n_shards()];
+            for (j, &nd) in ctx.authorized.iter().enumerate() {
+                v[plan.shard_of(nd)].push(j);
+            }
+            v
+        };
 
         let mut placements = Vec::with_capacity(tasks.len());
         for (i, t) in tasks.iter().enumerate() {
@@ -91,25 +103,35 @@ impl Scheduler for Bass {
             // the minimum predicted ΥC = TM + TP + ΥI, using the batched
             // TM matrix (XLA hot path) and the *live* ledger idle times.
             // TP enters per node (heterogeneous clusters scale it). The
-            // scan walks the contiguous TM row and skips any node whose
-            // idle time alone exceeds the best score seen so far (the
-            // min-idle node's full score seeds that bound): TM and TP are
-            // nonnegative, so such a node can neither win nor tie, which
-            // keeps the first-strict-minimum tie-break of the plain scan.
+            // scan walks the TM row one shard at a time and skips any node
+            // whose idle time alone exceeds the best score seen so far
+            // (the min-idle node's full score seeds that bound): TM and TP
+            // are nonnegative, so a pruned node can neither win nor tie.
+            // The winner carries an explicit (score, column) tie-break,
+            // which makes the shard-grouped visit order immaterial — the
+            // pick equals the flat scan's first strict minimum in column
+            // order for any shard plan.
             let tm_row = batch.tm_row(i);
             let (minnow, mcol, yi_minnow) = {
                 let (sc, snd, _) = idle_heap.min(ctx.ledger).expect("no authorized nodes");
                 let mut bound = tm_row[sc] as f64 + ctx.ledger.idle(snd).0 + tp_col(sc);
                 let mut best: Option<(usize, crate::topology::NodeId, f64)> = None;
-                for (j, &nd) in ctx.authorized.iter().enumerate() {
-                    let idle = ctx.ledger.idle(nd).0;
-                    if idle > bound {
-                        continue;
-                    }
-                    let score = tm_row[j] as f64 + idle + tp_col(j);
-                    if best.map_or(true, |(_, _, b)| score < b) {
-                        best = Some((j, nd, score));
-                        bound = bound.min(score);
+                for cols in &shard_cols {
+                    for &j in cols {
+                        let nd = ctx.authorized[j];
+                        let idle = ctx.ledger.idle(nd).0;
+                        if idle > bound {
+                            continue;
+                        }
+                        let score = tm_row[j] as f64 + idle + tp_col(j);
+                        let wins = match best {
+                            None => true,
+                            Some((bj, _, b)) => score < b || (score == b && j < bj),
+                        };
+                        if wins {
+                            best = Some((j, nd, score));
+                            bound = bound.min(score);
+                        }
                     }
                 }
                 let (c, nd, _) = best.expect("seed node is never pruned");
@@ -118,7 +140,7 @@ impl Scheduler for Bass {
             let loc = ctx.ledger.min_idle_among(locals.iter().copied());
 
             let assign_local =
-                |ctx: &mut SchedCtx, placements: &mut Vec<Placement>, heap: &mut IdleHeap| {
+                |ctx: &mut SchedCtx, placements: &mut Vec<Placement>, heap: &mut ShardedIdleHeap| {
                     let (loc_nd, yi_loc) = loc.unwrap();
                     let start = yi_loc.max(floor);
                     let tp = ctx.effective_compute(t, loc_nd);

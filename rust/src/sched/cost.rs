@@ -37,9 +37,32 @@ fn bw_row(ctx: &SchedCtx<'_>, src: NodeId) -> Vec<f32> {
         .collect()
 }
 
-/// Build the batched cost-model inputs for `tasks` over the authorized
-/// node set, in authorized-set column order.
-pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
+/// Cross-chunk bandwidth-row memo: rows depend only on the (immutable)
+/// context, so one memo may serve every chunk of a blocked evaluation.
+#[derive(Default)]
+struct RowMemo {
+    /// One bandwidth row per holder.
+    holder_rows: std::collections::HashMap<NodeId, Vec<f32>>,
+    /// One element-wise-best row per block (bw-aware rule).
+    block_rows: std::collections::HashMap<crate::hdfs::BlockId, Option<Vec<f32>>>,
+}
+
+/// The batched kernel behind [`build_inputs`]: three blocked passes over
+/// the flat row-major buffers (the `python/compile` cost-matrix layout)
+/// instead of one interleaved per-cell loop.
+///
+/// * **TP** — each task's compute time broadcast through the hoisted
+///   per-column speed factors (same expression per cell as the rowwise
+///   reference, so bit-identical).
+/// * **local** — zero-filled, then 1.0 scattered at each task's local
+///   columns via the hoisted host→column map. Local candidates are
+///   authorized by construction, so the scatter marks exactly the
+///   columns the rowwise `contains` test marked.
+/// * **bw** — one combined row per block (or per source holder under
+///   the legacy/reduce rules), computed once through the memo and
+///   **copied** into every task row sharing it; copies, not
+///   recomputation, keep the pass bitwise equal.
+fn fill_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>, memo: &mut RowMemo) -> CostInputs {
     let m = tasks.len();
     let nodes = &ctx.authorized;
     let n = nodes.len();
@@ -47,19 +70,25 @@ pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
     let mut bw = vec![0f32; m * n];
     let mut tp = vec![0f32; m * n];
     let mut local = vec![0f32; m * n];
-    // per-column speed factors hoisted out of the m*n loop (Perf L4);
-    // applying them reproduces `effective_compute` bit for bit
     let speed = ctx.speed_cols();
-    // bw rows depend only on the holder set; a job's tasks share a
-    // handful of holders, so memoize one row per holder and one combined
-    // row per block (perf: collapses m*n path-residual walks to
-    // distinct_holders*n plus cheap element-wise maxes — see §Perf).
-    let mut holder_rows: std::collections::HashMap<NodeId, Vec<f32>> =
-        std::collections::HashMap::new();
-    let mut block_rows: std::collections::HashMap<crate::hdfs::BlockId, Option<Vec<f32>>> =
-        std::collections::HashMap::new();
+    let cols = ctx.authorized_cols();
     for (i, t) in tasks.iter().enumerate() {
         sz.push(t.input_mb as f32);
+        let row = &mut tp[i * n..(i + 1) * n];
+        for (j, cell) in row.iter_mut().enumerate() {
+            *cell = match speed[j] {
+                Some(f) => (t.compute.0 * f) as f32,
+                None => t.compute.0 as f32,
+            };
+        }
+    }
+    for (i, t) in tasks.iter().enumerate() {
+        for nd in ctx.local_nodes(t) {
+            local[i * n + cols[nd.0]] = 1.0;
+        }
+    }
+    let RowMemo { holder_rows, block_rows } = memo;
+    for (i, t) in tasks.iter().enumerate() {
         let row: Option<&[f32]> = match t.input {
             Some(b) if ctx.bw_aware_sources => block_rows
                 .entry(b)
@@ -96,6 +125,73 @@ pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
                 src.map(|s| holder_rows.entry(s).or_insert_with(|| bw_row(ctx, s)).as_slice())
             }
         };
+        if let Some(r) = row {
+            bw[i * n..(i + 1) * n].copy_from_slice(r);
+        }
+    }
+    let idle: Vec<f32> = nodes.iter().map(|&nd| ctx.ledger.idle(nd).0 as f32).collect();
+    CostInputs { m, n, sz, bw, tp, local, idle, ts: ctx.controller.calendar.slot_secs() as f32 }
+}
+
+/// Build the batched cost-model inputs for `tasks` over the authorized
+/// node set, in authorized-set column order.
+pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
+    fill_inputs(tasks, ctx, &mut RowMemo::default())
+}
+
+/// Reference per-task builder: the pre-batching implementation, kept
+/// verbatim so property tests can pin the batched [`build_inputs`]
+/// bitwise against it (`rust/tests/proptests.rs`).
+pub fn build_inputs_rowwise(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
+    let m = tasks.len();
+    let nodes = &ctx.authorized;
+    let n = nodes.len();
+    let mut sz = Vec::with_capacity(m);
+    let mut bw = vec![0f32; m * n];
+    let mut tp = vec![0f32; m * n];
+    let mut local = vec![0f32; m * n];
+    let speed = ctx.speed_cols();
+    let mut holder_rows: std::collections::HashMap<NodeId, Vec<f32>> =
+        std::collections::HashMap::new();
+    let mut block_rows: std::collections::HashMap<crate::hdfs::BlockId, Option<Vec<f32>>> =
+        std::collections::HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        sz.push(t.input_mb as f32);
+        let row: Option<&[f32]> = match t.input {
+            Some(b) if ctx.bw_aware_sources => block_rows
+                .entry(b)
+                .or_insert_with(|| {
+                    let mut combined: Option<Vec<f32>> = None;
+                    for s in
+                        ctx.namenode.readable_replicas(b, |nd| ctx.is_readable(nd))
+                    {
+                        let r = holder_rows
+                            .entry(s)
+                            .or_insert_with(|| bw_row(ctx, s))
+                            .clone();
+                        combined = Some(match combined {
+                            None => r,
+                            Some(mut c) => {
+                                for (cv, rv) in c.iter_mut().zip(&r) {
+                                    if *rv > *cv {
+                                        *cv = *rv;
+                                    }
+                                }
+                                c
+                            }
+                        });
+                    }
+                    combined
+                })
+                .as_deref(),
+            _ => {
+                let src = match t.input {
+                    Some(b) => ctx.min_idle_replica(b),
+                    None => t.src_hint.filter(|&s| ctx.is_readable(s)),
+                };
+                src.map(|s| holder_rows.entry(s).or_insert_with(|| bw_row(ctx, s)).as_slice())
+            }
+        };
         let locals = ctx.local_nodes(t);
         for (j, &nd) in nodes.iter().enumerate() {
             let k = i * n + j;
@@ -111,11 +207,58 @@ pub fn build_inputs(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostInputs {
     CostInputs { m, n, sz, bw, tp, local, idle, ts: ctx.controller.calendar.slot_secs() as f32 }
 }
 
+/// Above this many matrix cells, [`eval_batch`] switches to row-blocked
+/// evaluation: at the ten-kilonode tier one monolithic f32 input matrix
+/// is ~840 MB, while 4M-cell blocks stay ~16 MB apiece. Every golden and
+/// test workload sits far below the threshold and takes the unchanged
+/// monolithic path, so backend selection by (m, n) cannot flip.
+const CHUNK_CELLS: usize = 1 << 22;
+
 /// Evaluate the batch through the configured backend (XLA artifact when
-/// available, Rust mirror otherwise).
+/// available, Rust mirror otherwise). Oversized batches are evaluated in
+/// row blocks — bitwise safe because the kernel is strictly
+/// row-independent (each task's outputs depend only on its own input row
+/// plus the shared idle/ts vectors, which chunking leaves untouched).
 pub fn eval_batch(tasks: &[TaskSpec], ctx: &SchedCtx<'_>) -> CostOutputs {
-    let inputs = build_inputs(tasks, ctx);
-    ctx.cost.eval(&inputs).expect("cost model evaluation")
+    let n = ctx.authorized.len();
+    if n == 0 || tasks.len().saturating_mul(n) <= CHUNK_CELLS {
+        let inputs = build_inputs(tasks, ctx);
+        return ctx.cost.eval(&inputs).expect("cost model evaluation");
+    }
+    eval_batch_chunked(tasks, ctx, (CHUNK_CELLS / n).max(1))
+}
+
+/// Row-blocked evaluation: split `tasks` into `chunk_rows`-row blocks,
+/// evaluate each, and concatenate the row-major outputs. Public so the
+/// property tests can pin it against the monolithic evaluation on small
+/// batches.
+pub fn eval_batch_chunked(
+    tasks: &[TaskSpec],
+    ctx: &SchedCtx<'_>,
+    chunk_rows: usize,
+) -> CostOutputs {
+    let m = tasks.len();
+    let n = ctx.authorized.len();
+    let mut out = CostOutputs {
+        m,
+        n,
+        yc: Vec::with_capacity(m * n),
+        tm: Vec::with_capacity(m * n),
+        slots: Vec::with_capacity(m * n),
+        best_idx: Vec::with_capacity(m),
+        best_cost: Vec::with_capacity(m),
+    };
+    let mut memo = RowMemo::default();
+    for chunk in tasks.chunks(chunk_rows.max(1)) {
+        let inputs = fill_inputs(chunk, ctx, &mut memo);
+        let o = ctx.cost.eval(&inputs).expect("cost model evaluation");
+        out.yc.extend_from_slice(&o.yc);
+        out.tm.extend_from_slice(&o.tm);
+        out.slots.extend_from_slice(&o.slots);
+        out.best_idx.extend_from_slice(&o.best_idx);
+        out.best_cost.extend_from_slice(&o.best_cost);
+    }
+    out
 }
 
 /// Column index of `node` in the authorized set (cost-matrix order).
@@ -289,5 +432,78 @@ mod tests {
         let tasks = vec![TaskSpec::reduce(0, 128.0, Secs(12.0))];
         let inp = build_inputs(&tasks, &ctx);
         assert!(inp.bw.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn batched_matches_rowwise_bitwise() {
+        // bw-aware, legacy, and bw-aware-with-a-down-holder variants, on a
+        // mixed batch (shared-block maps, hinted + hint-less reduces) over
+        // a heterogeneous cluster
+        for (bw_aware, holder_down) in [(true, false), (false, false), (true, true)] {
+            let (mut ctrl, nn, mut ledger, nodes) = fixture();
+            let cost = CostModel::rust_only();
+            let mut down = vec![false; 6];
+            if holder_down {
+                down[nodes[1].0] = true;
+            }
+            let ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: vec![1.0, 0.5, 2.0, 1.5, 1.0, 1.0],
+                down,
+                bw_aware_sources: bw_aware,
+            };
+            let tasks = vec![
+                TaskSpec::map(0, crate::hdfs::BlockId(0), 64.0, Secs(9.0), 0.0),
+                TaskSpec::map(1, crate::hdfs::BlockId(0), 64.0, Secs(4.0), 0.0),
+                TaskSpec::reduce(2, 128.0, Secs(12.0)).with_src_hint(nodes[2]),
+                TaskSpec::reduce(3, 32.0, Secs(5.0)),
+            ];
+            let a = build_inputs(&tasks, &ctx);
+            let b = build_inputs_rowwise(&tasks, &ctx);
+            assert_eq!((a.m, a.n), (b.m, b.n));
+            assert_eq!(a.sz, b.sz);
+            assert_eq!(a.bw, b.bw);
+            assert_eq!(a.tp, b.tp);
+            assert_eq!(a.local, b.local);
+            assert_eq!(a.idle, b.idle);
+            assert_eq!(a.ts, b.ts);
+        }
+    }
+
+    #[test]
+    fn chunked_eval_matches_monolithic() {
+        let (mut ctrl, nn, mut ledger, nodes) = fixture();
+        let cost = CostModel::rust_only();
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs::ZERO,
+            cost: &cost,
+            node_speed: Vec::new(),
+            down: Vec::new(),
+            bw_aware_sources: true,
+        };
+        let tasks: Vec<TaskSpec> = (0..5)
+            .map(|i| {
+                TaskSpec::map(i, crate::hdfs::BlockId(0), 64.0, Secs(3.0 + i as f64), 0.0)
+            })
+            .collect();
+        let mono = eval_batch(&tasks, &ctx); // well under CHUNK_CELLS
+        for chunk_rows in [1usize, 2, 3, 7] {
+            let chunked = eval_batch_chunked(&tasks, &ctx, chunk_rows);
+            assert_eq!((chunked.m, chunked.n), (mono.m, mono.n));
+            assert_eq!(chunked.yc, mono.yc);
+            assert_eq!(chunked.tm, mono.tm);
+            assert_eq!(chunked.slots, mono.slots);
+            assert_eq!(chunked.best_idx, mono.best_idx);
+            assert_eq!(chunked.best_cost, mono.best_cost);
+        }
     }
 }

@@ -9,12 +9,14 @@
 //!
 //! Perf L4: the seed's loop was O(m·n) ledger scans plus O(m²) locality
 //! probes (each probing allocated a fresh `local_nodes` vector). The
-//! loop now runs off an [`IdleHeap`] (O(log n) per round) and per-node
-//! pending-local queues built once up front; the non-local fallback is a
+//! loop now runs off a [`ShardedIdleHeap`] (per-rack heaps, O(log
+//! n_shard) per round plus an O(n_shards) merge that preserves the flat
+//! heap's `(avail, node id)` order exactly) and per-node pending-local
+//! queues built once up front; the non-local fallback is a
 //! lowest-unplaced-id cursor. Pick order is bit-identical to the seed —
 //! property-tested against a verbatim port in `rust/tests/proptests.rs`.
 
-use crate::cluster::IdleHeap;
+use crate::cluster::ShardedIdleHeap;
 use crate::mapreduce::TaskSpec;
 use crate::sdn::TrafficClass;
 use crate::sim::{Assignment, Placement, TransferPlan};
@@ -61,7 +63,8 @@ impl Scheduler for Hds {
         let mut local_head = vec![0usize; ctx.authorized.len()];
         let mut placed = vec![false; tasks.len()];
         let mut cursor = 0usize; // lowest unplaced task index
-        let mut heap = IdleHeap::new(ctx.ledger, &ctx.authorized);
+        let mut heap =
+            ShardedIdleHeap::new(ctx.controller.shard_plan(), ctx.ledger, &ctx.authorized);
         for _ in 0..tasks.len() {
             let (c, j, idle) = heap.min(ctx.ledger).expect("no authorized nodes");
             let t0 = idle.max(floor);

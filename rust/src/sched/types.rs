@@ -145,7 +145,7 @@ impl<'a> SchedCtx<'a> {
             return Some(Secs::ZERO);
         }
         let links = self.controller.path(src, dst)?;
-        let cap = self.controller.path_capacity_mb_s(links);
+        let cap = self.controller.path_capacity_mb_s(&links);
         if cap <= 0.0 {
             return None;
         }

@@ -422,6 +422,49 @@ impl SlotCalendar {
             start += 1;
         }
     }
+
+    /// A read-only occupancy view over a link subset — the shard layer's
+    /// per-shard calendar slice (DESIGN.md §10).
+    pub fn view<'a>(&'a self, links: &'a [LinkId]) -> CalendarView<'a> {
+        CalendarView { cal: self, links }
+    }
+}
+
+/// Calendar occupancy scoped to one shard's links. Calendar state is
+/// strictly per-link, so a link-partition view is behavior-preserving by
+/// construction: views serve shard-local diagnostics and bench
+/// accounting, while path admission ([`SlotCalendar::plan_transfer`])
+/// stays global because paths cross shards at the core layer.
+#[derive(Debug, Clone, Copy)]
+pub struct CalendarView<'a> {
+    cal: &'a SlotCalendar,
+    links: &'a [LinkId],
+}
+
+impl CalendarView<'_> {
+    pub fn links(&self) -> &[LinkId] {
+        self.links
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Occupancy boundaries across this shard's links only.
+    pub fn n_segments(&self) -> usize {
+        self.links.iter().map(|&l| self.cal.reserved[l.0].len()).sum()
+    }
+
+    /// Residual (unreserved, usable) fraction of one shard link at `slot`.
+    pub fn residual_frac(&self, link: LinkId, slot: usize) -> f64 {
+        self.cal.residual_frac(link, slot)
+    }
+
+    /// Min residual fraction across the shard's links over
+    /// `[start, start + n)` (1.0 for an empty shard).
+    pub fn window_residual(&self, start: usize, n: usize) -> f64 {
+        self.cal.path_residual(self.links, start, n)
+    }
 }
 
 #[cfg(test)]
@@ -664,6 +707,24 @@ mod tests {
         c.set_usable_frac(LinkId(0), 0.0);
         assert!(c.plan_transfer(&[LinkId(0)], Secs(0.0), 64.0, 12.8, 0.05).is_none());
         assert!(c.reserve_path(&[LinkId(0)], 0, 2, 0.1).is_err());
+    }
+
+    #[test]
+    fn calendar_view_is_scoped_to_its_links() {
+        let mut c = SlotCalendar::new(4, 1.0);
+        c.reserve_path(&[LinkId(0), LinkId(1)], 2, 3, 0.5).unwrap();
+        let left = [LinkId(0), LinkId(1)];
+        let right = [LinkId(2), LinkId(3)];
+        let v0 = c.view(&left);
+        let v1 = c.view(&right);
+        assert_eq!(v0.n_links(), 2);
+        assert_eq!(v0.n_segments(), 4); // two boundaries per reserved link
+        assert_eq!(v1.n_segments(), 0);
+        assert!((v0.window_residual(2, 3) - 0.5).abs() < 1e-12);
+        assert_eq!(v1.window_residual(2, 3), 1.0);
+        assert!((v0.residual_frac(LinkId(0), 3) - 0.5).abs() < 1e-12);
+        // empty view: vacuous full residual
+        assert_eq!(c.view(&[]).window_residual(0, 100), 1.0);
     }
 
     #[test]

@@ -11,10 +11,11 @@
 //! uniform link rates this is exact; with heterogeneous rates it
 //! over-reserves the faster links, which is conservative.
 
-use crate::topology::{LinkId, NodeId, PathCache, Topology};
+use crate::cluster::ShardPlan;
+use crate::topology::{host_racks, Endpoint, LinkId, NodeId, PathCache, PathRef, Topology};
 use crate::util::{mbps_to_mb_per_s, Secs};
 
-use super::calendar::{Reservation, SlotCalendar};
+use super::calendar::{CalendarView, Reservation, SlotCalendar};
 use super::flowtable::{FlowTable, TrafficClass};
 use super::qos::QosPolicy;
 
@@ -45,12 +46,33 @@ pub struct Controller {
     background_mb_s: Vec<f64>,
     pub flows: FlowTable,
     pub qos: QosPolicy,
+    /// Scheduler-state shard plan (DESIGN.md §10): one shard per rack by
+    /// default, overridable via [`Controller::set_shard_plan`].
+    shards: ShardPlan,
+    /// Host-touching links per shard — the scope of each shard's
+    /// calendar view.
+    shard_links: Vec<Vec<LinkId>>,
+}
+
+/// Links with a host endpoint, bucketed by the host's shard.
+fn shard_host_links(topo: &Topology, plan: &ShardPlan) -> Vec<Vec<LinkId>> {
+    let mut links = vec![Vec::new(); plan.n_shards()];
+    for l in &topo.links {
+        let h = match (l.a, l.b) {
+            (Endpoint::Host(h), _) | (_, Endpoint::Host(h)) => h,
+            _ => continue,
+        };
+        links[plan.shard_of(h)].push(l.id);
+    }
+    links
 }
 
 impl Controller {
     pub fn new(topo: Topology, slot_secs: f64) -> Self {
         let cache = PathCache::build(&topo);
         let n_links = topo.n_links();
+        let shards = ShardPlan::by_rack(&host_racks(&topo, &topo.hosts));
+        let shard_links = shard_host_links(&topo, &shards);
         Self {
             topo,
             cache,
@@ -58,7 +80,39 @@ impl Controller {
             background_mb_s: vec![0.0; n_links],
             flows: FlowTable::new(),
             qos: QosPolicy::default_shared(f64::INFINITY),
+            shards,
+            shard_links,
         }
+    }
+
+    /// The shard plan the schedulers partition their per-node state by.
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.shards
+    }
+
+    /// Replace the shard plan (scale experiments; the plan must cover
+    /// every host). Sharding is bit-identical to the flat path for any
+    /// plan — see DESIGN.md §10 — so this only tunes working-set size.
+    pub fn set_shard_plan(&mut self, plan: ShardPlan) {
+        assert_eq!(plan.n_hosts(), self.topo.n_hosts(), "shard plan must cover every host");
+        self.shard_links = shard_host_links(&self.topo, &plan);
+        self.shards = plan;
+    }
+
+    /// Fold the current plan down to at most `max_shards` shards.
+    pub fn set_max_shards(&mut self, max_shards: usize) {
+        let plan = self.shards.regrouped(max_shards);
+        self.set_shard_plan(plan);
+    }
+
+    /// Host-touching links of one shard.
+    pub fn shard_links(&self, shard: usize) -> &[LinkId] {
+        &self.shard_links[shard]
+    }
+
+    /// Read-only calendar occupancy scoped to one shard's links.
+    pub fn shard_calendar_view(&self, shard: usize) -> CalendarView<'_> {
+        self.calendar.view(&self.shard_links[shard])
     }
 
     pub fn topo(&self) -> &Topology {
@@ -118,8 +172,9 @@ impl Controller {
         self.background_mb_s[link.0]
     }
 
-    /// Cached host-to-host path.
-    pub fn path(&self, src: NodeId, dst: NodeId) -> Option<&[LinkId]> {
+    /// Cached host-to-host path (derefs to `[LinkId]`; may be
+    /// synthesized inline by the hierarchical cache).
+    pub fn path(&self, src: NodeId, dst: NodeId) -> Option<PathRef<'_>> {
         self.cache.path(src, dst)
     }
 
@@ -141,7 +196,7 @@ impl Controller {
     pub fn path_bw_mb_s(&self, src: NodeId, dst: NodeId, at: Secs) -> f64 {
         match self.path(src, dst) {
             None => 0.0,
-            Some([]) => f64::INFINITY,
+            Some(links) if links.is_empty() => f64::INFINITY,
             Some(links) => {
                 let slot = self.calendar.slot_of(at);
                 links
@@ -178,13 +233,13 @@ impl Controller {
                 earliest,
             ));
         }
-        let cap = self.path_capacity_mb_s(links);
+        let cap = self.path_capacity_mb_s(&links);
         if cap <= 0.0 {
             return None;
         }
         let r = self
             .calendar
-            .plan_transfer(links, earliest, size_mb, cap, MIN_RESERVE_FRAC)?;
+            .plan_transfer(&links, earliest, size_mb, cap, MIN_RESERVE_FRAC)?;
         let rate = r.frac * cap;
         let slot_secs = self.calendar.slot_secs();
         // transfer starts at the beginning of its window (>= earliest) and
@@ -350,6 +405,46 @@ mod tests {
         assert!((rate2 - 6.4).abs() < 1e-9);
         c.set_link_health(link, 1.0);
         assert!((c.path_bw_mb_s(n[1], n[0], Secs(0.0)) - 12.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_shard_plan_follows_racks() {
+        let (c, n) = ctrl();
+        // Fig.2: {ND1, ND2, master} on SW1, {ND3, ND4, controller} on SW2
+        let plan = c.shard_plan();
+        assert_eq!(plan.n_shards(), 2);
+        assert_eq!(plan.shard_of(n[0]), plan.shard_of(n[1]));
+        assert_eq!(plan.shard_of(n[2]), plan.shard_of(n[3]));
+        assert_ne!(plan.shard_of(n[0]), plan.shard_of(n[2]));
+        // each shard's link view covers its 3 host links
+        assert_eq!(c.shard_links(0).len(), 3);
+        assert_eq!(c.shard_links(1).len(), 3);
+    }
+
+    #[test]
+    fn shard_calendar_view_sees_only_its_links() {
+        let (mut c, n) = ctrl();
+        let plan = c.plan_transfer(n[1], n[0], 64.0, Secs(0.0)).unwrap();
+        c.commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(0.0)).unwrap();
+        // the ND2->ND1 reservation touches only shard 0's host links (plus
+        // uplinks, which no shard owns): shard 1's view stays empty
+        let s0 = c.shard_calendar_view(0);
+        let s1 = c.shard_calendar_view(1);
+        assert_eq!(s0.n_links(), 3);
+        assert!(s0.n_segments() > 0);
+        assert_eq!(s1.n_segments(), 0);
+        // the reserved window is saturated in shard 0's view only
+        assert!(s0.window_residual(3, 1) < 1.0);
+        assert_eq!(s1.window_residual(3, 1), 1.0);
+    }
+
+    #[test]
+    fn set_max_shards_folds_plan() {
+        let (mut c, n) = ctrl();
+        c.set_max_shards(1);
+        assert_eq!(c.shard_plan().n_shards(), 1);
+        assert_eq!(c.shard_plan().shard_of(n[0]), c.shard_plan().shard_of(n[3]));
+        assert_eq!(c.shard_links(0).len(), 6); // every host link
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod controller;
 pub mod flowtable;
 pub mod qos;
 
-pub use calendar::{Reservation, SlotCalendar};
+pub use calendar::{CalendarView, Reservation, SlotCalendar};
 pub use controller::Controller;
 pub use flowtable::{FlowEntry, FlowTable, TrafficClass};
 pub use qos::{QosPolicy, Queue, QueueId};

@@ -133,24 +133,24 @@ pub fn fat_tree(
 /// Hadoop-style rack-aware placement policy needs. Hosts with no switch
 /// link (degenerate topologies) get `usize::MAX` (rackless, treated as a
 /// flat cluster by the policy when every host shares one rack).
+///
+/// One pass over the links (O(H + E)); a multihomed host keeps its first
+/// host-switch link in link order, matching the per-host `find_map` scan
+/// this replaced.
 pub fn host_racks(topo: &Topology, hosts: &[NodeId]) -> Vec<usize> {
-    hosts
-        .iter()
-        .map(|&h| {
-            topo.links
-                .iter()
-                .find_map(|l| match (l.a, l.b) {
-                    (Endpoint::Host(x), Endpoint::Switch(s))
-                    | (Endpoint::Switch(s), Endpoint::Host(x))
-                        if x == h =>
-                    {
-                        Some(s.0)
-                    }
-                    _ => None,
-                })
-                .unwrap_or(usize::MAX)
-        })
-        .collect()
+    let mut rack = vec![usize::MAX; topo.n_hosts()];
+    for l in &topo.links {
+        let (h, s) = match (l.a, l.b) {
+            (Endpoint::Host(h), Endpoint::Switch(s)) | (Endpoint::Switch(s), Endpoint::Host(h)) => {
+                (h, s)
+            }
+            _ => continue,
+        };
+        if rack[h.0] == usize::MAX {
+            rack[h.0] = s.0;
+        }
+    }
+    hosts.iter().map(|&h| rack[h.0]).collect()
 }
 
 #[cfg(test)]

@@ -13,4 +13,4 @@ pub mod route;
 
 pub use builders::{fat_tree, fig2, host_racks, tree_cluster, Fig2};
 pub use graph::{Endpoint, Link, LinkId, NodeId, SwitchId, Topology};
-pub use route::PathCache;
+pub use route::{PathCache, PathRef};

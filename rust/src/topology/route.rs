@@ -2,38 +2,204 @@
 //!
 //! The schedulers query `route(src, dst)` for every task x candidate-node
 //! pair on the hot path; BFS per query is O(E) and shows up in profiles
-//! (see EXPERIMENTS.md §Perf). [`PathCache`] precomputes all host-to-host
+//! (see EXPERIMENTS.md §Perf). [`PathCache`] precomputes host-to-host
 //! link paths once per topology change.
+//!
+//! Two representations live behind one lookup API (DESIGN.md §10):
+//!
+//! * **Flat** — an explicit all-pairs table, one rotated single-source
+//!   BFS per host (O(H·E) build, O(H²) paths). Correct on any graph.
+//! * **Two-tier** — for host/edge-switch/core-router fabrics (fat trees,
+//!   Fig. 2-style trees) every path is determined by O(H + E) closed-form
+//!   tables: each host's access link, its edge switch, and the core its
+//!   rotated BFS would claim first. Build cost drops to one pass over the
+//!   links and memory from O(H²) paths (≈7 GB at ten kilonodes) to O(H).
+//!   Paths are synthesized per query as inline 4-link sequences that are
+//!   **bit-identical** to the flat table's BFS output (property-pinned in
+//!   `rust/tests/proptests.rs`).
 
-use super::graph::{LinkId, NodeId, Topology};
+use std::ops::Deref;
 
-/// Immutable all-pairs path table over the task-node set.
+use super::graph::{Endpoint, LinkId, NodeId, SwitchId, Topology};
+
+/// A cached path: a borrowed slice out of the flat table, or a small
+/// inline sequence synthesized by the two-tier representation. Derefs to
+/// `[LinkId]`, so call sites treat both alike.
+#[derive(Debug, Clone, Copy)]
+pub enum PathRef<'a> {
+    Borrowed(&'a [LinkId]),
+    Inline { len: u8, links: [LinkId; 4] },
+}
+
+impl Deref for PathRef<'_> {
+    type Target = [LinkId];
+
+    fn deref(&self) -> &[LinkId] {
+        match self {
+            PathRef::Borrowed(p) => p,
+            PathRef::Inline { len, links } => &links[..*len as usize],
+        }
+    }
+}
+
+/// Immutable path cache over the task-node set.
 #[derive(Debug, Clone)]
 pub struct PathCache {
     n: usize,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
     /// paths[src * n + dst] — `None` if disconnected.
-    paths: Vec<Option<Vec<LinkId>>>,
+    Flat(Vec<Option<Vec<LinkId>>>),
+    TwoTier(TwoTier),
+}
+
+/// Closed-form tables for two-tier fabrics: every host hangs off exactly
+/// one edge switch, every edge switch uplinks to every core router, and
+/// no other links exist.
+#[derive(Debug, Clone)]
+struct TwoTier {
+    /// Each host's single access link.
+    host_link: Vec<LinkId>,
+    /// Each host's edge switch.
+    host_edge: Vec<usize>,
+    /// The core router a source's rotated BFS claims first (the static
+    /// ECMP hash `routes_from(src, src)` implements).
+    chosen_core: Vec<usize>,
+    /// uplink[edge * n_cores + core].
+    uplink: Vec<LinkId>,
+    n_cores: usize,
+}
+
+impl TwoTier {
+    fn path(&self, src: NodeId, dst: NodeId) -> PathRef<'_> {
+        let (s, d) = (src.0, dst.0);
+        if s == d {
+            return PathRef::Inline { len: 0, links: [LinkId(0); 4] };
+        }
+        let (es, ed) = (self.host_edge[s], self.host_edge[d]);
+        if es == ed {
+            return PathRef::Inline {
+                len: 2,
+                links: [self.host_link[s], self.host_link[d], LinkId(0), LinkId(0)],
+            };
+        }
+        let c = self.chosen_core[s];
+        PathRef::Inline {
+            len: 4,
+            links: [
+                self.host_link[s],
+                self.uplink[es * self.n_cores + c],
+                self.uplink[ed * self.n_cores + c],
+                self.host_link[d],
+            ],
+        }
+    }
+}
+
+/// Structural detection: `Some` iff the topology is exactly two-tier, in
+/// which case the closed form reproduces every rotated-BFS path. Any
+/// deviation (multihomed or isolated host, host-host or switch-switch
+/// link, parallel or missing uplinks) falls back to the flat table.
+fn two_tier(topo: &Topology) -> Option<TwoTier> {
+    let n = topo.n_hosts();
+    let n_edges = topo.switches.len();
+    let n_cores = topo.routers.len();
+    if n == 0 || n_edges == 0 || n_cores == 0 {
+        return None;
+    }
+    let mut host_link = vec![usize::MAX; n];
+    let mut host_edge = vec![usize::MAX; n];
+    let mut uplink = vec![usize::MAX; n_edges * n_cores];
+    for l in &topo.links {
+        match (l.a, l.b) {
+            (Endpoint::Host(h), Endpoint::Switch(s)) | (Endpoint::Switch(s), Endpoint::Host(h)) => {
+                if host_link[h.0] != usize::MAX {
+                    return None; // multihomed host: BFS tie-breaks, no closed form
+                }
+                host_link[h.0] = l.id.0;
+                host_edge[h.0] = s.0;
+            }
+            (Endpoint::Switch(s), Endpoint::Router(r))
+            | (Endpoint::Router(r), Endpoint::Switch(s)) => {
+                let k = s.0 * n_cores + r;
+                if uplink[k] != usize::MAX {
+                    return None; // parallel uplinks: BFS tie-breaks
+                }
+                uplink[k] = l.id.0;
+            }
+            _ => return None,
+        }
+    }
+    if host_link.contains(&usize::MAX) || uplink.contains(&usize::MAX) {
+        return None; // isolated host, or a (switch, router) pair unconnected
+    }
+    // The core a source claims first: from Host(s) the BFS expands its
+    // edge switch with neighbor rotation `s`, and the first router in
+    // that rotated scan is dequeued ahead of every other core, so it
+    // claims all far edge switches (each core reaches each switch exactly
+    // once). Replaying that one scan per host is the whole route choice.
+    let chosen_core = (0..n)
+        .map(|s| {
+            let nbrs = topo.neighbors(Endpoint::Switch(SwitchId(host_edge[s])));
+            let len = nbrs.len();
+            (0..len)
+                .find_map(|k| match nbrs[(k + s) % len].1 {
+                    Endpoint::Router(r) => Some(r),
+                    _ => None,
+                })
+                .expect("two-tier: every edge switch uplinks to every core")
+        })
+        .collect();
+    Some(TwoTier {
+        host_link: host_link.into_iter().map(LinkId).collect(),
+        host_edge,
+        chosen_core,
+        uplink: uplink.into_iter().map(LinkId).collect(),
+        n_cores,
+    })
 }
 
 impl PathCache {
-    /// Build from a topology: one single-source BFS sweep per host
-    /// (O(H·E) total; the seed ran a full BFS per *pair*, which priced
-    /// thousand-host fat trees out entirely). Each source rotates its
-    /// neighbor order by its own id, so multipath fabrics spread
-    /// equal-length routes across parallel core links deterministically;
-    /// trees are unaffected (unique shortest paths).
+    /// Build from a topology. Two-tier fabrics get the hierarchical
+    /// representation; everything else gets the flat table: one
+    /// single-source BFS sweep per host (O(H·E) total; the seed ran a
+    /// full BFS per *pair*, which priced thousand-host fat trees out
+    /// entirely). Each source rotates its neighbor order by its own id,
+    /// so multipath fabrics spread equal-length routes across parallel
+    /// core links deterministically; trees are unaffected (unique
+    /// shortest paths).
     pub fn build(topo: &Topology) -> Self {
+        let n = topo.n_hosts();
+        match two_tier(topo) {
+            Some(t) => Self { n, repr: Repr::TwoTier(t) },
+            None => Self::build_flat(topo),
+        }
+    }
+
+    /// Force the explicit all-pairs table (the reference the two-tier
+    /// representation is property-pinned against).
+    pub fn build_flat(topo: &Topology) -> Self {
         let n = topo.n_hosts();
         let mut paths = Vec::with_capacity(n * n);
         for s in 0..n {
             paths.extend(topo.routes_from(NodeId(s), s));
         }
-        Self { n, paths }
+        Self { n, repr: Repr::Flat(paths) }
     }
 
-    /// Cached path; empty slice for src == dst.
-    pub fn path(&self, src: NodeId, dst: NodeId) -> Option<&[LinkId]> {
-        self.paths[src.0 * self.n + dst.0].as_deref()
+    pub fn is_hierarchical(&self) -> bool {
+        matches!(self.repr, Repr::TwoTier(_))
+    }
+
+    /// Cached path; empty for src == dst, `None` if disconnected.
+    pub fn path(&self, src: NodeId, dst: NodeId) -> Option<PathRef<'_>> {
+        match &self.repr {
+            Repr::Flat(paths) => paths[src.0 * self.n + dst.0].as_deref().map(PathRef::Borrowed),
+            Repr::TwoTier(t) => Some(t.path(src, dst)),
+        }
     }
 
     pub fn n_hosts(&self) -> usize {
@@ -44,7 +210,7 @@ impl PathCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::builders::fig2;
+    use crate::topology::builders::{fat_tree, fig2, tree_cluster};
 
     #[test]
     fn cache_matches_bfs() {
@@ -65,6 +231,82 @@ mod tests {
     fn self_path_is_empty() {
         let f = fig2(100.0);
         let cache = PathCache::build(&f.topo);
-        assert_eq!(cache.path(NodeId(0), NodeId(0)).unwrap(), &[]);
+        assert!(cache.path(NodeId(0), NodeId(0)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fig2_and_trees_use_hierarchical_repr() {
+        assert!(PathCache::build(&fig2(100.0).topo).is_hierarchical());
+        assert!(PathCache::build(&tree_cluster(3, 5, 100.0, 1000.0).0).is_hierarchical());
+        assert!(PathCache::build(&fat_tree(4, 4, 4, 100.0, 1000.0).0).is_hierarchical());
+    }
+
+    fn all_pairs_agree(topo: &Topology) {
+        let hier = PathCache::build(topo);
+        let flat = PathCache::build_flat(topo);
+        assert!(hier.is_hierarchical());
+        assert!(!flat.is_hierarchical());
+        for s in 0..topo.n_hosts() {
+            for d in 0..topo.n_hosts() {
+                let want = flat.path(NodeId(s), NodeId(d)).map(|p| p.to_vec());
+                let got = hier.path(NodeId(s), NodeId(d)).map(|p| p.to_vec());
+                assert_eq!(got, want, "pair ({s},{d})");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_on_multicore_fat_tree() {
+        all_pairs_agree(&fat_tree(4, 4, 4, 100.0, 1000.0).0);
+        all_pairs_agree(&fat_tree(3, 5, 2, 100.0, 10_000.0).0);
+    }
+
+    #[test]
+    fn hierarchical_matches_flat_on_trees() {
+        all_pairs_agree(&fig2(100.0).topo);
+        all_pairs_agree(&tree_cluster(4, 3, 100.0, 1000.0).0);
+    }
+
+    #[test]
+    fn linkless_pair_falls_back_to_flat() {
+        let mut t = Topology::new();
+        let a = t.add_host();
+        let b = t.add_host();
+        let cache = PathCache::build(&t);
+        assert!(!cache.is_hierarchical());
+        assert!(cache.path(a, b).is_none());
+        assert!(cache.path(a, a).unwrap().is_empty());
+    }
+
+    #[test]
+    fn isolated_host_falls_back_to_flat() {
+        let mut t = Topology::new();
+        let a = t.add_host();
+        let b = t.add_host();
+        let s = t.add_switch();
+        let r = t.add_router();
+        t.connect(Endpoint::Host(a), Endpoint::Switch(s), 100.0);
+        t.connect(Endpoint::Switch(s), Endpoint::Router(r), 1000.0);
+        // b has no access link: closed form impossible
+        let cache = PathCache::build(&t);
+        assert!(!cache.is_hierarchical());
+        assert!(cache.path(a, b).is_none());
+    }
+
+    #[test]
+    fn host_to_host_link_falls_back_to_flat() {
+        let mut t = Topology::new();
+        let a = t.add_host();
+        let b = t.add_host();
+        let s = t.add_switch();
+        let r = t.add_router();
+        t.connect(Endpoint::Host(a), Endpoint::Switch(s), 100.0);
+        t.connect(Endpoint::Host(b), Endpoint::Switch(s), 100.0);
+        t.connect(Endpoint::Switch(s), Endpoint::Router(r), 1000.0);
+        t.connect(Endpoint::Host(a), Endpoint::Host(b), 100.0);
+        let cache = PathCache::build(&t);
+        assert!(!cache.is_hierarchical());
+        // the direct link is the shortest path
+        assert_eq!(cache.path(a, b).unwrap().len(), 1);
     }
 }

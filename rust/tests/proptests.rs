@@ -2,16 +2,16 @@
 //! the deterministic `bass::testkit` runner (proptest substitute — see
 //! DESIGN.md toolchain notes).
 
-use bass::cluster::Ledger;
+use bass::cluster::{Ledger, ShardPlan};
 use bass::hdfs::{Namenode, PlacementPolicy};
 use bass::mapreduce::TaskSpec;
 use bass::runtime::{CostInputs, CostModel};
-use bass::sched::{Bar, Bass, Hds, SchedCtx, Scheduler};
+use bass::sched::{cost, Bar, Bass, Hds, SchedCtx, Scheduler};
 use bass::sdn::{Controller, Reservation, SlotCalendar};
 use bass::sim::{Assignment, Engine, FlowNet, TransferPlan};
 use bass::testkit::forall;
-use bass::topology::builders::tree_cluster;
-use bass::topology::{LinkId, NodeId};
+use bass::topology::builders::{fat_tree, tree_cluster};
+use bass::topology::{LinkId, NodeId, PathCache};
 use bass::util::{Secs, XorShift, BLOCK_MB};
 
 /// A random scheduling scenario over a random tree cluster.
@@ -2500,6 +2500,230 @@ fn prop_sparse_coordinator_stream_matches_handle_bass() {
                 })
                 .collect();
             records_equal(want_recs, &got_recs).map_err(|e| format!("job {j}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sharded scheduler state, batched cost kernel, two-tier path cache
+// ---------------------------------------------------------------------
+
+/// A sharding scenario: a [`SchedCase`] plus the topology family — the
+/// rack-per-switch tree or a multipath fat tree (where the controller's
+/// two-tier path cache engages).
+#[derive(Debug)]
+struct ShardCase {
+    sched: SchedCase,
+    fat: bool,
+    cores: usize,
+}
+
+fn gen_shard_case(r: &mut XorShift) -> ShardCase {
+    ShardCase { sched: gen_sched_case(r), fat: r.chance(0.5), cores: 1 + r.below(3) }
+}
+
+fn build_shard_cluster(case: &ShardCase) -> (Controller, Namenode, Vec<NodeId>, Vec<TaskSpec>) {
+    let s = &case.sched.scenario;
+    let (topo, nodes) = if case.fat {
+        fat_tree(1 + s.n_switches, s.per_switch, case.cores, 100.0, 1000.0)
+    } else {
+        tree_cluster(s.n_switches, s.per_switch, 100.0, 100.0)
+    };
+    let ctrl = Controller::new(topo, 1.0);
+    let mut nn = Namenode::new();
+    let mut rng = XorShift::new(s.seed);
+    let blocks = PlacementPolicy::RandomDistinct.place(
+        &mut nn,
+        &nodes,
+        &[],
+        s.m_tasks,
+        BLOCK_MB,
+        s.replication,
+        &mut rng,
+    );
+    let tasks = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| TaskSpec::map(i, b, BLOCK_MB, Secs(5.0 + (i % 7) as f64), 8.0))
+        .collect();
+    (ctrl, nn, nodes, tasks)
+}
+
+/// Stretch a [`SchedCase`] speed table (sized for the tree cluster) to
+/// `n` nodes by cycling; empty stays empty (homogeneous).
+fn cycle_speeds(speeds: &[f64], n: usize) -> Vec<f64> {
+    if speeds.is_empty() {
+        Vec::new()
+    } else {
+        (0..n).map(|i| speeds[i % speeds.len()]).collect()
+    }
+}
+
+/// The tentpole pin: sharding the scheduler's mutable state (per-rack
+/// idle heaps, shard-grouped candidate scans) is invisible at the
+/// decision level. HDS, BAR and BASS must produce bitwise-identical
+/// assignments, reservations and ledgers under the flat single-shard
+/// plan, the default per-rack plan and a folded two-shard plan.
+#[test]
+fn prop_sharded_state_matches_flat_all_schedulers() {
+    forall(0x5A4D, 60, gen_shard_case, |case| {
+        for which in ["hds", "bar", "bass"] {
+            let run = |plan: usize| -> (Assignment, Ledger) {
+                let (mut ctrl, nn, nodes, tasks) = build_shard_cluster(case);
+                match plan {
+                    0 => ctrl.set_shard_plan(ShardPlan::single(nodes.len())),
+                    1 => {} // the default per-rack plan
+                    _ => ctrl.set_max_shards(2),
+                }
+                let model = CostModel::rust_only();
+                let mut ledger = Ledger::new(nodes.len());
+                let mut ctx = SchedCtx {
+                    controller: &mut ctrl,
+                    namenode: &nn,
+                    ledger: &mut ledger,
+                    authorized: nodes.clone(),
+                    now: Secs::ZERO,
+                    cost: &model,
+                    node_speed: cycle_speeds(&case.sched.speeds, nodes.len()),
+                    down: Vec::new(),
+                    bw_aware_sources: true,
+                };
+                let gate = case.sched.gate.map(Secs);
+                let a = match which {
+                    "hds" => Hds::new().schedule(&tasks, gate, &mut ctx),
+                    "bar" => Bar::new().schedule(&tasks, gate, &mut ctx),
+                    _ => Bass::new().schedule(&tasks, gate, &mut ctx),
+                };
+                (a, ledger)
+            };
+            let (want, ledger_want) = run(0);
+            for plan in [1usize, 2] {
+                let (got, ledger_got) = run(plan);
+                assignments_equal(&want, &got)
+                    .map_err(|e| format!("{which}, plan {plan}: {e}"))?;
+                if ledger_want != ledger_got {
+                    return Err(format!("{which}, plan {plan}: ledger diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The blocked batch kernel (one flat row-major fill, per-holder
+/// bandwidth rows shared across tasks of a block) reproduces the exact
+/// bytes of the seed's per-task row loop, and the row-chunked evaluator
+/// concatenates to the monolithic outputs bitwise — across random tree
+/// and fat-tree clusters, down replicas and both source-selection modes.
+#[test]
+fn prop_batched_cost_kernel_matches_rowwise() {
+    forall(0xBA7C, 80, gen_shard_case, |case| {
+        let (mut ctrl, nn, nodes, tasks) = build_shard_cluster(case);
+        let mut rng = XorShift::new(case.sched.scenario.seed ^ 0x00C0_FFEE);
+        let down: Vec<bool> = nodes.iter().map(|_| rng.chance(0.15)).collect();
+        let model = CostModel::rust_only();
+        let mut ledger = Ledger::new(nodes.len());
+        for (i, &nd) in nodes.iter().enumerate() {
+            ledger.occupy_until(nd, Secs((i % 5) as f64 * 3.0));
+        }
+        let ctx = SchedCtx {
+            controller: &mut ctrl,
+            namenode: &nn,
+            ledger: &mut ledger,
+            authorized: nodes.clone(),
+            now: Secs(2.0),
+            cost: &model,
+            node_speed: cycle_speeds(&case.sched.speeds, nodes.len()),
+            down,
+            bw_aware_sources: rng.chance(0.5),
+        };
+        let batched = cost::build_inputs(&tasks, &ctx);
+        let rowwise = cost::build_inputs_rowwise(&tasks, &ctx);
+        if batched.m != rowwise.m
+            || batched.n != rowwise.n
+            || batched.sz != rowwise.sz
+            || batched.bw != rowwise.bw
+            || batched.tp != rowwise.tp
+            || batched.local != rowwise.local
+            || batched.idle != rowwise.idle
+            || batched.ts != rowwise.ts
+        {
+            return Err("batched inputs diverged from the rowwise reference".into());
+        }
+        let mono = cost::eval_batch(&tasks, &ctx);
+        let rows = 1 + (case.sched.scenario.seed as usize) % tasks.len();
+        let chunked = cost::eval_batch_chunked(&tasks, &ctx, rows);
+        if mono.yc != chunked.yc
+            || mono.tm != chunked.tm
+            || mono.slots != chunked.slots
+            || mono.best_idx != chunked.best_idx
+            || mono.best_cost != chunked.best_cost
+        {
+            return Err(format!("chunked eval ({rows} rows/chunk) diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// A random two-tier fabric shape plus a capacity-skew seed.
+#[derive(Debug)]
+struct FatShape {
+    edges: usize,
+    per_edge: usize,
+    cores: usize,
+    seed: u64,
+}
+
+fn gen_fat_shape(r: &mut XorShift) -> FatShape {
+    FatShape {
+        edges: 2 + r.below(4),
+        per_edge: 1 + r.below(4),
+        cores: 1 + r.below(4),
+        seed: r.next_u64(),
+    }
+}
+
+/// The two-tier fat-tree path cache answers every host pair with the
+/// exact link sequence of the flat per-source BFS table — across random
+/// fat shapes with asymmetric link capacities (routing is hop-count
+/// based, so capacity skew must not move routes in either
+/// representation).
+#[test]
+fn prop_two_tier_pathcache_matches_flat_table() {
+    forall(0x0FA7, 60, gen_fat_shape, |f| {
+        let (mut topo, hosts) = fat_tree(f.edges, f.per_edge, f.cores, 100.0, 1000.0);
+        let mut rng = XorShift::new(f.seed);
+        for l in &mut topo.links {
+            l.capacity_mbps = [50.0, 100.0, 400.0, 10_000.0][rng.below(4)];
+        }
+        let hier = PathCache::build(&topo);
+        if !hier.is_hierarchical() {
+            return Err(format!("{f:?}: two-tier cache did not engage"));
+        }
+        let flat = PathCache::build_flat(&topo);
+        for &s in &hosts {
+            for &d in &hosts {
+                match (hier.path(s, d), flat.path(s, d)) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        if a[..] != b[..] {
+                            return Err(format!(
+                                "{s:?}->{d:?}: two-tier {:?} vs flat {:?}",
+                                &a[..],
+                                &b[..]
+                            ));
+                        }
+                    }
+                    (a, b) => {
+                        return Err(format!(
+                            "{s:?}->{d:?}: presence diverged ({} vs {})",
+                            a.is_some(),
+                            b.is_some()
+                        ));
+                    }
+                }
+            }
         }
         Ok(())
     });
