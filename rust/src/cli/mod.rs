@@ -10,7 +10,7 @@ use crate::experiments::{
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
-use crate::scenario::{run_dynamic_grid, run_job_grid};
+use crate::scenario::{run_dynamic_grid, run_job_grid, MitigationSpec, SpeculationMode};
 use crate::trace;
 use crate::util::XorShift;
 use crate::workload::{JobKind, TraceGen};
@@ -34,8 +34,11 @@ COMMANDS:
                         scheduler-state shard count — sharding is
                         schedule-invariant, only wall times move
   dynamics [--levels l] Churn sweep: BASS/BAR/HDS under node failures, link
-                        degradation, stragglers and cross traffic (levels
-                        0 = static .. heavy; default 0,0.5,1,2)
+        [--mitigation M]  degradation, stragglers and cross traffic (levels
+                        0 = static .. heavy; default 0,0.5,1,2); M = off |
+                        late | bw_aware turns on straggler mitigation —
+                        speculative duplicates of slow outliers, bw_aware
+                        gates each duplicate on a serviceable network path
   stream [--rates g]    Online multi-job stream sweep: BASS/BAR/HDS under a
          [--jobs N]     Poisson arrival stream at each mean gap g seconds
                         (default 120,30,10); overlapping jobs share slots,
@@ -72,6 +75,9 @@ DEFINE YOUR OWN SCENARIO:
     [dynamics] node_failures, mttr_secs, link_degradations, degrade_floor,
                degrade_secs, stragglers, straggle_factor, straggle_secs,
                cross_flows, cross_rate_mb_s, cross_secs, horizon_secs, seed
+    [mitigation] speculation = \"off\"|\"late\"|\"bw_aware\", slow_threshold,
+               evict_factor, rebalance_period (straggler reaction layered
+               on the [dynamics] churn route)
   Every (size, scheduler) cell is a hermetic SimSession: same seed =>
   same block layout and background, so all deltas are scheduling. With a
   [dynamics] table the sweep runs each cell's map wave through the churn
@@ -254,22 +260,44 @@ pub fn run(args: Vec<String>) -> i32 {
                 .map(parse_sizes)
                 .filter(|v| !v.is_empty())
                 .unwrap_or_else(|| vec![0.0, 0.5, 1.0, 2.0]);
+            // same contract as --reps/--rates: a typo'd mode must error,
+            // not silently run the unmitigated sweep
+            let mitigation = match opt(&args, "--mitigation") {
+                None => MitigationSpec::off(),
+                Some(raw) => match SpeculationMode::parse(raw.trim()) {
+                    Some(SpeculationMode::Off) => MitigationSpec::off(),
+                    Some(SpeculationMode::Late) => MitigationSpec::late(),
+                    Some(SpeculationMode::BwAware) => MitigationSpec::bw_aware(),
+                    None => {
+                        eprintln!("--mitigation must be off, late or bw_aware, got {raw:?}");
+                        return 2;
+                    }
+                },
+            };
             let threads = opt_threads(&args);
-            println!("== dynamics churn sweep ({} levels, {threads} threads) ==", levels.len());
             println!(
-                "{:<7} {:<5} {:>10} {:>8} {:>9} {:>7} {:>7} {:>8} {:>10}",
-                "churn", "sched", "makespan", "LR", "reassign", "rounds", "defer", "underrep",
-                "completed"
+                "== dynamics churn sweep ({} levels, mitigation {}, {threads} threads) ==",
+                levels.len(),
+                mitigation.speculation.label()
             );
-            for p in run_dynamics(&levels, &CostModel::rust_only(), threads) {
+            println!(
+                "{:<7} {:<5} {:<8} {:>10} {:>8} {:>9} {:>7} {:>5} {:>5} {:>7} {:>8} {:>10}",
+                "churn", "sched", "mit", "makespan", "LR", "reassign", "rounds", "spec",
+                "wins", "defer", "underrep", "completed"
+            );
+            for p in run_dynamics(&levels, &CostModel::rust_only(), threads, &mitigation) {
                 println!(
-                    "{:<7.2} {:<5} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>7} {:>8} {:>7}/{}",
+                    "{:<7.2} {:<5} {:<8} {:>9.1}s {:>7.1}% {:>9} {:>7} {:>5} {:>5} {:>7} \
+                     {:>8} {:>7}/{}",
                     p.churn,
                     p.scheduler,
+                    p.mitigation,
                     p.makespan,
                     p.locality * 100.0,
                     p.reassignments,
                     p.rounds,
+                    p.speculated,
+                    p.spec_wins,
                     p.deferrals,
                     p.under_replicated_peak,
                     p.completed,
@@ -509,8 +537,10 @@ fn run_scenario(sweep: &ScenarioSweep, path: &str, args: &[String], cost: &CostM
         sweep.base.name,
         sweep.sizes_mb.len() * sweep.schedulers.len()
     );
-    if sweep.base.dynamics.is_some() {
+    if sweep.base.dynamics.is_some() || sweep.base.mitigation.is_some() {
         // churn route: each cell's map wave plays the [dynamics] timeline
+        // (a bare [mitigation] table rides the same pipeline over an
+        // empty timeline rather than being silently ignored)
         println!(
             "{:<10} {:>9} {:>10} {:>8} {:>9} {:>7} {:>7} {:>8} {:>10}",
             "scheduler", "size(MB)", "makespan", "LR", "reassign", "rounds", "defer",
@@ -659,6 +689,29 @@ mod tests {
     }
 
     #[test]
+    fn dynamics_subcommand_accepts_mitigation_modes() {
+        for mode in ["off", "late", "bw_aware"] {
+            let args: Vec<String> = ["dynamics", "--levels", "1", "--mitigation", mode]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            assert_eq!(run(args), 0, "--mitigation {mode}");
+        }
+    }
+
+    #[test]
+    fn dynamics_subcommand_rejects_bad_mitigation() {
+        // same strictness as --reps/--rates: no silent unmitigated sweep
+        for bad in ["bw-aware", "LATE", "speculate", ""] {
+            let args: Vec<String> = ["dynamics", "--levels", "0", "--mitigation", bad]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            assert_eq!(run(args), 2, "--mitigation {bad:?}");
+        }
+    }
+
+    #[test]
     fn skew_subcommand_runs_and_rejects_bad_reps() {
         let args: Vec<String> =
             ["skew", "--reps", "1", "--threads", "2"].iter().map(|s| s.to_string()).collect();
@@ -766,6 +819,26 @@ mod tests {
         )
         .unwrap();
         assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 0);
+    }
+
+    #[test]
+    fn scenario_with_mitigation_table_runs_and_rejects_typos() {
+        let dir = std::env::temp_dir().join("bass_cli_mitigation_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("mit.toml");
+        std::fs::write(
+            &f,
+            "run = \"scenario\"\njob = \"sort\"\n\
+             [sweep]\nsizes_mb = [150]\nschedulers = \"bass\"\n\
+             [dynamics]\nstragglers = 2\nstraggle_factor = 4\nhorizon_secs = 40\n\
+             [mitigation]\nspeculation = \"bw_aware\"\nslow_threshold = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 0);
+        // a typo'd [mitigation] key is rejected, not silently defaulted
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "run = \"scenario\"\n[mitigation]\nspeculate = \"late\"\n").unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), bad.display().to_string()]), 2);
     }
 
     #[test]

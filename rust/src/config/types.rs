@@ -3,8 +3,8 @@
 use crate::experiments::{SchedulerKind, Table1Config};
 use crate::hdfs::PlacementPolicy;
 use crate::scenario::{
-    cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, StreamSpec,
-    TopologyShape, WorkloadSpec,
+    cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec,
+    SpeculationMode, StreamSpec, TopologyShape, WorkloadSpec,
 };
 use crate::sdn::QosPolicy;
 use crate::workload::JobKind;
@@ -182,6 +182,9 @@ impl ScenarioSweep {
         }
         if t.keys().any(|k| k.starts_with("dynamics.")) {
             base.dynamics = Some(parse_dynamics(t)?);
+        }
+        if t.keys().any(|k| k.starts_with("mitigation.")) {
+            base.mitigation = Some(parse_mitigation(t)?);
         }
         let sizes_mb = t
             .get("sweep.sizes_mb")
@@ -648,6 +651,62 @@ fn parse_dynamics(t: &Table) -> anyhow::Result<DynamicsSpec> {
     Ok(d)
 }
 
+/// Parse a `[mitigation]` table onto [`MitigationSpec::off`] defaults,
+/// rejecting unknown keys and unsafe shapes (mirrors the `[dynamics]`
+/// contract: a typo'd knob must error, not silently run a different
+/// mitigation policy than the user wrote down).
+fn parse_mitigation(t: &Table) -> anyhow::Result<MitigationSpec> {
+    const KNOWN: [&str; 4] = [
+        "mitigation.speculation",
+        "mitigation.slow_threshold",
+        "mitigation.evict_factor",
+        "mitigation.rebalance_period",
+    ];
+    for k in t.keys().filter(|k| k.starts_with("mitigation.")) {
+        anyhow::ensure!(
+            k == "mitigation." || KNOWN.contains(&k.as_str()),
+            "unknown [mitigation] key {k:?}"
+        );
+    }
+    let mut m = MitigationSpec::off();
+    if let Some(v) = t.get("mitigation.speculation") {
+        m.speculation = match v.as_str().and_then(SpeculationMode::parse) {
+            Some(s) => s,
+            None => anyhow::bail!(
+                "mitigation.speculation must be \"off\", \"late\" or \"bw_aware\""
+            ),
+        };
+    }
+    let f64_of = |k: &str| -> anyhow::Result<Option<f64>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_f64() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[mitigation] {k} must be a number"),
+            },
+        }
+    };
+    if let Some(v) = f64_of("mitigation.slow_threshold")? {
+        anyhow::ensure!(
+            v >= 1.0,
+            "mitigation.slow_threshold is a stretch factor: must be >= 1"
+        );
+        m.slow_threshold = v;
+    }
+    if let Some(v) = f64_of("mitigation.evict_factor")? {
+        anyhow::ensure!(
+            v > 1.0,
+            "mitigation.evict_factor must exceed 1 (a healthy node's stretch)"
+        );
+        m.evict_factor = v;
+    }
+    if let Some(v) = f64_of("mitigation.rebalance_period")? {
+        anyhow::ensure!(v > 0.0, "mitigation.rebalance_period must be positive");
+        m.rebalance_period = v;
+    }
+    Ok(m)
+}
+
 fn apply_table1(cfg: &mut Table1Config, t: &Table) {
     if let Some(v) = t.get("cluster.link_mbps").and_then(|v| v.as_f64()) {
         cfg.link_mbps = v;
@@ -867,6 +926,70 @@ seed = 42
         let c = ExperimentConfig::from_str("run = \"scenario\"\n[dynamics]\n").unwrap();
         let d = c.scenario.unwrap().base.dynamics.expect("churn route selected");
         assert_eq!(d, DynamicsSpec::none());
+    }
+
+    #[test]
+    fn mitigation_table_parses_onto_off_defaults() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[mitigation]\nspeculation = \"bw_aware\"\n\
+             slow_threshold = 1.8\nevict_factor = 4.0\nrebalance_period = 30\n",
+        )
+        .unwrap();
+        let m = c.scenario.unwrap().base.mitigation.expect("mitigation parsed");
+        assert_eq!(m.speculation, SpeculationMode::BwAware);
+        assert_eq!(m.slow_threshold, 1.8);
+        assert_eq!(m.evict_factor, 4.0);
+        assert_eq!(m.rebalance_period, 30.0);
+        // untouched knobs keep the off() defaults
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[mitigation]\nspeculation = \"late\"\n",
+        )
+        .unwrap();
+        let m = c.scenario.unwrap().base.mitigation.unwrap();
+        assert_eq!(m.speculation, SpeculationMode::Late);
+        assert_eq!(m.slow_threshold, 1.5);
+        assert!(m.evict_factor.is_infinite());
+        assert_eq!(m.rebalance_period, 0.0);
+    }
+
+    #[test]
+    fn bare_mitigation_table_is_inert() {
+        // a `[mitigation]` header with every knob omitted routes through
+        // the mitigation layer but changes nothing (inert = delegate)
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n[mitigation]\n").unwrap();
+        let m = c.scenario.unwrap().base.mitigation.expect("route selected");
+        assert!(m.is_inert());
+        // and no table at all leaves the field empty
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n").unwrap();
+        assert!(c.scenario.unwrap().base.mitigation.is_none());
+    }
+
+    #[test]
+    fn mitigation_rejects_unknown_keys() {
+        // a typo must not silently run a different mitigation policy
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[mitigation]\nspeculate = \"late\"\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("speculate"));
+    }
+
+    #[test]
+    fn mitigation_rejects_mistyped_and_unsafe_values() {
+        for bad in [
+            // unknown / misspelled mode strings
+            "run = \"scenario\"\n[mitigation]\nspeculation = \"bw-aware\"\n",
+            "run = \"scenario\"\n[mitigation]\nspeculation = \"LATE\"\n",
+            "run = \"scenario\"\n[mitigation]\nspeculation = 1\n",
+            // out-of-range / mistyped numbers
+            "run = \"scenario\"\n[mitigation]\nslow_threshold = 0.5\n",
+            "run = \"scenario\"\n[mitigation]\nslow_threshold = \"1.5\"\n",
+            "run = \"scenario\"\n[mitigation]\nevict_factor = 1.0\n",
+            "run = \"scenario\"\n[mitigation]\nevict_factor = 0\n",
+            "run = \"scenario\"\n[mitigation]\nrebalance_period = 0\n",
+            "run = \"scenario\"\n[mitigation]\nrebalance_period = -5\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

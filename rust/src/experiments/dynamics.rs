@@ -10,8 +10,8 @@
 
 use crate::runtime::CostModel;
 use crate::scenario::{
-    parallel_map, BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, SimSession,
-    TopologyShape, WorkloadSpec,
+    parallel_map, BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec,
+    SimSession, TopologyShape, WorkloadSpec,
 };
 
 use super::fixtures::SchedulerKind;
@@ -21,6 +21,9 @@ use super::fixtures::SchedulerKind;
 pub struct ChurnPoint {
     pub churn: f64,
     pub scheduler: &'static str,
+    /// Speculation mode label of the mitigation policy the point ran
+    /// under (`"off"` = the plain dynamics path).
+    pub mitigation: &'static str,
     pub makespan: f64,
     pub locality: f64,
     pub reassignments: usize,
@@ -31,6 +34,12 @@ pub struct ChurnPoint {
     pub deferrals: usize,
     /// Peak per-round under-replicated block count.
     pub under_replicated_peak: usize,
+    /// Duplicate attempts launched by speculative execution.
+    pub speculated: usize,
+    /// Duels the duplicate won (original killed).
+    pub spec_wins: usize,
+    /// Nodes evicted by the straggle-factor ceiling.
+    pub evictions: usize,
 }
 
 /// The scenario one (level, scheduler) point expands to: a 16-node tree
@@ -57,7 +66,19 @@ pub fn churn_spec(level: f64, kind: SchedulerKind) -> ScenarioSpec {
 
 /// Run the churn sweep over `levels` x {BASS, BAR, HDS}, fanned across
 /// `threads` workers (bitwise-identical to serial).
-pub fn run_dynamics(levels: &[f64], cost: &CostModel, threads: usize) -> Vec<ChurnPoint> {
+///
+/// `mitigation` is the sweep's reaction policy, applied uniformly so
+/// the churn axis stays the only variable per column. The inert
+/// [`MitigationSpec::off`] reproduces the plain `run_dynamic` sweep
+/// bit-for-bit (the mitigated runner delegates); the incident timeline
+/// itself never depends on the mitigation policy, so off/late/bw_aware
+/// columns at one level face identical churn.
+pub fn run_dynamics(
+    levels: &[f64],
+    cost: &CostModel,
+    threads: usize,
+    mitigation: &MitigationSpec,
+) -> Vec<ChurnPoint> {
     let points: Vec<(f64, SchedulerKind)> = levels
         .iter()
         .flat_map(|&lv| {
@@ -67,12 +88,14 @@ pub fn run_dynamics(levels: &[f64], cost: &CostModel, threads: usize) -> Vec<Chu
         })
         .collect();
     parallel_map(points, threads, |(lv, kind)| {
-        let spec = churn_spec(lv, kind);
+        let mut spec = churn_spec(lv, kind);
+        spec.mitigation = Some(mitigation.clone());
         let sess = SimSession::new(&spec);
-        let out = sess.run_dynamic(cost);
+        let out = sess.run_mitigated(cost);
         ChurnPoint {
             churn: lv,
             scheduler: kind.label(),
+            mitigation: mitigation.speculation.label(),
             makespan: out.makespan,
             locality: out.locality,
             reassignments: out.reassignments,
@@ -81,6 +104,9 @@ pub fn run_dynamics(levels: &[f64], cost: &CostModel, threads: usize) -> Vec<Chu
             tasks: out.submitted.len(),
             deferrals: out.deferrals,
             under_replicated_peak: out.under_replicated_peak,
+            speculated: out.speculated,
+            spec_wins: out.spec_wins,
+            evictions: out.evictions,
         }
     })
 }
@@ -122,25 +148,30 @@ mod tests {
 
     #[test]
     fn heavy_churn_completes_all_tasks_for_all_schedulers() {
-        let pts = run_dynamics(&[1.0], &CostModel::rust_only(), 1);
+        let pts = run_dynamics(&[1.0], &CostModel::rust_only(), 1, &MitigationSpec::off());
         assert_eq!(pts.len(), 3);
         for p in &pts {
             assert_eq!(p.completed, p.tasks, "{}: every task completes", p.scheduler);
             assert!(p.makespan > 0.0);
             assert!((0.0..=1.0).contains(&p.locality));
+            assert_eq!(p.mitigation, "off");
+            assert_eq!(p.speculated, 0);
         }
     }
 
     #[test]
     fn sweep_is_deterministic_and_thread_invariant() {
         let cost = CostModel::rust_only();
-        let serial = run_dynamics(&[0.0, 1.0], &cost, 1);
-        let fanned = run_dynamics(&[0.0, 1.0], &cost, 3);
-        assert_eq!(serial.len(), fanned.len());
-        for (a, b) in serial.iter().zip(&fanned) {
-            assert_eq!(a.scheduler, b.scheduler);
-            assert_eq!(a.makespan, b.makespan);
-            assert_eq!(a.reassignments, b.reassignments);
+        for mit in [MitigationSpec::off(), MitigationSpec::bw_aware()] {
+            let serial = run_dynamics(&[0.0, 1.0], &cost, 1, &mit);
+            let fanned = run_dynamics(&[0.0, 1.0], &cost, 3, &mit);
+            assert_eq!(serial.len(), fanned.len());
+            for (a, b) in serial.iter().zip(&fanned) {
+                assert_eq!(a.scheduler, b.scheduler);
+                assert_eq!(a.makespan, b.makespan);
+                assert_eq!(a.reassignments, b.reassignments);
+                assert_eq!(a.speculated, b.speculated);
+            }
         }
     }
 
@@ -151,5 +182,35 @@ mod tests {
         let b = churn_spec(1.0, SchedulerKind::Hds);
         assert_eq!(a.dynamics, b.dynamics);
         assert_eq!(a.seed, b.seed);
+    }
+
+    #[test]
+    fn off_mitigation_column_is_pinned_to_the_plain_sweep() {
+        // `speculation = "off"` (the inert spec) must reproduce the
+        // unmitigated dynamics runner bit-for-bit — the mitigation axis
+        // adds columns, it never perturbs the baseline
+        let cost = CostModel::rust_only();
+        let pts = run_dynamics(&[1.0], &cost, 1, &MitigationSpec::off());
+        for p in &pts {
+            let kind = SchedulerKind::parse(p.scheduler).unwrap();
+            let sess = SimSession::new(&churn_spec(p.churn, kind));
+            let plain = sess.run_dynamic(&cost);
+            assert_eq!(p.makespan.to_bits(), plain.makespan.to_bits(), "{}", p.scheduler);
+            assert_eq!(p.reassignments, plain.reassignments);
+            assert_eq!(p.rounds, plain.rounds);
+        }
+    }
+
+    #[test]
+    fn mitigation_columns_face_the_identical_incident_timeline() {
+        // the dynamics seed is independent of the mitigation policy, so
+        // off/late/bw_aware columns at one level see the same incidents
+        let base = churn_spec(1.0, SchedulerKind::Bass);
+        for mit in [MitigationSpec::late(), MitigationSpec::bw_aware()] {
+            let mut m = churn_spec(1.0, SchedulerKind::Bass);
+            m.mitigation = Some(mit);
+            assert_eq!(base.dynamics, m.dynamics);
+            assert_eq!(base.seed, m.seed);
+        }
     }
 }

@@ -300,18 +300,33 @@ pub struct DynamicsOutcome {
     /// Peak per-round count of under-replicated blocks (some holder
     /// down), the namenode view a real HDFS would re-replicate from.
     pub under_replicated_peak: usize,
+    /// Speculative duplicate attempts launched by the mitigation layer
+    /// (always 0 on the plain [`run_dynamic`] path).
+    pub speculated: usize,
+    /// Duels the duplicate attempt won (original was killed).
+    pub spec_wins: usize,
+    /// Straggling-node evictions performed by the mitigation layer.
+    pub evictions: usize,
+    /// Per-duel audit trail (see [`super::mitigation::DuelAudit`]); the
+    /// no-reservation-leak oracle re-checks every killed attempt here.
+    pub duels: Vec<super::mitigation::DuelAudit>,
 }
 
 /// Cluster state at one instant, replayed from the timeline prefix.
-struct ClusterState {
-    down: Vec<bool>,
-    speed: Vec<f64>,
-    link_frac: Vec<f64>,
+pub(super) struct ClusterState {
+    pub(super) down: Vec<bool>,
+    pub(super) speed: Vec<f64>,
+    pub(super) link_frac: Vec<f64>,
     /// Active cross flows: (key, src, dst, rate).
-    cross: Vec<(usize, NodeId, NodeId, f64)>,
+    pub(super) cross: Vec<(usize, NodeId, NodeId, f64)>,
 }
 
-fn state_at(timeline: &[TimedEvent], now: Secs, n_hosts: usize, n_links: usize) -> ClusterState {
+pub(super) fn state_at(
+    timeline: &[TimedEvent],
+    now: Secs,
+    n_hosts: usize,
+    n_links: usize,
+) -> ClusterState {
     let mut st = ClusterState {
         down: vec![false; n_hosts],
         speed: vec![1.0; n_hosts],
@@ -616,6 +631,10 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
         pulls,
         deferrals,
         under_replicated_peak,
+        speculated: 0,
+        spec_wins: 0,
+        evictions: 0,
+        duels: Vec::new(),
     }
 }
 
@@ -646,7 +665,10 @@ pub struct DynSweepRow {
 }
 
 /// Run a grid of dynamic scenarios (each cell: build the session, play
-/// its churn timeline) on up to `threads` workers, rows in grid order.
+/// its churn timeline — with the mitigation layer active when the spec
+/// carries a non-inert `[mitigation]` table; inert specs delegate to the
+/// plain [`run_dynamic`] path bit-identically) on up to `threads`
+/// workers, rows in grid order.
 pub fn run_dynamic_grid(
     specs: Vec<super::spec::ScenarioSpec>,
     threads: usize,
@@ -661,7 +683,7 @@ pub fn run_dynamic_grid(
         let scheduler = spec.scheduler.label();
         let scenario = spec.name.clone();
         let sess = SimSession::new(&spec);
-        let out = run_dynamic(&sess, cost);
+        let out = super::mitigation::run_mitigated(&sess, cost);
         DynSweepRow {
             scenario,
             scheduler,

@@ -1,0 +1,1179 @@
+//! Straggler mitigation: bandwidth-aware speculative execution,
+//! eviction off degraded nodes, and a scoring rebalancer.
+//!
+//! Since the dynamics layer landed, churn timelines could *inject*
+//! stragglers but no scheduler reacted — a slowed node simply stretched
+//! the tail of every sweep. This layer closes the loop, staying true to
+//! the paper's premise that the SDN controller's bandwidth view should
+//! gate every placement decision:
+//!
+//! * **Speculative execution** ([`SpeculationMode`]): a LATE-style
+//!   detector thresholds the realized compute stretch of the running
+//!   population ([`crate::sim::Engine::running_snapshot`]) and launches
+//!   a duplicate attempt for slow outliers on the best idle healthy
+//!   node. The novel twist is the *bandwidth-aware* gate: under
+//!   [`SpeculationMode::BwAware`] a duplicate is only worth launching if
+//!   its input pull is serviceable — BASS/Pre-BASS ask the controller
+//!   for a calendar reservation window ([`crate::sdn::Controller::
+//!   plan_transfer`]; no window, no duplicate) and commit it, HDS/BAR
+//!   check the instantaneous path bandwidth. [`SpeculationMode::Late`]
+//!   is the classic bandwidth-blind baseline: it estimates the duplicate
+//!   from compute time alone and pulls fair-share. First finisher wins:
+//!   the loser's attempt is killed through the engine
+//!   ([`crate::sim::Engine::kill_attempt`]) and its flow + calendar
+//!   grant cancelled through the controller
+//!   ([`crate::sdn::Controller::complete_transfer`]) — the no-leak
+//!   oracle re-checks every duel from the [`DuelAudit`] trail.
+//! * **Eviction**: when a node's straggle factor reaches
+//!   [`MitigationSpec::evict_factor`], its queued and running work is
+//!   descheduled through the existing orphan path
+//!   ([`crate::sim::Engine::evict_node`]) and re-enters the next
+//!   rescheduling round, which sees the *effective* node speeds and
+//!   places around the straggler. One eviction per (node, straggle
+//!   onset) keeps the round loop convergent.
+//! * **Scoring rebalancer** ([`Rebalancer`]): the evaluate/score/evict
+//!   descheduler split for long streams — rank nodes by realized-vs-
+//!   promised service over their finished records and drain the worst
+//!   offender's *pending* queue (the running attempt is left to finish).
+//!   Wired into the online stream driver (`scenario::online`) at
+//!   [`MitigationSpec::rebalance_period`] intervals.
+//!
+//! Duplicate attempts execute under a synthetic task id
+//! (`orig + `[`DUP_BASE`]) so every TaskId-keyed engine structure stays
+//! collision-free; a winning duplicate's record is rewritten to the
+//! original id at round end, so exactly-once completion (and every
+//! downstream metric) is preserved. A task whose original *and*
+//! duplicate both die in a crash storm re-enters the orphan carry set —
+//! never silently dropped (pinned by the replication-1 regression test).
+//!
+//! With an inert spec ([`MitigationSpec::is_inert`]) [`run_mitigated`]
+//! delegates to [`run_dynamic`] — `speculation = "off"` is bit-identical
+//! to the plain dynamics path by construction.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::Ledger;
+use crate::mapreduce::{TaskId, TaskSpec};
+use crate::runtime::CostModel;
+use crate::sched::{SchedCtx, Scheduler as _, SchedulerKind};
+use crate::sdn::controller::Transfer;
+use crate::sdn::{Controller, Reservation, TrafficClass};
+use crate::sim::{
+    Assignment, ClusterEvent, Engine, Placement, RunningTask, TaskRecord, TransferPlan,
+};
+use crate::topology::{LinkId, NodeId};
+use crate::util::{mbps_to_mb_per_s, Secs};
+
+use super::dynamics::{
+    down_intervals, run_dynamic, state_at, ClusterState, DynEvent, DynamicsOutcome, DynamicsSpec,
+    PullAudit, ReservationAudit,
+};
+use super::session::SimSession;
+
+/// Duplicate attempts run under `orig.id + DUP_BASE` so TaskId-keyed
+/// engine state (watches, done-tracking, job tags) stays collision-free;
+/// winning duplicates are rewritten to the original id at round end.
+pub const DUP_BASE: usize = 1 << 40;
+
+/// Speculative-execution policy (the `[mitigation] speculation` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpeculationMode {
+    /// No duplicates — the plain dynamics path.
+    Off,
+    /// Classic LATE: slow outliers are duplicated on estimated compute
+    /// time alone; the duplicate's input pull contends fair-share. The
+    /// bandwidth-blind baseline.
+    Late,
+    /// Bandwidth-aware: a duplicate launches only if its input pull is
+    /// serviceable — BASS/Pre-BASS require (and commit) a calendar
+    /// reservation window, HDS/BAR require instantaneous path bandwidth
+    /// that still beats the straggling original.
+    BwAware,
+}
+
+impl SpeculationMode {
+    /// Strict parse of the config/CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "late" => Some(Self::Late),
+            "bw_aware" => Some(Self::BwAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Late => "late",
+            Self::BwAware => "bw_aware",
+        }
+    }
+}
+
+/// The `[mitigation]` knobs, threaded via `ScenarioSpec.mitigation`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MitigationSpec {
+    pub speculation: SpeculationMode,
+    /// LATE stretch threshold: an attempt is a slow outlier once its
+    /// realized compute stretch reaches this factor (and its remaining
+    /// time is at least the running population's median). `>= 1`.
+    pub slow_threshold: f64,
+    /// Evict a node's work once its straggle factor reaches this
+    /// ceiling (`> 1`; infinite = eviction off, the default).
+    pub evict_factor: f64,
+    /// Stream rebalancer period in seconds (`<= 0` = off, the default).
+    pub rebalance_period: f64,
+}
+
+impl MitigationSpec {
+    /// Everything off — behaves exactly like no mitigation at all.
+    pub fn off() -> Self {
+        Self {
+            speculation: SpeculationMode::Off,
+            slow_threshold: 1.5,
+            evict_factor: f64::INFINITY,
+            rebalance_period: 0.0,
+        }
+    }
+
+    /// Classic LATE speculation, everything else off.
+    pub fn late() -> Self {
+        Self { speculation: SpeculationMode::Late, ..Self::off() }
+    }
+
+    /// Bandwidth-aware speculation, everything else off.
+    pub fn bw_aware() -> Self {
+        Self { speculation: SpeculationMode::BwAware, ..Self::off() }
+    }
+
+    /// An inert spec changes nothing: [`run_mitigated`] delegates to
+    /// the plain [`run_dynamic`] path (bit-identical by construction).
+    pub fn is_inert(&self) -> bool {
+        self.speculation == SpeculationMode::Off
+            && !self.evict_factor.is_finite()
+            && self.rebalance_period <= 0.0
+    }
+}
+
+/// Audit record of one speculation duel (original vs duplicate), enough
+/// for the no-reservation-leak oracle to re-check kill semantics
+/// independently of the controller's bookkeeping.
+#[derive(Debug, Clone)]
+pub struct DuelAudit {
+    pub round: usize,
+    /// The straggling original task.
+    pub task: TaskId,
+    /// The duplicate's synthetic id (`task + DUP_BASE`).
+    pub dup: TaskId,
+    /// Node the duplicate was launched on.
+    pub node: NodeId,
+    /// Resolution instant (first finish, or round end if both died).
+    pub at: Secs,
+    /// Surviving attempt (`None` = both died in a crash storm; the task
+    /// re-enters the orphan carry set).
+    pub winner: Option<TaskId>,
+    /// The duplicate's pull held a calendar grant.
+    pub reserved: bool,
+    /// That grant was released (must hold whenever the duplicate lost).
+    pub released: bool,
+    /// The original's pull held a calendar grant.
+    pub orig_reserved: bool,
+    /// That grant was released (must hold whenever the original lost).
+    pub orig_released: bool,
+}
+
+/// One in-flight duel, keyed by the duplicate's watch key.
+struct Duel {
+    orig: TaskId,
+    dup: TaskId,
+    orig_node: NodeId,
+    dup_node: NodeId,
+    round: usize,
+    /// The duplicate's committed grant (BwAware + reserving scheduler).
+    grant: Option<Transfer>,
+    /// The original placement's committed grant, if any.
+    orig_grant: Option<Transfer>,
+    resolved: bool,
+}
+
+/// LATE detector: over the running originals (duplicates are never
+/// themselves duplicated), flag attempts whose realized compute stretch
+/// reaches `threshold` *and* whose remaining time is at least the
+/// population median — the classic "longest remaining time among the
+/// slow" rule, so a lone tail straggler still qualifies.
+fn slow_outliers(snap: &[RunningTask], now: Secs, threshold: f64) -> Vec<RunningTask> {
+    let originals: Vec<&RunningTask> = snap.iter().filter(|r| r.task.0 < DUP_BASE).collect();
+    if originals.is_empty() {
+        return Vec::new();
+    }
+    let mut remaining: Vec<f64> = originals.iter().map(|r| (r.finish - now).0).collect();
+    remaining.sort_by(f64::total_cmp);
+    let median = remaining[remaining.len() / 2];
+    originals
+        .into_iter()
+        .filter(|r| {
+            let stretch = (r.finish - r.compute_start).0 / r.nominal.0.max(1e-9);
+            stretch >= threshold && (r.finish - now).0 >= median
+        })
+        .cloned()
+        .collect()
+}
+
+/// Remove the audit row a released grant contributed (the capacity
+/// oracle sums co-resident grants; a released one no longer is).
+fn unaudit(reservations: &mut Vec<ReservationAudit>, round: usize, r: &Reservation) {
+    if let Some(i) = reservations.iter().position(|a| {
+        a.round == round
+            && a.start_slot == r.start_slot
+            && a.n_slots == r.n_slots
+            && a.frac == r.frac
+            && a.links == r.links
+    }) {
+        reservations.remove(i);
+    }
+}
+
+/// Try to launch a duplicate attempt for `victim` at instant `now`.
+/// Returns the registered duel, or `None` when no candidate node is
+/// idle, the bandwidth gate fails, or the duplicate would not beat the
+/// original's estimated finish.
+#[allow(clippy::too_many_arguments)]
+fn try_speculate(
+    engine: &mut Engine,
+    ctrl: &mut Controller,
+    sess: &SimSession,
+    mode: SpeculationMode,
+    victim: &RunningTask,
+    task: &TaskSpec,
+    orig_grant: Option<Transfer>,
+    st: &ClusterState,
+    now: Secs,
+    round: usize,
+    reservations: &mut Vec<ReservationAudit>,
+    pulls: &mut Vec<PullAudit>,
+) -> Option<Duel> {
+    // candidate: the first idle, healthy, authorized node that is not
+    // the victim's (sess.nodes order keeps the choice deterministic)
+    let cand = sess.nodes.iter().copied().find(|&nd| {
+        let j = nd.0;
+        nd != victim.node
+            && !st.down[j]
+            && st.speed[j] == 1.0
+            && !engine.has_pending(nd)
+            && engine.node_free_times()[j] <= now
+    })?;
+    let factor = sess
+        .spec
+        .node_speed
+        .get(cand.0)
+        .copied()
+        .filter(|&f| f > 0.0)
+        .unwrap_or(1.0);
+    let compute = Secs(task.compute.0 * factor);
+    let holders: Vec<NodeId> = match task.input {
+        Some(b) => {
+            let live: Vec<NodeId> = sess
+                .nn
+                .block(b)
+                .replicas
+                .iter()
+                .copied()
+                .filter(|h| !st.down[h.0])
+                .collect();
+            if live.is_empty() {
+                return None; // block unreadable right now
+            }
+            live
+        }
+        None => Vec::new(),
+    };
+    let local = task.input.is_none() || holders.contains(&cand);
+    // remote source: the bandwidth-argmax live holder (ties -> first)
+    let (src, src_bw) = if local {
+        (cand, f64::INFINITY)
+    } else {
+        let mut best = (holders[0], ctrl.path_bw_mb_s(holders[0], cand, now));
+        for &h in &holders[1..] {
+            let bw = ctrl.path_bw_mb_s(h, cand, now);
+            if bw > best.1 {
+                best = (h, bw);
+            }
+        }
+        best
+    };
+    let reserving = matches!(sess.spec.scheduler, SchedulerKind::Bass | SchedulerKind::PreBass);
+
+    // estimate the duplicate's finish under the mode's bandwidth model
+    let mut planned: Option<(Reservation, f64, Secs)> = None;
+    let est_finish = if local {
+        now + compute
+    } else if mode == SpeculationMode::BwAware && reserving {
+        // the bandwidth-aware rule: no reservation window, no duplicate
+        let plan = ctrl.plan_transfer(src, cand, task.input_mb, now)?;
+        let est = plan.2.max(now) + compute;
+        planned = Some(plan);
+        est
+    } else if mode == SpeculationMode::BwAware {
+        // HDS/BAR: gate on the instantaneous path bandwidth
+        if src_bw <= 0.0 {
+            return None;
+        }
+        now + Secs(task.input_mb / src_bw) + compute
+    } else {
+        // classic LATE is bandwidth-blind: compute-only estimate
+        now + compute
+    };
+    if est_finish >= victim.finish {
+        return None; // the duplicate would not beat the original
+    }
+
+    let (transfer, grant) = if local {
+        (TransferPlan::None, None)
+    } else if let Some(plan) = planned {
+        let t = ctrl.commit_transfer(src, cand, TrafficClass::HadoopOther, plan, now).ok()?;
+        if t.reservation.n_slots > 0 {
+            reservations.push(ReservationAudit {
+                round,
+                links: t.reservation.links.clone(),
+                start_slot: t.reservation.start_slot,
+                n_slots: t.reservation.n_slots,
+                frac: t.reservation.frac,
+                usable: ctrl.path_health(&t.reservation.links),
+            });
+        }
+        (TransferPlan::Reserved(t.clone()), Some(t))
+    } else {
+        let path = ctrl.path(src, cand)?.to_vec();
+        let fs = TransferPlan::FairShare {
+            path,
+            size_mb: task.input_mb,
+            class: TrafficClass::HadoopOther,
+        };
+        (fs, None)
+    };
+    if !local {
+        // audited under the original id: oracles cross-check pull
+        // sources against the submitted task set
+        pulls.push(PullAudit { task: task.id, source: src, at: now });
+    }
+    let dup = TaskId(task.id.0 + DUP_BASE);
+    engine.load(&Assignment {
+        placements: vec![Placement {
+            task: dup,
+            node: cand,
+            compute,
+            transfer,
+            gate: Some(now),
+            source: (!local).then_some(src),
+            is_local: local,
+            is_map: task.is_map(),
+        }],
+    });
+    engine.watch_threshold(dup.0 as u64, &[task.id, dup], 1);
+    Some(Duel {
+        orig: task.id,
+        dup,
+        orig_node: victim.node,
+        dup_node: cand,
+        round,
+        grant,
+        orig_grant,
+        resolved: false,
+    })
+}
+
+/// Play a session's dynamics timeline with the mitigation layer active:
+/// the round structure of [`run_dynamic`] (schedule the pending set,
+/// execute, collect orphans, repeat from the earliest loss) with the
+/// round's execution driven in control-period checkpoints so the layer
+/// can observe progress, launch duplicates, resolve duels at first
+/// finish, and evict collapsed nodes mid-round.
+pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
+    let spec = &sess.spec;
+    let mit = spec.mitigation.clone().unwrap_or_else(MitigationSpec::off);
+    if mit.is_inert() {
+        // `speculation = "off"` (and no eviction/rebalance) is the plain
+        // dynamics path, bit-identical by delegation
+        return run_dynamic(sess, cost);
+    }
+    let dspec = spec.dynamics.clone().unwrap_or_else(DynamicsSpec::none);
+    let n_links = sess.link_caps_mbps.len();
+    let n_hosts = sess.engine_init.len();
+    let timeline = dspec.compile(&sess.nodes, n_links);
+    let base_caps_mb_s: Vec<f64> =
+        sess.link_caps_mbps.iter().map(|&c| mbps_to_mb_per_s(c)).collect();
+
+    let tasks: Vec<TaskSpec> = if !sess.tasks.is_empty() {
+        sess.tasks.clone()
+    } else if let Some(job) = &sess.job {
+        job.maps().cloned().collect()
+    } else {
+        Vec::new()
+    };
+    let submitted: Vec<TaskId> = tasks.iter().map(|t| t.id).collect();
+    let spec_of: HashMap<TaskId, usize> =
+        tasks.iter().enumerate().map(|(i, t)| (t.id, i)).collect();
+    let intervals = down_intervals(&timeline);
+    // control-period: one mitigation checkpoint per calendar slot (at
+    // least one simulated second apart)
+    let period = Secs(spec.slot_secs.max(1.0));
+
+    let mut avail = sess.engine_init.clone();
+    let mut pending = tasks.clone();
+    let mut now = Secs::ZERO;
+    let mut records: Vec<TaskRecord> = Vec::new();
+    let mut reservations: Vec<ReservationAudit> = Vec::new();
+    let mut reassignments = 0usize;
+    let mut rounds = 0usize;
+    let mut stale_reservations = 0usize;
+    let mut pulls: Vec<PullAudit> = Vec::new();
+    let mut deferrals = 0usize;
+    let mut under_replicated_peak = 0usize;
+    let mut speculated = 0usize;
+    let mut spec_wins = 0usize;
+    let mut evictions = 0usize;
+    let mut duels: Vec<DuelAudit> = Vec::new();
+    // once per (node, straggle onset): keeps eviction rounds bounded
+    let mut evicted: HashSet<(usize, u64)> = HashSet::new();
+
+    while !pending.is_empty() {
+        rounds += 1;
+        assert!(
+            rounds <= 3 * timeline.len() + 4,
+            "mitigated dynamics run did not converge in {rounds} rounds"
+        );
+        let st = state_at(&timeline, now, n_hosts, n_links);
+        let up = |nd: NodeId| !st.down[nd.0];
+        let next_recovery = |now: Secs| -> Secs {
+            timeline
+                .iter()
+                .find(|te| te.at > now && matches!(te.ev, DynEvent::NodeUp(_)))
+                .expect("compiled timelines pair every crash with a recovery")
+                .at
+        };
+        if sess.nodes.iter().all(|nd| st.down[nd.0]) {
+            now = next_recovery(now);
+            continue;
+        }
+        under_replicated_peak = under_replicated_peak.max(sess.nn.under_replicated(up).len());
+        let (ready, blocked): (Vec<TaskSpec>, Vec<TaskSpec>) =
+            pending.iter().cloned().partition(|t| match t.input {
+                Some(b) => sess.nn.is_readable(b, up),
+                None => true,
+            });
+        deferrals += blocked.len();
+        if ready.is_empty() {
+            now = next_recovery(now);
+            continue;
+        }
+
+        // ---- scheduling: fresh SDN view, straggle-aware speeds ----
+        let mut ctrl = sess.ctrl.clone();
+        for (l, &f) in st.link_frac.iter().enumerate() {
+            if f < 1.0 {
+                ctrl.set_link_health(LinkId(l), f);
+            }
+        }
+        for &(_, src, dst, rate) in &st.cross {
+            if let Some(path) = ctrl.path(src, dst).map(|p| p.to_vec()) {
+                for &l in &path {
+                    let cur = ctrl.background_mb_s(l);
+                    ctrl.set_background_mb_s(l, cur + rate);
+                }
+            }
+        }
+        let mut ledger_init = vec![Secs::INF; n_hosts];
+        for &nd in &sess.nodes {
+            if !st.down[nd.0] {
+                ledger_init[nd.0] = avail[nd.0].max(now);
+            }
+        }
+        let mut ledger = Ledger::with_initial(ledger_init);
+        let authorized: Vec<NodeId> =
+            sess.nodes.iter().copied().filter(|nd| !st.down[nd.0]).collect();
+        // unlike the plain path, reschedules see the *effective* speeds
+        // (spec heterogeneity x current straggle factor), so evicted and
+        // orphaned work is placed around live stragglers
+        let eff_speed: Vec<f64> = (0..n_hosts)
+            .map(|j| {
+                let base =
+                    spec.node_speed.get(j).copied().filter(|&f| f > 0.0).unwrap_or(1.0);
+                base * st.speed[j]
+            })
+            .collect();
+        let mut sched = spec.scheduler.make();
+        let assignment = {
+            let mut ctx = SchedCtx {
+                controller: &mut ctrl,
+                namenode: &sess.nn,
+                ledger: &mut ledger,
+                authorized,
+                now,
+                cost,
+                node_speed: eff_speed,
+                down: st.down.clone(),
+                bw_aware_sources: spec.bw_aware_sources,
+            };
+            sched.schedule(&ready, Some(now), &mut ctx)
+        };
+        let mut grant_of: HashMap<TaskId, Transfer> = HashMap::new();
+        for p in &assignment.placements {
+            if let Some(src) = p.source {
+                pulls.push(PullAudit { task: p.task, source: src, at: now });
+            }
+            let tr = match &p.transfer {
+                TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+                _ => continue,
+            };
+            if tr.reservation.n_slots == 0 {
+                continue;
+            }
+            grant_of.insert(p.task, tr.clone());
+            reservations.push(ReservationAudit {
+                round: rounds,
+                links: tr.reservation.links.clone(),
+                start_slot: tr.reservation.start_slot,
+                n_slots: tr.reservation.n_slots,
+                frac: tr.reservation.frac,
+                usable: ctrl.path_health(&tr.reservation.links),
+            });
+        }
+
+        // revalidation sweep, identical to the plain path
+        let slot_secs = sess.spec.slot_secs;
+        for te in timeline.iter().filter(|te| te.at > now) {
+            let DynEvent::LinkDegrade { link, frac } = &te.ev else { continue };
+            let restore = te.at + Secs(dspec.degrade_secs.max(1e-3));
+            let healthy = ctrl.link_health(*link);
+            ctrl.set_link_health(*link, *frac);
+            for p in &assignment.placements {
+                let tr = match &p.transfer {
+                    TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+                    _ => continue,
+                };
+                let r = &tr.reservation;
+                if r.n_slots == 0
+                    || !r.links.contains(link)
+                    || te.at >= r.end(slot_secs)
+                    || restore <= r.start(slot_secs)
+                {
+                    continue;
+                }
+                if !ctrl.revalidate_transfer(tr) {
+                    stale_reservations += 1;
+                }
+            }
+            ctrl.set_link_health(*link, healthy);
+        }
+
+        // ---- execution: engine + remaining timeline, as usual ----
+        let mut net = sess.net.clone();
+        for (l, &f) in st.link_frac.iter().enumerate() {
+            if f < 1.0 {
+                net.set_link_capacity_mb_s(LinkId(l), base_caps_mb_s[l] * f);
+            }
+        }
+        let mut engine = Engine::new(net, avail.clone());
+        for j in 0..n_hosts {
+            if st.down[j] {
+                engine.set_node_down(NodeId(j));
+            }
+            if st.speed[j] != 1.0 {
+                engine.set_node_speed(NodeId(j), st.speed[j]);
+            }
+        }
+        for &(key, src, dst, rate) in &st.cross {
+            if let Some(path) = sess.ctrl.path(src, dst).map(|p| p.to_vec()) {
+                engine.inject(now, ClusterEvent::FlowStart { key, path, rate_mb_s: rate });
+            }
+        }
+        for te in timeline.iter().filter(|te| te.at > now) {
+            let ev = match &te.ev {
+                DynEvent::NodeDown(nd) => ClusterEvent::NodeDown(*nd),
+                DynEvent::NodeUp(nd) => ClusterEvent::NodeUp(*nd),
+                DynEvent::LinkDegrade { link, frac } => {
+                    ClusterEvent::LinkCapacity(*link, base_caps_mb_s[link.0] * frac)
+                }
+                DynEvent::LinkRestore { link } => {
+                    ClusterEvent::LinkCapacity(*link, base_caps_mb_s[link.0])
+                }
+                DynEvent::Straggle { node, factor } => ClusterEvent::NodeSpeed(*node, *factor),
+                DynEvent::StraggleEnd { node } => ClusterEvent::NodeSpeed(*node, 1.0),
+                DynEvent::CrossStart { key, src, dst, rate_mb_s } => {
+                    match sess.ctrl.path(*src, *dst) {
+                        Some(p) => ClusterEvent::FlowStart {
+                            key: *key,
+                            path: p.to_vec(),
+                            rate_mb_s: *rate_mb_s,
+                        },
+                        None => continue,
+                    }
+                }
+                DynEvent::CrossStop { key } => ClusterEvent::FlowStop { key: *key },
+            };
+            engine.inject(te.at, ev);
+        }
+        engine.load(&assignment);
+
+        // ---- the mitigation drive loop: checkpointed execution ----
+        let mut live: Vec<Duel> = Vec::new();
+        let mut duel_of: HashMap<u64, usize> = HashMap::new();
+        // one speculation per original per round
+        let mut tried: HashSet<TaskId> = HashSet::new();
+        let mut next_ctl = now + period;
+        let mut guard = 0usize;
+        loop {
+            guard += 1;
+            if guard > 65_536 {
+                break; // stop intervening; engine.run() below finishes
+            }
+            let fired = engine.run_until(next_ctl);
+            if !fired.is_empty() {
+                // first finish of a duel: kill the loser, release grants
+                for key in fired {
+                    let Some(&i) = duel_of.get(&key) else { continue };
+                    if live[i].resolved {
+                        continue;
+                    }
+                    live[i].resolved = true;
+                    let at = engine.now();
+                    let orig_won = engine
+                        .records_so_far()
+                        .iter()
+                        .any(|r| r.task == live[i].orig && r.finish <= at);
+                    let (winner, loser, loser_node) = if orig_won {
+                        (live[i].orig, live[i].dup, live[i].dup_node)
+                    } else {
+                        (live[i].dup, live[i].orig, live[i].orig_node)
+                    };
+                    engine.kill_attempt(loser_node, loser);
+                    let (mut released, mut orig_released) = (false, false);
+                    if loser == live[i].dup {
+                        if let Some(t) = &live[i].grant {
+                            ctrl.complete_transfer(t, 0.0);
+                            unaudit(&mut reservations, rounds, &t.reservation);
+                            released = true;
+                        }
+                    } else {
+                        spec_wins += 1;
+                        if let Some(t) = &live[i].orig_grant {
+                            ctrl.complete_transfer(t, 0.0);
+                            unaudit(&mut reservations, rounds, &t.reservation);
+                            orig_released = true;
+                        }
+                    }
+                    duels.push(DuelAudit {
+                        round: live[i].round,
+                        task: live[i].orig,
+                        dup: live[i].dup,
+                        node: live[i].dup_node,
+                        at,
+                        winner: Some(winner),
+                        reserved: live[i].grant.is_some(),
+                        released,
+                        orig_reserved: live[i].orig_grant.is_some(),
+                        orig_released,
+                    });
+                }
+                continue;
+            }
+            if !engine.work_left() {
+                break;
+            }
+            let t = engine.now();
+            let stc = state_at(&timeline, t, n_hosts, n_links);
+            // (b) eviction: a node straggling at or past the ceiling is
+            // drained through the orphan path, once per onset
+            if mit.evict_factor.is_finite() {
+                for &nd in &sess.nodes {
+                    let j = nd.0;
+                    if stc.down[j] || stc.speed[j] < mit.evict_factor {
+                        continue;
+                    }
+                    let onset = timeline
+                        .iter()
+                        .filter(|te| {
+                            te.at <= t
+                                && matches!(&te.ev, DynEvent::Straggle { node, .. } if *node == nd)
+                        })
+                        .map(|te| te.at)
+                        .next_back()
+                        .unwrap_or(Secs::ZERO);
+                    if !evicted.insert((j, onset.0.to_bits())) {
+                        continue;
+                    }
+                    evictions += engine.evict_node(nd);
+                }
+            }
+            // (a) speculation: duplicate the slow outliers
+            if mit.speculation != SpeculationMode::Off {
+                let snap = engine.running_snapshot();
+                for victim in slow_outliers(&snap, t, mit.slow_threshold) {
+                    if !tried.insert(victim.task) {
+                        continue;
+                    }
+                    let Some(&ti) = spec_of.get(&victim.task) else { continue };
+                    if let Some(duel) = try_speculate(
+                        &mut engine,
+                        &mut ctrl,
+                        sess,
+                        mit.speculation,
+                        &victim,
+                        &tasks[ti],
+                        grant_of.get(&victim.task).cloned(),
+                        &stc,
+                        t,
+                        rounds,
+                        &mut reservations,
+                        &mut pulls,
+                    ) {
+                        speculated += 1;
+                        duel_of.insert(duel.dup.0 as u64, live.len());
+                        live.push(duel);
+                    }
+                }
+            }
+            next_ctl = next_ctl + period;
+        }
+        let mut round_recs = engine.run();
+        // duels left unresolved have no surviving attempt (crash storm):
+        // release the duplicate's grant so nothing leaks
+        for d in live.iter().filter(|d| !d.resolved) {
+            let (mut released, mut orig_released) = (false, false);
+            if let Some(t) = &d.grant {
+                ctrl.complete_transfer(t, 0.0);
+                unaudit(&mut reservations, rounds, &t.reservation);
+                released = true;
+            }
+            if let Some(t) = &d.orig_grant {
+                ctrl.complete_transfer(t, 0.0);
+                unaudit(&mut reservations, rounds, &t.reservation);
+                orig_released = true;
+            }
+            duels.push(DuelAudit {
+                round: d.round,
+                task: d.orig,
+                dup: d.dup,
+                node: d.dup_node,
+                at: engine.now(),
+                winner: None,
+                reserved: d.grant.is_some(),
+                released,
+                orig_reserved: d.orig_grant.is_some(),
+                orig_released,
+            });
+        }
+        // a winning duplicate *is* the task: rewrite to the original id
+        // (ties — both finished in one batch — keep the original record)
+        for r in &mut round_recs {
+            if r.task.0 >= DUP_BASE {
+                r.task = TaskId(r.task.0 - DUP_BASE);
+            }
+        }
+        let mut seen: HashSet<TaskId> = HashSet::new();
+        round_recs.retain(|r| seen.insert(r.task));
+        records.extend(round_recs);
+        let orphans = engine.take_orphans();
+        avail = engine.node_free_times().to_vec();
+        // silent-tail fix: an orphan only re-enters if the task has no
+        // surviving record — a task whose original AND duplicate both
+        // died carries over; a duel loser's orphaned original does not
+        let completed: HashSet<TaskId> = records.iter().map(|r| r.task).collect();
+        let lost: Vec<(TaskId, Secs)> = orphans
+            .iter()
+            .map(|(p, at)| {
+                let id =
+                    if p.task.0 >= DUP_BASE { TaskId(p.task.0 - DUP_BASE) } else { p.task };
+                (id, *at)
+            })
+            .filter(|(id, _)| !completed.contains(id))
+            .collect();
+        if lost.is_empty() && blocked.is_empty() {
+            break;
+        }
+        reassignments += lost.len();
+        now = if lost.is_empty() {
+            next_recovery(now)
+        } else {
+            lost.iter().map(|&(_, at)| at).fold(Secs::INF, Secs::min)
+        };
+        let mut carry: HashSet<TaskId> = lost.iter().map(|&(id, _)| id).collect();
+        carry.extend(blocked.iter().map(|t| t.id));
+        pending = tasks.iter().filter(|t| carry.contains(&t.id)).cloned().collect();
+    }
+
+    records.sort_by_key(|r| r.task);
+    let makespan = records.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+    let (mut maps, mut local) = (0usize, 0usize);
+    for r in &records {
+        if r.is_map {
+            maps += 1;
+            if r.is_local {
+                local += 1;
+            }
+        }
+    }
+    let locality = if maps == 0 { 1.0 } else { local as f64 / maps as f64 };
+    DynamicsOutcome {
+        records,
+        makespan,
+        locality,
+        reassignments,
+        rounds,
+        down_intervals: intervals,
+        reservations,
+        stale_reservations,
+        submitted,
+        pulls,
+        deferrals,
+        under_replicated_peak,
+        speculated,
+        spec_wins,
+        evictions,
+        duels,
+    }
+}
+
+impl SimSession {
+    /// [`run_mitigated`] as a session method.
+    pub fn run_mitigated(&self, cost: &CostModel) -> DynamicsOutcome {
+        run_mitigated(self, cost)
+    }
+}
+
+/// Per-node service score from the rebalancer's evaluate pass.
+#[derive(Debug, Clone)]
+pub struct NodeScore {
+    pub node: NodeId,
+    /// Mean realized-vs-promised compute stretch over finished records
+    /// (1.0 = the node delivered exactly what its placements promised).
+    pub stretch: f64,
+}
+
+/// The evaluate/score/evict descheduler split for long streams: rank
+/// nodes by realized-vs-promised service, drain the worst offender's
+/// pending queue (the running attempt finishes undisturbed) so the
+/// stream driver reschedules that work elsewhere.
+#[derive(Debug, Clone)]
+pub struct Rebalancer {
+    period: Secs,
+    next_eval: Secs,
+}
+
+/// A node is an offender once it delivers at least 20% less service
+/// than promised (realized stretch >= 1.2 over its finished records).
+const OFFENDER_STRETCH: f64 = 1.2;
+
+impl Rebalancer {
+    pub fn new(period_secs: f64) -> Self {
+        Self { period: Secs(period_secs), next_eval: Secs(period_secs) }
+    }
+
+    pub fn due(&self, now: Secs) -> bool {
+        self.period.0 > 0.0 && now >= self.next_eval
+    }
+
+    /// Evaluate: mean realized-vs-promised stretch per node over the
+    /// finished records (`nominal_of` maps a task to its promised
+    /// compute seconds; unknown tasks are skipped).
+    pub fn evaluate(
+        engine: &Engine,
+        n_hosts: usize,
+        nominal_of: impl Fn(TaskId) -> Option<f64>,
+    ) -> Vec<NodeScore> {
+        let now = engine.now();
+        let mut realized = vec![0.0f64; n_hosts];
+        let mut promised = vec![0.0f64; n_hosts];
+        for r in engine.records_so_far() {
+            if r.finish > now {
+                continue;
+            }
+            if let Some(nom) = nominal_of(r.task) {
+                realized[r.node.0] += (r.finish - r.compute_start).0;
+                promised[r.node.0] += nom;
+            }
+        }
+        (0..n_hosts)
+            .map(|j| NodeScore {
+                node: NodeId(j),
+                stretch: if promised[j] > 0.0 { realized[j] / promised[j] } else { 1.0 },
+            })
+            .collect()
+    }
+
+    /// Score + evict: drain the worst offender's pending queue through
+    /// the orphan path. Returns the offender and how many placements
+    /// were drained (`None` when no node crosses the offender bar or
+    /// none of the offenders has pending work). Advances the period.
+    pub fn tick(
+        &mut self,
+        engine: &mut Engine,
+        n_hosts: usize,
+        nominal_of: impl Fn(TaskId) -> Option<f64>,
+    ) -> Option<(NodeId, usize)> {
+        let now = engine.now();
+        if !self.due(now) {
+            return None;
+        }
+        while self.next_eval <= now {
+            self.next_eval = self.next_eval + self.period;
+        }
+        let mut scores = Self::evaluate(engine, n_hosts, nominal_of);
+        // worst first; ties resolve to the lower node id (stable order)
+        scores.sort_by(|a, b| b.stretch.total_cmp(&a.stretch).then(a.node.cmp(&b.node)));
+        let worst = scores
+            .into_iter()
+            .find(|s| s.stretch >= OFFENDER_STRETCH && engine.has_pending(s.node))?;
+        let drained = engine.drain_node_queue(worst.node);
+        if drained == 0 {
+            return None; // only an in-flight pull was pending: leave it
+        }
+        Some((worst.node, drained))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
+
+    fn wave_spec(kind: SchedulerKind, dynamics: Option<DynamicsSpec>) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(
+            "mit-test",
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 3,
+                edge_mbps: 100.0,
+                uplink_mbps: 400.0,
+            },
+            WorkloadSpec::MapWave { tasks: 10, compute_secs: 12.0, output_mb: 4.0 },
+        );
+        s.scheduler = kind;
+        s.replication = 2;
+        s.seed = 99;
+        s.initial = InitialLoad::Sampled { max_secs: 8.0 };
+        s.dynamics = dynamics;
+        s
+    }
+
+    /// One long straggler hitting most of the cluster from t~0: the
+    /// regime where speculation must rescue the tail.
+    fn straggler_dynamics() -> DynamicsSpec {
+        DynamicsSpec {
+            stragglers: 5,
+            straggle_factor: 6.0,
+            straggle_secs: 500.0,
+            horizon_secs: 2.0,
+            ..DynamicsSpec::none()
+        }
+    }
+
+    #[test]
+    fn spec_defaults_are_inert_and_parse_is_strict() {
+        assert!(MitigationSpec::off().is_inert());
+        assert!(!MitigationSpec::late().is_inert());
+        assert!(!MitigationSpec::bw_aware().is_inert());
+        let mut evict_only = MitigationSpec::off();
+        evict_only.evict_factor = 3.0;
+        assert!(!evict_only.is_inert());
+        assert_eq!(SpeculationMode::parse("off"), Some(SpeculationMode::Off));
+        assert_eq!(SpeculationMode::parse("late"), Some(SpeculationMode::Late));
+        assert_eq!(SpeculationMode::parse("bw_aware"), Some(SpeculationMode::BwAware));
+        assert_eq!(SpeculationMode::parse("LATE"), None);
+        assert_eq!(SpeculationMode::parse("bw-aware"), None);
+        for m in [SpeculationMode::Off, SpeculationMode::Late, SpeculationMode::BwAware] {
+            assert_eq!(SpeculationMode::parse(m.label()), Some(m));
+        }
+    }
+
+    #[test]
+    fn detector_flags_stretched_long_remaining_attempts() {
+        let rt = |task: usize, stretch: f64, start: f64, nominal: f64| RunningTask {
+            task: TaskId(task),
+            node: NodeId(task % 4),
+            compute_start: Secs(start),
+            finish: Secs(start + nominal * stretch),
+            nominal: Secs(nominal),
+        };
+        // three healthy attempts nearly done, one 6x straggler
+        let snap = vec![
+            rt(0, 1.0, 0.0, 10.0),
+            rt(1, 1.0, 0.0, 10.0),
+            rt(2, 1.0, 0.0, 10.0),
+            rt(3, 6.0, 0.0, 10.0),
+        ];
+        let out = slow_outliers(&snap, Secs(8.0), 1.5);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].task, TaskId(3));
+        // duplicates are never duplicated
+        let snap2 = vec![rt(DUP_BASE + 3, 6.0, 0.0, 10.0)];
+        assert!(slow_outliers(&snap2, Secs(8.0), 1.5).is_empty());
+        // below threshold: nothing flags even with long remaining
+        let snap3 = vec![rt(0, 1.4, 0.0, 10.0), rt(1, 1.0, 0.0, 10.0)];
+        assert!(slow_outliers(&snap3, Secs(2.0), 1.5).is_empty());
+    }
+
+    #[test]
+    fn releasing_a_grant_restores_the_calendar_plan() {
+        // plan A -> commit -> the next plan differs -> release -> the
+        // plan is bitwise A again (kill semantics leak nothing)
+        let sess = SimSession::new(&wave_spec(SchedulerKind::Bass, None));
+        let mut ctrl = sess.ctrl.clone();
+        let (src, dst) = (sess.nodes[0], sess.nodes[3]);
+        let a = ctrl.plan_transfer(src, dst, 256.0, Secs(1.0)).expect("plan A");
+        assert!(a.0.n_slots > 0, "a real window is reserved");
+        let t = ctrl.commit_transfer(src, dst, TrafficClass::HadoopOther, a.clone(), Secs(1.0));
+        let t = t.expect("commit");
+        let b = ctrl.plan_transfer(src, dst, 256.0, Secs(1.0)).expect("plan B");
+        assert_ne!(a.0, b.0, "the committed grant displaces the next plan");
+        ctrl.complete_transfer(&t, 0.0);
+        let c = ctrl.plan_transfer(src, dst, 256.0, Secs(1.0)).expect("plan C");
+        assert_eq!(a.0, c.0, "release restores the calendar bitwise");
+    }
+
+    #[test]
+    fn inert_spec_delegates_to_run_dynamic_bitwise() {
+        let cost = CostModel::rust_only();
+        let d = DynamicsSpec::churn(1.0);
+        for kind in [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass] {
+            let mut spec = wave_spec(kind, Some(d.clone()));
+            spec.mitigation = Some(MitigationSpec::off());
+            let sess = SimSession::new(&spec);
+            let plain = run_dynamic(&sess, &cost);
+            let mitigated = run_mitigated(&sess, &cost);
+            assert_eq!(plain.makespan.to_bits(), mitigated.makespan.to_bits(), "{kind:?}");
+            assert_eq!(plain.records.len(), mitigated.records.len());
+            for (a, b) in plain.records.iter().zip(&mitigated.records) {
+                assert_eq!(a.task, b.task);
+                assert_eq!(a.node, b.node);
+                assert_eq!(a.finish.0.to_bits(), b.finish.0.to_bits());
+            }
+            assert_eq!(mitigated.speculated, 0);
+            assert!(mitigated.duels.is_empty());
+        }
+    }
+
+    #[test]
+    fn speculation_completes_every_task_exactly_once() {
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass] {
+            for mit in [MitigationSpec::late(), MitigationSpec::bw_aware()] {
+                let mut spec = wave_spec(kind, Some(straggler_dynamics()));
+                spec.mitigation = Some(mit.clone());
+                let sess = SimSession::new(&spec);
+                let out = sess.run_mitigated(&cost);
+                assert_eq!(
+                    out.records.len(),
+                    out.submitted.len(),
+                    "{kind:?}/{:?}: exactly-once",
+                    mit.speculation
+                );
+                let mut ids: Vec<TaskId> = out.records.iter().map(|r| r.task).collect();
+                ids.sort();
+                ids.dedup();
+                assert_eq!(ids.len(), out.submitted.len());
+                assert!(ids.iter().all(|t| t.0 < DUP_BASE), "no synthetic ids leak out");
+            }
+        }
+    }
+
+    #[test]
+    fn bw_aware_speculation_beats_no_mitigation_on_stragglers() {
+        // 5 of 6 nodes straggle 6x for the whole run: duplicates on the
+        // healthy node must shorten the tail
+        let cost = CostModel::rust_only();
+        let mut spec = wave_spec(SchedulerKind::Bass, Some(straggler_dynamics()));
+        let sess_off = SimSession::new(&spec);
+        let off = sess_off.run_mitigated(&cost);
+        spec.mitigation = Some(MitigationSpec::bw_aware());
+        let sess_on = SimSession::new(&spec);
+        let on = sess_on.run_mitigated(&cost);
+        assert!(on.speculated > 0, "the detector fired");
+        assert!(on.spec_wins > 0, "at least one duplicate won");
+        assert!(
+            on.makespan < off.makespan,
+            "bw_aware {} must beat off {}",
+            on.makespan,
+            off.makespan
+        );
+        // every lost duel released its grant
+        for d in &on.duels {
+            if d.winner != Some(d.dup) {
+                assert!(!d.reserved || d.released, "loser duplicate leaked a grant");
+            }
+            if d.winner == Some(d.dup) {
+                assert!(!d.orig_reserved || d.orig_released, "killed original leaked a grant");
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_drains_a_collapsed_node_and_converges() {
+        let cost = CostModel::rust_only();
+        let mut spec = wave_spec(SchedulerKind::Bass, Some(straggler_dynamics()));
+        let mut mit = MitigationSpec::off();
+        mit.evict_factor = 3.0; // straggle factor 6 crosses the ceiling
+        spec.mitigation = Some(mit);
+        let sess = SimSession::new(&spec);
+        let out = sess.run_mitigated(&cost);
+        assert!(out.evictions > 0, "stragglers past the ceiling are drained");
+        assert!(out.reassignments > 0, "evicted work is rescheduled");
+        assert_eq!(out.records.len(), out.submitted.len(), "exactly-once survives eviction");
+    }
+
+    #[test]
+    fn mitigated_runs_are_deterministic() {
+        let cost = CostModel::rust_only();
+        let run = || {
+            let mut spec = wave_spec(SchedulerKind::Bass, Some(straggler_dynamics()));
+            spec.mitigation = Some(MitigationSpec::bw_aware());
+            let sess = SimSession::new(&spec);
+            let out = sess.run_mitigated(&cost);
+            (out.makespan, out.speculated, out.spec_wins, out.rounds, out.records.len())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn rebalancer_scores_realized_vs_promised() {
+        // synthetic engine: two nodes, one delivering half speed
+        use crate::sim::FlowNet;
+        let net = FlowNet::new(&[100.0, 100.0]);
+        let mut engine = Engine::new(net, vec![Secs::ZERO; 2]);
+        engine.load(&Assignment {
+            placements: vec![
+                Placement {
+                    task: TaskId(0),
+                    node: NodeId(0),
+                    compute: Secs(10.0),
+                    transfer: TransferPlan::None,
+                    gate: None,
+                    source: None,
+                    is_local: true,
+                    is_map: true,
+                },
+                Placement {
+                    task: TaskId(1),
+                    node: NodeId(1),
+                    compute: Secs(20.0), // promised 10, placed at 20: 2x stretch
+                    transfer: TransferPlan::None,
+                    gate: None,
+                    source: None,
+                    is_local: true,
+                    is_map: true,
+                },
+            ],
+        });
+        engine.run_until(Secs(30.0));
+        let nominal = |_t: TaskId| Some(10.0);
+        let scores = Rebalancer::evaluate(&engine, 2, nominal);
+        assert_eq!(scores[0].stretch, 1.0);
+        assert_eq!(scores[1].stretch, 2.0);
+        let mut rb = Rebalancer::new(5.0);
+        assert!(rb.due(Secs(30.0)));
+        // nothing pending on the offender: tick declines to evict
+        assert!(rb.tick(&mut engine, 2, nominal).is_none());
+        assert!(!rb.due(Secs(30.0)), "tick advances the period");
+    }
+}

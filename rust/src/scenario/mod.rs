@@ -25,6 +25,7 @@
 //! session's engine, ledger view, flow network and SDN calendar.
 
 pub mod dynamics;
+pub mod mitigation;
 pub mod online;
 pub mod session;
 pub mod spec;
@@ -34,6 +35,7 @@ pub use dynamics::{
     down_intervals, run_dynamic, run_dynamic_grid, DynEvent, DynSweepRow, DynamicsOutcome,
     DynamicsSpec, PullAudit, ReservationAudit, TimedEvent,
 };
+pub use mitigation::{run_mitigated, DuelAudit, MitigationSpec, SpeculationMode};
 pub use online::{
     run_stream, AdmissionPolicy, JobOutcome, StreamOutcome, StreamSpec, Submission,
     SubmissionBody,

@@ -74,6 +74,7 @@ use crate::util::{Secs, XorShift};
 use crate::workload::{JobArrival, JobKind, TraceGen, WorkloadBuilder};
 
 use super::dynamics::ReservationAudit;
+use super::mitigation::Rebalancer;
 use super::session::{shuffle_majority_node, slowstart_gate, SimSession};
 
 /// One job handed to the stream at an absolute submission time.
@@ -213,6 +214,10 @@ pub struct StreamOutcome {
     pub stats: StreamStats,
     /// Jobs that waited in the admission queue.
     pub queued_jobs: usize,
+    /// Drain events by the scoring descheduler (`[mitigation]
+    /// rebalance_period`): evaluate/score/evict passes that actually
+    /// moved pending work off a service offender.
+    pub rebalances: usize,
 }
 
 /// Watch keys: three per job.
@@ -288,6 +293,25 @@ struct StreamDriver<'a> {
     pristine_ctrl: Controller,
     pristine_net: FlowNet,
     next_base: usize,
+    /// The scoring descheduler, when `[mitigation] rebalance_period > 0`.
+    rebalancer: Option<Rebalancer>,
+    rebalances: usize,
+}
+
+/// The owning job of a stream-global task id (ids are dense per job).
+fn job_index_of(jobs: &[JobRun], tid: TaskId) -> Option<usize> {
+    jobs.iter().position(|jr| tid.0 >= jr.base && tid.0 < jr.base + jr.n_tasks())
+}
+
+/// The stored (un-hinted) spec of a stream-global task id.
+fn task_of(jobs: &[JobRun], tid: TaskId) -> Option<&TaskSpec> {
+    let jr = &jobs[job_index_of(jobs, tid)?];
+    let local = tid.0 - jr.base;
+    if local < jr.maps.len() {
+        jr.maps.get(local)
+    } else {
+        jr.reduces.get(local - jr.maps.len())
+    }
 }
 
 impl<'a> StreamDriver<'a> {
@@ -330,13 +354,15 @@ impl<'a> StreamDriver<'a> {
 
     /// Schedule one batch against the given committed view, mutating the
     /// live controller/calendar; absorb the scheduler's plan and audit
-    /// its reservations.
+    /// its reservations. `authorized` is usually the full session node
+    /// set; the rebalancer passes it minus the drained offender.
     fn schedule_batch(
         &mut self,
         tasks: &[TaskSpec],
         gate: Secs,
         now: Secs,
         view: Ledger,
+        authorized: Vec<NodeId>,
     ) -> Assignment {
         let mut ledger = view;
         let a = {
@@ -344,7 +370,7 @@ impl<'a> StreamDriver<'a> {
                 controller: &mut self.sess.ctrl,
                 namenode: &self.sess.nn,
                 ledger: &mut ledger,
-                authorized: self.sess.nodes.clone(),
+                authorized,
                 now,
                 cost: self.cost,
                 node_speed: self.sess.spec.node_speed.clone(),
@@ -437,7 +463,7 @@ impl<'a> StreamDriver<'a> {
         self.active += 1;
         let maps = self.jobs[jid].maps.clone();
         let view = self.committed_ledger(&self.engine, at);
-        let a = self.schedule_batch(&maps, at, at, view);
+        let a = self.schedule_batch(&maps, at, at, view, self.sess.nodes.clone());
         self.jobs[jid].lr = a.locality_ratio();
         let mut map_nodes = vec![NodeId(0); maps.len()];
         for p in &a.placements {
@@ -490,7 +516,7 @@ impl<'a> StreamDriver<'a> {
         for r in &mut reduces {
             r.src_hint = Some(hint);
         }
-        let a = self.schedule_batch(&reduces, gate, gate, view);
+        let a = self.schedule_batch(&reduces, gate, gate, view, self.sess.nodes.clone());
         self.engine.load(&a);
     }
 
@@ -498,8 +524,82 @@ impl<'a> StreamDriver<'a> {
         debug_assert!(!self.jobs[jid].done, "job completed twice");
         self.jobs[jid].done = true;
         self.active -= 1;
+        self.rebalance();
         let now = self.engine.now();
         self.try_admit(now);
+    }
+
+    /// Evaluate/score/evict at a control instant: when the scoring
+    /// descheduler drains a service offender's pending queue, release
+    /// any calendar grants the drained placements held and reschedule
+    /// that work on the rest of the cluster.
+    fn rebalance(&mut self) {
+        let jobs = &self.jobs;
+        let engine = &mut self.engine;
+        let offender = match &mut self.rebalancer {
+            Some(rb) => {
+                match rb.tick(engine, self.n_hosts, |tid| {
+                    task_of(jobs, tid).map(|t| t.compute.0)
+                }) {
+                    Some((offender, _)) => offender,
+                    None => return,
+                }
+            }
+            None => return,
+        };
+        self.rebalances += 1;
+        let orphans = self.engine.take_orphans();
+        // a drained BASS placement still holds its calendar grant:
+        // release it (and its audit row) before rescheduling the task
+        for (p, _) in &orphans {
+            let tr = match &p.transfer {
+                TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+                _ => continue,
+            };
+            self.sess.ctrl.complete_transfer(tr, 0.0);
+            if tr.reservation.n_slots == 0 {
+                continue;
+            }
+            if let Some(i) = self.audits.iter().position(|a| {
+                a.start_slot == tr.reservation.start_slot
+                    && a.n_slots == tr.reservation.n_slots
+                    && a.frac == tr.reservation.frac
+                    && a.links == tr.reservation.links
+            }) {
+                self.audits.remove(i);
+            }
+        }
+        let now = self.engine.now();
+        let mut tasks: Vec<TaskSpec> = Vec::with_capacity(orphans.len());
+        for (p, _) in &orphans {
+            let spec = task_of(&self.jobs, p.task).expect("drained task has an owning job");
+            let mut t = spec.clone();
+            if !t.is_map() {
+                // re-derive the shuffle hint from the owning job's
+                // (possibly rebalanced) map placements
+                let jr = &self.jobs[job_index_of(&self.jobs, p.task).expect("owned task")];
+                t.src_hint =
+                    Some(hint_from_placements(&jr.maps, &jr.map_nodes, self.n_hosts));
+            }
+            tasks.push(t);
+        }
+        let authorized: Vec<NodeId> =
+            self.sess.nodes.iter().copied().filter(|&nd| nd != offender).collect();
+        let view = self.committed_ledger(&self.engine, now);
+        let a = self.schedule_batch(&tasks, now, now, view, authorized);
+        // keep the shuffle-hint bookkeeping in step with moved maps
+        for p in &a.placements {
+            if !p.is_map {
+                continue;
+            }
+            if let Some(j) = job_index_of(&self.jobs, p.task) {
+                let local = p.task.0 - self.jobs[j].base;
+                if local < self.jobs[j].map_nodes.len() {
+                    self.jobs[j].map_nodes[local] = p.node;
+                }
+            }
+        }
+        self.engine.load(&a);
     }
 
     fn try_admit(&mut self, now: Secs) {
@@ -626,6 +726,7 @@ impl<'a> StreamDriver<'a> {
             assert!(sub.at_secs >= 0.0, "submission before t=0");
             let t = Secs(sub.at_secs);
             self.advance(t);
+            self.rebalance();
             self.sess.ctrl.gc_calendar_before(t);
             let jid = self.jobs.len();
             let jr = self.build(jid, t, sub.body);
@@ -710,6 +811,7 @@ impl<'a> StreamDriver<'a> {
             makespan: if first_submit.is_finite() { last_finish - first_submit.0 } else { 0.0 },
             stats: StreamStats::from_jobs(&jts, &slowdowns),
             queued_jobs,
+            rebalances: self.rebalances,
         }
     }
 }
@@ -732,6 +834,12 @@ pub fn run_stream(
     let n_hosts = sess.engine_init.len();
     let pristine_ctrl = sess.ctrl.clone();
     let pristine_net = sess.net.clone();
+    let rebalancer = sess
+        .spec
+        .mitigation
+        .as_ref()
+        .filter(|m| m.rebalance_period > 0.0)
+        .map(|m| Rebalancer::new(m.rebalance_period));
     StreamDriver {
         sess,
         cost,
@@ -746,6 +854,8 @@ pub fn run_stream(
         pristine_ctrl,
         pristine_net,
         next_base: 0,
+        rebalancer,
+        rebalances: 0,
     }
     .run(submissions)
 }
@@ -765,7 +875,9 @@ impl SimSession {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scenario::{BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
+    use crate::scenario::{
+        BackgroundSpec, InitialLoad, MitigationSpec, ScenarioSpec, TopologyShape, WorkloadSpec,
+    };
     use crate::sched::SchedulerKind;
 
     fn stream_session(kind: SchedulerKind) -> SimSession {
@@ -802,6 +914,7 @@ mod tests {
         let out =
             sess.run_stream(vec![sort_at(5.0, 300.0)], AdmissionPolicy::default(), &cost);
         assert_eq!(out.jobs.len(), 1);
+        assert_eq!(out.rebalances, 0, "no [mitigation] table means no descheduler");
         let j = &out.jobs[0];
         assert!(j.metrics.jt > 0.0);
         assert!(!j.queued);
@@ -944,6 +1057,90 @@ mod tests {
         assert_eq!(out.records.len(), 3);
         assert!(out.jobs[0].metrics.rt == 0.0, "map-only job has no reduce phase");
         assert!(out.last_finish > 0.0);
+    }
+
+    fn rebalance_session(kind: SchedulerKind, period: f64) -> SimSession {
+        let mut s = ScenarioSpec::new(
+            "stream-rebalance",
+            TopologyShape::Tree {
+                switches: 2,
+                hosts_per_switch: 2,
+                edge_mbps: 100.0,
+                uplink_mbps: 100.0,
+            },
+            WorkloadSpec::None,
+        );
+        s.scheduler = kind;
+        s.replication = 2;
+        s.reduces = 2;
+        s.seed = 7;
+        // node 3 delivers 4x less compute than its placements promise
+        s.node_speed = vec![1.0, 1.0, 1.0, 4.0];
+        let mut mit = MitigationSpec::off();
+        mit.rebalance_period = period;
+        s.mitigation = Some(mit);
+        SimSession::new(&s)
+    }
+
+    #[test]
+    fn rebalancer_drains_the_slow_node_and_the_stream_stays_exactly_once() {
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+            let mut sess = rebalance_session(kind, 5.0);
+            // enough overlap that the slow node accumulates a queue
+            let subs: Vec<Submission> =
+                (0..6).map(|i| sort_at(1.0 + i as f64 * 2.0, 300.0)).collect();
+            let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+            assert!(
+                out.rebalances > 0,
+                "{}: a 4x service offender with queued work must be drained",
+                kind.label()
+            );
+            // drained tasks are rescheduled, not lost or duplicated
+            let total: usize = out.jobs.iter().map(|j| j.tasks.len()).sum();
+            assert_eq!(out.records.len(), total, "{}", kind.label());
+            crate::testkit::oracles::check_stream(&out, &sess.nodes, &sess.spec.node_speed)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        }
+    }
+
+    #[test]
+    fn rebalanced_streams_are_deterministic() {
+        let cost = CostModel::rust_only();
+        let run = || {
+            let mut sess = rebalance_session(SchedulerKind::Bass, 5.0);
+            let subs: Vec<Submission> =
+                (0..5).map(|i| sort_at(1.0 + i as f64 * 2.0, 300.0)).collect();
+            let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+            (
+                out.last_finish,
+                out.rebalances,
+                out.records.len(),
+                out.jobs.iter().map(|j| j.metrics.jt).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn inert_mitigation_leaves_the_stream_bitwise_unchanged() {
+        // rebalance_period = 0 (the off() default) must not even build
+        // the descheduler: the stream is bit-identical to no [mitigation]
+        let cost = CostModel::rust_only();
+        let subs =
+            || vec![sort_at(1.0, 600.0), sort_at(3.0, 600.0), sort_at(5.0, 300.0)];
+        let mut plain_sess = stream_session(SchedulerKind::Bass);
+        let plain = plain_sess.run_stream(subs(), AdmissionPolicy::default(), &cost);
+        let mut spec = plain_sess.spec.clone();
+        spec.mitigation = Some(MitigationSpec::off());
+        let mut sess = SimSession::new(&spec);
+        let out = sess.run_stream(subs(), AdmissionPolicy::default(), &cost);
+        assert_eq!(out.rebalances, 0);
+        assert_eq!(out.last_finish.to_bits(), plain.last_finish.to_bits());
+        assert_eq!(out.records.len(), plain.records.len());
+        for ((ja, a), (jb, b)) in out.records.iter().zip(&plain.records) {
+            assert_eq!((ja, a.task, a.node, a.finish), (jb, b.task, b.node, b.finish));
+        }
     }
 
     #[test]

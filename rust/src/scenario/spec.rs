@@ -7,6 +7,7 @@ use crate::sdn::QosPolicy;
 use crate::workload::JobKind;
 
 use super::dynamics::DynamicsSpec;
+use super::mitigation::MitigationSpec;
 
 /// Per-size seed for sweep grids: every scheduler at the same
 /// (sweep seed, size) sees the identical layout/background draw, while
@@ -122,6 +123,10 @@ pub struct ScenarioSpec {
     /// cross traffic) compiled into a seeded timeline by
     /// [`super::dynamics::run_dynamic`]. `None` = static cluster.
     pub dynamics: Option<DynamicsSpec>,
+    /// Straggler mitigation (speculative execution, eviction,
+    /// rebalancing) applied by [`super::mitigation::run_mitigated`].
+    /// `None` (or an inert spec) = today's non-reactive dynamics path.
+    pub mitigation: Option<MitigationSpec>,
 }
 
 impl ScenarioSpec {
@@ -146,6 +151,7 @@ impl ScenarioSpec {
             threads: 1,
             shards: None,
             dynamics: None,
+            mitigation: None,
         }
     }
 

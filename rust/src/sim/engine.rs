@@ -149,6 +149,22 @@ pub struct TaskRecord {
     pub is_map: bool,
 }
 
+/// Snapshot of one compute-phase attempt, the mitigation layer's
+/// detector input ([`Engine::running_snapshot`]). `finish` already
+/// reflects the node's speed multiplier at compute start, so
+/// `(finish - compute_start) / nominal` is the realized stretch a
+/// LATE-style detector thresholds on.
+#[derive(Debug, Clone)]
+pub struct RunningTask {
+    pub task: TaskId,
+    pub node: NodeId,
+    pub compute_start: Secs,
+    /// Estimated finish under the speed multiplier in force at start.
+    pub finish: Secs,
+    /// The placement's planned (unstretched) compute time.
+    pub nominal: Secs,
+}
+
 /// Externally injected cluster dynamics, delivered at an absolute time
 /// through the event queue. The `scenario::dynamics` layer compiles a
 /// `DynamicsSpec` timeline into these.
@@ -347,6 +363,157 @@ impl Engine {
     /// yet) — the online layer falls back to the planned ledger then.
     pub fn has_pending(&self, node: NodeId) -> bool {
         !self.queues[node.0].is_empty() || self.blocked[node.0]
+    }
+
+    /// Mitigation: any work left at the current instant — queued
+    /// placements, an in-flight input pull, or a compute-phase attempt
+    /// whose finish lies in the future? Remaining injected cluster
+    /// events do not count (they carry no work). The mitigation drive
+    /// loop checkpoints `run_until` as long as this holds.
+    pub fn work_left(&self) -> bool {
+        self.blocked.iter().any(|&b| b)
+            || self.queues.iter().any(|q| !q.is_empty())
+            || self
+                .running
+                .iter()
+                .flatten()
+                .any(|&(_, rec)| self.records[rec].finish > self.now)
+    }
+
+    /// Mitigation: the compute-phase attempts still running at the
+    /// current instant (attempts mid-transfer are not yet measurable —
+    /// the detector only thresholds realized compute stretch).
+    pub fn running_snapshot(&self) -> Vec<RunningTask> {
+        let mut out = Vec::new();
+        for slot in self.running.iter().flatten() {
+            let (pidx, rec) = *slot;
+            let r = &self.records[rec];
+            if r.finish > self.now {
+                out.push(RunningTask {
+                    task: r.task,
+                    node: r.node,
+                    compute_start: r.compute_start,
+                    finish: r.finish,
+                    nominal: self.placements[pidx as usize].compute,
+                });
+            }
+        }
+        out.sort_by_key(|r| r.task);
+        out
+    }
+
+    /// Void the in-flight record at `rec`, keeping every other node's
+    /// `running` index valid (records are swap-removed; the moved entry
+    /// may be another node's running task).
+    fn void_record(&mut self, rec: usize) {
+        let voided = self.records[rec].task;
+        let last = self.records.len() - 1;
+        self.records.swap_remove(rec);
+        if rec != last {
+            for slot in self.running.iter_mut().flatten() {
+                if slot.1 == last {
+                    slot.1 = rec;
+                }
+            }
+        }
+        // the voided attempt never finishes: drop its pending
+        // completion so the queued `TaskDone` is ignored
+        self.done_pending.remove(&voided);
+    }
+
+    /// Mitigation: kill one attempt of `task` on `node`, wherever it
+    /// currently is — queued, mid-transfer, or computing. Unlike a
+    /// crash, the killed attempt is *discarded* (first-finisher-wins
+    /// speculation: the loser must not re-enter the orphan path) and
+    /// the node stays up, freed at the current instant. Returns whether
+    /// an attempt was found. Never called on the static path.
+    pub fn kill_attempt(&mut self, node: NodeId, task: TaskId) -> bool {
+        let j = node.0;
+        // computing?
+        if let Some((_, rec)) = self.running[j] {
+            if self.records[rec].task == task && self.records[rec].finish > self.now {
+                self.running[j] = None;
+                self.void_record(rec);
+                self.node_free[j] = self.now;
+                self.push(self.now, EvKind::NodeReady(j));
+                return true;
+            }
+        }
+        // mid input pull?
+        if self.blocked[j] {
+            let flow = self
+                .waiting
+                .iter()
+                .find(|(_, &(n, pidx, _))| {
+                    n == j && self.placements[pidx as usize].task == task
+                })
+                .map(|(&id, _)| id);
+            if let Some(id) = flow {
+                self.waiting.remove(&id);
+                self.net.remove_flow(id);
+                self.net_dirty = true;
+                self.blocked[j] = false;
+                self.node_free[j] = self.now;
+                self.push(self.now, EvKind::NodeReady(j));
+                return true;
+            }
+        }
+        // still queued?
+        if let Some(pos) =
+            self.queues[j].iter().position(|&pidx| self.placements[pidx as usize].task == task)
+        {
+            self.queues[j].remove(pos);
+            return true;
+        }
+        false
+    }
+
+    /// Mitigation: evict a node's work without crashing it — the running
+    /// attempt is voided, an in-flight pull cancelled, the queue drained,
+    /// and everything lands in the orphan list for the next rescheduling
+    /// round. The node itself stays up (it may receive new work later).
+    /// Returns the number of orphaned placements.
+    pub fn evict_node(&mut self, node: NodeId) -> usize {
+        let j = node.0;
+        let mut n = 0usize;
+        if let Some((pidx, rec)) = self.running[j] {
+            if self.records[rec].finish > self.now {
+                self.running[j] = None;
+                self.void_record(rec);
+                self.orphans.push((pidx, self.now));
+                n += 1;
+            }
+        }
+        if self.blocked[j] {
+            let flow = self
+                .waiting
+                .iter()
+                .find(|(_, &(node, _, _))| node == j)
+                .map(|(&id, _)| id);
+            if let Some(id) = flow {
+                let (_, pidx, _) = self.waiting.remove(&id).expect("found above");
+                self.net.remove_flow(id);
+                self.orphans.push((pidx, self.now));
+                self.net_dirty = true;
+                n += 1;
+            }
+            self.blocked[j] = false;
+        }
+        n += self.drain_node_queue(node);
+        self.node_free[j] = self.now;
+        n
+    }
+
+    /// Mitigation (stream rebalancer): orphan only the node's *pending*
+    /// queue — the running attempt and any in-flight pull are left to
+    /// finish. Returns the number of orphaned placements.
+    pub fn drain_node_queue(&mut self, node: NodeId) -> usize {
+        let mut n = 0usize;
+        while let Some(pidx) = self.queues[node.0].pop_front() {
+            self.orphans.push((pidx, self.now));
+            n += 1;
+        }
+        n
     }
 
     /// Arm the completion bookkeeping (first tag/watch): records already
@@ -583,22 +750,8 @@ impl Engine {
         self.down[j] = true;
         if let Some((pidx, rec)) = self.running[j].take() {
             if self.records[rec].finish > self.now {
-                let voided = self.records[rec].task;
-                let last = self.records.len() - 1;
-                self.records.swap_remove(rec);
-                if rec != last {
-                    // the record that moved into `rec` may be another
-                    // node's running task: re-point its index
-                    for slot in self.running.iter_mut().flatten() {
-                        if slot.1 == last {
-                            slot.1 = rec;
-                        }
-                    }
-                }
+                self.void_record(rec);
                 self.orphans.push((pidx, self.now));
-                // the voided attempt never finishes: drop its pending
-                // completion so the queued `TaskDone` is ignored
-                self.done_pending.remove(&voided);
             }
         }
         if self.blocked[j] {
@@ -1107,6 +1260,121 @@ mod tests {
         assert_eq!(e.now(), Secs(1.0));
         assert_eq!(e.watch_remaining(21), Some(2));
         assert_eq!(e.run().len(), 2);
+    }
+
+    #[test]
+    fn kill_attempt_discards_running_work_without_orphaning() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.load(&Assignment {
+            placements: vec![
+                placement(0, 0, 9.0, TransferPlan::None),
+                placement(1, 0, 9.0, TransferPlan::None),
+            ],
+        });
+        assert!(e.run_until(Secs(2.0)).is_empty());
+        assert!(e.work_left());
+        assert!(e.kill_attempt(NodeId(0), TaskId(0)), "task 0 is computing");
+        assert!(!e.kill_attempt(NodeId(0), TaskId(7)), "unknown task");
+        let recs = e.run();
+        // the killed attempt is gone, the queued task starts at the kill
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].task, TaskId(1));
+        assert_eq!(recs[0].compute_start, Secs(2.0));
+        assert!(e.take_orphans().is_empty(), "kills never orphan");
+        assert!(!e.work_left());
+    }
+
+    #[test]
+    fn kill_attempt_cancels_queued_and_in_flight_attempts() {
+        // 50MB over 10MB/s: task 0 is mid-pull at t=2; task 1 queued
+        let net = FlowNet::new(&[80.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.load(&Assignment {
+            placements: vec![
+                placement(0, 0, 1.0, TransferPlan::FairShare {
+                    path: vec![LinkId(0)],
+                    size_mb: 50.0,
+                    class: TrafficClass::HadoopOther,
+                }),
+                placement(1, 0, 3.0, TransferPlan::None),
+            ],
+        });
+        assert!(e.run_until(Secs(2.0)).is_empty());
+        assert!(e.kill_attempt(NodeId(0), TaskId(1)), "queued attempt");
+        assert!(e.kill_attempt(NodeId(0), TaskId(0)), "in-flight pull");
+        assert_eq!(e.net.n_flows(), 0, "cancelled pull must leave the net");
+        let recs = e.run();
+        assert!(recs.is_empty());
+        assert!(e.take_orphans().is_empty());
+    }
+
+    #[test]
+    fn evict_node_orphans_everything_but_keeps_the_node_up() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.load(&Assignment {
+            placements: vec![
+                placement(0, 0, 9.0, TransferPlan::None),
+                placement(1, 0, 9.0, TransferPlan::None),
+            ],
+        });
+        assert!(e.run_until(Secs(3.0)).is_empty());
+        assert_eq!(e.evict_node(NodeId(0)), 2);
+        assert_eq!(e.node_free_times()[0], Secs(3.0));
+        let orphans = e.take_orphans();
+        assert_eq!(orphans.len(), 2);
+        assert!(orphans.iter().all(|(_, at)| *at == Secs(3.0)));
+        // the node is still up: new work runs on it
+        e.load(&Assignment { placements: vec![placement(2, 0, 2.0, TransferPlan::None)] });
+        let recs = e.run();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].compute_start, Secs(3.0));
+    }
+
+    #[test]
+    fn drain_node_queue_spares_the_running_attempt() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO]);
+        e.load(&Assignment {
+            placements: vec![
+                placement(0, 0, 9.0, TransferPlan::None),
+                placement(1, 0, 9.0, TransferPlan::None),
+            ],
+        });
+        assert!(e.run_until(Secs(3.0)).is_empty());
+        assert_eq!(e.drain_node_queue(NodeId(0)), 1);
+        let recs = e.run();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].task, TaskId(0));
+        assert_eq!(e.take_orphans().len(), 1);
+    }
+
+    #[test]
+    fn running_snapshot_reports_realized_stretch() {
+        let net = FlowNet::new(&[100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO, Secs::ZERO]);
+        e.set_node_speed(NodeId(1), 3.0);
+        e.load(&Assignment {
+            placements: vec![
+                placement(0, 0, 4.0, TransferPlan::None),
+                placement(1, 1, 4.0, TransferPlan::None),
+            ],
+        });
+        assert!(e.run_until(Secs(1.0)).is_empty());
+        let snap = e.running_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].task, TaskId(0));
+        assert_eq!(snap[0].finish, Secs(4.0));
+        assert_eq!(snap[0].nominal, Secs(4.0));
+        assert_eq!(snap[1].finish, Secs(12.0), "straggler stretch visible");
+        assert_eq!(snap[1].nominal, Secs(4.0));
+        // finished attempts drop out of the snapshot
+        assert!(e.run_until(Secs(5.0)).is_empty());
+        let snap = e.running_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].task, TaskId(1));
+        e.run();
     }
 
     #[test]

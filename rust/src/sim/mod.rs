@@ -13,5 +13,7 @@
 pub mod engine;
 pub mod flownet;
 
-pub use engine::{Assignment, ClusterEvent, Engine, Placement, TaskRecord, TransferPlan};
+pub use engine::{
+    Assignment, ClusterEvent, Engine, Placement, RunningTask, TaskRecord, TransferPlan,
+};
 pub use flownet::{FlowId, FlowNet};

@@ -28,7 +28,7 @@
 use std::collections::HashMap;
 
 use crate::mapreduce::{TaskId, TaskSpec};
-use crate::scenario::{DynamicsOutcome, PullAudit, ReservationAudit, StreamOutcome};
+use crate::scenario::{DuelAudit, DynamicsOutcome, PullAudit, ReservationAudit, StreamOutcome};
 use crate::sim::TaskRecord;
 use crate::topology::NodeId;
 use crate::util::Secs;
@@ -179,6 +179,31 @@ pub fn pulls_from_live_sources(
     Ok(())
 }
 
+/// Oracle 10: killed speculation attempts never leak a calendar grant —
+/// for every duel, whichever attempt lost (or both, in a crash storm
+/// with no winner) must have had its committed reservation released.
+/// Checked over the duel audit log, independent of the controller's own
+/// flow/calendar bookkeeping.
+pub fn no_leaked_speculation_grants(duels: &[DuelAudit]) -> Result<(), String> {
+    for d in duels {
+        let dup_lost = d.winner != Some(d.dup);
+        let orig_lost = d.winner != Some(d.task);
+        if dup_lost && d.reserved && !d.released {
+            return Err(format!(
+                "duel {:?}/{:?} (round {}): losing duplicate kept its calendar grant",
+                d.task, d.dup, d.round
+            ));
+        }
+        if orig_lost && d.orig_reserved && !d.orig_released {
+            return Err(format!(
+                "duel {:?}/{:?} (round {}): killed original kept its calendar grant",
+                d.task, d.dup, d.round
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Oracle 6: per node, no two records' occupancy windows (pick-up to
 /// finish) overlap — the node FIFO must serialize tasks across jobs.
 pub fn no_slot_double_booking(records: &[TaskRecord]) -> Result<(), String> {
@@ -298,6 +323,7 @@ pub fn check_dynamics(
     tasks_complete_exactly_once(&outcome.submitted, &outcome.records)?;
     reservations_within_capacity(&outcome.reservations)?;
     pulls_from_live_sources(&outcome.pulls, &outcome.down_intervals)?;
+    no_leaked_speculation_grants(&outcome.duels)?;
     makespan_lower_bounds(&outcome.records, tasks, authorized, node_speed)
 }
 
@@ -388,6 +414,45 @@ mod tests {
             audit(2, 0, 5, 0.8, 1.0)
         ])
         .is_ok());
+    }
+
+    #[test]
+    fn leaked_speculation_grants_are_flagged() {
+        let duel = |winner: Option<usize>, reserved: bool, released: bool,
+                    orig_reserved: bool, orig_released: bool| {
+            DuelAudit {
+                round: 1,
+                task: TaskId(3),
+                dup: TaskId(3 + crate::scenario::mitigation::DUP_BASE),
+                node: NodeId(1),
+                at: Secs(10.0),
+                winner: winner.map(TaskId),
+                reserved,
+                released,
+                orig_reserved,
+                orig_released,
+            }
+        };
+        let dup = 3 + crate::scenario::mitigation::DUP_BASE;
+        // dup won, orig's grant released: fine
+        assert!(no_leaked_speculation_grants(&[duel(Some(dup), true, false, true, true)])
+            .is_ok());
+        // dup won but the killed original kept its grant: flagged
+        assert!(no_leaked_speculation_grants(&[duel(Some(dup), true, false, true, false)])
+            .is_err());
+        // orig won, dup's grant released: fine
+        assert!(no_leaked_speculation_grants(&[duel(Some(3), true, true, false, false)])
+            .is_ok());
+        // orig won but the losing dup kept its grant: flagged
+        assert!(no_leaked_speculation_grants(&[duel(Some(3), true, false, false, false)])
+            .is_err());
+        // crash storm (no winner): both grants must be released
+        assert!(no_leaked_speculation_grants(&[duel(None, true, true, true, true)]).is_ok());
+        assert!(no_leaked_speculation_grants(&[duel(None, true, true, true, false)])
+            .is_err());
+        // unreserved attempts can't leak
+        assert!(no_leaked_speculation_grants(&[duel(None, false, false, false, false)])
+            .is_ok());
     }
 
     #[test]

@@ -15,8 +15,8 @@
 
 use bass::runtime::CostModel;
 use bass::scenario::{
-    BackgroundSpec, DynamicsSpec, InitialLoad, ScenarioSpec, SimSession, StreamSpec,
-    TopologyShape, WorkloadSpec,
+    BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec, SimSession,
+    StreamSpec, TopologyShape, WorkloadSpec,
 };
 use bass::sched::SchedulerKind;
 use bass::testkit::{forall, oracles};
@@ -326,6 +326,153 @@ fn single_replica_crashes_defer_instead_of_pulling_from_down_nodes() {
             assert!(out.rounds > 1, "{}", kind.label());
         }
     }
+}
+
+// ---- straggler mitigation ----
+
+#[test]
+fn mitigation_oracles_hold_for_all_schedulers_under_random_dynamics() {
+    // the full oracle suite — including the no-leaked-grant check over
+    // the duel audit log — with speculation and eviction active
+    let cost = CostModel::rust_only();
+    forall(0x517A66, iters(8), gen_case, |case| {
+        for kind in ALL {
+            for mit in [MitigationSpec::late(), MitigationSpec::bw_aware()] {
+                let mut spec = spec_for(case, kind);
+                spec.mitigation = Some(mit.clone());
+                let sess = SimSession::new(&spec);
+                let tasks = sess.tasks.clone();
+                let out = sess.run_mitigated(&cost);
+                oracles::check_dynamics(&out, &tasks, &sess.nodes, &sess.spec.node_speed)
+                    .map_err(|e| {
+                        format!("{} + {}: {e}", kind.label(), mit.speculation.label())
+                    })?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn off_mitigation_is_bitwise_identical_to_run_dynamic() {
+    // `speculation = "off"` (the inert spec) must reproduce today's
+    // run_dynamic exactly — same records, same float bits — for every
+    // scheduler under random churn
+    let cost = CostModel::rust_only();
+    forall(0x0FF1CE, iters(6), gen_case, |case| {
+        for kind in ALL {
+            let plain = SimSession::new(&spec_for(case, kind)).run_dynamic(&cost);
+            let mut spec = spec_for(case, kind);
+            spec.mitigation = Some(MitigationSpec::off());
+            let mit = SimSession::new(&spec).run_mitigated(&cost);
+            if plain.makespan.to_bits() != mit.makespan.to_bits()
+                || plain.rounds != mit.rounds
+                || plain.reassignments != mit.reassignments
+                || plain.records.len() != mit.records.len()
+            {
+                return Err(format!("{}: off-mode diverged from run_dynamic", kind.label()));
+            }
+            for (a, b) in plain.records.iter().zip(&mit.records) {
+                if a.task != b.task || a.node != b.node || a.finish != b.finish {
+                    return Err(format!(
+                        "{}: off-mode record for {:?} diverged",
+                        kind.label(),
+                        a.task
+                    ));
+                }
+            }
+            if mit.speculated != 0 || mit.evictions != 0 {
+                return Err(format!("{}: inert spec took mitigation actions", kind.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn crash_storm_with_speculation_still_completes_every_task() {
+    // replication 1 + early crashes + stragglers, speculation on: a task
+    // can lose BOTH its original and its duplicate to one crash wave.
+    // The silent-tail hazard is that the duel machinery swallows the
+    // loss — every task must instead re-enter the orphan carry and
+    // complete exactly once (checked by oracle 2 in check_dynamics).
+    let cost = CostModel::rust_only();
+    let dynamics = DynamicsSpec {
+        node_failures: 2,
+        mttr_secs: 60.0,
+        stragglers: 2,
+        straggle_factor: 5.0,
+        straggle_secs: 300.0,
+        horizon_secs: 15.0, // crash while originals AND duplicates run
+        ..DynamicsSpec::none()
+    };
+    for kind in ALL {
+        for mit in [MitigationSpec::late(), MitigationSpec::bw_aware()] {
+            let mut spec = spec_for(
+                &Case {
+                    spec_seed: 77,
+                    switches: 2,
+                    hosts_per_switch: 3,
+                    tasks: 12,
+                    dynamics: dynamics.clone(),
+                },
+                kind,
+            );
+            spec.replication = 1;
+            spec.mitigation = Some(mit.clone());
+            let sess = SimSession::new(&spec);
+            let tasks = sess.tasks.clone();
+            let out = sess.run_mitigated(&cost);
+            assert_eq!(
+                out.records.len(),
+                out.submitted.len(),
+                "{} + {}: task lost in the crash storm",
+                kind.label(),
+                mit.speculation.label()
+            );
+            oracles::check_dynamics(&out, &tasks, &sess.nodes, &sess.spec.node_speed)
+                .unwrap_or_else(|e| {
+                    panic!("{} + {}: {e}", kind.label(), mit.speculation.label())
+                });
+        }
+    }
+}
+
+#[test]
+fn bw_aware_speculation_strictly_beats_off_on_a_straggler_heavy_cluster() {
+    // the headline claim: on a cluster where stragglers dominate,
+    // reservation-gated duplicates buy BASS a strictly better makespan
+    // than no mitigation at all — and the run still passes every oracle
+    let cost = CostModel::rust_only();
+    let dynamics = DynamicsSpec {
+        stragglers: 5,
+        straggle_factor: 6.0,
+        straggle_secs: 500.0,
+        horizon_secs: 2.0, // stragglers hit while the first wave runs
+        ..DynamicsSpec::none()
+    };
+    let case = Case {
+        spec_seed: 2014,
+        switches: 2,
+        hosts_per_switch: 3,
+        tasks: 10,
+        dynamics,
+    };
+    let off = SimSession::new(&spec_for(&case, SchedulerKind::Bass)).run_dynamic(&cost);
+    let mut spec = spec_for(&case, SchedulerKind::Bass);
+    spec.mitigation = Some(MitigationSpec::bw_aware());
+    let sess = SimSession::new(&spec);
+    let tasks = sess.tasks.clone();
+    let on = sess.run_mitigated(&cost);
+    oracles::check_dynamics(&on, &tasks, &sess.nodes, &sess.spec.node_speed)
+        .unwrap_or_else(|e| panic!("bw_aware: {e}"));
+    assert!(on.speculated > 0, "stragglers this heavy must trigger duplicates");
+    assert!(
+        on.makespan < off.makespan,
+        "bw_aware makespan {} must strictly beat off {}",
+        on.makespan,
+        off.makespan
+    );
 }
 
 #[test]
