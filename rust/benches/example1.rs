@@ -17,6 +17,7 @@ fn main() {
             let mut fx = example1_fixture();
             let mut s = kind.make();
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut fx.ctrl,
                 namenode: &fx.nn,
                 ledger: &mut fx.ledger,

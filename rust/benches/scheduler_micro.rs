@@ -108,6 +108,7 @@ fn main() {
                 let cost = CostModel::rust_only();
                 let mut ledger = Ledger::new(nodes.len());
                 let mut ctx = SchedCtx {
+                    view: &bass::sdn::Oracle,
                     controller: &mut ctrl,
                     namenode: &nn,
                     ledger: &mut ledger,
@@ -294,6 +295,7 @@ fn main() {
         let stats = b.bench("cost_batch/build+eval_2048x512", || {
             let mut ledger = Ledger::new(nodes.len());
             let ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,

@@ -5,8 +5,8 @@ use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep, StreamRun};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
-    run_example1, run_example3, run_fig5, run_scale, run_scale_fat_with, run_skew,
-    run_stream_sweep_with, run_table1, SchedulerKind, StreamPoint, Table1Config,
+    run_estimate, run_example1, run_example3, run_fig5, run_scale, run_scale_fat_with,
+    run_skew, run_stream_sweep_with, run_table1, SchedulerKind, StreamPoint, Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
@@ -39,6 +39,12 @@ COMMANDS:
                         late | bw_aware turns on straggler mitigation —
                         speculative duplicates of slow outliers, bw_aware
                         gates each duplicate on a serviceable network path
+  estimate [--noises n] Estimate-error sweep: BASS/BAR/HDS scheduled from
+        [--periods p]   probed EWMA bandwidth estimates instead of the
+                        clairvoyant oracle, with mid-flow reallocation of
+                        drifting grants at probe epochs (noises = relative
+                        probe sigma, default 0,0.1,0.3; periods = probe
+                        gaps in seconds, 0 = continuous, default 1,5,20)
   stream [--rates g]    Online multi-job stream sweep: BASS/BAR/HDS under a
          [--jobs N]     Poisson arrival stream at each mean gap g seconds
                         (default 120,30,10); overlapping jobs share slots,
@@ -78,6 +84,11 @@ DEFINE YOUR OWN SCENARIO:
     [mitigation] speculation = \"off\"|\"late\"|\"bw_aware\", slow_threshold,
                evict_factor, rebalance_period (straggler reaction layered
                on the [dynamics] churn route)
+    [telemetry] probe_period (seconds, 0 = continuous), noise (relative
+               sigma), alpha (EWMA gain), stale_secs, seed,
+               reallocate = true|false — schedule from probed EWMA
+               bandwidth estimates instead of the clairvoyant oracle;
+               no [telemetry] table = bit-identical clairvoyant runs
   Every (size, scheduler) cell is a hermetic SimSession: same seed =>
   same block layout and background, so all deltas are scheduling. With a
   [dynamics] table the sweep runs each cell's map wave through the churn
@@ -300,6 +311,69 @@ pub fn run(args: Vec<String>) -> i32 {
                     p.spec_wins,
                     p.deferrals,
                     p.under_replicated_peak,
+                    p.completed,
+                    p.tasks
+                );
+            }
+            0
+        }
+        "estimate" => {
+            // same contract as --reps/--rates: a typo'd entry must
+            // error, not silently run a different sweep
+            let axis = |key: &str, default: Vec<f64>| -> Result<Vec<f64>, String> {
+                match opt(&args, key) {
+                    None => Ok(default),
+                    Some(raw) => {
+                        let wanted = raw.split(',').filter(|s| !s.trim().is_empty()).count();
+                        let v = parse_sizes(raw.clone());
+                        if v.is_empty() || v.len() != wanted || v.iter().any(|&x| x < 0.0) {
+                            return Err(raw);
+                        }
+                        Ok(v)
+                    }
+                }
+            };
+            let noises = match axis("--noises", vec![0.0, 0.1, 0.3]) {
+                Ok(v) => v,
+                Err(raw) => {
+                    eprintln!(
+                        "--noises must be a comma list of non-negative sigmas, got {raw:?}"
+                    );
+                    return 2;
+                }
+            };
+            let periods = match axis("--periods", vec![1.0, 5.0, 20.0]) {
+                Ok(v) => v,
+                Err(raw) => {
+                    eprintln!(
+                        "--periods must be a comma list of non-negative probe gaps \
+                         (seconds, 0 = continuous), got {raw:?}"
+                    );
+                    return 2;
+                }
+            };
+            let threads = opt_threads(&args);
+            println!(
+                "== estimate-error sweep ({} noises x {} periods x 3 schedulers, \
+                 {threads} threads) ==",
+                noises.len(),
+                periods.len()
+            );
+            println!(
+                "{:<7} {:<9} {:<5} {:>10} {:>8} {:>7} {:>8} {:>10}",
+                "noise", "period(s)", "sched", "makespan", "LR", "probes", "realloc",
+                "completed"
+            );
+            for p in run_estimate(&noises, &periods, &CostModel::rust_only(), threads) {
+                println!(
+                    "{:<7.2} {:<9.1} {:<5} {:>9.1}s {:>7.1}% {:>7} {:>8} {:>7}/{}",
+                    p.noise,
+                    p.probe_period,
+                    p.scheduler,
+                    p.makespan,
+                    p.locality * 100.0,
+                    p.probes,
+                    p.reallocations,
                     p.completed,
                     p.tasks
                 );
@@ -709,6 +783,51 @@ mod tests {
                 .collect();
             assert_eq!(run(args), 2, "--mitigation {bad:?}");
         }
+    }
+
+    #[test]
+    fn estimate_subcommand_runs() {
+        let args: Vec<String> =
+            ["estimate", "--noises", "0,0.3", "--periods", "2", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(args), 0);
+    }
+
+    #[test]
+    fn estimate_subcommand_rejects_bad_axes() {
+        // same strictness as --reps/--rates: no silent default sweep
+        for (key, bad) in [
+            ("--noises", "-0.1"),
+            ("--noises", "abc"),
+            ("--noises", "0.1,oops"),
+            ("--periods", "-1"),
+            ("--periods", "abc"),
+        ] {
+            let args: Vec<String> =
+                ["estimate", key, bad].iter().map(|s| s.to_string()).collect();
+            assert_eq!(run(args), 2, "{key} {bad}");
+        }
+    }
+
+    #[test]
+    fn scenario_with_telemetry_table_runs_and_rejects_typos() {
+        let dir = std::env::temp_dir().join("bass_cli_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("telem.toml");
+        std::fs::write(
+            &f,
+            "run = \"scenario\"\njob = \"sort\"\n\
+             [sweep]\nsizes_mb = [150]\nschedulers = \"bass\"\n\
+             [telemetry]\nprobe_period = 2\nnoise = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), f.display().to_string()]), 0);
+        // a typo'd [telemetry] key is rejected, not silently clairvoyant
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "run = \"scenario\"\n[telemetry]\nprobe_secs = 2\n").unwrap();
+        assert_eq!(run(vec!["scenario".into(), "--config".into(), bad.display().to_string()]), 2);
     }
 
     #[test]

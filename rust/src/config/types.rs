@@ -6,7 +6,7 @@ use crate::scenario::{
     cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec,
     SpeculationMode, StreamSpec, TopologyShape, WorkloadSpec,
 };
-use crate::sdn::QosPolicy;
+use crate::sdn::{QosPolicy, TelemetrySpec};
 use crate::workload::JobKind;
 
 use super::parser::{parse, Table};
@@ -185,6 +185,9 @@ impl ScenarioSweep {
         }
         if t.keys().any(|k| k.starts_with("mitigation.")) {
             base.mitigation = Some(parse_mitigation(t)?);
+        }
+        if t.keys().any(|k| k.starts_with("telemetry.")) {
+            base.telemetry = Some(parse_telemetry(t)?);
         }
         let sizes_mb = t
             .get("sweep.sizes_mb")
@@ -707,6 +710,70 @@ fn parse_mitigation(t: &Table) -> anyhow::Result<MitigationSpec> {
     Ok(m)
 }
 
+/// Parse a `[telemetry]` table onto [`TelemetrySpec::measured`]
+/// defaults, rejecting unknown keys and unsafe shapes (mirrors the
+/// `[dynamics]`/`[mitigation]` contract: a typo'd knob must error, not
+/// silently schedule from a different information model than the user
+/// wrote down).
+fn parse_telemetry(t: &Table) -> anyhow::Result<TelemetrySpec> {
+    const KNOWN: [&str; 6] = [
+        "telemetry.probe_period",
+        "telemetry.noise",
+        "telemetry.alpha",
+        "telemetry.stale_secs",
+        "telemetry.seed",
+        "telemetry.reallocate",
+    ];
+    for k in t.keys().filter(|k| k.starts_with("telemetry.")) {
+        anyhow::ensure!(
+            k == "telemetry." || KNOWN.contains(&k.as_str()),
+            "unknown [telemetry] key {k:?}"
+        );
+    }
+    let mut s = TelemetrySpec::measured();
+    let f64_of = |k: &str| -> anyhow::Result<Option<f64>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_f64() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[telemetry] {k} must be a number"),
+            },
+        }
+    };
+    if let Some(v) = f64_of("telemetry.probe_period")? {
+        anyhow::ensure!(v >= 0.0, "telemetry.probe_period must be >= 0 (0 = continuous)");
+        s.probe_period = v;
+    }
+    if let Some(v) = f64_of("telemetry.noise")? {
+        anyhow::ensure!(v >= 0.0, "telemetry.noise is a relative sigma: must be >= 0");
+        s.noise = v;
+    }
+    if let Some(v) = f64_of("telemetry.alpha")? {
+        anyhow::ensure!(
+            v > 0.0 && v <= 1.0,
+            "telemetry.alpha is the EWMA gain: must be in (0, 1]"
+        );
+        s.alpha = v;
+    }
+    if let Some(v) = f64_of("telemetry.stale_secs")? {
+        anyhow::ensure!(v > 0.0, "telemetry.stale_secs must be positive");
+        s.stale_secs = v;
+    }
+    if let Some(v) = t.get("telemetry.seed") {
+        s.seed = match v.as_usize() {
+            Some(x) => x as u64,
+            None => anyhow::bail!("[telemetry] telemetry.seed must be a non-negative integer"),
+        };
+    }
+    if let Some(v) = t.get("telemetry.reallocate") {
+        s.reallocate = match v.as_bool() {
+            Some(b) => b,
+            None => anyhow::bail!("telemetry.reallocate must be true or false"),
+        };
+    }
+    Ok(s)
+}
+
 fn apply_table1(cfg: &mut Table1Config, t: &Table) {
     if let Some(v) = t.get("cluster.link_mbps").and_then(|v| v.as_f64()) {
         cfg.link_mbps = v;
@@ -987,6 +1054,72 @@ seed = 42
             "run = \"scenario\"\n[mitigation]\nevict_factor = 0\n",
             "run = \"scenario\"\n[mitigation]\nrebalance_period = 0\n",
             "run = \"scenario\"\n[mitigation]\nrebalance_period = -5\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn telemetry_table_parses_onto_measured_defaults() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[telemetry]\nprobe_period = 2.5\nnoise = 0.2\n\
+             alpha = 0.5\nstale_secs = 12\nseed = 9\nreallocate = true\n",
+        )
+        .unwrap();
+        let s = c.scenario.unwrap().base.telemetry.expect("telemetry parsed");
+        assert_eq!(s.probe_period, 2.5);
+        assert_eq!(s.noise, 0.2);
+        assert_eq!(s.alpha, 0.5);
+        assert_eq!(s.stale_secs, 12.0);
+        assert_eq!(s.seed, 9);
+        assert!(s.reallocate);
+        // untouched knobs keep the measured() defaults
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[telemetry]\nnoise = 0.1\n",
+        )
+        .unwrap();
+        let s = c.scenario.unwrap().base.telemetry.unwrap();
+        assert_eq!(s.probe_period, 5.0);
+        assert_eq!(s.alpha, 0.3);
+        assert!(!s.reallocate);
+    }
+
+    #[test]
+    fn absent_telemetry_table_stays_clairvoyant() {
+        // no `[telemetry]` = the Oracle view, bit-identical to every
+        // pre-telemetry run; a bare header opts into the measured plane
+        // with its defaults
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n").unwrap();
+        assert!(c.scenario.unwrap().base.telemetry.is_none());
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n[telemetry]\n").unwrap();
+        assert_eq!(
+            c.scenario.unwrap().base.telemetry,
+            Some(TelemetrySpec::measured())
+        );
+    }
+
+    #[test]
+    fn telemetry_rejects_unknown_keys() {
+        // a typo must not silently schedule from a different information
+        // model
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[telemetry]\nprobe_secs = 5\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("probe_secs"));
+    }
+
+    #[test]
+    fn telemetry_rejects_mistyped_and_unsafe_values() {
+        for bad in [
+            "run = \"scenario\"\n[telemetry]\nprobe_period = -1\n",
+            "run = \"scenario\"\n[telemetry]\nprobe_period = \"5\"\n",
+            "run = \"scenario\"\n[telemetry]\nnoise = -0.1\n",
+            "run = \"scenario\"\n[telemetry]\nalpha = 0\n",
+            "run = \"scenario\"\n[telemetry]\nalpha = 1.5\n",
+            "run = \"scenario\"\n[telemetry]\nstale_secs = 0\n",
+            "run = \"scenario\"\n[telemetry]\nseed = 1.5\n",
+            "run = \"scenario\"\n[telemetry]\nseed = -1\n",
+            "run = \"scenario\"\n[telemetry]\nreallocate = 1\n",
         ] {
             assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
         }

@@ -202,6 +202,7 @@ impl Coordinator {
         now: Secs,
     ) -> crate::sim::Assignment {
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut self.sess.ctrl,
             namenode: &self.sess.nn,
             ledger: &mut self.sess.ledger,

@@ -1,0 +1,203 @@
+//! Estimate-error sweep: where does BASS's edge survive imperfect
+//! information?
+//!
+//! Every other sweep hands the schedulers *clairvoyant* bandwidth. This
+//! one runs the churn scenario under the measured control plane
+//! (DESIGN.md §12): link estimates come from seeded noisy probes on a
+//! `probe_period` grid, and the closed loop renegotiates drifting grants
+//! at probe epochs. The two axes — relative estimate error and probe
+//! staleness — are exactly the information-quality knobs a real SDN
+//! deployment trades against controller load, and the question is how
+//! fast BASS's bandwidth-aware margin over BAR/HDS decays as its
+//! information degrades. At `noise = 0`, `probe_period -> 0` the plane
+//! converges to the clairvoyant baseline (pinned bitwise below), so the
+//! sweep's origin cell is the rest of the repo's numbers.
+
+use crate::runtime::CostModel;
+use crate::scenario::{parallel_map, MitigationSpec, ScenarioSpec, SimSession};
+use crate::sdn::TelemetrySpec;
+
+use super::dynamics::churn_spec;
+use super::fixtures::SchedulerKind;
+
+/// Churn level the sweep holds fixed: enough drift that stale or noisy
+/// estimates have something to be wrong about.
+const ESTIMATE_CHURN: f64 = 0.5;
+
+/// One executed (noise, probe period, scheduler) sweep point.
+#[derive(Debug, Clone)]
+pub struct EstimatePoint {
+    /// Relative probe noise sigma (`sample = truth * (1 + noise*N(0,1))`).
+    pub noise: f64,
+    /// Seconds between probe sweeps (`0` = continuous).
+    pub probe_period: f64,
+    pub scheduler: &'static str,
+    pub makespan: f64,
+    pub locality: f64,
+    /// Probe sweeps the telemetry plane executed.
+    pub probes: usize,
+    /// Grants the closed loop actually moved (drifting renegotiations).
+    pub reallocations: usize,
+    pub completed: usize,
+    pub tasks: usize,
+}
+
+/// The scenario one (noise, period, scheduler) point expands to: the
+/// churn-sweep cluster at a fixed mid churn, scheduled from measured
+/// bandwidth with the reallocation loop closed. Mitigation stays inert so
+/// information quality is the only axis (the checkpoint clock still runs
+/// — the closed loop needs it).
+pub fn estimate_spec(noise: f64, period: f64, kind: SchedulerKind) -> ScenarioSpec {
+    let mut s = churn_spec(ESTIMATE_CHURN, kind);
+    s.name = format!("estimate-n{noise:.2}-p{period:.1}");
+    s.mitigation = Some(MitigationSpec::off());
+    s.telemetry = Some(TelemetrySpec {
+        noise,
+        probe_period: period,
+        reallocate: true,
+        ..TelemetrySpec::measured()
+    });
+    s
+}
+
+/// Run the estimate sweep over `noises` x `periods` x {BASS, BAR, HDS},
+/// fanned across `threads` workers (bitwise-identical to serial).
+pub fn run_estimate(
+    noises: &[f64],
+    periods: &[f64],
+    cost: &CostModel,
+    threads: usize,
+) -> Vec<EstimatePoint> {
+    let points: Vec<(f64, f64, SchedulerKind)> = noises
+        .iter()
+        .flat_map(|&n| {
+            periods.iter().flat_map(move |&p| {
+                [SchedulerKind::Bass, SchedulerKind::Bar, SchedulerKind::Hds]
+                    .into_iter()
+                    .map(move |k| (n, p, k))
+            })
+        })
+        .collect();
+    parallel_map(points, threads, |(noise, period, kind)| {
+        let spec = estimate_spec(noise, period, kind);
+        let sess = SimSession::new(&spec);
+        let out = sess.run_mitigated(cost);
+        EstimatePoint {
+            noise,
+            probe_period: period,
+            scheduler: kind.label(),
+            makespan: out.makespan,
+            locality: out.locality,
+            probes: out.probes,
+            reallocations: out.reallocations,
+            completed: out.records.len(),
+            tasks: out.submitted.len(),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exact tracking limit of the plane: continuous probes, zero noise,
+    /// `alpha = 1` (adopt each sample bit-exactly).
+    fn exact_spec() -> TelemetrySpec {
+        TelemetrySpec {
+            probe_period: 0.0,
+            noise: 0.0,
+            alpha: 1.0,
+            ..TelemetrySpec::measured()
+        }
+    }
+
+    #[test]
+    fn exact_continuous_estimates_reproduce_the_clairvoyant_run() {
+        // noise = 0, probe_period -> 0, alpha = 1: every scheduling
+        // instant sees estimates bit-equal to the truth, so the Measured
+        // view must reproduce the Oracle run exactly — even under churn
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Bass, SchedulerKind::Bar, SchedulerKind::Hds] {
+            let mut measured = churn_spec(ESTIMATE_CHURN, kind);
+            measured.telemetry = Some(exact_spec());
+            let m = SimSession::new(&measured).run_dynamic(&cost);
+
+            let clairvoyant = churn_spec(ESTIMATE_CHURN, kind);
+            let c = SimSession::new(&clairvoyant).run_dynamic(&cost);
+
+            assert!(m.probes > 0, "{}: the plane actually probed", kind.label());
+            assert_eq!(c.probes, 0);
+            assert_eq!(
+                m.makespan.to_bits(),
+                c.makespan.to_bits(),
+                "{}: bitwise convergence",
+                kind.label()
+            );
+            assert_eq!(m.records.len(), c.records.len());
+            for (a, b) in m.records.iter().zip(&c.records) {
+                assert_eq!(a.task, b.task);
+                assert_eq!(a.node, b.node);
+                assert_eq!(a.finish, b.finish);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_is_idempotent_without_drift() {
+        // zero churn: renegotiations re-find the identical windows, so
+        // the loop closes but never moves a grant
+        let cost = CostModel::rust_only();
+        let mut spec = estimate_spec(0.0, 2.0, SchedulerKind::Bass);
+        spec.dynamics = Some(crate::scenario::DynamicsSpec::churn(0.0));
+        let out = SimSession::new(&spec).run_mitigated(&cost);
+        assert!(out.probes > 0);
+        assert_eq!(out.reallocations, 0, "no drift, no reallocation");
+        assert!(out.reallocs.is_empty());
+        assert_eq!(out.records.len(), out.submitted.len());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_thread_invariant() {
+        let cost = CostModel::rust_only();
+        let serial = run_estimate(&[0.0, 0.3], &[2.0], &cost, 1);
+        let fanned = run_estimate(&[0.0, 0.3], &[2.0], &cost, 3);
+        assert_eq!(serial.len(), fanned.len());
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(a.probes, b.probes);
+            assert_eq!(a.reallocations, b.reallocations);
+        }
+    }
+
+    #[test]
+    fn grid_is_complete_and_every_point_finishes_the_wave() {
+        let pts = run_estimate(&[0.0, 0.4], &[1.0, 8.0], &CostModel::rust_only(), 2);
+        assert_eq!(pts.len(), 2 * 2 * 3);
+        for p in &pts {
+            assert_eq!(p.completed, p.tasks, "{}: every task completes", p.scheduler);
+            assert!(p.makespan.is_finite() && p.makespan > 0.0);
+            assert!((0.0..=1.0).contains(&p.locality));
+            assert!(p.probes > 0, "telemetry ran at every point");
+        }
+        // slower probes = fewer sweeps, at every noise level
+        let probes_at = |noise: f64, period: f64| {
+            pts.iter()
+                .find(|p| p.noise == noise && p.probe_period == period && p.scheduler == "BASS")
+                .unwrap()
+                .probes
+        };
+        assert!(probes_at(0.0, 1.0) >= probes_at(0.0, 8.0));
+    }
+
+    #[test]
+    fn schedulers_share_the_cell_conditions() {
+        // per cell the incident timeline, probe seed and noise draw are
+        // scheduler-independent: every delta is policy
+        let a = estimate_spec(0.3, 4.0, SchedulerKind::Bass);
+        let b = estimate_spec(0.3, 4.0, SchedulerKind::Hds);
+        assert_eq!(a.dynamics, b.dynamics);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.telemetry, b.telemetry);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod ablations;
 pub mod dynamics;
+pub mod estimate;
 pub mod example1;
 pub mod example3;
 pub mod fig5;
@@ -21,6 +22,7 @@ pub use ablations::{
     hetero_spec, AblationPoint,
 };
 pub use dynamics::{churn_spec, run_dynamics, ChurnPoint};
+pub use estimate::{estimate_spec, run_estimate, EstimatePoint};
 pub use example1::{run_example1, run_one, Example1Outcome};
 pub use example3::{example3_spec, run_example3, Example3Outcome};
 pub use fig5::run_fig5;

@@ -59,6 +59,7 @@ use crate::cluster::Ledger;
 use crate::mapreduce::{TaskId, TaskSpec};
 use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler as _};
+use crate::sdn::{BandwidthView, Measured, Oracle, Reservation, Telemetry};
 use crate::sim::{ClusterEvent, Engine, TaskRecord, TransferPlan};
 use crate::topology::{LinkId, NodeId};
 use crate::util::{mbps_to_mb_per_s, Secs, XorShift, BLOCK_MB};
@@ -256,6 +257,30 @@ pub struct ReservationAudit {
     pub usable: Vec<f64>,
 }
 
+/// Audit record of one grant renegotiation by the reallocator (the
+/// measured control plane's closed loop, `[telemetry] reallocate`):
+/// which grant was swapped for which at which probe epoch. Mirrors the
+/// [`super::mitigation::DuelAudit`] idea — enough context for the
+/// `reallocation_preserves_grant_accounting` oracle to re-check the
+/// release/re-commit chains independently of the calendar. No-op
+/// renegotiations (the re-plan re-found the identical window) are not
+/// recorded.
+#[derive(Debug, Clone)]
+pub struct ReallocAudit {
+    pub round: usize,
+    pub task: TaskId,
+    /// The probe epoch the renegotiation ran at.
+    pub at: Secs,
+    /// The reservation released (row k's `old` must equal row k-1's
+    /// `new` for the same task — the chain the oracle walks).
+    pub old: Reservation,
+    /// The reservation committed in its place.
+    pub new: Reservation,
+    /// The utility-weighted max-min rate share (MB/s) the task's QoS
+    /// class was entitled to at this epoch, from estimated capacity.
+    pub class_share_mb_s: f64,
+}
+
 /// Audit record of one committed remote pull: which holder served the
 /// read, decided at which instant. The oracle layer re-checks each
 /// source against the downtime windows independently of the scheduler.
@@ -310,6 +335,14 @@ pub struct DynamicsOutcome {
     /// Per-duel audit trail (see [`super::mitigation::DuelAudit`]); the
     /// no-reservation-leak oracle re-checks every killed attempt here.
     pub duels: Vec<super::mitigation::DuelAudit>,
+    /// Probe sweeps the measurement plane executed (0 = clairvoyant).
+    pub probes: usize,
+    /// Grants actually renegotiated by the reallocator (no-op re-plans
+    /// excluded).
+    pub reallocations: usize,
+    /// Per-renegotiation audit trail; the grant-accounting oracle walks
+    /// the release/re-commit chains here.
+    pub reallocs: Vec<ReallocAudit>,
 }
 
 /// Cluster state at one instant, replayed from the timeline prefix.
@@ -408,6 +441,11 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
     let mut pulls: Vec<PullAudit> = Vec::new();
     let mut deferrals = 0usize;
     let mut under_replicated_peak = 0usize;
+    // measurement plane (estimators persist across rounds; the plain
+    // dynamics path probes at round starts but never reallocates —
+    // closed-loop reallocation needs run_mitigated's checkpoint clock)
+    let mut telem =
+        spec.telemetry.clone().map(|ts| Telemetry::new(ts, n_links));
 
     while !pending.is_empty() {
         rounds += 1;
@@ -472,8 +510,17 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
         let authorized: Vec<NodeId> =
             sess.nodes.iter().copied().filter(|nd| !st.down[nd.0]).collect();
         let mut sched = spec.scheduler.make();
+        if let Some(tm) = telem.as_mut() {
+            tm.advance(&ctrl, now);
+        }
         let assignment = {
+            let measured = telem.as_ref().map(|tm| Measured::at(tm, now));
+            let view: &dyn BandwidthView = match measured.as_ref() {
+                Some(m) => m,
+                None => &Oracle,
+            };
             let mut ctx = SchedCtx {
+                view,
                 controller: &mut ctrl,
                 namenode: &sess.nn,
                 ledger: &mut ledger,
@@ -635,6 +682,9 @@ pub fn run_dynamic(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
         spec_wins: 0,
         evictions: 0,
         duels: Vec::new(),
+        probes: telem.map_or(0, |tm| tm.probes),
+        reallocations: 0,
+        reallocs: Vec::new(),
     }
 }
 

@@ -57,7 +57,10 @@ use crate::mapreduce::{TaskId, TaskSpec};
 use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler as _, SchedulerKind};
 use crate::sdn::controller::Transfer;
-use crate::sdn::{Controller, Reservation, TrafficClass};
+use crate::sdn::{
+    weighted_max_min, BandwidthView, Controller, Measured, Oracle, Renegotiation, Reservation,
+    Telemetry, TrafficClass,
+};
 use crate::sim::{
     Assignment, ClusterEvent, Engine, Placement, RunningTask, TaskRecord, TransferPlan,
 };
@@ -66,7 +69,7 @@ use crate::util::{mbps_to_mb_per_s, Secs};
 
 use super::dynamics::{
     down_intervals, run_dynamic, state_at, ClusterState, DynEvent, DynamicsOutcome, DynamicsSpec,
-    PullAudit, ReservationAudit,
+    PullAudit, ReallocAudit, ReservationAudit,
 };
 use super::session::SimSession;
 
@@ -242,6 +245,7 @@ fn unaudit(reservations: &mut Vec<ReservationAudit>, round: usize, r: &Reservati
 fn try_speculate(
     engine: &mut Engine,
     ctrl: &mut Controller,
+    view: &dyn BandwidthView,
     sess: &SimSession,
     mode: SpeculationMode,
     victim: &RunningTask,
@@ -293,9 +297,9 @@ fn try_speculate(
     let (src, src_bw) = if local {
         (cand, f64::INFINITY)
     } else {
-        let mut best = (holders[0], ctrl.path_bw_mb_s(holders[0], cand, now));
+        let mut best = (holders[0], view.path_bw_mb_s(ctrl, holders[0], cand, now));
         for &h in &holders[1..] {
-            let bw = ctrl.path_bw_mb_s(h, cand, now);
+            let bw = view.path_bw_mb_s(ctrl, h, cand, now);
             if bw > best.1 {
                 best = (h, bw);
             }
@@ -315,11 +319,19 @@ fn try_speculate(
         planned = Some(plan);
         est
     } else if mode == SpeculationMode::BwAware {
-        // HDS/BAR: gate on the instantaneous path bandwidth
+        // HDS/BAR: gate on path bandwidth over the pull's whole span.
+        // The instantaneous rate sizes the span; re-pricing over it
+        // catches reservations that close the window mid-pull (a
+        // transfer fitting one slot re-prices to exactly `src_bw`, so
+        // the historical single-slot gate is bit-identical)
         if src_bw <= 0.0 {
             return None;
         }
-        now + Secs(task.input_mb / src_bw) + compute
+        let span_bw = view.path_bw_over(ctrl, src, cand, now, Secs(task.input_mb / src_bw));
+        if span_bw <= 0.0 {
+            return None;
+        }
+        now + Secs(task.input_mb / span_bw) + compute
     } else {
         // classic LATE is bandwidth-blind: compute-only estimate
         now + compute
@@ -383,6 +395,155 @@ fn try_speculate(
     })
 }
 
+/// Utility weight of a QoS class for the reallocator's water-filling
+/// pass (Example 3's queue priorities, as relative weights).
+fn class_weight(class: TrafficClass) -> f64 {
+    match class {
+        TrafficClass::Shuffle => 4.0,
+        TrafficClass::HadoopOther => 2.0,
+        TrafficClass::Background => 1.0,
+    }
+}
+
+/// One reallocation pass of the measured control plane's closed loop
+/// (`[telemetry] reallocate`), run at a probe epoch: renegotiate every
+/// committed grant whose reserved window has not started and whose
+/// attempt is still queued in the engine, in utility-weighted order.
+///
+/// Per-class entitlements come from [`weighted_max_min`] over the
+/// *estimated* bottleneck capacity — higher classes re-plan first, so
+/// under drift they regrab the earliest feasible windows. Each
+/// renegotiation goes through [`Controller::renegotiate_transfer`]
+/// (release → re-plan → commit, restore-on-failure), the engine
+/// placement is retimed to the new grant, and the audit trail is
+/// maintained: the stale [`ReservationAudit`] row is withdrawn, the new
+/// one pushed, and a [`ReallocAudit`] row records the old→new chain the
+/// grant-accounting oracle walks. Re-plans that re-find the identical
+/// window are treated as "nothing drifted": the fresh grant is adopted
+/// (its flow entry is new) but neither audited nor counted.
+///
+/// Returns the number of grants actually changed.
+#[allow(clippy::too_many_arguments)]
+fn reallocate_grants(
+    engine: &mut Engine,
+    ctrl: &mut Controller,
+    telem: &Telemetry,
+    tasks: &[TaskSpec],
+    spec_of: &HashMap<TaskId, usize>,
+    grant_of: &mut HashMap<TaskId, Transfer>,
+    route_of: &HashMap<TaskId, (NodeId, NodeId)>,
+    now: Secs,
+    round: usize,
+    reservations: &mut Vec<ReservationAudit>,
+    reallocs: &mut Vec<ReallocAudit>,
+) -> usize {
+    struct Cand {
+        task: TaskId,
+        src: NodeId,
+        dst: NodeId,
+        size_mb: f64,
+        class: TrafficClass,
+        weight: f64,
+        rate_mb_s: f64,
+    }
+    let m = Measured::at(telem, now);
+    let mut cands: Vec<Cand> = Vec::new();
+    for (&task, tr) in grant_of.iter() {
+        // only grants the engine has not begun honoring: a future window
+        // and a still-queued attempt (a picked-up placement has latched
+        // its arrival; renegotiating it would desynchronize the engine)
+        if tr.reservation.n_slots == 0 || tr.start <= now {
+            continue;
+        }
+        let Some(&(src, dst)) = route_of.get(&task) else { continue };
+        if !engine.queued(dst, task) {
+            continue;
+        }
+        let Some(&ti) = spec_of.get(&task) else { continue };
+        let class = ctrl
+            .flows
+            .get(tr.flow_id)
+            .map(|f| f.class)
+            .unwrap_or(TrafficClass::HadoopOther);
+        cands.push(Cand {
+            task,
+            src,
+            dst,
+            size_mb: tasks[ti].input_mb,
+            class,
+            weight: class_weight(class),
+            rate_mb_s: tr.rate_mb_s,
+        });
+    }
+    if cands.is_empty() {
+        return 0;
+    }
+    // deterministic order: class weight desc, then task id — HashMap
+    // iteration order must never leak into the outcome
+    cands.sort_by(|a, b| b.weight.total_cmp(&a.weight).then(a.task.cmp(&b.task)));
+    // utility-weighted max-min entitlements over the estimated shared
+    // pool (the tightest estimated path bottleneck among candidates —
+    // exactly the quantity drift perturbs); recorded per row so the
+    // sweep can audit how the shares responded to estimate error
+    let caps: Vec<f64> = cands
+        .iter()
+        .map(|c| {
+            ctrl.path(c.src, c.dst)
+                .map(|p| p.to_vec())
+                .map(|links| m.path_capacity_mb_s(ctrl, &links))
+                .unwrap_or(f64::INFINITY)
+        })
+        .collect();
+    let pool = caps.iter().copied().fold(f64::INFINITY, f64::min);
+    let demands: Vec<f64> = cands.iter().map(|c| c.rate_mb_s).collect();
+    let weights: Vec<f64> = cands.iter().map(|c| c.weight).collect();
+    let shares = if pool.is_finite() {
+        weighted_max_min(pool, &demands, &weights)
+    } else {
+        demands.clone()
+    };
+    let mut changed = 0usize;
+    for (i, c) in cands.iter().enumerate() {
+        let old = grant_of[&c.task].clone();
+        match ctrl.renegotiate_transfer(&old, c.src, c.dst, c.class, c.size_mb, now) {
+            Renegotiation::Kept(_) => {} // infeasible re-plan; grant restored verbatim
+            Renegotiation::Regranted(nt) => {
+                let drifted = nt.reservation != old.reservation
+                    || nt.rate_mb_s.to_bits() != old.rate_mb_s.to_bits();
+                // adopt the fresh grant either way (its flow entry is
+                // new); the engine prices the pull off the new window
+                let retimed = engine.retime_transfer(c.dst, c.task, nt.clone());
+                debug_assert!(retimed, "queued placement vanished mid-checkpoint");
+                grant_of.insert(c.task, nt.clone());
+                if !drifted {
+                    continue; // re-found the identical window: no drift
+                }
+                unaudit(reservations, round, &old.reservation);
+                if nt.reservation.n_slots > 0 {
+                    reservations.push(ReservationAudit {
+                        round,
+                        links: nt.reservation.links.clone(),
+                        start_slot: nt.reservation.start_slot,
+                        n_slots: nt.reservation.n_slots,
+                        frac: nt.reservation.frac,
+                        usable: ctrl.path_health(&nt.reservation.links),
+                    });
+                }
+                reallocs.push(ReallocAudit {
+                    round,
+                    task: c.task,
+                    at: now,
+                    old: old.reservation.clone(),
+                    new: nt.reservation.clone(),
+                    class_share_mb_s: shares[i],
+                });
+                changed += 1;
+            }
+        }
+    }
+    changed
+}
+
 /// Play a session's dynamics timeline with the mitigation layer active:
 /// the round structure of [`run_dynamic`] (schedule the pending set,
 /// execute, collect orphans, repeat from the earliest loss) with the
@@ -392,9 +553,12 @@ fn try_speculate(
 pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
     let spec = &sess.spec;
     let mit = spec.mitigation.clone().unwrap_or_else(MitigationSpec::off);
-    if mit.is_inert() {
+    let closed_loop = spec.telemetry.as_ref().is_some_and(|ts| ts.reallocate);
+    if mit.is_inert() && !closed_loop {
         // `speculation = "off"` (and no eviction/rebalance) is the plain
-        // dynamics path, bit-identical by delegation
+        // dynamics path, bit-identical by delegation. A reallocating
+        // measurement plane needs this runner's checkpoint clock even
+        // with mitigation off — probe-only telemetry does not.
         return run_dynamic(sess, cost);
     }
     let dspec = spec.dynamics.clone().unwrap_or_else(DynamicsSpec::none);
@@ -436,6 +600,11 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
     let mut duels: Vec<DuelAudit> = Vec::new();
     // once per (node, straggle onset): keeps eviction rounds bounded
     let mut evicted: HashSet<(usize, u64)> = HashSet::new();
+    // measurement plane: estimators persist across rounds
+    let mut telem =
+        spec.telemetry.clone().map(|ts| Telemetry::new(ts, n_links));
+    let mut reallocs: Vec<ReallocAudit> = Vec::new();
+    let mut reallocations = 0usize;
 
     while !pending.is_empty() {
         rounds += 1;
@@ -503,8 +672,17 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
             })
             .collect();
         let mut sched = spec.scheduler.make();
+        if let Some(tm) = telem.as_mut() {
+            tm.advance(&ctrl, now);
+        }
         let assignment = {
+            let measured = telem.as_ref().map(|tm| Measured::at(tm, now));
+            let view: &dyn BandwidthView = match measured.as_ref() {
+                Some(m) => m,
+                None => &Oracle,
+            };
             let mut ctx = SchedCtx {
+                view,
                 controller: &mut ctrl,
                 namenode: &sess.nn,
                 ledger: &mut ledger,
@@ -518,6 +696,8 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
             sched.schedule(&ready, Some(now), &mut ctx)
         };
         let mut grant_of: HashMap<TaskId, Transfer> = HashMap::new();
+        // src/dst route of each granted pull, for the reallocator
+        let mut route_of: HashMap<TaskId, (NodeId, NodeId)> = HashMap::new();
         for p in &assignment.placements {
             if let Some(src) = p.source {
                 pulls.push(PullAudit { task: p.task, source: src, at: now });
@@ -530,6 +710,9 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
                 continue;
             }
             grant_of.insert(p.task, tr.clone());
+            if let Some(src) = p.source {
+                route_of.insert(p.task, (src, p.node));
+            }
             reservations.push(ReservationAudit {
                 round: rounds,
                 links: tr.reservation.links.clone(),
@@ -683,6 +866,46 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
             }
             let t = engine.now();
             let stc = state_at(&timeline, t, n_hosts, n_links);
+            // (c) measurement plane: probe on the checkpoint clock; a
+            // checkpoint that crossed a probe epoch renegotiates the
+            // drifting grants when the closed loop is on
+            if let Some(tm) = telem.as_mut() {
+                // sync the controller's environment to the checkpoint
+                // state first — probes must measure *current* truth, not
+                // the round-start snapshot (only done with telemetry
+                // active, so telemetry-free runs keep PR 7's behavior
+                // bit-for-bit)
+                for l in 0..n_links {
+                    let link = LinkId(l);
+                    ctrl.set_link_health(link, stc.link_frac[l]);
+                    ctrl.set_background_mb_s(link, sess.ctrl.background_mb_s(link));
+                }
+                for &(_, csrc, cdst, rate) in &stc.cross {
+                    if let Some(path) = ctrl.path(csrc, cdst).map(|p| p.to_vec()) {
+                        for &l in &path {
+                            let cur = ctrl.background_mb_s(l);
+                            ctrl.set_background_mb_s(l, cur + rate);
+                        }
+                    }
+                }
+                let before = tm.probes;
+                tm.advance(&ctrl, t);
+                if closed_loop && tm.probes > before {
+                    reallocations += reallocate_grants(
+                        &mut engine,
+                        &mut ctrl,
+                        tm,
+                        &tasks,
+                        &spec_of,
+                        &mut grant_of,
+                        &route_of,
+                        t,
+                        rounds,
+                        &mut reservations,
+                        &mut reallocs,
+                    );
+                }
+            }
             // (b) eviction: a node straggling at or past the ceiling is
             // drained through the orphan path, once per onset
             if mit.evict_factor.is_finite() {
@@ -709,6 +932,11 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
             // (a) speculation: duplicate the slow outliers
             if mit.speculation != SpeculationMode::Off {
                 let snap = engine.running_snapshot();
+                let measured = telem.as_ref().map(|tm| Measured::at(tm, t));
+                let view: &dyn BandwidthView = match measured.as_ref() {
+                    Some(m) => m,
+                    None => &Oracle,
+                };
                 for victim in slow_outliers(&snap, t, mit.slow_threshold) {
                     if !tried.insert(victim.task) {
                         continue;
@@ -717,6 +945,7 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
                     if let Some(duel) = try_speculate(
                         &mut engine,
                         &mut ctrl,
+                        view,
                         sess,
                         mit.speculation,
                         &victim,
@@ -832,6 +1061,9 @@ pub fn run_mitigated(sess: &SimSession, cost: &CostModel) -> DynamicsOutcome {
         spec_wins,
         evictions,
         duels,
+        probes: telem.map_or(0, |tm| tm.probes),
+        reallocations,
+        reallocs,
     }
 }
 

@@ -33,7 +33,7 @@ pub mod sweep;
 
 pub use dynamics::{
     down_intervals, run_dynamic, run_dynamic_grid, DynEvent, DynSweepRow, DynamicsOutcome,
-    DynamicsSpec, PullAudit, ReservationAudit, TimedEvent,
+    DynamicsSpec, PullAudit, ReallocAudit, ReservationAudit, TimedEvent,
 };
 pub use mitigation::{run_mitigated, DuelAudit, MitigationSpec, SpeculationMode};
 pub use online::{

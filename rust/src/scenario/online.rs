@@ -366,7 +366,11 @@ impl<'a> StreamDriver<'a> {
     ) -> Assignment {
         let mut ledger = view;
         let a = {
+            // Streams still schedule clairvoyantly: threading the
+            // measured view (DESIGN.md §12) through the stream
+            // coordinator is open headroom (ROADMAP item 2).
             let mut ctx = SchedCtx {
+                view: &crate::sdn::Oracle,
                 controller: &mut self.sess.ctrl,
                 namenode: &self.sess.nn,
                 ledger: &mut ledger,
@@ -671,6 +675,7 @@ impl<'a> StreamDriver<'a> {
                         at: Secs|
          -> Assignment {
             let mut ctx = SchedCtx {
+                view: &crate::sdn::Oracle,
                 controller: ctrl,
                 namenode: &self.sess.nn,
                 ledger,

@@ -7,7 +7,7 @@ use crate::mapreduce::{JobSpec, TaskSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler};
-use crate::sdn::Controller;
+use crate::sdn::{BandwidthView, Controller, Measured, Oracle, Telemetry};
 use crate::sim::{Assignment, Engine, FlowNet, TaskRecord};
 use crate::topology::builders::{fat_tree, fig2, host_racks, tree_cluster};
 use crate::topology::{LinkId, NodeId, Topology};
@@ -48,6 +48,11 @@ pub struct SimSession {
     pub engine_init: Vec<Secs>,
     /// Link capacities in Mbps, link-id order.
     pub link_caps_mbps: Vec<f64>,
+    /// The measurement plane (`[telemetry]`), probed at every
+    /// [`SimSession::schedule`] instant; `None` = clairvoyant Oracle.
+    /// Estimators persist across phases of one session (EWMA memory),
+    /// mirroring a long-lived controller process.
+    pub telemetry: Option<Telemetry>,
 }
 
 impl SimSession {
@@ -173,6 +178,13 @@ impl SimSession {
         }
         let ledger = Ledger::with_initial(ledger_init);
         let sched = spec.scheduler.make();
+        // no RNG draw from the scenario stream: the probe RNG is seeded
+        // from the [telemetry] table's own seed, so the seed contract
+        // (and every telemetry-free session) is untouched
+        let spec_telemetry = spec
+            .telemetry
+            .clone()
+            .map(|ts| Telemetry::new(ts, link_caps_mbps.len()));
 
         Self {
             spec,
@@ -188,6 +200,7 @@ impl SimSession {
             job,
             initial_idle,
             engine_init,
+            telemetry: spec_telemetry,
             link_caps_mbps,
         }
     }
@@ -208,7 +221,16 @@ impl SimSession {
         now: Secs,
         cost: &CostModel,
     ) -> Assignment {
+        if let Some(tm) = self.telemetry.as_mut() {
+            tm.advance(&self.ctrl, now);
+        }
+        let measured = self.telemetry.as_ref().map(|tm| Measured::at(tm, now));
+        let view: &dyn BandwidthView = match measured.as_ref() {
+            Some(m) => m,
+            None => &Oracle,
+        };
         let mut ctx = SchedCtx {
+            view,
             controller: &mut self.ctrl,
             namenode: &self.nn,
             ledger: &mut self.ledger,

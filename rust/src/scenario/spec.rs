@@ -3,7 +3,7 @@
 
 use crate::hdfs::PlacementPolicy;
 use crate::sched::SchedulerKind;
-use crate::sdn::QosPolicy;
+use crate::sdn::{QosPolicy, TelemetrySpec};
 use crate::workload::JobKind;
 
 use super::dynamics::DynamicsSpec;
@@ -127,6 +127,11 @@ pub struct ScenarioSpec {
     /// rebalancing) applied by [`super::mitigation::run_mitigated`].
     /// `None` (or an inert spec) = today's non-reactive dynamics path.
     pub mitigation: Option<MitigationSpec>,
+    /// The measured control plane (probes, EWMA estimates, optional
+    /// mid-flow reallocation — DESIGN.md §12). `None` = clairvoyant
+    /// `Oracle` bandwidth everywhere, bit-identical to pre-telemetry
+    /// behavior.
+    pub telemetry: Option<TelemetrySpec>,
 }
 
 impl ScenarioSpec {
@@ -152,6 +157,7 @@ impl ScenarioSpec {
             shards: None,
             dynamics: None,
             mitigation: None,
+            telemetry: None,
         }
     }
 

@@ -245,6 +245,7 @@ mod tests {
         let mut ex = example1();
         let cost = CostModel::rust_only();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -272,6 +273,7 @@ mod tests {
         let mut hds_ledger = ex.ledger.clone();
         {
             let mut ctx = SchedCtx {
+                view: &crate::sdn::Oracle,
                 controller: &mut ex.ctrl,
                 namenode: &ex.nn,
                 ledger: &mut hds_ledger,
@@ -288,6 +290,7 @@ mod tests {
         // fresh controller for BAR (HDS made no reservations, but be safe)
         let mut ex2 = example1();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex2.ctrl,
             namenode: &ex2.nn,
             ledger: &mut ex2.ledger,

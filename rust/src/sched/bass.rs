@@ -303,6 +303,7 @@ mod tests {
         let mut ex = example1();
         let cost_model = CostModel::rust_only();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -351,6 +352,7 @@ mod tests {
         }
         let mut ex = example1();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -373,6 +375,7 @@ mod tests {
         let cost_model = CostModel::rust_only();
         // authorize only ND4: every replica set that excludes ND4 starves
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -399,6 +402,7 @@ mod tests {
         for which in ["hds", "bar", "bass"] {
             let mut ex = example1();
             let mut ctx = SchedCtx {
+                view: &crate::sdn::Oracle,
                 controller: &mut ex.ctrl,
                 namenode: &ex.nn,
                 ledger: &mut ex.ledger,

@@ -27,7 +27,7 @@ fn bw_row(ctx: &SchedCtx<'_>, src: NodeId) -> Vec<f32> {
     ctx.authorized
         .iter()
         .map(|&nd| {
-            let b = ctx.controller.path_bw_mb_s(src, nd, ctx.now);
+            let b = ctx.view.path_bw_mb_s(ctx.controller, src, nd, ctx.now);
             if b.is_infinite() {
                 BW_SENTINEL_MB_S
             } else {
@@ -299,6 +299,7 @@ mod tests {
         let (mut ctrl, nn, mut ledger, nodes) = fixture();
         let cost = CostModel::rust_only();
         let ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -332,6 +333,7 @@ mod tests {
         let (mut ctrl, nn, mut ledger, nodes) = fixture();
         let cost = CostModel::rust_only();
         let ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -360,6 +362,7 @@ mod tests {
         let mut down = vec![false; 6];
         down[nodes[1].0] = true;
         let ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -380,6 +383,7 @@ mod tests {
         let mut both = down;
         both[nodes[2].0] = true;
         let ctx2 = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -399,6 +403,7 @@ mod tests {
         let (mut ctrl, nn, mut ledger, nodes) = fixture();
         let cost = CostModel::rust_only();
         let ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -419,6 +424,7 @@ mod tests {
         let (mut ctrl, nn, mut ledger, nodes) = fixture();
         let cost = CostModel::rust_only();
         let ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -447,6 +453,7 @@ mod tests {
                 down[nodes[1].0] = true;
             }
             let ctx = SchedCtx {
+                view: &crate::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -480,6 +487,7 @@ mod tests {
         let (mut ctrl, nn, mut ledger, nodes) = fixture();
         let cost = CostModel::rust_only();
         let ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,

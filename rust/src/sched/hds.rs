@@ -150,6 +150,7 @@ pub mod tests {
         let mut ex = example1();
         let cost = CostModel::rust_only();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -185,6 +186,7 @@ pub mod tests {
         let mut ex = example1();
         let cost = CostModel::rust_only();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -205,6 +207,7 @@ pub mod tests {
         let mut ex = example1();
         let cost = CostModel::rust_only();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,

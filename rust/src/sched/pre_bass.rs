@@ -82,6 +82,7 @@ mod tests {
         let mut ex = example1();
         let cost_model = CostModel::rust_only();
         let mut ctx = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex.ctrl,
             namenode: &ex.nn,
             ledger: &mut ex.ledger,
@@ -113,6 +114,7 @@ mod tests {
         let cost_model = CostModel::rust_only();
         let mut ex1 = example1();
         let mut ctx1 = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex1.ctrl,
             namenode: &ex1.nn,
             ledger: &mut ex1.ledger,
@@ -126,6 +128,7 @@ mod tests {
         let a_bass = Bass::new().schedule(&ex1.tasks, None, &mut ctx1);
         let mut ex2 = example1();
         let mut ctx2 = SchedCtx {
+            view: &crate::sdn::Oracle,
             controller: &mut ex2.ctrl,
             namenode: &ex2.nn,
             ledger: &mut ex2.ledger,

@@ -4,7 +4,7 @@ use crate::cluster::Ledger;
 use crate::hdfs::{BlockId, Namenode};
 use crate::mapreduce::TaskSpec;
 use crate::runtime::CostModel;
-use crate::sdn::Controller;
+use crate::sdn::{BandwidthView, Controller};
 use crate::sim::Assignment;
 use crate::topology::NodeId;
 use crate::util::Secs;
@@ -14,6 +14,12 @@ use crate::util::Secs;
 /// so subsequent batches (e.g. the reduce phase) see the load.
 pub struct SchedCtx<'a> {
     pub controller: &'a mut Controller,
+    /// The bandwidth knowledge the scheduler is allowed: `Oracle` (the
+    /// clairvoyant default, bit-identical to reading the controller
+    /// directly) or a `Measured` view over probe estimates (DESIGN.md
+    /// §12). Reservation *grants* still go through the controller — the
+    /// view only shapes what the scheduler believes about capacity.
+    pub view: &'a dyn BandwidthView,
     pub namenode: &'a Namenode,
     pub ledger: &'a mut Ledger,
     /// Nodes this job may use (the paper's shared-cluster subset; Case 2
@@ -118,7 +124,10 @@ impl<'a> SchedCtx<'a> {
     pub fn best_replica(&self, b: BlockId, dst: NodeId) -> Option<NodeId> {
         let mut best: Option<(NodeId, f64, f64)> = None; // (holder, bw, idle)
         for r in self.namenode.readable_replicas(b, |n| self.is_readable(n)) {
-            let bw = self.controller.path_bw_mb_s(r, dst, self.now);
+            // unreachable holders price as 0.0 (not skipped): with *no*
+            // routable holder the historical argmax still returns one and
+            // the transfer fails downstream, which callers already handle
+            let bw = self.view.path_bw_mb_s(self.controller, r, dst, self.now);
             let idle = self.ledger.idle(r).0;
             let better = match best {
                 None => true,
@@ -145,7 +154,7 @@ impl<'a> SchedCtx<'a> {
             return Some(Secs::ZERO);
         }
         let links = self.controller.path(src, dst)?;
-        let cap = self.controller.path_capacity_mb_s(&links);
+        let cap = self.view.path_capacity_mb_s(self.controller, &links);
         if cap <= 0.0 {
             return None;
         }

@@ -186,6 +186,23 @@ impl SlotCalendar {
         (self.usable[link.0] - self.reserved_frac(link, slot)).max(0.0)
     }
 
+    /// Peak reserved fraction of `link` over `[start, start + n)` (the
+    /// worst slot in the span). The measured control plane combines this
+    /// exact ledger with *estimated* link environments, so its view
+    /// matches the clairvoyant one bit-for-bit when estimates are exact.
+    pub fn peak_reserved(&self, link: LinkId, start: usize, n: usize) -> f64 {
+        let seg = &self.reserved[link.0];
+        let mut peak = level_at(seg, start);
+        if n > 1 {
+            for (_, &v) in seg.range(start + 1..start + n) {
+                if v > peak {
+                    peak = v;
+                }
+            }
+        }
+        peak
+    }
+
     /// Min residual fraction over a path during `[start, start + n)`.
     pub fn path_residual(&self, links: &[LinkId], start: usize, n: usize) -> f64 {
         let mut min = 1.0f64;
@@ -232,6 +249,22 @@ impl SlotCalendar {
             });
         }
         Ok(Reservation { links: links.to_vec(), start_slot: start, n_slots: n, frac })
+    }
+
+    /// Re-apply a previously released reservation *without* a capacity
+    /// check: the exact inverse of [`SlotCalendar::release`]. Mid-flow
+    /// renegotiation releases a grant, re-plans, and — when conditions
+    /// admit nothing better — restores the old grant verbatim. The grant
+    /// was admitted when committed; if the link degraded underneath it
+    /// since, restoring merely returns to the prior (oversubscribed)
+    /// state, which [`SlotCalendar::reservation_within_capacity`]
+    /// already detects.
+    pub fn restore(&mut self, r: &Reservation) {
+        for &l in &r.links {
+            update_range(&mut self.reserved[l.0], r.start_slot, r.start_slot + r.n_slots, |v| {
+                (v + r.frac).min(1.0)
+            });
+        }
     }
 
     /// Release a previous reservation (idempotence is the caller's duty).

@@ -36,6 +36,18 @@ pub struct Transfer {
     pub start: Secs,
 }
 
+/// Outcome of [`Controller::renegotiate_transfer`].
+#[derive(Debug, Clone)]
+pub enum Renegotiation {
+    /// A fresh grant replaced the old one (the window, rate or arrival
+    /// may or may not differ — compare reservations to tell a real
+    /// drift correction from an idempotent re-plan).
+    Regranted(Transfer),
+    /// Current conditions admit no plan at all; the old grant was
+    /// restored exactly as it was.
+    Kept(Transfer),
+}
+
 /// The central controller (one per cluster, as in Fig. 1/2).
 #[derive(Debug, Clone)]
 pub struct Controller {
@@ -132,9 +144,13 @@ impl Controller {
     /// rate (1.0 = healthy). This lowers the calendar's reservable
     /// ceiling — [`Controller::plan_transfer`] then grants at most
     /// `health x line rate`, and the real-time `BW_rl` view shrinks
-    /// accordingly. `path_capacity_mb_s` keeps reporting line rate:
-    /// calendar fractions are relative to it, so scaling both would
-    /// double-count the degradation.
+    /// accordingly. [`Controller::path_line_mb_s`] keeps reporting line
+    /// rate: calendar fractions are relative to it, so the transfer
+    /// planner scaling both would double-count the degradation. The
+    /// scheduler-facing [`Controller::path_capacity_mb_s`] *does* scale
+    /// by health — it ignores calendar fractions entirely, so without
+    /// the scaling every `tm` estimate would price a degraded path at
+    /// full line rate.
     pub fn set_link_health(&mut self, link: LinkId, frac: f64) {
         self.calendar.set_usable_frac(link, frac);
     }
@@ -190,26 +206,117 @@ impl Controller {
         (cap * self.calendar.residual_frac(link, slot) - self.background_mb_s[link.0]).max(0.0)
     }
 
+    /// Effective free capacity of `link` over the slot span
+    /// `[lo, lo + n)`: line rate times the worst residual fraction in the
+    /// span, minus background. `n = 1` is exactly
+    /// [`Controller::link_free_mb_s`] at slot `lo`.
+    pub fn link_free_over(&self, link: LinkId, lo: usize, n: usize) -> f64 {
+        let cap = self.link_capacity_mb_s(link);
+        let residual = self.calendar.path_residual(&[link], lo, n.max(1));
+        (cap * residual - self.background_mb_s[link.0]).max(0.0)
+    }
+
     /// The paper's `BW_rl`: real-time available bandwidth of the path
     /// `src -> dst` at time `at` (MB/s). 0 if disconnected; +INF for the
-    /// local case (`src == dst`, no network involved).
+    /// local case (`src == dst`, no network involved). Callers that must
+    /// distinguish "unreachable" from "congested to zero" use
+    /// [`Controller::try_path_bw_mb_s`] instead.
     pub fn path_bw_mb_s(&self, src: NodeId, dst: NodeId, at: Secs) -> f64 {
-        match self.path(src, dst) {
-            None => 0.0,
-            Some(links) if links.is_empty() => f64::INFINITY,
-            Some(links) => {
-                let slot = self.calendar.slot_of(at);
-                links
-                    .iter()
-                    .map(|&l| self.link_free_mb_s(l, slot))
-                    .fold(f64::INFINITY, f64::min)
-            }
+        self.try_path_bw_mb_s(src, dst, at).unwrap_or(0.0)
+    }
+
+    /// `BW_rl` with the unreachable case made explicit: `None` when no
+    /// path exists (a transfer can never be admitted), `Some(0.0)` when a
+    /// path exists but its current slot is fully reserved or degraded
+    /// away (a transfer could be admitted later).
+    pub fn try_path_bw_mb_s(&self, src: NodeId, dst: NodeId, at: Secs) -> Option<f64> {
+        let links = self.path(src, dst)?;
+        if links.is_empty() {
+            return Some(f64::INFINITY);
         }
+        let slot = self.calendar.slot_of(at);
+        Some(
+            links
+                .iter()
+                .map(|&l| self.link_free_mb_s(l, slot))
+                .fold(f64::INFINITY, f64::min),
+        )
+    }
+
+    /// Span-aware `BW_rl`: the worst available bandwidth of the path over
+    /// every slot a transfer occupying `[at, at + duration)` would cover.
+    /// `path_bw_mb_s` samples only `slot_of(at)`, so a multi-slot
+    /// transfer priced off it alone can sail into a window something else
+    /// has reserved; this takes the min over the covered span. With
+    /// `duration` inside one slot the answer is bit-identical to
+    /// [`Controller::try_path_bw_mb_s`]. Non-positive / NaN durations
+    /// fall back to the single-slot view; infinite durations cover the
+    /// whole future calendar.
+    pub fn try_path_bw_over(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+        duration: Secs,
+    ) -> Option<f64> {
+        let links = self.path(src, dst)?;
+        if links.is_empty() {
+            return Some(f64::INFINITY);
+        }
+        let lo = self.calendar.slot_of(at);
+        let n = self.span_slots(at, duration, lo);
+        Some(
+            links
+                .iter()
+                .map(|&l| self.link_free_over(l, lo, n))
+                .fold(f64::INFINITY, f64::min),
+        )
+    }
+
+    /// [`Controller::try_path_bw_over`] with unreachable collapsed to 0.
+    pub fn path_bw_over(&self, src: NodeId, dst: NodeId, at: Secs, duration: Secs) -> f64 {
+        self.try_path_bw_over(src, dst, at, duration).unwrap_or(0.0)
+    }
+
+    /// Number of calendar slots `[at, at + duration)` covers, given
+    /// `lo = slot_of(at)`. At least 1; saturates (instead of overflowing
+    /// the slot arithmetic) for infinite durations.
+    pub(crate) fn span_slots(&self, at: Secs, duration: Secs, lo: usize) -> usize {
+        if !(duration.0 > 0.0) {
+            return 1;
+        }
+        let end = (at.0 + duration.0) / self.calendar.slot_secs();
+        if !end.is_finite() {
+            return usize::MAX - lo;
+        }
+        // `as usize` saturates, so a huge finite end stays safe too
+        let hi = (end.ceil() as usize).min(usize::MAX - lo);
+        hi.max(lo + 1) - lo
+    }
+
+    /// Bottleneck capacity of a path as the *scheduler* should price it
+    /// (MB/s): line rate scaled by each link's usable-fraction health,
+    /// net of background, ignoring calendar reservations (those are
+    /// per-slot). This is what HDS/BAR `tm` estimates divide by; before
+    /// the health scaling, every caller priced degraded links at full
+    /// line rate for the whole degradation window.
+    pub fn path_capacity_mb_s(&self, links: &[LinkId]) -> f64 {
+        links
+            .iter()
+            .map(|&l| {
+                (self.link_capacity_mb_s(l) * self.calendar.usable_frac(l)
+                    - self.background_mb_s[l.0])
+                    .max(0.0)
+            })
+            .fold(f64::INFINITY, f64::min)
     }
 
     /// Bottleneck *line* capacity of a path net of background (MB/s),
-    /// ignoring reservations (the calendar handles those per-slot).
-    pub fn path_capacity_mb_s(&self, links: &[LinkId]) -> f64 {
+    /// ignoring both reservations and health. The transfer planner works
+    /// in fractions *of this rate* — the calendar's usable ceiling
+    /// already encodes health, so planning against the health-scaled
+    /// capacity would double-count the degradation.
+    pub fn path_line_mb_s(&self, links: &[LinkId]) -> f64 {
         links
             .iter()
             .map(|&l| (self.link_capacity_mb_s(l) - self.background_mb_s[l.0]).max(0.0))
@@ -233,7 +340,7 @@ impl Controller {
                 earliest,
             ));
         }
-        let cap = self.path_capacity_mb_s(&links);
+        let cap = self.path_line_mb_s(&links);
         if cap <= 0.0 {
             return None;
         }
@@ -270,6 +377,51 @@ impl Controller {
         let slot_secs = self.calendar.slot_secs();
         let start = res.start(slot_secs).max(at);
         Ok(Transfer { flow_id, reservation: res, rate_mb_s: rate, arrival, start })
+    }
+
+    /// Mid-flow renegotiation of a committed grant whose window has not
+    /// started yet: release the old reservation, re-plan from `earliest`
+    /// under current conditions, and commit the better window. When no
+    /// plan is admissible (the path degraded below `MIN_RESERVE_FRAC`),
+    /// the old grant is restored verbatim — the reallocator never leaks
+    /// a reservation and never leaves a task grantless.
+    ///
+    /// Re-planning is idempotent: under unchanged conditions the search
+    /// re-finds the identical window (the released slots are the
+    /// earliest feasible ones), so `Regranted` with an unchanged
+    /// reservation means "nothing drifted".
+    pub fn renegotiate_transfer(
+        &mut self,
+        t: &Transfer,
+        src: NodeId,
+        dst: NodeId,
+        class: TrafficClass,
+        size_mb: f64,
+        earliest: Secs,
+    ) -> Renegotiation {
+        if t.reservation.n_slots > 0 {
+            self.calendar.release(&t.reservation);
+        }
+        let Some(plan) = self.plan_transfer(src, dst, size_mb, earliest) else {
+            if t.reservation.n_slots > 0 {
+                self.calendar.restore(&t.reservation);
+            }
+            return Renegotiation::Kept(t.clone());
+        };
+        match self.commit_transfer(src, dst, class, plan, earliest) {
+            Ok(nt) => {
+                self.flows.remove(t.flow_id);
+                Renegotiation::Regranted(nt)
+            }
+            // unreachable in practice (plan just validated the residual),
+            // but a failed commit must not leak the released slots
+            Err(_) => {
+                if t.reservation.n_slots > 0 {
+                    self.calendar.restore(&t.reservation);
+                }
+                Renegotiation::Kept(t.clone())
+            }
+        }
     }
 
     /// Release a finished transfer's slots and drop its flow entry.
@@ -454,5 +606,134 @@ mod tests {
         let b = topo.add_host();
         let c = Controller::new(topo, 1.0);
         assert_eq!(c.path_bw_mb_s(a, b, Secs(0.0)), 0.0);
+    }
+
+    #[test]
+    fn unreachable_is_distinct_from_congested_to_zero() {
+        // disconnected: no path at all -> None (and 0.0 via the collapse)
+        let mut topo = crate::topology::Topology::new();
+        let a = topo.add_host();
+        let b = topo.add_host();
+        let c = Controller::new(topo, 1.0);
+        assert_eq!(c.try_path_bw_mb_s(a, b, Secs(0.0)), None);
+        assert_eq!(c.try_path_bw_over(a, b, Secs(0.0), Secs(5.0)), None);
+        // congested: a saturating reservation -> Some(0.0), never None
+        let (mut c, n) = ctrl();
+        let plan = c.plan_transfer(n[1], n[0], 64.0, Secs(0.0)).unwrap();
+        c.commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(0.0)).unwrap();
+        let mid = c.try_path_bw_mb_s(n[1], n[0], Secs(2.0)).expect("reachable");
+        assert!(mid < 1e-9, "saturated, got {mid}");
+    }
+
+    #[test]
+    fn path_capacity_is_health_scaled_but_line_rate_is_not() {
+        // the regression: capacity estimates ignored usable_frac, so
+        // every tm estimate priced a degraded path at full line rate
+        let (mut c, n) = ctrl();
+        let links: Vec<_> = c.path(n[1], n[0]).unwrap().to_vec();
+        assert!((c.path_capacity_mb_s(&links) - 12.8).abs() < 1e-9);
+        c.set_link_health(links[0], 0.5);
+        assert!((c.path_capacity_mb_s(&links) - 6.4).abs() < 1e-9);
+        // the planner's reference stays line rate (calendar fracs are
+        // relative to it; scaling both would double-count)
+        assert!((c.path_line_mb_s(&links) - 12.8).abs() < 1e-9);
+        let (r, rate, _) = c.plan_transfer(n[1], n[0], 64.0, Secs(0.0)).unwrap();
+        assert!((r.frac - 0.5).abs() < 1e-9);
+        assert!((rate - 6.4).abs() < 1e-9, "granted rate reflects health once, not twice");
+    }
+
+    #[test]
+    fn span_aware_bw_prices_future_reservations() {
+        // reserve slots 3..8; the first slot alone says "free"
+        let (mut c, n) = ctrl();
+        let plan = c.plan_transfer(n[1], n[0], 64.0, Secs(3.0)).unwrap();
+        c.commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(3.0)).unwrap();
+        assert!((c.path_bw_mb_s(n[1], n[0], Secs(0.0)) - 12.8).abs() < 1e-9);
+        // a 5s transfer from t=0 covers slots 0..5 and hits the window
+        let over = c.path_bw_over(n[1], n[0], Secs(0.0), Secs(5.0));
+        assert!(over < 1e-9, "span view must see the reservation, got {over}");
+        // a 2s transfer from t=0 stays clear of it
+        assert!((c.path_bw_over(n[1], n[0], Secs(0.0), Secs(2.0)) - 12.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_slot_span_is_bit_identical_to_the_point_view() {
+        let (mut c, n) = ctrl();
+        let plan = c.plan_transfer(n[1], n[0], 32.0, Secs(2.0)).unwrap();
+        c.commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(2.0)).unwrap();
+        let bg_link = c.path(n[2], n[0]).unwrap()[0];
+        c.set_background_mb_s(bg_link, 3.0);
+        for (at, dur) in [(0.0, 0.9), (0.2, 0.5), (2.4, 0.1), (7.0, 1.0), (3.0, 0.0)] {
+            for (src, dst) in [(n[1], n[0]), (n[2], n[0]), (n[0], n[0])] {
+                let point = c.path_bw_mb_s(src, dst, Secs(at));
+                let span = c.path_bw_over(src, dst, Secs(at), Secs(dur));
+                assert_eq!(point.to_bits(), span.to_bits(), "at={at} dur={dur}");
+            }
+        }
+        // degenerate durations never panic and fall back to the point view
+        let point = c.path_bw_mb_s(n[1], n[0], Secs(1.0));
+        assert_eq!(c.path_bw_over(n[1], n[0], Secs(1.0), Secs(-2.0)).to_bits(), point.to_bits());
+        assert_eq!(
+            c.path_bw_over(n[1], n[0], Secs(1.0), Secs(f64::NAN)).to_bits(),
+            point.to_bits()
+        );
+        // an infinite span covers the far future without overflowing
+        assert!(c.path_bw_over(n[1], n[0], Secs(1.0), Secs(f64::INFINITY)) <= point);
+    }
+
+    #[test]
+    fn renegotiation_regrants_on_drift_and_restores_when_infeasible() {
+        let (mut c, n) = ctrl();
+        let plan = c.plan_transfer(n[1], n[0], 64.0, Secs(10.0)).unwrap();
+        let t = c
+            .commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(0.0))
+            .unwrap();
+        let link = t.reservation.links[0];
+
+        // unchanged conditions: re-planning is idempotent
+        match c.renegotiate_transfer(&t, n[1], n[0], TrafficClass::HadoopOther, 64.0, Secs(10.0))
+        {
+            Renegotiation::Regranted(nt) => {
+                assert_eq!(nt.reservation, t.reservation, "idempotent re-plan");
+                assert_eq!(nt.arrival.0.to_bits(), t.arrival.0.to_bits());
+                // drift: a degraded link shrinks the regrant
+                c.set_link_health(link, 0.5);
+                assert!(!c.revalidate_transfer(&nt));
+                match c.renegotiate_transfer(
+                    &nt,
+                    n[1],
+                    n[0],
+                    TrafficClass::HadoopOther,
+                    64.0,
+                    Secs(10.0),
+                ) {
+                    Renegotiation::Regranted(shrunk) => {
+                        assert!((shrunk.reservation.frac - 0.5).abs() < 1e-9);
+                        assert!(shrunk.arrival > nt.arrival, "half rate lands later");
+                        assert!(c.revalidate_transfer(&shrunk), "regrant fits the ceiling");
+                        // a dead path cannot be re-planned: restore verbatim
+                        c.set_link_health(link, 0.0);
+                        match c.renegotiate_transfer(
+                            &shrunk,
+                            n[1],
+                            n[0],
+                            TrafficClass::HadoopOther,
+                            64.0,
+                            Secs(10.0),
+                        ) {
+                            Renegotiation::Kept(kept) => {
+                                assert_eq!(kept.reservation, shrunk.reservation);
+                                assert_eq!(c.flows.len(), 1, "no leaked or dropped flow");
+                                c.complete_transfer(&kept, 64.0);
+                                assert_eq!(c.calendar.n_segments(), 0, "no leaked slots");
+                            }
+                            other => panic!("expected Kept, got {other:?}"),
+                        }
+                    }
+                    other => panic!("expected shrunk regrant, got {other:?}"),
+                }
+            }
+            other => panic!("expected idempotent regrant, got {other:?}"),
+        }
     }
 }

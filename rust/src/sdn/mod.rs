@@ -15,8 +15,12 @@ pub mod calendar;
 pub mod controller;
 pub mod flowtable;
 pub mod qos;
+pub mod telemetry;
 
 pub use calendar::{CalendarView, Reservation, SlotCalendar};
-pub use controller::Controller;
+pub use controller::{Controller, Renegotiation};
 pub use flowtable::{FlowEntry, FlowTable, TrafficClass};
 pub use qos::{QosPolicy, Queue, QueueId};
+pub use telemetry::{
+    weighted_max_min, BandwidthView, Measured, Oracle, Telemetry, TelemetrySpec,
+};

@@ -1,0 +1,601 @@
+//! The measured control plane: probes, estimators, and bandwidth views.
+//!
+//! Every scheduler before this module read *clairvoyant* bandwidth — the
+//! controller's exact calendar and link state at query time. A real SDN
+//! controller measures: it probes ports periodically, smooths the
+//! samples, and schedules from estimates that are noisy and stale. This
+//! module supplies that layer (DESIGN.md §12):
+//!
+//! * [`Telemetry`] — a seeded probe loop sampling each link's
+//!   *environment* (usable-fraction health and background load) on a
+//!   `probe_period` grid, feeding per-link EWMA estimators with
+//!   staleness expiry.
+//! * [`BandwidthView`] — the trait schedulers consume instead of calling
+//!   [`Controller`] bandwidth getters directly. [`Oracle`] delegates to
+//!   the controller (bit-identical to the pre-telemetry code paths, and
+//!   the default everywhere); [`Measured`] combines the controller's
+//!   *exact* reservation ledger with the *estimated* link environment.
+//!
+//! The split matters: reservations are the controller's own bookkeeping
+//! (it granted them, it knows them exactly — no probe needed), while
+//! health and cross traffic are external facts it can only measure. A
+//! `Measured` view therefore stays coherent mid-batch as BASS commits
+//! reservations, and collapses to `Oracle` bit-for-bit when noise is
+//! zero and probes are fresh — the convergence contract the estimate
+//! sweep (`experiments/estimate.rs`) leans on.
+//!
+//! Mid-flow reallocation (the loop-closing half: renegotiating grants
+//! whose links drifted) lives with the mitigated runner in
+//! `scenario/mitigation.rs`; the utility-weighted max-min share rule it
+//! orders renegotiations by is [`weighted_max_min`] here.
+
+use crate::topology::{LinkId, NodeId};
+use crate::util::{Secs, XorShift};
+
+use super::controller::Controller;
+
+/// Probe epochs processed per `advance` call are capped so a
+/// pathologically tiny `probe_period` cannot spin the loop for hours of
+/// simulated time; only the most recent epochs are played (EWMA history
+/// further back is geometrically negligible). Deterministic: the cap
+/// depends only on the spec and the advance times.
+const MAX_EPOCHS_PER_ADVANCE: usize = 10_000;
+
+/// Configuration of the measurement plane (the `[telemetry]` table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySpec {
+    /// Seconds between probe sweeps. `0` = continuous: every `advance`
+    /// refreshes every estimate (the probe_period -> 0 limit).
+    pub probe_period: f64,
+    /// Relative (multiplicative) Gaussian noise sigma on each sample:
+    /// `sample = truth * (1 + noise * N(0,1))`. `0` = exact probes.
+    pub noise: f64,
+    /// EWMA gain in (0, 1]: `est += alpha * (sample - est)`. 1 = keep
+    /// only the latest sample, adopted bit-exactly (no blend rounding).
+    pub alpha: f64,
+    /// Estimates older than this fall back to the static healthy prior
+    /// (full health, no background); a probe gap beyond it resets the
+    /// EWMA instead of blending across the hole.
+    pub stale_secs: f64,
+    /// Probe-noise RNG seed (independent of workload/dynamics seeds).
+    pub seed: u64,
+    /// Renegotiate drifting calendar grants at probe epochs (the
+    /// mitigated runner's reallocation pass).
+    pub reallocate: bool,
+}
+
+impl TelemetrySpec {
+    /// The default measured plane: 5s probes, exact samples, mild
+    /// smoothing, no reallocation.
+    pub fn measured() -> Self {
+        Self {
+            probe_period: 5.0,
+            noise: 0.0,
+            alpha: 0.3,
+            stale_secs: 30.0,
+            seed: 4457,
+            reallocate: false,
+        }
+    }
+}
+
+/// One link's estimated environment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkEstimate {
+    /// Estimated usable capacity fraction (health), clamped to [0, 1].
+    pub usable: f64,
+    /// Estimated background load, MB/s (>= 0).
+    pub bg_mb_s: f64,
+    /// When the estimate was last refreshed.
+    pub at: Secs,
+}
+
+/// The probe loop + per-link EWMA estimators.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    pub spec: TelemetrySpec,
+    est: Vec<Option<LinkEstimate>>,
+    rng: XorShift,
+    next_probe: Secs,
+    /// Probe sweeps executed so far (diagnostics).
+    pub probes: usize,
+}
+
+impl Telemetry {
+    pub fn new(spec: TelemetrySpec, n_links: usize) -> Self {
+        let rng = XorShift::new(spec.seed);
+        Self { spec, est: vec![None; n_links], rng, next_probe: Secs::ZERO, probes: 0 }
+    }
+
+    /// Play every probe epoch up to `now` (inclusive). Call sites drive
+    /// this from their own clocks (scheduling rounds, mitigation
+    /// checkpoints); the epoch grid and the per-link RNG draw order are
+    /// fixed by the spec, so estimates at a given `now` do not depend on
+    /// how the calls were batched (up to [`MAX_EPOCHS_PER_ADVANCE`]).
+    pub fn advance(&mut self, ctrl: &Controller, now: Secs) {
+        if self.spec.probe_period <= 0.0 {
+            self.probe(ctrl, now);
+            return;
+        }
+        let pending =
+            ((now.0 - self.next_probe.0) / self.spec.probe_period).max(0.0) as usize;
+        if pending > MAX_EPOCHS_PER_ADVANCE {
+            // skip all but the newest epochs, keeping the grid phase
+            let skipped = pending - MAX_EPOCHS_PER_ADVANCE;
+            self.next_probe.0 += skipped as f64 * self.spec.probe_period;
+        }
+        while self.next_probe.0 <= now.0 {
+            let t = self.next_probe;
+            self.probe(ctrl, t);
+            self.next_probe.0 += self.spec.probe_period;
+        }
+    }
+
+    /// One probe sweep at time `t`: sample every link's environment with
+    /// multiplicative Gaussian noise and fold it into the estimators.
+    fn probe(&mut self, ctrl: &Controller, t: Secs) {
+        for i in 0..self.est.len() {
+            let link = LinkId(i);
+            let (mut usable, mut bg) = (ctrl.link_health(link), ctrl.background_mb_s(link));
+            if self.spec.noise > 0.0 {
+                usable *= 1.0 + self.spec.noise * gaussian(&mut self.rng);
+                bg *= 1.0 + self.spec.noise * gaussian(&mut self.rng);
+            }
+            let usable = usable.clamp(0.0, 1.0);
+            let bg = bg.max(0.0);
+            self.est[i] = Some(match self.est[i] {
+                // a gap beyond stale_secs resets instead of blending
+                // across the hole; `est += a * (sample - est)` is an
+                // exact fixpoint when the sample repeats, so zero-noise
+                // estimates of a static environment are bit-exact.
+                // alpha >= 1 adopts the sample outright — `p + (s - p)`
+                // is not guaranteed to round back to `s` — giving the
+                // estimate sweep its exact-tracking convergence limit
+                Some(p) if t.0 - p.at.0 <= self.spec.stale_secs && self.spec.alpha < 1.0 => LinkEstimate {
+                    usable: p.usable + self.spec.alpha * (usable - p.usable),
+                    bg_mb_s: p.bg_mb_s + self.spec.alpha * (bg - p.bg_mb_s),
+                    at: t,
+                },
+                _ => LinkEstimate { usable, bg_mb_s: bg, at: t },
+            });
+        }
+        self.probes += 1;
+    }
+
+    /// The current `(usable, bg_mb_s)` estimate for a link, or `None`
+    /// when nothing fresh is known (never probed, or last refresh is
+    /// more than `stale_secs` before `now`).
+    pub fn estimate(&self, link: LinkId, now: Secs) -> Option<(f64, f64)> {
+        self.est[link.0]
+            .filter(|e| now.0 - e.at.0 <= self.spec.stale_secs)
+            .map(|e| (e.usable, e.bg_mb_s))
+    }
+
+}
+
+/// Standard normal draw (Box–Muller on the XorShift uniforms).
+fn gaussian(rng: &mut XorShift) -> f64 {
+    let u1 = rng.uniform(f64::MIN_POSITIVE, 1.0);
+    let u2 = rng.uniform(0.0, 1.0);
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// What a scheduler is allowed to know about bandwidth. Every method
+/// takes the controller by shared reference so a `SchedCtx` can hold the
+/// view and `&mut Controller` side by side.
+pub trait BandwidthView {
+    /// `BW_rl` of the path at `at`; `None` = unreachable (distinct from
+    /// `Some(0.0)` = congested/degraded to zero).
+    fn try_path_bw_mb_s(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+    ) -> Option<f64>;
+
+    /// Span-aware `BW_rl`: worst over every slot `[at, at + duration)`
+    /// covers (see [`Controller::try_path_bw_over`]).
+    fn try_path_bw_over(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+        duration: Secs,
+    ) -> Option<f64>;
+
+    /// Scheduler-priced bottleneck capacity of a path (health-scaled,
+    /// net of background, ignoring per-slot reservations).
+    fn path_capacity_mb_s(&self, ctrl: &Controller, links: &[LinkId]) -> f64;
+
+    /// Unreachable-collapsed convenience (matches the historical
+    /// `Controller::path_bw_mb_s` contract).
+    fn path_bw_mb_s(&self, ctrl: &Controller, src: NodeId, dst: NodeId, at: Secs) -> f64 {
+        self.try_path_bw_mb_s(ctrl, src, dst, at).unwrap_or(0.0)
+    }
+
+    /// Unreachable-collapsed span pricing.
+    fn path_bw_over(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+        duration: Secs,
+    ) -> f64 {
+        self.try_path_bw_over(ctrl, src, dst, at, duration).unwrap_or(0.0)
+    }
+}
+
+/// The clairvoyant view: exactly the controller's own numbers. This is
+/// the default everywhere a `[telemetry]` table is absent, and is
+/// bit-identical to calling the controller directly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Oracle;
+
+impl BandwidthView for Oracle {
+    fn try_path_bw_mb_s(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+    ) -> Option<f64> {
+        ctrl.try_path_bw_mb_s(src, dst, at)
+    }
+
+    fn try_path_bw_over(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+        duration: Secs,
+    ) -> Option<f64> {
+        ctrl.try_path_bw_over(src, dst, at, duration)
+    }
+
+    fn path_capacity_mb_s(&self, ctrl: &Controller, links: &[LinkId]) -> f64 {
+        ctrl.path_capacity_mb_s(links)
+    }
+}
+
+/// The measured view: the controller's exact reservation ledger plus the
+/// *estimated* link environment from [`Telemetry`]. Links without a
+/// fresh estimate fall back to the static healthy prior (full health,
+/// zero background) — exactly what a controller that has never heard
+/// from a port must assume.
+#[derive(Debug, Clone, Copy)]
+pub struct Measured<'t> {
+    telem: &'t Telemetry,
+    /// Staleness reference clock (usually the scheduling round's `now`).
+    now: Secs,
+}
+
+impl<'t> Measured<'t> {
+    pub fn at(telem: &'t Telemetry, now: Secs) -> Self {
+        Self { telem, now }
+    }
+
+    fn env(&self, link: LinkId) -> (f64, f64) {
+        self.telem.estimate(link, self.now).unwrap_or((1.0, 0.0))
+    }
+
+    /// Estimated free capacity of one link over slots `[lo, lo + n)`:
+    /// mirrors [`Controller::link_free_over`] with the estimated
+    /// environment substituted for the true one (same operation order,
+    /// so exact estimates reproduce the oracle bit-for-bit).
+    fn link_free(&self, ctrl: &Controller, link: LinkId, lo: usize, n: usize) -> f64 {
+        let (usable, bg) = self.env(link);
+        let peak = ctrl.calendar.peak_reserved(link, lo, n);
+        (ctrl.link_capacity_mb_s(link) * (usable - peak).max(0.0) - bg).max(0.0)
+    }
+}
+
+impl BandwidthView for Measured<'_> {
+    fn try_path_bw_mb_s(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+    ) -> Option<f64> {
+        let links = ctrl.path(src, dst)?;
+        if links.is_empty() {
+            return Some(f64::INFINITY);
+        }
+        let slot = ctrl.calendar.slot_of(at);
+        Some(
+            links
+                .iter()
+                .map(|&l| self.link_free(ctrl, l, slot, 1))
+                .fold(f64::INFINITY, f64::min),
+        )
+    }
+
+    fn try_path_bw_over(
+        &self,
+        ctrl: &Controller,
+        src: NodeId,
+        dst: NodeId,
+        at: Secs,
+        duration: Secs,
+    ) -> Option<f64> {
+        let links = ctrl.path(src, dst)?;
+        if links.is_empty() {
+            return Some(f64::INFINITY);
+        }
+        let lo = ctrl.calendar.slot_of(at);
+        let n = ctrl.span_slots(at, duration, lo);
+        Some(
+            links
+                .iter()
+                .map(|&l| self.link_free(ctrl, l, lo, n))
+                .fold(f64::INFINITY, f64::min),
+        )
+    }
+
+    fn path_capacity_mb_s(&self, ctrl: &Controller, links: &[LinkId]) -> f64 {
+        links
+            .iter()
+            .map(|&l| {
+                let (usable, bg) = self.env(l);
+                (ctrl.link_capacity_mb_s(l) * usable - bg).max(0.0)
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Utility-weighted max-min (water-filling): split `capacity` across
+/// flows with `demands` and positive `weights` so that no flow can gain
+/// without a higher-weighted or equally-weighted flow losing. Saturated
+/// flows (share == demand) drop out; the rest split the remainder in
+/// weight proportion. The reallocator derives per-class target shares
+/// from estimated path capacity with this rule before renegotiating
+/// grants (QoS classes keep their priority under drift).
+pub fn weighted_max_min(capacity: f64, demands: &[f64], weights: &[f64]) -> Vec<f64> {
+    assert_eq!(demands.len(), weights.len());
+    let n = demands.len();
+    let mut share = vec![0.0; n];
+    let mut active: Vec<usize> =
+        (0..n).filter(|&i| demands[i] > 0.0 && weights[i] > 0.0).collect();
+    let mut left = capacity.max(0.0);
+    while !active.is_empty() && left > 1e-12 {
+        let wsum: f64 = active.iter().map(|&i| weights[i]).sum();
+        let fill = left / wsum;
+        let saturated: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&i| demands[i] - share[i] <= fill * weights[i] + 1e-12)
+            .collect();
+        if saturated.is_empty() {
+            for &i in &active {
+                share[i] += fill * weights[i];
+            }
+            break;
+        }
+        for &i in &saturated {
+            left -= demands[i] - share[i];
+            share[i] = demands[i];
+        }
+        left = left.max(0.0);
+        active.retain(|i| !saturated.contains(i));
+    }
+    share
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sdn::TrafficClass;
+    use crate::topology::builders::fig2;
+
+    fn ctrl() -> (Controller, [NodeId; 4]) {
+        let f = fig2(102.4); // 12.8 MB/s effective links
+        let nodes = f.task_nodes;
+        (Controller::new(f.topo, 1.0), nodes)
+    }
+
+    fn spec(noise: f64, period: f64) -> TelemetrySpec {
+        TelemetrySpec { probe_period: period, noise, ..TelemetrySpec::measured() }
+    }
+
+    #[test]
+    fn zero_noise_probe_is_bit_exact_and_stays_at_the_fixpoint() {
+        let (mut c, n) = ctrl();
+        let link = c.path(n[1], n[0]).unwrap()[0];
+        c.set_link_health(link, 0.37);
+        c.set_background_mb_s(link, 2.5);
+        let mut tm = Telemetry::new(spec(0.0, 5.0), c.topo().n_links());
+        tm.advance(&c, Secs(0.0));
+        assert_eq!(tm.estimate(link, Secs(0.0)), Some((0.37, 2.5)));
+        // repeated probes of a static environment never drift a ulp
+        tm.advance(&c, Secs(25.0));
+        assert_eq!(tm.probes, 6);
+        let (u, bg) = tm.estimate(link, Secs(25.0)).unwrap();
+        assert_eq!(u.to_bits(), 0.37f64.to_bits());
+        assert_eq!(bg.to_bits(), 2.5f64.to_bits());
+    }
+
+    #[test]
+    fn ewma_converges_geometrically_to_a_changed_truth() {
+        let (mut c, n) = ctrl();
+        let link = c.path(n[1], n[0]).unwrap()[0];
+        let mut tm = Telemetry::new(spec(0.0, 1.0), c.topo().n_links());
+        tm.advance(&c, Secs(0.0)); // healthy baseline: est = 1.0
+        c.set_link_health(link, 0.5);
+        let mut prev_err = f64::INFINITY;
+        for k in 1..=20 {
+            tm.advance(&c, Secs(k as f64));
+            let (u, _) = tm.estimate(link, Secs(k as f64)).unwrap();
+            let err = (u - 0.5).abs();
+            assert!(err < prev_err || err == 0.0, "monotone approach at step {k}");
+            prev_err = err;
+        }
+        assert!(prev_err < 1e-3, "converged, err {prev_err}");
+    }
+
+    #[test]
+    fn staleness_expires_estimates_and_resets_the_blend() {
+        let (mut c, n) = ctrl();
+        let link = c.path(n[1], n[0]).unwrap()[0];
+        c.set_link_health(link, 0.4);
+        let mut tm = Telemetry::new(
+            TelemetrySpec { stale_secs: 8.0, ..spec(0.0, 5.0) },
+            c.topo().n_links(),
+        );
+        tm.advance(&c, Secs(0.0));
+        assert!(tm.estimate(link, Secs(8.0)).is_some());
+        assert_eq!(tm.estimate(link, Secs(8.1)), None, "past stale_secs");
+        // a Measured view past staleness falls back to the healthy prior
+        let m = Measured::at(&tm, Secs(9.0));
+        let bw = m.path_bw_mb_s(&c, n[1], n[0], Secs(9.0));
+        assert!((bw - 12.8).abs() < 1e-9, "prior ignores the unseen degradation: {bw}");
+        // the next probe resets rather than blending across the hole:
+        // alpha 0.3 of truth would give 1 - 0.3*0.6 = 0.82, reset gives 0.4
+        let mut gap = Telemetry::new(
+            TelemetrySpec { stale_secs: 8.0, ..spec(0.0, 20.0) },
+            c.topo().n_links(),
+        );
+        gap.advance(&c, Secs(0.0));
+        gap.advance(&c, Secs(20.0));
+        // both probes saw 0.4 here; rebuild with a change between probes
+        let mut gap2 = Telemetry::new(
+            TelemetrySpec { stale_secs: 8.0, ..spec(0.0, 20.0) },
+            c.topo().n_links(),
+        );
+        c.set_link_health(link, 1.0);
+        gap2.advance(&c, Secs(0.0)); // sees healthy
+        c.set_link_health(link, 0.4);
+        gap2.advance(&c, Secs(20.0)); // gap > stale: reset to 0.4 exactly
+        assert_eq!(gap2.estimate(link, Secs(20.0)), Some((0.4, 0.0)));
+    }
+
+    #[test]
+    fn alpha_one_tracks_a_moving_truth_exactly() {
+        let (mut c, n) = ctrl();
+        let link = c.path(n[1], n[0]).unwrap()[0];
+        let mut tm = Telemetry::new(
+            TelemetrySpec { alpha: 1.0, ..spec(0.0, 1.0) },
+            c.topo().n_links(),
+        );
+        tm.advance(&c, Secs(0.0));
+        c.set_link_health(link, 0.123456789);
+        c.set_background_mb_s(link, 7.654321);
+        tm.advance(&c, Secs(1.0)); // one probe after the change suffices
+        let (u, bg) = tm.estimate(link, Secs(1.0)).unwrap();
+        assert_eq!(u.to_bits(), 0.123456789f64.to_bits());
+        assert_eq!(bg.to_bits(), 7.654321f64.to_bits());
+    }
+
+    #[test]
+    fn seeded_noise_is_deterministic_and_seed_sensitive() {
+        let (c, n) = ctrl();
+        let link = c.path(n[1], n[0]).unwrap()[0];
+        let run = |seed: u64| {
+            let mut tm = Telemetry::new(
+                TelemetrySpec { seed, ..spec(0.2, 1.0) },
+                c.topo().n_links(),
+            );
+            tm.advance(&c, Secs(10.0));
+            tm.estimate(link, Secs(10.0)).unwrap()
+        };
+        let (a1, b1) = run(7);
+        let (a2, b2) = run(7);
+        assert_eq!(a1.to_bits(), a2.to_bits());
+        assert_eq!(b1.to_bits(), b2.to_bits());
+        let (a3, _) = run(8);
+        assert_ne!(a1.to_bits(), a3.to_bits(), "different seed, different noise");
+        // noise stays within the clamp
+        assert!((0.0..=1.0).contains(&a1));
+    }
+
+    #[test]
+    fn continuous_mode_refreshes_on_every_advance() {
+        let (c, _) = ctrl();
+        let mut tm = Telemetry::new(spec(0.0, 0.0), c.topo().n_links());
+        tm.advance(&c, Secs(0.3));
+        tm.advance(&c, Secs(0.7));
+        assert_eq!(tm.probes, 2);
+        assert!(tm.estimate(LinkId(0), Secs(0.7)).is_some());
+    }
+
+    #[test]
+    fn pathological_probe_period_is_capped_not_spun() {
+        let (c, _) = ctrl();
+        let mut tm = Telemetry::new(spec(0.0, 1e-6), c.topo().n_links());
+        tm.advance(&c, Secs(100.0)); // 1e8 nominal epochs
+        assert!(tm.probes <= MAX_EPOCHS_PER_ADVANCE + 1);
+        assert!(tm.estimate(LinkId(0), Secs(100.0)).is_some());
+    }
+
+    #[test]
+    fn fresh_exact_measured_view_is_bit_identical_to_oracle() {
+        // reservations + degradation + background all at once: the
+        // measured view must reproduce the oracle exactly when the
+        // estimated environment equals the true one
+        let (mut c, n) = ctrl();
+        let plan = c.plan_transfer(n[1], n[0], 48.0, Secs(2.0)).unwrap();
+        c.commit_transfer(n[1], n[0], TrafficClass::HadoopOther, plan, Secs(2.0)).unwrap();
+        let link = c.path(n[2], n[0]).unwrap()[0];
+        c.set_link_health(link, 0.6);
+        c.set_background_mb_s(link, 1.5);
+        let mut tm = Telemetry::new(spec(0.0, 5.0), c.topo().n_links());
+        tm.advance(&c, Secs(10.0));
+        let m = Measured::at(&tm, Secs(10.0));
+        let o = Oracle;
+        for src in [n[0], n[1], n[2], n[3]] {
+            for dst in [n[0], n[1], n[2], n[3]] {
+                for at in [0.0, 2.5, 4.0, 9.0] {
+                    let a = o.try_path_bw_mb_s(&c, src, dst, Secs(at));
+                    let b = m.try_path_bw_mb_s(&c, src, dst, Secs(at));
+                    assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits), "{src:?}->{dst:?}@{at}");
+                    let a = o.try_path_bw_over(&c, src, dst, Secs(at), Secs(3.0));
+                    let b = m.try_path_bw_over(&c, src, dst, Secs(at), Secs(3.0));
+                    assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits), "over {src:?}->{dst:?}");
+                }
+                if src != dst {
+                    let links: Vec<_> = c.path(src, dst).unwrap().to_vec();
+                    let a = o.path_capacity_mb_s(&c, &links);
+                    let b = m.path_capacity_mb_s(&c, &links);
+                    assert_eq!(a.to_bits(), b.to_bits(), "capacity {src:?}->{dst:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_measured_view_diverges_from_oracle() {
+        let (c, n) = ctrl();
+        let mut tm = Telemetry::new(spec(0.4, 1.0), c.topo().n_links());
+        tm.advance(&c, Secs(0.0));
+        let m = Measured::at(&tm, Secs(0.0));
+        let bw_m = m.path_bw_mb_s(&c, n[1], n[0], Secs(0.0));
+        let bw_o = c.path_bw_mb_s(n[1], n[0], Secs(0.0));
+        assert_ne!(bw_m.to_bits(), bw_o.to_bits(), "noise must actually perturb");
+        assert!(bw_m >= 0.0);
+    }
+
+    #[test]
+    fn weighted_max_min_fills_water() {
+        // equal weights, ample capacity: everyone gets their demand
+        assert_eq!(weighted_max_min(100.0, &[10.0, 20.0], &[1.0, 1.0]), vec![10.0, 20.0]);
+        // tight capacity, equal weights: even split
+        let s = weighted_max_min(10.0, &[20.0, 20.0], &[1.0, 1.0]);
+        assert!((s[0] - 5.0).abs() < 1e-9 && (s[1] - 5.0).abs() < 1e-9);
+        // weights tilt the unsaturated split 2:1
+        let s = weighted_max_min(30.0, &[100.0, 100.0], &[2.0, 1.0]);
+        assert!((s[0] - 20.0).abs() < 1e-9 && (s[1] - 10.0).abs() < 1e-9);
+        // a small demand saturates and releases its weight to the rest
+        let s = weighted_max_min(30.0, &[4.0, 100.0, 100.0], &[1.0, 1.0, 1.0]);
+        assert!((s[0] - 4.0).abs() < 1e-9);
+        assert!((s[1] - 13.0).abs() < 1e-9 && (s[2] - 13.0).abs() < 1e-9);
+        // zero weight or demand gets nothing; conservation holds
+        let s = weighted_max_min(10.0, &[5.0, 0.0, 8.0], &[1.0, 1.0, 0.0]);
+        assert_eq!(s[1], 0.0);
+        assert_eq!(s[2], 0.0);
+        assert!((s[0] - 5.0).abs() < 1e-9);
+        assert!(s.iter().sum::<f64>() <= 10.0 + 1e-9);
+    }
+}

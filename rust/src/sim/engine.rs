@@ -468,6 +468,36 @@ impl Engine {
         false
     }
 
+    /// Is this task still waiting in `node`'s pending queue? (Running
+    /// attempts and in-flight pulls are *not* queued.)
+    pub fn queued(&self, node: NodeId, task: TaskId) -> bool {
+        self.queues[node.0]
+            .iter()
+            .any(|&pidx| self.placements[pidx as usize].task == task)
+    }
+
+    /// Reallocation: rewrite the reserved transfer of a placement still
+    /// *queued* on `node` so a renegotiated grant replaces the old one
+    /// before the engine prices the pull. Running or mid-transfer
+    /// attempts are never retimed — their grant has already converted to
+    /// wall time. Returns whether a queued reserved placement was found.
+    pub fn retime_transfer(&mut self, node: NodeId, task: TaskId, t: Transfer) -> bool {
+        let Some(pos) = self.queues[node.0]
+            .iter()
+            .position(|&pidx| self.placements[pidx as usize].task == task)
+        else {
+            return false;
+        };
+        let pidx = self.queues[node.0][pos] as usize;
+        match &mut self.placements[pidx].transfer {
+            TransferPlan::Reserved(old) | TransferPlan::Prefetched(old) => {
+                *old = t;
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Mitigation: evict a node's work without crashing it — the running
     /// attempt is voided, an in-flight pull cancelled, the queue drained,
     /// and everything lands in the orphan list for the next rescheduling

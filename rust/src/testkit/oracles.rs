@@ -28,7 +28,9 @@
 use std::collections::HashMap;
 
 use crate::mapreduce::{TaskId, TaskSpec};
-use crate::scenario::{DuelAudit, DynamicsOutcome, PullAudit, ReservationAudit, StreamOutcome};
+use crate::scenario::{
+    DuelAudit, DynamicsOutcome, PullAudit, ReallocAudit, ReservationAudit, StreamOutcome,
+};
 use crate::sim::TaskRecord;
 use crate::topology::NodeId;
 use crate::util::Secs;
@@ -204,6 +206,62 @@ pub fn no_leaked_speculation_grants(duels: &[DuelAudit]) -> Result<(), String> {
     Ok(())
 }
 
+/// Oracle 11: the closed loop's grant accounting is coherent — for every
+/// task the reallocator touched, the audited old→new rows form an
+/// unbroken chain in time order (row k's `old` is row k-1's `new`:
+/// nothing renegotiated a grant the controller no longer held), and the
+/// chain's final reservation is present in the reservation audit log
+/// (the live grant is audited; the stale rows it replaced were
+/// withdrawn). Double-commit leaks surface through oracle 3: a stale row
+/// left in the log stacks with its replacement and blows the per-slot
+/// capacity sweep.
+pub fn reallocation_preserves_grant_accounting(
+    reallocs: &[ReallocAudit],
+    reservations: &[ReservationAudit],
+) -> Result<(), String> {
+    let mut chains: HashMap<TaskId, Vec<&ReallocAudit>> = HashMap::new();
+    for r in reallocs {
+        chains.entry(r.task).or_default().push(r); // log order = time order
+    }
+    for (task, chain) in &chains {
+        for w in chain.windows(2) {
+            if w[1].at < w[0].at {
+                return Err(format!("task {task:?}: realloc audit rows out of time order"));
+            }
+            if w[1].old != w[0].new {
+                return Err(format!(
+                    "task {task:?}: realloc at {} renegotiated {:?}, but the previous \
+                     reallocation left the grant at {:?}",
+                    w[1].at, w[1].old, w[0].new
+                ));
+            }
+        }
+        let last = chain.last().expect("grouped chains are non-empty");
+        if last.old == last.new {
+            // a recorded row must witness drift in the reserved window
+            // (rate-only renegotiations keep the window; they are legal
+            // but the window pair then differs in neither field)
+            continue;
+        }
+        if last.new.n_slots > 0
+            && !reservations.iter().any(|a| {
+                a.round == last.round
+                    && a.links == last.new.links
+                    && a.start_slot == last.new.start_slot
+                    && a.n_slots == last.new.n_slots
+                    && a.frac == last.new.frac
+            })
+        {
+            return Err(format!(
+                "task {task:?}: the live reallocated grant {:?} (round {}) is missing \
+                 from the reservation audit log",
+                last.new, last.round
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Oracle 6: per node, no two records' occupancy windows (pick-up to
 /// finish) overlap — the node FIFO must serialize tasks across jobs.
 pub fn no_slot_double_booking(records: &[TaskRecord]) -> Result<(), String> {
@@ -312,7 +370,7 @@ pub fn check_stream(
     stream_makespan_lower_bound(&jobs, outcome.last_finish, authorized, node_speed)
 }
 
-/// All dynamic-run oracles (1-4 plus 9) over one outcome.
+/// All dynamic-run oracles (1-4 plus 9-11) over one outcome.
 pub fn check_dynamics(
     outcome: &DynamicsOutcome,
     tasks: &[TaskSpec],
@@ -324,6 +382,7 @@ pub fn check_dynamics(
     reservations_within_capacity(&outcome.reservations)?;
     pulls_from_live_sources(&outcome.pulls, &outcome.down_intervals)?;
     no_leaked_speculation_grants(&outcome.duels)?;
+    reallocation_preserves_grant_accounting(&outcome.reallocs, &outcome.reservations)?;
     makespan_lower_bounds(&outcome.records, tasks, authorized, node_speed)
 }
 
@@ -453,6 +512,52 @@ mod tests {
         // unreserved attempts can't leak
         assert!(no_leaked_speculation_grants(&[duel(None, false, false, false, false)])
             .is_ok());
+    }
+
+    #[test]
+    fn realloc_chains_must_be_unbroken_and_end_in_the_audit_log() {
+        use crate::sdn::Reservation;
+        let resv = |start: usize, frac: f64| Reservation {
+            links: vec![LinkId(0), LinkId(1)],
+            start_slot: start,
+            n_slots: 4,
+            frac,
+        };
+        let row = |at: f64, old: Reservation, new: Reservation| ReallocAudit {
+            round: 1,
+            task: TaskId(7),
+            at: Secs(at),
+            old,
+            new,
+            class_share_mb_s: 5.0,
+        };
+        let audit_of = |r: &Reservation| ReservationAudit {
+            round: 1,
+            links: r.links.clone(),
+            start_slot: r.start_slot,
+            n_slots: r.n_slots,
+            frac: r.frac,
+            usable: vec![1.0, 1.0],
+        };
+        // a two-hop chain whose final window is audited: fine
+        let chain =
+            vec![row(5.0, resv(10, 0.5), resv(14, 0.5)), row(9.0, resv(14, 0.5), resv(12, 0.4))];
+        let log = vec![audit_of(&resv(12, 0.4))];
+        assert!(reallocation_preserves_grant_accounting(&chain, &log).is_ok());
+        // broken chain: the second row renegotiates a window the
+        // controller never held after the first
+        let broken =
+            vec![row(5.0, resv(10, 0.5), resv(14, 0.5)), row(9.0, resv(11, 0.5), resv(12, 0.4))];
+        assert!(reallocation_preserves_grant_accounting(&broken, &log).is_err());
+        // out of time order: flagged
+        let unordered =
+            vec![row(9.0, resv(10, 0.5), resv(14, 0.5)), row(5.0, resv(14, 0.5), resv(12, 0.4))];
+        assert!(reallocation_preserves_grant_accounting(&unordered, &log).is_err());
+        // the live grant vanished from the reservation log: flagged
+        let stale_log = vec![audit_of(&resv(14, 0.5))];
+        assert!(reallocation_preserves_grant_accounting(&chain, &stale_log).is_err());
+        // no reallocations: trivially coherent
+        assert!(reallocation_preserves_grant_accounting(&[], &[]).is_ok());
     }
 
     #[test]

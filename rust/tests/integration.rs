@@ -56,6 +56,7 @@ fn full_job_through_public_api() {
     let mut ledger = Ledger::new(nodes.len());
     let assignment = {
         let mut ctx = SchedCtx {
+            view: &bass::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -156,6 +157,7 @@ fn bass_reads_from_the_better_connected_replica() {
         ]);
         let assignment = {
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -203,6 +205,7 @@ fn locality_starvation_cluster_subset() {
     let cost = CostModel::rust_only();
     let mut ledger = Ledger::new(nodes.len());
     let mut ctx = SchedCtx {
+        view: &bass::sdn::Oracle,
         controller: &mut ctrl,
         namenode: &nn,
         ledger: &mut ledger,

@@ -71,6 +71,7 @@ fn prop_schedulers_place_each_task_once_and_validly() {
             let cost = CostModel::rust_only();
             let mut ledger = Ledger::new(nodes.len());
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -125,6 +126,7 @@ fn prop_bass_estimate_matches_execution() {
         let mut ledger = Ledger::new(nodes.len());
         let a = {
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -307,6 +309,7 @@ fn prop_engine_records_consistent() {
         let mut ledger = Ledger::new(nodes.len());
         let a = {
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -356,6 +359,7 @@ fn prop_prefetch_never_later() {
             let cost = CostModel::rust_only();
             let mut ledger = Ledger::new(nodes.len());
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -802,6 +806,7 @@ fn prop_uniform_speed_scaling() {
             let cost = CostModel::rust_only();
             let mut ledger = Ledger::new(nodes.len());
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -1916,6 +1921,7 @@ fn prop_hds_matches_reference() {
             let cost = CostModel::rust_only();
             let mut ledger = Ledger::new(nodes.len());
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -1955,6 +1961,7 @@ fn prop_bass_matches_reference() {
             let cost = CostModel::rust_only();
             let mut ledger = Ledger::new(nodes.len());
             let mut ctx = SchedCtx {
+                view: &bass::sdn::Oracle,
                 controller: &mut ctrl,
                 namenode: &nn,
                 ledger: &mut ledger,
@@ -2012,6 +2019,7 @@ fn prop_single_replica_source_rules_coincide() {
                 let cost = CostModel::rust_only();
                 let mut ledger = Ledger::new(nodes.len());
                 let mut ctx = SchedCtx {
+                    view: &bass::sdn::Oracle,
                     controller: &mut ctrl,
                     namenode: &nn,
                     ledger: &mut ledger,
@@ -2052,6 +2060,7 @@ fn prop_bw_rows_are_elementwise_best() {
         let cost = CostModel::rust_only();
         let mut ledger = Ledger::new(nodes.len());
         let ctx = SchedCtx {
+            view: &bass::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -2579,6 +2588,7 @@ fn prop_sharded_state_matches_flat_all_schedulers() {
                 let model = CostModel::rust_only();
                 let mut ledger = Ledger::new(nodes.len());
                 let mut ctx = SchedCtx {
+                    view: &bass::sdn::Oracle,
                     controller: &mut ctrl,
                     namenode: &nn,
                     ledger: &mut ledger,
@@ -2628,6 +2638,7 @@ fn prop_batched_cost_kernel_matches_rowwise() {
             ledger.occupy_until(nd, Secs((i % 5) as f64 * 3.0));
         }
         let ctx = SchedCtx {
+            view: &bass::sdn::Oracle,
             controller: &mut ctrl,
             namenode: &nn,
             ledger: &mut ledger,
@@ -2723,6 +2734,106 @@ fn prop_two_tier_pathcache_matches_flat_table() {
                         ));
                     }
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The `BandwidthView` seam must be invisible when the information is
+/// perfect: a zero-noise telemetry snapshot probed at `now` on the same
+/// controller state yields bit-identical schedules to the clairvoyant
+/// `Oracle` view for all three schedulers — even on a degraded cluster
+/// (random link health + background traffic), where estimates actually
+/// matter. Any drift here means `Measured` re-derives free bandwidth
+/// with different arithmetic than `Controller::link_free_over`.
+#[test]
+fn prop_fresh_exact_measured_view_matches_oracle_bitwise() {
+    use bass::sdn::{Measured, Oracle, Telemetry, TelemetrySpec};
+    forall(0x73E, 40, gen_scenario, |s| {
+        // Deterministic environment perturbation, applied identically to
+        // both controllers so the only difference is the view.
+        let perturb = |ctrl: &mut Controller, seed: u64| {
+            let mut rng = XorShift::new(seed ^ 0xB40D);
+            for l in 0..ctrl.topo().n_links() {
+                if rng.below(3) == 0 {
+                    ctrl.set_link_health(LinkId(l), rng.uniform(0.3, 1.0));
+                }
+                if rng.below(4) == 0 {
+                    ctrl.set_background_mb_s(LinkId(l), rng.uniform(0.0, 3.0));
+                }
+            }
+        };
+        let kinds: [&str; 3] = ["hds", "bar", "bass"];
+        for kind in kinds {
+            let mk = || -> Box<dyn Scheduler> {
+                match kind {
+                    "hds" => Box::new(Hds::new()),
+                    "bar" => Box::new(Bar::new()),
+                    _ => Box::new(Bass::new()),
+                }
+            };
+
+            // Clairvoyant run.
+            let (mut ctrl, nn, nodes, tasks, _) = build(s);
+            perturb(&mut ctrl, s.seed);
+            let cost = CostModel::rust_only();
+            let mut ledger = Ledger::new(nodes.len());
+            let mut ctx = SchedCtx {
+                view: &Oracle,
+                controller: &mut ctrl,
+                namenode: &nn,
+                ledger: &mut ledger,
+                authorized: nodes.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
+            };
+            let mut s1 = mk();
+            let oracle = s1.schedule(&tasks, None, &mut ctx);
+
+            // Measured run: fresh build, same perturbation, one exact
+            // probe of every link at `now` (noise 0, alpha 1 adopts the
+            // sample verbatim).
+            let (mut ctrl2, nn2, nodes2, tasks2, _) = build(s);
+            perturb(&mut ctrl2, s.seed);
+            let mut tm = Telemetry::new(
+                TelemetrySpec {
+                    probe_period: 0.0,
+                    noise: 0.0,
+                    alpha: 1.0,
+                    ..TelemetrySpec::measured()
+                },
+                ctrl2.topo().n_links(),
+            );
+            tm.advance(&ctrl2, Secs::ZERO);
+            let measured_view = Measured::at(&tm, Secs::ZERO);
+            let mut ledger2 = Ledger::new(nodes2.len());
+            let mut ctx2 = SchedCtx {
+                view: &measured_view,
+                controller: &mut ctrl2,
+                namenode: &nn2,
+                ledger: &mut ledger2,
+                authorized: nodes2.clone(),
+                now: Secs::ZERO,
+                cost: &cost,
+                node_speed: Vec::new(),
+                down: Vec::new(),
+                bw_aware_sources: true,
+            };
+            let mut s2 = mk();
+            let measured = s2.schedule(&tasks2, None, &mut ctx2);
+
+            // f64's Debug repr is round-trip exact, so string equality
+            // here is bit equality of every window, rate and gate.
+            let a = format!("{:?}", oracle.placements);
+            let b = format!("{:?}", measured.placements);
+            if a != b {
+                return Err(format!(
+                    "{kind}: measured schedule diverged from oracle\n oracle: {a}\n measured: {b}"
+                ));
             }
         }
         Ok(())
