@@ -1,12 +1,13 @@
 //! Hand-rolled CLI (clap is not vendored offline). Subcommands map 1:1 to
 //! the experiment drivers; `bass --help` documents them.
 
-use crate::config::{ExperimentConfig, RunConfig, ScenarioSweep, StreamRun};
+use crate::config::{ExperimentConfig, FairnessRun, RunConfig, ScenarioSweep, StreamRun};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
-    run_estimate, run_example1, run_example3, run_fig5, run_scale, run_scale_fat_with,
-    run_skew, run_stream_sweep_with, run_table1, SchedulerKind, StreamPoint, Table1Config,
+    run_estimate, run_example1, run_example3, run_fairness_sweep, run_fairness_sweep_with,
+    run_fig5, run_scale, run_scale_fat_with, run_skew, run_stream_sweep_with, run_table1,
+    FairnessPoint, SchedulerKind, StreamPoint, Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
@@ -49,6 +50,14 @@ COMMANDS:
          [--jobs N]     Poisson arrival stream at each mean gap g seconds
                         (default 120,30,10); overlapping jobs share slots,
                         the SDN calendar and the flow network
+  fairness [--weights w] Multi-tenant stream sweep: the arrival stream is
+         [--rates g]    split round-robin between a guaranteed \"prod\"
+         [--jobs N]     tenant (DRF weight w, default 1,2,4) and a spot
+                        \"batch\" tenant (weight 1); admission is dominant-
+                        resource fair over (slots, reserved bandwidth)
+                        instead of FIFO; reports per-tenant slowdowns,
+                        SLO attainment, Jain index, rejections and
+                        preemptions
   skew [--reps r1,r2]   Replication/skew sweep: HDS/BAR/BASS (and BASS under
                         the legacy idle-only source rule) across placement
                         policies (random, rack_aware, hotspot) at each
@@ -89,6 +98,11 @@ DEFINE YOUR OWN SCENARIO:
                reallocate = true|false — schedule from probed EWMA
                bandwidth estimates instead of the clairvoyant oracle;
                no [telemetry] table = bit-identical clairvoyant runs
+    [tenants]  names = \"prod, batch\" declares the tenants, then one
+               [tenants.<name>] table each with weight, slot_quota,
+               bw_quota, class = \"guaranteed\"|\"spot\", deadline_secs;
+               carried on the spec for stream drivers — no [tenants]
+               table = the FIFO stream path, bit-identical to before
   Every (size, scheduler) cell is a hermetic SimSession: same seed =>
   same block layout and background, so all deltas are scheduling. With a
   [dynamics] table the sweep runs each cell's map wave through the churn
@@ -102,6 +116,13 @@ DEFINE YOUR OWN STREAM:
     max_active (admission cap), min_free_slots (slot gate), seed
   Every scheduler at one rate faces the identical Poisson arrival trace;
   per-job slowdown is measured against the same job run alone.
+
+DEFINE YOUR OWN FAIRNESS SWEEP:
+  `bass run --config my.toml` with `run = \"fairness\"` plays the
+  multi-tenant stream sweep; the optional [fairness] table sets
+    weights = [prod DRF weights], rates = [mean gaps], jobs, threads
+  and an optional [tenants] table (see above) replaces the built-in
+  prod/batch pair entirely (then weights must be omitted).
 
 DEFINE YOUR OWN SCALE SWEEP:
   `bass run --config my.toml` with `run = \"scale\"` plays the
@@ -458,6 +479,70 @@ pub fn run(args: Vec<String>) -> i32 {
             ));
             0
         }
+        "fairness" => {
+            let mut run = FairnessRun::default();
+            // same contract as --reps/--rates: a typo'd axis must error,
+            // not silently run a different sweep
+            let axis = |key: &str| -> Result<Option<Vec<f64>>, String> {
+                match opt(&args, key) {
+                    None => Ok(None),
+                    Some(raw) => {
+                        let wanted = raw.split(',').filter(|s| !s.trim().is_empty()).count();
+                        let v = parse_sizes(raw.clone());
+                        if v.is_empty() || v.len() != wanted || v.iter().any(|&x| x <= 0.0) {
+                            return Err(raw);
+                        }
+                        Ok(Some(v))
+                    }
+                }
+            };
+            match axis("--weights") {
+                Ok(Some(v)) => run.weights = v,
+                Ok(None) => {}
+                Err(raw) => {
+                    eprintln!(
+                        "--weights must be a comma list of positive DRF weights, got {raw:?}"
+                    );
+                    return 2;
+                }
+            }
+            match axis("--rates") {
+                Ok(Some(v)) => run.rates = v,
+                Ok(None) => {}
+                Err(raw) => {
+                    eprintln!(
+                        "--rates must be a comma list of positive mean gaps (seconds), \
+                         got {raw:?}"
+                    );
+                    return 2;
+                }
+            }
+            if let Some(raw) = opt(&args, "--jobs") {
+                match raw.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => run.jobs = n,
+                    _ => {
+                        eprintln!("--jobs must be a positive job count, got {raw:?}");
+                        return 2;
+                    }
+                }
+            }
+            let threads = opt_threads(&args);
+            println!(
+                "== multi-tenant fairness sweep ({} weights x {} rates x 3 schedulers, \
+                 {} jobs, {threads} threads) ==",
+                run.weights.len(),
+                run.rates.len(),
+                run.jobs
+            );
+            print_fairness_points(&run_fairness_sweep(
+                &run.weights,
+                &run.rates,
+                run.jobs,
+                &CostModel::rust_only(),
+                threads,
+            ));
+            0
+        }
         "scenario" => {
             let Some(path) = opt(&args, "--config") else {
                 eprintln!("scenario requires --config <file>\n\n{HELP}");
@@ -527,6 +612,29 @@ pub fn run(args: Vec<String>) -> i32 {
                         if s.hosts.is_empty() { None } else { Some(s.hosts.clone()) };
                     println!("(scale sweep from {path})");
                     run_scale_cmd(s.fat, hosts, s.shards, threads)
+                }
+                RunConfig::Fairness => {
+                    let f = cfg.fairness.expect("fairness run carries its sweep");
+                    let threads = opt(&args, "--threads")
+                        .and_then(|x| x.parse().ok())
+                        .map(|t: usize| t.max(1))
+                        .unwrap_or(f.threads);
+                    println!(
+                        "== multi-tenant fairness sweep from {path} ({} rates, {} jobs, \
+                         {threads} threads) ==",
+                        f.rates.len(),
+                        f.jobs
+                    );
+                    let pts = match &f.tenants {
+                        Some(tn) => {
+                            run_fairness_sweep_with(tn, &f.rates, f.jobs, &cost, threads)
+                        }
+                        None => {
+                            run_fairness_sweep(&f.weights, &f.rates, f.jobs, &cost, threads)
+                        }
+                    };
+                    print_fairness_points(&pts);
+                    0
                 }
             }
         }
@@ -677,6 +785,33 @@ fn print_stream_points(pts: &[StreamPoint]) {
             p.makespan,
             p.queued
         );
+    }
+}
+
+fn print_fairness_points(pts: &[FairnessPoint]) {
+    println!(
+        "{:<8} {:<5} {:<8} {:>7} {:>6} {:>4} {:>9} {:>9} {:>6} {:>8} {:>6}",
+        "gap(s)", "sched", "tenant", "weight", "jobs", "rej", "meanSlow", "p95Slow", "SLO",
+        "preempt", "jain"
+    );
+    for p in pts {
+        for t in &p.tenants {
+            println!(
+                "{:<8.1} {:<5} {:<8} {:>7.1} {:>6} {:>4} {:>8.2}x {:>8.2}x {:>5.0}% \
+                 {:>8} {:>6.3}",
+                p.mean_interarrival_secs,
+                p.scheduler,
+                t.tenant,
+                t.weight,
+                t.jobs,
+                t.rejected,
+                t.mean_slowdown,
+                t.p95_slowdown,
+                t.slo_attainment * 100.0,
+                p.preemptions,
+                p.fairness_jain
+            );
+        }
     }
 }
 
@@ -923,6 +1058,70 @@ mod tests {
         let bad = dir.join("bad.toml");
         std::fs::write(&bad, "run = \"stream\"\n[stream]\nrate = [50]\n").unwrap();
         assert_eq!(run(vec!["run".into(), "--config".into(), bad.display().to_string()]), 2);
+    }
+
+    #[test]
+    fn fairness_subcommand_runs() {
+        let args: Vec<String> =
+            ["fairness", "--weights", "2", "--rates", "40", "--jobs", "2", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(args), 0);
+    }
+
+    #[test]
+    fn fairness_subcommand_rejects_bad_flags() {
+        // same strictness as --reps/--rates: no silent default sweep
+        for bad in [
+            vec!["fairness", "--weights", "0"],
+            vec!["fairness", "--weights", "-2"],
+            vec!["fairness", "--weights", "abc"],
+            vec!["fairness", "--weights", "2,oops"],
+            vec!["fairness", "--rates", "0"],
+            vec!["fairness", "--rates", "-5"],
+            vec!["fairness", "--rates", "abc"],
+            vec!["fairness", "--jobs", "0"],
+            vec!["fairness", "--jobs", "abc"],
+        ] {
+            let args: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            assert_eq!(run(args), 2, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn fairness_config_route_runs_and_rejects_typos() {
+        let dir = std::env::temp_dir().join("bass_cli_fairness_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("fair.toml");
+        std::fs::write(
+            &f,
+            "run = \"fairness\"\nthreads = 2\n\
+             [fairness]\nweights = [2]\nrates = [40]\njobs = 2\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+        // the [tenants] route replaces the built-in prod/batch pair
+        let tn = dir.join("tenants.toml");
+        std::fs::write(
+            &tn,
+            "run = \"fairness\"\n[fairness]\nrates = [40]\njobs = 2\n\
+             [tenants]\nnames = \"gold, silver\"\n[tenants.gold]\nweight = 3\n\
+             class = \"guaranteed\"\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), tn.display().to_string()]), 0);
+        // a typo'd [fairness] or [tenants] key is rejected, not defaulted
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "run = \"fairness\"\n[fairness]\nweight = [2]\n").unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), bad.display().to_string()]), 2);
+        let bad2 = dir.join("bad2.toml");
+        std::fs::write(
+            &bad2,
+            "run = \"fairness\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nwieght = 2\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), bad2.display().to_string()]), 2);
     }
 
     #[test]

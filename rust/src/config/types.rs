@@ -4,7 +4,8 @@ use crate::experiments::{SchedulerKind, Table1Config};
 use crate::hdfs::PlacementPolicy;
 use crate::scenario::{
     cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec,
-    SpeculationMode, StreamSpec, TopologyShape, WorkloadSpec,
+    SpeculationMode, StreamSpec, TenancySpec, TenantClass, TenantSpec, TopologyShape,
+    WorkloadSpec,
 };
 use crate::sdn::{QosPolicy, TelemetrySpec};
 use crate::workload::JobKind;
@@ -25,6 +26,8 @@ pub enum RunConfig {
     Stream,
     /// The cluster-size scalability sweep (`bass scale`).
     Scale,
+    /// The multi-tenant fairness sweep (`bass fairness`).
+    Fairness,
 }
 
 /// The `[scale]` run: the scalability sweep as a config file — tree or
@@ -63,6 +66,38 @@ pub struct StreamRun {
 impl Default for StreamRun {
     fn default() -> Self {
         Self { spec: StreamSpec::defaults(), rates: vec![120.0, 30.0, 10.0], threads: 1 }
+    }
+}
+
+/// The `[fairness]` run: the multi-tenant stream sweep. Either a
+/// `weights` axis (the built-in two-tenant prod/batch contract, sweeping
+/// the prod weight) or an explicit `[tenants]` table, crossed with a set
+/// of arrival rates for BASS/BAR/HDS.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FairnessRun {
+    /// Prod-tenant DRF weights to sweep (the batch tenant stays at 1).
+    /// Ignored when `tenants` is given — the config layer rejects the
+    /// combination instead of silently dropping one axis.
+    pub weights: Vec<f64>,
+    /// Mean inter-arrival gaps to sweep (seconds).
+    pub rates: Vec<f64>,
+    /// Jobs per stream point.
+    pub jobs: usize,
+    /// Explicit tenancy from a `[tenants]` table (replaces the built-in
+    /// prod/batch pair).
+    pub tenants: Option<TenancySpec>,
+    pub threads: usize,
+}
+
+impl Default for FairnessRun {
+    fn default() -> Self {
+        Self {
+            weights: vec![1.0, 2.0, 4.0],
+            rates: vec![60.0, 15.0],
+            jobs: 8,
+            tenants: None,
+            threads: 1,
+        }
     }
 }
 
@@ -189,6 +224,9 @@ impl ScenarioSweep {
         if t.keys().any(|k| k.starts_with("telemetry.")) {
             base.telemetry = Some(parse_telemetry(t)?);
         }
+        if t.keys().any(|k| k.starts_with("tenants.")) {
+            base.tenants = Some(parse_tenants(t)?);
+        }
         let sizes_mb = t
             .get("sweep.sizes_mb")
             .and_then(|v| v.as_nums())
@@ -221,6 +259,8 @@ pub struct ExperimentConfig {
     pub stream: Option<StreamRun>,
     /// Present when `run = "scale"`.
     pub scale: Option<ScaleRun>,
+    /// Present when `run = "fairness"`.
+    pub fairness: Option<FairnessRun>,
 }
 
 impl ExperimentConfig {
@@ -232,6 +272,7 @@ impl ExperimentConfig {
             scenario: None,
             stream: None,
             scale: None,
+            fairness: None,
         }
     }
 
@@ -271,6 +312,7 @@ impl ExperimentConfig {
             }
             "stream" => RunConfig::Stream,
             "scale" => RunConfig::Scale,
+            "fairness" => RunConfig::Fairness,
             _ => RunConfig::Example1,
         };
         // [scale] mirrors the [hdfs] cross-run contract: the table may
@@ -287,6 +329,39 @@ impl ExperimentConfig {
         } else {
             None
         };
+        // [fairness] mirrors the [scale] cross-run contract
+        let mut fairness = if t.keys().any(|k| k.starts_with("fairness.")) {
+            anyhow::ensure!(
+                run == RunConfig::Fairness,
+                "[fairness] requires run = \"fairness\" ({run:?} would ignore it)"
+            );
+            Some(parse_fairness(&t)?)
+        } else if run == RunConfig::Fairness {
+            // a bare `run = "fairness"` gets the default sweep
+            Some(FairnessRun::default())
+        } else {
+            None
+        };
+        // [tenants] is honored where the tenancy actually reaches a
+        // stream driver: scenario specs carry it, the fairness run sweeps
+        // it; anywhere else it would be validated and silently dropped —
+        // exactly the divergence the strict tables exist to prevent
+        if t.keys().any(|k| k.starts_with("tenants.")) {
+            match run {
+                RunConfig::Scenario => {} // applied by ScenarioSweep::from_table
+                RunConfig::Fairness => {
+                    anyhow::ensure!(
+                        t.get("fairness.weights").is_none(),
+                        "[tenants] replaces the fairness.weights axis; give one or the other"
+                    );
+                    let f = fairness.as_mut().expect("fairness run carries its sweep");
+                    f.tenants = Some(parse_tenants(&t)?);
+                }
+                ref other => anyhow::bail!(
+                    "[tenants] applies to scenario/fairness runs; {other:?} would ignore it"
+                ),
+            }
+        }
         // the [hdfs] table may only appear where its knobs are actually
         // honored: scenario runs take everything, table1 takes the
         // replication factor; anywhere else a key would be validated and
@@ -327,7 +402,12 @@ impl ExperimentConfig {
                 s.threads = v.max(1);
             }
         }
-        Ok(Self { run, table1: cfg, scenario, stream, scale })
+        if let Some(f) = &mut fairness {
+            if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
+                f.threads = v.max(1);
+            }
+        }
+        Ok(Self { run, table1: cfg, scenario, stream, scale, fairness })
     }
 }
 
@@ -772,6 +852,166 @@ fn parse_telemetry(t: &Table) -> anyhow::Result<TelemetrySpec> {
         };
     }
     Ok(s)
+}
+
+/// Parse a `[tenants]` table into a [`TenancySpec`], rejecting unknown
+/// keys and unsafe shapes (mirrors the `[dynamics]` contract: a typo'd
+/// knob must error, not silently admit under a different tenancy than
+/// the user wrote down).
+///
+/// Shape: `names = "prod, batch"` declares the tenant order (admission
+/// tie-breaks and round-robin attribution follow it), then one optional
+/// `[tenants.<name>]` table per declared tenant sets
+/// weight / slot_quota / bw_quota / class / deadline_secs. A bare
+/// `[tenants]` header is the single default tenant — the attribution-only
+/// configuration pinned bit-identical to the FIFO stream path.
+fn parse_tenants(t: &Table) -> anyhow::Result<TenancySpec> {
+    const KNOWN: [&str; 5] = ["weight", "slot_quota", "bw_quota", "class", "deadline_secs"];
+    let names: Vec<String> = match t.get("tenants.names") {
+        None => Vec::new(),
+        Some(v) => match v.as_str() {
+            Some(s) => {
+                let mut out: Vec<String> = Vec::new();
+                for n in s.split(',') {
+                    let n = n.trim();
+                    anyhow::ensure!(!n.is_empty(), "tenants.names holds an empty name");
+                    anyhow::ensure!(
+                        !out.iter().any(|o| o == n),
+                        "duplicate tenant name {n:?} in tenants.names"
+                    );
+                    out.push(n.to_string());
+                }
+                anyhow::ensure!(!out.is_empty(), "tenants.names is empty");
+                out
+            }
+            None => anyhow::bail!(
+                "tenants.names must be a comma-separated string of tenant names"
+            ),
+        },
+    };
+    for k in t.keys().filter(|k| k.starts_with("tenants.")) {
+        if k == "tenants." || k == "tenants.names" {
+            continue;
+        }
+        let rest = &k["tenants.".len()..];
+        let (name, knob) = match rest.split_once('.') {
+            Some(p) => p,
+            // a bare `tenants.foo = ...` key: neither the declaration nor
+            // a per-tenant knob
+            None => anyhow::bail!(
+                "unknown [tenants] key {k:?} (declare tenants with names = \"a, b\" \
+                 and configure them in [tenants.<name>] tables)"
+            ),
+        };
+        anyhow::ensure!(
+            names.iter().any(|n| n == name),
+            "[tenants.{name}] is not declared in tenants.names"
+        );
+        // an empty knob is the `[tenants.<name>]` section marker itself
+        anyhow::ensure!(
+            knob.is_empty() || KNOWN.contains(&knob),
+            "unknown [tenants.{name}] key {knob:?}"
+        );
+    }
+    if names.is_empty() {
+        return Ok(TenancySpec::single_default());
+    }
+    let mut tenants = Vec::with_capacity(names.len());
+    for name in &names {
+        let mut spec = TenantSpec::named(name.clone());
+        if let Some(v) = t.get(&format!("tenants.{name}.weight")) {
+            match v.as_f64() {
+                Some(w) if w > 0.0 => spec.weight = w,
+                _ => anyhow::bail!("tenant '{name}': weight must be a positive number"),
+            }
+        }
+        if let Some(v) = t.get(&format!("tenants.{name}.slot_quota")) {
+            match v.as_usize() {
+                Some(q) if q >= 1 => spec.slot_quota = q,
+                _ => anyhow::bail!("tenant '{name}': slot_quota must be a positive integer"),
+            }
+        }
+        if let Some(v) = t.get(&format!("tenants.{name}.bw_quota")) {
+            match v.as_f64() {
+                Some(q) if q > 0.0 => spec.bw_quota = q,
+                _ => anyhow::bail!("tenant '{name}': bw_quota must be a positive number"),
+            }
+        }
+        if let Some(v) = t.get(&format!("tenants.{name}.class")) {
+            spec.class = match v.as_str() {
+                Some("guaranteed") => TenantClass::Guaranteed,
+                Some("spot") => TenantClass::Spot,
+                _ => anyhow::bail!(
+                    "tenant '{name}': class must be \"guaranteed\" or \"spot\""
+                ),
+            };
+        }
+        if let Some(v) = t.get(&format!("tenants.{name}.deadline_secs")) {
+            match v.as_f64() {
+                Some(d) if d > 0.0 => spec.deadline_secs = Some(d),
+                _ => anyhow::bail!(
+                    "tenant '{name}': deadline_secs must be a positive number"
+                ),
+            }
+        }
+        tenants.push(spec);
+    }
+    let spec = TenancySpec { tenants };
+    if let Err(e) = spec.validate() {
+        anyhow::bail!("[tenants]: {e}");
+    }
+    Ok(spec)
+}
+
+/// Parse a `[fairness]` table onto [`FairnessRun::default`], rejecting
+/// unknown keys and unsafe shapes (mirrors the `[scale]` contract).
+fn parse_fairness(t: &Table) -> anyhow::Result<FairnessRun> {
+    const KNOWN: [&str; 4] =
+        ["fairness.weights", "fairness.rates", "fairness.jobs", "fairness.threads"];
+    for k in t.keys().filter(|k| k.starts_with("fairness.")) {
+        anyhow::ensure!(
+            k == "fairness." || KNOWN.contains(&k.as_str()),
+            "unknown [fairness] key {k:?}"
+        );
+    }
+    let mut f = FairnessRun::default();
+    if let Some(v) = t.get("fairness.weights") {
+        let weights = match v.as_nums() {
+            Some(w) => w.to_vec(),
+            None => anyhow::bail!("[fairness] fairness.weights must be a number list"),
+        };
+        anyhow::ensure!(!weights.is_empty(), "fairness.weights is empty");
+        anyhow::ensure!(
+            weights.iter().all(|&w| w > 0.0),
+            "fairness.weights entries are DRF weights: must be positive"
+        );
+        f.weights = weights;
+    }
+    if let Some(v) = t.get("fairness.rates") {
+        let rates = match v.as_nums() {
+            Some(r) => r.to_vec(),
+            None => anyhow::bail!("[fairness] fairness.rates must be a number list"),
+        };
+        anyhow::ensure!(!rates.is_empty(), "fairness.rates is empty");
+        anyhow::ensure!(
+            rates.iter().all(|&r| r > 0.0),
+            "fairness.rates entries are mean inter-arrival gaps: must be positive"
+        );
+        f.rates = rates;
+    }
+    if let Some(v) = t.get("fairness.jobs") {
+        match v.as_usize() {
+            Some(n) if n >= 1 => f.jobs = n,
+            _ => anyhow::bail!("fairness.jobs must be a positive integer"),
+        }
+    }
+    if let Some(v) = t.get("fairness.threads") {
+        match v.as_usize() {
+            Some(n) if n >= 1 => f.threads = n,
+            _ => anyhow::bail!("fairness.threads must be a positive integer"),
+        }
+    }
+    Ok(f)
 }
 
 fn apply_table1(cfg: &mut Table1Config, t: &Table) {
@@ -1313,6 +1553,157 @@ seed = 42
         let sweep = c.scenario.unwrap();
         assert!(matches!(sweep.base.placement, PlacementPolicy::RoundRobin));
         assert!(sweep.base.qos.is_some());
+    }
+
+    #[test]
+    fn tenants_table_parses_onto_the_scenario() {
+        let c = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[tenants]\nnames = \"prod, batch\"\n\
+             [tenants.prod]\nweight = 2\nclass = \"guaranteed\"\ndeadline_secs = 90\n\
+             [tenants.batch]\nslot_quota = 6\nbw_quota = 40\nclass = \"spot\"\n",
+        )
+        .unwrap();
+        let tn = c.scenario.unwrap().base.tenants.expect("tenancy parsed");
+        assert_eq!(tn.tenants.len(), 2);
+        let prod = &tn.tenants[0];
+        assert_eq!(prod.name, "prod");
+        assert_eq!(prod.weight, 2.0);
+        assert_eq!(prod.class, TenantClass::Guaranteed);
+        assert_eq!(prod.deadline_secs, Some(90.0));
+        assert_eq!(prod.slot_quota, usize::MAX);
+        let batch = &tn.tenants[1];
+        assert_eq!(batch.name, "batch");
+        assert_eq!(batch.weight, 1.0);
+        assert_eq!(batch.slot_quota, 6);
+        assert_eq!(batch.bw_quota, 40.0);
+        assert_eq!(batch.class, TenantClass::Spot);
+        assert_eq!(batch.deadline_secs, None);
+    }
+
+    #[test]
+    fn bare_tenants_table_is_the_single_default_tenant() {
+        // a `[tenants]` header with no declarations opts into the
+        // tenancy route in its attribution-only shape (the FIFO pin)
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n[tenants]\n").unwrap();
+        assert_eq!(
+            c.scenario.unwrap().base.tenants,
+            Some(TenancySpec::single_default())
+        );
+        // and no table at all leaves the field empty
+        let c = ExperimentConfig::from_str("run = \"scenario\"\n").unwrap();
+        assert!(c.scenario.unwrap().base.tenants.is_none());
+    }
+
+    #[test]
+    fn tenants_rejects_unknown_keys_and_undeclared_tenants() {
+        // a typo must not silently admit under a different tenancy
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nwieght = 2\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("wieght"));
+        // a configured-but-undeclared tenant is a typo, not a new tenant
+        let r = ExperimentConfig::from_str(
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.b]\nweight = 2\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("not declared"));
+        // a bare key under [tenants] that is not the declaration
+        let r = ExperimentConfig::from_str("run = \"scenario\"\n[tenants]\nname = \"a\"\n");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tenants_rejects_mistyped_and_unsafe_values() {
+        for bad in [
+            // malformed declarations
+            "run = \"scenario\"\n[tenants]\nnames = 3\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"\"\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a,,b\"\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a, a\"\n", // duplicate
+            // non-positive / mistyped knobs
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nweight = 0\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nweight = -2\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nweight = \"2\"\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nslot_quota = 0\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nslot_quota = 2.5\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nbw_quota = 0\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nclass = \"premium\"\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\nclass = 1\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\ndeadline_secs = 0\n",
+            "run = \"scenario\"\n[tenants]\nnames = \"a\"\n[tenants.a]\ndeadline_secs = -5\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn tenants_table_is_rejected_on_runs_that_ignore_it() {
+        // same contract as [hdfs]: validated-then-dropped is exactly the
+        // divergence the strict tables exist to prevent
+        for bad in [
+            "run = \"stream\"\n[tenants]\nnames = \"a\"\n",
+            "run = \"example1\"\n[tenants]\n",
+            "run = \"table1\"\n[tenants]\nnames = \"a\"\n",
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fairness_run_parses_and_defaults() {
+        let c = ExperimentConfig::from_str(
+            "run = \"fairness\"\n[fairness]\nweights = [1, 3]\nrates = [40]\n\
+             jobs = 6\nthreads = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.run, RunConfig::Fairness);
+        let f = c.fairness.expect("fairness parsed");
+        assert_eq!(f.weights, vec![1.0, 3.0]);
+        assert_eq!(f.rates, vec![40.0]);
+        assert_eq!(f.jobs, 6);
+        assert_eq!(f.threads, 2);
+        assert!(f.tenants.is_none());
+        // a bare `run = "fairness"` gets the default sweep
+        let d = ExperimentConfig::from_str("run = \"fairness\"\n").unwrap();
+        assert_eq!(d.fairness, Some(FairnessRun::default()));
+    }
+
+    #[test]
+    fn fairness_run_takes_an_explicit_tenancy() {
+        let c = ExperimentConfig::from_str(
+            "run = \"fairness\"\n[fairness]\nrates = [40]\njobs = 4\n\
+             [tenants]\nnames = \"gold, silver\"\n[tenants.gold]\nweight = 3\n",
+        )
+        .unwrap();
+        let f = c.fairness.unwrap();
+        let tn = f.tenants.expect("explicit tenancy");
+        assert_eq!(tn.tenants[0].name, "gold");
+        assert_eq!(tn.tenants[0].weight, 3.0);
+        // weights axis and explicit tenancy together are ambiguous
+        let r = ExperimentConfig::from_str(
+            "run = \"fairness\"\n[fairness]\nweights = [1, 2]\n\
+             [tenants]\nnames = \"a, b\"\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("weights"));
+    }
+
+    #[test]
+    fn fairness_rejects_unknown_keys_unsafe_shapes_and_cross_run_use() {
+        let r = ExperimentConfig::from_str("run = \"fairness\"\n[fairness]\nweight = [2]\n");
+        assert!(r.unwrap_err().to_string().contains("weight"));
+        for bad in [
+            "run = \"fairness\"\n[fairness]\nweights = []\n",
+            "run = \"fairness\"\n[fairness]\nweights = [0]\n",
+            "run = \"fairness\"\n[fairness]\nweights = [-1]\n",
+            "run = \"fairness\"\n[fairness]\nweights = 2\n",
+            "run = \"fairness\"\n[fairness]\nrates = []\n",
+            "run = \"fairness\"\n[fairness]\nrates = [0]\n",
+            "run = \"fairness\"\n[fairness]\njobs = 0\n",
+            "run = \"fairness\"\n[fairness]\njobs = 2.5\n",
+            "run = \"fairness\"\n[fairness]\nthreads = 0\n",
+            "run = \"table1\"\n[fairness]\njobs = 4\n", // cross-run
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

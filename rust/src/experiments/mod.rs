@@ -10,6 +10,7 @@ pub mod dynamics;
 pub mod estimate;
 pub mod example1;
 pub mod example3;
+pub mod fairness;
 pub mod fig5;
 pub mod fixtures;
 pub mod scale;
@@ -25,6 +26,9 @@ pub use dynamics::{churn_spec, run_dynamics, ChurnPoint};
 pub use estimate::{estimate_spec, run_estimate, EstimatePoint};
 pub use example1::{run_example1, run_one, Example1Outcome};
 pub use example3::{example3_spec, run_example3, Example3Outcome};
+pub use fairness::{
+    fairness_tenancy, run_fairness_sweep, run_fairness_sweep_with, FairnessPoint,
+};
 pub use fig5::run_fig5;
 pub use fixtures::{example1_fixture, makespan, Example1Fixture, SchedulerKind};
 pub use scale::{

@@ -175,6 +175,7 @@ mod tests {
                         kind: JobKind::Wordcount,
                         data_mb: 150.0,
                     },
+                    tenant: None,
                 })
                 .collect();
             let out = run_stream(&mut sess, subs, AdmissionPolicy::default(), &cost);

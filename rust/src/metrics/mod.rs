@@ -6,5 +6,5 @@ pub mod stream;
 pub mod timeline;
 
 pub use job::JobMetrics;
-pub use stream::{percentile, StreamStats};
+pub use stream::{jain_index, percentile, StreamStats, TenantStats};
 pub use timeline::{NodeTimeline, TimelineEntry};

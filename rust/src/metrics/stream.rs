@@ -53,6 +53,76 @@ impl StreamStats {
     }
 }
 
+/// Jain's fairness index over a sample of per-tenant allocations (or
+/// mean slowdowns): `(sum x)^2 / (n * sum x^2)`, in `(0, 1]` with 1 =
+/// perfectly even. Degenerate samples (empty, single, or all-zero) are
+/// reported as perfectly fair.
+pub fn jain_index(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 1.0;
+    }
+    let sum: f64 = values.iter().sum();
+    let sq: f64 = values.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (values.len() as f64 * sq)
+}
+
+/// Per-tenant aggregates over one multi-tenant stream run: the
+/// "millions of users" story is many tenants, so slowdown tails and SLO
+/// attainment are reported per tenant, not only stream-wide.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub weight: f64,
+    /// Jobs the tenant submitted (completed + rejected).
+    pub jobs: usize,
+    /// Jobs rejected at admission (infeasible deadline or impossible
+    /// quota).
+    pub rejected: usize,
+    /// Mean slowdown over the tenant's *completed* jobs (1.0 if none).
+    pub mean_slowdown: f64,
+    /// Nearest-rank p95 slowdown over completed jobs (1.0 if none).
+    pub p95_slowdown: f64,
+    /// Fraction of deadline-carrying jobs that met their deadline
+    /// (rejected jobs count as missed); 1.0 when the tenant has no
+    /// deadline.
+    pub slo_attainment: f64,
+}
+
+impl TenantStats {
+    /// `slowdowns` covers completed jobs only; `slo_met`/`slo_total`
+    /// count deadline-carrying jobs (total includes rejected ones).
+    pub fn from_jobs(
+        tenant: impl Into<String>,
+        weight: f64,
+        slowdowns: &[f64],
+        rejected: usize,
+        slo_met: usize,
+        slo_total: usize,
+    ) -> Self {
+        let n = slowdowns.len();
+        Self {
+            tenant: tenant.into(),
+            weight,
+            jobs: n + rejected,
+            rejected,
+            mean_slowdown: if n == 0 {
+                1.0
+            } else {
+                slowdowns.iter().sum::<f64>() / n as f64
+            },
+            p95_slowdown: if n == 0 { 1.0 } else { percentile(slowdowns, 95.0) },
+            slo_attainment: if slo_total == 0 {
+                1.0
+            } else {
+                slo_met as f64 / slo_total as f64
+            },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +150,37 @@ mod tests {
         let empty = StreamStats::from_jobs(&[], &[]);
         assert_eq!(empty.jobs, 0);
         assert_eq!(empty.mean_slowdown, 1.0);
+    }
+
+    #[test]
+    fn jain_index_shape() {
+        // even allocation is perfectly fair
+        assert_eq!(jain_index(&[2.0, 2.0, 2.0]), 1.0);
+        // one tenant starved: (3)^2 / (2 * 9) = 0.5
+        assert_eq!(jain_index(&[3.0, 0.0]), 0.5);
+        // n tenants, one served: index -> 1/n
+        assert!((jain_index(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // degenerate samples are fair by convention
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[5.0]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn tenant_stats_aggregate_slowdowns_and_slo() {
+        let t = TenantStats::from_jobs("prod", 2.0, &[1.0, 2.0, 3.0], 1, 2, 4);
+        assert_eq!(t.tenant, "prod");
+        assert_eq!(t.weight, 2.0);
+        assert_eq!(t.jobs, 4);
+        assert_eq!(t.rejected, 1);
+        assert_eq!(t.mean_slowdown, 2.0);
+        assert_eq!(t.p95_slowdown, 3.0);
+        assert_eq!(t.slo_attainment, 0.5);
+        // no completed jobs, no deadlines: neutral aggregates
+        let idle = TenantStats::from_jobs("batch", 1.0, &[], 0, 0, 0);
+        assert_eq!(idle.jobs, 0);
+        assert_eq!(idle.mean_slowdown, 1.0);
+        assert_eq!(idle.p95_slowdown, 1.0);
+        assert_eq!(idle.slo_attainment, 1.0);
     }
 }

@@ -37,9 +37,12 @@ pub use dynamics::{
 };
 pub use mitigation::{run_mitigated, DuelAudit, MitigationSpec, SpeculationMode};
 pub use online::{
-    run_stream, AdmissionPolicy, JobOutcome, StreamOutcome, StreamSpec, Submission,
-    SubmissionBody,
+    run_stream, AdmissionAudit, AdmissionPolicy, JobOutcome, PreemptionAudit, StreamOutcome,
+    StreamSpec, Submission, SubmissionBody,
 };
 pub use session::{shuffle_majority_node, slowstart_gate, SimSession};
-pub use spec::{cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TopologyShape, WorkloadSpec};
+pub use spec::{
+    cell_seed, BackgroundSpec, InitialLoad, ScenarioSpec, TenancySpec, TenantClass, TenantSpec,
+    TopologyShape, WorkloadSpec,
+};
 pub use sweep::{parallel_map, run_job_grid, SweepRow};

@@ -30,6 +30,23 @@
 //!   queues and is re-considered whenever a job completes (or, on an
 //!   idle cluster, at the earliest instant the gate can pass). Queue
 //!   wait counts toward the job's completion time.
+//! * **Multi-tenancy (optional).** When the scenario carries a
+//!   `[tenants]` table ([`TenancySpec`]), the FIFO queue is replaced by
+//!   **DRF admission**: each tenant keeps its own FIFO, and at every
+//!   admission opportunity the queued head of the tenant with the
+//!   smallest weighted dominant share — `max(slot share, reserved
+//!   calendar-bandwidth share) / weight` — is admitted, subject to the
+//!   tenant's slot and bandwidth quotas. Jobs that can never meet their
+//!   tenant's deadline (best-case critical path already past it) or
+//!   never fit its slot quota are **rejected** up front. A *guaranteed*
+//!   tenant whose job would still miss its deadline behind the
+//!   committed backlog triggers **preemption**: every *spot* tenant's
+//!   queued (not yet started) placements are drained through the
+//!   descheduler's orphan path, their calendar grants are released, the
+//!   guaranteed job is admitted first, and the drained work is
+//!   rescheduled behind it — every grant move audited as an old→new
+//!   [`ReallocAudit`] chain. A tenancy table with one default tenant
+//!   (no caps) degenerates to the FIFO path bit-for-bit.
 //!
 //! # Phase pipeline per job (and the static differential pin)
 //!
@@ -64,24 +81,29 @@ use std::collections::VecDeque;
 
 use crate::cluster::Ledger;
 use crate::mapreduce::{JobId, JobSpec, TaskId, TaskSpec};
-use crate::metrics::{JobMetrics, StreamStats};
+use crate::metrics::{jain_index, JobMetrics, StreamStats, TenantStats};
 use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler as _};
-use crate::sdn::Controller;
-use crate::sim::{Assignment, Engine, FlowNet, TaskRecord, TransferPlan};
+use crate::sdn::{Controller, Reservation};
+use crate::sim::{Assignment, Engine, FlowNet, Placement, TaskRecord, TransferPlan};
 use crate::topology::NodeId;
 use crate::util::{Secs, XorShift};
 use crate::workload::{JobArrival, JobKind, TraceGen, WorkloadBuilder};
 
-use super::dynamics::ReservationAudit;
+use super::dynamics::{ReallocAudit, ReservationAudit};
 use super::mitigation::Rebalancer;
 use super::session::{shuffle_majority_node, slowstart_gate, SimSession};
+use super::spec::{TenancySpec, TenantClass};
 
 /// One job handed to the stream at an absolute submission time.
 #[derive(Debug, Clone)]
 pub struct Submission {
     pub at_secs: f64,
     pub body: SubmissionBody,
+    /// Owning tenant by name (must resolve in the scenario's
+    /// [`TenancySpec`]). `None` on a multi-tenant stream attributes the
+    /// job round-robin by arrival index; ignored without tenancy.
+    pub tenant: Option<String>,
 }
 
 /// What the submission carries.
@@ -100,6 +122,7 @@ impl From<JobArrival> for Submission {
         Self {
             at_secs: a.at_secs,
             body: SubmissionBody::Generated { kind: a.kind, data_mb: a.data_mb },
+            tenant: None,
         }
     }
 }
@@ -120,6 +143,35 @@ impl Default for AdmissionPolicy {
     fn default() -> Self {
         Self { max_active: usize::MAX, min_free_slots: 0 }
     }
+}
+
+/// One DRF admission decision on a multi-tenant stream — enough to
+/// replay the pick: the winner is the finite-key minimum, ties broken
+/// by larger weight, then lower tenant index.
+#[derive(Debug, Clone)]
+pub struct AdmissionAudit {
+    pub at: f64,
+    /// The admitted job.
+    pub job: JobId,
+    /// Index of the winning tenant in the [`TenancySpec`].
+    pub tenant: usize,
+    /// Weighted dominant share per tenant at decision time:
+    /// `max(slot share, bandwidth share) / weight`, `INFINITY` for
+    /// tenants with no eligible queued head (empty queue or quota hit).
+    pub keys: Vec<f64>,
+}
+
+/// One preempted (drained and rescheduled) spot placement.
+#[derive(Debug, Clone)]
+pub struct PreemptionAudit {
+    pub at: f64,
+    /// The drained queued task.
+    pub task: TaskId,
+    /// Its owning (spot) job and tenant.
+    pub victim: JobId,
+    pub victim_tenant: String,
+    /// The guaranteed job whose deadline risk triggered the drain.
+    pub by: JobId,
 }
 
 /// Declarative stream description (the `[stream]` config table / `bass
@@ -193,6 +245,12 @@ pub struct JobOutcome {
     pub slowdown: f64,
     /// The job's task specs with their stream-global ids (oracle fodder).
     pub tasks: Vec<TaskSpec>,
+    /// Owning tenant name on a multi-tenant stream, `None` otherwise.
+    pub tenant: Option<String>,
+    /// Rejected at admission (infeasible deadline or impossible quota):
+    /// the job never ran, its metrics are zeroed and excluded from the
+    /// stream statistics.
+    pub rejected: bool,
 }
 
 /// Everything one stream run produced — self-describing enough for the
@@ -218,6 +276,23 @@ pub struct StreamOutcome {
     /// rebalance_period`): evaluate/score/evict passes that actually
     /// moved pending work off a service offender.
     pub rebalances: usize,
+    /// The tenancy table the stream ran under, when multi-tenant.
+    pub tenants: Option<TenancySpec>,
+    /// Per-tenant slowdown/SLO aggregates (empty without tenancy).
+    pub tenant_stats: Vec<TenantStats>,
+    /// Jain index over the per-tenant mean slowdowns (1.0 without
+    /// tenancy or with fewer than two tenants).
+    pub fairness_jain: f64,
+    /// Every DRF admission decision, in admission order.
+    pub admissions: Vec<AdmissionAudit>,
+    /// Every preempted spot placement, in drain order.
+    pub preemptions: Vec<PreemptionAudit>,
+    /// Grant moves from preemption and descheduler drains, as old→new
+    /// chains per task ([`crate::testkit::oracles`] checks them against
+    /// `reservations`).
+    pub reallocs: Vec<ReallocAudit>,
+    /// Jobs rejected at admission.
+    pub rejected_jobs: usize,
 }
 
 /// Watch keys: three per job.
@@ -250,6 +325,19 @@ struct JobRun {
     /// majority node without waiting for records.
     map_nodes: Vec<NodeId>,
     done: bool,
+    /// Owning tenant index (multi-tenant streams only).
+    tenant: Option<usize>,
+    /// Admitted (scheduled into the engine); distinguishes active jobs
+    /// from queued ones for the DRF usage accounting.
+    started: bool,
+    /// Rejected at admission; never ran.
+    rejected: bool,
+    /// Best-case critical path: the longest task compute on the fastest
+    /// node — the deadline-feasibility floor.
+    cp_min: f64,
+    /// Calendar-bandwidth area (`frac * n_slots`) currently reserved for
+    /// this job's transfers (the DRF bandwidth dimension).
+    reserved_area: f64,
 }
 
 impl JobRun {
@@ -296,6 +384,12 @@ struct StreamDriver<'a> {
     /// The scoring descheduler, when `[mitigation] rebalance_period > 0`.
     rebalancer: Option<Rebalancer>,
     rebalances: usize,
+    /// The tenancy table, when the scenario declares `[tenants]`.
+    tenancy: Option<TenancySpec>,
+    admissions: Vec<AdmissionAudit>,
+    preemptions: Vec<PreemptionAudit>,
+    reallocs: Vec<ReallocAudit>,
+    rejected: usize,
 }
 
 /// The owning job of a stream-global task id (ids are dense per job).
@@ -402,6 +496,9 @@ impl<'a> StreamDriver<'a> {
                 frac: tr.reservation.frac,
                 usable: self.sess.ctrl.path_health(&tr.reservation.links),
             });
+            if let Some(j) = job_index_of(&self.jobs, p.task) {
+                self.jobs[j].reserved_area += tr.reservation.frac * tr.reservation.n_slots as f64;
+            }
         }
         a
     }
@@ -444,6 +541,20 @@ impl<'a> StreamDriver<'a> {
             }
         }
         assert!(!maps.is_empty(), "stream jobs need at least one map task");
+        let min_factor = self
+            .sess
+            .nodes
+            .iter()
+            .map(|&nd| match self.sess.spec.node_speed.get(nd.0) {
+                Some(&f) if f > 0.0 => f,
+                _ => 1.0,
+            })
+            .fold(f64::INFINITY, f64::min);
+        let cp_min = maps
+            .iter()
+            .chain(reduces.iter())
+            .map(|t| t.compute.0 * min_factor)
+            .fold(0.0, f64::max);
         JobRun {
             name,
             submit,
@@ -457,6 +568,11 @@ impl<'a> StreamDriver<'a> {
             lr: 1.0,
             map_nodes: Vec::new(),
             done: false,
+            tenant: None,
+            started: false,
+            rejected: false,
+            cp_min,
+            reserved_area: 0.0,
         }
     }
 
@@ -464,6 +580,7 @@ impl<'a> StreamDriver<'a> {
     /// cluster, register its watches, load it into the shared engine.
     fn admit(&mut self, jid: usize, at: Secs) {
         self.jobs[jid].admitted = at;
+        self.jobs[jid].started = true;
         self.active += 1;
         let maps = self.jobs[jid].maps.clone();
         let view = self.committed_ledger(&self.engine, at);
@@ -533,6 +650,104 @@ impl<'a> StreamDriver<'a> {
         self.try_admit(now);
     }
 
+    /// Release a drained placement's calendar grant, if it holds one: the
+    /// transfer is completed at zero bytes (freeing the slots) and its
+    /// reservation-audit row withdrawn. Returns the released reservation
+    /// so the caller can chain it into a [`ReallocAudit`] row.
+    fn release_grant(&mut self, p: &Placement) -> Option<Reservation> {
+        let tr = match &p.transfer {
+            TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
+            _ => return None,
+        };
+        self.sess.ctrl.complete_transfer(tr, 0.0);
+        if tr.reservation.n_slots > 0 {
+            if let Some(i) = self.audits.iter().position(|a| {
+                a.start_slot == tr.reservation.start_slot
+                    && a.n_slots == tr.reservation.n_slots
+                    && a.frac == tr.reservation.frac
+                    && a.links == tr.reservation.links
+            }) {
+                self.audits.remove(i);
+            }
+            if let Some(j) = job_index_of(&self.jobs, p.task) {
+                self.jobs[j].reserved_area -=
+                    tr.reservation.frac * tr.reservation.n_slots as f64;
+            }
+        }
+        Some(tr.reservation.clone())
+    }
+
+    /// Reschedule drained placements on `authorized` at `now`: reduce
+    /// shuffle hints are re-derived from the owning job's (possibly
+    /// moved) map placements, map bookkeeping is kept in step, and every
+    /// grant change is chained as an old→new [`ReallocAudit`] row
+    /// (grantless sides are the empty reservation).
+    fn reschedule_orphans(
+        &mut self,
+        orphans: &[(Placement, Option<Reservation>)],
+        now: Secs,
+        authorized: Vec<NodeId>,
+    ) {
+        if orphans.is_empty() {
+            return;
+        }
+        let mut tasks: Vec<TaskSpec> = Vec::with_capacity(orphans.len());
+        for (p, _) in orphans {
+            let spec = task_of(&self.jobs, p.task).expect("drained task has an owning job");
+            let mut t = spec.clone();
+            if !t.is_map() {
+                // re-derive the shuffle hint from the owning job's
+                // (possibly rebalanced) map placements
+                let jr = &self.jobs[job_index_of(&self.jobs, p.task).expect("owned task")];
+                t.src_hint =
+                    Some(hint_from_placements(&jr.maps, &jr.map_nodes, self.n_hosts));
+            }
+            tasks.push(t);
+        }
+        let view = self.committed_ledger(&self.engine, now);
+        let a = self.schedule_batch(&tasks, now, now, view, authorized);
+        // keep the shuffle-hint bookkeeping in step with moved maps
+        for p in &a.placements {
+            if !p.is_map {
+                continue;
+            }
+            if let Some(j) = job_index_of(&self.jobs, p.task) {
+                let local = p.task.0 - self.jobs[j].base;
+                if local < self.jobs[j].map_nodes.len() {
+                    self.jobs[j].map_nodes[local] = p.node;
+                }
+            }
+        }
+        let empty =
+            || Reservation { links: Vec::new(), start_slot: 0, n_slots: 0, frac: 0.0 };
+        for (p, old) in orphans {
+            let old_r = old.clone().unwrap_or_else(empty);
+            let new_r = a
+                .placements
+                .iter()
+                .find(|q| q.task == p.task)
+                .and_then(|q| match &q.transfer {
+                    TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => {
+                        Some(t.reservation.clone())
+                    }
+                    _ => None,
+                })
+                .unwrap_or_else(empty);
+            if old_r == new_r {
+                continue;
+            }
+            self.reallocs.push(ReallocAudit {
+                round: 1,
+                task: p.task,
+                at: now,
+                old: old_r,
+                new: new_r,
+                class_share_mb_s: 0.0,
+            });
+        }
+        self.engine.load(&a);
+    }
+
     /// Evaluate/score/evict at a control instant: when the scoring
     /// descheduler drains a service offender's pending queue, release
     /// any calendar grants the drained placements held and reschedule
@@ -555,64 +770,212 @@ impl<'a> StreamDriver<'a> {
         let orphans = self.engine.take_orphans();
         // a drained BASS placement still holds its calendar grant:
         // release it (and its audit row) before rescheduling the task
-        for (p, _) in &orphans {
-            let tr = match &p.transfer {
-                TransferPlan::Reserved(t) | TransferPlan::Prefetched(t) => t,
-                _ => continue,
-            };
-            self.sess.ctrl.complete_transfer(tr, 0.0);
-            if tr.reservation.n_slots == 0 {
-                continue;
-            }
-            if let Some(i) = self.audits.iter().position(|a| {
-                a.start_slot == tr.reservation.start_slot
-                    && a.n_slots == tr.reservation.n_slots
-                    && a.frac == tr.reservation.frac
-                    && a.links == tr.reservation.links
-            }) {
-                self.audits.remove(i);
-            }
-        }
+        let released: Vec<(Placement, Option<Reservation>)> = orphans
+            .into_iter()
+            .map(|(p, _)| {
+                let old = self.release_grant(&p);
+                (p, old)
+            })
+            .collect();
         let now = self.engine.now();
-        let mut tasks: Vec<TaskSpec> = Vec::with_capacity(orphans.len());
-        for (p, _) in &orphans {
-            let spec = task_of(&self.jobs, p.task).expect("drained task has an owning job");
-            let mut t = spec.clone();
-            if !t.is_map() {
-                // re-derive the shuffle hint from the owning job's
-                // (possibly rebalanced) map placements
-                let jr = &self.jobs[job_index_of(&self.jobs, p.task).expect("owned task")];
-                t.src_hint =
-                    Some(hint_from_placements(&jr.maps, &jr.map_nodes, self.n_hosts));
-            }
-            tasks.push(t);
-        }
         let authorized: Vec<NodeId> =
             self.sess.nodes.iter().copied().filter(|&nd| nd != offender).collect();
-        let view = self.committed_ledger(&self.engine, now);
-        let a = self.schedule_batch(&tasks, now, now, view, authorized);
-        // keep the shuffle-hint bookkeeping in step with moved maps
-        for p in &a.placements {
-            if !p.is_map {
-                continue;
-            }
-            if let Some(j) = job_index_of(&self.jobs, p.task) {
-                let local = p.task.0 - self.jobs[j].base;
-                if local < self.jobs[j].map_nodes.len() {
-                    self.jobs[j].map_nodes[local] = p.node;
-                }
+        self.reschedule_orphans(&released, now, authorized);
+    }
+
+    /// Reject queued jobs that can never be admitted or never meet their
+    /// tenant's deadline: more tasks than the tenant's slot quota, or a
+    /// best-case critical path from `now` already past the deadline.
+    fn reject_infeasible(&mut self, now: Secs) {
+        let tn = match &self.tenancy {
+            Some(t) => t,
+            None => return,
+        };
+        let mut rejects: Vec<usize> = Vec::new();
+        for &jid in &self.admit_q {
+            let jr = &self.jobs[jid];
+            let ts = &tn.tenants[jr.tenant.expect("tenancy jobs carry a tenant")];
+            let quota_impossible = jr.n_tasks() > ts.slot_quota;
+            let deadline_impossible = ts
+                .deadline_secs
+                .map_or(false, |dl| now.0 + jr.cp_min > jr.submit.0 + dl + 1e-9);
+            if quota_impossible || deadline_impossible {
+                rejects.push(jid);
             }
         }
-        self.engine.load(&a);
+        if rejects.is_empty() {
+            return;
+        }
+        self.admit_q.retain(|jid| !rejects.contains(jid));
+        for jid in rejects {
+            self.jobs[jid].rejected = true;
+            self.rejected += 1;
+        }
+    }
+
+    /// The DRF pick: per-tenant FIFO heads compete on weighted dominant
+    /// share — `max(slot share, reserved-bandwidth share) / weight` over
+    /// the tenant's started, unfinished jobs — and the smallest key wins
+    /// (ties prefer the larger weight, then the lower tenant index).
+    /// Heads that would break their tenant's slot or bandwidth quota are
+    /// ineligible (key `INFINITY`). Returns the winner's queue position
+    /// and job id, and logs the decision for replay.
+    fn drf_pick(&mut self, now: Secs) -> Option<(usize, usize)> {
+        let tn = self.tenancy.as_ref().expect("drf_pick requires tenancy");
+        let n = tn.tenants.len();
+        let mut slots = vec![0usize; n];
+        let mut bw = vec![0.0f64; n];
+        for jr in &self.jobs {
+            if jr.started && !jr.done {
+                let t = jr.tenant.expect("tenancy jobs carry a tenant");
+                slots[t] += jr.n_tasks();
+                bw[t] += jr.reserved_area;
+            }
+        }
+        let norm = self.n_hosts.max(1) as f64;
+        let mut keys = vec![f64::INFINITY; n];
+        let mut heads: Vec<Option<usize>> = vec![None; n];
+        for (q, &jid) in self.admit_q.iter().enumerate() {
+            let t = self.jobs[jid].tenant.expect("tenancy jobs carry a tenant");
+            if heads[t].is_some() {
+                continue;
+            }
+            heads[t] = Some(q);
+            let ts = &tn.tenants[t];
+            let fits =
+                slots[t] + self.jobs[jid].n_tasks() <= ts.slot_quota && bw[t] < ts.bw_quota;
+            if fits {
+                keys[t] = (slots[t] as f64 / norm).max(bw[t] / norm) / ts.weight;
+            }
+        }
+        let mut win: Option<usize> = None;
+        for t in 0..n {
+            if !keys[t].is_finite() {
+                continue;
+            }
+            win = Some(match win {
+                None => t,
+                Some(w)
+                    if keys[t] < keys[w]
+                        || (keys[t] == keys[w]
+                            && tn.tenants[t].weight > tn.tenants[w].weight) =>
+                {
+                    t
+                }
+                Some(w) => w,
+            });
+        }
+        let w = win?;
+        let q = heads[w].expect("winning tenant has a queued head");
+        let jid = self.admit_q[q];
+        let audit = AdmissionAudit { at: now.0, job: JobId(jid), tenant: w, keys };
+        self.admissions.push(audit);
+        Some((q, jid))
+    }
+
+    /// Would the job — feasible in the best case — still miss its
+    /// guaranteed deadline behind the committed backlog? True when even
+    /// the earliest committed node availability plus the job's best-case
+    /// critical path overshoots the deadline.
+    fn deadline_at_risk(&self, jid: usize, now: Secs) -> bool {
+        let tn = match &self.tenancy {
+            Some(t) => t,
+            None => return false,
+        };
+        let jr = &self.jobs[jid];
+        let ts = &tn.tenants[jr.tenant.expect("tenancy jobs carry a tenant")];
+        if ts.class != TenantClass::Guaranteed {
+            return false;
+        }
+        let dl = match ts.deadline_secs {
+            Some(d) => d,
+            None => return false,
+        };
+        let view = self.committed_ledger(&self.engine, now);
+        let avail = self
+            .sess
+            .nodes
+            .iter()
+            .map(|&nd| view.idle(nd))
+            .fold(Secs::INF, Secs::min);
+        avail.0 + jr.cp_min > jr.submit.0 + dl + 1e-9
+    }
+
+    /// Preempt for a deadline-at-risk guaranteed job: drain every spot
+    /// tenant's queued (not yet started) placements through the orphan
+    /// path and release their grants. Running work is never interrupted
+    /// and guaranteed tenants are never victims. Returns the drained
+    /// placements paired with their released grants; the caller admits
+    /// the guaranteed job first, then reschedules these behind it.
+    fn preempt_spot(&mut self, by: usize, now: Secs) -> Vec<(Placement, Option<Reservation>)> {
+        let (victims, names) = {
+            let tn = self.tenancy.as_ref().expect("preemption requires tenancy");
+            let names: Vec<String> = tn.tenants.iter().map(|t| t.name.clone()).collect();
+            let victims: Vec<JobId> = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, jr)| {
+                    jr.started
+                        && !jr.done
+                        && tn.tenants[jr.tenant.expect("tenancy jobs carry a tenant")].class
+                            == TenantClass::Spot
+                })
+                .map(|(j, _)| JobId(j))
+                .collect();
+            (victims, names)
+        };
+        if victims.is_empty() || self.engine.drain_jobs_queued(&victims) == 0 {
+            return Vec::new();
+        }
+        let orphans = self.engine.take_orphans();
+        let mut out = Vec::with_capacity(orphans.len());
+        for (p, _) in orphans {
+            let old = self.release_grant(&p);
+            let vj = job_index_of(&self.jobs, p.task).expect("preempted task has an owner");
+            let vt = self.jobs[vj].tenant.expect("tenancy jobs carry a tenant");
+            self.preemptions.push(PreemptionAudit {
+                at: now.0,
+                task: p.task,
+                victim: JobId(vj),
+                victim_tenant: names[vt].clone(),
+                by: JobId(by),
+            });
+            out.push((p, old));
+        }
+        out
     }
 
     fn try_admit(&mut self, now: Secs) {
-        while let Some(&head) = self.admit_q.front() {
-            if !self.admissible(now) {
-                break;
+        if self.tenancy.is_none() {
+            while let Some(&head) = self.admit_q.front() {
+                if !self.admissible(now) {
+                    break;
+                }
+                self.admit_q.pop_front();
+                self.admit(head, now);
             }
-            self.admit_q.pop_front();
-            self.admit(head, now);
+            return;
+        }
+        loop {
+            self.reject_infeasible(now);
+            if self.admit_q.is_empty() || !self.admissible(now) {
+                return;
+            }
+            let (qpos, jid) = match self.drf_pick(now) {
+                Some(pick) => pick,
+                None => return, // every head quota-blocked
+            };
+            let preempted = if self.deadline_at_risk(jid, now) {
+                self.preempt_spot(jid, now)
+            } else {
+                Vec::new()
+            };
+            self.admit_q.remove(qpos).expect("picked head is queued");
+            self.admit(jid, now);
+            if !preempted.is_empty() {
+                self.reschedule_orphans(&preempted, now, self.sess.nodes.clone());
+            }
         }
     }
 
@@ -734,14 +1097,30 @@ impl<'a> StreamDriver<'a> {
             self.rebalance();
             self.sess.ctrl.gc_calendar_before(t);
             let jid = self.jobs.len();
-            let jr = self.build(jid, t, sub.body);
+            let Submission { body, tenant, .. } = sub;
+            let jr = self.build(jid, t, body);
             self.jobs.push(jr);
-            self.try_admit(t); // completions at exactly t may have freed slots
-            if self.admit_q.is_empty() && self.admissible(t) {
-                self.admit(jid, t);
-            } else {
-                self.jobs[jid].queued = true;
+            let tenant_idx = self.tenancy.as_ref().map(|tn| match &tenant {
+                Some(name) => tn
+                    .resolve(name)
+                    .unwrap_or_else(|| panic!("unknown tenant '{name}' in submission")),
+                None => jid % tn.tenants.len(),
+            });
+            if let Some(idx) = tenant_idx {
+                self.jobs[jid].tenant = Some(idx);
                 self.admit_q.push_back(jid);
+                self.try_admit(t);
+                if self.admit_q.contains(&jid) {
+                    self.jobs[jid].queued = true;
+                }
+            } else {
+                self.try_admit(t); // completions at exactly t may have freed slots
+                if self.admit_q.is_empty() && self.admissible(t) {
+                    self.admit(jid, t);
+                } else {
+                    self.jobs[jid].queued = true;
+                    self.admit_q.push_back(jid);
+                }
             }
         }
         // play out the remaining work
@@ -782,6 +1161,29 @@ impl<'a> StreamDriver<'a> {
         let mut jobs_out = Vec::with_capacity(self.jobs.len());
         let (mut jts, mut slowdowns) = (Vec::new(), Vec::new());
         for (jid, jr) in self.jobs.iter().enumerate() {
+            let tenant_name = match (&self.tenancy, jr.tenant) {
+                (Some(tn), Some(t)) => Some(tn.tenants[t].name.clone()),
+                _ => None,
+            };
+            if jr.rejected {
+                // never admitted: zeroed metrics, neutral slowdown,
+                // excluded from the stream statistics
+                jobs_out.push(JobOutcome {
+                    job: JobId(jid),
+                    name: jr.name.clone(),
+                    submitted_at: jr.submit.0,
+                    admitted_at: jr.submit.0,
+                    gate: jr.submit.0,
+                    queued: jr.queued,
+                    metrics: JobMetrics::from_records(&[], jr.submit, None),
+                    isolated_jt: 0.0,
+                    slowdown: 1.0,
+                    tasks: jr.maps.iter().chain(jr.reduces.iter()).cloned().collect(),
+                    tenant: tenant_name,
+                    rejected: true,
+                });
+                continue;
+            }
             let job_records: Vec<TaskRecord> = records
                 .iter()
                 .filter(|r| r.task.0 >= jr.base && r.task.0 < jr.base + jr.n_tasks())
@@ -805,9 +1207,57 @@ impl<'a> StreamDriver<'a> {
                 isolated_jt: iso.jt,
                 slowdown,
                 tasks: jr.maps.iter().chain(jr.reduces.iter()).cloned().collect(),
+                tenant: tenant_name,
+                rejected: false,
             });
         }
         let queued_jobs = self.jobs.iter().filter(|j| j.queued).count();
+        let (tenant_stats, fairness_jain) = match &self.tenancy {
+            None => (Vec::new(), 1.0),
+            Some(tn) => {
+                let n = tn.tenants.len();
+                let mut slow: Vec<Vec<f64>> = vec![Vec::new(); n];
+                let mut rej = vec![0usize; n];
+                let mut met = vec![0usize; n];
+                let mut tot = vec![0usize; n];
+                for (jid, jr) in self.jobs.iter().enumerate() {
+                    let t = jr.tenant.expect("tenancy jobs carry a tenant");
+                    let dl = tn.tenants[t].deadline_secs;
+                    if jr.rejected {
+                        rej[t] += 1;
+                        if dl.is_some() {
+                            tot[t] += 1; // a rejected deadline job is a missed SLO
+                        }
+                        continue;
+                    }
+                    slow[t].push(jobs_out[jid].slowdown);
+                    if let Some(dl) = dl {
+                        tot[t] += 1;
+                        if jobs_out[jid].metrics.jt <= dl + 1e-9 {
+                            met[t] += 1;
+                        }
+                    }
+                }
+                let stats: Vec<TenantStats> = tn
+                    .tenants
+                    .iter()
+                    .enumerate()
+                    .map(|(t, ts)| {
+                        TenantStats::from_jobs(
+                            ts.name.clone(),
+                            ts.weight,
+                            &slow[t],
+                            rej[t],
+                            met[t],
+                            tot[t],
+                        )
+                    })
+                    .collect();
+                let means: Vec<f64> = stats.iter().map(|s| s.mean_slowdown).collect();
+                let jain = jain_index(&means);
+                (stats, jain)
+            }
+        };
         StreamOutcome {
             jobs: jobs_out,
             records: tagged,
@@ -817,6 +1267,13 @@ impl<'a> StreamDriver<'a> {
             stats: StreamStats::from_jobs(&jts, &slowdowns),
             queued_jobs,
             rebalances: self.rebalances,
+            tenants: self.tenancy,
+            tenant_stats,
+            fairness_jain,
+            admissions: self.admissions,
+            preemptions: self.preemptions,
+            reallocs: self.reallocs,
+            rejected_jobs: self.rejected,
         }
     }
 }
@@ -845,6 +1302,12 @@ pub fn run_stream(
         .as_ref()
         .filter(|m| m.rebalance_period > 0.0)
         .map(|m| Rebalancer::new(m.rebalance_period));
+    let tenancy = sess.spec.tenants.clone();
+    if let Some(tn) = &tenancy {
+        if let Err(e) = tn.validate() {
+            panic!("invalid [tenants] spec: {e}");
+        }
+    }
     StreamDriver {
         sess,
         cost,
@@ -861,6 +1324,11 @@ pub fn run_stream(
         next_base: 0,
         rebalancer,
         rebalances: 0,
+        tenancy,
+        admissions: Vec::new(),
+        preemptions: Vec::new(),
+        reallocs: Vec::new(),
+        rejected: 0,
     }
     .run(submissions)
 }
@@ -881,7 +1349,8 @@ impl SimSession {
 mod tests {
     use super::*;
     use crate::scenario::{
-        BackgroundSpec, InitialLoad, MitigationSpec, ScenarioSpec, TopologyShape, WorkloadSpec,
+        BackgroundSpec, InitialLoad, MitigationSpec, ScenarioSpec, TenancySpec, TenantClass,
+        TenantSpec, TopologyShape, WorkloadSpec,
     };
     use crate::sched::SchedulerKind;
 
@@ -909,7 +1378,12 @@ mod tests {
         Submission {
             at_secs: at,
             body: SubmissionBody::Generated { kind: JobKind::Sort, data_mb: mb },
+            tenant: None,
         }
+    }
+
+    fn sort_for(tenant: &str, at: f64, mb: f64) -> Submission {
+        Submission { tenant: Some(tenant.into()), ..sort_at(at, mb) }
     }
 
     #[test]
@@ -1057,6 +1531,7 @@ mod tests {
         let sub = Submission {
             at_secs: 0.0,
             body: SubmissionBody::Explicit { name: "wave".into(), tasks, slowstart: 1.0 },
+            tenant: None,
         };
         let out = sess.run_stream(vec![sub], AdmissionPolicy::default(), &cost);
         assert_eq!(out.records.len(), 3);
@@ -1161,5 +1636,209 @@ mod tests {
         for (a, b) in subs.iter().zip(&again) {
             assert_eq!(a.at_secs, b.at_secs);
         }
+    }
+
+    // ---- multi-tenancy ----
+
+    fn two_tenants() -> TenancySpec {
+        TenancySpec { tenants: vec![TenantSpec::named("prod"), TenantSpec::named("batch")] }
+    }
+
+    #[test]
+    fn single_default_tenant_is_bitwise_identical_to_fifo() {
+        // a [tenants] table with one unconstrained tenant must not
+        // perturb the stream at all: same admission instants, same
+        // records, bit for bit
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass] {
+            let subs =
+                || vec![sort_at(1.0, 600.0), sort_at(3.0, 600.0), sort_at(5.0, 300.0)];
+            let mut plain_sess = stream_session(kind);
+            let plain = plain_sess.run_stream(subs(), AdmissionPolicy::default(), &cost);
+            let mut spec = plain_sess.spec.clone();
+            spec.tenants = Some(TenancySpec::single_default());
+            let mut sess = SimSession::new(&spec);
+            let out = sess.run_stream(subs(), AdmissionPolicy::default(), &cost);
+            assert_eq!(out.last_finish.to_bits(), plain.last_finish.to_bits(), "{kind:?}");
+            assert_eq!(out.records.len(), plain.records.len());
+            for ((ja, a), (jb, b)) in out.records.iter().zip(&plain.records) {
+                assert_eq!((ja, a.task, a.node), (jb, b.task, b.node));
+                assert_eq!(a.finish.0.to_bits(), b.finish.0.to_bits());
+            }
+            for (a, b) in out.jobs.iter().zip(&plain.jobs) {
+                assert_eq!(a.admitted_at.to_bits(), b.admitted_at.to_bits());
+            }
+            assert_eq!(out.rejected_jobs, 0);
+            assert!(out.preemptions.is_empty());
+            assert_eq!(out.jobs[0].tenant.as_deref(), Some("default"));
+        }
+    }
+
+    #[test]
+    fn drf_admits_the_underserved_tenant_first() {
+        // prod has two jobs active when its third and batch's first
+        // queue up: batch's dominant share is zero, so DRF admits batch
+        // ahead of the earlier-queued prod job
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+            let mut spec = stream_session(kind).spec.clone();
+            spec.tenants = Some(two_tenants());
+            let mut sess = SimSession::new(&spec);
+            let subs = vec![
+                sort_for("prod", 0.0, 600.0),
+                sort_for("prod", 0.5, 600.0),
+                sort_for("prod", 1.0, 150.0),
+                sort_for("batch", 1.5, 150.0),
+            ];
+            let policy = AdmissionPolicy { max_active: 2, min_free_slots: 0 };
+            let out = sess.run_stream(subs, policy, &cost);
+            assert!(out.jobs[2].queued && out.jobs[3].queued, "{kind:?}");
+            assert!(
+                out.jobs[3].admitted_at <= out.jobs[2].admitted_at,
+                "{kind:?}: batch (share 0) must not wait behind prod's third job \
+                 (batch at {}, prod at {})",
+                out.jobs[3].admitted_at,
+                out.jobs[2].admitted_at
+            );
+            // the decision trail is complete and replayable in shape
+            assert_eq!(out.admissions.len(), 4, "{kind:?}");
+            for ad in &out.admissions {
+                assert_eq!(ad.keys.len(), 2);
+                assert!(ad.keys[ad.tenant].is_finite());
+            }
+            assert_eq!(out.tenant_stats.len(), 2);
+            assert!(out.fairness_jain > 0.0 && out.fairness_jain <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn slot_quota_defers_admission_until_usage_drains() {
+        let cost = CostModel::rust_only();
+        // learn the per-job task count, then cap the tenant at exactly
+        // one job's worth of slots
+        let mut sess = stream_session(SchedulerKind::Bass);
+        let probe = sess.run_stream(vec![sort_at(0.0, 300.0)], AdmissionPolicy::default(), &cost);
+        let per_job = probe.jobs[0].tasks.len();
+        let mut spec = stream_session(SchedulerKind::Bass).spec.clone();
+        let mut only = TenantSpec::named("only");
+        only.slot_quota = per_job;
+        spec.tenants = Some(TenancySpec { tenants: vec![only] });
+        let mut sess = SimSession::new(&spec);
+        let out = sess.run_stream(
+            vec![sort_for("only", 0.0, 300.0), sort_for("only", 1.0, 300.0)],
+            AdmissionPolicy::default(),
+            &cost,
+        );
+        assert_eq!(out.rejected_jobs, 0);
+        assert!(!out.jobs[0].queued);
+        assert!(out.jobs[1].queued, "second job must wait for the quota");
+        assert!(out.jobs[1].admitted_at > out.jobs[1].submitted_at);
+        // both ran to completion once the quota freed
+        let total: usize = out.jobs.iter().map(|j| j.tasks.len()).sum();
+        assert_eq!(out.records.len(), total);
+    }
+
+    #[test]
+    fn impossible_quota_and_deadline_reject_jobs_upfront() {
+        let cost = CostModel::rust_only();
+        let mut spec = stream_session(SchedulerKind::Bass).spec.clone();
+        let mut tiny = TenantSpec::named("tiny");
+        tiny.slot_quota = 1; // any real job has > 1 task
+        let mut late = TenantSpec::named("late");
+        late.deadline_secs = Some(1e-3); // far below any critical path
+        spec.tenants = Some(TenancySpec { tenants: vec![tiny, late] });
+        let mut sess = SimSession::new(&spec);
+        let out = sess.run_stream(
+            vec![sort_for("tiny", 0.0, 300.0), sort_for("late", 1.0, 300.0)],
+            AdmissionPolicy::default(),
+            &cost,
+        );
+        assert_eq!(out.rejected_jobs, 2);
+        assert!(out.jobs.iter().all(|j| j.rejected));
+        assert!(out.records.is_empty(), "rejected jobs never run");
+        assert_eq!(out.stats.jobs, 0, "rejected jobs are excluded from stream stats");
+        let late_stats =
+            out.tenant_stats.iter().find(|t| t.tenant == "late").expect("late tenant");
+        assert_eq!(late_stats.rejected, 1);
+        assert_eq!(late_stats.slo_attainment, 0.0);
+    }
+
+    #[test]
+    fn guaranteed_tenant_preempts_spot_queued_work() {
+        let cost = CostModel::rust_only();
+        for kind in [SchedulerKind::Bass, SchedulerKind::Hds] {
+            let mut spec = stream_session(kind).spec.clone();
+            let mut prod = TenantSpec::named("prod");
+            prod.class = TenantClass::Guaranteed;
+            // feasible in the best case (the 150 MB sort's critical
+            // path is its ~53 s reduce), hopeless behind two 600 MB
+            // spot jobs' committed backlog: preemption must fire
+            prod.deadline_secs = Some(60.0);
+            let batch = TenantSpec::named("batch");
+            spec.tenants = Some(TenancySpec { tenants: vec![prod, batch] });
+            let mut sess = SimSession::new(&spec);
+            let subs = vec![
+                sort_for("batch", 0.0, 600.0),
+                sort_for("batch", 0.2, 600.0),
+                sort_for("prod", 1.0, 150.0),
+            ];
+            let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+            assert!(
+                !out.preemptions.is_empty(),
+                "{kind:?}: a deadline-at-risk guaranteed job behind a deep spot \
+                 backlog must preempt"
+            );
+            assert!(out.preemptions.iter().all(|p| p.victim_tenant == "batch"), "{kind:?}");
+            assert!(out.preemptions.iter().all(|p| p.by == JobId(2)), "{kind:?}");
+            assert!(!out.jobs[2].rejected);
+            // preempted work is rescheduled, not lost or duplicated
+            let total: usize = out.jobs.iter().map(|j| j.tasks.len()).sum();
+            assert_eq!(out.records.len(), total, "{kind:?}");
+            crate::testkit::oracles::check_stream(&out, &sess.nodes, &sess.spec.node_speed)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unattributed_submissions_round_robin_across_tenants() {
+        let cost = CostModel::rust_only();
+        let mut spec = stream_session(SchedulerKind::Bass).spec.clone();
+        spec.tenants = Some(two_tenants());
+        let mut sess = SimSession::new(&spec);
+        let subs = vec![sort_at(0.0, 150.0), sort_at(50.0, 150.0), sort_at(100.0, 150.0)];
+        let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+        let tenants: Vec<_> =
+            out.jobs.iter().map(|j| j.tenant.as_deref().unwrap()).collect();
+        assert_eq!(tenants, ["prod", "batch", "prod"]);
+    }
+
+    #[test]
+    fn tenant_streams_are_deterministic() {
+        let cost = CostModel::rust_only();
+        let run = || {
+            let mut spec = stream_session(SchedulerKind::Bass).spec.clone();
+            let mut prod = TenantSpec::named("prod");
+            prod.weight = 2.0;
+            prod.class = TenantClass::Guaranteed;
+            prod.deadline_secs = Some(60.0);
+            let batch = TenantSpec::named("batch");
+            spec.tenants = Some(TenancySpec { tenants: vec![prod, batch] });
+            let mut sess = SimSession::new(&spec);
+            let subs = vec![
+                sort_for("batch", 0.0, 600.0),
+                sort_for("batch", 0.2, 600.0),
+                sort_for("prod", 1.0, 150.0),
+                sort_for("batch", 2.0, 300.0),
+            ];
+            let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
+            (
+                out.last_finish.to_bits(),
+                out.preemptions.len(),
+                out.admissions.len(),
+                out.reallocs.len(),
+                out.jobs.iter().map(|j| j.metrics.jt.to_bits()).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(), run());
     }
 }

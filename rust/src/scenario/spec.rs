@@ -79,6 +79,109 @@ pub enum WorkloadSpec {
     MapWave { tasks: usize, compute_secs: f64, output_mb: f64 },
 }
 
+/// Preemption class of a tenant's jobs.
+///
+/// `Guaranteed` jobs may preempt queued `Spot` work (through the
+/// engine's drain/orphan path) when their deadline is at risk; `Spot`
+/// work never preempts anything and is the only preemption victim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantClass {
+    Guaranteed,
+    Spot,
+}
+
+/// One tenant of the multi-tenant stream layer (`[tenants]` table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// DRF weight: a tenant's dominant share is divided by its weight
+    /// before admission ordering, so weight 2 sustains twice the share
+    /// of weight 1. Must be positive.
+    pub weight: f64,
+    /// Cap on the tenant's simultaneously admitted task slots (the sum
+    /// of task counts over its admitted, unfinished jobs).
+    /// `usize::MAX` = unlimited.
+    pub slot_quota: usize,
+    /// Cap on the tenant's committed calendar bandwidth (summed
+    /// `frac x n_slots` reservation area over unfinished jobs).
+    /// `f64::INFINITY` = unlimited.
+    pub bw_quota: f64,
+    pub class: TenantClass,
+    /// Relative completion deadline for every job of this tenant
+    /// (seconds from submission). Jobs whose deadline is infeasible even
+    /// in the best case are rejected at admission; completed jobs count
+    /// toward SLO attainment.
+    pub deadline_secs: Option<f64>,
+}
+
+impl TenantSpec {
+    /// A default-weight tenant with no quotas, no deadline, spot class.
+    pub fn named(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            weight: 1.0,
+            slot_quota: usize::MAX,
+            bw_quota: f64::INFINITY,
+            class: TenantClass::Spot,
+            deadline_secs: None,
+        }
+    }
+}
+
+/// The multi-tenant layer over the online stream driver: DRF-style
+/// dominant-resource fairness over (occupied slots, reserved calendar
+/// bandwidth) replaces bare FIFO admission. A single default-weight
+/// tenant is pinned bit-identical to the FIFO path
+/// (`rust/tests/invariants.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenancySpec {
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenancySpec {
+    /// One default tenant: attribution-only, admission order identical
+    /// to FIFO (the differential-pin configuration).
+    pub fn single_default() -> Self {
+        Self { tenants: vec![TenantSpec::named("default")] }
+    }
+
+    pub fn resolve(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.name == name)
+    }
+
+    /// Structural validation shared by the config layer and library
+    /// constructors: at least one tenant, unique non-empty names,
+    /// positive weights/quotas/deadlines.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants.is_empty() {
+            return Err("tenancy needs at least one tenant".into());
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                return Err("tenant names must be non-empty".into());
+            }
+            if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                return Err(format!("duplicate tenant name '{}'", t.name));
+            }
+            if !(t.weight > 0.0) {
+                return Err(format!("tenant '{}': weight must be positive", t.name));
+            }
+            if t.slot_quota == 0 {
+                return Err(format!("tenant '{}': slot_quota must be positive", t.name));
+            }
+            if !(t.bw_quota > 0.0) {
+                return Err(format!("tenant '{}': bw_quota must be positive", t.name));
+            }
+            if let Some(d) = t.deadline_secs {
+                if !(d > 0.0) {
+                    return Err(format!("tenant '{}': deadline_secs must be positive", t.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// A full scenario description. `SimSession::new` consumes one of these
 /// and owns all cluster construction; experiment drivers never touch
 /// `Controller::new` / `Namenode` wiring directly.
@@ -132,6 +235,11 @@ pub struct ScenarioSpec {
     /// `Oracle` bandwidth everywhere, bit-identical to pre-telemetry
     /// behavior.
     pub telemetry: Option<TelemetrySpec>,
+    /// Multi-tenant stream admission (DRF over slots + reserved
+    /// bandwidth, quotas, deadlines, preemption classes — DESIGN.md
+    /// §13). `None` = the FIFO stream path, bit-identical to
+    /// pre-tenancy behavior. Only the online stream driver reads this.
+    pub tenants: Option<TenancySpec>,
 }
 
 impl ScenarioSpec {
@@ -158,6 +266,7 @@ impl ScenarioSpec {
             dynamics: None,
             mitigation: None,
             telemetry: None,
+            tenants: None,
         }
     }
 
@@ -227,5 +336,31 @@ mod tests {
             .with_seed(7);
         assert_eq!(s.scheduler, SchedulerKind::Bar);
         assert_eq!(s.seed, 7);
+        assert!(s.tenants.is_none(), "tenancy is opt-in");
+    }
+
+    #[test]
+    fn tenancy_validation_rejects_malformed_specs() {
+        assert!(TenancySpec::single_default().validate().is_ok());
+        assert!(TenancySpec { tenants: Vec::new() }.validate().is_err());
+        let dup = TenancySpec {
+            tenants: vec![TenantSpec::named("a"), TenantSpec::named("a")],
+        };
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+        let mut bad = TenantSpec::named("a");
+        bad.weight = 0.0;
+        assert!(TenancySpec { tenants: vec![bad.clone()] }.validate().is_err());
+        bad.weight = 1.0;
+        bad.slot_quota = 0;
+        assert!(TenancySpec { tenants: vec![bad.clone()] }.validate().is_err());
+        bad.slot_quota = 1;
+        bad.deadline_secs = Some(0.0);
+        assert!(TenancySpec { tenants: vec![bad] }.validate().is_err());
+        let two = TenancySpec {
+            tenants: vec![TenantSpec::named("a"), TenantSpec::named("b")],
+        };
+        assert!(two.validate().is_ok());
+        assert_eq!(two.resolve("b"), Some(1));
+        assert_eq!(two.resolve("c"), None);
     }
 }

@@ -546,6 +546,31 @@ impl Engine {
         n
     }
 
+    /// Tenancy (stream preemption): orphan every *queued* placement
+    /// tagged with one of `jobs`, across all node queues. Running
+    /// attempts and in-flight pulls are untouched — preemption only
+    /// reclaims capacity work hasn't started consuming, so exactly-once
+    /// completion is preserved by construction. Untagged placements are
+    /// never drained. Returns the number of orphaned placements.
+    pub fn drain_jobs_queued(&mut self, jobs: &[JobId]) -> usize {
+        let mut n = 0usize;
+        for j in 0..self.queues.len() {
+            let mut kept = VecDeque::with_capacity(self.queues[j].len());
+            while let Some(pidx) = self.queues[j].pop_front() {
+                let task = self.placements[pidx as usize].task;
+                let owned = self.job_tags.get(&task).map_or(false, |jb| jobs.contains(jb));
+                if owned {
+                    self.orphans.push((pidx, self.now));
+                    n += 1;
+                } else {
+                    kept.push_back(pidx);
+                }
+            }
+            self.queues[j] = kept;
+        }
+        n
+    }
+
     /// Arm the completion bookkeeping (first tag/watch): records already
     /// in flight are backfilled — finished ones into the finished set,
     /// running ones get their `TaskDone` scheduled — so watches observe
@@ -974,6 +999,33 @@ mod tests {
         assert_eq!(recs[0].compute_start, Secs(3.0));
         assert_eq!(recs[0].finish, Secs(12.0));
         assert_eq!(recs[1].finish, Secs(21.0));
+    }
+
+    #[test]
+    fn drain_jobs_queued_orphans_only_the_named_jobs_pending_work() {
+        let net = FlowNet::new(&[100.0, 100.0]);
+        let mut e = Engine::new(net, vec![Secs::ZERO, Secs::ZERO]);
+        let a = Assignment {
+            placements: vec![
+                placement(0, 0, 5.0, TransferPlan::None),
+                placement(1, 0, 5.0, TransferPlan::None),
+                placement(2, 1, 5.0, TransferPlan::None),
+                placement(3, 1, 5.0, TransferPlan::None),
+            ],
+        };
+        e.tag_job(JobId(0), [TaskId(0), TaskId(2)]);
+        e.tag_job(JobId(1), [TaskId(1), TaskId(3)]);
+        e.load(&a);
+        assert_eq!(e.drain_jobs_queued(&[JobId(1)]), 2);
+        let orphans = e.take_orphans();
+        let mut ids: Vec<usize> = orphans.iter().map(|(p, _)| p.task.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 3]);
+        // the untouched job's queued work still runs exactly once
+        let recs = e.run();
+        let mut done: Vec<usize> = recs.iter().map(|r| r.task.0).collect();
+        done.sort_unstable();
+        assert_eq!(done, vec![0, 2]);
     }
 
     #[test]

@@ -24,12 +24,24 @@
 //!    (oracle 3 over the one shared calendar);
 //! 8. the stream makespan respects every job's release-time-plus-
 //!    critical-path bound and the aggregate work bound.
+//!
+//! And over multi-tenant streams (`[tenants]` + DRF admission,
+//! [`check_tenancy`]):
+//!
+//! 12. no tenant's admitted slot occupancy ever exceeds its quota, at
+//!     any instant (boundary sweep over admission/finish events);
+//! 13. every preempted spot task still completes exactly once;
+//! 14. preemption victims are spot tenants only, and the preemptor is a
+//!     guaranteed one;
+//! 15. every DRF admission decision is reproducible from its audited
+//!     share keys (the winner really was the tie-broken minimum).
 
 use std::collections::HashMap;
 
 use crate::mapreduce::{TaskId, TaskSpec};
 use crate::scenario::{
     DuelAudit, DynamicsOutcome, PullAudit, ReallocAudit, ReservationAudit, StreamOutcome,
+    TenantClass,
 };
 use crate::sim::TaskRecord;
 use crate::topology::NodeId;
@@ -331,25 +343,196 @@ pub fn stream_makespan_lower_bound(
     Ok(())
 }
 
-/// Oracles 5-8 over one concurrent stream run.
+/// Oracle 12: at no instant does a tenant's admitted slot occupancy
+/// (sum of task counts over its admitted, unfinished jobs) exceed its
+/// slot quota. Recomputed with a boundary sweep over admission/finish
+/// events — releases at an instant apply before admissions at the same
+/// instant, matching the driver's done-then-admit order.
+pub fn tenant_slot_quotas_respected(outcome: &StreamOutcome) -> Result<(), String> {
+    let tn = match &outcome.tenants {
+        Some(t) => t,
+        None => return Ok(()),
+    };
+    for ts in &tn.tenants {
+        if ts.slot_quota == usize::MAX {
+            continue;
+        }
+        // (time, delta) events for this tenant's jobs
+        let mut events: Vec<(f64, i64)> = Vec::new();
+        for j in &outcome.jobs {
+            if j.rejected || j.tenant.as_deref() != Some(ts.name.as_str()) {
+                continue;
+            }
+            let done = outcome
+                .records
+                .iter()
+                .filter(|(job, _)| *job == j.job)
+                .map(|(_, r)| r.finish.0)
+                .fold(j.admitted_at, f64::max);
+            events.push((j.admitted_at, j.tasks.len() as i64));
+            events.push((done, -(j.tasks.len() as i64)));
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut held = 0i64;
+        for (at, delta) in events {
+            held += delta;
+            if held > ts.slot_quota as i64 {
+                return Err(format!(
+                    "tenant {} held {held} slots at t={at} over a quota of {}",
+                    ts.name, ts.slot_quota
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 13: every preempted (drained and rescheduled) task still
+/// completes exactly once — preemption moves work, it never loses or
+/// duplicates it.
+pub fn preempted_tasks_complete_exactly_once(outcome: &StreamOutcome) -> Result<(), String> {
+    for p in &outcome.preemptions {
+        let n = outcome.records.iter().filter(|(_, r)| r.task == p.task).count();
+        if n != 1 {
+            return Err(format!(
+                "preempted task {:?} (victim {:?}) completed {n} times",
+                p.task, p.victim
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 14: preemption only ever victimizes spot tenants, and is only
+/// ever triggered by a guaranteed one.
+pub fn only_spot_preempted(outcome: &StreamOutcome) -> Result<(), String> {
+    let tn = match &outcome.tenants {
+        Some(t) => t,
+        None => {
+            if outcome.preemptions.is_empty() {
+                return Ok(());
+            }
+            return Err("preemptions recorded on a stream without tenancy".into());
+        }
+    };
+    let class_of = |name: &str| {
+        tn.tenants.iter().find(|t| t.name == name).map(|t| t.class)
+    };
+    for p in &outcome.preemptions {
+        match class_of(&p.victim_tenant) {
+            Some(TenantClass::Spot) => {}
+            Some(TenantClass::Guaranteed) => {
+                return Err(format!(
+                    "guaranteed tenant {} was preempted (task {:?})",
+                    p.victim_tenant, p.task
+                ));
+            }
+            None => {
+                return Err(format!("preemption victim tenant {} is unknown", p.victim_tenant));
+            }
+        }
+        let by = outcome
+            .jobs
+            .iter()
+            .find(|j| j.job == p.by)
+            .and_then(|j| j.tenant.as_deref().and_then(class_of));
+        if by != Some(TenantClass::Guaranteed) {
+            return Err(format!(
+                "preemption of {:?} was triggered by non-guaranteed job {:?}",
+                p.task, p.by
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Oracle 15: every DRF admission decision is reproducible from its
+/// audited per-tenant keys — the logged winner is the minimum finite
+/// key, ties broken by larger weight then lower tenant index. A replayer
+/// holding only the audit trail reaches the same admission order.
+pub fn drf_admissions_reproducible(outcome: &StreamOutcome) -> Result<(), String> {
+    let tn = match &outcome.tenants {
+        Some(t) => t,
+        None => return Ok(()),
+    };
+    for ad in &outcome.admissions {
+        if ad.keys.len() != tn.tenants.len() {
+            return Err(format!(
+                "admission of {:?} logged {} keys for {} tenants",
+                ad.job,
+                ad.keys.len(),
+                tn.tenants.len()
+            ));
+        }
+        let w = ad.tenant;
+        if w >= ad.keys.len() || !ad.keys[w].is_finite() {
+            return Err(format!(
+                "admission of {:?} picked tenant {w} with a non-finite key",
+                ad.job
+            ));
+        }
+        for (t, &k) in ad.keys.iter().enumerate() {
+            if t == w || !k.is_finite() {
+                continue;
+            }
+            let worse = ad.keys[w] < k
+                || (ad.keys[w] == k
+                    && (tn.tenants[w].weight > tn.tenants[t].weight
+                        || (tn.tenants[w].weight == tn.tenants[t].weight && w < t)));
+            if !worse {
+                return Err(format!(
+                    "admission of {:?} at t={} picked tenant {w} (key {}), but tenant \
+                     {t} (key {k}) should have won the DRF tie-break",
+                    ad.job, ad.at, ad.keys[w]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Oracles 12-15 over one multi-tenant stream run (no-ops without a
+/// tenancy table).
+pub fn check_tenancy(outcome: &StreamOutcome) -> Result<(), String> {
+    tenant_slot_quotas_respected(outcome)?;
+    preempted_tasks_complete_exactly_once(outcome)?;
+    only_spot_preempted(outcome)?;
+    drf_admissions_reproducible(outcome)
+}
+
+/// Oracles 5-8 (plus the grant-chain oracle 11 over drain/preemption
+/// reallocations) over one concurrent stream run.
 pub fn check_stream(
     outcome: &StreamOutcome,
     authorized: &[NodeId],
     node_speed: &[f64],
 ) -> Result<(), String> {
     // 5: per-job exactly-once completion over the job-tagged records
+    // (rejected jobs never ran and must have no records)
     for j in &outcome.jobs {
-        let ids: Vec<TaskId> = j.tasks.iter().map(|t| t.id).collect();
         let recs: Vec<TaskRecord> = outcome
             .records
             .iter()
             .filter(|(job, _)| *job == j.job)
             .map(|(_, r)| r.clone())
             .collect();
+        if j.rejected {
+            if !recs.is_empty() {
+                return Err(format!(
+                    "rejected job {:?} ({}) left {} records",
+                    j.job,
+                    j.name,
+                    recs.len()
+                ));
+            }
+            continue;
+        }
+        let ids: Vec<TaskId> = j.tasks.iter().map(|t| t.id).collect();
         tasks_complete_exactly_once(&ids, &recs)
             .map_err(|e| format!("job {:?} ({}): {e}", j.job, j.name))?;
     }
-    let total: usize = outcome.jobs.iter().map(|j| j.tasks.len()).sum();
+    let total: usize =
+        outcome.jobs.iter().filter(|j| !j.rejected).map(|j| j.tasks.len()).sum();
     if total != outcome.records.len() {
         return Err(format!(
             "{} records for {total} submitted tasks across the stream",
@@ -361,10 +544,13 @@ pub fn check_stream(
     no_slot_double_booking(&plain)?;
     // 7: cross-job per-slot reservation sums on the shared calendar
     reservations_within_capacity(&outcome.reservations)?;
-    // 8: stream makespan bounds
+    // 11: drain/preemption grant moves form coherent old→new chains
+    reallocation_preserves_grant_accounting(&outcome.reallocs, &outcome.reservations)?;
+    // 8: stream makespan bounds (admitted jobs only)
     let jobs: Vec<(Secs, Vec<TaskSpec>)> = outcome
         .jobs
         .iter()
+        .filter(|j| !j.rejected)
         .map(|j| (Secs(j.submitted_at), j.tasks.clone()))
         .collect();
     stream_makespan_lower_bound(&jobs, outcome.last_finish, authorized, node_speed)
@@ -593,6 +779,187 @@ mod tests {
         let burst = vec![(Secs(0.0), wave(2)), (Secs(0.0), wave(2))];
         assert!(stream_makespan_lower_bound(&burst, 15.0, &nodes, &[]).is_err());
         assert!(stream_makespan_lower_bound(&burst, 20.0, &nodes, &[]).is_ok());
+    }
+
+    mod tenancy {
+        use super::*;
+        use crate::mapreduce::JobId;
+        use crate::metrics::{JobMetrics, StreamStats};
+        use crate::scenario::{
+            AdmissionAudit, JobOutcome, PreemptionAudit, TenancySpec, TenantSpec,
+        };
+        use crate::util::Secs;
+
+        fn empty_outcome(tenants: Option<TenancySpec>) -> StreamOutcome {
+            StreamOutcome {
+                jobs: Vec::new(),
+                records: Vec::new(),
+                reservations: Vec::new(),
+                last_finish: 0.0,
+                makespan: 0.0,
+                stats: StreamStats::from_jobs(&[], &[]),
+                queued_jobs: 0,
+                rebalances: 0,
+                tenants,
+                tenant_stats: Vec::new(),
+                fairness_jain: 1.0,
+                admissions: Vec::new(),
+                preemptions: Vec::new(),
+                reallocs: Vec::new(),
+                rejected_jobs: 0,
+            }
+        }
+
+        fn job(jid: usize, tenant: &str, admitted: f64, n_tasks: usize) -> JobOutcome {
+            use crate::hdfs::BlockId;
+            let base = jid * 10;
+            JobOutcome {
+                job: JobId(jid),
+                name: format!("j{jid}"),
+                submitted_at: admitted,
+                admitted_at: admitted,
+                gate: admitted,
+                queued: false,
+                metrics: JobMetrics { mt: 0.0, rt: 0.0, jt: 0.0, lr: 1.0 },
+                isolated_jt: 0.0,
+                slowdown: 1.0,
+                tasks: (0..n_tasks)
+                    .map(|i| TaskSpec::map(base + i, BlockId(0), 64.0, Secs(10.0), 0.0))
+                    .collect(),
+                tenant: Some(tenant.into()),
+                rejected: false,
+            }
+        }
+
+        fn spec(quota: usize) -> TenancySpec {
+            let mut a = TenantSpec::named("a");
+            a.slot_quota = quota;
+            TenancySpec { tenants: vec![a] }
+        }
+
+        #[test]
+        fn quota_sweep_flags_instantaneous_oversubscription() {
+            // j0 holds [0, 10), j1 holds [10, 20): back-to-back at the
+            // boundary stays within a 2-slot quota (release-then-admit)
+            let mut out = empty_outcome(Some(spec(2)));
+            out.jobs = vec![job(0, "a", 0.0, 2), job(1, "a", 10.0, 2)];
+            out.records = vec![
+                (JobId(0), rec(0, 0, 0.0, 10.0)),
+                (JobId(0), rec(1, 1, 0.0, 10.0)),
+                (JobId(1), rec(10, 0, 10.0, 20.0)),
+                (JobId(1), rec(11, 1, 10.0, 20.0)),
+            ];
+            assert!(tenant_slot_quotas_respected(&out).is_ok());
+            // overlapping holds breach the quota at t=5
+            out.jobs[1].admitted_at = 5.0;
+            out.records[2].1 = rec(10, 0, 5.0, 20.0);
+            assert!(tenant_slot_quotas_respected(&out).is_err());
+            // an uncapped tenant never trips the sweep
+            let mut free = empty_outcome(Some(spec(usize::MAX)));
+            free.jobs = out.jobs.clone();
+            free.records = out.records.clone();
+            assert!(tenant_slot_quotas_respected(&free).is_ok());
+        }
+
+        #[test]
+        fn preempted_tasks_must_still_complete_exactly_once() {
+            let mut out = empty_outcome(Some(spec(usize::MAX)));
+            let hit = |task: usize| PreemptionAudit {
+                at: 1.0,
+                task: TaskId(task),
+                victim: JobId(0),
+                victim_tenant: "a".into(),
+                by: JobId(1),
+            };
+            out.records = vec![(JobId(0), rec(3, 0, 5.0, 9.0))];
+            out.preemptions = vec![hit(3)];
+            assert!(preempted_tasks_complete_exactly_once(&out).is_ok());
+            // a lost preempted task is flagged
+            out.preemptions = vec![hit(4)];
+            assert!(preempted_tasks_complete_exactly_once(&out).is_err());
+            // and so is a duplicated one
+            out.preemptions = vec![hit(3)];
+            out.records.push((JobId(0), rec(3, 1, 9.0, 12.0)));
+            assert!(preempted_tasks_complete_exactly_once(&out).is_err());
+        }
+
+        #[test]
+        fn preemption_class_rules_are_enforced() {
+            let mut prod = TenantSpec::named("prod");
+            prod.class = TenantClass::Guaranteed;
+            let batch = TenantSpec::named("batch");
+            let tn = TenancySpec { tenants: vec![prod, batch] };
+            let mut out = empty_outcome(Some(tn));
+            out.jobs = vec![job(0, "batch", 0.0, 1), job(1, "prod", 1.0, 1)];
+            out.records = vec![
+                (JobId(0), rec(0, 0, 0.0, 5.0)),
+                (JobId(1), rec(10, 1, 1.0, 4.0)),
+            ];
+            let hit = |victim_tenant: &str, by: usize| PreemptionAudit {
+                at: 1.0,
+                task: TaskId(0),
+                victim: JobId(0),
+                victim_tenant: victim_tenant.into(),
+                by: JobId(by),
+            };
+            out.preemptions = vec![hit("batch", 1)];
+            assert!(only_spot_preempted(&out).is_ok());
+            // a guaranteed victim is flagged
+            out.preemptions = vec![hit("prod", 1)];
+            assert!(only_spot_preempted(&out).is_err());
+            // a spot preemptor is flagged
+            out.preemptions = vec![hit("batch", 0)];
+            assert!(only_spot_preempted(&out).is_err());
+        }
+
+        #[test]
+        fn drf_decisions_must_match_their_logged_keys() {
+            let mut heavy = TenantSpec::named("heavy");
+            heavy.weight = 2.0;
+            let light = TenantSpec::named("light");
+            let tn = TenancySpec { tenants: vec![heavy, light] };
+            let mut out = empty_outcome(Some(tn));
+            let pick = |tenant: usize, keys: Vec<f64>| AdmissionAudit {
+                at: 0.0,
+                job: JobId(0),
+                tenant,
+                keys,
+            };
+            // clear minimum
+            out.admissions = vec![pick(1, vec![0.5, 0.1])];
+            assert!(drf_admissions_reproducible(&out).is_ok());
+            // winner was not the minimum: flagged
+            out.admissions = vec![pick(0, vec![0.5, 0.1])];
+            assert!(drf_admissions_reproducible(&out).is_err());
+            // equal keys: the heavier tenant must win
+            out.admissions = vec![pick(0, vec![0.2, 0.2])];
+            assert!(drf_admissions_reproducible(&out).is_ok());
+            out.admissions = vec![pick(1, vec![0.2, 0.2])];
+            assert!(drf_admissions_reproducible(&out).is_err());
+            // an ineligible (infinite-key) rival never outranks the pick
+            out.admissions = vec![pick(0, vec![0.9, f64::INFINITY])];
+            assert!(drf_admissions_reproducible(&out).is_ok());
+            // picking an ineligible tenant is flagged
+            out.admissions = vec![pick(1, vec![0.9, f64::INFINITY])];
+            assert!(drf_admissions_reproducible(&out).is_err());
+        }
+
+        #[test]
+        fn check_stream_tolerates_rejected_jobs() {
+            let mut out = empty_outcome(Some(spec(1)));
+            let mut ok = job(0, "a", 0.0, 1);
+            ok.tasks = vec![TaskSpec::map(0, crate::hdfs::BlockId(0), 64.0, Secs(10.0), 0.0)];
+            let mut rej = job(1, "a", 1.0, 2);
+            rej.rejected = true;
+            out.jobs = vec![ok, rej];
+            out.records = vec![(JobId(0), rec(0, 0, 0.0, 10.0))];
+            out.last_finish = 10.0;
+            let nodes = [NodeId(0)];
+            assert!(check_stream(&out, &nodes, &[]).is_ok());
+            // a rejected job with records is flagged
+            out.records.push((JobId(1), rec(10, 0, 10.0, 12.0)));
+            assert!(check_stream(&out, &nodes, &[]).is_err());
+        }
     }
 
     #[test]

@@ -14,7 +14,8 @@ use bass::experiments::run_example3;
 use bass::mapreduce::{TaskId, TaskSpec};
 use bass::runtime::CostModel;
 use bass::scenario::{
-    AdmissionPolicy, ScenarioSpec, SimSession, Submission, SubmissionBody,
+    AdmissionPolicy, ScenarioSpec, SimSession, Submission, SubmissionBody, TenancySpec,
+    TenantClass, TenantSpec,
 };
 use bass::sched::SchedulerKind;
 use bass::util::Secs;
@@ -91,6 +92,7 @@ fn stream_three_job_overlap_trace_is_bit_identical() {
         let sub = |at: f64, name: &str, ts: Vec<TaskSpec>| Submission {
             at_secs: at,
             body: SubmissionBody::Explicit { name: name.into(), tasks: ts, slowstart: 1.0 },
+            tenant: None,
         };
         let subs = vec![
             sub(0.0, "wave-0", wave(&tasks[0..3])),
@@ -138,6 +140,107 @@ fn stream_three_job_overlap_trace_is_bit_identical() {
         ));
     }
     check("stream_example1.trace", &out);
+}
+
+/// The same three waves re-run as two tenants — "prod" (guaranteed, DRF
+/// weight 2, waves 0 and 2) against "batch" (spot, weight 1, wave 1) —
+/// under the unlimited admission policy. With no cap and no quotas
+/// every arrival admits at its own submit instant, so tenancy here is
+/// pure attribution: the task records must stay bitwise identical to
+/// the FIFO stream above (asserted in-test against a tenancy-free run),
+/// while the fixture pins the hand-derived tenant ledger — which tenant
+/// owned which job, the DRF admission order, and each tenant's last
+/// finish (prod inherits the stream makespan on all three schedulers;
+/// batch's single wave lands at 29 / 29 / 27).
+#[test]
+fn stream_two_tenant_ledger_is_bit_identical() {
+    let cost = CostModel::rust_only();
+    let mut tenancy =
+        TenancySpec { tenants: vec![TenantSpec::named("prod"), TenantSpec::named("batch")] };
+    tenancy.tenants[0].weight = 2.0;
+    tenancy.tenants[0].class = TenantClass::Guaranteed;
+    let mut out = String::new();
+    for kind in [SchedulerKind::Hds, SchedulerKind::Bar, SchedulerKind::Bass] {
+        let run = |tenanted: bool| {
+            let mut spec = ScenarioSpec::example1(kind);
+            if tenanted {
+                spec.tenants = Some(tenancy.clone());
+            }
+            let mut sess = SimSession::new(&spec);
+            let tasks = sess.tasks.clone();
+            let wave = |slice: &[TaskSpec]| -> Vec<TaskSpec> {
+                slice
+                    .iter()
+                    .cloned()
+                    .enumerate()
+                    .map(|(i, mut t)| {
+                        t.id = TaskId(i);
+                        t
+                    })
+                    .collect()
+            };
+            let sub = |at: f64, name: &str, owner: &str, ts: Vec<TaskSpec>| Submission {
+                at_secs: at,
+                body: SubmissionBody::Explicit { name: name.into(), tasks: ts, slowstart: 1.0 },
+                tenant: tenanted.then(|| owner.to_string()),
+            };
+            let subs = vec![
+                sub(0.0, "wave-0", "prod", wave(&tasks[0..3])),
+                sub(4.0, "wave-1", "batch", wave(&tasks[3..6])),
+                sub(6.0, "wave-2", "prod", wave(&tasks[6..9])),
+            ];
+            sess.run_stream(subs, AdmissionPolicy::default(), &cost)
+        };
+        let fifo = run(false);
+        let o = run(true);
+        assert_eq!(fifo.records.len(), o.records.len(), "{}", kind.label());
+        for ((ja, a), (jb, b)) in fifo.records.iter().zip(&o.records) {
+            assert!(
+                ja == jb && a.task == b.task && a.node == b.node && a.finish == b.finish,
+                "{}: attribution-only tenancy perturbed the schedule",
+                kind.label()
+            );
+        }
+        assert_eq!(fifo.makespan.to_bits(), o.makespan.to_bits(), "{}", kind.label());
+        out.push_str(&format!("== {} ==\n", kind.label()));
+        for j in &o.jobs {
+            out.push_str(&format!(
+                "job={} name={} tenant={} submit={:.6} admitted={:.6} jt={:.6}\n",
+                j.job.0,
+                j.name,
+                j.tenant.as_deref().unwrap_or("-"),
+                j.submitted_at,
+                j.admitted_at,
+                j.metrics.jt
+            ));
+        }
+        for a in &o.admissions {
+            out.push_str(&format!("admit at={:.6} job={} tenant={}\n", a.at, a.job.0, a.tenant));
+        }
+        for t in &o.tenant_stats {
+            let last = o
+                .records
+                .iter()
+                .filter(|(jid, _)| {
+                    o.jobs
+                        .iter()
+                        .any(|j| j.job == *jid && j.tenant.as_deref() == Some(t.tenant.as_str()))
+                })
+                .map(|(_, r)| r.finish.0)
+                .fold(0.0, f64::max);
+            out.push_str(&format!(
+                "tenant={} weight={:.6} jobs={} rejected={} last_finish={last:.6}\n",
+                t.tenant, t.weight, t.jobs, t.rejected
+            ));
+        }
+        out.push_str(&format!(
+            "makespan={:.6} preemptions={} rejected={}\n",
+            o.makespan,
+            o.preemptions.len(),
+            o.rejected_jobs
+        ));
+    }
+    check("stream_tenancy_example1.trace", &out);
 }
 
 /// Example 1 re-derived with its multi-replica blocks (2 holders per

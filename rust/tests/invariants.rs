@@ -16,7 +16,7 @@
 use bass::runtime::CostModel;
 use bass::scenario::{
     BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec, SimSession,
-    StreamSpec, TopologyShape, WorkloadSpec,
+    StreamSpec, TenancySpec, TenantClass, TenantSpec, TopologyShape, WorkloadSpec,
 };
 use bass::sched::SchedulerKind;
 use bass::testkit::{forall, oracles};
@@ -232,6 +232,7 @@ fn sparse_streams_never_slow_jobs_down() {
                     kind: if i % 2 == 0 { JobKind::Sort } else { JobKind::Wordcount },
                     data_mb: if i % 3 == 0 { 300.0 } else { 150.0 },
                 },
+                tenant: None,
             })
             .collect();
         for kind in ALL {
@@ -285,6 +286,132 @@ fn deterministic_burst_contends_and_satisfies_the_oracles() {
         );
         assert!(out.queued_jobs > 0, "{}: the admission cap must bite", kind.label());
     }
+}
+
+// ---- multi-tenant streams ----
+
+#[derive(Debug)]
+struct TenancyCase {
+    stream: StreamCase,
+    tenants: TenancySpec,
+}
+
+fn gen_tenancy_case(r: &mut XorShift) -> TenancyCase {
+    let n_tenants = 2 + r.below(2); // 2..=3
+    let tenants = (0..n_tenants)
+        .map(|i| {
+            let mut t = TenantSpec::named(format!("t{i}"));
+            t.weight = 1.0 + r.uniform(0.0, 3.0);
+            if r.below(2) == 0 {
+                t.slot_quota = 4 + r.below(40);
+            }
+            if r.below(2) == 0 {
+                t.bw_quota = 50.0 + r.uniform(0.0, 400.0);
+            }
+            if r.below(2) == 0 {
+                t.class = TenantClass::Guaranteed;
+                if r.below(2) == 0 {
+                    t.deadline_secs = Some(120.0 + r.uniform(0.0, 600.0));
+                }
+            }
+            t
+        })
+        .collect();
+    TenancyCase { stream: gen_stream_case(r), tenants: TenancySpec { tenants } }
+}
+
+#[test]
+fn tenancy_oracles_hold_for_all_schedulers_under_multitenant_storms() {
+    // random tenant mixes (weights, quotas, classes, deadlines) over
+    // random arrival storms: the stream oracles AND the tenancy oracles
+    // (quota caps, exactly-once preempted completion, no guaranteed
+    // preemption, reproducible DRF order) must all hold; every job is
+    // accounted for as completed or rejected
+    let cost = CostModel::rust_only();
+    forall(0x7E1A17, iters(10), gen_tenancy_case, |case| {
+        let spec = stream_spec_for(&case.stream);
+        for kind in ALL {
+            let mut scen = stream_case_spec(&case.stream, kind);
+            scen.tenants = Some(case.tenants.clone());
+            let mut sess = SimSession::new(&scen);
+            let out = sess.run_stream(spec.submissions(), spec.policy(), &cost);
+            oracles::check_stream(&out, &sess.nodes, &sess.spec.node_speed)
+                .map_err(|e| format!("{}: {e}", kind.label()))?;
+            oracles::check_tenancy(&out).map_err(|e| format!("{}: {e}", kind.label()))?;
+            if out.jobs.len() != case.stream.jobs {
+                return Err(format!(
+                    "{}: {} of {} jobs accounted for",
+                    kind.label(),
+                    out.jobs.len(),
+                    case.stream.jobs
+                ));
+            }
+            for j in &out.jobs {
+                if j.tenant.is_none() {
+                    return Err(format!("{}: job {} has no tenant", kind.label(), j.name));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_default_tenant_is_bitwise_identical_to_the_fifo_stream() {
+    // the differential pin: one default-weight tenant (and, by
+    // construction, an absent `[tenants]` table) must reproduce the FIFO
+    // stream path exactly — same records, same float bits — for every
+    // scheduler under random arrival storms
+    let cost = CostModel::rust_only();
+    forall(0x7E4A47, iters(6), gen_stream_case, |case| {
+        let spec = stream_spec_for(case);
+        for kind in ALL {
+            let mut fifo_sess = SimSession::new(&stream_case_spec(case, kind));
+            let fifo = fifo_sess.run_stream(spec.submissions(), spec.policy(), &cost);
+            let mut scen = stream_case_spec(case, kind);
+            scen.tenants = Some(TenancySpec::single_default());
+            let mut sess = SimSession::new(&scen);
+            let tn = sess.run_stream(spec.submissions(), spec.policy(), &cost);
+            if fifo.makespan.to_bits() != tn.makespan.to_bits()
+                || fifo.last_finish.to_bits() != tn.last_finish.to_bits()
+                || fifo.queued_jobs != tn.queued_jobs
+                || fifo.records.len() != tn.records.len()
+                || fifo.jobs.len() != tn.jobs.len()
+                || !tn.preemptions.is_empty()
+                || tn.rejected_jobs != 0
+            {
+                return Err(format!("{}: single-tenant run diverged from FIFO", kind.label()));
+            }
+            for ((ja, a), (jb, b)) in fifo.records.iter().zip(&tn.records) {
+                if ja != jb || a.task != b.task || a.node != b.node || a.finish != b.finish {
+                    return Err(format!(
+                        "{}: single-tenant record for {:?} diverged",
+                        kind.label(),
+                        a.task
+                    ));
+                }
+            }
+            for (a, b) in fifo.jobs.iter().zip(&tn.jobs) {
+                if a.admitted_at.to_bits() != b.admitted_at.to_bits()
+                    || a.metrics.jt.to_bits() != b.metrics.jt.to_bits()
+                {
+                    return Err(format!(
+                        "{}: single-tenant job {} timing diverged",
+                        kind.label(),
+                        a.name
+                    ));
+                }
+                if b.tenant.as_deref() != Some("default") {
+                    return Err(format!(
+                        "{}: job {} not attributed to the default tenant",
+                        kind.label(),
+                        a.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -2375,6 +2375,7 @@ fn stream_chain(case: &ExplicitPinCase, kind: SchedulerKind) -> Vec<Vec<TaskReco
                 tasks: tasks.clone(),
                 slowstart: 1.0,
             },
+            tenant: None,
         })
         .collect();
     let out = sess.run_stream(subs, AdmissionPolicy::default(), &cost);
