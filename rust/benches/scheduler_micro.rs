@@ -3,18 +3,20 @@
 //! cost-model calls. This is the §Perf driver (EXPERIMENTS.md).
 //!
 //! Measured results land in `BENCH_calendar.json`, `BENCH_flownet.json`,
-//! `BENCH_sched.json` and `BENCH_scale.json` at the repo root; the CI
-//! bench-smoke job runs
+//! `BENCH_sched.json`, `BENCH_scale.json` and `BENCH_stream.json` at the
+//! repo root; the CI bench-smoke job runs
 //! this binary with `BASS_BENCH_QUICK=1` and fails on >2x regressions
 //! against the committed baselines (tools/check_bench_regression.py).
 
 use bass::bench_harness::{Bencher, Stats};
 use bass::cluster::Ledger;
-use bass::experiments::{fat_scale_spec, scale_spec};
+use bass::experiments::{fat_scale_spec, scale_spec, stream_cluster};
 use bass::hdfs::{Namenode, PlacementPolicy};
 use bass::mapreduce::TaskSpec;
 use bass::runtime::{CostInputs, CostModel};
-use bass::scenario::SimSession;
+use bass::scenario::{
+    checkpoint_soak, resume_soak, AdmissionPolicy, SimSession, SoakConfig, Submission,
+};
 use bass::sched::cost::eval_batch;
 use bass::sched::{Bass, Hds, SchedCtx, Scheduler, SchedulerKind};
 use bass::sdn::{Controller, SlotCalendar, TrafficClass};
@@ -22,6 +24,7 @@ use bass::sim::FlowNet;
 use bass::topology::builders::{fat_tree, tree_cluster};
 use bass::topology::{LinkId, NodeId, PathCache};
 use bass::util::{Secs, XorShift, BLOCK_MB};
+use bass::workload::{LoadShape, LoadStage, SizeDist};
 
 fn big_cluster(
     n_sw: usize,
@@ -324,6 +327,57 @@ fn main() {
         "kilonode fat-tree BASS round (1024 hosts / 2048 tasks, per-rack shards); batched cost kernel on a 2048x512 matrix; hierarchical PathCache build at 1024 hosts",
         "Perf ten-kilonode tier: sharded idle heaps + shard-grouped scans, blocked build_inputs with shared row memo + row-chunked eval, pod-level two-tier path cache",
         &scale_cases,
+    );
+
+    // soak-stream tier (BENCH_stream.json): a shaped 24-job trace —
+    // ramp in, burst, steady soak — through the bounded-memory soak
+    // driver (drain + arena compaction + calendar GC on the hot path),
+    // plus the mid-trace checkpoint/resume round trip
+    let mut stream_cases: Vec<(String, Stats)> = Vec::new();
+    let soak_shape = LoadShape::new(
+        vec![
+            LoadStage::ramp(8, 40.0, 20.0),
+            LoadStage::spike(4, 20.0, 3.0),
+            LoadStage::soak(12, 25.0),
+        ],
+        SizeDist::Menu(vec![150.0, 300.0]),
+        None,
+    )
+    .expect("bench load shape is valid");
+    let soak_subs: Vec<Submission> = {
+        let mut rng = XorShift::new(4242);
+        soak_shape.generate(&mut rng).into_iter().map(Submission::from).collect()
+    };
+    let soak_spec = stream_cluster(SchedulerKind::Bass);
+    let soak_policy = AdmissionPolicy { max_active: 6, min_free_slots: 0 };
+    let soak_cfg =
+        SoakConfig { target_p95_slowdown: 2.0, sketch_cap: 256, gc_period_secs: 120.0 };
+    {
+        let cost = CostModel::rust_only();
+        let stats = b.bench("stream_soak/24jobs_shaped_bass_drain", || {
+            let mut sess = SimSession::new(&soak_spec);
+            sess.run_soak(soak_subs.clone(), soak_policy, &cost, soak_cfg).jobs
+        });
+        stream_cases.push(("stream_soak".to_string(), stats));
+    }
+    {
+        let cost = CostModel::rust_only();
+        let half = soak_subs.len() / 2;
+        let stats = b.bench("soak_checkpoint/snapshot+resume_mid_trace", || {
+            let mut sess = SimSession::new(&soak_spec);
+            let ckpt =
+                checkpoint_soak(&mut sess, &soak_subs, half, soak_policy, &cost, soak_cfg);
+            let mut resumed = SimSession::new(&soak_spec);
+            resume_soak(&mut resumed, ckpt, soak_subs[half..].to_vec(), &cost).jobs
+        });
+        stream_cases.push(("soak_checkpoint".to_string(), stats));
+    }
+    write_json(
+        "BENCH_stream.json",
+        "stream_soak",
+        "full soak drain of a shaped 24-job trace (ramp 8, spike 4, soak 12; max_active 6) on the 12-host stream cluster; mid-trace checkpoint + resume of the same trace",
+        "Perf soak tier: bounded-memory drain (finished-record forgetting, placement-arena compaction, calendar GC) and the snapshot/resume path that replays no completed work",
+        &stream_cases,
     );
 }
 

@@ -1,20 +1,21 @@
 //! Hand-rolled CLI (clap is not vendored offline). Subcommands map 1:1 to
 //! the experiment drivers; `bass --help` documents them.
 
-use crate::config::{ExperimentConfig, FairnessRun, RunConfig, ScenarioSweep, StreamRun};
+use crate::config::{ExperimentConfig, FairnessRun, RunConfig, ScenarioSweep, SoakRun, StreamRun};
 use crate::coordinator::{ClusterSetup, Coordinator};
 use crate::experiments::{
     ablate_background, ablate_heterogeneity, ablate_slot_duration, run_dynamics,
     run_estimate, run_example1, run_example3, run_fairness_sweep, run_fairness_sweep_with,
-    run_fig5, run_scale, run_scale_fat_with, run_skew, run_stream_sweep_with, run_table1,
-    FairnessPoint, SchedulerKind, StreamPoint, Table1Config,
+    run_fig5, run_scale, run_scale_fat_with, run_skew, run_soak_sweep_with,
+    run_stream_sweep_with, run_table1, FairnessPoint, SchedulerKind, SoakPoint, StreamPoint,
+    Table1Config,
 };
 use crate::metrics::NodeTimeline;
 use crate::runtime::CostModel;
 use crate::scenario::{run_dynamic_grid, run_job_grid, MitigationSpec, SpeculationMode};
 use crate::trace;
 use crate::util::XorShift;
-use crate::workload::{JobKind, TraceGen};
+use crate::workload::{JobKind, LoadShape, SizeDist, TraceGen};
 
 pub const HELP: &str = "\
 bass — Bandwidth-Aware Scheduling with SDN in Hadoop (reproduction)
@@ -58,6 +59,14 @@ COMMANDS:
                         instead of FIFO; reports per-tenant slowdowns,
                         SLO attainment, Jain index, rejections and
                         preemptions
+  soak [--jobs N]       Sustained-load soak sweep: BASS/BAR/HDS under one
+       [--gap g]        shaped arrival trace (ramp in, burst at 4x, steady
+       [--seed N]       soak at mean gap g seconds) played through the
+       [--target x]     bounded-memory soak driver; per-job state folds
+                        into streaming sketches at completion, and the
+                        figure of merit is jobs/hour sustained while the
+                        p95 slowdown stays at or under the target
+                        (default 2.0)
   skew [--reps r1,r2]   Replication/skew sweep: HDS/BAR/BASS (and BASS under
                         the legacy idle-only source rule) across placement
                         policies (random, rack_aware, hotspot) at each
@@ -116,6 +125,20 @@ DEFINE YOUR OWN STREAM:
     max_active (admission cap), min_free_slots (slot gate), seed
   Every scheduler at one rate faces the identical Poisson arrival trace;
   per-job slowdown is measured against the same job run alone.
+
+DEFINE YOUR OWN SOAK:
+  `bass run --config my.toml` with `run = \"soak\"` plays a shaped trace
+  through the bounded-memory soak driver; the optional [load] table sets
+    jobs, gap_secs (shorthand: the default ramp/burst/soak staging), or
+    stages = \"warmup, burst, steady\" plus one [load.<stage>] table each
+    with shape = \"soak\"|\"ramp\"|\"spike\"|\"concentrated\", jobs, gap_secs
+    (to_gap_secs for ramp, factor for spike, within_secs for
+    concentrated); sizes_mb = [..] or pareto_alpha/pareto_min_mb/
+    pareto_cap_mb (heavy-tailed sizes); diurnal_amplitude +
+    diurnal_period_secs; seed, max_active, min_free_slots,
+    target_p95_slowdown, sketch_cap, gc_period_secs, threads
+  Every scheduler faces the identical shaped trace; the report is O(1)
+  in stream length (sketches + counters, no per-job outcome list).
 
 DEFINE YOUR OWN FAIRNESS SWEEP:
   `bass run --config my.toml` with `run = \"fairness\"` plays the
@@ -543,6 +566,73 @@ pub fn run(args: Vec<String>) -> i32 {
             ));
             0
         }
+        "soak" => {
+            let mut run = SoakRun::default();
+            let mut jobs = run.shape.total_jobs();
+            let mut gap = 30.0;
+            // same contract as --reps/--rates: a typo'd knob must error,
+            // not silently soak a different load
+            if let Some(raw) = opt(&args, "--jobs") {
+                match raw.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => jobs = n,
+                    _ => {
+                        eprintln!("--jobs must be a positive job count, got {raw:?}");
+                        return 2;
+                    }
+                }
+            }
+            if let Some(raw) = opt(&args, "--gap") {
+                match raw.trim().parse::<f64>() {
+                    Ok(g) if g > 0.0 && g.is_finite() => gap = g,
+                    _ => {
+                        eprintln!("--gap must be a positive mean gap (seconds), got {raw:?}");
+                        return 2;
+                    }
+                }
+            }
+            run.shape = LoadShape::new(
+                SoakRun::staged(jobs, gap),
+                SizeDist::Menu(vec![150.0, 300.0, 600.0]),
+                None,
+            )
+            .expect("staged default shape is valid");
+            if let Some(raw) = opt(&args, "--seed") {
+                match raw.trim().parse::<u64>() {
+                    Ok(s) => run.seed = s,
+                    _ => {
+                        eprintln!("--seed must be a non-negative integer, got {raw:?}");
+                        return 2;
+                    }
+                }
+            }
+            if let Some(raw) = opt(&args, "--target") {
+                match raw.trim().parse::<f64>() {
+                    Ok(x) if x >= 1.0 && x.is_finite() => run.target_p95_slowdown = x,
+                    _ => {
+                        eprintln!(
+                            "--target is a p95-slowdown SLO: must be >= 1, got {raw:?}"
+                        );
+                        return 2;
+                    }
+                }
+            }
+            let threads = opt_threads(&args);
+            println!(
+                "== sustained-load soak sweep ({jobs} jobs, {} stages, target p95 \
+                 slowdown {:.1}x, {threads} threads) ==",
+                run.shape.stages().len(),
+                run.target_p95_slowdown
+            );
+            print_soak_points(&run_soak_sweep_with(
+                &run.shape,
+                run.seed,
+                run.policy(),
+                run.soak_config(),
+                &CostModel::rust_only(),
+                threads,
+            ));
+            0
+        }
         "scenario" => {
             let Some(path) = opt(&args, "--config") else {
                 eprintln!("scenario requires --config <file>\n\n{HELP}");
@@ -612,6 +702,28 @@ pub fn run(args: Vec<String>) -> i32 {
                         if s.hosts.is_empty() { None } else { Some(s.hosts.clone()) };
                     println!("(scale sweep from {path})");
                     run_scale_cmd(s.fat, hosts, s.shards, threads)
+                }
+                RunConfig::Soak => {
+                    let s = cfg.soak.expect("soak run carries its load");
+                    let threads = opt(&args, "--threads")
+                        .and_then(|x| x.parse().ok())
+                        .map(|t: usize| t.max(1))
+                        .unwrap_or(s.threads);
+                    println!(
+                        "== sustained-load soak sweep from {path} ({} jobs, {} stages, \
+                         {threads} threads) ==",
+                        s.shape.total_jobs(),
+                        s.shape.stages().len()
+                    );
+                    print_soak_points(&run_soak_sweep_with(
+                        &s.shape,
+                        s.seed,
+                        s.policy(),
+                        s.soak_config(),
+                        &cost,
+                        threads,
+                    ));
+                    0
                 }
                 RunConfig::Fairness => {
                     let f = cfg.fairness.expect("fairness run carries its sweep");
@@ -784,6 +896,29 @@ fn print_stream_points(pts: &[StreamPoint]) {
             p.mean_slowdown,
             p.makespan,
             p.queued
+        );
+    }
+}
+
+fn print_soak_points(pts: &[SoakPoint]) {
+    println!(
+        "{:<5} {:>6} {:>7} {:>9} {:>9} {:>9} {:>8} {:>8} {:>5} {:>8}",
+        "sched", "jobs", "queued", "meanJT", "p95JT", "p95Slow", "jobs/h", "sust/h",
+        "gc", "peakRec"
+    );
+    for p in pts {
+        println!(
+            "{:<5} {:>6} {:>7} {:>8.1}s {:>8.1}s {:>8.2}x {:>8.1} {:>8.1} {:>5} {:>8}",
+            p.scheduler,
+            p.jobs,
+            p.queued,
+            p.mean_jt,
+            p.p95_jt,
+            p.p95_slowdown,
+            p.jobs_per_hour,
+            p.sustained_jobs_per_hour,
+            p.compactions,
+            p.peak_live_records
         );
     }
 }
@@ -1087,6 +1222,59 @@ mod tests {
             let args: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
             assert_eq!(run(args), 2, "{bad:?}");
         }
+    }
+
+    #[test]
+    fn soak_subcommand_runs() {
+        let args: Vec<String> =
+            ["soak", "--jobs", "4", "--gap", "20", "--seed", "7", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(args), 0);
+    }
+
+    #[test]
+    fn soak_subcommand_rejects_bad_flags() {
+        // same strictness as --reps/--rates: no silent default sweep
+        for bad in [
+            vec!["soak", "--jobs", "0"],
+            vec!["soak", "--jobs", "abc"],
+            vec!["soak", "--gap", "0"],
+            vec!["soak", "--gap", "-5"],
+            vec!["soak", "--gap", "abc"],
+            vec!["soak", "--seed", "1.5"],
+            vec!["soak", "--target", "0.5"],
+            vec!["soak", "--target", "abc"],
+        ] {
+            let args: Vec<String> = bad.iter().map(|s| s.to_string()).collect();
+            assert_eq!(run(args), 2, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn soak_config_route_runs_and_rejects_typos() {
+        let dir = std::env::temp_dir().join("bass_cli_soak_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("soak.toml");
+        std::fs::write(
+            &f,
+            "run = \"soak\"\nthreads = 2\n\
+             [load]\nstages = \"warmup, steady\"\nsizes_mb = [150]\nseed = 7\n\
+             gc_period_secs = 60\n\
+             [load.warmup]\nshape = \"ramp\"\njobs = 2\ngap_secs = 40\nto_gap_secs = 20\n\
+             [load.steady]\njobs = 2\ngap_secs = 25\n",
+        )
+        .unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), f.display().to_string()]), 0);
+        // a typo'd [load] key is rejected, not silently defaulted
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "run = \"soak\"\n[load]\njob = 4\n").unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), bad.display().to_string()]), 2);
+        // and [load] on a non-soak run is a cross-run error
+        let bad2 = dir.join("bad2.toml");
+        std::fs::write(&bad2, "run = \"stream\"\n[load]\njobs = 4\n").unwrap();
+        assert_eq!(run(vec!["run".into(), "--config".into(), bad2.display().to_string()]), 2);
     }
 
     #[test]

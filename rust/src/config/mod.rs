@@ -8,4 +8,6 @@ pub mod parser;
 pub mod types;
 
 pub use parser::{parse, Value};
-pub use types::{ExperimentConfig, FairnessRun, RunConfig, ScaleRun, ScenarioSweep, StreamRun};
+pub use types::{
+    ExperimentConfig, FairnessRun, RunConfig, ScaleRun, ScenarioSweep, SoakRun, StreamRun,
+};

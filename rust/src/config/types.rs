@@ -3,12 +3,12 @@
 use crate::experiments::{SchedulerKind, Table1Config};
 use crate::hdfs::PlacementPolicy;
 use crate::scenario::{
-    cell_seed, BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec, ScenarioSpec,
-    SpeculationMode, StreamSpec, TenancySpec, TenantClass, TenantSpec, TopologyShape,
-    WorkloadSpec,
+    cell_seed, AdmissionPolicy, BackgroundSpec, DynamicsSpec, InitialLoad, MitigationSpec,
+    ScenarioSpec, SoakConfig, SpeculationMode, StreamSpec, TenancySpec, TenantClass, TenantSpec,
+    TopologyShape, WorkloadSpec,
 };
 use crate::sdn::{QosPolicy, TelemetrySpec};
-use crate::workload::JobKind;
+use crate::workload::{Diurnal, JobKind, LoadShape, LoadStage, SizeDist};
 
 use super::parser::{parse, Table};
 
@@ -28,6 +28,8 @@ pub enum RunConfig {
     Scale,
     /// The multi-tenant fairness sweep (`bass fairness`).
     Fairness,
+    /// The staged-load soak sweep (`bass soak`, see `examples/soak.toml`).
+    Soak,
 }
 
 /// The `[scale]` run: the scalability sweep as a config file — tree or
@@ -66,6 +68,83 @@ pub struct StreamRun {
 impl Default for StreamRun {
     fn default() -> Self {
         Self { spec: StreamSpec::defaults(), rates: vec![120.0, 30.0, 10.0], threads: 1 }
+    }
+}
+
+/// The `[load]` run: a shaped arrival trace (ramp / spike / soak /
+/// concentrated stages, menu or truncated-Pareto sizes, optional
+/// diurnal modulation) played through the bounded-memory soak driver
+/// for BASS/BAR/HDS.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoakRun {
+    /// The staged arrival trace (validated at parse time).
+    pub shape: LoadShape,
+    /// Trace seed (independent of the scenario seed, so schedulers
+    /// compared on one cluster face the identical arrival sequence).
+    pub seed: u64,
+    /// Admission: maximum concurrently active jobs.
+    pub max_active: usize,
+    /// Admission: free authorized nodes required to admit.
+    pub min_free_slots: usize,
+    /// The p95-slowdown SLO the sustained-throughput metric gates on.
+    pub target_p95_slowdown: f64,
+    /// Exact-sample cap per quantile sketch before centroid merging.
+    pub sketch_cap: usize,
+    /// SDN calendar compaction period (virtual seconds).
+    pub gc_period_secs: f64,
+    pub threads: usize,
+}
+
+impl SoakRun {
+    /// The default staging for `jobs` arrivals at mean gap `gap`: a ramp
+    /// in, a burst at 4x the base rate, then a steady soak with the
+    /// remainder. Tiny job counts collapse to a single soak stage.
+    pub fn staged(jobs: usize, gap: f64) -> Vec<LoadStage> {
+        if jobs < 10 {
+            return vec![LoadStage::soak(jobs, gap)];
+        }
+        let ramp = jobs / 5;
+        let spike = jobs / 10;
+        vec![
+            LoadStage::ramp(ramp, 2.0 * gap, gap),
+            LoadStage::spike(spike, gap, 4.0),
+            LoadStage::soak(jobs - ramp - spike, gap),
+        ]
+    }
+
+    /// The soak driver's accounting knobs.
+    pub fn soak_config(&self) -> SoakConfig {
+        SoakConfig {
+            target_p95_slowdown: self.target_p95_slowdown,
+            sketch_cap: self.sketch_cap,
+            gc_period_secs: self.gc_period_secs,
+        }
+    }
+
+    /// The admission policy the run submits under.
+    pub fn policy(&self) -> AdmissionPolicy {
+        AdmissionPolicy { max_active: self.max_active, min_free_slots: self.min_free_slots }
+    }
+}
+
+impl Default for SoakRun {
+    fn default() -> Self {
+        let shape = LoadShape::new(
+            Self::staged(60, 30.0),
+            SizeDist::Menu(vec![150.0, 300.0, 600.0]),
+            None,
+        )
+        .expect("default load shape is valid");
+        Self {
+            shape,
+            seed: 2014,
+            max_active: usize::MAX,
+            min_free_slots: 0,
+            target_p95_slowdown: 2.0,
+            sketch_cap: 256,
+            gc_period_secs: 300.0,
+            threads: 1,
+        }
     }
 }
 
@@ -261,6 +340,8 @@ pub struct ExperimentConfig {
     pub scale: Option<ScaleRun>,
     /// Present when `run = "fairness"`.
     pub fairness: Option<FairnessRun>,
+    /// Present when `run = "soak"`.
+    pub soak: Option<SoakRun>,
 }
 
 impl ExperimentConfig {
@@ -273,6 +354,7 @@ impl ExperimentConfig {
             stream: None,
             scale: None,
             fairness: None,
+            soak: None,
         }
     }
 
@@ -313,6 +395,7 @@ impl ExperimentConfig {
             "stream" => RunConfig::Stream,
             "scale" => RunConfig::Scale,
             "fairness" => RunConfig::Fairness,
+            "soak" => RunConfig::Soak,
             _ => RunConfig::Example1,
         };
         // [scale] mirrors the [hdfs] cross-run contract: the table may
@@ -339,6 +422,19 @@ impl ExperimentConfig {
         } else if run == RunConfig::Fairness {
             // a bare `run = "fairness"` gets the default sweep
             Some(FairnessRun::default())
+        } else {
+            None
+        };
+        // [load] mirrors the [scale]/[fairness] cross-run contract
+        let soak = if t.keys().any(|k| k.starts_with("load.")) {
+            anyhow::ensure!(
+                run == RunConfig::Soak,
+                "[load] requires run = \"soak\" ({run:?} would ignore it)"
+            );
+            Some(parse_load(&t)?)
+        } else if run == RunConfig::Soak {
+            // a bare `run = "soak"` gets the default staged shape
+            Some(SoakRun::default())
         } else {
             None
         };
@@ -407,7 +503,13 @@ impl ExperimentConfig {
                 f.threads = v.max(1);
             }
         }
-        Ok(Self { run, table1: cfg, scenario, stream, scale, fairness })
+        let mut soak = soak;
+        if let Some(s) = &mut soak {
+            if let Some(v) = t.get(".threads").and_then(|v| v.as_usize()) {
+                s.threads = v.max(1);
+            }
+        }
+        Ok(Self { run, table1: cfg, scenario, stream, scale, fairness, soak })
     }
 }
 
@@ -1012,6 +1114,281 @@ fn parse_fairness(t: &Table) -> anyhow::Result<FairnessRun> {
         }
     }
     Ok(f)
+}
+
+/// Parse a `[load]` table into a [`SoakRun`], rejecting unknown keys and
+/// unsafe shapes (mirrors the `[tenants]` contract: a typo'd knob must
+/// error, not silently soak a different load than the user wrote down).
+///
+/// Shape: `stages = "warmup, burst, steady"` declares the stage order,
+/// then one `[load.<stage>]` table per declared stage sets
+/// shape / jobs / gap_secs / to_gap_secs / factor / within_secs. Without
+/// a declaration, top-level `jobs` / `gap_secs` parameterize the default
+/// ramp-spike-soak staging ([`SoakRun::staged`]). Sizes come from either
+/// a `sizes_mb` menu or the truncated-Pareto `pareto_*` triple — never
+/// both — and `diurnal_amplitude` / `diurnal_period_secs` must appear
+/// together.
+fn parse_load(t: &Table) -> anyhow::Result<SoakRun> {
+    const KNOWN: [&str; 16] = [
+        "load.stages",
+        "load.jobs",
+        "load.gap_secs",
+        "load.sizes_mb",
+        "load.pareto_alpha",
+        "load.pareto_min_mb",
+        "load.pareto_cap_mb",
+        "load.diurnal_amplitude",
+        "load.diurnal_period_secs",
+        "load.seed",
+        "load.max_active",
+        "load.min_free_slots",
+        "load.target_p95_slowdown",
+        "load.sketch_cap",
+        "load.gc_period_secs",
+        "load.threads",
+    ];
+    const STAGE_KNOWN: [&str; 6] =
+        ["shape", "jobs", "gap_secs", "to_gap_secs", "factor", "within_secs"];
+    let names: Vec<String> = match t.get("load.stages") {
+        None => Vec::new(),
+        Some(v) => match v.as_str() {
+            Some(s) => {
+                let mut out: Vec<String> = Vec::new();
+                for n in s.split(',') {
+                    let n = n.trim();
+                    anyhow::ensure!(!n.is_empty(), "load.stages holds an empty name");
+                    anyhow::ensure!(
+                        !n.contains('.'),
+                        "stage name {n:?} must not contain a dot"
+                    );
+                    anyhow::ensure!(
+                        !KNOWN.contains(&format!("load.{n}").as_str()),
+                        "stage name {n:?} collides with a [load] knob"
+                    );
+                    anyhow::ensure!(
+                        !out.iter().any(|o| o == n),
+                        "duplicate stage name {n:?} in load.stages"
+                    );
+                    out.push(n.to_string());
+                }
+                anyhow::ensure!(!out.is_empty(), "load.stages is empty");
+                out
+            }
+            None => anyhow::bail!(
+                "load.stages must be a comma-separated string of stage names"
+            ),
+        },
+    };
+    for k in t.keys().filter(|k| k.starts_with("load.")) {
+        if k == "load." || KNOWN.contains(&k.as_str()) {
+            continue;
+        }
+        let rest = &k["load.".len()..];
+        let (name, knob) = match rest.split_once('.') {
+            Some(p) => p,
+            // a bare `load.foo = ...` key: neither a knob nor a stage
+            None => anyhow::bail!(
+                "unknown [load] key {k:?} (declare stages with stages = \"a, b\" \
+                 and configure them in [load.<stage>] tables)"
+            ),
+        };
+        anyhow::ensure!(
+            names.iter().any(|n| n == name),
+            "[load.{name}] is not declared in load.stages"
+        );
+        // an empty knob is the `[load.<stage>]` section marker itself
+        anyhow::ensure!(
+            knob.is_empty() || STAGE_KNOWN.contains(&knob),
+            "unknown [load.{name}] key {knob:?}"
+        );
+    }
+    let usize_of = |k: &str| -> anyhow::Result<Option<usize>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_usize() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[load] {k} must be a non-negative integer"),
+            },
+        }
+    };
+    let f64_of = |k: &str| -> anyhow::Result<Option<f64>> {
+        match t.get(k) {
+            None => Ok(None),
+            Some(v) => match v.as_f64() {
+                Some(x) => Ok(Some(x)),
+                None => anyhow::bail!("[load] {k} must be a number"),
+            },
+        }
+    };
+    let stages = if names.is_empty() {
+        let jobs = usize_of("load.jobs")?.unwrap_or(60);
+        anyhow::ensure!(jobs >= 1, "load.jobs must be at least 1");
+        let gap = f64_of("load.gap_secs")?.unwrap_or(30.0);
+        anyhow::ensure!(gap > 0.0, "load.gap_secs must be positive");
+        SoakRun::staged(jobs, gap)
+    } else {
+        // explicit stages replace the default staging wholesale: the
+        // shorthand knobs would be validated and silently dropped
+        anyhow::ensure!(
+            t.get("load.jobs").is_none() && t.get("load.gap_secs").is_none(),
+            "load.jobs/load.gap_secs parameterize the default staging; \
+             with load.stages configure each [load.<stage>] table instead"
+        );
+        let mut out = Vec::with_capacity(names.len());
+        for name in &names {
+            let stage_f64 = |knob: &str| -> anyhow::Result<Option<f64>> {
+                match t.get(&format!("load.{name}.{knob}")) {
+                    None => Ok(None),
+                    Some(v) => match v.as_f64() {
+                        Some(x) => Ok(Some(x)),
+                        None => anyhow::bail!("stage '{name}': {knob} must be a number"),
+                    },
+                }
+            };
+            let require = |knob: &str, v: Option<f64>| -> anyhow::Result<f64> {
+                v.ok_or_else(|| anyhow::anyhow!("stage '{name}': {knob} is required"))
+            };
+            let forbid = |knob: &str, v: &Option<f64>, shape: &str| -> anyhow::Result<()> {
+                anyhow::ensure!(
+                    v.is_none(),
+                    "stage '{name}': {knob} applies to {shape} stages only"
+                );
+                Ok(())
+            };
+            let jobs = match t.get(&format!("load.{name}.jobs")) {
+                Some(v) => match v.as_usize() {
+                    Some(j) if j >= 1 => j,
+                    _ => anyhow::bail!("stage '{name}': jobs must be a positive integer"),
+                },
+                None => anyhow::bail!("stage '{name}': jobs is required"),
+            };
+            let shape = match t.get(&format!("load.{name}.shape")) {
+                None => "soak",
+                Some(v) => match v.as_str() {
+                    Some(s) => s,
+                    None => anyhow::bail!(
+                        "stage '{name}': shape must be \"soak\", \"ramp\", \"spike\" \
+                         or \"concentrated\""
+                    ),
+                },
+            };
+            let gap = stage_f64("gap_secs")?;
+            let to_gap = stage_f64("to_gap_secs")?;
+            let factor = stage_f64("factor")?;
+            let within = stage_f64("within_secs")?;
+            out.push(match shape {
+                "soak" => {
+                    forbid("to_gap_secs", &to_gap, "ramp")?;
+                    forbid("factor", &factor, "spike")?;
+                    forbid("within_secs", &within, "concentrated")?;
+                    LoadStage::soak(jobs, require("gap_secs", gap)?)
+                }
+                "ramp" => {
+                    forbid("factor", &factor, "spike")?;
+                    forbid("within_secs", &within, "concentrated")?;
+                    LoadStage::ramp(
+                        jobs,
+                        require("gap_secs", gap)?,
+                        require("to_gap_secs", to_gap)?,
+                    )
+                }
+                "spike" => {
+                    forbid("to_gap_secs", &to_gap, "ramp")?;
+                    forbid("within_secs", &within, "concentrated")?;
+                    LoadStage::spike(jobs, require("gap_secs", gap)?, require("factor", factor)?)
+                }
+                "concentrated" => {
+                    forbid("gap_secs", &gap, "soak/ramp/spike")?;
+                    forbid("to_gap_secs", &to_gap, "ramp")?;
+                    forbid("factor", &factor, "spike")?;
+                    LoadStage::concentrated(jobs, require("within_secs", within)?)
+                }
+                other => anyhow::bail!(
+                    "stage '{name}': unknown shape {other:?} (expected soak | ramp | \
+                     spike | concentrated)"
+                ),
+            });
+        }
+        out
+    };
+    let n_pareto = ["load.pareto_alpha", "load.pareto_min_mb", "load.pareto_cap_mb"]
+        .iter()
+        .filter(|k| t.get(k).is_some())
+        .count();
+    let sizes = if let Some(v) = t.get("load.sizes_mb") {
+        anyhow::ensure!(
+            n_pareto == 0,
+            "load.sizes_mb and load.pareto_* are mutually exclusive size models"
+        );
+        let sizes = match v.as_nums() {
+            Some(x) => x.to_vec(),
+            None => anyhow::bail!("[load] load.sizes_mb must be a number list"),
+        };
+        SizeDist::Menu(sizes)
+    } else if n_pareto > 0 {
+        anyhow::ensure!(
+            n_pareto == 3,
+            "the Pareto size model needs all of load.pareto_alpha, \
+             load.pareto_min_mb and load.pareto_cap_mb"
+        );
+        SizeDist::Pareto {
+            alpha: f64_of("load.pareto_alpha")?.expect("checked present"),
+            min_mb: f64_of("load.pareto_min_mb")?.expect("checked present"),
+            cap_mb: f64_of("load.pareto_cap_mb")?.expect("checked present"),
+        }
+    } else {
+        SizeDist::Menu(vec![150.0, 300.0, 600.0])
+    };
+    let diurnal = match (
+        f64_of("load.diurnal_amplitude")?,
+        f64_of("load.diurnal_period_secs")?,
+    ) {
+        (None, None) => None,
+        (Some(amplitude), Some(period_secs)) => Some(Diurnal { amplitude, period_secs }),
+        _ => anyhow::bail!(
+            "diurnal modulation needs both load.diurnal_amplitude and \
+             load.diurnal_period_secs"
+        ),
+    };
+    let mut s = SoakRun::default();
+    // range validation (gap positivity, Pareto support, amplitude bounds)
+    // lives in the generator's constructor — one authority, no drift
+    s.shape = match LoadShape::new(stages, sizes, diurnal) {
+        Ok(shape) => shape,
+        Err(e) => anyhow::bail!("[load]: {e}"),
+    };
+    if let Some(v) = usize_of("load.seed")? {
+        s.seed = v as u64;
+    }
+    if let Some(v) = usize_of("load.max_active")? {
+        anyhow::ensure!(v >= 1, "load.max_active must admit at least one job");
+        s.max_active = v;
+    }
+    if let Some(v) = usize_of("load.min_free_slots")? {
+        s.min_free_slots = v;
+    }
+    if let Some(v) = f64_of("load.target_p95_slowdown")? {
+        anyhow::ensure!(
+            v >= 1.0,
+            "load.target_p95_slowdown is a slowdown ratio: must be >= 1"
+        );
+        s.target_p95_slowdown = v;
+    }
+    if let Some(v) = usize_of("load.sketch_cap")? {
+        anyhow::ensure!(v >= 1, "load.sketch_cap must be a positive integer");
+        s.sketch_cap = v;
+    }
+    if let Some(v) = f64_of("load.gc_period_secs")? {
+        anyhow::ensure!(v > 0.0, "load.gc_period_secs must be positive");
+        s.gc_period_secs = v;
+    }
+    if let Some(v) = t.get("load.threads") {
+        match v.as_usize() {
+            Some(n) if n >= 1 => s.threads = n,
+            _ => anyhow::bail!("load.threads must be a positive integer"),
+        }
+    }
+    Ok(s)
 }
 
 fn apply_table1(cfg: &mut Table1Config, t: &Table) {
@@ -1701,6 +2078,134 @@ seed = 42
             "run = \"fairness\"\n[fairness]\njobs = 2.5\n",
             "run = \"fairness\"\n[fairness]\nthreads = 0\n",
             "run = \"table1\"\n[fairness]\njobs = 4\n", // cross-run
+        ] {
+            assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn load_run_parses_staged_shape_and_driver_knobs() {
+        let c = ExperimentConfig::from_str(
+            "run = \"soak\"\nthreads = 2\n[load]\nstages = \"warmup, burst, steady\"\n\
+             pareto_alpha = 1.5\npareto_min_mb = 100\npareto_cap_mb = 600\n\
+             diurnal_amplitude = 0.3\ndiurnal_period_secs = 86400\n\
+             seed = 77\nmax_active = 6\nmin_free_slots = 1\n\
+             target_p95_slowdown = 3\nsketch_cap = 64\ngc_period_secs = 120\n\
+             [load.warmup]\nshape = \"ramp\"\njobs = 10\ngap_secs = 60\nto_gap_secs = 20\n\
+             [load.burst]\nshape = \"spike\"\njobs = 5\ngap_secs = 20\nfactor = 4\n\
+             [load.steady]\njobs = 25\ngap_secs = 30\n",
+        )
+        .unwrap();
+        assert_eq!(c.run, RunConfig::Soak);
+        let s = c.soak.expect("soak parsed");
+        let expected = LoadShape::new(
+            vec![
+                LoadStage::ramp(10, 60.0, 20.0),
+                LoadStage::spike(5, 20.0, 4.0),
+                LoadStage::soak(25, 30.0), // shape defaults to soak
+            ],
+            SizeDist::Pareto { alpha: 1.5, min_mb: 100.0, cap_mb: 600.0 },
+            Some(Diurnal { amplitude: 0.3, period_secs: 86400.0 }),
+        )
+        .unwrap();
+        assert_eq!(s.shape, expected);
+        assert_eq!(s.seed, 77);
+        assert_eq!(s.threads, 2);
+        // the run's accounting/admission views mirror its knobs
+        let cfg = s.soak_config();
+        assert_eq!(cfg.target_p95_slowdown, 3.0);
+        assert_eq!(cfg.sketch_cap, 64);
+        assert_eq!(cfg.gc_period_secs, 120.0);
+        let p = s.policy();
+        assert_eq!(p.max_active, 6);
+        assert_eq!(p.min_free_slots, 1);
+    }
+
+    #[test]
+    fn bare_soak_run_gets_the_default_staging() {
+        let c = ExperimentConfig::from_str("run = \"soak\"\n").unwrap();
+        assert_eq!(c.run, RunConfig::Soak);
+        assert_eq!(c.soak, Some(SoakRun::default()));
+        let s = c.soak.unwrap();
+        assert_eq!(s.shape.total_jobs(), 60);
+        assert_eq!(s.shape.stages().len(), 3); // ramp in, burst, steady soak
+        // top-level jobs/gap_secs parameterize the same default staging
+        let c = ExperimentConfig::from_str(
+            "run = \"soak\"\n[load]\njobs = 40\ngap_secs = 15\n",
+        )
+        .unwrap();
+        let s = c.soak.unwrap();
+        assert_eq!(s.shape.total_jobs(), 40);
+        assert_eq!(s.shape.stages(), &SoakRun::staged(40, 15.0)[..]);
+        // tiny counts collapse to a single soak stage
+        assert_eq!(SoakRun::staged(4, 30.0), vec![LoadStage::soak(4, 30.0)]);
+    }
+
+    #[test]
+    fn load_rejects_unknown_keys_and_undeclared_stages() {
+        // a typo must not silently soak a different load
+        let r = ExperimentConfig::from_str("run = \"soak\"\n[load]\njob = 4\n");
+        assert!(r.unwrap_err().to_string().contains("job"));
+        let r = ExperimentConfig::from_str(
+            "run = \"soak\"\n[load]\nstages = \"a\"\n[load.b]\njobs = 4\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("not declared"));
+        let r = ExperimentConfig::from_str(
+            "run = \"soak\"\n[load]\nstages = \"a\"\n\
+             [load.a]\njobs = 4\ngap_secs = 30\nfactr = 2\n",
+        );
+        assert!(r.unwrap_err().to_string().contains("factr"));
+    }
+
+    #[test]
+    fn load_rejects_mistyped_and_unsafe_values() {
+        for bad in [
+            // shorthand knobs: mistyped / non-positive
+            "run = \"soak\"\n[load]\njobs = 0\n",
+            "run = \"soak\"\n[load]\njobs = 2.5\n",
+            "run = \"soak\"\n[load]\ngap_secs = 0\n",
+            "run = \"soak\"\n[load]\ngap_secs = \"30\"\n",
+            // size models: exclusive, complete, well-shaped
+            "run = \"soak\"\n[load]\nsizes_mb = 150\n",
+            "run = \"soak\"\n[load]\nsizes_mb = []\n",
+            "run = \"soak\"\n[load]\nsizes_mb = [150, 0]\n",
+            "run = \"soak\"\n[load]\nsizes_mb = [150]\npareto_alpha = 1.5\n\
+             pareto_min_mb = 100\npareto_cap_mb = 600\n",
+            "run = \"soak\"\n[load]\npareto_alpha = 1.5\n",
+            "run = \"soak\"\n[load]\npareto_alpha = 1.5\npareto_min_mb = 600\n\
+             pareto_cap_mb = 100\n",
+            // diurnal: both knobs or neither, amplitude below 1
+            "run = \"soak\"\n[load]\ndiurnal_amplitude = 0.3\n",
+            "run = \"soak\"\n[load]\ndiurnal_amplitude = 1.5\n\
+             diurnal_period_secs = 86400\n",
+            // driver knobs
+            "run = \"soak\"\n[load]\ntarget_p95_slowdown = 0.5\n",
+            "run = \"soak\"\n[load]\nsketch_cap = 0\n",
+            "run = \"soak\"\n[load]\ngc_period_secs = 0\n",
+            "run = \"soak\"\n[load]\nmax_active = 0\n",
+            "run = \"soak\"\n[load]\nthreads = 0\n",
+            // stage declarations
+            "run = \"soak\"\n[load]\nstages = \"a, a\"\n[load.a]\njobs = 4\ngap_secs = 30\n",
+            "run = \"soak\"\n[load]\nstages = \"a.b\"\n",
+            "run = \"soak\"\n[load]\nstages = \"jobs\"\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\njobs = 5\n\
+             [load.a]\njobs = 4\ngap_secs = 30\n",
+            // per-stage contracts: required and inapplicable knobs
+            "run = \"soak\"\n[load]\nstages = \"a\"\n[load.a]\ngap_secs = 30\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\n[load.a]\njobs = 4\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\n\
+             [load.a]\njobs = 4\ngap_secs = 30\nfactor = 2\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\n\
+             [load.a]\nshape = \"ramp\"\njobs = 4\ngap_secs = 30\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\n\
+             [load.a]\nshape = \"spike\"\njobs = 4\ngap_secs = 30\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\n\
+             [load.a]\nshape = \"concentrated\"\njobs = 4\ngap_secs = 30\n\
+             within_secs = 60\n",
+            "run = \"soak\"\n[load]\nstages = \"a\"\n\
+             [load.a]\nshape = \"burst\"\njobs = 4\ngap_secs = 30\n",
+            // cross-run: [load] only means something to the soak run
+            "run = \"table1\"\n[load]\njobs = 4\n",
         ] {
             assert!(ExperimentConfig::from_str(bad).is_err(), "{bad}");
         }

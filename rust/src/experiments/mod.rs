@@ -15,6 +15,7 @@ pub mod fig5;
 pub mod fixtures;
 pub mod scale;
 pub mod skew;
+pub mod soak;
 pub mod stream;
 pub mod table1;
 
@@ -35,6 +36,7 @@ pub use scale::{
     fat_scale_spec, run_scale, run_scale_fat, run_scale_fat_with, scale_spec, ScalePoint,
 };
 pub use skew::{run_skew, skew_policies, skew_spec, SkewPoint};
+pub use soak::{run_soak_sweep_with, SoakPoint};
 pub use stream::{
     run_stream_sweep, run_stream_sweep_with, stream_cluster, stream_spec, StreamPoint,
 };

@@ -1,0 +1,197 @@
+//! Sustained-load soak sweep: schedulers under a shaped arrival trace.
+//!
+//! The stream sweep answers "how do schedulers degrade as a Poisson
+//! rate rises"; this family answers the capacity question behind it:
+//! **how much load can each scheduler sustain** while the tail of the
+//! slowdown distribution stays inside an SLO. One [`LoadShape`] — ramp
+//! in, burst, steady soak, optionally heavy-tailed sizes and diurnal
+//! modulation — is generated once per sweep, so BASS/BAR/HDS face the
+//! identical arrival trace and all deltas are scheduling policy. Each
+//! point runs through [`run_soak`], the bounded-memory driver: per-job
+//! state is finalized into streaming sketches at completion, so the
+//! sweep scales to arbitrarily long traces without the per-job outcome
+//! list the classic stream keeps. The figure of merit is
+//! **sustained jobs/hour**: the completion rate while the p95 slowdown
+//! meets the target, zero once the tail blows through it. See
+//! EXPERIMENTS.md.
+
+use crate::runtime::CostModel;
+use crate::scenario::{
+    parallel_map, run_soak, AdmissionPolicy, SimSession, SoakConfig, Submission,
+};
+use crate::util::XorShift;
+use crate::workload::LoadShape;
+
+use super::fixtures::SchedulerKind;
+use super::stream::stream_cluster;
+
+/// One executed (scheduler) soak point. Distribution figures come off
+/// the streaming sketches — exact up to the sketch cap, rank-bounded
+/// beyond it — and the compaction counters double as the bounded-memory
+/// evidence the acceptance checks assert on.
+#[derive(Debug, Clone)]
+pub struct SoakPoint {
+    pub scheduler: &'static str,
+    /// Jobs that ran to completion (excludes rejections).
+    pub jobs: usize,
+    pub queued: usize,
+    pub mean_jt: f64,
+    pub p95_jt: f64,
+    pub mean_slowdown: f64,
+    pub p95_slowdown: f64,
+    /// Raw completion rate over the makespan.
+    pub jobs_per_hour: f64,
+    /// Jobs/hour while the p95 slowdown meets the target, else 0.
+    pub sustained_jobs_per_hour: f64,
+    pub makespan: f64,
+    /// Periodic calendar compactions that actually ran.
+    pub compactions: usize,
+    /// High-water mark of live (undrained) engine records.
+    pub peak_live_records: usize,
+    /// Samples held by the quantile sketches at the end.
+    pub retained_samples: usize,
+}
+
+/// Run one shaped trace through BASS/BAR/HDS soak drivers on up to
+/// `threads` workers (each point is a hermetic session; results are
+/// bitwise-identical to a serial run). The trace is generated once from
+/// `seed`, so every scheduler faces the identical arrival sequence.
+pub fn run_soak_sweep_with(
+    shape: &LoadShape,
+    seed: u64,
+    policy: AdmissionPolicy,
+    cfg: SoakConfig,
+    cost: &CostModel,
+    threads: usize,
+) -> Vec<SoakPoint> {
+    let mut rng = XorShift::new(seed);
+    let subs: Vec<Submission> =
+        shape.generate(&mut rng).into_iter().map(Submission::from).collect();
+    let kinds = vec![SchedulerKind::Bass, SchedulerKind::Bar, SchedulerKind::Hds];
+    parallel_map(kinds, threads, |kind| {
+        let mut sess = SimSession::new(&stream_cluster(kind));
+        let out = run_soak(&mut sess, subs.clone(), policy, cost, cfg);
+        SoakPoint {
+            scheduler: kind.label(),
+            jobs: out.jobs,
+            queued: out.queued_jobs,
+            mean_jt: out.stats.mean_jt,
+            p95_jt: out.stats.p95_jt,
+            mean_slowdown: out.stats.mean_slowdown,
+            p95_slowdown: out.p95_slowdown,
+            jobs_per_hour: out.jobs_per_hour,
+            sustained_jobs_per_hour: out.sustained_jobs_per_hour,
+            makespan: out.makespan,
+            compactions: out.compactions,
+            peak_live_records: out.peak_live_records,
+            retained_samples: out.retained_samples,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{LoadStage, SizeDist};
+
+    fn quick_jobs() -> usize {
+        match std::env::var("BASS_BENCH_QUICK") {
+            Ok(_) => 8,
+            Err(_) => 18,
+        }
+    }
+
+    fn shaped(jobs: usize) -> LoadShape {
+        let ramp = jobs / 3;
+        let spike = jobs / 6;
+        LoadShape::new(
+            vec![
+                LoadStage::ramp(ramp, 60.0, 25.0),
+                LoadStage::spike(spike, 25.0, 3.0),
+                LoadStage::soak(jobs - ramp - spike, 30.0),
+            ],
+            SizeDist::Menu(vec![150.0, 300.0]),
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn soak_sweep_reports_throughput_and_stays_compacted() {
+        let cost = CostModel::rust_only();
+        let jobs = quick_jobs();
+        let pts = run_soak_sweep_with(
+            &shaped(jobs),
+            4242,
+            AdmissionPolicy::default(),
+            SoakConfig { gc_period_secs: 120.0, ..SoakConfig::defaults() },
+            &cost,
+            2,
+        );
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert_eq!(p.jobs, jobs, "{}", p.scheduler);
+            assert!(p.mean_jt > 0.0);
+            assert!(p.p95_jt >= p.mean_jt * 0.5);
+            assert!(p.p95_slowdown >= 1.0, "{}", p.scheduler);
+            assert!(p.jobs_per_hour > 0.0);
+            assert!(p.sustained_jobs_per_hour <= p.jobs_per_hour);
+            assert!(p.makespan > 0.0);
+            // bounded memory: periodic compaction ran and live records
+            // never approached one-slot-per-task of the whole trace
+            assert!(p.compactions >= 1, "{}", p.scheduler);
+            assert!(
+                p.peak_live_records < jobs * 8,
+                "{}: peak {} live records",
+                p.scheduler,
+                p.peak_live_records
+            );
+        }
+    }
+
+    #[test]
+    fn soak_sweep_is_deterministic_and_thread_invariant() {
+        let cost = CostModel::rust_only();
+        let shape = LoadShape::poisson(6, 40.0, vec![150.0, 300.0]).unwrap();
+        let serial = run_soak_sweep_with(
+            &shape,
+            7,
+            AdmissionPolicy::default(),
+            SoakConfig::defaults(),
+            &cost,
+            1,
+        );
+        let fanned = run_soak_sweep_with(
+            &shape,
+            7,
+            AdmissionPolicy::default(),
+            SoakConfig::defaults(),
+            &cost,
+            3,
+        );
+        assert_eq!(serial.len(), fanned.len());
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.mean_jt.to_bits(), b.mean_jt.to_bits());
+            assert_eq!(a.p95_slowdown.to_bits(), b.p95_slowdown.to_bits());
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(a.compactions, b.compactions);
+        }
+    }
+
+    #[test]
+    fn schedulers_face_the_identical_shaped_trace() {
+        // the sweep generates the trace once per seed; regenerating from
+        // the same seed reproduces it arrival for arrival
+        let shape = shaped(12);
+        let mut r1 = XorShift::new(99);
+        let mut r2 = XorShift::new(99);
+        let a = shape.generate(&mut r1);
+        let b = shape.generate(&mut r2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits());
+            assert_eq!(x.data_mb.to_bits(), y.data_mb.to_bits());
+        }
+    }
+}

@@ -6,5 +6,8 @@ pub mod stream;
 pub mod timeline;
 
 pub use job::JobMetrics;
-pub use stream::{jain_index, percentile, StreamStats, TenantStats};
+pub use stream::{
+    jain_index, jobs_per_hour, percentile, sustained_jobs_per_hour, QuantileSketch, StreamAccum,
+    StreamStats, TenantStats,
+};
 pub use timeline::{NodeTimeline, TimelineEntry};

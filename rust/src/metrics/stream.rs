@@ -123,6 +123,213 @@ impl TenantStats {
     }
 }
 
+/// Fixed-size streaming quantile sketch for soak-scale streams, where
+/// retaining every `JobOutcome` would grow linearly in jobs.
+///
+/// Below `cap` samples the sketch stores the sorted sample exactly, so
+/// every quantile is **bit-identical** to [`percentile`] over the same
+/// values. Past `cap` it degrades to a Ben-Haim/Tom-Yom-Tov-style
+/// streaming histogram: each new value becomes a unit-weight centroid
+/// and the two adjacent centroids closest in value merge into their
+/// weighted mean. Memory is O(cap) forever; the reported quantile is
+/// the value of the centroid containing the nearest-rank position, so
+/// the *rank* error is bounded by the heaviest centroid's weight
+/// (merging nearest neighbours keeps centroids narrow where the
+/// distribution is dense — see DESIGN.md §14 for the bound).
+///
+/// Deterministic: insertion order fully determines the state, so a
+/// restored checkpoint replays to the same bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    cap: usize,
+    count: u64,
+    /// Sorted exact sample while `count <= cap`, else empty.
+    exact: Vec<f64>,
+    /// Sorted (value, weight) centroids once compaction has begun.
+    centroids: Vec<(f64, u64)>,
+}
+
+impl QuantileSketch {
+    /// `cap` is the retained-state bound (exact below it, O(cap)
+    /// centroids above it); clamped to at least 8.
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(8), count: 0, exact: Vec::new(), centroids: Vec::new() }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Still holding the exact sample (quantiles bit-identical to
+    /// [`percentile`])?
+    pub fn is_exact(&self) -> bool {
+        self.centroids.is_empty()
+    }
+
+    /// Retained boundaries (exact values or centroids) — the peak-size
+    /// check of the soak tests.
+    pub fn retained(&self) -> usize {
+        self.exact.len().max(self.centroids.len())
+    }
+
+    /// Heaviest centroid weight: the nearest-rank error bound once the
+    /// sketch has compacted (0 while exact).
+    pub fn max_centroid_weight(&self) -> u64 {
+        self.centroids.iter().map(|&(_, c)| c).max().unwrap_or(0)
+    }
+
+    pub fn insert(&mut self, v: f64) {
+        self.count += 1;
+        if self.centroids.is_empty() {
+            let at = self.exact.partition_point(|x| x.total_cmp(&v).is_le());
+            self.exact.insert(at, v);
+            if self.exact.len() <= self.cap {
+                return;
+            }
+            // overflow: seed the histogram with unit-weight centroids
+            self.centroids = self.exact.drain(..).map(|x| (x, 1)).collect();
+        } else {
+            let at = self.centroids.partition_point(|&(x, _)| x.total_cmp(&v).is_le());
+            self.centroids.insert(at, (v, 1));
+        }
+        while self.centroids.len() > self.cap {
+            // merge the adjacent pair closest in value (ties: lowest
+            // index) into its weighted mean — deterministic compaction
+            let mut best = 0usize;
+            let mut best_gap = f64::INFINITY;
+            for i in 0..self.centroids.len() - 1 {
+                let gap = self.centroids[i + 1].0 - self.centroids[i].0;
+                if gap < best_gap {
+                    best_gap = gap;
+                    best = i;
+                }
+            }
+            let (v1, c1) = self.centroids[best];
+            let (v2, c2) = self.centroids[best + 1];
+            let w = c1 + c2;
+            self.centroids[best] = ((v1 * c1 as f64 + v2 * c2 as f64) / w as f64, w);
+            self.centroids.remove(best + 1);
+        }
+    }
+
+    /// Nearest-rank quantile (p in [0, 100]); exact — bit-identical to
+    /// [`percentile`] — until the sketch compacts.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        if self.centroids.is_empty() {
+            return self.exact[rank as usize - 1];
+        }
+        let mut cum = 0u64;
+        for &(v, c) in &self.centroids {
+            cum += c;
+            if cum >= rank {
+                return v;
+            }
+        }
+        self.centroids.last().expect("non-empty").0
+    }
+}
+
+/// Incremental replacement for collecting every job's numbers and
+/// calling [`StreamStats::from_jobs`] at the end: O(sketch cap) memory
+/// regardless of stream length. While both sketches are still exact
+/// (streams up to the cap) the produced [`StreamStats`] is bit-identical
+/// to the batch path fed in the same order — the soak driver's
+/// small-stream equivalence pin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamAccum {
+    jobs: usize,
+    sum_jt: f64,
+    sum_slowdown: f64,
+    max_slowdown: f64,
+    jt: QuantileSketch,
+    slowdown: QuantileSketch,
+}
+
+impl StreamAccum {
+    pub fn new(sketch_cap: usize) -> Self {
+        Self {
+            jobs: 0,
+            sum_jt: 0.0,
+            sum_slowdown: 0.0,
+            max_slowdown: 1.0,
+            jt: QuantileSketch::new(sketch_cap),
+            slowdown: QuantileSketch::new(sketch_cap),
+        }
+    }
+
+    pub fn push(&mut self, jt: f64, slowdown: f64) {
+        self.jobs += 1;
+        self.sum_jt += jt;
+        self.sum_slowdown += slowdown;
+        self.max_slowdown = self.max_slowdown.max(slowdown);
+        self.jt.insert(jt);
+        self.slowdown.insert(slowdown);
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Retained state across both sketches (peak-size checks).
+    pub fn retained(&self) -> usize {
+        self.jt.retained() + self.slowdown.retained()
+    }
+
+    pub fn p95_slowdown(&self) -> f64 {
+        if self.jobs == 0 {
+            1.0
+        } else {
+            self.slowdown.quantile(95.0)
+        }
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        if self.jobs == 0 {
+            return StreamStats::from_jobs(&[], &[]);
+        }
+        StreamStats {
+            jobs: self.jobs,
+            mean_jt: self.sum_jt / self.jobs as f64,
+            p50_jt: self.jt.quantile(50.0),
+            p95_jt: self.jt.quantile(95.0),
+            mean_slowdown: self.sum_slowdown / self.jobs as f64,
+            max_slowdown: self.max_slowdown,
+        }
+    }
+}
+
+/// Completed jobs per hour over a wall-clock span of seconds (0 for an
+/// empty span — nothing sustained).
+pub fn jobs_per_hour(jobs: usize, span_secs: f64) -> f64 {
+    if span_secs <= 0.0 {
+        return 0.0;
+    }
+    jobs as f64 * 3600.0 / span_secs
+}
+
+/// The soak figure of merit: jobs/hour *sustained at the SLO* — the
+/// raw rate when the p95 slowdown meets `target_p95`, and 0 when the
+/// tail blew through it (a stream that completes jobs arbitrarily late
+/// sustains nothing).
+pub fn sustained_jobs_per_hour(
+    jobs: usize,
+    span_secs: f64,
+    p95_slowdown: f64,
+    target_p95: f64,
+) -> f64 {
+    if p95_slowdown <= target_p95 {
+        jobs_per_hour(jobs, span_secs)
+    } else {
+        0.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +389,76 @@ mod tests {
         assert_eq!(idle.mean_slowdown, 1.0);
         assert_eq!(idle.p95_slowdown, 1.0);
         assert_eq!(idle.slo_attainment, 1.0);
+    }
+
+    #[test]
+    fn sketch_is_bitwise_exact_below_capacity() {
+        let vals = [4.0, 1.0, 3.5, 2.0, 9.25, 0.5, 7.125];
+        let mut sk = QuantileSketch::new(8);
+        for &v in &vals {
+            sk.insert(v);
+        }
+        assert!(sk.is_exact());
+        for p in [0.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+            assert_eq!(sk.quantile(p).to_bits(), percentile(&vals, p).to_bits(), "p{p}");
+        }
+    }
+
+    #[test]
+    fn sketch_stays_bounded_and_close_past_capacity() {
+        let n = 10_000usize;
+        let mut sk = QuantileSketch::new(64);
+        // deterministic scramble of 0..n so insertion order is not sorted
+        for i in 0..n {
+            sk.insert(((i * 7919) % n) as f64);
+        }
+        assert_eq!(sk.count(), n as u64);
+        assert!(!sk.is_exact());
+        assert!(sk.retained() <= 64, "retained {}", sk.retained());
+        // rank error is bounded by the heaviest centroid; on this
+        // uniform sample that translates to value error well under 5%
+        assert!((sk.quantile(50.0) - 5000.0).abs() < 500.0, "p50 {}", sk.quantile(50.0));
+        assert!((sk.quantile(95.0) - 9500.0).abs() < 500.0, "p95 {}", sk.quantile(95.0));
+        assert!(sk.max_centroid_weight() > 0);
+    }
+
+    #[test]
+    fn sketch_is_insertion_order_deterministic() {
+        let mut a = QuantileSketch::new(16);
+        let mut b = QuantileSketch::new(16);
+        for i in 0..500u64 {
+            let v = ((i * 31) % 97) as f64 * 1.375;
+            a.insert(v);
+            b.insert(v);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.quantile(95.0).to_bits(), b.quantile(95.0).to_bits());
+    }
+
+    #[test]
+    fn accumulator_matches_batch_stats_bitwise_on_small_streams() {
+        let jts = [10.0, 33.5, 21.25, 8.0, 55.0];
+        let slows = [1.0, 2.5, 1.75, 1.0, 4.0];
+        let mut acc = StreamAccum::new(64);
+        for (&j, &s) in jts.iter().zip(&slows) {
+            acc.push(j, s);
+        }
+        let a = acc.stats();
+        let b = StreamStats::from_jobs(&jts, &slows);
+        assert_eq!(a.jobs, b.jobs);
+        assert_eq!(a.mean_jt.to_bits(), b.mean_jt.to_bits());
+        assert_eq!(a.p50_jt.to_bits(), b.p50_jt.to_bits());
+        assert_eq!(a.p95_jt.to_bits(), b.p95_jt.to_bits());
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.max_slowdown.to_bits(), b.max_slowdown.to_bits());
+    }
+
+    #[test]
+    fn throughput_is_gated_on_the_slowdown_target() {
+        assert_eq!(jobs_per_hour(100, 3600.0), 100.0);
+        assert_eq!(jobs_per_hour(0, 0.0), 0.0);
+        assert_eq!(sustained_jobs_per_hour(100, 3600.0, 2.0, 3.0), 100.0);
+        assert_eq!(sustained_jobs_per_hour(100, 3600.0, 3.0, 3.0), 100.0);
+        assert_eq!(sustained_jobs_per_hour(100, 3600.0, 3.1, 3.0), 0.0);
     }
 }

@@ -37,8 +37,9 @@ pub use dynamics::{
 };
 pub use mitigation::{run_mitigated, DuelAudit, MitigationSpec, SpeculationMode};
 pub use online::{
-    run_stream, AdmissionAudit, AdmissionPolicy, JobOutcome, PreemptionAudit, StreamOutcome,
-    StreamSpec, Submission, SubmissionBody,
+    checkpoint_soak, checkpoint_stream, resume_soak, resume_stream, run_soak, run_stream,
+    AdmissionAudit, AdmissionPolicy, JobOutcome, PreemptionAudit, SessionCheckpoint, SoakConfig,
+    SoakOutcome, StreamOutcome, StreamSpec, Submission, SubmissionBody,
 };
 pub use session::{shuffle_majority_node, slowstart_gate, SimSession};
 pub use spec::{

@@ -76,12 +76,43 @@
 //! scheduler) plus BASS at the default slowstart (reserved transfers
 //! never touch the shared flow network). The richer contention at
 //! `slowstart < 1` is a deliberate fidelity gain of the online model.
+//!
+//! # Staged load pipeline: soak streams and checkpoints
+//!
+//! The driver loop is factored into explicit stages — **admit** (build
+//! + admission at each arrival), **schedule** (the batch commits inside
+//! the admission/gate handlers), **execute** (play the engine to
+//! quiescence) and **account** (outcome assembly) — with two
+//! consequences:
+//!
+//! * **Snapshot/resume.** [`checkpoint_stream`] plays a submission
+//!   prefix and captures a [`SessionCheckpoint`]: engine clock and
+//!   queues, calendar, tenant usage, RNG cursors, audit trails.
+//!   [`resume_stream`] restores it into a fresh session built from the
+//!   same spec and plays the remaining submissions; the resumed run's
+//!   [`StreamOutcome`] is bit-for-bit the uninterrupted run's.
+//! * **Bounded-memory soaks.** [`run_soak`] executes the same stream
+//!   under per-completion finalization: finished records are drained
+//!   out of the engine and folded into a [`StreamAccum`] sketch, the
+//!   completed job's engine bookkeeping is forgotten
+//!   ([`Engine::forget_job`]), and the placement arena and SDN calendar
+//!   are compacted periodically. Retained state tracks the live working
+//!   set instead of stream length, so 100k-job streams run in bounded
+//!   memory; the cost is that [`SoakOutcome`] reports distribution
+//!   sketches and counters instead of per-job outcomes, and slowdowns
+//!   are measured against a *class* baseline (the isolated run of the
+//!   first completed job with the same name and input size) rather than
+//!   a per-job isolated run.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::cluster::Ledger;
+use crate::hdfs::Namenode;
 use crate::mapreduce::{JobId, JobSpec, TaskId, TaskSpec};
-use crate::metrics::{jain_index, JobMetrics, StreamStats, TenantStats};
+use crate::metrics::{
+    jain_index, jobs_per_hour, sustained_jobs_per_hour, JobMetrics, StreamAccum, StreamStats,
+    TenantStats,
+};
 use crate::runtime::CostModel;
 use crate::sched::{SchedCtx, Scheduler as _};
 use crate::sdn::{Controller, Reservation};
@@ -307,6 +338,7 @@ fn all_key(jid: usize) -> u64 {
 }
 
 /// Per-job driver state.
+#[derive(Clone)]
 struct JobRun {
     name: String,
     submit: Secs,
@@ -314,6 +346,11 @@ struct JobRun {
     queued: bool,
     /// First stream-global task id (ids are `base..base + tasks`).
     base: usize,
+    /// Task counts, kept even after a soak finalization clears the spec
+    /// vectors (the id-range arithmetic in [`job_index_of`] and the DRF
+    /// slot accounting live on these, not on the vectors).
+    n_maps: usize,
+    n_reduces: usize,
     maps: Vec<TaskSpec>,
     /// Reduce specs (un-hinted; the gate handler hints a copy).
     reduces: Vec<TaskSpec>,
@@ -338,11 +375,14 @@ struct JobRun {
     /// Calendar-bandwidth area (`frac * n_slots`) currently reserved for
     /// this job's transfers (the DRF bandwidth dimension).
     reserved_area: f64,
+    /// Generated input size — the soak baseline-cache key (`None` for
+    /// explicit submissions, which are never cached).
+    data_mb: Option<f64>,
 }
 
 impl JobRun {
     fn n_tasks(&self) -> usize {
-        self.maps.len() + self.reduces.len()
+        self.n_maps + self.n_reduces
     }
 }
 
@@ -362,6 +402,157 @@ fn hint_from_placements(maps: &[TaskSpec], nodes: &[NodeId], n_hosts: usize) -> 
         .map(|(i, _)| i)
         .unwrap_or(0);
     NodeId(best)
+}
+
+/// Knobs for a bounded-memory soak run ([`run_soak`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SoakConfig {
+    /// SLO for the throughput figure of merit: the stream "sustains" its
+    /// rate only while the p95 slowdown stays at or under this.
+    pub target_p95_slowdown: f64,
+    /// Per-distribution retention cap of the quantile sketches
+    /// ([`crate::metrics::QuantileSketch`]).
+    pub sketch_cap: usize,
+    /// Virtual seconds between periodic calendar compactions
+    /// ([`crate::sdn::Controller::maybe_gc`]); completions in between
+    /// still compact the placement arena.
+    pub gc_period_secs: f64,
+}
+
+impl SoakConfig {
+    pub fn defaults() -> Self {
+        Self { target_p95_slowdown: 2.0, sketch_cap: 256, gc_period_secs: 300.0 }
+    }
+}
+
+/// What a soak run reports: sketch-backed distribution statistics and
+/// compaction/throughput counters — deliberately *not* per-job outcomes,
+/// so the report itself is O(1) in stream length.
+#[derive(Debug, Clone)]
+pub struct SoakOutcome {
+    /// Jobs that ran to completion (excludes rejections).
+    pub jobs: usize,
+    pub rejected_jobs: usize,
+    pub queued_jobs: usize,
+    /// Absolute finish of the last completed task.
+    pub last_finish: f64,
+    /// `last_finish - first submission`.
+    pub makespan: f64,
+    /// JT / slowdown statistics off the accumulator (exact up to the
+    /// sketch cap, rank-bounded beyond it).
+    pub stats: StreamStats,
+    pub p95_slowdown: f64,
+    /// Raw completion rate over the makespan.
+    pub jobs_per_hour: f64,
+    /// The soak figure of merit: jobs/hour while the p95 slowdown meets
+    /// the target, 0 once the tail blows through it.
+    pub sustained_jobs_per_hour: f64,
+    /// Periodic calendar compactions that actually ran.
+    pub compactions: usize,
+    /// Placement-arena slots shrunk to skeletons across the run.
+    pub compacted_placements: usize,
+    /// High-water marks of retained state — the bounded-memory
+    /// evidence: live (undrained) engine records and calendar segments.
+    pub peak_live_records: usize,
+    pub peak_calendar_segments: usize,
+    /// Samples held by the two quantile sketches at the end.
+    pub retained_samples: usize,
+    pub rebalances: usize,
+    /// DRF decisions / preemptions / grant moves (counted, not kept).
+    pub admissions: usize,
+    pub preemptions: usize,
+    pub reallocs: usize,
+}
+
+/// Soak-mode driver state: the streaming accumulator plus the
+/// per-completion finalization bookkeeping.
+#[derive(Clone)]
+struct SoakState {
+    cfg: SoakConfig,
+    accum: StreamAccum,
+    /// Drained records of still-active jobs, keyed by job index; an
+    /// entry is removed (and folded into the accumulator) when its job
+    /// finalizes, so the map tracks the active set only.
+    buffers: HashMap<usize, Vec<TaskRecord>>,
+    /// Class-baseline cache: isolated JT of the first completed job per
+    /// (name, input-size) class. Valid because generated job names are
+    /// `kind-sizeMB` and the isolated baseline is shift-invariant once
+    /// the submit time clears the initial node idles.
+    iso_cache: HashMap<(String, u64), f64>,
+    finalized: usize,
+    last_finish: f64,
+    compacted_placements: usize,
+    peak_live_records: usize,
+    peak_calendar_segments: usize,
+    n_admissions: usize,
+    n_preemptions: usize,
+    n_reallocs: usize,
+}
+
+impl SoakState {
+    fn new(cfg: SoakConfig) -> Self {
+        Self {
+            cfg,
+            accum: StreamAccum::new(cfg.sketch_cap),
+            buffers: HashMap::new(),
+            iso_cache: HashMap::new(),
+            finalized: 0,
+            last_finish: 0.0,
+            compacted_placements: 0,
+            peak_live_records: 0,
+            peak_calendar_segments: 0,
+            n_admissions: 0,
+            n_preemptions: 0,
+            n_reallocs: 0,
+        }
+    }
+}
+
+/// A mid-stream snapshot: everything the driver and session mutate
+/// while a stream plays. Captured by [`checkpoint_stream`] /
+/// [`checkpoint_soak`] after a submission prefix; restored by
+/// [`resume_stream`] / [`resume_soak`] into a fresh [`SimSession`]
+/// built from the *same* [`super::spec::ScenarioSpec`] (everything not
+/// in the snapshot — topology, cost model, scheduler — is rebuilt
+/// deterministically from the spec; schedulers are decision-stateless).
+#[derive(Clone)]
+pub struct SessionCheckpoint {
+    policy: AdmissionPolicy,
+    engine: Engine,
+    ctrl: Controller,
+    nn: Namenode,
+    rng: XorShift,
+    planned: Vec<Secs>,
+    jobs: Vec<JobRun>,
+    active: usize,
+    admit_q: VecDeque<usize>,
+    audits: Vec<ReservationAudit>,
+    next_base: usize,
+    rebalancer: Option<Rebalancer>,
+    rebalances: usize,
+    admissions: Vec<AdmissionAudit>,
+    preemptions: Vec<PreemptionAudit>,
+    reallocs: Vec<ReallocAudit>,
+    rejected: usize,
+    soak: Option<SoakState>,
+}
+
+impl SessionCheckpoint {
+    /// Submissions already ingested (resume from this index).
+    pub fn submissions_seen(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Engine clock at capture.
+    pub fn now_secs(&self) -> f64 {
+        self.engine.now().0
+    }
+
+    /// Whether this snapshot came from a soak run (resume with
+    /// [`resume_soak`]) or a classic stream ([`resume_stream`]).
+    pub fn is_soak(&self) -> bool {
+        self.soak.is_some()
+    }
 }
 
 struct StreamDriver<'a> {
@@ -390,6 +581,11 @@ struct StreamDriver<'a> {
     preemptions: Vec<PreemptionAudit>,
     reallocs: Vec<ReallocAudit>,
     rejected: usize,
+    /// Largest initial node idle — the horizon past which the isolated
+    /// baseline is shift-invariant (soak cache validity).
+    max_init: Secs,
+    /// `Some` on a soak run: per-completion finalization is on.
+    soak: Option<SoakState>,
 }
 
 /// The owning job of a stream-global task id (ids are dense per job).
@@ -401,10 +597,10 @@ fn job_index_of(jobs: &[JobRun], tid: TaskId) -> Option<usize> {
 fn task_of(jobs: &[JobRun], tid: TaskId) -> Option<&TaskSpec> {
     let jr = &jobs[job_index_of(jobs, tid)?];
     let local = tid.0 - jr.base;
-    if local < jr.maps.len() {
+    if local < jr.n_maps {
         jr.maps.get(local)
     } else {
-        jr.reduces.get(local - jr.maps.len())
+        jr.reduces.get(local - jr.n_maps)
     }
 }
 
@@ -507,6 +703,10 @@ impl<'a> StreamDriver<'a> {
     /// matter how long it queues) and offset its task ids into the
     /// stream-global space.
     fn build(&mut self, jid: usize, submit: Secs, body: SubmissionBody) -> JobRun {
+        let data_mb = match &body {
+            SubmissionBody::Generated { data_mb, .. } => Some(*data_mb),
+            SubmissionBody::Explicit { .. } => None,
+        };
         let (name, tasks, slowstart) = match body {
             SubmissionBody::Generated { kind, data_mb } => {
                 let mut builder = WorkloadBuilder::new(kind);
@@ -561,6 +761,8 @@ impl<'a> StreamDriver<'a> {
             admitted: submit,
             queued: false,
             base,
+            n_maps: maps.len(),
+            n_reduces: reduces.len(),
             maps,
             reduces,
             slowstart,
@@ -573,6 +775,7 @@ impl<'a> StreamDriver<'a> {
             rejected: false,
             cp_min,
             reserved_area: 0.0,
+            data_mb,
         }
     }
 
@@ -648,6 +851,87 @@ impl<'a> StreamDriver<'a> {
         self.rebalance();
         let now = self.engine.now();
         self.try_admit(now);
+        if self.soak.is_some() {
+            self.soak_finalize(jid);
+        }
+    }
+
+    /// Soak mode: the **account** stage running incrementally, at every
+    /// job completion. Finished records are drained out of the engine
+    /// and routed to their owning jobs' buffers; the completed job is
+    /// folded into the accumulator (JT from its buffered records,
+    /// slowdown against the class-baseline cache), its engine
+    /// bookkeeping is forgotten, its spec vectors shrink to the count
+    /// skeleton, and the placement arena + calendar are compacted.
+    fn soak_finalize(&mut self, jid: usize) {
+        let now = self.engine.now();
+        let live_before = self.engine.records_so_far().len();
+        for r in self.engine.drain_finished_records() {
+            let j = job_index_of(&self.jobs, r.task).expect("drained record has an owning job");
+            self.soak.as_mut().expect("soak mode").buffers.entry(j).or_default().push(r);
+        }
+        let buf =
+            self.soak.as_mut().expect("soak mode").buffers.remove(&jid).unwrap_or_default();
+        let gate = self.jobs[jid].gate.unwrap_or(self.jobs[jid].submit);
+        let mut m = JobMetrics::from_records(&buf, self.jobs[jid].submit, Some(gate));
+        m.lr = self.jobs[jid].lr;
+        // Class-baseline slowdown: one isolated run per (name, size)
+        // class instead of one per job. Only generated jobs past the
+        // initial-idle horizon are cacheable (the baseline is a pure
+        // time shift there); block layouts still vary per job, so the
+        // cached denominator is the class representative's, not the
+        // job's own — the documented soak approximation.
+        let key = self.jobs[jid]
+            .data_mb
+            .filter(|_| self.jobs[jid].submit >= self.max_init)
+            .map(|mb| (self.jobs[jid].name.clone(), mb.to_bits()));
+        let cached = key
+            .as_ref()
+            .and_then(|k| self.soak.as_ref().expect("soak mode").iso_cache.get(k))
+            .copied();
+        let iso_jt = match cached {
+            Some(v) => v,
+            None => {
+                let v = self.isolated_metrics(&self.jobs[jid]).jt;
+                if let Some(k) = key {
+                    self.soak.as_mut().expect("soak mode").iso_cache.insert(k, v);
+                }
+                v
+            }
+        };
+        let slowdown = if iso_jt > 0.0 { m.jt / iso_jt } else { 1.0 };
+        let buf_last = buf.iter().map(|r| r.finish.0).fold(0.0, f64::max);
+        let (base, nt) = (self.jobs[jid].base, self.jobs[jid].n_tasks());
+        self.engine.forget_job(
+            JobId(jid),
+            (base..base + nt).map(TaskId),
+            &[gate_key(jid), maps_key(jid), all_key(jid)],
+        );
+        {
+            let jr = &mut self.jobs[jid];
+            jr.maps = Vec::new();
+            jr.reduces = Vec::new();
+            jr.map_nodes = Vec::new();
+        }
+        let compacted = self.engine.compact_finished_placements();
+        self.sess.ctrl.maybe_gc(now);
+        let segs = self.sess.ctrl.calendar_segments();
+        // audit trails are counted, not kept — a soak report is O(1)
+        // in stream length
+        let n_adm = self.admissions.drain(..).count();
+        let n_pre = self.preemptions.drain(..).count();
+        let n_re = self.reallocs.drain(..).count();
+        self.audits.clear();
+        let s = self.soak.as_mut().expect("soak mode");
+        s.accum.push(m.jt, slowdown);
+        s.finalized += 1;
+        s.last_finish = s.last_finish.max(buf_last);
+        s.compacted_placements += compacted;
+        s.peak_live_records = s.peak_live_records.max(live_before);
+        s.peak_calendar_segments = s.peak_calendar_segments.max(segs);
+        s.n_admissions += n_adm;
+        s.n_preemptions += n_pre;
+        s.n_reallocs += n_re;
     }
 
     /// Release a drained placement's calendar grant, if it holds one: the
@@ -810,6 +1094,14 @@ impl<'a> StreamDriver<'a> {
         for jid in rejects {
             self.jobs[jid].rejected = true;
             self.rejected += 1;
+            if self.soak.is_some() {
+                // a rejected job never runs: shrink it to the count
+                // skeleton right away
+                let jr = &mut self.jobs[jid];
+                jr.maps = Vec::new();
+                jr.reduces = Vec::new();
+                jr.map_nodes = Vec::new();
+            }
         }
     }
 
@@ -1089,41 +1381,66 @@ impl<'a> StreamDriver<'a> {
         m
     }
 
-    fn run(mut self, submissions: Vec<Submission>) -> StreamOutcome {
-        for sub in submissions {
-            assert!(sub.at_secs >= 0.0, "submission before t=0");
-            let t = Secs(sub.at_secs);
-            self.advance(t);
-            self.rebalance();
-            self.sess.ctrl.gc_calendar_before(t);
-            let jid = self.jobs.len();
-            let Submission { body, tenant, .. } = sub;
-            let jr = self.build(jid, t, body);
-            self.jobs.push(jr);
-            let tenant_idx = self.tenancy.as_ref().map(|tn| match &tenant {
-                Some(name) => tn
-                    .resolve(name)
-                    .unwrap_or_else(|| panic!("unknown tenant '{name}' in submission")),
-                None => jid % tn.tenants.len(),
-            });
-            if let Some(idx) = tenant_idx {
-                self.jobs[jid].tenant = Some(idx);
-                self.admit_q.push_back(jid);
-                self.try_admit(t);
-                if self.admit_q.contains(&jid) {
-                    self.jobs[jid].queued = true;
-                }
+    /// Stage **admit**: play the cluster to the arrival instant (the
+    /// interleaved **execute** slice), then build the job and admit or
+    /// queue it. The **schedule** stage — committing map/reduce batches
+    /// against the calendar — runs inside `admit`/`on_gate`.
+    fn ingest(&mut self, sub: Submission) {
+        assert!(sub.at_secs >= 0.0, "submission before t=0");
+        let t = Secs(sub.at_secs);
+        self.advance(t);
+        self.rebalance();
+        self.sess.ctrl.gc_calendar_before(t);
+        let jid = self.jobs.len();
+        let Submission { body, tenant, .. } = sub;
+        let jr = self.build(jid, t, body);
+        self.jobs.push(jr);
+        let tenant_idx = self.tenancy.as_ref().map(|tn| match &tenant {
+            Some(name) => tn
+                .resolve(name)
+                .unwrap_or_else(|| panic!("unknown tenant '{name}' in submission")),
+            None => jid % tn.tenants.len(),
+        });
+        if let Some(idx) = tenant_idx {
+            self.jobs[jid].tenant = Some(idx);
+            self.admit_q.push_back(jid);
+            self.try_admit(t);
+            if self.admit_q.contains(&jid) {
+                self.jobs[jid].queued = true;
+            }
+        } else {
+            self.try_admit(t); // completions at exactly t may have freed slots
+            if self.admit_q.is_empty() && self.admissible(t) {
+                self.admit(jid, t);
             } else {
-                self.try_admit(t); // completions at exactly t may have freed slots
-                if self.admit_q.is_empty() && self.admissible(t) {
-                    self.admit(jid, t);
-                } else {
-                    self.jobs[jid].queued = true;
-                    self.admit_q.push_back(jid);
-                }
+                self.jobs[jid].queued = true;
+                self.admit_q.push_back(jid);
             }
         }
-        // play out the remaining work
+    }
+
+    fn run(mut self, submissions: Vec<Submission>) -> StreamOutcome {
+        for sub in submissions {
+            self.ingest(sub);
+        }
+        self.drain();
+        let records = self.engine.run();
+        self.finish(records)
+    }
+
+    /// Soak flavor of [`StreamDriver::run`]: the account stage already
+    /// ran incrementally at each completion, so nothing is left in the
+    /// engine to collect.
+    fn run_soak(mut self, submissions: Vec<Submission>) -> SoakOutcome {
+        for sub in submissions {
+            self.ingest(sub);
+        }
+        self.drain();
+        self.finish_soak()
+    }
+
+    /// Stage **execute**: play out the remaining work to quiescence.
+    fn drain(&mut self) {
         while self.active > 0 || !self.admit_q.is_empty() {
             if self.active == 0 {
                 // idle cluster, gated queue: jump to the earliest instant
@@ -1146,8 +1463,72 @@ impl<'a> StreamDriver<'a> {
             assert!(!fired.is_empty(), "stream stalled with active jobs");
             self.handle_fired(fired);
         }
-        let records = self.engine.run();
-        self.finish(records)
+    }
+
+    /// Snapshot everything the stream mutates — driver state plus the
+    /// session's controller/namenode/RNG. The cluster substrate
+    /// (topology, flow network, pristine baselines, scheduler) is *not*
+    /// captured: it is rebuilt deterministically from the same spec at
+    /// restore time.
+    fn checkpoint(&self) -> SessionCheckpoint {
+        SessionCheckpoint {
+            policy: self.policy,
+            engine: self.engine.clone(),
+            ctrl: self.sess.ctrl.clone(),
+            nn: self.sess.nn.clone(),
+            rng: self.sess.rng.clone(),
+            planned: self.planned.clone(),
+            jobs: self.jobs.clone(),
+            active: self.active,
+            admit_q: self.admit_q.clone(),
+            audits: self.audits.clone(),
+            next_base: self.next_base,
+            rebalancer: self.rebalancer.clone(),
+            rebalances: self.rebalances,
+            admissions: self.admissions.clone(),
+            preemptions: self.preemptions.clone(),
+            reallocs: self.reallocs.clone(),
+            rejected: self.rejected,
+            soak: self.soak.clone(),
+        }
+    }
+
+    /// Stage **account**, soak flavor: the accumulated O(1) report.
+    fn finish_soak(self) -> SoakOutcome {
+        let s = self.soak.expect("finish_soak requires soak mode");
+        let first_submit = self.jobs.iter().map(|j| j.submit).fold(Secs::INF, Secs::min);
+        let makespan = if first_submit.is_finite() {
+            (s.last_finish - first_submit.0).max(0.0)
+        } else {
+            0.0
+        };
+        let queued_jobs = self.jobs.iter().filter(|j| j.queued).count();
+        let p95 = s.accum.p95_slowdown();
+        SoakOutcome {
+            jobs: s.finalized,
+            rejected_jobs: self.rejected,
+            queued_jobs,
+            last_finish: s.last_finish,
+            makespan,
+            stats: s.accum.stats(),
+            p95_slowdown: p95,
+            jobs_per_hour: jobs_per_hour(s.finalized, makespan),
+            sustained_jobs_per_hour: sustained_jobs_per_hour(
+                s.finalized,
+                makespan,
+                p95,
+                s.cfg.target_p95_slowdown,
+            ),
+            compactions: self.sess.ctrl.compactions(),
+            compacted_placements: s.compacted_placements,
+            peak_live_records: s.peak_live_records,
+            peak_calendar_segments: s.peak_calendar_segments,
+            retained_samples: s.accum.retained(),
+            rebalances: self.rebalances,
+            admissions: s.n_admissions + self.admissions.len(),
+            preemptions: s.n_preemptions + self.preemptions.len(),
+            reallocs: s.n_reallocs + self.reallocs.len(),
+        }
     }
 
     fn finish(self, records: Vec<TaskRecord>) -> StreamOutcome {
@@ -1278,24 +1659,26 @@ impl<'a> StreamDriver<'a> {
     }
 }
 
-/// Run a job stream on a built session. Submissions must be
-/// time-ordered; the session's controller/namenode/RNG carry the stream
-/// state (a fresh session per stream keeps runs hermetic).
-pub fn run_stream(
-    sess: &mut SimSession,
-    submissions: Vec<Submission>,
-    policy: AdmissionPolicy,
-    cost: &CostModel,
-) -> StreamOutcome {
-    assert!(policy.max_active >= 1, "admission cap must allow at least one active job");
+fn assert_time_ordered(submissions: &[Submission]) {
     for w in submissions.windows(2) {
         assert!(w[0].at_secs <= w[1].at_secs, "submissions must be time-ordered");
     }
+}
+
+/// Build a fresh driver over a built session (the stream has not played
+/// yet — pristine baselines are captured here).
+fn new_driver<'a>(
+    sess: &'a mut SimSession,
+    policy: AdmissionPolicy,
+    cost: &'a CostModel,
+) -> StreamDriver<'a> {
+    assert!(policy.max_active >= 1, "admission cap must allow at least one active job");
     let engine = Engine::new(sess.net.clone(), sess.engine_init.clone());
     let planned = sess.engine_init.clone();
     let n_hosts = sess.engine_init.len();
     let pristine_ctrl = sess.ctrl.clone();
     let pristine_net = sess.net.clone();
+    let max_init = sess.engine_init.iter().copied().fold(Secs(0.0), Secs::max);
     let rebalancer = sess
         .spec
         .mitigation
@@ -1329,8 +1712,150 @@ pub fn run_stream(
         preemptions: Vec::new(),
         reallocs: Vec::new(),
         rejected: 0,
+        max_init,
+        soak: None,
     }
-    .run(submissions)
+}
+
+/// Restore a checkpoint into a driver over `sess`, which must be a
+/// fresh [`SimSession`] built from the same spec the checkpointed run
+/// used (session construction is deterministic, so the substrate the
+/// snapshot omits — topology, pristine baselines, scheduler — rebuilds
+/// bit-identically; the snapshot then overwrites the mutated state).
+fn restore_driver<'a>(
+    sess: &'a mut SimSession,
+    ckpt: SessionCheckpoint,
+    cost: &'a CostModel,
+) -> StreamDriver<'a> {
+    let mut d = new_driver(sess, ckpt.policy, cost);
+    d.sess.ctrl = ckpt.ctrl;
+    d.sess.nn = ckpt.nn;
+    d.sess.rng = ckpt.rng;
+    d.engine = ckpt.engine;
+    d.planned = ckpt.planned;
+    d.jobs = ckpt.jobs;
+    d.active = ckpt.active;
+    d.admit_q = ckpt.admit_q;
+    d.audits = ckpt.audits;
+    d.next_base = ckpt.next_base;
+    d.rebalancer = ckpt.rebalancer;
+    d.rebalances = ckpt.rebalances;
+    d.admissions = ckpt.admissions;
+    d.preemptions = ckpt.preemptions;
+    d.reallocs = ckpt.reallocs;
+    d.rejected = ckpt.rejected;
+    d.soak = ckpt.soak;
+    d
+}
+
+/// Run a job stream on a built session. Submissions must be
+/// time-ordered; the session's controller/namenode/RNG carry the stream
+/// state (a fresh session per stream keeps runs hermetic).
+pub fn run_stream(
+    sess: &mut SimSession,
+    submissions: Vec<Submission>,
+    policy: AdmissionPolicy,
+    cost: &CostModel,
+) -> StreamOutcome {
+    assert_time_ordered(&submissions);
+    new_driver(sess, policy, cost).run(submissions)
+}
+
+/// Play `submissions[..prefix]` and capture the mid-stream state.
+/// `sess` is consumed conceptually (it carries half-played stream
+/// state afterwards) — discard it and hand the checkpoint plus the
+/// remaining submissions to [`resume_stream`] on a fresh session.
+pub fn checkpoint_stream(
+    sess: &mut SimSession,
+    submissions: &[Submission],
+    prefix: usize,
+    policy: AdmissionPolicy,
+    cost: &CostModel,
+) -> SessionCheckpoint {
+    assert!(prefix <= submissions.len(), "checkpoint prefix exceeds the submission count");
+    assert_time_ordered(submissions);
+    let mut d = new_driver(sess, policy, cost);
+    for sub in &submissions[..prefix] {
+        d.ingest(sub.clone());
+    }
+    d.checkpoint()
+}
+
+/// Resume a checkpointed stream: restore into a fresh session of the
+/// same spec, play the remaining submissions, drain, account. The
+/// result is bit-for-bit the uninterrupted run's [`StreamOutcome`].
+pub fn resume_stream(
+    sess: &mut SimSession,
+    ckpt: SessionCheckpoint,
+    rest: Vec<Submission>,
+    cost: &CostModel,
+) -> StreamOutcome {
+    assert!(!ckpt.is_soak(), "soak checkpoints resume via resume_soak");
+    assert_time_ordered(&rest);
+    restore_driver(sess, ckpt, cost).run(rest)
+}
+
+fn soak_driver<'a>(
+    sess: &'a mut SimSession,
+    policy: AdmissionPolicy,
+    cost: &'a CostModel,
+    cfg: SoakConfig,
+) -> StreamDriver<'a> {
+    assert!(
+        cfg.target_p95_slowdown >= 1.0 && cfg.target_p95_slowdown.is_finite(),
+        "soak target_p95_slowdown must be a finite value >= 1"
+    );
+    assert!(cfg.sketch_cap >= 1, "soak sketch_cap must be at least 1");
+    let mut d = new_driver(sess, policy, cost);
+    d.sess.ctrl.set_gc_period(cfg.gc_period_secs);
+    d.soak = Some(SoakState::new(cfg));
+    d
+}
+
+/// Run a job stream in bounded memory: per-completion finalization
+/// into sketch statistics instead of a full per-job outcome list. See
+/// the module docs for what is (and is not) retained.
+pub fn run_soak(
+    sess: &mut SimSession,
+    submissions: Vec<Submission>,
+    policy: AdmissionPolicy,
+    cost: &CostModel,
+    cfg: SoakConfig,
+) -> SoakOutcome {
+    assert_time_ordered(&submissions);
+    soak_driver(sess, policy, cost, cfg).run_soak(submissions)
+}
+
+/// [`checkpoint_stream`] for a soak run (the snapshot carries the
+/// accumulator, buffers and baseline cache too).
+pub fn checkpoint_soak(
+    sess: &mut SimSession,
+    submissions: &[Submission],
+    prefix: usize,
+    policy: AdmissionPolicy,
+    cost: &CostModel,
+    cfg: SoakConfig,
+) -> SessionCheckpoint {
+    assert!(prefix <= submissions.len(), "checkpoint prefix exceeds the submission count");
+    assert_time_ordered(submissions);
+    let mut d = soak_driver(sess, policy, cost, cfg);
+    for sub in &submissions[..prefix] {
+        d.ingest(sub.clone());
+    }
+    d.checkpoint()
+}
+
+/// Resume a checkpointed soak; the [`SoakOutcome`] is bit-for-bit the
+/// uninterrupted run's.
+pub fn resume_soak(
+    sess: &mut SimSession,
+    ckpt: SessionCheckpoint,
+    rest: Vec<Submission>,
+    cost: &CostModel,
+) -> SoakOutcome {
+    assert!(ckpt.is_soak(), "stream checkpoints resume via resume_stream");
+    assert_time_ordered(&rest);
+    restore_driver(sess, ckpt, cost).run_soak(rest)
 }
 
 impl SimSession {
@@ -1342,6 +1867,17 @@ impl SimSession {
         cost: &CostModel,
     ) -> StreamOutcome {
         run_stream(self, submissions, policy, cost)
+    }
+
+    /// [`run_soak`] as a session method.
+    pub fn run_soak(
+        &mut self,
+        submissions: Vec<Submission>,
+        policy: AdmissionPolicy,
+        cost: &CostModel,
+        cfg: SoakConfig,
+    ) -> SoakOutcome {
+        run_soak(self, submissions, policy, cost, cfg)
     }
 }
 
@@ -1840,5 +2376,226 @@ mod tests {
             )
         };
         assert_eq!(run(), run());
+    }
+
+    // ---- checkpoints and soak streams ----
+
+    fn outcome_fingerprint(
+        out: &StreamOutcome,
+    ) -> (u64, Vec<(JobId, usize, usize, u64)>, Vec<u64>, usize, usize) {
+        (
+            out.last_finish.to_bits(),
+            out.records
+                .iter()
+                .map(|(j, r)| (*j, r.task.0, r.node.0, r.finish.0.to_bits()))
+                .collect(),
+            out.jobs.iter().map(|j| j.metrics.jt.to_bits()).collect(),
+            out.queued_jobs,
+            out.rebalances,
+        )
+    }
+
+    #[test]
+    fn checkpoint_resume_reproduces_the_stream_bit_for_bit() {
+        let cost = CostModel::rust_only();
+        let spec = StreamSpec {
+            jobs: 8,
+            mean_interarrival_secs: 15.0,
+            sizes_mb: vec![150.0, 300.0],
+            seed: 11,
+            ..StreamSpec::defaults()
+        };
+        let subs = spec.submissions();
+        let mut full_sess = stream_session(SchedulerKind::Bass);
+        let full = full_sess.run_stream(subs.clone(), spec.policy(), &cost);
+        // cut at nothing, mid-stream (jobs still in flight), everything
+        for cut in [0, 3, subs.len()] {
+            let mut a = stream_session(SchedulerKind::Bass);
+            let ckpt = checkpoint_stream(&mut a, &subs, cut, spec.policy(), &cost);
+            assert_eq!(ckpt.submissions_seen(), cut);
+            assert!(!ckpt.is_soak());
+            let mut b = stream_session(SchedulerKind::Bass);
+            let out = resume_stream(&mut b, ckpt, subs[cut..].to_vec(), &cost);
+            assert_eq!(outcome_fingerprint(&out), outcome_fingerprint(&full), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_covers_rebalancer_and_tenancy_state() {
+        let cost = CostModel::rust_only();
+        // a mid-stream snapshot must carry the descheduler's tick state
+        let subs: Vec<Submission> =
+            (0..6).map(|i| sort_at(1.0 + i as f64 * 2.0, 300.0)).collect();
+        let mut full_sess = rebalance_session(SchedulerKind::Bass, 5.0);
+        let full = full_sess.run_stream(subs.clone(), AdmissionPolicy::default(), &cost);
+        let mut a = rebalance_session(SchedulerKind::Bass, 5.0);
+        let ckpt = checkpoint_stream(&mut a, &subs, 4, AdmissionPolicy::default(), &cost);
+        let mut b = rebalance_session(SchedulerKind::Bass, 5.0);
+        let out = resume_stream(&mut b, ckpt, subs[4..].to_vec(), &cost);
+        assert_eq!(outcome_fingerprint(&out), outcome_fingerprint(&full));
+
+        // and the DRF/preemption trail across a tenant stream
+        let mk = || {
+            let mut spec = stream_session(SchedulerKind::Bass).spec.clone();
+            let mut prod = TenantSpec::named("prod");
+            prod.class = TenantClass::Guaranteed;
+            prod.deadline_secs = Some(60.0);
+            spec.tenants =
+                Some(TenancySpec { tenants: vec![prod, TenantSpec::named("batch")] });
+            SimSession::new(&spec)
+        };
+        let subs = vec![
+            sort_for("batch", 0.0, 600.0),
+            sort_for("batch", 0.2, 600.0),
+            sort_for("prod", 1.0, 150.0),
+            sort_for("batch", 2.0, 300.0),
+        ];
+        let full = mk().run_stream(subs.clone(), AdmissionPolicy::default(), &cost);
+        let ckpt = checkpoint_stream(&mut mk(), &subs, 3, AdmissionPolicy::default(), &cost);
+        let out = resume_stream(&mut mk(), ckpt, subs[3..].to_vec(), &cost);
+        assert_eq!(out.last_finish.to_bits(), full.last_finish.to_bits());
+        assert_eq!(out.preemptions.len(), full.preemptions.len());
+        assert_eq!(out.admissions.len(), full.admissions.len());
+        assert_eq!(out.reallocs.len(), full.reallocs.len());
+        assert_eq!(out.records.len(), full.records.len());
+        for ((ja, a), (jb, b)) in out.records.iter().zip(&full.records) {
+            assert_eq!((ja, a.task, a.node), (jb, b.task, b.node));
+            assert_eq!(a.finish.0.to_bits(), b.finish.0.to_bits());
+        }
+    }
+
+    #[test]
+    fn soak_streams_run_in_bounded_memory_without_perturbing_the_engine() {
+        let cost = CostModel::rust_only();
+        let spec = StreamSpec {
+            jobs: 40,
+            mean_interarrival_secs: 30.0,
+            sizes_mb: vec![150.0, 300.0],
+            seed: 5,
+            ..StreamSpec::defaults()
+        };
+        let cfg =
+            SoakConfig { sketch_cap: 16, gc_period_secs: 120.0, ..SoakConfig::defaults() };
+        let mut sess = stream_session(SchedulerKind::Bass);
+        let out = sess.run_soak(spec.submissions(), spec.policy(), &cost, cfg);
+        let mut classic = stream_session(SchedulerKind::Bass);
+        let full = classic.run_stream(spec.submissions(), spec.policy(), &cost);
+        // the per-completion drain/forget/compact machinery must not
+        // change the simulation itself
+        assert_eq!(out.jobs, full.jobs.len());
+        assert_eq!(out.last_finish.to_bits(), full.last_finish.to_bits());
+        assert_eq!(out.queued_jobs, full.queued_jobs);
+        // bounded retained state: records track the live set, sketches
+        // their cap, and the calendar actually compacts
+        let total = full.records.len();
+        assert!(
+            out.peak_live_records < total / 2,
+            "peak live records {} should be far below the stream total {total}",
+            out.peak_live_records
+        );
+        assert!(out.retained_samples <= 2 * cfg.sketch_cap);
+        assert!(out.compactions >= 2, "periodic gc must fire ({})", out.compactions);
+        assert!(out.compacted_placements > 0);
+        assert!(out.peak_calendar_segments > 0);
+        assert_eq!(out.stats.jobs, 40);
+        assert!(out.jobs_per_hour > 0.0);
+        assert!(out.makespan > 0.0 && out.last_finish > 0.0);
+        assert_eq!(out.rejected_jobs, 0);
+    }
+
+    #[test]
+    fn soak_checkpoint_resume_is_bit_identical() {
+        let cost = CostModel::rust_only();
+        let spec = StreamSpec {
+            jobs: 20,
+            mean_interarrival_secs: 25.0,
+            sizes_mb: vec![150.0, 300.0],
+            seed: 9,
+            ..StreamSpec::defaults()
+        };
+        let cfg =
+            SoakConfig { sketch_cap: 16, gc_period_secs: 100.0, ..SoakConfig::defaults() };
+        let subs = spec.submissions();
+        let mut full_sess = stream_session(SchedulerKind::Bar);
+        let full = full_sess.run_soak(subs.clone(), spec.policy(), &cost, cfg);
+        let ckpt = checkpoint_soak(
+            &mut stream_session(SchedulerKind::Bar),
+            &subs,
+            7,
+            spec.policy(),
+            &cost,
+            cfg,
+        );
+        assert!(ckpt.is_soak());
+        assert!(ckpt.now_secs() >= 0.0);
+        let out = resume_soak(
+            &mut stream_session(SchedulerKind::Bar),
+            ckpt,
+            subs[7..].to_vec(),
+            &cost,
+        );
+        assert_eq!(out.jobs, full.jobs);
+        assert_eq!(out.last_finish.to_bits(), full.last_finish.to_bits());
+        assert_eq!(out.stats.mean_jt.to_bits(), full.stats.mean_jt.to_bits());
+        assert_eq!(out.stats.p95_jt.to_bits(), full.stats.p95_jt.to_bits());
+        assert_eq!(out.stats.mean_slowdown.to_bits(), full.stats.mean_slowdown.to_bits());
+        assert_eq!(out.p95_slowdown.to_bits(), full.p95_slowdown.to_bits());
+        assert_eq!(out.compactions, full.compactions);
+        assert_eq!(out.compacted_placements, full.compacted_placements);
+        assert_eq!(out.peak_live_records, full.peak_live_records);
+        assert_eq!(out.peak_calendar_segments, full.peak_calendar_segments);
+    }
+
+    #[test]
+    #[should_panic(expected = "resume_soak")]
+    fn soak_checkpoints_do_not_resume_as_streams() {
+        let cost = CostModel::rust_only();
+        let subs = vec![sort_at(1.0, 150.0), sort_at(50.0, 150.0)];
+        let ckpt = checkpoint_soak(
+            &mut stream_session(SchedulerKind::Bass),
+            &subs,
+            1,
+            AdmissionPolicy::default(),
+            &cost,
+            SoakConfig::defaults(),
+        );
+        let _ = resume_stream(
+            &mut stream_session(SchedulerKind::Bass),
+            ckpt,
+            subs[1..].to_vec(),
+            &cost,
+        );
+    }
+
+    #[test]
+    #[ignore] // the 100k-job soak gate (minutes of runtime): cargo test -- --ignored
+    fn hundred_thousand_job_soak_stays_bounded() {
+        use crate::workload::{Diurnal, LoadShape, LoadStage, SizeDist};
+        let cost = CostModel::rust_only();
+        let mut sess = stream_session(SchedulerKind::Bass);
+        let shape = LoadShape::new(
+            vec![
+                LoadStage::ramp(20_000, 120.0, 40.0),
+                LoadStage::spike(10_000, 40.0, 4.0),
+                LoadStage::soak(70_000, 60.0),
+            ],
+            SizeDist::Pareto { alpha: 1.3, min_mb: 100.0, cap_mb: 600.0 },
+            Some(Diurnal { amplitude: 0.3, period_secs: 86_400.0 }),
+        )
+        .expect("valid load shape");
+        let mut rng = XorShift::new(4242);
+        let subs: Vec<Submission> =
+            shape.generate(&mut rng).into_iter().map(Submission::from).collect();
+        let policy = AdmissionPolicy { max_active: 8, min_free_slots: 0 };
+        let out = sess.run_soak(subs, policy, &cost, SoakConfig::defaults());
+        assert_eq!(out.jobs, 100_000);
+        assert!(
+            out.peak_live_records < 10_000,
+            "live records must not scale with stream length ({})",
+            out.peak_live_records
+        );
+        assert!(out.retained_samples <= 512);
+        assert!(out.compactions > 100);
+        assert!(out.sustained_jobs_per_hour >= 0.0);
     }
 }

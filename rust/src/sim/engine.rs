@@ -658,6 +658,95 @@ impl Engine {
         &self.records
     }
 
+    /// Soak streams: hand the *finished* records (finish <= now) to the
+    /// caller and keep only in-flight ones, so record memory tracks the
+    /// live working set instead of every task ever run. Running-slot
+    /// indices are remapped; a slot whose record finished is cleared
+    /// (every consumer already filters on `finish > now`, so this is
+    /// observationally identical). The classic `run()`/`finish` path
+    /// never calls this — it returns the full sorted record set.
+    pub fn drain_finished_records(&mut self) -> Vec<TaskRecord> {
+        let total = self.records.len();
+        let mut kept: Vec<TaskRecord> = Vec::new();
+        let mut out = Vec::with_capacity(total);
+        let mut remap = vec![usize::MAX; total];
+        for (i, r) in std::mem::take(&mut self.records).into_iter().enumerate() {
+            if r.finish > self.now {
+                remap[i] = kept.len();
+                kept.push(r);
+            } else {
+                out.push(r);
+            }
+        }
+        for slot in self.running.iter_mut() {
+            if let Some((_, rec)) = slot.as_mut() {
+                match remap[*rec] {
+                    usize::MAX => *slot = None,
+                    m => *rec = m,
+                }
+            }
+        }
+        self.records = kept;
+        out
+    }
+
+    /// Soak streams: periodic placement-arena compaction. Placements
+    /// whose task has finished and which are no longer queued, running,
+    /// mid-pull, or orphaned have their transfer plan (the per-grant
+    /// reservation/path vectors) dropped in place — indices stay valid
+    /// and each completed slot shrinks to a constant skeleton. Returns
+    /// how many placements were compacted this pass.
+    pub fn compact_finished_placements(&mut self) -> usize {
+        let mut live: HashSet<u32> = HashSet::new();
+        for q in &self.queues {
+            live.extend(q.iter().copied());
+        }
+        for &(_, pidx, _) in self.waiting.values() {
+            live.insert(pidx);
+        }
+        for &(pidx, _) in self.running.iter().flatten() {
+            live.insert(pidx);
+        }
+        for &(pidx, _) in &self.orphans {
+            live.insert(pidx);
+        }
+        let mut n = 0usize;
+        for (i, p) in self.placements.iter_mut().enumerate() {
+            if matches!(p.transfer, TransferPlan::None) || live.contains(&(i as u32)) {
+                continue;
+            }
+            if self.finished.contains(&p.task) {
+                p.transfer = TransferPlan::None;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Soak streams: drop a fully accounted job's completion
+    /// bookkeeping — task tags, the finished set, watch membership and
+    /// the job's watch keys — so the tag/watch maps track live jobs
+    /// instead of every job ever admitted. Only call once the job is
+    /// complete and its watches have fired; later jobs use fresh task
+    /// ids, so nothing can resurrect the forgotten entries.
+    pub fn forget_job(
+        &mut self,
+        job: JobId,
+        tasks: impl IntoIterator<Item = TaskId>,
+        watch_keys: &[u64],
+    ) {
+        for t in tasks {
+            self.job_tags.remove(&t);
+            self.finished.remove(&t);
+            self.done_pending.remove(&t);
+            self.watch_of.remove(&t);
+        }
+        for k in watch_keys {
+            self.watch_left.remove(k);
+        }
+        self.job_done.remove(&job);
+    }
+
     fn push(&mut self, at: Secs, kind: EvKind) {
         self.seq += 1;
         self.events.push(Reverse(Ev { at, seq: self.seq, kind }));

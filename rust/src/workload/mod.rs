@@ -7,4 +7,4 @@ pub mod tracegen;
 
 pub use background::BackgroundLoad;
 pub use profiles::{JobKind, WorkloadBuilder};
-pub use tracegen::{JobArrival, TraceGen};
+pub use tracegen::{Diurnal, JobArrival, LoadShape, LoadStage, SizeDist, StageShape, TraceGen};

@@ -1,4 +1,11 @@
-//! Synthetic job-arrival traces for the end-to-end driver.
+//! Synthetic job-arrival traces for the end-to-end driver, plus the
+//! staged [`LoadShape`] generator behind the soak pipeline: composable
+//! ramp/spike/soak/concentrated stages over Poisson inter-arrival
+//! processes, optional diurnal rate modulation, and heavy-tailed
+//! (truncated Pareto) job sizes. Everything is seeded and
+//! deterministic; the single-stage soak shape over a size menu draws
+//! from the RNG in exactly the order [`TraceGen::generate_poisson`]
+//! always has, so the existing stream sweeps stay bit-identical.
 
 use crate::util::XorShift;
 
@@ -48,20 +55,230 @@ impl TraceGen {
     /// gaps, exponential gaps produce the bursts that make overlapping
     /// jobs contend. Deterministic for a seed; arrivals stay strictly
     /// increasing (gaps are floored just above zero).
+    ///
+    /// This is the trivial single-stage [`LoadShape`]: one soak stage
+    /// over the size menu, no diurnal modulation. Degenerate inputs
+    /// (non-positive/non-finite mean gap, empty or non-positive size
+    /// menu, zero jobs) panic with a clear message instead of silently
+    /// producing a broken trace — the config/CLI layers validate first,
+    /// so a panic here is a caller bug.
     pub fn generate_poisson(&self, n: usize, rng: &mut XorShift) -> Vec<JobArrival> {
-        let mut t = 0.0;
-        (0..n)
-            .map(|_| {
+        let shape = LoadShape::poisson(n, self.mean_interarrival_secs, self.sizes_mb.clone())
+            .unwrap_or_else(|e| panic!("TraceGen::generate_poisson: {e}"));
+        shape.generate(rng)
+    }
+}
+
+/// How a stage spaces its arrivals around the Poisson draws.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageShape {
+    /// Constant mean gap — the plain Poisson process.
+    Soak,
+    /// Mean gap interpolates linearly from the stage's `mean_gap_secs`
+    /// to `to_gap_secs` across the stage's arrivals (a load ramp when
+    /// the gap shrinks, a cooldown when it grows).
+    Ramp { to_gap_secs: f64 },
+    /// Mean gap divided by `factor` (> 1 compresses the stage into a
+    /// burst at `factor` times the base rate).
+    Spike { factor: f64 },
+    /// The whole stage lands inside roughly `within_secs`: the mean gap
+    /// is `within_secs / jobs`, so all arrivals hit as one batch.
+    Concentrated { within_secs: f64 },
+}
+
+/// One stage of a [`LoadShape`]: `jobs` Poisson arrivals whose mean
+/// gap is derived from `mean_gap_secs` by the stage's [`StageShape`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadStage {
+    pub jobs: usize,
+    pub mean_gap_secs: f64,
+    pub shape: StageShape,
+}
+
+impl LoadStage {
+    pub fn soak(jobs: usize, mean_gap_secs: f64) -> Self {
+        Self { jobs, mean_gap_secs, shape: StageShape::Soak }
+    }
+
+    pub fn ramp(jobs: usize, from_gap_secs: f64, to_gap_secs: f64) -> Self {
+        Self { jobs, mean_gap_secs: from_gap_secs, shape: StageShape::Ramp { to_gap_secs } }
+    }
+
+    pub fn spike(jobs: usize, mean_gap_secs: f64, factor: f64) -> Self {
+        Self { jobs, mean_gap_secs, shape: StageShape::Spike { factor } }
+    }
+
+    pub fn concentrated(jobs: usize, within_secs: f64) -> Self {
+        // mean_gap_secs is unused by the shape but kept positive so the
+        // shared validation holds for every stage uniformly
+        Self { jobs, mean_gap_secs: within_secs, shape: StageShape::Concentrated { within_secs } }
+    }
+}
+
+/// Job-size distribution: the menu the classic sweeps use, or a
+/// truncated Pareto for heavy-tailed realism.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SizeDist {
+    /// Uniform pick from a fixed size menu (MB).
+    Menu(Vec<f64>),
+    /// Truncated Pareto: `P(X > x) = (min_mb / x)^alpha` for
+    /// `min_mb <= x < cap_mb`, all mass above `cap_mb` collapsed onto
+    /// `cap_mb` (inverse-CDF sample, one uniform draw per arrival).
+    Pareto { alpha: f64, min_mb: f64, cap_mb: f64 },
+}
+
+/// Sinusoidal rate modulation on top of the stage schedule: the
+/// instantaneous arrival rate is scaled by
+/// `1 + amplitude * sin(2π t / period_secs)` — a day/night curve when
+/// the period is long against the stage lengths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diurnal {
+    pub amplitude: f64,
+    pub period_secs: f64,
+}
+
+/// A staged, seeded arrival-trace generator: stages run back to back on
+/// one clock and one RNG cursor, so a shape is as deterministic as a
+/// single Poisson trace. Construct through [`LoadShape::new`] /
+/// [`LoadShape::poisson`] — both reject degenerate inputs
+/// (non-positive gaps, empty stages, unusable size distributions)
+/// instead of generating a broken trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadShape {
+    stages: Vec<LoadStage>,
+    sizes: SizeDist,
+    diurnal: Option<Diurnal>,
+}
+
+impl LoadShape {
+    /// Validated constructor; every stage and the size distribution are
+    /// checked here so `generate` cannot produce a degenerate trace.
+    pub fn new(
+        stages: Vec<LoadStage>,
+        sizes: SizeDist,
+        diurnal: Option<Diurnal>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!stages.is_empty(), "load shape needs at least one stage");
+        for (i, st) in stages.iter().enumerate() {
+            anyhow::ensure!(st.jobs >= 1, "stage {i}: jobs must be >= 1");
+            anyhow::ensure!(
+                st.mean_gap_secs > 0.0 && st.mean_gap_secs.is_finite(),
+                "stage {i}: mean gap must be a positive number of seconds, got {}",
+                st.mean_gap_secs
+            );
+            match st.shape {
+                StageShape::Soak => {}
+                StageShape::Ramp { to_gap_secs } => anyhow::ensure!(
+                    to_gap_secs > 0.0 && to_gap_secs.is_finite(),
+                    "stage {i}: ramp target gap must be positive, got {to_gap_secs}"
+                ),
+                StageShape::Spike { factor } => anyhow::ensure!(
+                    factor >= 1.0 && factor.is_finite(),
+                    "stage {i}: spike factor must be >= 1, got {factor}"
+                ),
+                StageShape::Concentrated { within_secs } => anyhow::ensure!(
+                    within_secs > 0.0 && within_secs.is_finite(),
+                    "stage {i}: concentration window must be positive, got {within_secs}"
+                ),
+            }
+        }
+        match &sizes {
+            SizeDist::Menu(v) => {
+                anyhow::ensure!(!v.is_empty(), "size menu must not be empty");
+                for &s in v {
+                    anyhow::ensure!(
+                        s > 0.0 && s.is_finite(),
+                        "size menu entries must be positive MB, got {s}"
+                    );
+                }
+            }
+            SizeDist::Pareto { alpha, min_mb, cap_mb } => {
+                anyhow::ensure!(
+                    *alpha > 0.0 && alpha.is_finite(),
+                    "pareto alpha must be positive, got {alpha}"
+                );
+                anyhow::ensure!(
+                    *min_mb > 0.0 && min_mb.is_finite(),
+                    "pareto min size must be positive MB, got {min_mb}"
+                );
+                anyhow::ensure!(
+                    *cap_mb >= *min_mb && cap_mb.is_finite(),
+                    "pareto cap must be >= min size, got cap {cap_mb} < min {min_mb}"
+                );
+            }
+        }
+        if let Some(d) = &diurnal {
+            anyhow::ensure!(
+                (0.0..1.0).contains(&d.amplitude),
+                "diurnal amplitude must be in [0, 1) so the rate stays positive, got {}",
+                d.amplitude
+            );
+            anyhow::ensure!(
+                d.period_secs > 0.0 && d.period_secs.is_finite(),
+                "diurnal period must be positive seconds, got {}",
+                d.period_secs
+            );
+        }
+        Ok(Self { stages, sizes, diurnal })
+    }
+
+    /// The trivial single-stage shape: `jobs` soak arrivals at
+    /// `mean_gap_secs` over a size menu — bit-identical to the classic
+    /// [`TraceGen::generate_poisson`] trace for the same RNG.
+    pub fn poisson(jobs: usize, mean_gap_secs: f64, sizes_mb: Vec<f64>) -> anyhow::Result<Self> {
+        Self::new(vec![LoadStage::soak(jobs, mean_gap_secs)], SizeDist::Menu(sizes_mb), None)
+    }
+
+    pub fn stages(&self) -> &[LoadStage] {
+        &self.stages
+    }
+
+    /// Total arrivals across all stages.
+    pub fn total_jobs(&self) -> usize {
+        self.stages.iter().map(|s| s.jobs).sum()
+    }
+
+    /// Play every stage back to back on one clock. Per arrival the RNG
+    /// draw order is fixed — gap uniform, kind coin, size draw — which
+    /// is exactly the old `generate_poisson` order, so the single-soak
+    /// menu shape reproduces it bit for bit. Arrivals stay strictly
+    /// increasing (gaps floored just above zero).
+    pub fn generate(&self, rng: &mut XorShift) -> Vec<JobArrival> {
+        let mut out = Vec::with_capacity(self.total_jobs());
+        let mut t = 0.0f64;
+        for st in &self.stages {
+            for j in 0..st.jobs {
                 // inverse-CDF sample; uniform is [0, 1) so 1-u is (0, 1]
                 let u = rng.uniform(0.0, 1.0);
-                t += (-(1.0 - u).ln()).max(1e-9) * self.mean_interarrival_secs;
-                JobArrival {
-                    at_secs: t,
-                    kind: if rng.chance(0.5) { JobKind::Wordcount } else { JobKind::Sort },
-                    data_mb: self.sizes_mb[rng.below(self.sizes_mb.len())],
+                let mut gap_mean = match st.shape {
+                    StageShape::Soak => st.mean_gap_secs,
+                    StageShape::Ramp { to_gap_secs } => {
+                        let frac =
+                            if st.jobs > 1 { j as f64 / (st.jobs - 1) as f64 } else { 0.0 };
+                        st.mean_gap_secs + (to_gap_secs - st.mean_gap_secs) * frac
+                    }
+                    StageShape::Spike { factor } => st.mean_gap_secs / factor,
+                    StageShape::Concentrated { within_secs } => within_secs / st.jobs as f64,
+                };
+                if let Some(d) = &self.diurnal {
+                    // modulate the *rate*, so the gap divides; amplitude
+                    // < 1 keeps the denominator strictly positive
+                    let phase = 2.0 * std::f64::consts::PI * t / d.period_secs;
+                    gap_mean /= 1.0 + d.amplitude * phase.sin();
                 }
-            })
-            .collect()
+                t += (-(1.0 - u).ln()).max(1e-9) * gap_mean;
+                let kind = if rng.chance(0.5) { JobKind::Wordcount } else { JobKind::Sort };
+                let data_mb = match &self.sizes {
+                    SizeDist::Menu(sizes) => sizes[rng.below(sizes.len())],
+                    SizeDist::Pareto { alpha, min_mb, cap_mb } => {
+                        let v = rng.uniform(0.0, 1.0);
+                        (min_mb / (1.0 - v).powf(1.0 / alpha)).min(*cap_mb)
+                    }
+                };
+                out.push(JobArrival { at_secs: t, kind, data_mb });
+            }
+        }
+        out
     }
 }
 
@@ -109,5 +326,185 @@ mod tests {
         for a in g.generate(50, &mut r) {
             assert!(g.sizes_mb.contains(&a.data_mb));
         }
+    }
+
+    /// The single-soak menu shape must replay the exact draw sequence of
+    /// the pre-refactor `generate_poisson` loop, kept inline here as the
+    /// bitwise reference.
+    #[test]
+    fn single_stage_soak_is_bitwise_identical_to_the_old_poisson_loop() {
+        let mean = 42.0;
+        let sizes = [150.0, 300.0, 600.0];
+        let mut reference = Vec::new();
+        let mut rng = XorShift::new(4242);
+        let mut t = 0.0f64;
+        for _ in 0..64 {
+            let u = rng.uniform(0.0, 1.0);
+            t += (-(1.0 - u).ln()).max(1e-9) * mean;
+            let kind = if rng.chance(0.5) { JobKind::Wordcount } else { JobKind::Sort };
+            let data_mb = sizes[rng.below(sizes.len())];
+            reference.push((t, kind, data_mb));
+        }
+        let shape = LoadShape::poisson(64, mean, sizes.to_vec()).unwrap();
+        let got = shape.generate(&mut XorShift::new(4242));
+        let via_tracegen = TraceGen { mean_interarrival_secs: mean, sizes_mb: sizes.to_vec() }
+            .generate_poisson(64, &mut XorShift::new(4242));
+        assert_eq!(got.len(), reference.len());
+        for ((a, b), c) in got.iter().zip(&reference).zip(&via_tracegen) {
+            assert_eq!(a.at_secs.to_bits(), b.0.to_bits());
+            assert_eq!(a.kind, b.1);
+            assert_eq!(a.data_mb.to_bits(), b.2.to_bits());
+            assert_eq!(a.at_secs.to_bits(), c.at_secs.to_bits());
+            assert_eq!(a.data_mb.to_bits(), c.data_mb.to_bits());
+        }
+    }
+
+    #[test]
+    fn multi_stage_shapes_are_seed_deterministic_and_monotone() {
+        let shape = LoadShape::new(
+            vec![
+                LoadStage::ramp(40, 60.0, 10.0),
+                LoadStage::spike(30, 20.0, 4.0),
+                LoadStage::soak(80, 30.0),
+                LoadStage::concentrated(20, 15.0),
+            ],
+            SizeDist::Pareto { alpha: 1.5, min_mb: 100.0, cap_mb: 2000.0 },
+            Some(Diurnal { amplitude: 0.4, period_secs: 3600.0 }),
+        )
+        .unwrap();
+        assert_eq!(shape.total_jobs(), 170);
+        let a = shape.generate(&mut XorShift::new(99));
+        let b = shape.generate(&mut XorShift::new(99));
+        assert_eq!(a.len(), 170);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits());
+            assert_eq!(x.data_mb.to_bits(), y.data_mb.to_bits());
+        }
+        for w in a.windows(2) {
+            assert!(w[0].at_secs < w[1].at_secs);
+        }
+        // a different seed moves the trace
+        let c = shape.generate(&mut XorShift::new(100));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_secs != y.at_secs));
+    }
+
+    #[test]
+    fn spike_and_concentrated_stages_compress_arrivals() {
+        let slow = LoadShape::new(
+            vec![LoadStage::soak(200, 30.0)],
+            SizeDist::Menu(vec![150.0]),
+            None,
+        )
+        .unwrap();
+        let fast = LoadShape::new(
+            vec![LoadStage::spike(200, 30.0, 4.0)],
+            SizeDist::Menu(vec![150.0]),
+            None,
+        )
+        .unwrap();
+        let t_slow = slow.generate(&mut XorShift::new(1)).last().unwrap().at_secs;
+        let t_fast = fast.generate(&mut XorShift::new(1)).last().unwrap().at_secs;
+        // identical exponential draws, gap scaled exactly by the factor
+        assert!((t_fast * 4.0 - t_slow).abs() < 1e-6, "{t_fast} vs {t_slow}");
+        let burst = LoadShape::new(
+            vec![LoadStage::concentrated(50, 10.0)],
+            SizeDist::Menu(vec![150.0]),
+            None,
+        )
+        .unwrap();
+        let last = burst.generate(&mut XorShift::new(2)).last().unwrap().at_secs;
+        // 50 arrivals with mean gap 0.2s: the burst lands in O(window)
+        assert!(last < 50.0, "concentrated stage spread out to {last}s");
+    }
+
+    /// Truncated-Pareto sanity: the empirical tail matches
+    /// `P(X > x) = (min/x)^alpha` below the cap, and the cap absorbs
+    /// the rest of the mass.
+    #[test]
+    fn pareto_tail_index_survives_truncation() {
+        let n = 20_000usize;
+        let shape = LoadShape::new(
+            vec![LoadStage::soak(n, 1.0)],
+            SizeDist::Pareto { alpha: 1.2, min_mb: 100.0, cap_mb: 100_000.0 },
+            None,
+        )
+        .unwrap();
+        let sizes: Vec<f64> =
+            shape.generate(&mut XorShift::new(2014)).iter().map(|a| a.data_mb).collect();
+        assert!(sizes.iter().all(|&s| (100.0..=100_000.0).contains(&s)));
+        let ccdf = |x: f64| sizes.iter().filter(|&&s| s > x).count() as f64 / n as f64;
+        // CCDF at 2x and 8x the floor: 2^-1.2 ~ 0.435, 8^-1.2 ~ 0.0825
+        assert!((ccdf(200.0) - 0.435).abs() < 0.02, "ccdf(2min) = {}", ccdf(200.0));
+        assert!((ccdf(800.0) - 0.0825).abs() < 0.01, "ccdf(8min) = {}", ccdf(800.0));
+        // a tight cap truncates: everything clamps into [min, cap] and
+        // the atom at the cap carries the whole former tail
+        let capped = LoadShape::new(
+            vec![LoadStage::soak(n, 1.0)],
+            SizeDist::Pareto { alpha: 1.2, min_mb: 100.0, cap_mb: 400.0 },
+            None,
+        )
+        .unwrap();
+        let cs: Vec<f64> =
+            capped.generate(&mut XorShift::new(2014)).iter().map(|a| a.data_mb).collect();
+        assert!(cs.iter().all(|&s| (100.0..=400.0).contains(&s)));
+        let at_cap = cs.iter().filter(|&&s| s == 400.0).count() as f64 / n as f64;
+        // P(raw >= 400) = 4^-1.2 ~ 0.19
+        assert!((at_cap - 0.19).abs() < 0.02, "mass at cap = {at_cap}");
+    }
+
+    #[test]
+    fn shape_constructors_reject_degenerate_inputs() {
+        let menu = SizeDist::Menu(vec![150.0]);
+        assert!(LoadShape::new(vec![], menu.clone(), None).is_err());
+        assert!(LoadShape::new(vec![LoadStage::soak(0, 30.0)], menu.clone(), None).is_err());
+        assert!(LoadShape::new(vec![LoadStage::soak(5, 0.0)], menu.clone(), None).is_err());
+        assert!(LoadShape::new(vec![LoadStage::soak(5, -1.0)], menu.clone(), None).is_err());
+        assert!(
+            LoadShape::new(vec![LoadStage::ramp(5, 30.0, 0.0)], menu.clone(), None).is_err()
+        );
+        assert!(
+            LoadShape::new(vec![LoadStage::spike(5, 30.0, 0.5)], menu.clone(), None).is_err()
+        );
+        assert!(
+            LoadShape::new(vec![LoadStage::concentrated(5, -2.0)], menu.clone(), None).is_err()
+        );
+        assert!(LoadShape::new(vec![LoadStage::soak(5, 30.0)], SizeDist::Menu(vec![]), None)
+            .is_err());
+        assert!(LoadShape::new(
+            vec![LoadStage::soak(5, 30.0)],
+            SizeDist::Menu(vec![150.0, -1.0]),
+            None
+        )
+        .is_err());
+        for bad in [
+            SizeDist::Pareto { alpha: 0.0, min_mb: 100.0, cap_mb: 1000.0 },
+            SizeDist::Pareto { alpha: 1.5, min_mb: 0.0, cap_mb: 1000.0 },
+            SizeDist::Pareto { alpha: 1.5, min_mb: 100.0, cap_mb: 50.0 },
+        ] {
+            assert!(LoadShape::new(vec![LoadStage::soak(5, 30.0)], bad, None).is_err());
+        }
+        for bad in [
+            Diurnal { amplitude: 1.0, period_secs: 60.0 },
+            Diurnal { amplitude: -0.1, period_secs: 60.0 },
+            Diurnal { amplitude: 0.5, period_secs: 0.0 },
+        ] {
+            assert!(
+                LoadShape::new(vec![LoadStage::soak(5, 30.0)], menu.clone(), Some(bad)).is_err()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "generate_poisson")]
+    fn generate_poisson_rejects_non_positive_mean_gap() {
+        let g = TraceGen { mean_interarrival_secs: 0.0, sizes_mb: vec![150.0] };
+        g.generate_poisson(3, &mut XorShift::new(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "generate_poisson")]
+    fn generate_poisson_rejects_an_empty_size_menu() {
+        let g = TraceGen { mean_interarrival_secs: 60.0, sizes_mb: vec![] };
+        g.generate_poisson(3, &mut XorShift::new(1));
     }
 }

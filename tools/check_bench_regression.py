@@ -12,7 +12,11 @@ automatically once real numbers are committed.
 
 Usage:
   python3 tools/check_bench_regression.py --baseline-dir /tmp/baseline \
-      BENCH_calendar.json BENCH_flownet.json BENCH_sched.json
+      BENCH_calendar.json BENCH_flownet.json BENCH_sched.json \
+      BENCH_scale.json BENCH_stream.json
+
+BENCH_stream.json covers the soak tier: the bounded-memory soak drain
+over a shaped trace and the mid-trace checkpoint/resume round trip.
 """
 
 import argparse
